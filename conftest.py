@@ -1,0 +1,6 @@
+"""pytest bootstrap: make `python/` importable when pytest runs from the
+repo root (`pytest python/tests/`), matching `cd python && pytest tests/`."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,43 @@
+//! Model-checking walkthrough (paper Appendix A): verify qplock's
+//! battery, then watch the checker find the Table-1 interleaving in the
+//! naive mixed-atomicity lock — with the full counterexample trace.
+//!
+//! Run: `cargo run --release --example model_check`
+
+use qplock::mc::graph::{explore, format_trace};
+use qplock::mc::models::{naive_spec::NaiveSpec, qplock_spec::QpSpec, spin_spec::SpinSpec};
+use qplock::mc::{check_all, Model};
+
+fn main() {
+    println!("=== qplock spec (paper Appendix A), n=3 procs, budget=2 ===");
+    let spec = QpSpec::new(3, 2);
+    let report = check_all(&spec, 1 << 22);
+    print!("{report}");
+
+    println!("\n=== naive mixed-atomicity lock: the checker finds the bug ===");
+    let naive = NaiveSpec;
+    let r = explore(&naive, 1 << 16);
+    let vid = r.me_violation.expect("the naive lock must violate ME");
+    println!(
+        "mutual exclusion violated after exploring {} states; shortest trace:",
+        r.graph.states.len()
+    );
+    print!("{}", format_trace(&naive, &r.graph, vid));
+    println!(
+        "(p2's rCAS reads the free word, p1's CPU CAS takes the lock, \
+         p2's NIC commits its stale compare — paper Table 1, row RMW)"
+    );
+
+    println!("\n=== spin-rcas (all-loopback TAS): safe but unfair ===");
+    let spin = SpinSpec::new(2);
+    let report = check_all(&spin, 1 << 16);
+    print!("{report}");
+    println!(
+        "\nqplock is the only checked design that is simultaneously safe, \
+         starvation-free, and local-RDMA-free — the paper's claim, verified \
+         mechanically in-repo. ({} explicit-state configs in `qplock bench --exp e8`)",
+        7
+    );
+    // Sanity for CI-style use of the example.
+    assert!(naive.procs() == 2);
+}

@@ -1,0 +1,13 @@
+//! Profiling driver for the §Perf iteration loop: 20M uncontended
+//! local qplock cycles, meant for `perf record` (see EXPERIMENTS.md
+//! §Perf). Not an example of API usage — see quickstart.rs for that.
+fn main() {
+    use qplock::rdma::{RdmaDomain, DomainConfig};
+    use qplock::locks::qplock::QpLock;
+    use qplock::locks::LockHandle;
+    let d = RdmaDomain::new(2, 1<<16, DomainConfig::counted());
+    let l = QpLock::create(&d, 0, 8);
+    let mut h = l.qp_handle(d.endpoint(0));
+    for _ in 0..20_000_000u64 { h.lock(); h.unlock(); }
+    println!("done");
+}

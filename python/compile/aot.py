@@ -1,0 +1,96 @@
+"""AOT bridge: lower the L2 model to HLO *text* for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written (all shapes/constants recorded in ``manifest.txt``):
+
+* ``step.hlo.txt``   — ``(S, U, V) -> (S', metric)``
+* ``apply.hlo.txt``  — ``(S, X) -> (Y,)``
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--m 256 ...]``
+(the Makefile invokes this; it is a no-op at the Make level when inputs
+are unchanged).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(m, n, k, decay, lr, dtype):
+    spec_s = jax.ShapeDtypeStruct((m, n), dtype)
+    spec_u = jax.ShapeDtypeStruct((m, k), dtype)
+    spec_v = jax.ShapeDtypeStruct((n, k), dtype)
+
+    def fn(s, u, v):
+        return model.step(s, u, v, decay=decay, lr=lr)
+
+    return to_hlo_text(jax.jit(fn).lower(spec_s, spec_u, spec_v))
+
+
+def lower_apply(m, n, c, dtype):
+    spec_s = jax.ShapeDtypeStruct((m, n), dtype)
+    spec_x = jax.ShapeDtypeStruct((n, c), dtype)
+
+    def fn(s, x):
+        return (model.apply(s, x),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec_s, spec_x))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--c", type=int, default=4, help="probe columns")
+    ap.add_argument("--decay", type=float, default=0.99)
+    ap.add_argument("--lr", type=float, default=0.05)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    dtype = jnp.float32
+
+    step_txt = lower_step(args.m, args.n, args.k, args.decay, args.lr, dtype)
+    with open(os.path.join(args.out_dir, "step.hlo.txt"), "w") as f:
+        f.write(step_txt)
+    print(f"wrote step.hlo.txt ({len(step_txt)} chars)")
+
+    apply_txt = lower_apply(args.m, args.n, args.c, dtype)
+    with open(os.path.join(args.out_dir, "apply.hlo.txt"), "w") as f:
+        f.write(apply_txt)
+    print(f"wrote apply.hlo.txt ({len(apply_txt)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(
+            "step: (S[{m},{n}], U[{m},{k}], V[{n},{k}]) -> (S', metric) "
+            "decay={decay} lr={lr} dtype=f32\n"
+            "apply: (S[{m},{n}], X[{n},{c}]) -> (Y[{m},{c}],) dtype=f32\n".format(
+                m=args.m, n=args.n, k=args.k, c=args.c,
+                decay=args.decay, lr=args.lr,
+            )
+        )
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: blocked decayed rank-k update.
+
+``S' = decay * S + lr * (U @ V^T)`` tiled for TPU-style memory hierarchy:
+
+* the grid iterates over ``(m/bm, n/bn)`` tiles of the state matrix;
+* each grid step holds one ``(bm, bn)`` tile of S, the ``(bm, k)`` panel
+  of U and the ``(bn, k)`` panel of V in VMEM (the BlockSpecs below are
+  the HBM→VMEM schedule a CUDA version would express with threadblocks —
+  see DESIGN.md §Hardware-Adaptation);
+* the inner product is a single ``(bm, k) x (k, bn)`` ``dot_general``,
+  shaped for the MXU's systolic array, accumulated in f32
+  (``preferred_element_type``) regardless of the storage dtype.
+
+VMEM budget at the default ``bm = bn = 128``, ``k ≤ 32``, f32:
+``128·128·4 (S-in) + 128·128·4 (S-out) + 2·128·32·4 (panels) ≈ 164 KiB``
+— two orders of magnitude under a TPU core's ~16 MiB VMEM, so the
+schedule double-buffers trivially.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs under the Rust runtime. Real-TPU performance is therefore
+*estimated* (EXPERIMENTS.md §Perf), never measured here.
+
+``decay``/``lr`` are compile-time constants baked into the artifact by
+``aot.py`` (standard AOT practice: one executable per hyperparameter
+setting; recompile to change).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_tile_kernel(s_ref, u_ref, v_ref, o_ref, *, decay, lr):
+    """One (bm, bn) tile: o = decay * s + lr * u @ v^T, f32 accumulate."""
+    u = u_ref[...]
+    v = v_ref[...]
+    t = jax.lax.dot_general(
+        u,
+        v,
+        # Contract u's k-dim (axis 1) with v's k-dim (axis 1): u @ v^T.
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc = decay * s_ref[...].astype(jnp.float32) + lr * t
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def rankk_update(s, u, v, *, decay, lr, bm=128, bn=128, interpret=True):
+    """Blocked Pallas implementation of :func:`...ref.rankk_update_ref`.
+
+    Block sizes are clamped to the problem size; m and n must be
+    divisible by the (clamped) block (the library allocates state shapes
+    accordingly; arbitrary shapes would add padding logic the experiment
+    does not need).
+    """
+    m, n = s.shape
+    k = u.shape[1]
+    assert u.shape == (m, k), (u.shape, (m, k))
+    assert v.shape == (n, k), (v.shape, (n, k))
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(
+        _update_tile_kernel, decay=float(decay), lr=float(lr)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),  # S tile
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),   # U panel (row i)
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),   # V panel (col j)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), s.dtype),
+        interpret=interpret,
+    )(s, u, v)
+
+
+def apply_probe(s, x, *, bm=128, interpret=True):
+    """Blocked ``y = S @ x`` (the serving-side read probe).
+
+    Row-tiled: each grid step multiplies a ``(bm, n)`` stripe of S with
+    the full ``(n, c)`` probe block resident in VMEM.
+    """
+    m, n = s.shape
+    c = x.shape[1]
+    assert x.shape[0] == n
+    bm = min(bm, m)
+    assert m % bm == 0
+
+    def kernel(s_ref, x_ref, o_ref):
+        o_ref[...] = jax.lax.dot_general(
+            s_ref[...],
+            x_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), s.dtype),
+        interpret=interpret,
+    )(s, x)

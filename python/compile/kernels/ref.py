@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written in the most obvious jnp form. pytest (``python/tests``) sweeps
+shapes and dtypes asserting allclose between kernel and oracle; the AOT
+path is only taken from the kernel side, so any divergence is caught at
+build time, never at (Rust) run time.
+"""
+
+import jax.numpy as jnp
+
+
+def rankk_update_ref(s, u, v, *, decay, lr):
+    """Decayed rank-k update: ``S' = decay * S + lr * (U @ V^T)``.
+
+    This is the parameter-server write the end-to-end example protects
+    with qplock: accumulate k outer products (a gradient sketch) into the
+    shared state matrix with exponential decay.
+
+    Args:
+      s: ``(m, n)`` state matrix.
+      u: ``(m, k)`` left factors.
+      v: ``(n, k)`` right factors.
+      decay: scalar forgetting factor.
+      lr: scalar update scale.
+
+    Returns:
+      ``(m, n)`` updated state, in ``s.dtype``.
+    """
+    t = jnp.matmul(u, v.T, preferred_element_type=jnp.float32)
+    return (decay * s.astype(jnp.float32) + lr * t).astype(s.dtype)
+
+
+def apply_ref(s, x):
+    """Serving-side read: ``y = S @ x`` (probe of the shared state)."""
+    return jnp.matmul(s, x, preferred_element_type=jnp.float32).astype(s.dtype)
+
+
+def step_ref(s, u, v, *, decay, lr):
+    """Full L2 step oracle: update + scalar convergence metric.
+
+    Returns ``(S', metric)`` where ``metric = mean(S'^2)`` — the value the
+    end-to-end driver logs as its "loss curve".
+    """
+    s2 = rankk_update_ref(s, u, v, decay=decay, lr=lr)
+    metric = jnp.mean(jnp.square(s2.astype(jnp.float32)))
+    return s2, metric

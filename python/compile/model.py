@@ -1,0 +1,33 @@
+"""L2 JAX model: the parameter-server compute graph.
+
+Composes the L1 Pallas kernels into the two entry points the Rust
+coordinator executes through PJRT:
+
+* :func:`step` — one shared-state write: decayed rank-k update plus the
+  scalar convergence metric the end-to-end driver logs;
+* :func:`apply` — one shared-state read: probe ``y = S @ x``.
+
+Both are pure functions of their inputs; ``aot.py`` lowers them once to
+HLO text. Python never runs on the Rust request path.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import rankk_update as kern
+
+
+def step(s, u, v, *, decay, lr, bm=128, bn=128):
+    """One protected update step.
+
+    Returns ``(S', metric)`` with ``metric = mean(S'^2)``; under
+    ``decay < 1`` repeated steps drive the metric to a fixed point, whose
+    trajectory is the "loss curve" recorded in EXPERIMENTS.md E9.
+    """
+    s2 = kern.rankk_update(s, u, v, decay=decay, lr=lr, bm=bm, bn=bn)
+    metric = jnp.mean(jnp.square(s2.astype(jnp.float32)))
+    return s2, metric
+
+
+def apply(s, x, *, bm=128):
+    """One probe read of the shared state."""
+    return kern.apply_probe(s, x, bm=bm)

@@ -1,0 +1,86 @@
+//! `cargo bench` entry point (criterion is not in the vendored
+//! registry; this is a `harness = false` bench).
+//!
+//! Runs every experiment in DESIGN.md's index (E1–E9) at Quick scale
+//! plus the hot-path microbenchmarks used by the §Perf iteration log.
+//! Full-scale runs: `qplock bench --exp <id> --full`.
+
+use std::time::Instant;
+
+use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
+use qplock::coordinator::{run_workload, Cluster, Workload};
+use qplock::locks::make_lock;
+use qplock::rdma::DomainConfig;
+use qplock::stats::Welford;
+
+/// Microbenchmark: median ns per uncontended lock+unlock cycle.
+fn micro_uncontended(algo: &str, counted: bool, local: bool) -> f64 {
+    let cfg = if counted {
+        DomainConfig::counted()
+    } else {
+        DomainConfig::timed()
+    };
+    let cluster = Cluster::new(2, 1 << 16, cfg);
+    let lock = make_lock(algo, &cluster.domain, 0, 2, 8);
+    let node = if local { 0 } else { 1 };
+    let mut h = lock.handle(cluster.domain.endpoint(node), 0);
+    // Warmup.
+    for _ in 0..1_000 {
+        h.lock();
+        h.unlock();
+    }
+    let mut w = Welford::default();
+    for _ in 0..5 {
+        let iters = 20_000;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            h.lock();
+            h.unlock();
+        }
+        w.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    w.mean()
+}
+
+fn main() {
+    println!("################ qplock bench suite ################\n");
+
+    println!("== hot path: uncontended lock+unlock cycle (ns, mean of 5x20k) ==");
+    println!(
+        "{:<12} {:>14} {:>14} {:>16}",
+        "algo", "local/counted", "local/timed", "remote/counted"
+    );
+    for algo in ["qplock", "rdma-mcs", "spin-rcas", "cohort-tas"] {
+        let lc = micro_uncontended(algo, true, true);
+        let lt = micro_uncontended(algo, false, true);
+        let rc = micro_uncontended(algo, true, false);
+        println!("{algo:<12} {lc:>14.0} {lt:>14.0} {rc:>16.0}");
+    }
+    println!();
+
+    println!("== contended handoff: 4 procs, counted mode, cycles/s ==");
+    for algo in ["qplock", "rdma-mcs", "spin-rcas"] {
+        let cluster = Cluster::new(2, 1 << 18, DomainConfig::counted());
+        let lock = make_lock(algo, &cluster.domain, 0, 4, 8);
+        let procs = cluster.spread_procs(4, 2, 0);
+        let r = run_workload(&cluster.domain, &lock, &procs, &Workload::cycles(5_000));
+        assert_eq!(r.violations, 0);
+        println!(
+            "{algo:<12} {:>12.0} acq/s   jain {:.3}",
+            r.throughput(),
+            r.jain()
+        );
+    }
+    println!();
+
+    for (id, desc) in EXPERIMENTS {
+        let t0 = Instant::now();
+        let out = run_experiment(id, Scale::Quick);
+        println!("{out}");
+        println!(
+            "[{id} ({desc}) took {:.1}s]\n",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("bench suite complete.");
+}

@@ -1,0 +1,738 @@
+//! Experiment implementations E1–E9 (see DESIGN.md experiment index).
+//!
+//! Each experiment regenerates one table/figure of the evaluation:
+//! E1 reproduces the paper's Table 1; E2 verifies the §3.1 analytical
+//! operation-count claims; E3–E7 are the standard RDMA-lock evaluation
+//! suite (throughput scaling, locality mix, budget/fairness, latency,
+//! loopback congestion); E8 reproduces the TLA+ verification battery;
+//! E9 is the end-to-end parameter-server run over the PJRT runtime.
+//!
+//! Every experiment runs at two scales: `Quick` (cargo bench / CI) and
+//! `Full` (the numbers recorded in EXPERIMENTS.md).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::table::Table;
+use crate::coordinator::{run_workload, Cluster, CsWork, RunResult, Workload};
+use crate::locks::{make_lock, Class};
+use crate::mc::{self, models};
+use crate::rdma::{AtomicityMode, DomainConfig, LatencyModel, RdmaDomain, TimeMode};
+
+/// Experiment scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Small sweeps, short durations — smoke/CI.
+    Quick,
+    /// The EXPERIMENTS.md configuration.
+    Full,
+}
+
+/// Output of one experiment.
+pub struct ExpOutput {
+    pub id: &'static str,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+}
+
+impl std::fmt::Display for ExpOutput {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "######## experiment {} ########", self.id)?;
+        for t in &self.tables {
+            writeln!(f, "{t}")?;
+        }
+        for n in &self.notes {
+            writeln!(f, "note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Registry of all experiments: `(id, what it regenerates)`.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("e1", "paper Table 1: atomicity of 8B local x remote accesses"),
+    ("e2", "paper §3.1 claims: RDMA ops per acquisition"),
+    ("e3", "throughput vs process count, all algorithms"),
+    ("e4", "throughput vs local:remote mix"),
+    ("e5", "qplock budget sweep: fairness vs throughput"),
+    ("e6", "acquisition latency percentiles per class"),
+    ("e7", "loopback congestion ablation"),
+    ("e8", "model-checking battery (paper Appendix A)"),
+    ("e9", "end-to-end parameter server over PJRT"),
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, scale: Scale) -> ExpOutput {
+    match id {
+        "e1" => e1_atomicity(scale),
+        "e2" => e2_op_counts(scale),
+        "e3" => e3_throughput(scale),
+        "e4" => e4_mix(scale),
+        "e5" => e5_budget(scale),
+        "e6" => e6_latency(scale),
+        "e7" => e7_loopback(scale),
+        "e8" => e8_model_check(scale),
+        "e9" => e9_param_server(scale),
+        other => panic!("unknown experiment '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn timed_domain(latency: LatencyModel) -> DomainConfig {
+    DomainConfig {
+        latency,
+        time_mode: TimeMode::Timed,
+        atomicity: AtomicityMode::NicSerialized,
+        hazard_ns: 0,
+        pad_lines: true,
+    }
+}
+
+struct TimedRun {
+    result: RunResult,
+}
+
+fn timed_run(
+    algo: &str,
+    nprocs: u32,
+    nlocal: u32,
+    dur: Duration,
+    budget: u64,
+    cfg: DomainConfig,
+) -> TimedRun {
+    let cluster = Cluster::new(2, 1 << 20, cfg);
+    let lock = make_lock(algo, &cluster.domain, 0, nprocs, budget);
+    let procs = cluster.spread_procs(nprocs, nlocal, 0);
+    let wl = Workload::timed(dur, CsWork::None);
+    let result = run_workload(&cluster.domain, &lock, &procs, &wl);
+    assert_eq!(result.violations, 0, "{algo} violated mutual exclusion");
+    TimedRun { result }
+}
+
+fn fmt_thr(r: &RunResult) -> String {
+    format!("{:.0}", r.throughput())
+}
+
+fn fmt_netns(r: &RunResult) -> String {
+    let net: u64 = r.procs.iter().map(|p| p.ops.net_ns).sum();
+    format!("{:.0}", net as f64 / r.total_acquisitions().max(1) as f64)
+}
+
+// ------------------------------------------------------------------- E1
+
+/// Reproduce paper Table 1 by *measurement*: for each (local op, remote
+/// op) pair, run a directed race and report whether atomicity was
+/// preserved, under both NIC-serialized (commodity) and global
+/// atomicity.
+fn e1_atomicity(scale: Scale) -> ExpOutput {
+    let iters = match scale {
+        Scale::Quick => 40,
+        Scale::Full => 200,
+    };
+
+    // Probe: local mutator fires mid-window of a remote CAS. Atomicity
+    // violation signals (0 => atomic):
+    //  * local Write vs remote RMW — the local store is *lost* (final
+    //    value is the CAS's swap even though the store happened inside
+    //    the CAS);
+    //  * local RMW vs remote RMW — *both* CASes of 0→tag report success.
+    fn lost_updates(mode: AtomicityMode, iters: u32, local_is_rmw: bool) -> u32 {
+        use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+        let d = RdmaDomain::new(
+            2,
+            256,
+            DomainConfig::counted()
+                .with_atomicity(mode)
+                .with_hazard_ns(1_500_000),
+        );
+        let home = d.endpoint(0);
+        let a = home.alloc(1);
+        let mut violations = 0;
+        for _ in 0..iters {
+            home.write(a, 0);
+            let started = Arc::new(AtomicBool::new(false));
+            let s2 = Arc::clone(&started);
+            let remote_ep = d.endpoint(1);
+            let aa = a;
+            let t = std::thread::spawn(move || {
+                s2.store(true, SeqCst);
+                remote_ep.r_cas(aa, 0, 111)
+            });
+            while !started.load(SeqCst) {
+                std::thread::yield_now();
+            }
+            crate::util::spin::spin_wait_ns(300_000);
+            if local_is_rmw {
+                let local_won = home.cas(a, 0, 222) == 0;
+                let remote_won = t.join().unwrap() == 0;
+                if local_won && remote_won {
+                    violations += 1; // two winners: RMWs not atomic
+                }
+            } else {
+                home.write(a, 222);
+                t.join().unwrap();
+                if home.read(a) == 111 {
+                    violations += 1; // store silently overwritten
+                }
+            }
+        }
+        violations
+    }
+
+    let mut t = Table::new(
+        "E1: atomicity of 8-byte local x remote accesses (paper Table 1)",
+        &[
+            "local-op",
+            "vs rRead",
+            "vs rWrite",
+            "vs rCAS (commodity)",
+            "vs rCAS (global)",
+            "paper",
+        ],
+    );
+    // Read/Write rows vs rRead/rWrite are atomic by construction at 8B
+    // (single-register accesses); measured rCAS cells:
+    let w_comm = lost_updates(AtomicityMode::NicSerialized, iters, false);
+    let w_glob = lost_updates(AtomicityMode::Global, iters, false);
+    let c_comm = lost_updates(AtomicityMode::NicSerialized, iters, true);
+    let c_glob = lost_updates(AtomicityMode::Global, iters, true);
+    let yn = |lost: u32| if lost == 0 { "Yes".to_string() } else { format!("No ({lost} lost)") };
+
+    t.row(&[
+        "Read".into(),
+        "Yes".into(),
+        "Yes".into(),
+        "Yes".into(),
+        "Yes".into(),
+        "Y/Y/Y".into(),
+    ]);
+    t.row(&[
+        "Write".into(),
+        "Yes".into(),
+        "Yes".into(),
+        yn(w_comm),
+        yn(w_glob),
+        "Y/Y/N".into(),
+    ]);
+    t.row(&[
+        "RMW".into(),
+        "Yes".into(),
+        "Yes".into(),
+        yn(c_comm),
+        yn(c_glob),
+        "Y/Y/N".into(),
+    ]);
+
+    let mut notes = vec![
+        "commodity = AtomicityMode::NicSerialized (remote RMW atomic only among remote RMWs)"
+            .into(),
+        "paper column reads: atomic vs rRead / rWrite / rCAS".into(),
+    ];
+    if w_comm == 0 || c_comm == 0 {
+        notes.push("WARNING: expected lost updates under commodity mode, got none".into());
+    }
+    ExpOutput {
+        id: "e1",
+        tables: vec![t],
+        notes,
+    }
+}
+
+// ------------------------------------------------------------------- E2
+
+/// Verify §3.1: local processes need 0 RDMA ops; a lone remote process
+/// acquires with a single rCAS (plus Peterson engagement) and releases
+/// with at most rCAS + rWrite; queued remotes add one rWrite.
+fn e2_op_counts(_scale: Scale) -> ExpOutput {
+    let algos = [
+        "qplock",
+        "rdma-mcs",
+        "spin-rcas",
+        "cohort-tas",
+        "rpc-server",
+        "filter",
+        "bakery",
+    ];
+    let mut t = Table::new(
+        "E2: remote verbs per acquisition (lone process; counted mode)",
+        &[
+            "algo",
+            "lone-local rdma",
+            "lone-local loopback",
+            "lone-remote rCAS",
+            "lone-remote rRead",
+            "lone-remote rWrite",
+        ],
+    );
+    for algo in algos {
+        // Lone local process.
+        let d = RdmaDomain::new(2, 1 << 16, DomainConfig::counted());
+        let lock = make_lock(algo, &d, 0, 8, 8);
+        let iters = 100u64;
+        let ep = d.endpoint(0);
+        let m_local = Arc::clone(&ep.metrics);
+        let mut h = lock.handle(ep, 0);
+        for _ in 0..iters {
+            h.lock();
+            h.unlock();
+        }
+        let sl = m_local.snapshot();
+
+        // Lone remote process.
+        let ep = d.endpoint(1);
+        let m_rem = Arc::clone(&ep.metrics);
+        let mut h = lock.handle(ep, 1);
+        for _ in 0..iters {
+            h.lock();
+            h.unlock();
+        }
+        let sr = m_rem.snapshot();
+
+        let per = |x: u64| format!("{:.2}", x as f64 / iters as f64);
+        t.row(&[
+            algo.into(),
+            per(sl.remote_total()),
+            per(sl.loopback),
+            per(sr.remote_cas),
+            per(sr.remote_read),
+            per(sr.remote_write),
+        ]);
+    }
+    ExpOutput {
+        id: "e2",
+        tables: vec![t],
+        notes: vec![
+            "paper claims for qplock: lone-local rdma = 0; lone-remote = 1 rCAS + \
+             Peterson engagement (1 rWrite + 1 rRead) on acquire, 1 rCAS on release"
+                .into(),
+            "rpc-server lone-local shows 0 rdma (shared-memory fast path) but every \
+             op costs a server round trip"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------- E3
+
+fn e3_throughput(scale: Scale) -> ExpOutput {
+    let (proc_counts, dur): (&[u32], Duration) = match scale {
+        Scale::Quick => (&[2, 8], Duration::from_millis(80)),
+        Scale::Full => (&[2, 4, 8, 16], Duration::from_millis(300)),
+    };
+    let algos = [
+        "qplock",
+        "rdma-mcs",
+        "spin-rcas",
+        "cohort-tas",
+        "rpc-server",
+        "filter",
+        "bakery",
+    ];
+    let mut t = Table::new(
+        "E3: aggregate throughput (acq/s), 50/50 local:remote, empty CS",
+        &["algo/procs", "2", "4", "8", "16"],
+    );
+    let mut net = Table::new(
+        "E3b: modeled fabric ns per acquisition",
+        &["algo/procs", "2", "4", "8", "16"],
+    );
+    for algo in algos {
+        let mut cells = vec![algo.to_string()];
+        let mut ncells = vec![algo.to_string()];
+        for &n in &[2u32, 4, 8, 16] {
+            if !proc_counts.contains(&n) {
+                cells.push("-".into());
+                ncells.push("-".into());
+                continue;
+            }
+            let r = timed_run(algo, n, n / 2, dur, 8, timed_domain(LatencyModel::calibrated()));
+            cells.push(fmt_thr(&r.result));
+            ncells.push(fmt_netns(&r.result));
+        }
+        t.row(&cells);
+        net.row(&ncells);
+    }
+    ExpOutput {
+        id: "e3",
+        tables: vec![t, net],
+        notes: vec![
+            "expected shape: qplock ≥ rdma-mcs > cohort-tas > spin-rcas ≫ filter/bakery; \
+             rpc bounded by server round trips"
+                .into(),
+            "single-core host: wall throughput is scheduler-multiplexed; fabric ns/acq \
+             (E3b) is the scheduling-independent cost"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------- E4
+
+fn e4_mix(scale: Scale) -> ExpOutput {
+    let (fracs, dur): (&[u32], Duration) = match scale {
+        Scale::Quick => (&[0, 50, 100], Duration::from_millis(80)),
+        Scale::Full => (&[0, 25, 50, 75, 100], Duration::from_millis(300)),
+    };
+    let nprocs = 8u32;
+    let algos = ["qplock", "rdma-mcs", "spin-rcas", "rpc-server"];
+    let mut t = Table::new(
+        "E4: throughput (acq/s) vs %local processes, 8 procs",
+        &["algo/%local", "0", "25", "50", "75", "100"],
+    );
+    for algo in algos {
+        let mut cells = vec![algo.to_string()];
+        for &f in &[0u32, 25, 50, 75, 100] {
+            if !fracs.contains(&f) {
+                cells.push("-".into());
+                continue;
+            }
+            let nlocal = nprocs * f / 100;
+            let r = timed_run(algo, nprocs, nlocal, dur, 8, timed_domain(LatencyModel::calibrated()));
+            cells.push(fmt_thr(&r.result));
+        }
+        t.row(&cells);
+    }
+    ExpOutput {
+        id: "e4",
+        tables: vec![t],
+        notes: vec![
+            "expected shape: qplock's advantage grows with %local (locals never touch \
+             the NIC); class-blind locks are flat-to-worse as loopback replaces wire"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------- E5
+
+fn e5_budget(scale: Scale) -> ExpOutput {
+    let (budgets, dur): (&[u64], Duration) = match scale {
+        Scale::Quick => (&[1, 8], Duration::from_millis(80)),
+        Scale::Full => (&[1, 2, 4, 8, 16, 64], Duration::from_millis(300)),
+    };
+    let mut t = Table::new(
+        "E5: qplock budget sweep (4 local + 4 remote procs, 2µs CS)",
+        &["budget", "thr acq/s", "jain", "local acq%", "fabric ns/acq"],
+    );
+    for &b in budgets {
+        // A small CS payload keeps both cohorts continuously backlogged
+        // (with an empty CS the cheap local class simply outruns the
+        // remotes and the budget never engages — the budget bounds
+        // consecutive handoffs *while the other cohort waits*).
+        let cluster = Cluster::new(2, 1 << 20, timed_domain(LatencyModel::calibrated()));
+        let lock = make_lock("qplock", &cluster.domain, 0, 8, b);
+        let procs = cluster.spread_procs(8, 4, 0);
+        let wl = Workload::timed(dur, CsWork::SpinNs(2_000));
+        let r = run_workload(&cluster.domain, &lock, &procs, &wl);
+        assert_eq!(r.violations, 0);
+        let (l, rm) = r.class_split();
+        t.row(&[
+            b.to_string(),
+            fmt_thr(&r),
+            format!("{:.3}", r.jain()),
+            format!("{:.1}", 100.0 * l as f64 / (l + rm).max(1) as f64),
+            fmt_netns(&r),
+        ]);
+    }
+    ExpOutput {
+        id: "e5",
+        tables: vec![t],
+        notes: vec![
+            "expected shape: small budgets force frequent global handoffs — class \
+             split near 50/50 and jain near 1 at some throughput cost; large budgets \
+             amortize the Peterson handoff and favor the cheaper (local) class"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------- E6
+
+fn e6_latency(scale: Scale) -> ExpOutput {
+    let dur = match scale {
+        Scale::Quick => Duration::from_millis(80),
+        Scale::Full => Duration::from_millis(400),
+    };
+    let algos = ["qplock", "rdma-mcs", "spin-rcas", "rpc-server"];
+    let mut t = Table::new(
+        "E6: acquire latency by class (ns), 4 local + 4 remote procs",
+        &[
+            "algo", "L p50", "L p95", "L p99", "R p50", "R p95", "R p99",
+        ],
+    );
+    for algo in algos {
+        let r = timed_run(algo, 8, 4, dur, 8, timed_domain(LatencyModel::calibrated()));
+        let hl = r.result.acquire_hist(Some(Class::Local));
+        let hr = r.result.acquire_hist(Some(Class::Remote));
+        t.row(&[
+            algo.into(),
+            hl.p50().to_string(),
+            hl.p95().to_string(),
+            hl.p99().to_string(),
+            hr.p50().to_string(),
+            hr.p95().to_string(),
+            hr.p99().to_string(),
+        ]);
+    }
+    ExpOutput {
+        id: "e6",
+        tables: vec![t],
+        notes: vec![
+            "expected shape: qplock's local-class latency ≪ its remote-class latency \
+             and ≪ any class-blind lock's local latency (which pays loopback)"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------- E7
+
+fn e7_loopback(scale: Scale) -> ExpOutput {
+    let dur = match scale {
+        Scale::Quick => Duration::from_millis(80),
+        Scale::Full => Duration::from_millis(300),
+    };
+    // Local-heavy: 6 local + 2 remote. Congestion knob on/off.
+    let mut t = Table::new(
+        "E7: loopback congestion ablation (6 local + 2 remote procs)",
+        &["algo", "congestion", "thr acq/s", "peak NIC queue", "fabric ns/acq"],
+    );
+    for algo in ["qplock", "spin-rcas"] {
+        for &(label, cong) in &[("off", 0u64), ("on", 2_000u64)] {
+            let mut lat = LatencyModel::calibrated();
+            lat.congestion_ns_per_op = cong;
+            lat.nic_capacity = 2;
+            let cluster = Cluster::new(2, 1 << 20, timed_domain(lat));
+            let lock = make_lock(algo, &cluster.domain, 0, 8, 8);
+            let procs = cluster.spread_procs(8, 6, 0);
+            let wl = Workload::timed(dur, CsWork::None);
+            let r = run_workload(&cluster.domain, &lock, &procs, &wl);
+            assert_eq!(r.violations, 0);
+            let peak = cluster.domain.node(0).nic.metrics.peak_inflight
+                .load(std::sync::atomic::Ordering::Relaxed);
+            let net: u64 = r.procs.iter().map(|p| p.ops.net_ns).sum();
+            t.row(&[
+                algo.into(),
+                label.into(),
+                fmt_thr(&r),
+                peak.to_string(),
+                format!("{:.0}", net as f64 / r.total_acquisitions().max(1) as f64),
+            ]);
+        }
+    }
+    ExpOutput {
+        id: "e7",
+        tables: vec![t],
+        notes: vec![
+            "expected shape: spin-rcas floods the home NIC via loopback and degrades \
+             further when congestion pricing is on; qplock's local majority never \
+             enters the NIC, so it is insensitive to the knob"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------- E8
+
+fn e8_model_check(scale: Scale) -> ExpOutput {
+    let mut t = Table::new(
+        "E8: model checking (paper Appendix A battery)",
+        &[
+            "model", "config", "states", "ME", "deadlock-free", "starvation-free",
+            "livelock-free", "ms",
+        ],
+    );
+    let mut run = |name: &str, cfg: String, report_ms: (mc::CheckReport, u128)| {
+        let (r, ms) = report_ms;
+        t.row(&[
+            name.into(),
+            cfg,
+            r.states.to_string(),
+            r.mutual_exclusion.symbol().into(),
+            r.deadlock_free.symbol().into(),
+            r.starvation_free.symbol().into(),
+            r.dead_and_livelock_free.symbol().into(),
+            ms.to_string(),
+        ]);
+    };
+    let check = |m: &dyn Fn() -> mc::CheckReport| {
+        let t0 = Instant::now();
+        let r = m();
+        (r, t0.elapsed().as_millis())
+    };
+
+    run(
+        "peterson-2p",
+        "n=2".into(),
+        check(&|| mc::check_all(&models::peterson_spec::PetersonSpec, 1 << 20)),
+    );
+    run(
+        "qplock",
+        "n=2 B=1".into(),
+        check(&|| mc::check_all(&models::qplock_spec::QpSpec::new(2, 1), 1 << 22)),
+    );
+    run(
+        "qplock",
+        "n=3 B=1".into(),
+        check(&|| mc::check_all(&models::qplock_spec::QpSpec::new(3, 1), 1 << 22)),
+    );
+    run(
+        "qplock",
+        "n=3 B=2".into(),
+        check(&|| mc::check_all(&models::qplock_spec::QpSpec::new(3, 2), 1 << 22)),
+    );
+    if scale == Scale::Full {
+        run(
+            "qplock",
+            "n=4 B=2".into(),
+            check(&|| mc::check_all(&models::qplock_spec::QpSpec::new(4, 2), 1 << 23)),
+        );
+    }
+    run(
+        "naive-mixed",
+        "n=2".into(),
+        check(&|| mc::check_all(&models::naive_spec::NaiveSpec, 1 << 16)),
+    );
+    run(
+        "spin-rcas",
+        "n=2".into(),
+        check(&|| mc::check_all(&models::spin_spec::SpinSpec::new(2), 1 << 16)),
+    );
+
+    ExpOutput {
+        id: "e8",
+        tables: vec![t],
+        notes: vec![
+            "expected: qplock PASSes everything (paper's TLC result); naive-mixed \
+             FAILs MutualExclusion (Table-1 race, found mechanically); spin-rcas is \
+             safe but FAILs StarvationFree"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------- E9
+
+fn e9_param_server(scale: Scale) -> ExpOutput {
+    use crate::runtime::{ParamServer, XlaRuntime};
+    let steps_per_proc = match scale {
+        Scale::Quick => 20u64,
+        Scale::Full => 75,
+    };
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&format!("{artifacts}/step.hlo.txt")).exists() {
+        return ExpOutput {
+            id: "e9",
+            tables: vec![],
+            notes: vec!["SKIPPED: artifacts missing (run `make artifacts`)".into()],
+        };
+    }
+    let rt = XlaRuntime::cpu().expect("PJRT client");
+    let mut t = Table::new(
+        "E9: parameter server, 2 local + 2 remote writers, XLA step in CS",
+        &[
+            "lock", "steps", "wall ms", "steps/s", "final metric", "violations",
+        ],
+    );
+    let mut final_metrics = vec![];
+    for algo in ["qplock", "spin-rcas", "rpc-server"] {
+        let cluster = Cluster::new(2, 1 << 20, timed_domain(LatencyModel::calibrated()));
+        let ps = Arc::new(ParamServer::load(&rt, &artifacts, Default::default()).unwrap());
+        let metric = Arc::new(std::sync::Mutex::new(0f32));
+        let cs = {
+            let ps = Arc::clone(&ps);
+            let metric = Arc::clone(&metric);
+            CsWork::Callback(Arc::new(move |pid| {
+                let (u, v) = ps.synth_factors(0xE9 ^ pid as u64);
+                let m = ps.step(&u, &v).expect("XLA step");
+                *metric.lock().unwrap() = m;
+            }))
+        };
+        let lock = make_lock(algo, &cluster.domain, 0, 4, 8);
+        let procs = cluster.spread_procs(4, 2, 0);
+        let mut wl = Workload::cycles(steps_per_proc);
+        wl.cs = cs;
+        let r = run_workload(&cluster.domain, &lock, &procs, &wl);
+        assert_eq!(r.violations, 0, "{algo}");
+        let fm = *metric.lock().unwrap();
+        final_metrics.push(fm);
+        t.row(&[
+            algo.into(),
+            r.total_acquisitions().to_string(),
+            format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+            format!("{:.1}", r.throughput()),
+            format!("{fm:.5}"),
+            r.violations.to_string(),
+        ]);
+    }
+    ExpOutput {
+        id: "e9",
+        tables: vec![t],
+        notes: vec![
+            "all locks converge to the same fixed-point metric (same compute, \
+             different coordination cost); every step executes the AOT-compiled \
+             Pallas/JAX artifact through PJRT — no Python on the request path"
+                .into(),
+            format!("final metrics across locks: {final_metrics:?}"),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_ids() {
+        assert_eq!(EXPERIMENTS.len(), 9);
+        for (id, _) in EXPERIMENTS {
+            assert!(id.starts_with('e'));
+        }
+    }
+
+    #[test]
+    fn e2_quick_runs_and_qplock_locals_are_zero() {
+        let out = run_experiment("e2", Scale::Quick);
+        let t = &out.tables[0];
+        assert_eq!(t.lookup("qplock", 1), Some("0.00"), "local rdma ops");
+        assert_eq!(t.lookup("qplock", 2), Some("0.00"), "local loopback");
+        // qplock lone-remote: exactly 2 rCAS per lock+unlock cycle.
+        assert_eq!(t.lookup("qplock", 3), Some("2.00"));
+    }
+
+    #[test]
+    fn e8_quick_matches_paper_verdicts() {
+        let out = run_experiment("e8", Scale::Quick);
+        let t = &out.tables[0];
+        // qplock rows all PASS.
+        for r in 0..t.rows() {
+            if t.cell(r, 0) == "qplock" {
+                for c in 3..=6 {
+                    assert_eq!(t.cell(r, c), "PASS", "row {r} col {c}");
+                }
+            }
+            if t.cell(r, 0) == "naive-mixed" {
+                assert_eq!(t.cell(r, 3), "FAIL");
+            }
+            if t.cell(r, 0) == "spin-rcas" {
+                assert_eq!(t.cell(r, 3), "PASS");
+                assert_eq!(t.cell(r, 5), "FAIL");
+            }
+        }
+    }
+
+    #[test]
+    fn e1_quick_reproduces_table1() {
+        let out = run_experiment("e1", Scale::Quick);
+        let t = &out.tables[0];
+        // Write and RMW rows: commodity rCAS cell must report lost
+        // updates, global cell must be clean.
+        for key in ["Write", "RMW"] {
+            let comm = t.lookup(key, 3).unwrap();
+            let glob = t.lookup(key, 4).unwrap();
+            assert!(comm.starts_with("No"), "{key} commodity: {comm}");
+            assert_eq!(glob, "Yes", "{key} global");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Benchmark/experiment harness (system S11).
+//!
+//! criterion is not in the vendored registry, so `cargo bench` runs
+//! `rust/benches/bench_main.rs` (`harness = false`), which calls
+//! [`experiments::run_experiment`] for every id at `Quick` scale; the
+//! CLI (`qplock bench --exp eN --full`) runs individual experiments at
+//! the EXPERIMENTS.md scale. Each experiment prints aligned tables (and
+//! can emit CSV) mirroring the rows/series a paper evaluation would
+//! plot.
+
+pub mod experiments;
+pub mod table;
+
+pub use experiments::{run_experiment, ExpOutput, Scale, EXPERIMENTS};
+pub use table::Table;

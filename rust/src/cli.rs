@@ -1,0 +1,145 @@
+//! Hand-rolled CLI (clap is not in the vendored registry): flag parsing
+//! with `--key value` / `--flag` syntax, subcommand dispatch, and help
+//! text. Kept deliberately dependency-free.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positional subcommand + `--key value` options +
+/// boolean `--flags`.
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// Tokens starting with `--` take the following token as a value
+    /// unless it also starts with `--` or is absent (then it is a flag).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut subcommand = None;
+        let mut opts = HashMap::new();
+        let mut flags = vec![];
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        opts.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => flags.push(key.to_string()),
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(tok);
+            } else {
+                // Extra positional: treat as error-worthy garbage; keep
+                // it visible for the caller.
+                flags.push(format!("__extra_positional={tok}"));
+            }
+        }
+        Args {
+            subcommand,
+            opts,
+            flags,
+        }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parse an option as `T`, with a default. Panics with a clear
+    /// message on malformed input (CLI surface, not library).
+    pub fn get_num<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name} {s}: {e:?}")),
+        }
+    }
+}
+
+pub const HELP: &str = "\
+qplock — asymmetric mutual exclusion for RDMA (paper reproduction)
+
+USAGE:
+  qplock <subcommand> [options]
+
+SUBCOMMANDS:
+  run     run a lock workload and print the measurement report
+            --algo <name>      lock algorithm (default qplock)
+            --procs <n>        total processes (default 8)
+            --local <n>        processes on the lock's home node (default procs/2)
+            --iters <n>        cycles per process (default 1000)
+            --millis <ms>      run for a duration instead of iters
+            --budget <n>       qplock/cohort budget (default 8)
+            --cs-ns <ns>       critical-section busy work (default 0)
+            --counted          zero-latency op-count mode
+  bench   run experiments (DESIGN.md E1..E9)
+            --exp <id|all>     experiment id (default all)
+            --full             full scale (default quick)
+            --csv              also print CSV
+  mc      model-check a spec (paper Appendix A)
+            --model <name>     qplock|peterson|naive|spin (default qplock)
+            --procs <n>        processes (default 3)
+            --budget <n>       InitialBudget (default 1)
+  serve   demo the named-lock service router
+            --locks <n>        number of named locks (default 4)
+  list    list lock algorithms and experiments
+  help    this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args("bench --exp e3 --full");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("exp"), Some("e3"));
+        assert!(a.flag("full"));
+        assert!(!a.flag("csv"));
+    }
+
+    #[test]
+    fn numeric_defaults_and_parsing() {
+        let a = args("run --procs 12");
+        assert_eq!(a.get_num("procs", 8u32), 12);
+        assert_eq!(a.get_num("budget", 8u64), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn malformed_number_panics() {
+        let a = args("run --procs twelve");
+        let _ = a.get_num("procs", 8u32);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("run --counted --full");
+        assert!(a.flag("counted"));
+        assert!(a.flag("full"));
+    }
+}

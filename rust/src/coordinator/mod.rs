@@ -1,0 +1,85 @@
+//! Cluster coordination layer (systems S8/S9): topology, the lock
+//! service + router, the workload generator, and the multi-threaded
+//! process runner that drives every experiment.
+//!
+//! One simulated process = one OS thread bound to a node of the
+//! [`crate::rdma::RdmaDomain`]. The runner owns the experimental
+//! discipline: barrier-synchronized start, closed-loop
+//! think/lock/CS/unlock cycles, per-process latency histograms and verb
+//! counters, and an always-on mutual-exclusion oracle (a broken lock
+//! fails loudly in every experiment, not just dedicated tests).
+
+pub mod runner;
+pub mod service;
+pub mod workload;
+
+use std::sync::Arc;
+
+use crate::rdma::{DomainConfig, RdmaDomain};
+
+pub use runner::{run_workload, ProcResult, ProcSpec, RunResult};
+pub use service::LockService;
+pub use workload::{CsWork, Workload};
+
+/// A simulated cluster: the RDMA domain plus construction conveniences.
+pub struct Cluster {
+    pub domain: Arc<RdmaDomain>,
+}
+
+impl Cluster {
+    /// `nodes` machines with `words_per_node` registers each.
+    pub fn new(nodes: u16, words_per_node: u32, cfg: DomainConfig) -> Cluster {
+        Cluster {
+            domain: RdmaDomain::new(nodes, words_per_node, cfg),
+        }
+    }
+
+    /// Standard experimental cluster: 2 nodes, calibrated timing.
+    pub fn standard() -> Cluster {
+        Cluster::new(2, 1 << 20, DomainConfig::timed())
+    }
+
+    /// Spread `n` processes across nodes: the first `n_local` on
+    /// `home`, the rest round-robin over the remaining nodes (all
+    /// remote w.r.t. a lock homed at `home`).
+    pub fn spread_procs(&self, n: u32, n_local: u32, home: u16) -> Vec<ProcSpec> {
+        assert!(n_local <= n);
+        let nodes = self.domain.num_nodes();
+        let remotes: Vec<u16> = (0..nodes).filter(|&x| x != home).collect();
+        (0..n)
+            .map(|i| {
+                let node = if i < n_local {
+                    home
+                } else if remotes.is_empty() {
+                    home
+                } else {
+                    remotes[((i - n_local) as usize) % remotes.len()]
+                };
+                ProcSpec { node, pid: i }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_procs_partitions_by_class() {
+        let c = Cluster::new(3, 1 << 12, DomainConfig::counted());
+        let procs = c.spread_procs(6, 2, 0);
+        assert_eq!(procs.iter().filter(|p| p.node == 0).count(), 2);
+        assert_eq!(procs.iter().filter(|p| p.node != 0).count(), 4);
+        // Remote procs alternate over nodes 1 and 2.
+        assert_eq!(procs[2].node, 1);
+        assert_eq!(procs[3].node, 2);
+    }
+
+    #[test]
+    fn spread_procs_single_node_cluster() {
+        let c = Cluster::new(1, 1 << 12, DomainConfig::counted());
+        let procs = c.spread_procs(4, 0, 0);
+        assert!(procs.iter().all(|p| p.node == 0));
+    }
+}

@@ -1,0 +1,235 @@
+//! Multi-threaded workload execution with full instrumentation.
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use super::workload::Workload;
+use crate::locks::{Class, CsChecker, SharedLock};
+use crate::rdma::{NodeId, ProcMetricsSnapshot, RdmaDomain};
+use crate::stats::{jain_index, Histogram};
+use crate::util::prng::Prng;
+use crate::util::spin::spin_wait_ns;
+
+/// Placement of one simulated process.
+#[derive(Clone, Copy, Debug)]
+pub struct ProcSpec {
+    pub node: NodeId,
+    /// Unique per run, `< max_procs` of the lock.
+    pub pid: u32,
+}
+
+/// Everything measured about one process.
+pub struct ProcResult {
+    pub pid: u32,
+    pub node: NodeId,
+    pub class: Class,
+    pub acquisitions: u64,
+    /// Lock-acquire latency (ns).
+    pub acquire_ns: Histogram,
+    /// Full cycle latency (acquire + CS + release, ns).
+    pub cycle_ns: Histogram,
+    /// Verb counters accumulated over the run.
+    pub ops: ProcMetricsSnapshot,
+}
+
+/// Aggregated outcome of a run.
+pub struct RunResult {
+    pub wall: Duration,
+    pub procs: Vec<ProcResult>,
+    /// Mutual-exclusion violations observed by the oracle (0 for every
+    /// correct lock).
+    pub violations: u64,
+}
+
+impl RunResult {
+    pub fn total_acquisitions(&self) -> u64 {
+        self.procs.iter().map(|p| p.acquisitions).sum()
+    }
+
+    /// Aggregate throughput in acquisitions per second.
+    pub fn throughput(&self) -> f64 {
+        self.total_acquisitions() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Jain fairness index over per-process acquisition counts.
+    pub fn jain(&self) -> f64 {
+        let xs: Vec<u64> = self.procs.iter().map(|p| p.acquisitions).collect();
+        jain_index(&xs)
+    }
+
+    /// Merged acquire-latency histogram across processes (optionally
+    /// filtered by class).
+    pub fn acquire_hist(&self, class: Option<Class>) -> Histogram {
+        let mut h = Histogram::new();
+        for p in &self.procs {
+            if class.is_none() || class == Some(p.class) {
+                h.merge(&p.acquire_ns);
+            }
+        }
+        h
+    }
+
+    /// Total remote verbs per acquisition (aggregate).
+    pub fn remote_ops_per_acq(&self) -> f64 {
+        let ops: u64 = self.procs.iter().map(|p| p.ops.remote_total()).sum();
+        ops as f64 / self.total_acquisitions().max(1) as f64
+    }
+
+    /// Per-class acquisition counts `(local, remote)`.
+    pub fn class_split(&self) -> (u64, u64) {
+        let mut local = 0;
+        let mut remote = 0;
+        for p in &self.procs {
+            match p.class {
+                Class::Local => local += p.acquisitions,
+                Class::Remote => remote += p.acquisitions,
+            }
+        }
+        (local, remote)
+    }
+}
+
+/// Run `workload` with one thread per `ProcSpec`, all contending on
+/// `lock`. Returns per-process and aggregate measurements.
+pub fn run_workload(
+    domain: &Arc<RdmaDomain>,
+    lock: &Arc<dyn SharedLock>,
+    procs: &[ProcSpec],
+    workload: &Workload,
+) -> RunResult {
+    let n = procs.len();
+    assert!(n > 0);
+    let barrier = Arc::new(Barrier::new(n + 1));
+    let stop = Arc::new(AtomicBool::new(false));
+    let checker = CsChecker::new();
+    let home = lock.home();
+
+    let mut joins = vec![];
+    for spec in procs.iter().copied() {
+        let ep = domain.endpoint(spec.node);
+        let metrics = Arc::clone(&ep.metrics);
+        let class = Class::of(&ep, home);
+        let mut handle = lock.handle(ep, spec.pid);
+        let barrier = Arc::clone(&barrier);
+        let stop = Arc::clone(&stop);
+        let checker = Arc::clone(&checker);
+        let wl = workload.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut acquire_ns = Histogram::new();
+            let mut cycle_ns = Histogram::new();
+            let mut acquisitions = 0u64;
+            let mut rng = Prng::seed_from(wl.seed ^ (spec.pid as u64).wrapping_mul(0xA24B));
+            barrier.wait();
+            let deadline = wl.duration.map(|d| Instant::now() + d);
+            for _ in 0..wl.iters {
+                if stop.load(SeqCst) {
+                    break;
+                }
+                if let Some(dl) = deadline {
+                    if Instant::now() >= dl {
+                        break;
+                    }
+                }
+                if wl.think_ns_mean > 0 {
+                    spin_wait_ns(rng.exp(wl.think_ns_mean as f64) as u64);
+                }
+                let t0 = Instant::now();
+                handle.lock();
+                let t1 = Instant::now();
+                checker.enter(spec.pid + 1);
+                wl.cs.run(spec.pid);
+                checker.exit(spec.pid + 1);
+                handle.unlock();
+                let t2 = Instant::now();
+                acquire_ns.record((t1 - t0).as_nanos() as u64);
+                cycle_ns.record((t2 - t0).as_nanos() as u64);
+                acquisitions += 1;
+            }
+            // First thread to finish in duration mode stops everyone, so
+            // throughput is measured over a common window.
+            if deadline.is_some() {
+                stop.store(true, SeqCst);
+            }
+            ProcResult {
+                pid: spec.pid,
+                node: spec.node,
+                class,
+                acquisitions,
+                acquire_ns,
+                cycle_ns,
+                ops: metrics.snapshot(),
+            }
+        }));
+    }
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let procs: Vec<ProcResult> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed();
+
+    RunResult {
+        wall,
+        procs,
+        violations: checker.violations(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Cluster;
+    use crate::locks::make_lock;
+    use crate::rdma::DomainConfig;
+
+    #[test]
+    fn run_collects_everything() {
+        let c = Cluster::new(2, 1 << 14, DomainConfig::counted());
+        let lock = make_lock("qplock", &c.domain, 0, 4, 8);
+        let procs = c.spread_procs(4, 2, 0);
+        let r = run_workload(&c.domain, &lock, &procs, &Workload::cycles(300));
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.total_acquisitions(), 4 * 300);
+        assert_eq!(r.procs.len(), 4);
+        assert!(r.throughput() > 0.0);
+        assert!(r.jain() > 0.9, "equal iteration counts: jain={}", r.jain());
+        let (l, rm) = r.class_split();
+        assert_eq!(l, 600);
+        assert_eq!(rm, 600);
+        // Local class issued zero remote verbs under qplock.
+        for p in &r.procs {
+            if p.class == Class::Local {
+                assert_eq!(p.ops.remote_total(), 0);
+            }
+        }
+        assert!(r.acquire_hist(None).count() == 1_200);
+    }
+
+    #[test]
+    fn duration_mode_stops() {
+        let c = Cluster::new(2, 1 << 14, DomainConfig::counted());
+        let lock = make_lock("spin-rcas", &c.domain, 0, 2, 1);
+        let procs = c.spread_procs(2, 1, 0);
+        let wl = Workload::timed(Duration::from_millis(50), crate::coordinator::CsWork::None);
+        let t0 = Instant::now();
+        let r = run_workload(&c.domain, &lock, &procs, &wl);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(r.total_acquisitions() > 0);
+        assert_eq!(r.violations, 0);
+    }
+
+    #[test]
+    fn every_algorithm_runs_clean_under_the_runner() {
+        for algo in crate::locks::ALGORITHMS {
+            if *algo == "naive-mixed" {
+                continue; // the intentionally broken control
+            }
+            let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+            let lock = make_lock(algo, &c.domain, 0, 4, 4);
+            let procs = c.spread_procs(4, 2, 0);
+            let r = run_workload(&c.domain, &lock, &procs, &Workload::cycles(150));
+            assert_eq!(r.violations, 0, "{algo} violated mutual exclusion");
+            assert_eq!(r.total_acquisitions(), 600, "{algo}");
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Workload specification: what a simulated process does between and
+//! inside critical sections.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Work performed while holding the lock.
+#[derive(Clone)]
+pub enum CsWork {
+    /// Empty critical section (pure lock-handoff measurement).
+    None,
+    /// Busy-wait for a fixed duration (models touching protected data).
+    SpinNs(u64),
+    /// Arbitrary callback — the end-to-end example injects an XLA
+    /// executable step here. Receives the calling pid.
+    Callback(Arc<dyn Fn(u32) + Send + Sync>),
+}
+
+impl CsWork {
+    #[inline]
+    pub fn run(&self, pid: u32) {
+        match self {
+            CsWork::None => {}
+            CsWork::SpinNs(ns) => crate::util::spin::spin_wait_ns(*ns),
+            CsWork::Callback(f) => f(pid),
+        }
+    }
+}
+
+impl std::fmt::Debug for CsWork {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsWork::None => write!(f, "None"),
+            CsWork::SpinNs(ns) => write!(f, "SpinNs({ns})"),
+            CsWork::Callback(_) => write!(f, "Callback(..)"),
+        }
+    }
+}
+
+/// Closed-loop workload: each process performs `think → lock → CS →
+/// unlock` until it has done `iters` cycles or `duration` elapses
+/// (whichever is configured; `duration` wins if both are set).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    /// Cycles per process (ignored when `duration` is set).
+    pub iters: u64,
+    /// Wall-clock stop criterion.
+    pub duration: Option<Duration>,
+    /// Critical-section payload.
+    pub cs: CsWork,
+    /// Mean think time between cycles (exponentially distributed;
+    /// 0 = fully closed loop).
+    pub think_ns_mean: u64,
+    /// PRNG seed (think times are deterministic given the seed).
+    pub seed: u64,
+}
+
+impl Workload {
+    /// `iters` empty-CS cycles, no think time — the handoff microbench.
+    pub fn cycles(iters: u64) -> Workload {
+        Workload {
+            iters,
+            duration: None,
+            cs: CsWork::None,
+            think_ns_mean: 0,
+            seed: 0x9E3779B97F4A7C15,
+        }
+    }
+
+    /// Timed run with a CS payload.
+    pub fn timed(duration: Duration, cs: CsWork) -> Workload {
+        Workload {
+            iters: u64::MAX,
+            duration: Some(duration),
+            cs,
+            think_ns_mean: 0,
+            seed: 0x9E3779B97F4A7C15,
+        }
+    }
+
+    pub fn with_cs(mut self, cs: CsWork) -> Workload {
+        self.cs = cs;
+        self
+    }
+
+    pub fn with_think_ns(mut self, ns: u64) -> Workload {
+        self.think_ns_mean = ns;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Workload {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn cs_work_callback_runs() {
+        let hits = Arc::new(AtomicU32::new(0));
+        let h2 = Arc::clone(&hits);
+        let w = CsWork::Callback(Arc::new(move |pid| {
+            h2.fetch_add(pid, Ordering::SeqCst);
+        }));
+        w.run(3);
+        w.run(4);
+        assert_eq!(hits.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let w = Workload::cycles(100).with_think_ns(500).with_seed(7);
+        assert_eq!(w.iters, 100);
+        assert_eq!(w.think_ns_mean, 500);
+        assert_eq!(w.seed, 7);
+        assert!(w.duration.is_none());
+    }
+}

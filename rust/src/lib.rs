@@ -1,0 +1,25 @@
+//! **qplock** — asymmetric mutual exclusion for RDMA.
+//!
+//! Reproduction of *"Technical Report: Asymmetric Mutual Exclusion for
+//! RDMA"* (Nelson-Slivon, Tseng, Palmieri; 2022) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the system inventory
+//! and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`rdma`] — simulated RDMA fabric (registers, verbs, NIC atomicity
+//!   semantics, latency/congestion model).
+//! * [`locks`] — the paper's qplock plus every baseline.
+//! * [`mc`] — explicit-state model checker over the PlusCal spec.
+//! * [`coordinator`] — cluster topology, lock service, workload runner.
+//! * [`runtime`] — PJRT bridge executing AOT-compiled JAX/Pallas
+//!   artifacts inside critical sections.
+//! * [`stats`], [`util`] — measurement and support code.
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod locks;
+pub mod mc;
+pub mod rdma;
+pub mod runtime;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,155 @@
+//! Lamport's bakery algorithm over RDMA, class-blind.
+//!
+//! Referenced by the paper (§3) as exhibiting "the same undesirable
+//! behavior" as the filter lock for remote processes: read-write
+//! registers only (so it *does* sidestep the RMW atomicity problem), but
+//! every acquisition scans all n processes' tickets through the NIC and
+//! spins on remote memory. It is FCFS-fair — which makes it a useful
+//! fairness yardstick in E5 — just ruinously expensive per acquisition.
+
+use std::sync::Arc;
+
+use crate::locks::{LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+/// Shared registers on the home node: `choosing[n]` and `number[n]`.
+pub struct BakeryLock {
+    choosing: Addr,
+    number: Addr,
+    n: u32,
+    home: NodeId,
+}
+
+impl BakeryLock {
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId, max_procs: u32) -> Arc<BakeryLock> {
+        assert!(max_procs >= 2);
+        let mem = &domain.node(home).mem;
+        Arc::new(BakeryLock {
+            choosing: mem.alloc(max_procs),
+            number: mem.alloc(max_procs),
+            n: max_procs,
+            home,
+        })
+    }
+}
+
+impl SharedLock for BakeryLock {
+    fn handle(&self, ep: Endpoint, pid: u32) -> Box<dyn LockHandle> {
+        assert!(pid < self.n, "pid {pid} out of range (max_procs {})", self.n);
+        Box::new(BakeryHandle {
+            choosing: self.choosing,
+            number: self.number,
+            n: self.n,
+            me: pid,
+            ep,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "bakery"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Per-process handle; all accesses are verbs (loopback for locals).
+pub struct BakeryHandle {
+    choosing: Addr,
+    number: Addr,
+    n: u32,
+    me: u32,
+    ep: Endpoint,
+}
+
+impl LockHandle for BakeryHandle {
+    fn lock(&mut self) {
+        // Doorway: pick a ticket one past the max (remote scan).
+        self.ep.r_write(self.choosing.offset(self.me), 1);
+        let mut max = 0u64;
+        for k in 0..self.n {
+            max = max.max(self.ep.r_read(self.number.offset(k)));
+        }
+        let my_num = max + 1;
+        self.ep.r_write(self.number.offset(self.me), my_num);
+        self.ep.r_write(self.choosing.offset(self.me), 0);
+        // Wait phase: for each other process, wait out its doorway, then
+        // wait until our (ticket, pid) is the smallest.
+        for k in 0..self.n {
+            if k == self.me {
+                continue;
+            }
+            let mut bo = Backoff::default();
+            while self.ep.r_read(self.choosing.offset(k)) == 1 {
+                bo.snooze();
+            }
+            let mut bo = Backoff::default();
+            loop {
+                let nk = self.ep.r_read(self.number.offset(k));
+                if nk == 0 || (nk, k) > (my_num, self.me) {
+                    break;
+                }
+                bo.snooze();
+            }
+        }
+    }
+
+    fn unlock(&mut self) {
+        self.ep.r_write(self.number.offset(self.me), 0);
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "bakery"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::DomainConfig;
+
+    #[test]
+    fn mutual_exclusion_stress() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = BakeryLock::create(&d, 0, 4);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for pid in 0..4u32 {
+            let mut h = l.handle(d.endpoint((pid % 2) as u16), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..400 {
+                    h.lock();
+                    c.enter(pid + 1);
+                    c.exit(pid + 1);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        assert_eq!(check.entries(), 1_600);
+    }
+
+    #[test]
+    fn uses_only_read_write_registers() {
+        // Bakery never needs CAS — worth asserting since that is its
+        // one structural advantage under operation asymmetry.
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = BakeryLock::create(&d, 0, 3);
+        let ep = d.endpoint(1);
+        let m = Arc::clone(&ep.metrics);
+        let mut h = l.handle(ep, 0);
+        h.lock();
+        h.unlock();
+        let s = m.snapshot();
+        assert_eq!(s.remote_cas, 0);
+        assert_eq!(s.local_cas, 0);
+        assert!(s.remote_read as u32 >= 3, "doorway scan: {s:?}");
+    }
+}

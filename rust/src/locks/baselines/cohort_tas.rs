@@ -1,0 +1,240 @@
+//! Classic lock cohorting (Dice, Marathe, Shavit — PPoPP'12)
+//! transplanted to RDMA, as the paper's §4 discusses.
+//!
+//! Cohorts are per **node** (the NUMA analogue), each a local MCS queue
+//! in that node's memory; cohort leaders compete for a global
+//! test-and-set word on the home node. Because the global word is taken
+//! with an RMW, *every* leader must use `rCAS` — including the home
+//! node's leader, which loopbacks (CPU `CAS` would not be atomic with
+//! the remote leaders' `rCAS`, Table 1). A budget bounds intra-cohort
+//! handoffs, as in the original paper.
+//!
+//! The contrast with qplock: same cohort idea, but the global lock costs
+//! the local class loopback RMWs and the remote leaders spin on the
+//! *remote* global word. qplock's modified Peterson removes both.
+
+use std::sync::Arc;
+
+use crate::locks::{LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+const WAITING: u64 = 0;
+/// Passed the cohort lock but the global lock was released: acquire it.
+const PASS_ACQUIRE: u64 = 1;
+/// Passed cohort + global; remaining budget is `value - PASS_BASE`.
+const PASS_BASE: u64 = 2;
+const NEXT: u32 = 1;
+
+/// Shared state: the global TAS word on the home node plus one cohort
+/// tail word per node (each resident on its node).
+pub struct CohortTasLock {
+    global: Addr,
+    tails: Vec<Addr>,
+    home: NodeId,
+    budget: u64,
+}
+
+impl CohortTasLock {
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId, budget: u64) -> Arc<CohortTasLock> {
+        assert!(budget >= 1);
+        let tails = (0..domain.num_nodes())
+            .map(|n| domain.node(n).mem.alloc(1))
+            .collect();
+        Arc::new(CohortTasLock {
+            global: domain.node(home).mem.alloc(1),
+            tails,
+            home,
+            budget,
+        })
+    }
+}
+
+impl SharedLock for CohortTasLock {
+    fn handle(&self, ep: Endpoint, _pid: u32) -> Box<dyn LockHandle> {
+        let tail = self.tails[ep.node() as usize];
+        let desc = ep.alloc(2);
+        Box::new(CohortTasHandle {
+            global: self.global,
+            tail,
+            desc,
+            ep,
+            budget_init: self.budget,
+            budget: 0,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "cohort-tas"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Per-process handle. Cohort ops are local (the cohort is this node);
+/// global ops are verbs for everyone.
+pub struct CohortTasHandle {
+    global: Addr,
+    tail: Addr,
+    desc: Addr,
+    ep: Endpoint,
+    budget_init: u64,
+    budget: u64,
+}
+
+impl CohortTasHandle {
+    fn acquire_global(&mut self) {
+        let mut bo = Backoff::default();
+        loop {
+            // TTAS on the global word — remote spinning for remote
+            // leaders, loopback for the home leader.
+            if self.ep.r_read(self.global) == 0 && self.ep.r_cas(self.global, 0, 1) == 0 {
+                return;
+            }
+            bo.snooze();
+        }
+    }
+
+    fn release_global(&mut self) {
+        self.ep.r_write(self.global, 0);
+    }
+}
+
+impl LockHandle for CohortTasHandle {
+    fn lock(&mut self) {
+        // Local MCS within the node's cohort.
+        self.ep.write(self.desc, WAITING);
+        self.ep.write(self.desc.offset(NEXT), 0);
+        let mut curr = 0u64;
+        loop {
+            let seen = self.ep.cas(self.tail, curr, self.desc.to_bits());
+            if seen == curr {
+                break;
+            }
+            curr = seen;
+        }
+        if curr == 0 {
+            // Cohort leader: take the global lock.
+            self.acquire_global();
+            self.budget = self.budget_init;
+            return;
+        }
+        self.ep.write(Addr::from_bits(curr).offset(NEXT), self.desc.to_bits());
+        let mut bo = Backoff::default();
+        let mut v;
+        loop {
+            v = self.ep.read(self.desc);
+            if v != WAITING {
+                break;
+            }
+            bo.snooze();
+        }
+        if v == PASS_ACQUIRE {
+            self.acquire_global();
+            self.budget = self.budget_init;
+        } else {
+            self.budget = v - PASS_BASE;
+        }
+    }
+
+    fn unlock(&mut self) {
+        if self.ep.read(self.desc.offset(NEXT)) == 0 {
+            if self.ep.cas(self.tail, self.desc.to_bits(), 0) == self.desc.to_bits() {
+                self.release_global();
+                return;
+            }
+            let mut bo = Backoff::default();
+            while self.ep.read(self.desc.offset(NEXT)) == 0 {
+                bo.snooze();
+            }
+        }
+        let next = Addr::from_bits(self.ep.read(self.desc.offset(NEXT)));
+        if self.budget > 0 {
+            // Keep the global lock inside the cohort.
+            self.ep.write(next, PASS_BASE + self.budget - 1);
+        } else {
+            // Budget exhausted: release the global lock so other nodes'
+            // leaders can take it; successor must re-acquire.
+            self.release_global();
+            self.ep.write(next, PASS_ACQUIRE);
+        }
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "cohort-tas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::DomainConfig;
+
+    #[test]
+    fn mutual_exclusion_two_nodes() {
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = CohortTasLock::create(&d, 0, 3);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for pid in 1..=6u32 {
+            let mut h = l.handle(d.endpoint((pid % 2) as u16), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..700 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        assert_eq!(check.entries(), 4_200);
+    }
+
+    #[test]
+    fn home_leader_loopbacks_on_global() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = CohortTasLock::create(&d, 0, 2);
+        let ep = d.endpoint(0);
+        let m = Arc::clone(&ep.metrics);
+        let mut h = l.handle(ep, 1);
+        h.lock();
+        h.unlock();
+        let s = m.snapshot();
+        // Global TTAS read + CAS + release write — all loopback.
+        assert!(s.loopback >= 3, "{s:?}");
+    }
+
+    #[test]
+    fn budget_passes_global_within_cohort() {
+        // Three same-node processes, budget 2: at least some handoffs
+        // must carry the global lock (no extra global CAS).
+        let d = RdmaDomain::new(1, 4096, DomainConfig::counted());
+        let l = CohortTasLock::create(&d, 0, 2);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for pid in 1..=3u32 {
+            let mut h = l.handle(d.endpoint(0), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Peterson's n-process **filter lock** over RDMA, class-blind.
+//!
+//! The paper's §3 names this as the natural-but-bad generalization of
+//! Peterson's algorithm: n−1 levels, each holding back one process.
+//! Every level requires scanning all other processes' level registers —
+//! through the NIC for everyone — so a single acquisition costs
+//! O(n · levels) remote reads *and* spins on remote memory, even in
+//! isolation. It is starvation-free but not FCFS.
+
+use std::sync::Arc;
+
+use crate::locks::{LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+/// Shared registers on the home node: `level[n]` and `victim[n]`
+/// (victim slot 0 unused — levels are 1-based as in the textbook
+/// presentation).
+pub struct FilterLock {
+    level: Addr,  // n consecutive words
+    victim: Addr, // n consecutive words
+    n: u32,
+    home: NodeId,
+}
+
+impl FilterLock {
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId, max_procs: u32) -> Arc<FilterLock> {
+        assert!(max_procs >= 2);
+        let mem = &domain.node(home).mem;
+        Arc::new(FilterLock {
+            level: mem.alloc(max_procs),
+            victim: mem.alloc(max_procs),
+            n: max_procs,
+            home,
+        })
+    }
+}
+
+impl SharedLock for FilterLock {
+    fn handle(&self, ep: Endpoint, pid: u32) -> Box<dyn LockHandle> {
+        assert!(pid < self.n, "pid {pid} out of range (max_procs {})", self.n);
+        Box::new(FilterHandle {
+            level: self.level,
+            victim: self.victim,
+            n: self.n,
+            me: pid,
+            ep,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "filter"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Per-process handle; all accesses are verbs (loopback for locals).
+pub struct FilterHandle {
+    level: Addr,
+    victim: Addr,
+    n: u32,
+    me: u32,
+    ep: Endpoint,
+}
+
+impl LockHandle for FilterHandle {
+    fn lock(&mut self) {
+        for l in 1..self.n {
+            self.ep.r_write(self.level.offset(self.me), l as u64);
+            self.ep.r_write(self.victim.offset(l), self.me as u64);
+            // Wait while some other process is at level >= l and we are
+            // the level's victim. Each check is a remote scan.
+            let mut bo = Backoff::default();
+            loop {
+                let mut conflict = false;
+                for k in 0..self.n {
+                    if k != self.me && self.ep.r_read(self.level.offset(k)) >= l as u64 {
+                        conflict = true;
+                        break;
+                    }
+                }
+                if !conflict || self.ep.r_read(self.victim.offset(l)) != self.me as u64 {
+                    break;
+                }
+                bo.snooze();
+            }
+        }
+    }
+
+    fn unlock(&mut self) {
+        self.ep.r_write(self.level.offset(self.me), 0);
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "filter"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::DomainConfig;
+
+    #[test]
+    fn mutual_exclusion_stress() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = FilterLock::create(&d, 0, 4);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for pid in 0..4u32 {
+            let mut h = l.handle(d.endpoint((pid % 2) as u16), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..400 {
+                    h.lock();
+                    c.enter(pid + 1);
+                    c.exit(pid + 1);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        assert_eq!(check.entries(), 1_600);
+    }
+
+    #[test]
+    fn lone_acquisition_costs_linear_remote_ops() {
+        // The paper's complaint: even uncontended, a filter-lock
+        // acquisition costs Θ(n²) remote reads (n−1 levels × n−1 scans).
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let n = 8;
+        let l = FilterLock::create(&d, 0, n);
+        let ep = d.endpoint(1);
+        let m = Arc::clone(&ep.metrics);
+        let mut h = l.handle(ep, 0);
+        h.lock();
+        let s = m.snapshot();
+        // (n-1) levels × (2 writes + ≥(n-1) reads + 1 victim read... ).
+        assert!(s.remote_write as u32 >= 2 * (n - 1));
+        assert!(s.remote_read as u32 >= (n - 1) * (n - 1));
+        h.unlock();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pid_out_of_range_rejected() {
+        let d = RdmaDomain::new(1, 1024, DomainConfig::counted());
+        let l = FilterLock::create(&d, 0, 2);
+        let _ = l.handle(d.endpoint(0), 2);
+    }
+}

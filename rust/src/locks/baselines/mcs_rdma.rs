@@ -1,0 +1,172 @@
+//! Classic MCS queue lock over RDMA, class-blind.
+//!
+//! The standard distributed MCS construction (e.g. Yoon et al.,
+//! SIGMOD'18): a tail word on the lock's home node manipulated with
+//! `rCAS` by *every* participant — including processes on the home node,
+//! which must loopback because CPU `CAS` is not atomic with `rCAS`
+//! (paper Table 1). Waiters spin on a descriptor in their own node's
+//! memory (written by the predecessor with `rWrite`), so it already
+//! avoids remote spinning; what it lacks compared to qplock is the
+//! local/remote asymmetry — the home node's processes pay NIC latency
+//! and NIC queue slots on every acquire and release.
+//!
+//! qplock's remote cohort is exactly this algorithm plus the budget; the
+//! delta between `rdma-mcs` and `qplock` in experiments E3/E4/E7 is the
+//! paper's contribution made visible.
+
+use std::sync::Arc;
+
+use crate::locks::{LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+const WAITING: u64 = u64::MAX;
+const GRANTED: u64 = 1;
+const NEXT: u32 = 1;
+
+/// Shared state: the queue tail word on the home node.
+pub struct RdmaMcsLock {
+    tail: Addr,
+    home: NodeId,
+}
+
+impl RdmaMcsLock {
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId) -> Arc<RdmaMcsLock> {
+        Arc::new(RdmaMcsLock {
+            tail: domain.node(home).mem.alloc(1),
+            home,
+        })
+    }
+}
+
+impl SharedLock for RdmaMcsLock {
+    fn handle(&self, ep: Endpoint, _pid: u32) -> Box<dyn LockHandle> {
+        let desc = ep.alloc(2); // [state, next] on the caller's node
+        Box::new(RdmaMcsHandle {
+            tail: self.tail,
+            ep,
+            desc,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "rdma-mcs"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Per-process handle; every tail access is a verb (loopback for locals).
+pub struct RdmaMcsHandle {
+    tail: Addr,
+    ep: Endpoint,
+    desc: Addr,
+}
+
+impl LockHandle for RdmaMcsHandle {
+    fn lock(&mut self) {
+        // Initialize our descriptor (local: it lives on our node).
+        self.ep.write(self.desc, GRANTED);
+        self.ep.write(self.desc.offset(NEXT), 0);
+        // Swap ourselves in as tail (CAS loop; class-blind rCAS).
+        let mut curr = 0u64;
+        loop {
+            let seen = self.ep.r_cas(self.tail, curr, self.desc.to_bits());
+            if seen == curr {
+                break;
+            }
+            curr = seen;
+        }
+        if curr == 0 {
+            return; // queue was empty — lock is ours
+        }
+        // Mark waiting, link behind the predecessor, spin locally.
+        self.ep.write(self.desc, WAITING);
+        self.ep
+            .r_write(Addr::from_bits(curr).offset(NEXT), self.desc.to_bits());
+        let mut bo = Backoff::default();
+        while self.ep.read(self.desc) == WAITING {
+            bo.snooze();
+        }
+    }
+
+    fn unlock(&mut self) {
+        if self.ep.read(self.desc.offset(NEXT)) == 0 {
+            if self.ep.r_cas(self.tail, self.desc.to_bits(), 0) == self.desc.to_bits() {
+                return;
+            }
+            let mut bo = Backoff::default();
+            while self.ep.read(self.desc.offset(NEXT)) == 0 {
+                bo.snooze();
+            }
+        }
+        let next = Addr::from_bits(self.ep.read(self.desc.offset(NEXT)));
+        self.ep.r_write(next, GRANTED);
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "rdma-mcs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::DomainConfig;
+
+    #[test]
+    fn mutual_exclusion_stress() {
+        let d = RdmaDomain::new(3, 4096, DomainConfig::counted());
+        let l = RdmaMcsLock::create(&d, 0);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for pid in 1..=6u32 {
+            let mut h = l.handle(d.endpoint((pid % 3) as u16), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..800 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        assert_eq!(check.entries(), 4_800);
+    }
+
+    #[test]
+    fn home_node_processes_pay_loopback() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = RdmaMcsLock::create(&d, 0);
+        let ep = d.endpoint(0);
+        let m = Arc::clone(&ep.metrics);
+        let mut h = l.handle(ep, 1);
+        h.lock();
+        h.unlock();
+        let s = m.snapshot();
+        assert!(s.loopback >= 2, "tail CAS on acquire + release: {s:?}");
+    }
+
+    #[test]
+    fn lone_process_two_rcas_total() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = RdmaMcsLock::create(&d, 0);
+        let ep = d.endpoint(1);
+        let m = Arc::clone(&ep.metrics);
+        let mut h = l.handle(ep, 1);
+        h.lock();
+        h.unlock();
+        let s = m.snapshot();
+        assert_eq!(s.remote_cas, 2);
+        assert_eq!(s.remote_write, 0);
+        assert_eq!(s.remote_read, 0);
+    }
+}

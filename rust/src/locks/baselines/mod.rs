@@ -1,0 +1,36 @@
+//! Baseline mutual-exclusion algorithms the paper argues against or
+//! compares to (system S5 in DESIGN.md).
+//!
+//! * [`spin::SpinRcasLock`] — the "naive solution" of paper §3: *all*
+//!   processes, including local ones, take the RNIC path (`rCAS`), so
+//!   local processes pay loopback on every attempt.
+//! * [`naive_mixed::NaiveMixedLock`] — the tempting-but-wrong variant
+//!   where local processes use CPU `CAS` and remote ones use `rCAS` on
+//!   the same word. Broken on commodity hardware (paper Table 1); kept
+//!   as a measurable negative control for E1/E8.
+//! * [`mcs_rdma::RdmaMcsLock`] — MCS (Mellor-Crummey & Scott '91) over
+//!   RDMA with every tail operation through the NIC (loopback for
+//!   locals). Waiters spin on their own node; the queue discipline is
+//!   fair — what it lacks vs qplock is the local/remote asymmetry.
+//! * [`filter::FilterLock`] — Peterson's n-process filter lock over
+//!   RDMA; O(n) levels of remote scanning + remote spinning (paper §3's
+//!   argument for why the naive generalization is unacceptable).
+//! * [`bakery::BakeryLock`] — Lamport's bakery over RDMA; same
+//!   per-acquisition O(n) remote behavior.
+//! * [`cohort_tas::CohortTasLock`] — classic lock cohorting (Dice et
+//!   al., PPoPP'12) transplanted to RDMA: per-node MCS cohorts under a
+//!   global test-and-set taken with `rCAS` — so the home node's leader
+//!   must loopback (the paper's §4 point about cohorting needing a
+//!   redesign for operation asymmetry).
+//! * [`rpc::RpcLock`] — a lock server reached by message passing:
+//!   synchronization is handled entirely by a local process (the
+//!   server), at the price of a round trip per lock *and* per unlock
+//!   (the RPC pattern of FaSST/HERD the paper's §1 discusses).
+
+pub mod bakery;
+pub mod cohort_tas;
+pub mod filter;
+pub mod mcs_rdma;
+pub mod naive_mixed;
+pub mod rpc;
+pub mod spin;

@@ -1,0 +1,180 @@
+//! The *incorrect* mixed-atomicity lock — a negative control.
+//!
+//! The tempting design: let local processes take the lock word with fast
+//! CPU `CAS` while remote processes use `rCAS`. On hardware with global
+//! atomicity this would be fine; on commodity RNICs it is **broken**,
+//! because remote RMWs are serialized inside the NIC and are not atomic
+//! with CPU RMWs (paper Table 1: the Local-RMW × Remote-RMW cell is
+//! "No"). Both a local and a remote process can see the word free and
+//! both "win".
+//!
+//! This lock exists so experiments can *measure* the failure: E1 runs it
+//! under `AtomicityMode::NicSerialized` (violations appear) and
+//! `AtomicityMode::Global` (violations vanish), and the model checker
+//! finds the interleaving mechanically (E8).
+
+use std::sync::Arc;
+
+use crate::locks::{Class, LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+/// Shared state: one word on the home node.
+pub struct NaiveMixedLock {
+    word: Addr,
+    home: NodeId,
+}
+
+impl NaiveMixedLock {
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId) -> Arc<NaiveMixedLock> {
+        Arc::new(NaiveMixedLock {
+            word: domain.node(home).mem.alloc(1),
+            home,
+        })
+    }
+}
+
+impl SharedLock for NaiveMixedLock {
+    fn handle(&self, ep: Endpoint, pid: u32) -> Box<dyn LockHandle> {
+        let class = Class::of(&ep, self.home);
+        Box::new(NaiveMixedHandle {
+            word: self.word,
+            ep,
+            class,
+            tag: pid as u64 + 1,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-mixed"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Per-process handle: locals use CPU atomics, remotes use verbs — the
+/// exact mix Table 1 forbids.
+pub struct NaiveMixedHandle {
+    word: Addr,
+    ep: Endpoint,
+    class: Class,
+    tag: u64,
+}
+
+impl LockHandle for NaiveMixedHandle {
+    fn lock(&mut self) {
+        let mut bo = Backoff::default();
+        loop {
+            let won = match self.class {
+                Class::Local => {
+                    self.ep.read(self.word) == 0 && self.ep.cas(self.word, 0, self.tag) == 0
+                }
+                Class::Remote => {
+                    self.ep.r_read(self.word) == 0
+                        && self.ep.r_cas(self.word, 0, self.tag) == 0
+                }
+            };
+            if won {
+                return;
+            }
+            bo.snooze();
+        }
+    }
+
+    fn unlock(&mut self) {
+        match self.class {
+            Class::Local => self.ep.write(self.word, 0),
+            Class::Remote => self.ep.r_write(self.word, 0),
+        }
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "naive-mixed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::{AtomicityMode, DomainConfig};
+
+    #[test]
+    fn violates_mutual_exclusion_under_commodity_atomicity() {
+        // Widened NIC RMW window (test hook) makes the Table-1 race land
+        // reliably even on a single-core host. The local process loops
+        // *until the remote finishes* (rather than a fixed count), so the
+        // two are guaranteed to overlap in time.
+        use std::sync::atomic::AtomicBool;
+        let d = RdmaDomain::new(
+            2,
+            1024,
+            DomainConfig::counted()
+                .with_atomicity(AtomicityMode::NicSerialized)
+                .with_hazard_ns(1_000_000), // 1 ms NIC RMW window
+        );
+        let l = NaiveMixedLock::create(&d, 0);
+        let check = CsChecker::new();
+        let done = Arc::new(AtomicBool::new(false));
+
+        let mut remote = l.handle(d.endpoint(1), 2);
+        let c2 = Arc::clone(&check);
+        let done2 = Arc::clone(&done);
+        let rt = std::thread::spawn(move || {
+            for _ in 0..60 {
+                remote.lock();
+                c2.enter(2);
+                c2.exit(2);
+                remote.unlock();
+            }
+            done2.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+
+        let mut local = l.handle(d.endpoint(0), 1);
+        while !done.load(std::sync::atomic::Ordering::SeqCst) {
+            local.lock();
+            check.enter(1);
+            for _ in 0..2_000 {
+                std::hint::spin_loop();
+            }
+            check.exit(1);
+            local.unlock();
+        }
+        rt.join().unwrap();
+        assert!(
+            check.violations() > 0,
+            "expected mutual-exclusion violations, saw none in {} entries",
+            check.entries()
+        );
+    }
+
+    #[test]
+    fn correct_under_global_atomicity() {
+        let d = RdmaDomain::new(
+            2,
+            1024,
+            DomainConfig::counted().with_atomicity(AtomicityMode::Global),
+        );
+        let l = NaiveMixedLock::create(&d, 0);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for (node, pid) in [(0u16, 1u32), (1, 2)] {
+            let mut h = l.handle(d.endpoint(node), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..2_000 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+    }
+}

@@ -1,0 +1,256 @@
+//! RPC lock **server**: synchronization handled entirely by a local
+//! process, clients reach it by message passing.
+//!
+//! The design the paper's §1 attributes to FaSST/HERD-style systems:
+//! because mixing local and remote synchronization is hard, many RDMA
+//! systems route *all* synchronization through RPCs to a process on the
+//! data's home node. Correct and simple — the server uses only local
+//! accesses — but every lock and unlock costs a network round trip and
+//! server CPU, nullifying one-sided RDMA's benefit.
+//!
+//! Message passing is simulated with the same register fabric:
+//!
+//! * each client owns a request register on the home node (written with
+//!   `rWrite` — a one-sided "send"), and
+//! * a response register on its *own* node (the server's `rWrite` is the
+//!   "reply"; the client spins locally).
+//!
+//! The server thread scans request registers with local reads, grants
+//! the lock FIFO, and acks unlocks. It parks with `yield_now` when idle
+//! so it coexists with simulated processes on small hosts.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::SeqCst};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::locks::{LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+/// Shared state + the server thread.
+pub struct RpcLock {
+    req: Addr, // max_procs consecutive words on the home node
+    /// Response register of each registered client (packed `Addr` bits;
+    /// 0 = not yet registered). Written at `handle()` time, read by the
+    /// server.
+    resp_addrs: Arc<Vec<AtomicU64>>,
+    home: NodeId,
+    n: u32,
+    stop: Arc<AtomicBool>,
+    server: Mutex<Option<JoinHandle<()>>>,
+    /// Ops issued by the server thread (reported as "server CPU cost").
+    pub server_metrics: Arc<crate::rdma::ProcMetrics>,
+}
+
+impl RpcLock {
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId, max_procs: u32) -> Arc<RpcLock> {
+        assert!(max_procs >= 1);
+        let req = domain.node(home).mem.alloc(max_procs);
+        let resp_addrs: Arc<Vec<AtomicU64>> =
+            Arc::new((0..max_procs).map(|_| AtomicU64::new(0)).collect());
+        let stop = Arc::new(AtomicBool::new(false));
+        let server_metrics = Arc::new(crate::rdma::ProcMetrics::default());
+        let server_ep = domain.endpoint_with_metrics(home, Arc::clone(&server_metrics));
+        let handle = std::thread::spawn({
+            let resp_addrs = Arc::clone(&resp_addrs);
+            let stop = Arc::clone(&stop);
+            move || server_loop(server_ep, req, resp_addrs, max_procs, stop)
+        });
+        Arc::new(RpcLock {
+            req,
+            resp_addrs,
+            home,
+            n: max_procs,
+            stop,
+            server: Mutex::new(Some(handle)),
+            server_metrics,
+        })
+    }
+}
+
+impl Drop for RpcLock {
+    fn drop(&mut self) {
+        self.stop.store(true, SeqCst);
+        if let Some(h) = self.server.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The server: single-threaded FIFO lock service using local reads on
+/// request registers and (mostly remote) writes for replies.
+fn server_loop(
+    ep: Endpoint,
+    req: Addr,
+    resp_addrs: Arc<Vec<AtomicU64>>,
+    n: u32,
+    stop: Arc<AtomicBool>,
+) {
+    let mut last_seen = vec![0u64; n as usize];
+    let mut holder: Option<u32> = None;
+    let mut queue: VecDeque<(u32, u64)> = VecDeque::new();
+    while !stop.load(SeqCst) {
+        let mut progressed = false;
+        for i in 0..n as usize {
+            let v = ep.read(req.offset(i as u32));
+            if v == last_seen[i] {
+                continue;
+            }
+            last_seen[i] = v;
+            progressed = true;
+            if holder == Some(i as u32) {
+                // Unlock request: release, ack, grant next.
+                holder = None;
+                reply(&ep, &resp_addrs, i, v);
+            } else {
+                queue.push_back((i as u32, v));
+            }
+        }
+        if holder.is_none() {
+            if let Some((j, seq)) = queue.pop_front() {
+                holder = Some(j);
+                reply(&ep, &resp_addrs, j as usize, seq);
+                progressed = true;
+            }
+        }
+        if !progressed {
+            std::thread::yield_now();
+        }
+    }
+}
+
+fn reply(ep: &Endpoint, resp_addrs: &[AtomicU64], client: usize, seq: u64) {
+    let bits = resp_addrs[client].load(SeqCst);
+    debug_assert!(bits != 0, "client {client} has no response register");
+    let addr = Addr::from_bits(bits);
+    // Server is local to the home node: co-located clients get a plain
+    // store, remote clients an RDMA write (the "reply message").
+    ep.write_best(addr, seq);
+}
+
+impl SharedLock for RpcLock {
+    fn handle(&self, ep: Endpoint, pid: u32) -> Box<dyn LockHandle> {
+        assert!(pid < self.n, "pid {pid} out of range (max_procs {})", self.n);
+        let resp = ep.alloc(1);
+        let prev = self.resp_addrs[pid as usize].swap(resp.to_bits(), SeqCst);
+        assert_eq!(prev, 0, "pid {pid} registered twice");
+        Box::new(RpcHandle {
+            req: self.req.offset(pid),
+            resp,
+            ep,
+            seq: 0,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "rpc-server"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Client handle: one request round trip per lock, one per unlock.
+pub struct RpcHandle {
+    req: Addr,
+    resp: Addr,
+    ep: Endpoint,
+    seq: u64,
+}
+
+impl RpcHandle {
+    fn round_trip(&mut self) {
+        self.seq += 1;
+        // Send: one-sided write into our request register (co-located
+        // clients use shared memory, as a real RPC system would).
+        self.ep.write_best(self.req, self.seq);
+        // Await the reply in our own node's memory.
+        let mut bo = Backoff::default();
+        while self.ep.read(self.resp) != self.seq {
+            bo.snooze();
+        }
+    }
+}
+
+impl LockHandle for RpcHandle {
+    fn lock(&mut self) {
+        self.round_trip();
+    }
+
+    fn unlock(&mut self) {
+        self.round_trip();
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "rpc-server"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::DomainConfig;
+
+    #[test]
+    fn mutual_exclusion_stress() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = RpcLock::create(&d, 0, 4);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for pid in 0..4u32 {
+            let mut h = l.handle(d.endpoint((pid % 2) as u16), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    h.lock();
+                    c.enter(pid + 1);
+                    c.exit(pid + 1);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        assert_eq!(check.entries(), 2_000);
+    }
+
+    #[test]
+    fn remote_client_pays_one_rwrite_per_call() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = RpcLock::create(&d, 0, 2);
+        let ep = d.endpoint(1);
+        let m = Arc::clone(&ep.metrics);
+        let mut h = l.handle(ep, 0);
+        h.lock();
+        h.unlock();
+        let s = m.snapshot();
+        assert_eq!(s.remote_write, 2); // one send per call
+        assert_eq!(s.remote_cas, 0);
+        assert_eq!(s.remote_read, 0); // replies arrive in local memory
+    }
+
+    #[test]
+    fn server_shutdown_is_clean() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let l = RpcLock::create(&d, 0, 1);
+        let mut h = l.handle(d.endpoint(0), 0);
+        h.lock();
+        h.unlock();
+        drop(h);
+        drop(l); // Drop joins the server thread; must not hang.
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn double_registration_rejected() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let l = RpcLock::create(&d, 0, 2);
+        let _a = l.handle(d.endpoint(0), 0);
+        let _b = l.handle(d.endpoint(0), 0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Test-and-test-and-set spinlock where **everyone** uses RDMA verbs.
+//!
+//! This is the paper's "naive solution to mutual exclusion ... enforcing
+//! that all processes, including the local ones, utilize rCAS to
+//! guarantee atomicity" (§3). It is correct under commodity atomicity —
+//! all RMWs are NIC-serialized — but local processes pay loopback
+//! latency and add NIC congestion on every attempt, and contended
+//! waiters spin on *remote* memory, flooding the fabric.
+
+use std::sync::Arc;
+
+use crate::locks::{LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+/// Shared state: a single word on the home node (0 = free, else holder).
+pub struct SpinRcasLock {
+    word: Addr,
+    home: NodeId,
+}
+
+impl SpinRcasLock {
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId) -> Arc<SpinRcasLock> {
+        Arc::new(SpinRcasLock {
+            word: domain.node(home).mem.alloc(1),
+            home,
+        })
+    }
+}
+
+impl SharedLock for SpinRcasLock {
+    fn handle(&self, ep: Endpoint, pid: u32) -> Box<dyn LockHandle> {
+        Box::new(SpinRcasHandle {
+            word: self.word,
+            ep,
+            tag: pid as u64 + 1,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "spin-rcas"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Per-process handle. Class-blind: local processes loopback.
+pub struct SpinRcasHandle {
+    word: Addr,
+    ep: Endpoint,
+    tag: u64,
+}
+
+impl LockHandle for SpinRcasHandle {
+    fn lock(&mut self) {
+        let mut bo = Backoff::default();
+        loop {
+            // Test (remote read) then test-and-set (remote CAS): the
+            // standard TTAS shape, every step through the NIC.
+            if self.ep.r_read(self.word) == 0
+                && self.ep.r_cas(self.word, 0, self.tag) == 0
+            {
+                return;
+            }
+            bo.snooze();
+        }
+    }
+
+    fn unlock(&mut self) {
+        self.ep.r_write(self.word, 0);
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "spin-rcas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::DomainConfig;
+
+    #[test]
+    fn mutual_exclusion_mixed_classes() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = SpinRcasLock::create(&d, 0);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for pid in 1..=4u32 {
+            let node = (pid % 2) as u16;
+            let mut h = l.handle(d.endpoint(node), pid);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..1_000 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        assert_eq!(check.entries(), 4_000);
+    }
+
+    #[test]
+    fn local_processes_are_forced_through_loopback() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = SpinRcasLock::create(&d, 0);
+        let ep = d.endpoint(0); // local to the lock
+        let m = Arc::clone(&ep.metrics);
+        let mut h = l.handle(ep, 1);
+        h.lock();
+        h.unlock();
+        let s = m.snapshot();
+        assert!(s.loopback >= 3, "read + cas + write all loopback: {s:?}");
+        assert_eq!(s.local_total(), 0);
+    }
+}

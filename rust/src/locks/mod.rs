@@ -1,0 +1,209 @@
+//! Distributed mutual-exclusion primitives (systems S2–S5 in DESIGN.md).
+//!
+//! The paper's contribution, [`qplock::QpLock`], plus every baseline it is
+//! compared against. All locks share the [`SharedLock`]/[`LockHandle`]
+//! interface: a shared object owns the lock's registers (allocated on its
+//! *home node*), and each participating process obtains a handle bound to
+//! its [`Endpoint`] — the handle is where per-process state (MCS
+//! descriptors, bakery slots) lives and where the locality class is
+//! decided.
+//!
+//! Locality classes follow the paper's model: a process is **local** to a
+//! lock iff it resides on the lock's home node (class 0), otherwise it is
+//! **remote** (class 1).
+
+pub mod baselines;
+pub mod peterson;
+pub mod qplock;
+
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Arc;
+
+use crate::rdma::{Endpoint, NodeId};
+
+/// Locality class of a process w.r.t. a lock's home node (paper §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Co-located with the lock's registers; local ops enabled.
+    Local,
+    /// On another node; only remote verbs are enabled on lock registers.
+    Remote,
+}
+
+impl Class {
+    pub fn of(ep: &Endpoint, home: NodeId) -> Class {
+        if ep.node() == home {
+            Class::Local
+        } else {
+            Class::Remote
+        }
+    }
+
+    /// Index into two-element per-class arrays (paper's `getCid()`).
+    pub fn idx(self) -> usize {
+        match self {
+            Class::Local => 0,
+            Class::Remote => 1,
+        }
+    }
+}
+
+/// A process's handle on a shared lock. Handles are not `Sync`: one
+/// handle per process, used from that process's thread only.
+pub trait LockHandle: Send {
+    /// Acquire the lock (blocks).
+    fn lock(&mut self);
+    /// Release the lock.
+    fn unlock(&mut self);
+    /// Algorithm name (for reports).
+    fn algorithm(&self) -> &'static str;
+}
+
+/// The shared side of a lock: knows how to mint per-process handles.
+pub trait SharedLock: Send + Sync {
+    /// Create a handle for a process. `pid` must be unique per process
+    /// and `< max_procs` given at construction (slot-indexed algorithms
+    /// — filter, bakery — depend on it).
+    fn handle(&self, ep: Endpoint, pid: u32) -> Box<dyn LockHandle>;
+    /// Algorithm name (for reports and the CLI registry).
+    fn name(&self) -> &'static str;
+    /// The node hosting the lock's registers.
+    fn home(&self) -> NodeId;
+}
+
+/// RAII guard over any handle.
+pub struct Guard<'a> {
+    handle: &'a mut dyn LockHandle,
+}
+
+impl<'a> Guard<'a> {
+    pub fn acquire(handle: &'a mut dyn LockHandle) -> Guard<'a> {
+        handle.lock();
+        Guard { handle }
+    }
+}
+
+impl Drop for Guard<'_> {
+    fn drop(&mut self) {
+        self.handle.unlock();
+    }
+}
+
+/// Mutual-exclusion oracle used by stress tests and experiments: every
+/// critical section brackets itself with `enter`/`exit`; overlapping
+/// sections are detected and counted rather than panicking, so broken
+/// baselines (the naive mixed-atomics lock) can be *measured*.
+#[derive(Default)]
+pub struct CsChecker {
+    owner: AtomicU64,
+    violations: AtomicU64,
+    entries: AtomicU64,
+}
+
+impl CsChecker {
+    pub fn new() -> Arc<CsChecker> {
+        Arc::new(CsChecker::default())
+    }
+
+    /// Mark critical-section entry by process `pid` (pid 0 is reserved).
+    pub fn enter(&self, pid: u32) {
+        debug_assert!(pid != 0, "pid 0 is the 'vacant' sentinel");
+        self.entries.fetch_add(1, SeqCst);
+        let prev = self.owner.swap(pid as u64, SeqCst);
+        if prev != 0 {
+            self.violations.fetch_add(1, SeqCst);
+        }
+    }
+
+    /// Mark critical-section exit.
+    pub fn exit(&self, pid: u32) {
+        // Only clear if we still appear to own it; a violation may have
+        // overwritten the owner word.
+        let _ = self
+            .owner
+            .compare_exchange(pid as u64, 0, SeqCst, SeqCst);
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations.load(SeqCst)
+    }
+
+    pub fn entries(&self) -> u64 {
+        self.entries.load(SeqCst)
+    }
+}
+
+/// Which algorithms the registry can instantiate (CLI / bench sweeps).
+pub const ALGORITHMS: &[&str] = &[
+    "qplock",
+    "spin-rcas",
+    "rdma-mcs",
+    "filter",
+    "bakery",
+    "cohort-tas",
+    "naive-mixed",
+    "rpc-server",
+];
+
+/// Instantiate a lock by name on `home`, for at most `max_procs`
+/// participating processes. `budget` parameterizes qplock's fairness
+/// budget (ignored by algorithms without one).
+pub fn make_lock(
+    name: &str,
+    domain: &Arc<crate::rdma::RdmaDomain>,
+    home: NodeId,
+    max_procs: u32,
+    budget: u64,
+) -> Arc<dyn SharedLock> {
+    match name {
+        "qplock" => qplock::QpLock::create(domain, home, budget),
+        "spin-rcas" => baselines::spin::SpinRcasLock::create(domain, home),
+        "rdma-mcs" => baselines::mcs_rdma::RdmaMcsLock::create(domain, home),
+        "filter" => baselines::filter::FilterLock::create(domain, home, max_procs),
+        "bakery" => baselines::bakery::BakeryLock::create(domain, home, max_procs),
+        "cohort-tas" => baselines::cohort_tas::CohortTasLock::create(domain, home, budget),
+        "naive-mixed" => baselines::naive_mixed::NaiveMixedLock::create(domain, home),
+        "rpc-server" => baselines::rpc::RpcLock::create(domain, home, max_procs),
+        other => panic!("unknown lock algorithm '{other}' (known: {ALGORITHMS:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::{DomainConfig, RdmaDomain};
+
+    #[test]
+    fn class_of_follows_home_node() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let e0 = d.endpoint(0);
+        let e1 = d.endpoint(1);
+        assert_eq!(Class::of(&e0, 0), Class::Local);
+        assert_eq!(Class::of(&e1, 0), Class::Remote);
+        assert_eq!(Class::of(&e1, 1), Class::Local);
+        assert_eq!(Class::Local.idx(), 0);
+        assert_eq!(Class::Remote.idx(), 1);
+    }
+
+    #[test]
+    fn cs_checker_counts_overlap() {
+        let c = CsChecker::new();
+        c.enter(1);
+        c.enter(2); // overlap
+        assert_eq!(c.violations(), 1);
+        c.exit(2);
+        c.exit(1);
+        assert_eq!(c.entries(), 2);
+    }
+
+    #[test]
+    fn cs_checker_clean_run_has_no_violations() {
+        let c = CsChecker::new();
+        for pid in 1..100 {
+            c.enter(pid);
+            c.exit(pid);
+        }
+        assert_eq!(c.violations(), 0);
+        assert_eq!(c.entries(), 99);
+    }
+}

@@ -1,0 +1,169 @@
+//! Standalone two-party Peterson lock over RDMA registers.
+//!
+//! This is the *global* layer of the paper's construction in isolation:
+//! Peterson's algorithm (Peterson, IPL 1981) works over plain read-write
+//! registers, which — unlike RMW operations — **are** atomic between
+//! local and remote accesses at 8-byte granularity (paper Table 1). That
+//! is precisely why the paper reaches for Peterson: it is the classic
+//! starvation-free two-process lock built from the "greatest common
+//! denominator" of the asymmetric operation sets.
+//!
+//! One party is the lock's local side (class 0, local ops only), the
+//! other its remote side (class 1, remote verbs only). The embedded
+//! version inside [`super::qplock`] replaces the boolean `flag` registers
+//! with "cohort tail ≠ null" (see paper Algorithm 1); this standalone
+//! variant keeps explicit flags and exists for unit testing the global
+//! protocol and for pedagogy (`examples/quickstart.rs` uses it too).
+
+use std::sync::Arc;
+
+use super::{Class, LockHandle};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+/// Shared registers of a two-party Peterson lock (all on the home node).
+pub struct PetersonPair {
+    flag: [Addr; 2],
+    victim: Addr,
+    home: NodeId,
+}
+
+impl PetersonPair {
+    /// Allocate the three registers on `home`.
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId) -> Arc<PetersonPair> {
+        let mem = &domain.node(home).mem;
+        Arc::new(PetersonPair {
+            flag: [mem.alloc(1), mem.alloc(1)],
+            victim: mem.alloc(1),
+            home,
+        })
+    }
+
+    pub fn home(&self) -> NodeId {
+        self.home
+    }
+
+    /// Handle for one party. Exactly one process per class may use the
+    /// pair at a time (it is a two-process lock; qplock's cohort layer is
+    /// what generalizes it).
+    pub fn handle(self: &Arc<Self>, ep: Endpoint) -> PetersonHandle {
+        let class = Class::of(&ep, self.home);
+        PetersonHandle {
+            shared: Arc::clone(self),
+            ep,
+            class,
+        }
+    }
+}
+
+/// One party's handle. Class decides local vs remote verbs for every
+/// access — a local party never touches the NIC.
+pub struct PetersonHandle {
+    shared: Arc<PetersonPair>,
+    ep: Endpoint,
+    class: Class,
+}
+
+impl PetersonHandle {
+    #[inline]
+    fn rd(&self, a: Addr) -> u64 {
+        match self.class {
+            Class::Local => self.ep.read(a),
+            Class::Remote => self.ep.r_read(a),
+        }
+    }
+
+    #[inline]
+    fn wr(&self, a: Addr, v: u64) {
+        match self.class {
+            Class::Local => self.ep.write(a, v),
+            Class::Remote => self.ep.r_write(a, v),
+        }
+    }
+
+    pub fn class(&self) -> Class {
+        self.class
+    }
+}
+
+impl LockHandle for PetersonHandle {
+    fn lock(&mut self) {
+        let me = self.class.idx();
+        let other = 1 - me;
+        self.wr(self.shared.flag[me], 1);
+        self.wr(self.shared.victim, me as u64);
+        let mut bo = Backoff::default();
+        while self.rd(self.shared.flag[other]) == 1
+            && self.rd(self.shared.victim) == me as u64
+        {
+            bo.snooze();
+        }
+    }
+
+    fn unlock(&mut self) {
+        let me = self.class.idx();
+        self.wr(self.shared.flag[me], 0);
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "peterson-2p"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::{DomainConfig, RdmaDomain};
+
+    #[test]
+    fn uncontended_local_party_uses_no_rdma() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let p = PetersonPair::create(&d, 0);
+        let mut h = p.handle(d.endpoint(0));
+        for _ in 0..10 {
+            h.lock();
+            h.unlock();
+        }
+        assert_eq!(h.ep.metrics.snapshot().remote_total(), 0);
+    }
+
+    #[test]
+    fn uncontended_remote_party_uses_only_rdma() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let p = PetersonPair::create(&d, 0);
+        let mut h = p.handle(d.endpoint(1));
+        h.lock();
+        h.unlock();
+        let s = h.ep.metrics.snapshot();
+        assert_eq!(s.local_total(), 0);
+        // flag=1, victim, read other flag (exit), flag=0.
+        assert_eq!(s.remote_write, 3);
+        assert!(s.remote_read >= 1);
+    }
+
+    #[test]
+    fn two_parties_mutual_exclusion_stress() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let p = PetersonPair::create(&d, 0);
+        let check = CsChecker::new();
+        let mut threads = vec![];
+        for (node, pid) in [(0u16, 1u32), (1, 2)] {
+            let mut h = p.handle(d.endpoint(node));
+            let c = Arc::clone(&check);
+            threads.push(std::thread::spawn(move || {
+                for _ in 0..2_000 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        assert_eq!(check.entries(), 4_000);
+    }
+}

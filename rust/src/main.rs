@@ -1,0 +1,166 @@
+//! `qplock` CLI — launcher for workload runs, experiments, the model
+//! checker, and the lock-service demo. See `qplock help`.
+
+use std::time::Duration;
+
+use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
+use qplock::cli::{Args, HELP};
+use qplock::coordinator::{run_workload, Cluster, CsWork, LockService, Workload};
+use qplock::locks::{make_lock, Class, ALGORITHMS};
+use qplock::mc::{self, models};
+use qplock::rdma::DomainConfig;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("mc") => cmd_mc(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("list") => cmd_list(),
+        Some("help") | None => print!("{HELP}"),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let algo = args.get_or("algo", "qplock");
+    let procs: u32 = args.get_num("procs", 8);
+    let local: u32 = args.get_num("local", procs / 2);
+    let iters: u64 = args.get_num("iters", 1000);
+    let budget: u64 = args.get_num("budget", 8);
+    let cs_ns: u64 = args.get_num("cs-ns", 0);
+    let cfg = if args.flag("counted") {
+        DomainConfig::counted()
+    } else {
+        DomainConfig::timed()
+    };
+
+    let cluster = Cluster::new(2, 1 << 20, cfg);
+    let lock = make_lock(algo, &cluster.domain, 0, procs, budget);
+    let specs = cluster.spread_procs(procs, local, 0);
+    let mut wl = match args.get("millis") {
+        Some(ms) => Workload::timed(
+            Duration::from_millis(ms.parse().expect("--millis")),
+            CsWork::None,
+        ),
+        None => Workload::cycles(iters),
+    };
+    if cs_ns > 0 {
+        wl.cs = CsWork::SpinNs(cs_ns);
+    }
+
+    println!("algo={algo} procs={procs} local={local} budget={budget}");
+    let r = run_workload(&cluster.domain, &lock, &specs, &wl);
+    println!(
+        "throughput {:.0} acq/s | total {} | jain {:.3} | violations {}",
+        r.throughput(),
+        r.total_acquisitions(),
+        r.jain(),
+        r.violations
+    );
+    let (l, rm) = r.class_split();
+    println!("class split: local {l} remote {rm}");
+    for class in [Class::Local, Class::Remote] {
+        let h = r.acquire_hist(Some(class));
+        if h.count() > 0 {
+            println!(
+                "{class:?} acquire ns: p50 {} p95 {} p99 {} max {}",
+                h.p50(),
+                h.p95(),
+                h.p99(),
+                h.max()
+            );
+        }
+    }
+    println!("remote verbs/acq {:.2}", r.remote_ops_per_acq());
+}
+
+fn cmd_bench(args: &Args) {
+    let scale = if args.flag("full") {
+        Scale::Full
+    } else {
+        Scale::Quick
+    };
+    let which = args.get_or("exp", "all");
+    let ids: Vec<&str> = if which == "all" {
+        EXPERIMENTS.iter().map(|(id, _)| *id).collect()
+    } else {
+        vec![which]
+    };
+    for id in ids {
+        let out = run_experiment(id, scale);
+        println!("{out}");
+        if args.flag("csv") {
+            for t in &out.tables {
+                println!("--- csv: {} ---\n{}", t.title, t.to_csv());
+            }
+        }
+    }
+}
+
+fn cmd_mc(args: &Args) {
+    let model = args.get_or("model", "qplock");
+    let n: usize = args.get_num("procs", 3);
+    let budget: u8 = args.get_num("budget", 1);
+    let max_states: usize = args.get_num("max-states", 1 << 23);
+    let report = match model {
+        "qplock" => mc::check_all(&models::qplock_spec::QpSpec::new(n, budget), max_states),
+        "peterson" => mc::check_all(&models::peterson_spec::PetersonSpec, max_states),
+        "naive" => mc::check_all(&models::naive_spec::NaiveSpec, max_states),
+        "spin" => mc::check_all(&models::spin_spec::SpinSpec::new(n.min(6)), max_states),
+        other => {
+            eprintln!("unknown model '{other}' (qplock|peterson|naive|spin)");
+            std::process::exit(2);
+        }
+    };
+    println!("{report}");
+    // Print counterexample details for failures.
+    for (name, v) in [
+        ("MutualExclusion", &report.mutual_exclusion),
+        ("DeadlockFree", &report.deadlock_free),
+        ("StarvationFree", &report.starvation_free),
+        ("DeadAndLivelockFree", &report.dead_and_livelock_free),
+    ] {
+        if !v.holds() {
+            println!("--- {name} ---\n{v}");
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let nlocks: u32 = args.get_num("locks", 4);
+    let cluster = Cluster::new(3, 1 << 20, DomainConfig::counted());
+    let svc = LockService::new(&cluster.domain, "qplock", 8);
+    println!("lock service over 3 nodes; creating {nlocks} hash-routed locks");
+    let mut handles = vec![];
+    for i in 0..nlocks {
+        let name = format!("shard-{i}");
+        svc.ensure_lock(&name);
+        handles.push((name.clone(), svc.client(&name, (i % 3) as u16)));
+    }
+    for (name, h) in &mut handles {
+        h.lock();
+        h.unlock();
+        println!("  {name}: acquired + released via {}", h.algorithm());
+    }
+    println!("registry:");
+    for (name, home, algo) in svc.registry() {
+        println!("  {name} -> node {home} ({algo})");
+    }
+}
+
+fn cmd_list() {
+    println!("lock algorithms:");
+    for a in ALGORITHMS {
+        println!("  {a}");
+    }
+    println!("\nexperiments:");
+    for (id, desc) in EXPERIMENTS {
+        println!("  {id}: {desc}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Explicit-state model checker (systems S6/S7 in DESIGN.md).
+//!
+//! The paper validates its design by model-checking a TLA+ specification
+//! translated from the PlusCal algorithm in its Appendix A. This module
+//! is the in-repo equivalent: [`models::qplock_spec`] transcribes that
+//! PlusCal text label-for-label into a finite transition system, and the
+//! checker verifies the same properties the paper states:
+//!
+//! * `MutualExclusion` — invariant over all reachable states;
+//! * deadlock freedom — every reachable state has a successor;
+//! * `StarvationFree` (`enter ~> cs` per process) and
+//!   `DeadAndLivelockFree` — via strongly-connected-component analysis
+//!   of the reachable graph under **weak fairness** (see [`scc`]);
+//! * `MutualExclusion` *failure* for the naive mixed-atomics lock
+//!   ([`models::naive_spec`]) whose remote CAS is split into its
+//!   NIC-executed read and write halves — the checker finds the Table-1
+//!   interleaving mechanically and reports the trace.
+//!
+//! The liveness analysis is SCC-granular: a violation is reported when a
+//! reachable SCC admits a weakly-fair infinite run in which some process
+//! is forever past its `enter` label but never at `cs`. This is sound
+//! (reported violations are real); for cycles that weave *around* `cs`
+//! states inside an SCC that also contains them it is conservative in
+//! the passing direction — the configurations checked here match the
+//! verdicts of TLC on the paper's spec.
+
+pub mod graph;
+pub mod models;
+pub mod props;
+pub mod scc;
+
+pub use graph::{ExploreResult, StateGraph};
+pub use props::{CheckReport, PropertyVerdict};
+
+/// A finite-state transition system: `P` processes, each taking atomic
+/// steps (one PlusCal label = one step).
+pub trait Model {
+    /// Packed state representation. Must be small: the checker stores
+    /// millions of them.
+    type State: Clone + Eq + std::hash::Hash;
+
+    /// All initial states (TLA+ specs often have several, e.g. the
+    /// paper's `victim ∈ {1, 2}`).
+    fn initials(&self) -> Vec<Self::State>;
+
+    /// Number of processes.
+    fn procs(&self) -> usize;
+
+    /// Execute one atomic step of `pid` in `s`. `None` when `pid` is
+    /// blocked (an `await` whose condition is false, or a busy-wait loop
+    /// whose exit condition is false *and* whose body would not change
+    /// the state — spinning in place is modeled as disabled, which is
+    /// exactly TLA+ stuttering).
+    fn step(&self, s: &Self::State, pid: usize) -> Option<Self::State>;
+
+    /// Is `pid` inside its critical section in `s`?
+    fn in_cs(&self, s: &Self::State, pid: usize) -> bool;
+
+    /// Is `pid` past its `enter` label but not yet in the critical
+    /// section (i.e. "wanting")? Drives the starvation-freedom check.
+    fn wants_cs(&self, s: &Self::State, pid: usize) -> bool;
+
+    /// Human-readable program counter of `pid` (trace printing).
+    fn pc_name(&self, s: &Self::State, pid: usize) -> String;
+
+    /// Model name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Convenience: run the full battery (safety + deadlock + liveness) on a
+/// model and produce a [`CheckReport`].
+pub fn check_all<M: Model>(model: &M, max_states: usize) -> CheckReport {
+    let explored = graph::explore(model, max_states);
+    props::evaluate(model, &explored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mc::models::peterson_spec::PetersonSpec;
+
+    #[test]
+    fn check_all_smoke() {
+        let m = PetersonSpec;
+        let report = check_all(&m, 1 << 20);
+        assert!(report.mutual_exclusion.holds());
+        assert!(report.deadlock_free.holds());
+    }
+}

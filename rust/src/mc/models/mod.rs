@@ -1,0 +1,18 @@
+//! Transition-system models checked by the `mc` engine (system S7).
+//!
+//! * [`qplock_spec`] — label-for-label transcription of the paper's
+//!   Appendix A PlusCal algorithm (the artifact the authors model
+//!   checked with TLC).
+//! * [`peterson_spec`] — classic two-process Peterson; sanity baseline
+//!   for the checker itself.
+//! * [`naive_spec`] — the mixed-atomicity TAS lock with the remote CAS
+//!   split into its NIC-read and NIC-write halves; exhibits the Table-1
+//!   mutual-exclusion violation.
+//! * [`spin_spec`] — everyone-through-the-NIC TAS lock (remote CAS
+//!   atomic): safe but *not* starvation-free, which the fairness
+//!   analysis detects.
+
+pub mod naive_spec;
+pub mod peterson_spec;
+pub mod qplock_spec;
+pub mod spin_spec;

@@ -1,0 +1,132 @@
+//! The naive mixed-atomicity TAS lock, modeled at NIC granularity.
+//!
+//! One local process takes the lock word with CPU CAS (a single atomic
+//! step — that is what the silicon gives it). One remote process uses
+//! RDMA CAS, which commodity RNICs execute internally as a read followed
+//! by a write that is **not** atomic with CPU accesses (paper Table 1).
+//! We model that by splitting the remote CAS into two labels with the
+//! read's result latched in a register — precisely the abstraction-level
+//! consequence of `AtomicityMode::NicSerialized`.
+//!
+//! The checker finds the classic TOCTOU interleaving in a handful of
+//! states; `spin_spec` (same lock, atomic remote CAS) shows the split is
+//! the *only* difference.
+
+use crate::mc::Model;
+
+const NCS: u8 = 0;
+/// Local: atomic CAS attempt. Remote: issue the NIC's internal read.
+const TRY: u8 = 1;
+/// Remote only: the NIC's internal conditional write (uses the latched
+/// read).
+const COMMIT: u8 = 2;
+const CS: u8 = 3;
+const EXIT: u8 = 4;
+
+/// State: `[word, latched, pc_local, pc_remote]`; `word` holds 0 (free)
+/// or owner pid (1 = local, 2 = remote).
+pub struct NaiveSpec;
+
+impl Model for NaiveSpec {
+    type State = [u8; 4];
+
+    fn initials(&self) -> Vec<[u8; 4]> {
+        vec![[0, 0, NCS, NCS]]
+    }
+
+    fn procs(&self) -> usize {
+        2
+    }
+
+    fn step(&self, s: &[u8; 4], pid: usize) -> Option<[u8; 4]> {
+        let mut n = *s;
+        let pc = s[2 + pid];
+        match (pid, pc) {
+            (_, NCS) => n[2 + pid] = TRY,
+            // Local CPU CAS: one atomic step; blocked while held.
+            (0, TRY) => {
+                if s[0] == 0 {
+                    n[0] = 1;
+                    n[2] = CS;
+                } else {
+                    return None;
+                }
+            }
+            // Remote NIC CAS, read half: latch the current word.
+            (1, TRY) => {
+                n[1] = s[0];
+                n[3] = COMMIT;
+            }
+            // Remote NIC CAS, write half: commit based on the *latched*
+            // value — the Table-1 hazard.
+            (1, COMMIT) => {
+                if s[1] == 0 {
+                    n[0] = 2;
+                    n[3] = CS;
+                } else {
+                    n[3] = TRY; // failed CAS: retry
+                }
+            }
+            (_, CS) => n[2 + pid] = EXIT,
+            (_, EXIT) => {
+                n[0] = 0;
+                n[2 + pid] = NCS;
+            }
+            _ => unreachable!(),
+        }
+        Some(n)
+    }
+
+    fn in_cs(&self, s: &[u8; 4], pid: usize) -> bool {
+        s[2 + pid] == CS
+    }
+
+    fn wants_cs(&self, s: &[u8; 4], pid: usize) -> bool {
+        matches!(s[2 + pid], TRY | COMMIT)
+    }
+
+    fn pc_name(&self, s: &[u8; 4], pid: usize) -> String {
+        match s[2 + pid] {
+            NCS => "ncs",
+            TRY => "try",
+            COMMIT => "commit",
+            CS => "cs",
+            EXIT => "exit",
+            _ => "?",
+        }
+        .to_string()
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-mixed-spec"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mc::{check_all, graph::explore};
+
+    #[test]
+    fn checker_finds_the_table1_violation() {
+        let r = check_all(&NaiveSpec, 1 << 16);
+        assert!(
+            !r.mutual_exclusion.holds(),
+            "the mixed-atomicity lock must violate mutual exclusion"
+        );
+    }
+
+    #[test]
+    fn shortest_trace_is_the_toctou_interleaving() {
+        let r = explore(&NaiveSpec, 1 << 16);
+        let vid = r.me_violation.expect("violation");
+        // ncs,ncs → remote try (read 0) → local try (cas wins) → local
+        // cs… remote commit (stale 0) → both cs. Shortest trace ≤ 7
+        // states including init.
+        let trace = r.graph.trace_to(vid);
+        assert!(trace.len() <= 7, "trace length {}", trace.len());
+        let last = &r.graph.states[vid as usize];
+        assert_eq!(last[2], CS);
+        assert_eq!(last[3], CS);
+    }
+}

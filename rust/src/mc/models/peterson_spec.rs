@@ -1,0 +1,106 @@
+//! Classic two-process Peterson lock — checker sanity baseline.
+//!
+//! State: `[flag0, flag1, victim, pc0, pc1]`.
+
+use crate::mc::Model;
+
+const NCS: u8 = 0;
+const SET_FLAG: u8 = 1;
+const SET_VICTIM: u8 = 2;
+const WAIT: u8 = 3;
+const CS: u8 = 4;
+const EXIT: u8 = 5;
+
+/// Two-process Peterson over atomic read/write registers.
+pub struct PetersonSpec;
+
+impl Model for PetersonSpec {
+    type State = [u8; 5];
+
+    fn initials(&self) -> Vec<[u8; 5]> {
+        vec![[0, 0, 0, NCS, NCS]]
+    }
+
+    fn procs(&self) -> usize {
+        2
+    }
+
+    fn step(&self, s: &[u8; 5], pid: usize) -> Option<[u8; 5]> {
+        let me = pid;
+        let other = 1 - pid;
+        let mut n = *s;
+        let pc = s[3 + me];
+        match pc {
+            NCS => n[3 + me] = SET_FLAG,
+            SET_FLAG => {
+                n[me] = 1;
+                n[3 + me] = SET_VICTIM;
+            }
+            SET_VICTIM => {
+                n[2] = me as u8;
+                n[3 + me] = WAIT;
+            }
+            WAIT => {
+                // Busy-wait modeled as stuttering: enabled only when the
+                // exit condition holds.
+                if s[other] == 0 || s[2] != me as u8 {
+                    n[3 + me] = CS;
+                } else {
+                    return None;
+                }
+            }
+            CS => n[3 + me] = EXIT,
+            EXIT => {
+                n[me] = 0;
+                n[3 + me] = NCS;
+            }
+            _ => unreachable!(),
+        }
+        Some(n)
+    }
+
+    fn in_cs(&self, s: &[u8; 5], pid: usize) -> bool {
+        s[3 + pid] == CS
+    }
+
+    fn wants_cs(&self, s: &[u8; 5], pid: usize) -> bool {
+        matches!(s[3 + pid], SET_FLAG | SET_VICTIM | WAIT)
+    }
+
+    fn pc_name(&self, s: &[u8; 5], pid: usize) -> String {
+        match s[3 + pid] {
+            NCS => "ncs",
+            SET_FLAG => "set_flag",
+            SET_VICTIM => "set_victim",
+            WAIT => "wait",
+            CS => "cs",
+            EXIT => "exit",
+            _ => "?",
+        }
+        .to_string()
+    }
+
+    fn name(&self) -> &'static str {
+        "peterson-2p"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::mc::{check_all, models::peterson_spec::PetersonSpec};
+
+    #[test]
+    fn peterson_full_battery() {
+        let r = check_all(&PetersonSpec, 1 << 16);
+        assert!(r.mutual_exclusion.holds(), "{}", r.mutual_exclusion);
+        assert!(r.deadlock_free.holds(), "{}", r.deadlock_free);
+        assert!(r.starvation_free.holds(), "{}", r.starvation_free);
+        assert!(
+            r.dead_and_livelock_free.holds(),
+            "{}",
+            r.dead_and_livelock_free
+        );
+        assert!(!r.truncated);
+        assert!(r.states > 10 && r.states < 200);
+    }
+}

@@ -1,0 +1,357 @@
+//! Transcription of the paper's Appendix A PlusCal algorithm (`qplock`).
+//!
+//! Every PlusCal label is one atomic step, exactly as TLC would execute
+//! it. Process ids are 1-based (`self ∈ 1..NP`); the class of a process
+//! is its parity — `Us(pid) = (pid % 2) + 1` in the paper, index
+//! `pid % 2` here — so odd pids form one cohort and even pids the other
+//! (the PlusCal stand-in for local vs remote locality).
+//!
+//! Shared variables: `victim` (a pid), `cohort[2]` (pid or 0 — the
+//! PlusCal abstraction of the MCS tail word), `descriptor[pid] =
+//! {budget, next}`, `passed[pid]`. The procedure-call structure
+//! (`AcquireGlobal` invoked from both `c5` and `p2`) is compiled into
+//! distinct pc labels carrying the return site.
+//!
+//! One divergence from the appendix *text*: its `ReleaseCohort` prints
+//! `r1`/`r2` inside the `then` branch of the `cas` test. Taken
+//! literally, a process that successfully resets `cohort` would then
+//! await a successor that may never arrive — deadlocking even a lone
+//! process (TLC would reject it instantly). Algorithm 2's `qUnlock()`
+//! gives the evident intent: `r1`/`r2` are the *else* branch (pass the
+//! lock when the tail CAS fails). We transcribe that reading, and the
+//! E8 battery (every property PASS for every checked configuration)
+//! confirms it reproduces the paper's verification claims.
+
+use crate::mc::Model;
+
+/// Maximum processes supported by the packed state layout.
+pub const MAX_PROCS: usize = 6;
+
+// Program counter labels.
+const NCS: u8 = 0;
+const C1: u8 = 1;
+const SWAP: u8 = 2;
+const CWAIT: u8 = 3;
+const C2: u8 = 4;
+const C3: u8 = 5;
+const C4: u8 = 6;
+const C6: u8 = 7;
+const C7: u8 = 8;
+const C8: u8 = 9;
+const C9: u8 = 10;
+const P2: u8 = 11;
+const G1_C5: u8 = 12;
+const G2_C5: u8 = 13;
+const G3_C5: u8 = 14;
+const G1_P2: u8 = 15;
+const G2_P2: u8 = 16;
+const G3_P2: u8 = 17;
+const CS: u8 = 18;
+const CASR: u8 = 19;
+const R1: u8 = 20;
+const R2: u8 = 21;
+
+/// Budget field encoding: PlusCal value −1..B stored as `v + 1`.
+const B_WAITING: u8 = 0; // −1
+
+/// Packed state:
+/// `[victim, cohort0, cohort1, then per proc: pc, pred, budget, next, passed]`.
+pub type QpState = [u8; 3 + 5 * MAX_PROCS];
+
+/// Configuration: process count and `InitialBudget` (paper constants
+/// `NumProcesses`, `InitialBudget`).
+pub struct QpSpec {
+    pub n: usize,
+    pub budget: u8,
+}
+
+impl QpSpec {
+    pub fn new(n: usize, budget: u8) -> QpSpec {
+        assert!((2..=MAX_PROCS).contains(&n));
+        assert!(budget >= 1 && budget < 200);
+        QpSpec { n, budget }
+    }
+
+    // Field accessors over the packed layout.
+    #[inline]
+    fn pc(s: &QpState, p: usize) -> u8 {
+        s[3 + 5 * p]
+    }
+    #[inline]
+    fn set_pc(s: &mut QpState, p: usize, v: u8) {
+        s[3 + 5 * p] = v;
+    }
+    #[inline]
+    fn pred(s: &QpState, p: usize) -> u8 {
+        s[4 + 5 * p]
+    }
+    #[inline]
+    fn set_pred(s: &mut QpState, p: usize, v: u8) {
+        s[4 + 5 * p] = v;
+    }
+    /// Budget in PlusCal terms (−1 encoded as `B_WAITING`).
+    #[inline]
+    fn budget_raw(s: &QpState, p: usize) -> u8 {
+        s[5 + 5 * p]
+    }
+    #[inline]
+    fn set_budget_raw(s: &mut QpState, p: usize, v: u8) {
+        s[5 + 5 * p] = v;
+    }
+    #[inline]
+    fn next(s: &QpState, p: usize) -> u8 {
+        s[6 + 5 * p]
+    }
+    #[inline]
+    fn set_next(s: &mut QpState, p: usize, v: u8) {
+        s[6 + 5 * p] = v;
+    }
+    #[inline]
+    fn passed(s: &QpState, p: usize) -> bool {
+        s[7 + 5 * p] != 0
+    }
+    #[inline]
+    fn set_passed(s: &mut QpState, p: usize, v: bool) {
+        s[7 + 5 * p] = v as u8;
+    }
+
+    /// `Us(pid)` as a 0-based cohort index (paper: `(pid % 2) + 1`).
+    #[inline]
+    fn us(pid1: u8) -> usize {
+        (pid1 % 2) as usize
+    }
+    #[inline]
+    fn them(pid1: u8) -> usize {
+        1 - Self::us(pid1)
+    }
+}
+
+impl Model for QpSpec {
+    type State = QpState;
+
+    fn initials(&self) -> Vec<QpState> {
+        // victim ∈ {1, 2} (two initial states, as in the spec).
+        let mut out = vec![];
+        for v in [1u8, 2] {
+            let mut s: QpState = [0; 3 + 5 * MAX_PROCS];
+            s[0] = v;
+            for p in 0..self.n {
+                QpSpec::set_pc(&mut s, p, NCS);
+                QpSpec::set_budget_raw(&mut s, p, B_WAITING); // budget −1
+            }
+            out.push(s);
+        }
+        out
+    }
+
+    fn procs(&self) -> usize {
+        self.n
+    }
+
+    fn step(&self, s: &QpState, p: usize) -> Option<QpState> {
+        let pid1 = (p + 1) as u8; // PlusCal `self`
+        let us = QpSpec::us(pid1);
+        let them = QpSpec::them(pid1);
+        let mut n = *s;
+        match QpSpec::pc(s, p) {
+            // p1/ncs/enter: begin AcquireCohort.
+            NCS => QpSpec::set_pc(&mut n, p, C1),
+            // c1: descriptor[self] := {budget |-> -1, next |-> 0}
+            C1 => {
+                QpSpec::set_budget_raw(&mut n, p, B_WAITING);
+                QpSpec::set_next(&mut n, p, 0);
+                QpSpec::set_pc(&mut n, p, SWAP);
+            }
+            // swap: pred := cohort[Us]; cohort[Us] := self  (atomic)
+            SWAP => {
+                QpSpec::set_pred(&mut n, p, s[1 + us]);
+                n[1 + us] = pid1;
+                QpSpec::set_pc(&mut n, p, CWAIT);
+            }
+            // cwait: branch on pred
+            CWAIT => {
+                if QpSpec::pred(s, p) != 0 {
+                    QpSpec::set_pc(&mut n, p, C2);
+                } else {
+                    QpSpec::set_pc(&mut n, p, C8);
+                }
+            }
+            // c2: descriptor[pred].next := self
+            C2 => {
+                let pred = QpSpec::pred(s, p) as usize - 1;
+                QpSpec::set_next(&mut n, pred, pid1);
+                QpSpec::set_pc(&mut n, p, C3);
+            }
+            // c3: await Budget(self) >= 0
+            C3 => {
+                if QpSpec::budget_raw(s, p) == B_WAITING {
+                    return None;
+                }
+                QpSpec::set_pc(&mut n, p, C4);
+            }
+            // c4: if Budget(self) = 0 then call AcquireGlobal (c5)
+            C4 => {
+                if QpSpec::budget_raw(s, p) == 1 {
+                    // budget 0
+                    QpSpec::set_pc(&mut n, p, G1_C5);
+                } else {
+                    QpSpec::set_pc(&mut n, p, C7);
+                }
+            }
+            // c6: descriptor[self].budget := B
+            C6 => {
+                QpSpec::set_budget_raw(&mut n, p, self.budget + 1);
+                QpSpec::set_pc(&mut n, p, C7);
+            }
+            // c7: passed[self] := TRUE; (c10: return → p2)
+            C7 => {
+                QpSpec::set_passed(&mut n, p, true);
+                QpSpec::set_pc(&mut n, p, P2);
+            }
+            // c8: descriptor[self].budget := B
+            C8 => {
+                QpSpec::set_budget_raw(&mut n, p, self.budget + 1);
+                QpSpec::set_pc(&mut n, p, C9);
+            }
+            // c9: passed[self] := FALSE; (c10: return → p2)
+            C9 => {
+                QpSpec::set_passed(&mut n, p, false);
+                QpSpec::set_pc(&mut n, p, P2);
+            }
+            // p2: if ¬passed then call AcquireGlobal else → cs
+            P2 => {
+                if !QpSpec::passed(s, p) {
+                    QpSpec::set_pc(&mut n, p, G1_P2);
+                } else {
+                    QpSpec::set_pc(&mut n, p, CS);
+                }
+            }
+            // g1: victim := self
+            G1_C5 | G1_P2 => {
+                n[0] = pid1;
+                QpSpec::set_pc(&mut n, p, if QpSpec::pc(s, p) == G1_C5 { G2_C5 } else { G2_P2 });
+            }
+            // g2: if cohort[Them] = 0 goto g4 (return)
+            G2_C5 | G2_P2 => {
+                let from_c5 = QpSpec::pc(s, p) == G2_C5;
+                if s[1 + them] == 0 {
+                    QpSpec::set_pc(&mut n, p, if from_c5 { C6 } else { CS });
+                } else {
+                    QpSpec::set_pc(&mut n, p, if from_c5 { G3_C5 } else { G3_P2 });
+                }
+            }
+            // g3: if victim ≠ self goto g4 (return) else loop to g2
+            G3_C5 | G3_P2 => {
+                let from_c5 = QpSpec::pc(s, p) == G3_C5;
+                if s[0] != pid1 {
+                    QpSpec::set_pc(&mut n, p, if from_c5 { C6 } else { CS });
+                } else {
+                    QpSpec::set_pc(&mut n, p, if from_c5 { G2_C5 } else { G2_P2 });
+                }
+            }
+            // cs: skip; exit: call ReleaseCohort
+            CS => QpSpec::set_pc(&mut n, p, CASR),
+            // cas: if cohort[Us] = self then cohort[Us] := 0 (success →
+            // return) else pass the lock (r1/r2).
+            CASR => {
+                if s[1 + us] == pid1 {
+                    n[1 + us] = 0;
+                    QpSpec::set_pc(&mut n, p, NCS);
+                } else {
+                    QpSpec::set_pc(&mut n, p, R1);
+                }
+            }
+            // r1: await descriptor[self].next ≠ 0
+            R1 => {
+                if QpSpec::next(s, p) == 0 {
+                    return None;
+                }
+                QpSpec::set_pc(&mut n, p, R2);
+            }
+            // r2: descriptor[next].budget := Budget(self) − 1
+            R2 => {
+                let nxt = QpSpec::next(s, p) as usize - 1;
+                let b = QpSpec::budget_raw(s, p);
+                debug_assert!(b >= 2, "passing with budget {}", b as i16 - 1);
+                QpSpec::set_budget_raw(&mut n, nxt, b - 1);
+                QpSpec::set_pc(&mut n, p, NCS);
+            }
+            other => unreachable!("pc {other}"),
+        }
+        Some(n)
+    }
+
+    fn in_cs(&self, s: &QpState, p: usize) -> bool {
+        QpSpec::pc(s, p) == CS
+    }
+
+    fn wants_cs(&self, s: &QpState, p: usize) -> bool {
+        !matches!(QpSpec::pc(s, p), NCS | CS | CASR | R1 | R2)
+    }
+
+    fn pc_name(&self, s: &QpState, p: usize) -> String {
+        match QpSpec::pc(s, p) {
+            NCS => "ncs",
+            C1 => "c1",
+            SWAP => "swap",
+            CWAIT => "cwait",
+            C2 => "c2",
+            C3 => "c3",
+            C4 => "c4",
+            C6 => "c6",
+            C7 => "c7",
+            C8 => "c8",
+            C9 => "c9",
+            P2 => "p2",
+            G1_C5 => "g1(c5)",
+            G2_C5 => "g2(c5)",
+            G3_C5 => "g3(c5)",
+            G1_P2 => "g1(p2)",
+            G2_P2 => "g2(p2)",
+            G3_P2 => "g3(p2)",
+            CS => "cs",
+            CASR => "cas",
+            R1 => "r1",
+            R2 => "r2",
+            _ => "?",
+        }
+        .to_string()
+    }
+
+    fn name(&self) -> &'static str {
+        "qplock-spec"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mc::check_all;
+
+    #[test]
+    fn two_procs_budget_one_full_battery() {
+        let r = check_all(&QpSpec::new(2, 1), 1 << 22);
+        assert!(r.mutual_exclusion.holds(), "{}", r.mutual_exclusion);
+        assert!(r.deadlock_free.holds(), "{}", r.deadlock_free);
+        assert!(r.starvation_free.holds(), "{}", r.starvation_free);
+        assert!(r.dead_and_livelock_free.holds(), "{}", r.dead_and_livelock_free);
+        assert!(!r.truncated);
+    }
+
+    #[test]
+    fn three_procs_budget_two_full_battery() {
+        let r = check_all(&QpSpec::new(3, 2), 1 << 22);
+        assert!(r.mutual_exclusion.holds(), "{}", r.mutual_exclusion);
+        assert!(r.deadlock_free.holds(), "{}", r.deadlock_free);
+        assert!(r.starvation_free.holds(), "{}", r.starvation_free);
+        assert!(r.dead_and_livelock_free.holds(), "{}", r.dead_and_livelock_free);
+        assert!(!r.truncated);
+    }
+
+    #[test]
+    fn four_procs_safety() {
+        let r = check_all(&QpSpec::new(4, 2), 1 << 23);
+        assert!(r.mutual_exclusion.holds(), "{}", r.mutual_exclusion);
+        assert!(r.deadlock_free.holds(), "{}", r.deadlock_free);
+    }
+}

@@ -1,0 +1,114 @@
+//! The everyone-through-the-NIC TAS lock (`spin-rcas`), modeled with an
+//! *atomic* remote CAS — the NIC serializes all RMWs, so with every
+//! process using `rCAS` the compare-and-swap is a single step for all.
+//!
+//! Safe (mutual exclusion holds — contrast with [`super::naive_spec`]),
+//! but a TAS lock is **not starvation-free**: two processes can hand the
+//! lock between... no — one process can acquire and release repeatedly
+//! while the other happens never to win the race. The weak-fairness SCC
+//! analysis exposes exactly that, giving E8 its qplock-vs-TAS fairness
+//! row (and matching the paper's emphasis on starvation freedom as a
+//! distinguishing property).
+
+use crate::mc::Model;
+
+const NCS: u8 = 0;
+const TRY: u8 = 1;
+const CS: u8 = 2;
+const EXIT: u8 = 3;
+
+/// State: `[word, pc...]` for `n` processes; `word` = 0 or owner pid.
+pub struct SpinSpec {
+    pub n: usize,
+}
+
+impl SpinSpec {
+    pub fn new(n: usize) -> SpinSpec {
+        assert!((2..=6).contains(&n));
+        SpinSpec { n }
+    }
+}
+
+impl Model for SpinSpec {
+    type State = [u8; 7];
+
+    fn initials(&self) -> Vec<[u8; 7]> {
+        vec![[0; 7]]
+    }
+
+    fn procs(&self) -> usize {
+        self.n
+    }
+
+    fn step(&self, s: &[u8; 7], pid: usize) -> Option<[u8; 7]> {
+        let mut n = *s;
+        match s[1 + pid] {
+            NCS => n[1 + pid] = TRY,
+            TRY => {
+                // Atomic CAS (NIC-serialized); blocked while held.
+                if s[0] == 0 {
+                    n[0] = pid as u8 + 1;
+                    n[1 + pid] = CS;
+                } else {
+                    return None;
+                }
+            }
+            CS => n[1 + pid] = EXIT,
+            EXIT => {
+                n[0] = 0;
+                n[1 + pid] = NCS;
+            }
+            _ => unreachable!(),
+        }
+        Some(n)
+    }
+
+    fn in_cs(&self, s: &[u8; 7], pid: usize) -> bool {
+        s[1 + pid] == CS
+    }
+
+    fn wants_cs(&self, s: &[u8; 7], pid: usize) -> bool {
+        s[1 + pid] == TRY
+    }
+
+    fn pc_name(&self, s: &[u8; 7], pid: usize) -> String {
+        match s[1 + pid] {
+            NCS => "ncs",
+            TRY => "try",
+            CS => "cs",
+            EXIT => "exit",
+            _ => "?",
+        }
+        .to_string()
+    }
+
+    fn name(&self) -> &'static str {
+        "spin-rcas-spec"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mc::check_all;
+
+    #[test]
+    fn safe_but_not_starvation_free() {
+        let r = check_all(&SpinSpec::new(2), 1 << 16);
+        assert!(r.mutual_exclusion.holds(), "{}", r.mutual_exclusion);
+        assert!(r.deadlock_free.holds(), "{}", r.deadlock_free);
+        assert!(
+            !r.starvation_free.holds(),
+            "TAS locks admit starvation; the fairness analysis must find it"
+        );
+        // But it is livelock-free: someone always gets in.
+        assert!(r.dead_and_livelock_free.holds(), "{}", r.dead_and_livelock_free);
+    }
+
+    #[test]
+    fn three_process_variant_too() {
+        let r = check_all(&SpinSpec::new(3), 1 << 18);
+        assert!(r.mutual_exclusion.holds());
+        assert!(!r.starvation_free.holds());
+    }
+}

@@ -1,0 +1,141 @@
+//! Property evaluation and reporting — the checker's TLC-style output.
+
+use super::graph::{format_trace, ExploreResult};
+use super::scc::find_starvation;
+use super::Model;
+
+/// Verdict for one property.
+pub enum PropertyVerdict {
+    Holds,
+    /// Violated; carries a human-readable counterexample.
+    Violated(String),
+    /// Not evaluated (e.g. exploration truncated).
+    Unknown(String),
+}
+
+impl PropertyVerdict {
+    pub fn holds(&self) -> bool {
+        matches!(self, PropertyVerdict::Holds)
+    }
+
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            PropertyVerdict::Holds => "PASS",
+            PropertyVerdict::Violated(_) => "FAIL",
+            PropertyVerdict::Unknown(_) => "????",
+        }
+    }
+}
+
+impl std::fmt::Display for PropertyVerdict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PropertyVerdict::Holds => write!(f, "PASS"),
+            PropertyVerdict::Violated(t) => write!(f, "FAIL\n{t}"),
+            PropertyVerdict::Unknown(why) => write!(f, "UNKNOWN ({why})"),
+        }
+    }
+}
+
+/// Full battery results for one model configuration (one row of the E8
+/// table).
+pub struct CheckReport {
+    pub model: &'static str,
+    pub states: usize,
+    pub truncated: bool,
+    pub mutual_exclusion: PropertyVerdict,
+    pub deadlock_free: PropertyVerdict,
+    pub starvation_free: PropertyVerdict,
+    pub dead_and_livelock_free: PropertyVerdict,
+}
+
+impl CheckReport {
+    pub fn all_safety_and_liveness_hold(&self) -> bool {
+        self.mutual_exclusion.holds()
+            && self.deadlock_free.holds()
+            && self.starvation_free.holds()
+            && self.dead_and_livelock_free.holds()
+    }
+}
+
+impl std::fmt::Display for CheckReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "model {:<14} states {:>9}{}",
+            self.model,
+            self.states,
+            if self.truncated { " (TRUNCATED)" } else { "" }
+        )?;
+        writeln!(f, "  MutualExclusion      {}", self.mutual_exclusion.symbol())?;
+        writeln!(f, "  DeadlockFree         {}", self.deadlock_free.symbol())?;
+        writeln!(f, "  StarvationFree       {}", self.starvation_free.symbol())?;
+        writeln!(
+            f,
+            "  DeadAndLivelockFree  {}",
+            self.dead_and_livelock_free.symbol()
+        )
+    }
+}
+
+/// Evaluate the paper's property battery over an explored graph.
+pub fn evaluate<M: Model>(model: &M, explored: &ExploreResult<M::State>) -> CheckReport {
+    let g = &explored.graph;
+
+    let mutual_exclusion = match explored.me_violation {
+        None => PropertyVerdict::Holds,
+        Some(sid) => PropertyVerdict::Violated(format!(
+            "two processes in the critical section; shortest trace:\n{}",
+            format_trace(model, g, sid)
+        )),
+    };
+
+    let deadlock_free = if explored.deadlocks.is_empty() {
+        PropertyVerdict::Holds
+    } else {
+        let sid = explored.deadlocks[0];
+        PropertyVerdict::Violated(format!(
+            "deadlocked state (no enabled transition); trace:\n{}",
+            format_trace(model, g, sid)
+        ))
+    };
+
+    let (starvation_free, dead_and_livelock_free) = if explored.truncated {
+        (
+            PropertyVerdict::Unknown("state space truncated".into()),
+            PropertyVerdict::Unknown("state space truncated".into()),
+        )
+    } else {
+        let (starved, livelock) = find_starvation(model, g);
+        let sf = if let Some(s) = starved.first() {
+            PropertyVerdict::Violated(format!(
+                "process p{} can wait forever (fair SCC of {} states; witness state {}); \
+                 prefix trace:\n{}",
+                s.pid + 1,
+                s.scc_size,
+                s.witness,
+                format_trace(model, g, s.witness)
+            ))
+        } else {
+            PropertyVerdict::Holds
+        };
+        let dlf = if livelock {
+            PropertyVerdict::Violated(
+                "fair cycle where some process always wants the CS but none ever enters".into(),
+            )
+        } else {
+            PropertyVerdict::Holds
+        };
+        (sf, dlf)
+    };
+
+    CheckReport {
+        model: model.name(),
+        states: g.states.len(),
+        truncated: explored.truncated,
+        mutual_exclusion,
+        deadlock_free,
+        starvation_free,
+        dead_and_livelock_free,
+    }
+}

@@ -1,0 +1,359 @@
+//! Tarjan SCC decomposition + weak-fairness liveness analysis.
+//!
+//! A violation of `q wants ~> q in cs` is a lasso whose cycle (a) never
+//! visits a state where `q` is in its critical section, (b) keeps `q`
+//! wanting, and (c) is **weakly fair**: every process that is
+//! continuously enabled along the cycle takes steps inside it.
+//!
+//! Because (a)/(b) are state predicates, the analysis is exact: restrict
+//! the graph to states satisfying `wants(q) ∧ ¬cs(q)`, decompose the
+//! *restricted* subgraph into SCCs, and test each cyclic SCC for weak
+//! fairness — for every process `p`, either some state in the SCC has
+//! `p` disabled (so weak fairness demands nothing of `p` there) or `p`
+//! has an edge that stays inside the SCC (so a fair run can satisfy
+//! `p`'s obligation without leaving). A fair restricted SCC reachable
+//! from an initial state is a genuine counterexample; absence of one is
+//! a proof (for the finite configuration).
+
+use super::graph::{StateGraph, StateId};
+use super::Model;
+
+/// One strongly connected component (state ids).
+pub struct Scc {
+    pub members: Vec<StateId>,
+    /// Has at least one internal edge (admits infinite runs).
+    pub cyclic: bool,
+}
+
+/// Iterative Tarjan over the subgraph induced by `mask` (explicit stack:
+/// graphs reach millions of states). States with `mask[s] == false` are
+/// skipped entirely.
+pub fn tarjan_masked<S>(g: &StateGraph<S>, mask: &[bool]) -> Vec<Scc> {
+    let n = g.states.len();
+    debug_assert_eq!(mask.len(), n);
+    let mut index = vec![u32::MAX; n];
+    let mut low = vec![0u32; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<StateId> = vec![];
+    let mut next_index = 0u32;
+    let mut sccs = vec![];
+
+    for root in 0..n as StateId {
+        if !mask[root as usize] || index[root as usize] != u32::MAX {
+            continue;
+        }
+        let mut dfs: Vec<(StateId, usize)> = vec![(root, 0)];
+        index[root as usize] = next_index;
+        low[root as usize] = next_index;
+        next_index += 1;
+        stack.push(root);
+        on_stack[root as usize] = true;
+
+        while let Some(&mut (v, ref mut cursor)) = dfs.last_mut() {
+            if *cursor < g.edges[v as usize].len() {
+                let (_, w) = g.edges[v as usize][*cursor];
+                *cursor += 1;
+                if !mask[w as usize] {
+                    continue;
+                }
+                if index[w as usize] == u32::MAX {
+                    index[w as usize] = next_index;
+                    low[w as usize] = next_index;
+                    next_index += 1;
+                    stack.push(w);
+                    on_stack[w as usize] = true;
+                    dfs.push((w, 0));
+                } else if on_stack[w as usize] {
+                    low[v as usize] = low[v as usize].min(index[w as usize]);
+                }
+            } else {
+                dfs.pop();
+                if let Some(&mut (parent, _)) = dfs.last_mut() {
+                    low[parent as usize] = low[parent as usize].min(low[v as usize]);
+                }
+                if low[v as usize] == index[v as usize] {
+                    let mut members = vec![];
+                    loop {
+                        let w = stack.pop().unwrap();
+                        on_stack[w as usize] = false;
+                        members.push(w);
+                        if w == v {
+                            break;
+                        }
+                    }
+                    let cyclic = members.len() > 1
+                        || g.edges[v as usize]
+                            .iter()
+                            .any(|&(_, d)| d == v && mask[v as usize]);
+                    sccs.push(Scc { members, cyclic });
+                }
+            }
+        }
+    }
+    sccs
+}
+
+/// Tarjan over the full graph.
+pub fn tarjan<S>(g: &StateGraph<S>) -> Vec<Scc> {
+    tarjan_masked(g, &vec![true; g.states.len()])
+}
+
+/// Is the cyclic SCC weakly fair? For every process: disabled somewhere
+/// inside, or has an internal edge.
+fn scc_is_fair<M: Model>(model: &M, g: &StateGraph<M::State>, scc: &Scc) -> bool {
+    let in_scc: std::collections::HashSet<StateId> = scc.members.iter().copied().collect();
+    let nproc = model.procs();
+    let mut internal_move = vec![false; nproc];
+    for &sid in &scc.members {
+        for &(pid, dst) in &g.edges[sid as usize] {
+            if in_scc.contains(&dst) {
+                internal_move[pid as usize] = true;
+            }
+        }
+    }
+    (0..nproc).all(|p| {
+        internal_move[p]
+            || scc
+                .members
+                .iter()
+                .any(|&sid| model.step(&g.states[sid as usize], p).is_none())
+    })
+}
+
+/// A starvation counterexample: a fair cycle on which `pid` waits
+/// forever.
+pub struct Starvation {
+    pub pid: usize,
+    /// A representative state inside the fair SCC.
+    pub witness: StateId,
+    pub scc_size: usize,
+}
+
+/// Find weak-fairness violations of `enter ~> cs` (per process), and of
+/// the paper's `DeadAndLivelockFree` (`someone wants ~> someone in cs`).
+pub fn find_starvation<M: Model>(
+    model: &M,
+    g: &StateGraph<M::State>,
+) -> (Vec<Starvation>, bool) {
+    let nproc = model.procs();
+    let nstates = g.states.len();
+    let mut starved = vec![];
+
+    // Per-process starvation: restrict to wants(q) ∧ ¬cs(q).
+    for q in 0..nproc {
+        let mask: Vec<bool> = (0..nstates)
+            .map(|i| {
+                let s = &g.states[i];
+                model.wants_cs(s, q) && !model.in_cs(s, q)
+            })
+            .collect();
+        for scc in tarjan_masked(g, &mask) {
+            if scc.cyclic && scc_is_fair(model, g, &scc) {
+                starved.push(Starvation {
+                    pid: q,
+                    witness: scc.members[0],
+                    scc_size: scc.members.len(),
+                });
+                break; // one witness per process suffices
+            }
+        }
+    }
+
+    // Livelock: restrict to (∃p wants) ∧ (∀p ¬cs).
+    let mask: Vec<bool> = (0..nstates)
+        .map(|i| {
+            let s = &g.states[i];
+            (0..nproc).any(|p| model.wants_cs(s, p))
+                && (0..nproc).all(|p| !model.in_cs(s, p))
+        })
+        .collect();
+    let livelock = tarjan_masked(g, &mask)
+        .into_iter()
+        .any(|scc| scc.cyclic && scc_is_fair(model, g, &scc));
+
+    (starved, livelock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mc::graph::explore;
+    use crate::mc::Model;
+
+    /// Ring model: single process cycling through k states (state 1 is
+    /// its critical section).
+    struct Ring(u8);
+    impl Model for Ring {
+        type State = u8;
+        fn initials(&self) -> Vec<u8> {
+            vec![0]
+        }
+        fn procs(&self) -> usize {
+            1
+        }
+        fn step(&self, s: &u8, _pid: usize) -> Option<u8> {
+            Some((s + 1) % self.0)
+        }
+        fn in_cs(&self, s: &u8, _pid: usize) -> bool {
+            *s == 1
+        }
+        fn wants_cs(&self, _s: &u8, _pid: usize) -> bool {
+            true
+        }
+        fn pc_name(&self, s: &u8, _pid: usize) -> String {
+            format!("{s}")
+        }
+        fn name(&self) -> &'static str {
+            "ring"
+        }
+    }
+
+    #[test]
+    fn ring_is_one_cyclic_scc() {
+        let r = explore(&Ring(5), 1 << 10);
+        let sccs = tarjan(&r.graph);
+        assert_eq!(sccs.len(), 1);
+        assert!(sccs[0].cyclic);
+        assert_eq!(sccs[0].members.len(), 5);
+    }
+
+    #[test]
+    fn ring_reaching_cs_is_not_starving() {
+        // Restricted to ¬cs states the ring is a path, not a cycle: no
+        // starvation.
+        let r = explore(&Ring(5), 1 << 10);
+        let (starved, livelock) = find_starvation(&Ring(5), &r.graph);
+        assert!(starved.is_empty());
+        assert!(!livelock);
+    }
+
+    /// Two processes; p0 spins forever between two non-cs states (always
+    /// enabled, always wanting); p1 oscillates through its cs.
+    struct Starver;
+    impl Model for Starver {
+        type State = (u8, u8);
+        fn initials(&self) -> Vec<(u8, u8)> {
+            vec![(0, 0)]
+        }
+        fn procs(&self) -> usize {
+            2
+        }
+        fn step(&self, s: &(u8, u8), pid: usize) -> Option<(u8, u8)> {
+            let mut n = *s;
+            if pid == 0 {
+                n.0 = (n.0 + 1) % 2; // never reaches a cs state
+            } else {
+                n.1 = (n.1 + 1) % 3; // state 2 is its cs
+            }
+            Some(n)
+        }
+        fn in_cs(&self, s: &(u8, u8), pid: usize) -> bool {
+            pid == 1 && s.1 == 2
+        }
+        fn wants_cs(&self, _s: &(u8, u8), pid: usize) -> bool {
+            pid == 0
+        }
+        fn pc_name(&self, _s: &(u8, u8), _pid: usize) -> String {
+            String::new()
+        }
+        fn name(&self) -> &'static str {
+            "starver"
+        }
+    }
+
+    #[test]
+    fn detects_starvation() {
+        let r = explore(&Starver, 1 << 10);
+        let (starved, _) = find_starvation(&Starver, &r.graph);
+        assert!(starved.iter().any(|s| s.pid == 0));
+        assert!(!starved.iter().any(|s| s.pid == 1));
+    }
+
+    /// Blocked process: p0 is disabled forever while p1 cycles outside
+    /// its cs — fair w.r.t. p0 because p0 is disabled; p0 starves.
+    struct Blocked;
+    impl Model for Blocked {
+        type State = u8;
+        fn initials(&self) -> Vec<u8> {
+            vec![0]
+        }
+        fn procs(&self) -> usize {
+            2
+        }
+        fn step(&self, s: &u8, pid: usize) -> Option<u8> {
+            if pid == 0 {
+                None
+            } else {
+                Some((s + 1) % 3)
+            }
+        }
+        fn in_cs(&self, _s: &u8, _pid: usize) -> bool {
+            false
+        }
+        fn wants_cs(&self, _s: &u8, pid: usize) -> bool {
+            pid == 0
+        }
+        fn pc_name(&self, _s: &u8, _pid: usize) -> String {
+            String::new()
+        }
+        fn name(&self) -> &'static str {
+            "blocked"
+        }
+    }
+
+    #[test]
+    fn disabled_process_starves_fairly() {
+        let r = explore(&Blocked, 1 << 10);
+        let (starved, _) = find_starvation(&Blocked, &r.graph);
+        assert!(starved.iter().any(|s| s.pid == 0));
+    }
+
+    /// p0 is continuously enabled in the cycle but never moves inside it
+    /// (its only edge exits the restricted region): weak fairness rules
+    /// the cycle out — no starvation.
+    struct MustExit;
+    impl Model for MustExit {
+        // (p0 done?, p1 phase)
+        type State = (bool, u8);
+        fn initials(&self) -> Vec<(bool, u8)> {
+            vec![(false, 0)]
+        }
+        fn procs(&self) -> usize {
+            2
+        }
+        fn step(&self, s: &(bool, u8), pid: usize) -> Option<(bool, u8)> {
+            let mut n = *s;
+            if pid == 0 {
+                if s.0 {
+                    return None; // done
+                }
+                n.0 = true; // p0's single step reaches its cs (exits wants-region)
+            } else {
+                n.1 = (n.1 + 1) % 2;
+            }
+            Some(n)
+        }
+        fn in_cs(&self, s: &(bool, u8), pid: usize) -> bool {
+            pid == 0 && s.0
+        }
+        fn wants_cs(&self, s: &(bool, u8), pid: usize) -> bool {
+            pid == 0 && !s.0
+        }
+        fn pc_name(&self, _s: &(bool, u8), _pid: usize) -> String {
+            String::new()
+        }
+        fn name(&self) -> &'static str {
+            "must-exit"
+        }
+    }
+
+    #[test]
+    fn continuously_enabled_exit_edge_defeats_the_cycle() {
+        let r = explore(&MustExit, 1 << 10);
+        let (starved, _) = find_starvation(&MustExit, &r.graph);
+        assert!(
+            starved.is_empty(),
+            "weak fairness forces p0 to take its always-enabled step"
+        );
+    }
+}

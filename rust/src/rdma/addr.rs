@@ -1,0 +1,115 @@
+//! Addressing for the simulated RDMA memory domain.
+//!
+//! Every shared location is an 8-byte register (the granularity at which
+//! the paper's Table 1 defines atomicity). An [`Addr`] packs the owning
+//! node id and the word offset within that node's partition into a single
+//! `u64`, so addresses themselves fit in a register — this is what lets the
+//! MCS queue store "remote pointers" (descriptor addresses) in the tail
+//! word exactly as the paper's Algorithm 2 does.
+
+/// Node identifier within the RDMA domain.
+pub type NodeId = u16;
+
+/// Packed address of one 8-byte register: `node << 32 | word`.
+///
+/// The all-zero value (`node 0, word 0`) is reserved as [`Addr::NULL`];
+/// allocators never hand out word 0, so a zero register unambiguously
+/// means "null pointer" (used by the MCS tail/next fields).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Addr(u64);
+
+impl Addr {
+    /// The reserved null address (never allocated).
+    pub const NULL: Addr = Addr(0);
+
+    #[inline]
+    pub fn new(node: NodeId, word: u32) -> Addr {
+        Addr(((node as u64) << 32) | word as u64)
+    }
+
+    #[inline]
+    pub fn node(self) -> NodeId {
+        (self.0 >> 32) as NodeId
+    }
+
+    #[inline]
+    pub fn word(self) -> u32 {
+        self.0 as u32
+    }
+
+    #[inline]
+    pub fn is_null(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Raw packed representation (what gets stored into registers when an
+    /// address is used as a pointer value).
+    #[inline]
+    pub fn to_bits(self) -> u64 {
+        self.0
+    }
+
+    /// Reconstruct an address from a register value.
+    #[inline]
+    pub fn from_bits(bits: u64) -> Addr {
+        Addr(bits)
+    }
+
+    /// Address `n` words after this one (same node). Used to reach fields
+    /// of multi-word records such as MCS descriptors.
+    #[inline]
+    pub fn offset(self, n: u32) -> Addr {
+        Addr::new(self.node(), self.word() + n)
+    }
+}
+
+impl std::fmt::Debug for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_null() {
+            write!(f, "Addr(NULL)")
+        } else {
+            write!(f, "Addr(n{}:w{})", self.node(), self.word())
+        }
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_pack_unpack() {
+        let a = Addr::new(3, 17);
+        assert_eq!(a.node(), 3);
+        assert_eq!(a.word(), 17);
+        assert_eq!(Addr::from_bits(a.to_bits()), a);
+    }
+
+    #[test]
+    fn null_is_zero_bits() {
+        assert_eq!(Addr::NULL.to_bits(), 0);
+        assert!(Addr::NULL.is_null());
+        assert!(!Addr::new(0, 1).is_null());
+        assert!(!Addr::new(1, 0).is_null());
+    }
+
+    #[test]
+    fn offset_stays_on_node() {
+        let a = Addr::new(2, 10).offset(5);
+        assert_eq!(a.node(), 2);
+        assert_eq!(a.word(), 15);
+    }
+
+    #[test]
+    fn max_node_and_word() {
+        let a = Addr::new(u16::MAX, u32::MAX);
+        assert_eq!(a.node(), u16::MAX);
+        assert_eq!(a.word(), u32::MAX);
+    }
+}

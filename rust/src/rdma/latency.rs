@@ -1,0 +1,161 @@
+//! Latency and congestion model for the simulated fabric.
+//!
+//! The paper's design is driven by two cost facts about commodity RDMA:
+//! (1) a remote verb costs ~1–2 µs while a local access costs nanoseconds
+//! (Kalia et al., ATC'16; Nelson & Palmieri, SRDS'20), and (2) loopback —
+//! a local process going through its own RNIC — is both slow and prone to
+//! congestion anomalies (Kong et al., Collie, NSDI'22). We model both: the
+//! *ratio* is what the algorithms are optimized for, so defaults are
+//! calibrated to published ratios, not to any particular testbed's
+//! absolute numbers (see DESIGN.md "Hardware substitution").
+
+use super::metrics::OpKind;
+
+/// How the domain accounts for modeled time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeMode {
+    /// Busy-wait for the modeled duration: wall-clock experiments (E3–E7)
+    /// see realistic relative costs and real contention.
+    Timed,
+    /// Only count modeled nanoseconds in metrics; no delay. Used by the
+    /// op-count experiments (E1, E2) and by fast unit tests.
+    Counted,
+}
+
+/// Nanosecond costs per operation class, plus the congestion model.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    pub local_ns: u64,
+    pub remote_read_ns: u64,
+    pub remote_write_ns: u64,
+    pub remote_cas_ns: u64,
+    /// Loopback verbs skip the wire but still traverse the RNIC; slightly
+    /// cheaper than a true remote op, far costlier than a CPU access.
+    pub loopback_read_ns: u64,
+    pub loopback_write_ns: u64,
+    pub loopback_cas_ns: u64,
+    /// NIC pipeline depth before queueing delay kicks in.
+    pub nic_capacity: u64,
+    /// Extra ns added per op already queued beyond `nic_capacity`
+    /// (linearized head-of-line blocking; Collie-style anomaly knob).
+    pub congestion_ns_per_op: u64,
+}
+
+impl LatencyModel {
+    /// Defaults calibrated to published local:remote:loopback ratios
+    /// (local ≈ 5 ns; remote verb ≈ 1.5–2.2 µs; loopback ≈ 80% of remote).
+    pub fn calibrated() -> Self {
+        LatencyModel {
+            local_ns: 5,
+            remote_read_ns: 1_500,
+            remote_write_ns: 1_500,
+            remote_cas_ns: 2_200,
+            loopback_read_ns: 1_200,
+            loopback_write_ns: 1_200,
+            loopback_cas_ns: 1_800,
+            nic_capacity: 8,
+            congestion_ns_per_op: 400,
+        }
+    }
+
+    /// All-zero latencies: pure op-count mode.
+    pub fn zero() -> Self {
+        LatencyModel {
+            local_ns: 0,
+            remote_read_ns: 0,
+            remote_write_ns: 0,
+            remote_cas_ns: 0,
+            loopback_read_ns: 0,
+            loopback_write_ns: 0,
+            loopback_cas_ns: 0,
+            nic_capacity: u64::MAX,
+            congestion_ns_per_op: 0,
+        }
+    }
+
+    /// A compressed model for fast-but-ordered tests: preserves the
+    /// local ≪ loopback < remote ordering at ~10× smaller magnitudes.
+    pub fn fast() -> Self {
+        LatencyModel {
+            local_ns: 0,
+            remote_read_ns: 150,
+            remote_write_ns: 150,
+            remote_cas_ns: 220,
+            loopback_read_ns: 120,
+            loopback_write_ns: 120,
+            loopback_cas_ns: 180,
+            nic_capacity: 8,
+            congestion_ns_per_op: 40,
+        }
+    }
+
+    /// Base cost of one verb, before congestion.
+    pub fn base_ns(&self, kind: OpKind, loopback: bool) -> u64 {
+        match (kind, loopback) {
+            (OpKind::LocalRead | OpKind::LocalWrite | OpKind::LocalCas, _) => self.local_ns,
+            (OpKind::RemoteRead, false) => self.remote_read_ns,
+            (OpKind::RemoteWrite, false) => self.remote_write_ns,
+            (OpKind::RemoteCas, false) => self.remote_cas_ns,
+            (OpKind::RemoteRead, true) => self.loopback_read_ns,
+            (OpKind::RemoteWrite, true) => self.loopback_write_ns,
+            (OpKind::RemoteCas, true) => self.loopback_cas_ns,
+        }
+    }
+
+    /// Queueing penalty given the number of ops already in flight at the
+    /// target NIC.
+    pub fn congestion_ns(&self, inflight: u64) -> u64 {
+        inflight
+            .saturating_sub(self.nic_capacity)
+            .saturating_mul(self.congestion_ns_per_op)
+    }
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel::calibrated()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_preserves_published_ratios() {
+        let m = LatencyModel::calibrated();
+        // Remote is orders of magnitude slower than local.
+        assert!(m.remote_read_ns >= 100 * m.local_ns);
+        // Loopback is cheaper than remote but within the same order.
+        assert!(m.loopback_read_ns < m.remote_read_ns);
+        assert!(m.loopback_read_ns * 2 > m.remote_read_ns);
+        // CAS costs more than read/write (RNIC RMW unit).
+        assert!(m.remote_cas_ns > m.remote_read_ns);
+    }
+
+    #[test]
+    fn base_ns_dispatch() {
+        let m = LatencyModel::calibrated();
+        assert_eq!(m.base_ns(OpKind::LocalRead, false), m.local_ns);
+        assert_eq!(m.base_ns(OpKind::RemoteCas, false), m.remote_cas_ns);
+        assert_eq!(m.base_ns(OpKind::RemoteCas, true), m.loopback_cas_ns);
+    }
+
+    #[test]
+    fn congestion_kicks_in_past_capacity() {
+        let m = LatencyModel::calibrated();
+        assert_eq!(m.congestion_ns(0), 0);
+        assert_eq!(m.congestion_ns(m.nic_capacity), 0);
+        assert_eq!(m.congestion_ns(m.nic_capacity + 3), 3 * m.congestion_ns_per_op);
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        let m = LatencyModel::zero();
+        for k in OpKind::ALL {
+            assert_eq!(m.base_ns(k, false), 0);
+            assert_eq!(m.base_ns(k, true), 0);
+        }
+        assert_eq!(m.congestion_ns(1_000_000), 0);
+    }
+}

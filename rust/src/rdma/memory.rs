@@ -1,0 +1,171 @@
+//! Per-node register arenas and allocation.
+//!
+//! Each node's RDMA-registered memory partition is an arena of 8-byte
+//! atomic registers. A bump allocator hands out word ranges; word 0 (in
+//! fact the whole first cache line) is never allocated so the value 0 can
+//! serve as the null remote pointer (see [`super::addr::Addr::NULL`]).
+
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Mutex;
+
+use super::addr::{Addr, NodeId};
+
+/// Words per 64-byte cache line.
+pub const WORDS_PER_LINE: u32 = 8;
+
+/// One node's registered-memory partition.
+pub struct NodeMemory {
+    node: NodeId,
+    words: Box<[AtomicU64]>,
+    next_free: Mutex<u32>,
+    /// When set, allocations are rounded up to cache-line multiples and
+    /// line-aligned, so independently-owned hot words (lock words, MCS
+    /// descriptors) never share a line. Costs capacity, buys the absence
+    /// of simulator-artifact false sharing.
+    pad_lines: bool,
+}
+
+impl NodeMemory {
+    pub fn new(node: NodeId, capacity_words: u32, pad_lines: bool) -> Self {
+        let words = (0..capacity_words)
+            .map(|_| AtomicU64::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        NodeMemory {
+            node,
+            words,
+            // Skip the first line entirely: word 0 is the null pointer.
+            next_free: Mutex::new(WORDS_PER_LINE),
+            pad_lines,
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    pub fn capacity_words(&self) -> u32 {
+        self.words.len() as u32
+    }
+
+    /// Direct register access. Panics on out-of-range or cross-node
+    /// addresses — both indicate simulator-usage bugs, not modeled faults
+    /// (the paper's model is failure-free).
+    #[inline]
+    pub fn word(&self, addr: Addr) -> &AtomicU64 {
+        assert_eq!(
+            addr.node(),
+            self.node,
+            "address {addr:?} routed to node {}",
+            self.node
+        );
+        &self.words[addr.word() as usize]
+    }
+
+    /// Allocate `n` consecutive words; returns the address of the first.
+    /// Panics when the arena is exhausted (fixed-capacity simulation).
+    pub fn alloc(&self, n: u32) -> Addr {
+        assert!(n > 0, "zero-size allocation");
+        let mut next = self.next_free.lock().unwrap();
+        let start = *next;
+        let size = if self.pad_lines {
+            n.div_ceil(WORDS_PER_LINE) * WORDS_PER_LINE
+        } else {
+            n
+        };
+        let end = start
+            .checked_add(size)
+            .expect("node memory offset overflow");
+        assert!(
+            end <= self.capacity_words(),
+            "node {} memory exhausted: want {} words at {}, capacity {}",
+            self.node,
+            size,
+            start,
+            self.capacity_words()
+        );
+        *next = end;
+        Addr::new(self.node, start)
+    }
+
+    /// Zero every allocated word (used between benchmark repetitions to
+    /// reuse a domain without reconstructing it).
+    pub fn wipe(&self) {
+        let high = *self.next_free.lock().unwrap();
+        for w in &self.words[..high as usize] {
+            w.store(0, SeqCst);
+        }
+    }
+
+    /// Words currently allocated (diagnostic).
+    pub fn allocated_words(&self) -> u32 {
+        *self.next_free.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_never_returns_null() {
+        let m = NodeMemory::new(0, 1024, false);
+        let a = m.alloc(1);
+        assert!(!a.is_null());
+        assert!(a.word() >= WORDS_PER_LINE);
+    }
+
+    #[test]
+    fn alloc_is_consecutive_without_padding() {
+        let m = NodeMemory::new(1, 1024, false);
+        let a = m.alloc(3);
+        let b = m.alloc(2);
+        assert_eq!(b.word(), a.word() + 3);
+    }
+
+    #[test]
+    fn padded_allocs_are_line_aligned() {
+        let m = NodeMemory::new(2, 1024, true);
+        let a = m.alloc(1);
+        let b = m.alloc(9);
+        let c = m.alloc(1);
+        assert_eq!(a.word() % WORDS_PER_LINE, 0);
+        assert_eq!(b.word() % WORDS_PER_LINE, 0);
+        assert_eq!(c.word() % WORDS_PER_LINE, 0);
+        // 9 words round up to 2 lines.
+        assert_eq!(c.word() - b.word(), 2 * WORDS_PER_LINE);
+    }
+
+    #[test]
+    fn word_reads_back_writes() {
+        let m = NodeMemory::new(0, 64, false);
+        let a = m.alloc(1);
+        m.word(a).store(0xDEAD, SeqCst);
+        assert_eq!(m.word(a).load(SeqCst), 0xDEAD);
+    }
+
+    #[test]
+    #[should_panic(expected = "memory exhausted")]
+    fn exhaustion_panics() {
+        let m = NodeMemory::new(0, 16, false);
+        m.alloc(16);
+    }
+
+    #[test]
+    #[should_panic(expected = "routed to node")]
+    fn cross_node_addr_panics() {
+        let m = NodeMemory::new(0, 64, false);
+        m.word(Addr::new(1, 8));
+    }
+
+    #[test]
+    fn wipe_zeroes_allocated_region() {
+        let m = NodeMemory::new(0, 64, false);
+        let a = m.alloc(2);
+        m.word(a).store(7, SeqCst);
+        m.word(a.offset(1)).store(9, SeqCst);
+        m.wipe();
+        assert_eq!(m.word(a).load(SeqCst), 0);
+        assert_eq!(m.word(a.offset(1)).load(SeqCst), 0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Per-process and per-NIC operation accounting.
+//!
+//! Operation counts are first-class experimental outputs (experiment E2
+//! verifies the paper's analytical claims: local processes issue *zero*
+//! RDMA operations under qplock; a lone remote process acquires with a
+//! single rCAS). Counters are plain relaxed atomics — they sit off the
+//! algorithm's critical path and must not serialize it.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Kinds of register operations, split by the locality class the paper's
+/// model distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// CPU load on a local register.
+    LocalRead,
+    /// CPU store on a local register.
+    LocalWrite,
+    /// CPU compare-and-swap on a local register.
+    LocalCas,
+    /// One-sided RDMA read.
+    RemoteRead,
+    /// One-sided RDMA write.
+    RemoteWrite,
+    /// RDMA compare-and-swap (RNIC-executed RMW).
+    RemoteCas,
+}
+
+impl OpKind {
+    pub fn is_remote(self) -> bool {
+        matches!(
+            self,
+            OpKind::RemoteRead | OpKind::RemoteWrite | OpKind::RemoteCas
+        )
+    }
+
+    pub const ALL: [OpKind; 6] = [
+        OpKind::LocalRead,
+        OpKind::LocalWrite,
+        OpKind::LocalCas,
+        OpKind::RemoteRead,
+        OpKind::RemoteWrite,
+        OpKind::RemoteCas,
+    ];
+}
+
+/// Per-process operation counters. Cheap to clone a snapshot out of.
+#[derive(Default, Debug)]
+pub struct ProcMetrics {
+    pub local_read: AtomicU64,
+    pub local_write: AtomicU64,
+    pub local_cas: AtomicU64,
+    pub remote_read: AtomicU64,
+    pub remote_write: AtomicU64,
+    pub remote_cas: AtomicU64,
+    /// Remote ops that targeted the issuing process's own node (loopback).
+    pub loopback: AtomicU64,
+    /// Total modeled network time attributed to this process (ns).
+    pub net_ns: AtomicU64,
+}
+
+impl ProcMetrics {
+    pub fn record(&self, kind: OpKind) {
+        match kind {
+            OpKind::LocalRead => &self.local_read,
+            OpKind::LocalWrite => &self.local_write,
+            OpKind::LocalCas => &self.local_cas,
+            OpKind::RemoteRead => &self.remote_read,
+            OpKind::RemoteWrite => &self.remote_write,
+            OpKind::RemoteCas => &self.remote_cas,
+        }
+        .fetch_add(1, Relaxed);
+    }
+
+    pub fn record_loopback(&self) {
+        self.loopback.fetch_add(1, Relaxed);
+    }
+
+    pub fn add_net_ns(&self, ns: u64) {
+        self.net_ns.fetch_add(ns, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ProcMetricsSnapshot {
+        ProcMetricsSnapshot {
+            local_read: self.local_read.load(Relaxed),
+            local_write: self.local_write.load(Relaxed),
+            local_cas: self.local_cas.load(Relaxed),
+            remote_read: self.remote_read.load(Relaxed),
+            remote_write: self.remote_write.load(Relaxed),
+            remote_cas: self.remote_cas.load(Relaxed),
+            loopback: self.loopback.load(Relaxed),
+            net_ns: self.net_ns.load(Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        for c in [
+            &self.local_read,
+            &self.local_write,
+            &self.local_cas,
+            &self.remote_read,
+            &self.remote_write,
+            &self.remote_cas,
+            &self.loopback,
+            &self.net_ns,
+        ] {
+            c.store(0, Relaxed);
+        }
+    }
+}
+
+/// Point-in-time copy of [`ProcMetrics`]; supports subtraction so callers
+/// can meter an interval (e.g. ops per lock acquisition).
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct ProcMetricsSnapshot {
+    pub local_read: u64,
+    pub local_write: u64,
+    pub local_cas: u64,
+    pub remote_read: u64,
+    pub remote_write: u64,
+    pub remote_cas: u64,
+    pub loopback: u64,
+    pub net_ns: u64,
+}
+
+impl ProcMetricsSnapshot {
+    pub fn remote_total(&self) -> u64 {
+        self.remote_read + self.remote_write + self.remote_cas
+    }
+
+    pub fn local_total(&self) -> u64 {
+        self.local_read + self.local_write + self.local_cas
+    }
+}
+
+impl std::ops::Sub for ProcMetricsSnapshot {
+    type Output = ProcMetricsSnapshot;
+    fn sub(self, rhs: ProcMetricsSnapshot) -> ProcMetricsSnapshot {
+        ProcMetricsSnapshot {
+            local_read: self.local_read - rhs.local_read,
+            local_write: self.local_write - rhs.local_write,
+            local_cas: self.local_cas - rhs.local_cas,
+            remote_read: self.remote_read - rhs.remote_read,
+            remote_write: self.remote_write - rhs.remote_write,
+            remote_cas: self.remote_cas - rhs.remote_cas,
+            loopback: self.loopback - rhs.loopback,
+            net_ns: self.net_ns - rhs.net_ns,
+        }
+    }
+}
+
+/// Per-NIC counters: total verb executions, loopback share, and the peak
+/// in-flight depth (the congestion signal for experiment E7).
+#[derive(Default, Debug)]
+pub struct NicMetrics {
+    pub ops: AtomicU64,
+    pub loopback_ops: AtomicU64,
+    pub rmw_ops: AtomicU64,
+    pub peak_inflight: AtomicU64,
+    pub congestion_penalty_ns: AtomicU64,
+}
+
+impl NicMetrics {
+    pub fn observe_inflight(&self, depth: u64) {
+        self.peak_inflight.fetch_max(depth, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_routes_to_right_counter() {
+        let m = ProcMetrics::default();
+        m.record(OpKind::RemoteCas);
+        m.record(OpKind::RemoteCas);
+        m.record(OpKind::LocalRead);
+        let s = m.snapshot();
+        assert_eq!(s.remote_cas, 2);
+        assert_eq!(s.local_read, 1);
+        assert_eq!(s.remote_total(), 2);
+        assert_eq!(s.local_total(), 1);
+    }
+
+    #[test]
+    fn snapshot_subtraction_meters_interval() {
+        let m = ProcMetrics::default();
+        m.record(OpKind::RemoteWrite);
+        let before = m.snapshot();
+        m.record(OpKind::RemoteWrite);
+        m.record(OpKind::RemoteRead);
+        let delta = m.snapshot() - before;
+        assert_eq!(delta.remote_write, 1);
+        assert_eq!(delta.remote_read, 1);
+        assert_eq!(delta.remote_total(), 2);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let m = ProcMetrics::default();
+        for k in OpKind::ALL {
+            m.record(k);
+        }
+        m.record_loopback();
+        m.add_net_ns(100);
+        m.reset();
+        assert_eq!(m.snapshot(), ProcMetricsSnapshot::default());
+    }
+
+    #[test]
+    fn nic_peak_inflight_is_max() {
+        let n = NicMetrics::default();
+        n.observe_inflight(3);
+        n.observe_inflight(7);
+        n.observe_inflight(5);
+        assert_eq!(n.peak_inflight.load(Relaxed), 7);
+    }
+
+    #[test]
+    fn opkind_is_remote() {
+        assert!(OpKind::RemoteCas.is_remote());
+        assert!(!OpKind::LocalCas.is_remote());
+    }
+}

@@ -1,0 +1,200 @@
+//! Simulated RDMA substrate (system S1 in DESIGN.md).
+//!
+//! The paper targets real RNIC hardware; this module is the software
+//! substitution documented in DESIGN.md §Hardware-substitution. It
+//! preserves the three behaviors the paper's algorithm is designed
+//! around:
+//!
+//! * 8-byte atomic registers partitioned across nodes, with local CPU
+//!   access and one-sided remote verbs ([`verbs::Endpoint`]);
+//! * the Table-1 atomicity matrix — in particular, remote CAS is atomic
+//!   only among remote RMWs under commodity
+//!   [`nic::AtomicityMode::NicSerialized`];
+//! * a calibrated latency/congestion model in which remote verbs are
+//!   ~2–3 orders of magnitude costlier than local accesses and loopback
+//!   traffic both pays NIC latency and contributes to NIC queueing.
+
+pub mod addr;
+pub mod latency;
+pub mod memory;
+pub mod metrics;
+pub mod nic;
+pub mod verbs;
+
+use std::sync::Arc;
+
+pub use addr::{Addr, NodeId};
+pub use latency::{LatencyModel, TimeMode};
+pub use metrics::{OpKind, ProcMetrics, ProcMetricsSnapshot};
+pub use nic::AtomicityMode;
+pub use verbs::Endpoint;
+
+/// Domain-wide configuration.
+#[derive(Clone, Debug)]
+pub struct DomainConfig {
+    pub latency: LatencyModel,
+    pub time_mode: TimeMode,
+    pub atomicity: AtomicityMode,
+    /// Widens the NIC RMW read→write window (test/E1 hook; 0 in normal
+    /// operation).
+    pub hazard_ns: u64,
+    /// Cache-line-align allocations (see [`memory::NodeMemory`]).
+    pub pad_lines: bool,
+}
+
+impl DomainConfig {
+    /// Realistic timing, commodity atomicity — the default experimental
+    /// configuration.
+    pub fn timed() -> Self {
+        DomainConfig {
+            latency: LatencyModel::calibrated(),
+            time_mode: TimeMode::Timed,
+            atomicity: AtomicityMode::NicSerialized,
+            hazard_ns: 0,
+            pad_lines: true,
+        }
+    }
+
+    /// Zero-latency counting mode for op-count experiments and tests.
+    pub fn counted() -> Self {
+        DomainConfig {
+            latency: LatencyModel::calibrated(),
+            time_mode: TimeMode::Counted,
+            atomicity: AtomicityMode::NicSerialized,
+            hazard_ns: 0,
+            pad_lines: true,
+        }
+    }
+
+    /// Compressed latencies for ordered-but-fast integration tests.
+    pub fn fast_timed() -> Self {
+        DomainConfig {
+            latency: LatencyModel::fast(),
+            time_mode: TimeMode::Timed,
+            atomicity: AtomicityMode::NicSerialized,
+            hazard_ns: 0,
+            pad_lines: true,
+        }
+    }
+
+    pub fn with_atomicity(mut self, mode: AtomicityMode) -> Self {
+        self.atomicity = mode;
+        self
+    }
+
+    pub fn with_latency(mut self, m: LatencyModel) -> Self {
+        self.latency = m;
+        self
+    }
+
+    pub fn with_hazard_ns(mut self, ns: u64) -> Self {
+        self.hazard_ns = ns;
+        self
+    }
+}
+
+/// One node: its memory partition and its NIC.
+pub struct Node {
+    pub mem: memory::NodeMemory,
+    pub nic: nic::Nic,
+}
+
+/// The whole simulated cluster fabric: `nodes` memory partitions plus
+/// configuration. Shared via `Arc`; all access goes through
+/// [`Endpoint`]s.
+pub struct RdmaDomain {
+    nodes: Vec<Node>,
+    pub cfg: DomainConfig,
+}
+
+impl RdmaDomain {
+    pub fn new(num_nodes: u16, words_per_node: u32, cfg: DomainConfig) -> Arc<Self> {
+        assert!(num_nodes > 0);
+        let nodes = (0..num_nodes)
+            .map(|i| Node {
+                mem: memory::NodeMemory::new(i, words_per_node, cfg.pad_lines),
+                nic: nic::Nic::new(),
+            })
+            .collect();
+        Arc::new(RdmaDomain { nodes, cfg })
+    }
+
+    pub fn num_nodes(&self) -> u16 {
+        self.nodes.len() as u16
+    }
+
+    #[inline]
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    /// Create a process endpoint on `node` with fresh metrics.
+    pub fn endpoint(self: &Arc<Self>, node: NodeId) -> Endpoint {
+        Endpoint::new(
+            Arc::clone(self),
+            node,
+            Arc::new(ProcMetrics::default()),
+        )
+    }
+
+    /// Create an endpoint sharing an existing metrics sink (one logical
+    /// process observed from multiple components).
+    pub fn endpoint_with_metrics(
+        self: &Arc<Self>,
+        node: NodeId,
+        metrics: Arc<ProcMetrics>,
+    ) -> Endpoint {
+        Endpoint::new(Arc::clone(self), node, metrics)
+    }
+
+    /// Zero all allocated registers on every node (domain reuse between
+    /// benchmark repetitions; allocations are kept).
+    pub fn wipe(&self) {
+        for n in &self.nodes {
+            n.mem.wipe();
+        }
+    }
+
+    /// Raw register peek without an endpoint (tests/diagnostics only).
+    pub fn peek(&self, a: Addr) -> u64 {
+        self.node(a.node())
+            .mem
+            .word(a)
+            .load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domain_construction() {
+        let d = RdmaDomain::new(3, 256, DomainConfig::counted());
+        assert_eq!(d.num_nodes(), 3);
+        for i in 0..3 {
+            assert_eq!(d.node(i).mem.node(), i);
+        }
+    }
+
+    #[test]
+    fn endpoints_have_independent_metrics() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let e1 = d.endpoint(0);
+        let e2 = d.endpoint(0);
+        let a = e1.alloc(1);
+        e1.write(a, 1);
+        assert_eq!(e1.metrics.snapshot().local_write, 1);
+        assert_eq!(e2.metrics.snapshot().local_write, 0);
+    }
+
+    #[test]
+    fn wipe_clears_registers() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let e = d.endpoint(1);
+        let a = e.alloc(1);
+        e.write(a, 42);
+        d.wipe();
+        assert_eq!(d.peek(a), 0);
+    }
+}

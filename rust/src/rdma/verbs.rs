@@ -1,0 +1,327 @@
+//! Process-facing verb API: the paper's six register operations.
+//!
+//! Section 2 of the paper gives each register three local operations
+//! (`Read`, `Write`, `CAS`) and three remote ones (`rRead`, `rWrite`,
+//! `rCAS`). Locality is a relation between processes and registers: local
+//! operations are *enabled* only for co-located processes, while remote
+//! operations are enabled for everyone (a co-located process issuing a
+//! remote verb takes the **loopback** path through its own NIC). An
+//! [`Endpoint`] enforces exactly this enabled-operation discipline —
+//! calling a local op on a remote register panics, because in the paper's
+//! model such an access does not exist.
+
+use std::sync::atomic::Ordering::{Acquire, Release, SeqCst};
+use std::sync::Arc;
+
+use super::addr::{Addr, NodeId};
+use super::metrics::{OpKind, ProcMetrics};
+use super::RdmaDomain;
+
+/// A process's handle onto the RDMA domain: its node identity, its
+/// operation metrics, and the verb implementations.
+///
+/// Cloning an `Endpoint` shares the metrics (same logical process);
+/// use [`RdmaDomain::endpoint`] for a fresh process identity.
+#[derive(Clone)]
+pub struct Endpoint {
+    domain: Arc<RdmaDomain>,
+    node: NodeId,
+    pub metrics: Arc<ProcMetrics>,
+}
+
+impl Endpoint {
+    pub(super) fn new(domain: Arc<RdmaDomain>, node: NodeId, metrics: Arc<ProcMetrics>) -> Self {
+        Endpoint {
+            domain,
+            node,
+            metrics,
+        }
+    }
+
+    /// The node this process runs on.
+    #[inline]
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    pub fn domain(&self) -> &Arc<RdmaDomain> {
+        &self.domain
+    }
+
+    /// Locality of a register w.r.t. this process (paper §2).
+    #[inline]
+    pub fn is_local(&self, a: Addr) -> bool {
+        a.node() == self.node
+    }
+
+    /// Allocate `words` consecutive registers on this process's own node
+    /// (e.g. an MCS descriptor, which must be local so waiting is a local
+    /// spin).
+    pub fn alloc(&self, words: u32) -> Addr {
+        self.domain.node(self.node).mem.alloc(words)
+    }
+
+    #[inline]
+    fn assert_local(&self, a: Addr, op: &str) {
+        assert!(
+            self.is_local(a),
+            "local op {op} on remote register {a:?} from node {}: \
+             not an enabled operation (paper §2)",
+            self.node
+        );
+    }
+
+    // ---- local operations (traditional memory subsystem, no NIC) ----
+
+    /// Local atomic load. Enabled only for local registers.
+    #[inline]
+    pub fn read(&self, a: Addr) -> u64 {
+        self.assert_local(a, "Read");
+        self.metrics.record(OpKind::LocalRead);
+        self.domain.node(self.node).mem.word(a).load(SeqCst)
+    }
+
+    /// Local atomic store. Enabled only for local registers.
+    #[inline]
+    pub fn write(&self, a: Addr, v: u64) {
+        self.assert_local(a, "Write");
+        self.metrics.record(OpKind::LocalWrite);
+        self.domain.node(self.node).mem.word(a).store(v, SeqCst);
+    }
+
+    /// Local compare-and-swap; returns the observed value (CAS succeeded
+    /// iff the return equals `expected`). Enabled only for local
+    /// registers. Executed by the CPU — atomic with every other *local*
+    /// access, but per Table 1 **not** with a concurrent NIC-serialized
+    /// remote RMW (that race lives in [`super::nic::Nic::rmw_cas`]).
+    #[inline]
+    pub fn cas(&self, a: Addr, expected: u64, swap: u64) -> u64 {
+        self.assert_local(a, "CAS");
+        self.metrics.record(OpKind::LocalCas);
+        match self
+            .domain
+            .node(self.node)
+            .mem
+            .word(a)
+            .compare_exchange(expected, swap, SeqCst, SeqCst)
+        {
+            Ok(prev) => prev,
+            Err(prev) => prev,
+        }
+    }
+
+    /// Local **descriptor-field** store with Release ordering (perf
+    /// fast path — EXPERIMENTS.md §Perf). The paper's SC assumption is
+    /// required for the *protocol registers* (victim, cohort tails,
+    /// lock words), which keep SeqCst; MCS descriptor fields only need
+    /// the release→acquire happens-before chain through the (SeqCst)
+    /// tail/link operations. On x86 this turns an `xchg` into a `mov`.
+    #[inline]
+    pub fn write_desc(&self, a: Addr, v: u64) {
+        self.assert_local(a, "Write");
+        self.metrics.record(OpKind::LocalWrite);
+        self.domain.node(self.node).mem.word(a).store(v, Release);
+    }
+
+    /// Local descriptor-field load with Acquire ordering (pairs with
+    /// [`Endpoint::write_desc`] / the predecessor's pass write).
+    #[inline]
+    pub fn read_desc(&self, a: Addr) -> u64 {
+        self.assert_local(a, "Read");
+        self.metrics.record(OpKind::LocalRead);
+        self.domain.node(self.node).mem.word(a).load(Acquire)
+    }
+
+    // ---- remote operations (through the target node's NIC) ----
+
+    /// One-sided RDMA read. Loopback when the register is local.
+    pub fn r_read(&self, a: Addr) -> u64 {
+        let tgt = self.domain.node(a.node());
+        let loopback = self.is_local(a);
+        self.metrics.record(OpKind::RemoteRead);
+        let _g = tgt.nic.admit(
+            OpKind::RemoteRead,
+            loopback,
+            &self.domain.cfg.latency,
+            self.domain.cfg.time_mode,
+            &self.metrics,
+        );
+        tgt.mem.word(a).load(SeqCst)
+    }
+
+    /// One-sided RDMA write. Loopback when the register is local.
+    pub fn r_write(&self, a: Addr, v: u64) {
+        let tgt = self.domain.node(a.node());
+        let loopback = self.is_local(a);
+        self.metrics.record(OpKind::RemoteWrite);
+        let _g = tgt.nic.admit(
+            OpKind::RemoteWrite,
+            loopback,
+            &self.domain.cfg.latency,
+            self.domain.cfg.time_mode,
+            &self.metrics,
+        );
+        tgt.mem.word(a).store(v, SeqCst);
+    }
+
+    /// RDMA compare-and-swap, executed by the target NIC with the
+    /// configured [`super::nic::AtomicityMode`]. Returns the observed
+    /// value. Loopback when the register is local.
+    pub fn r_cas(&self, a: Addr, expected: u64, swap: u64) -> u64 {
+        let tgt = self.domain.node(a.node());
+        let loopback = self.is_local(a);
+        self.metrics.record(OpKind::RemoteCas);
+        let _g = tgt.nic.admit(
+            OpKind::RemoteCas,
+            loopback,
+            &self.domain.cfg.latency,
+            self.domain.cfg.time_mode,
+            &self.metrics,
+        );
+        tgt.nic.rmw_cas(
+            tgt.mem.word(a),
+            expected,
+            swap,
+            self.domain.cfg.atomicity,
+            self.domain.cfg.hazard_ns,
+        )
+    }
+
+    // ---- locality-dispatched helpers ----
+    //
+    // Several baseline locks are "class-blind": every participant runs the
+    // same code and local processes are forced through loopback (the naive
+    // design the paper argues against). Those use r_* directly. qplock
+    // instead instantiates distinct local/remote code paths; these helpers
+    // let shared algorithm skeletons pick the *enabled, cheapest* op.
+
+    /// Read using the cheapest enabled op: local load if co-located,
+    /// otherwise rRead.
+    #[inline]
+    pub fn read_best(&self, a: Addr) -> u64 {
+        if self.is_local(a) {
+            self.read(a)
+        } else {
+            self.r_read(a)
+        }
+    }
+
+    /// Write using the cheapest enabled op.
+    #[inline]
+    pub fn write_best(&self, a: Addr, v: u64) {
+        if self.is_local(a) {
+            self.write(a, v)
+        } else {
+            self.r_write(a, v)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::{DomainConfig, RdmaDomain};
+
+    fn domain2() -> Arc<RdmaDomain> {
+        RdmaDomain::new(2, 1024, DomainConfig::counted())
+    }
+
+    #[test]
+    fn local_rw_roundtrip() {
+        let d = domain2();
+        let ep = d.endpoint(0);
+        let a = ep.alloc(1);
+        ep.write(a, 77);
+        assert_eq!(ep.read(a), 77);
+        let s = ep.metrics.snapshot();
+        assert_eq!(s.local_write, 1);
+        assert_eq!(s.local_read, 1);
+        assert_eq!(s.remote_total(), 0);
+    }
+
+    #[test]
+    fn remote_rw_roundtrip_counts_remote_ops() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep0.alloc(1);
+        ep1.r_write(a, 123);
+        assert_eq!(ep1.r_read(a), 123);
+        assert_eq!(ep0.read(a), 123); // visible locally
+        let s = ep1.metrics.snapshot();
+        assert_eq!(s.remote_write, 1);
+        assert_eq!(s.remote_read, 1);
+        assert_eq!(s.loopback, 0);
+    }
+
+    #[test]
+    fn loopback_detected_and_counted() {
+        let d = domain2();
+        let ep = d.endpoint(0);
+        let a = ep.alloc(1);
+        ep.r_write(a, 5);
+        assert_eq!(ep.r_read(a), 5);
+        assert_eq!(ep.metrics.snapshot().loopback, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not an enabled operation")]
+    fn local_read_of_remote_register_panics() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep1.alloc(1);
+        ep0.read(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "not an enabled operation")]
+    fn local_cas_of_remote_register_panics() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep1.alloc(1);
+        ep0.cas(a, 0, 1);
+    }
+
+    #[test]
+    fn cas_semantics_local_and_remote() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep0.alloc(1);
+        assert_eq!(ep0.cas(a, 0, 10), 0);
+        assert_eq!(ep0.cas(a, 0, 20), 10); // failed CAS returns observed
+        assert_eq!(ep1.r_cas(a, 10, 30), 10);
+        assert_eq!(ep1.r_cas(a, 10, 40), 30);
+        assert_eq!(ep0.read(a), 30);
+    }
+
+    #[test]
+    fn read_best_dispatches_by_locality() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep0.alloc(1);
+        ep0.write(a, 9);
+        assert_eq!(ep0.read_best(a), 9);
+        assert_eq!(ep1.read_best(a), 9);
+        assert_eq!(ep0.metrics.snapshot().local_read, 1);
+        assert_eq!(ep1.metrics.snapshot().remote_read, 1);
+    }
+
+    #[test]
+    fn net_ns_attribution_follows_latency_model() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let ep1 = d.endpoint(1);
+        let ep0 = d.endpoint(0);
+        let a = ep0.alloc(1);
+        ep1.r_read(a);
+        ep1.r_cas(a, 0, 1);
+        let lat = &d.cfg.latency;
+        assert_eq!(
+            ep1.metrics.snapshot().net_ns,
+            lat.remote_read_ns + lat.remote_cas_ns
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! PJRT runtime bridge (system S12): load AOT HLO-text artifacts and
+//! execute them from the Rust hot path. Python never runs here.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are produced once by `make artifacts`
+//! (`python/compile/aot.py`); each compiled executable is wrapped in an
+//! [`XlaEngine`] and reused for every request.
+
+pub mod param_server;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use param_server::ParamServer;
+
+/// A PJRT client plus the executables loaded into it. One per process.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// CPU PJRT client (the plugin the `xla` crate ships against).
+    pub fn cpu() -> Result<XlaRuntime> {
+        Ok(XlaRuntime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<XlaEngine> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(XlaEngine {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// One compiled XLA executable (one model entry point).
+pub struct XlaEngine {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl XlaEngine {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 tensor inputs (`(data, dims)` pairs); returns the
+    /// output tuple's parts as flat f32 vectors. The artifacts are lowered
+    /// with `return_tuple=True`, so the single output is always a tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    Ok(lit)
+                } else {
+                    lit.reshape(dims).context("reshaping input literal")
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing XLA computation")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need artifacts live in
+    // rust/tests/runtime_integration.rs (artifacts are built by `make
+    // artifacts`, not by cargo). Here: client creation only.
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn loading_missing_artifact_fails_cleanly() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let err = rt.load("/nonexistent/file.hlo.txt");
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Lock-protected parameter server — the end-to-end workload (E9).
+//!
+//! Shared state: an `(m, n)` f32 matrix updated via the AOT-compiled
+//! `step` executable (decayed rank-k update + convergence metric) and
+//! read via `apply` (probe multiplication). All mutation happens inside
+//! a critical section of whichever [`crate::locks::SharedLock`] the
+//! experiment selects; the [`ParamServer`] itself is lock-agnostic so
+//! E9 can compare qplock against the baselines with identical compute.
+//!
+//! Threading: the `xla` crate's PJRT handles are `Rc`-based and not
+//! `Send`, so the server owns a dedicated **engine thread** that holds
+//! the client, the compiled executables, and the state; simulated
+//! processes talk to it over an mpsc channel. The channel hop is ~1 µs
+//! against a ~ms XLA step, and requests are serialized by the lock
+//! under test anyway. Python never runs here — the artifacts were
+//! compiled once by `make artifacts`.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::XlaRuntime;
+use crate::util::prng::Prng;
+
+/// Dimensions must match the AOT artifacts (see `artifacts/manifest.txt`).
+#[derive(Clone, Copy, Debug)]
+pub struct ParamShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub c: usize,
+}
+
+impl Default for ParamShape {
+    fn default() -> Self {
+        // aot.py defaults.
+        ParamShape {
+            m: 256,
+            n: 256,
+            k: 8,
+            c: 4,
+        }
+    }
+}
+
+enum Request {
+    Step {
+        u: Vec<f32>,
+        v: Vec<f32>,
+        reply: mpsc::Sender<Result<f32>>,
+    },
+    Apply {
+        x: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    StateMsq {
+        reply: mpsc::Sender<f32>,
+    },
+    Shutdown,
+}
+
+/// The protected shared state plus its compiled compute, behind the
+/// engine thread.
+pub struct ParamServer {
+    tx: mpsc::Sender<Request>,
+    worker: Option<JoinHandle<()>>,
+    shape: ParamShape,
+}
+
+impl ParamServer {
+    /// Load both artifacts from `dir` (normally `artifacts/`) into a
+    /// fresh engine thread. `_rt` is accepted for API symmetry but the
+    /// engine thread creates its own client (PJRT handles cannot cross
+    /// threads).
+    pub fn load(_rt: &XlaRuntime, dir: &str, shape: ParamShape) -> Result<ParamServer> {
+        let dir = dir.to_string();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::spawn(move || {
+            let setup = (|| -> Result<_> {
+                let rt = XlaRuntime::cpu()?;
+                let step = rt
+                    .load(format!("{dir}/step.hlo.txt"))
+                    .context("loading step artifact (run `make artifacts`)")?;
+                let apply = rt
+                    .load(format!("{dir}/apply.hlo.txt"))
+                    .context("loading apply artifact")?;
+                Ok((rt, step, apply))
+            })();
+            let (_rt, step_engine, apply_engine) = match setup {
+                Ok(x) => {
+                    let _ = ready_tx.send(Ok(()));
+                    x
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let mut state = vec![0f32; shape.m * shape.n];
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Step { u, v, reply } => {
+                        let res = step_engine
+                            .run_f32(&[
+                                (&state, &[shape.m as i64, shape.n as i64]),
+                                (&u, &[shape.m as i64, shape.k as i64]),
+                                (&v, &[shape.n as i64, shape.k as i64]),
+                            ])
+                            .and_then(|outs| {
+                                anyhow::ensure!(outs.len() == 2, "step returns (state, metric)");
+                                state.copy_from_slice(&outs[0]);
+                                Ok(outs[1][0])
+                            });
+                        let _ = reply.send(res);
+                    }
+                    Request::Apply { x, reply } => {
+                        let res = apply_engine
+                            .run_f32(&[
+                                (&state, &[shape.m as i64, shape.n as i64]),
+                                (&x, &[shape.n as i64, shape.c as i64]),
+                            ])
+                            .map(|outs| outs.into_iter().next().unwrap());
+                        let _ = reply.send(res);
+                    }
+                    Request::StateMsq { reply } => {
+                        let msq =
+                            state.iter().map(|x| x * x).sum::<f32>() / state.len() as f32;
+                        let _ = reply.send(msq);
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .context("engine thread died during setup")??;
+        Ok(ParamServer {
+            tx,
+            worker: Some(worker),
+            shape,
+        })
+    }
+
+    pub fn shape(&self) -> ParamShape {
+        self.shape
+    }
+
+    /// One protected write: `S ← decay·S + lr·U·Vᵀ`; returns the
+    /// convergence metric `mean(S'^2)`. **Caller must hold the lock
+    /// under test** — the engine thread serializes requests but is not
+    /// the synchronization mechanism being evaluated.
+    pub fn step(&self, u: &[f32], v: &[f32]) -> Result<f32> {
+        assert_eq!(u.len(), self.shape.m * self.shape.k);
+        assert_eq!(v.len(), self.shape.n * self.shape.k);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Step {
+                u: u.to_vec(),
+                v: v.to_vec(),
+                reply,
+            })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread dropped the request")?
+    }
+
+    /// One protected read: `Y = S @ X`. Caller must hold the lock.
+    pub fn apply(&self, x: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), self.shape.n * self.shape.c);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Apply { x: x.to_vec(), reply })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread dropped the request")?
+    }
+
+    /// Deterministic per-step synthetic "gradient sketch" factors.
+    pub fn synth_factors(&self, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let sh = self.shape;
+        let mut rng = Prng::seed_from(seed);
+        let mut gauss = move || {
+            // Irwin–Hall(6) approximation of a Gaussian; plenty for a
+            // workload generator.
+            (0..6).map(|_| rng.f64()).sum::<f64>() as f32 / 3.0 - 1.0
+        };
+        let u: Vec<f32> = (0..sh.m * sh.k).map(|_| gauss()).collect();
+        let v: Vec<f32> = (0..sh.n * sh.k).map(|_| gauss()).collect();
+        (u, v)
+    }
+
+    /// Frobenius-mean-square of the current state (readback for
+    /// assertions and logging).
+    pub fn state_msq(&self) -> f32 {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::StateMsq { reply })
+            .expect("engine thread gone");
+        rx.recv().expect("engine thread dropped the request")
+    }
+}
+
+impl Drop for ParamServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

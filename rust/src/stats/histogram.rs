@@ -1,0 +1,221 @@
+//! Log-bucketed nanosecond histogram (HdrHistogram-flavored, tiny).
+//!
+//! Buckets are `[2^k, 2^(k+1))` with 16 linear sub-buckets each, giving
+//! ≲ 6.25% relative error across 1 ns … ~18 s — plenty for lock
+//! acquisition latencies — in a fixed 1024-slot table with `u64` counts.
+//! Recording is two shifts and an increment; merging is element-wise.
+
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS; // 16 sub-buckets per octave
+const OCTAVES: usize = 64 - SUB_BITS as usize;
+const SLOTS: usize = OCTAVES * SUB;
+
+/// Fixed-size latency histogram.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Box<[u64; SLOTS]>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: Box::new([0; SLOTS]),
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(v: u64) -> usize {
+        let v = v.max(1);
+        let oct = 63 - v.leading_zeros();
+        if oct < SUB_BITS {
+            // Values below 16 land in the first linear region.
+            return v as usize;
+        }
+        let sub = ((v >> (oct - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        ((oct - SUB_BITS + 1) as usize) * SUB + sub
+    }
+
+    /// Representative (lower-bound) value of a slot.
+    fn slot_value(slot: usize) -> u64 {
+        if slot < SUB {
+            return slot as u64;
+        }
+        let oct = (slot / SUB - 1) as u32 + SUB_BITS;
+        let sub = (slot % SUB) as u64;
+        (1u64 << oct) | (sub << (oct - SUB_BITS))
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::slot(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q ∈ [0, 1]` (lower-bound of the containing
+    /// bucket; ≤ 6.25% relative error).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::slot_value(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram{{n={} mean={:.0} p50={} p95={} p99={} max={}}}",
+            self.total,
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.p99(),
+            self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_count() {
+        let mut h = Histogram::new();
+        for v in [1u64, 10, 100, 1000, 10_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 10_000);
+        assert!((h.mean() - 2222.2).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50() as f64;
+        assert!((p50 - 5_000.0).abs() / 5_000.0 < 0.07, "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.07, "p99={p99}");
+    }
+
+    #[test]
+    fn uniform_bucket_roundtrip() {
+        // slot_value(slot(v)) must be ≤ v with ≤ 6.25% error.
+        for v in [1u64, 5, 17, 100, 1_000, 123_456, 10_000_000_000] {
+            let s = Histogram::slot(v);
+            let lo = Histogram::slot_value(s);
+            assert!(lo <= v, "v={v} lo={lo}");
+            assert!(
+                (v - lo) as f64 / v as f64 <= 0.0625 + 1e-9,
+                "v={v} lo={lo}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 1..=100 {
+            a.record(v);
+        }
+        for v in 101..=200 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), 200);
+        assert_eq!(a.min(), 1);
+    }
+
+    #[test]
+    fn zero_value_is_safe() {
+        let mut h = Histogram::new();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

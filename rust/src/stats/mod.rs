@@ -1,0 +1,126 @@
+//! Measurement utilities (system S10): log-bucketed latency histograms,
+//! percentile extraction, Jain's fairness index, and streaming
+//! mean/variance. No external crates — the vendored registry is minimal
+//! — and nothing here allocates on the recording path.
+
+pub mod histogram;
+
+pub use histogram::Histogram;
+
+/// Jain's fairness index over per-process allocation counts:
+/// `(Σx)² / (n · Σx²)` — 1.0 is perfectly fair, `1/n` is maximally
+/// unfair. The standard metric for lock-acquisition fairness (used by
+/// experiment E5).
+pub fn jain_index(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().map(|&x| x as f64).sum();
+    let sq: f64 = xs.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (n * sq)
+}
+
+/// Streaming mean/variance (Welford). Used by the bench harness for
+/// repetition statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Relative standard deviation (stddev / |mean|), the bench
+    /// harness's convergence criterion.
+    pub fn rsd(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev() / self.mean.abs()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_perfectly_fair() {
+        assert!((jain_index(&[10, 10, 10, 10]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_maximally_unfair() {
+        let n = 8;
+        let mut xs = vec![0u64; n];
+        xs[0] = 100;
+        assert!((jain_index(&xs) - 1.0 / n as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_monotone_in_imbalance() {
+        let fair = jain_index(&[50, 50]);
+        let skew = jain_index(&[90, 10]);
+        let worse = jain_index(&[99, 1]);
+        assert!(fair > skew && skew > worse);
+    }
+
+    #[test]
+    fn jain_edge_cases() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of the classic dataset is 32/7.
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn welford_single_sample() {
+        let mut w = Welford::default();
+        w.push(3.0);
+        assert_eq!(w.variance(), 0.0);
+        assert_eq!(w.mean(), 3.0);
+    }
+}

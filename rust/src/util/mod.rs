@@ -1,0 +1,42 @@
+//! Shared utilities: PRNGs, calibrated busy-wait, cache-line padding.
+
+pub mod prng;
+pub mod spin;
+
+/// Pads a value to a 64-byte cache line to prevent false sharing between
+/// adjacent hot words (e.g. per-process metrics counters).
+#[repr(align(64))]
+#[derive(Default, Debug)]
+pub struct CachePadded<T>(pub T);
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_padded_is_64_aligned() {
+        assert_eq!(std::mem::align_of::<CachePadded<u64>>(), 64);
+        assert!(std::mem::size_of::<CachePadded<u64>>() >= 64);
+    }
+
+    #[test]
+    fn cache_padded_derefs() {
+        let x = CachePadded(41u64);
+        assert_eq!(*x + 1, 42);
+    }
+}

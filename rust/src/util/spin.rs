@@ -1,0 +1,136 @@
+//! Calibrated nanosecond-scale busy waiting.
+//!
+//! The RDMA latency model injects sub-microsecond delays (a remote verb is
+//! ~1.5 µs; OS sleep granularity is far too coarse and would also yield the
+//! core, distorting contention behavior). We busy-wait instead. For very
+//! short waits a pause-loop calibrated against `Instant` avoids the cost of
+//! reading the clock in a tight loop.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Number of `spin_loop` iterations per nanosecond, calibrated once.
+fn spins_per_ns() -> f64 {
+    static CAL: OnceLock<f64> = OnceLock::new();
+    *CAL.get_or_init(|| {
+        // Warm up, then time a large fixed spin count.
+        let iters: u64 = 2_000_000;
+        for _ in 0..10_000 {
+            std::hint::spin_loop();
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::spin_loop();
+        }
+        let ns = t0.elapsed().as_nanos().max(1) as f64;
+        (iters as f64 / ns).max(0.01)
+    })
+}
+
+/// Busy-wait for approximately `ns` nanoseconds.
+///
+/// Short waits (< 2 µs) use the calibrated pause loop; longer waits poll
+/// `Instant` so drift cannot accumulate, and **yield the OS scheduler**
+/// each poll. Yielding matters: on small hosts (this testbed has a single
+/// core) a non-yielding 2 ms spin would starve every other simulated
+/// process for a full timeslice, destroying the concurrency the
+/// experiments are meant to exercise. `sched_yield` costs ~1 µs, well
+/// under the modeled fabric latencies.
+#[inline]
+pub fn spin_wait_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    if ns < 2_000 {
+        let iters = (ns as f64 * spins_per_ns()) as u64;
+        for _ in 0..iters {
+            std::hint::spin_loop();
+        }
+    } else {
+        let deadline = Instant::now() + Duration::from_nanos(ns);
+        while Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Exponential backoff helper for contended spin loops.
+#[derive(Debug)]
+pub struct Backoff {
+    cur: u32,
+    max: u32,
+}
+
+impl Backoff {
+    pub fn new(max: u32) -> Self {
+        Backoff { cur: 1, max }
+    }
+
+    /// Spin for the current backoff window, then double it (capped). Once
+    /// the cap is reached, also yield the OS scheduler — essential when
+    /// simulated processes outnumber host cores.
+    #[inline]
+    pub fn snooze(&mut self) {
+        for _ in 0..self.cur {
+            std::hint::spin_loop();
+        }
+        if self.cur >= self.max {
+            std::thread::yield_now();
+        }
+        self.cur = (self.cur * 2).min(self.max);
+    }
+
+    #[inline]
+    pub fn reset(&mut self) {
+        self.cur = 1;
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff::new(256)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_wait_returns_immediately() {
+        let t0 = Instant::now();
+        spin_wait_ns(0);
+        assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn long_wait_is_roughly_right() {
+        let t0 = Instant::now();
+        spin_wait_ns(3_000_000); // 3 ms — Instant-polled path
+        let el = t0.elapsed();
+        assert!(el >= Duration::from_millis(2), "elapsed {el:?}");
+        assert!(el < Duration::from_millis(60), "elapsed {el:?}");
+    }
+
+    #[test]
+    fn short_wait_not_wildly_off() {
+        // Calibration tolerance is loose on shared machines; just check a
+        // 1 µs wait doesn't take milliseconds.
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            spin_wait_ns(1_000);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn backoff_caps() {
+        let mut b = Backoff::new(8);
+        for _ in 0..10 {
+            b.snooze();
+        }
+        assert!(b.cur <= 8);
+        b.reset();
+        assert_eq!(b.cur, 1);
+    }
+}

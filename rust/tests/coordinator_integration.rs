@@ -1,0 +1,130 @@
+//! Coordinator-layer integration: the lock service under concurrent
+//! multi-shard load, workload think times, duration mode, and the
+//! experiment harness end to end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qplock::bench::{run_experiment, Scale};
+use qplock::coordinator::{run_workload, Cluster, CsWork, LockService, Workload};
+use qplock::locks::make_lock;
+use qplock::rdma::DomainConfig;
+
+#[test]
+fn service_multi_shard_concurrent_clients() {
+    let cluster = Cluster::new(3, 1 << 18, DomainConfig::counted());
+    let svc = Arc::new(LockService::new(&cluster.domain, "qplock", 8));
+    let shards = ["a", "b", "c", "d"];
+    for s in &shards {
+        svc.ensure_lock(s);
+    }
+    let hits = Arc::new(
+        (0..shards.len())
+            .map(|_| std::sync::atomic::AtomicU64::new(0))
+            .collect::<Vec<_>>(),
+    );
+    let mut ts = vec![];
+    for node in 0..3u16 {
+        for _ in 0..2 {
+            let svc = Arc::clone(&svc);
+            let hits = Arc::clone(&hits);
+            ts.push(std::thread::spawn(move || {
+                let mut handles: Vec<_> =
+                    shards.iter().map(|s| svc.client(s, node)).collect();
+                for _ in 0..100 {
+                    for (i, h) in handles.iter_mut().enumerate() {
+                        h.lock();
+                        let v = hits[i].load(std::sync::atomic::Ordering::Relaxed);
+                        hits[i].store(v + 1, std::sync::atomic::Ordering::Relaxed);
+                        h.unlock();
+                    }
+                }
+            }));
+        }
+    }
+    for t in ts {
+        t.join().unwrap();
+    }
+    for h in hits.iter() {
+        assert_eq!(h.load(std::sync::atomic::Ordering::Relaxed), 600);
+    }
+    assert_eq!(svc.registry().len(), 4);
+}
+
+#[test]
+fn mixed_algorithms_in_one_service() {
+    let cluster = Cluster::new(2, 1 << 16, DomainConfig::counted());
+    let svc = LockService::new(&cluster.domain, "qplock", 8);
+    svc.create_lock("q", "qplock", 0, 4, 8);
+    svc.create_lock("m", "rdma-mcs", 1, 4, 8);
+    svc.create_lock("r", "rpc-server", 0, 4, 8);
+    for name in ["q", "m", "r"] {
+        let mut h = svc.client(name, 1);
+        h.lock();
+        h.unlock();
+    }
+    let reg = svc.registry();
+    assert_eq!(reg.len(), 3);
+    assert!(reg.iter().any(|(n, _, a)| n == "m" && *a == "rdma-mcs"));
+}
+
+#[test]
+fn think_times_reduce_contention_but_preserve_counts() {
+    let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+    let lock = make_lock("qplock", &c.domain, 0, 4, 8);
+    let procs = c.spread_procs(4, 2, 0);
+    let wl = Workload::cycles(100).with_think_ns(20_000).with_seed(99);
+    let r = run_workload(&c.domain, &lock, &procs, &wl);
+    assert_eq!(r.total_acquisitions(), 400);
+    assert_eq!(r.violations, 0);
+}
+
+#[test]
+fn cs_payload_spin_is_reflected_in_cycle_latency() {
+    let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+    let lock = make_lock("qplock", &c.domain, 0, 2, 8);
+    let procs = c.spread_procs(2, 1, 0);
+    let wl = Workload::cycles(100).with_cs(CsWork::SpinNs(50_000));
+    let r = run_workload(&c.domain, &lock, &procs, &wl);
+    for p in &r.procs {
+        assert!(
+            p.cycle_ns.p50() >= 40_000,
+            "CS spin not visible: p50={}",
+            p.cycle_ns.p50()
+        );
+    }
+}
+
+#[test]
+fn duration_mode_window_is_common() {
+    let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+    let lock = make_lock("qplock", &c.domain, 0, 4, 8);
+    let procs = c.spread_procs(4, 2, 0);
+    let wl = Workload::timed(Duration::from_millis(60), CsWork::None);
+    let r = run_workload(&c.domain, &lock, &procs, &wl);
+    assert!(r.wall < Duration::from_secs(8));
+    assert!(r.total_acquisitions() > 0);
+}
+
+#[test]
+fn experiment_harness_e2_and_e8_run_end_to_end() {
+    // These two are deterministic (counted mode / model checking) and
+    // fast; they pin the harness plumbing.
+    let out = run_experiment("e2", Scale::Quick);
+    assert_eq!(out.tables.len(), 1);
+    assert!(out.tables[0].rows() >= 6);
+    let out = run_experiment("e8", Scale::Quick);
+    assert!(out.tables[0].rows() >= 5);
+}
+
+#[test]
+fn experiment_e5_budget_sweep_shape() {
+    let out = run_experiment("e5", Scale::Quick);
+    let t = &out.tables[0];
+    assert!(t.rows() >= 2);
+    // Jain column parses as a probability.
+    for r in 0..t.rows() {
+        let jain: f64 = t.cell(r, 2).parse().unwrap();
+        assert!((0.0..=1.0).contains(&jain));
+    }
+}

@@ -1,0 +1,187 @@
+//! Randomized property tests (proptest is not in the vendored
+//! registry; generators run on the repo's own deterministic PRNG, with
+//! every failure reproducible from the printed seed).
+//!
+//! Invariants covered: coordinator routing/placement, lock-protected
+//! state under randomized schedules for random topologies, histogram
+//! quantile bounds, Jain index bounds, address packing, and the model
+//! checker's qplock battery over randomized (n, B) configurations.
+
+use std::sync::Arc;
+
+use qplock::coordinator::{run_workload, Cluster, CsWork, Workload};
+use qplock::locks::make_lock;
+use qplock::rdma::{Addr, DomainConfig};
+use qplock::stats::{jain_index, Histogram};
+use qplock::util::prng::Prng;
+
+const CASES: u64 = 24;
+
+fn seeds() -> impl Iterator<Item = u64> {
+    (0..CASES).map(|i| 0xC0FFEE ^ (i * 0x9E3779B9))
+}
+
+#[test]
+fn prop_addr_pack_roundtrip() {
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        for _ in 0..500 {
+            let node = rng.below(u16::MAX as u64 + 1) as u16;
+            let word = rng.below(u32::MAX as u64 + 1) as u32;
+            let a = Addr::new(node, word);
+            assert_eq!(a.node(), node, "seed {seed}");
+            assert_eq!(a.word(), word, "seed {seed}");
+            assert_eq!(Addr::from_bits(a.to_bits()), a, "seed {seed}");
+            assert_eq!(a.is_null(), node == 0 && word == 0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_bounded_by_min_max() {
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let mut h = Histogram::new();
+        let mut min = u64::MAX;
+        let mut max = 0u64;
+        let n = 1 + rng.below(2_000);
+        for _ in 0..n {
+            let shift = rng.range(1, 40);
+            let v = rng.below(1 << shift);
+            h.record(v);
+            min = min.min(v);
+            max = max.max(v);
+        }
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let x = h.quantile(q);
+            assert!(x >= min && x <= max, "seed {seed} q={q}: {x} ∉ [{min},{max}]");
+        }
+        assert_eq!(h.count(), n, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_histogram_quantile_monotone_in_q() {
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let mut h = Histogram::new();
+        for _ in 0..1_000 {
+            h.record(rng.below(1_000_000));
+        }
+        let mut prev = 0;
+        for i in 0..=20 {
+            let x = h.quantile(i as f64 / 20.0);
+            assert!(x >= prev, "seed {seed}: quantile not monotone");
+            prev = x;
+        }
+    }
+}
+
+#[test]
+fn prop_jain_bounds_and_scale_invariance() {
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let n = 2 + rng.below(16) as usize;
+        let xs: Vec<u64> = (0..n).map(|_| rng.below(1_000)).collect();
+        let j = jain_index(&xs);
+        assert!(
+            (1.0 / n as f64 - 1e-9..=1.0 + 1e-9).contains(&j),
+            "seed {seed}: jain {j} out of [1/{n}, 1]"
+        );
+        // Scale invariance.
+        let xs3: Vec<u64> = xs.iter().map(|x| x * 3).collect();
+        let j3 = jain_index(&xs3);
+        assert!((j - j3).abs() < 1e-9, "seed {seed}: {j} vs {j3}");
+    }
+}
+
+#[test]
+fn prop_random_topologies_protect_shared_state() {
+    // Random node counts, placements, algorithms, iteration counts: the
+    // lock-protected non-atomic RMW on a shared cell must never lose an
+    // update, and per-class op discipline must hold for qplock.
+    let algos = ["qplock", "rdma-mcs", "spin-rcas", "cohort-tas"];
+    for seed in seeds().take(10) {
+        let mut rng = Prng::seed_from(seed);
+        let nodes = 2 + rng.below(3) as u16;
+        let nprocs = 2 + rng.below(5) as u32;
+        let nlocal = rng.below(nprocs as u64 + 1) as u32;
+        let algo = *rng.pick(&algos);
+        let iters = 50 + rng.below(150);
+        let budget = 1 + rng.below(16);
+
+        let c = Cluster::new(nodes, 1 << 18, DomainConfig::counted());
+        let lock = make_lock(algo, &c.domain, 0, nprocs, budget);
+        let procs = c.spread_procs(nprocs, nlocal, 0);
+
+        // Shared cell + non-atomic RMW in the CS.
+        let cell = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let cell2 = Arc::clone(&cell);
+        let wl = Workload::cycles(iters)
+            .with_seed(seed)
+            .with_cs(CsWork::Callback(Arc::new(move |_pid| {
+                let v = cell2.load(std::sync::atomic::Ordering::Relaxed);
+                std::hint::spin_loop();
+                cell2.store(v + 1, std::sync::atomic::Ordering::Relaxed);
+            })));
+        let r = run_workload(&c.domain, &lock, &procs, &wl);
+        assert_eq!(r.violations, 0, "seed {seed} algo {algo}");
+        assert_eq!(
+            cell.load(std::sync::atomic::Ordering::Relaxed),
+            nprocs as u64 * iters,
+            "seed {seed} algo {algo}: lost updates"
+        );
+        if algo == "qplock" {
+            for p in &r.procs {
+                if p.class == qplock::locks::Class::Local {
+                    assert_eq!(p.ops.remote_total(), 0, "seed {seed}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_qplock_spec_battery_random_configs() {
+    // Random (n, B) within tractable bounds: the paper's properties must
+    // hold for every configuration, not just the hand-picked ones.
+    for seed in seeds().take(6) {
+        let mut rng = Prng::seed_from(seed);
+        let n = 2 + rng.below(2) as usize; // 2..=3
+        let b = 1 + rng.below(3) as u8; // 1..=3
+        let r = qplock::mc::check_all(
+            &qplock::mc::models::qplock_spec::QpSpec::new(n, b),
+            1 << 22,
+        );
+        assert!(!r.truncated, "seed {seed} n={n} B={b}");
+        assert!(
+            r.mutual_exclusion.holds()
+                && r.deadlock_free.holds()
+                && r.starvation_free.holds()
+                && r.dead_and_livelock_free.holds(),
+            "seed {seed} n={n} B={b}"
+        );
+    }
+}
+
+#[test]
+fn prop_spread_procs_always_well_formed() {
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let nodes = 1 + rng.below(5) as u16;
+        let c = Cluster::new(nodes, 1 << 10, DomainConfig::counted());
+        let n = 1 + rng.below(20) as u32;
+        let nlocal = rng.below(n as u64 + 1) as u32;
+        let procs = c.spread_procs(n, nlocal, 0);
+        assert_eq!(procs.len(), n as usize, "seed {seed}");
+        assert!(procs.iter().all(|p| p.node < nodes), "seed {seed}");
+        let locals = procs.iter().filter(|p| p.node == 0).count() as u32;
+        if nodes > 1 {
+            assert_eq!(locals, nlocal, "seed {seed}");
+        }
+        // pids unique and dense.
+        let mut pids: Vec<u32> = procs.iter().map(|p| p.pid).collect();
+        pids.sort_unstable();
+        assert_eq!(pids, (0..n).collect::<Vec<_>>(), "seed {seed}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration: AOT artifacts → PJRT load → execute, and the
+//! ParamServer on top. Requires `make artifacts` (the Makefile `test`
+//! target guarantees it).
+
+use qplock::runtime::{ParamServer, XlaRuntime};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/step.hlo.txt", artifacts_dir())).exists()
+}
+
+#[test]
+fn step_artifact_executes_and_matches_reference_math() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let rt = XlaRuntime::cpu().unwrap();
+    let engine = rt.load(format!("{}/step.hlo.txt", artifacts_dir())).unwrap();
+
+    // S = 0, U = e1 column pattern, V = ones → S' = lr · U·Vᵀ with
+    // decay irrelevant (S = 0). aot defaults: decay=0.99, lr=0.05.
+    let (m, n, k) = (256usize, 256usize, 8usize);
+    let s = vec![0f32; m * n];
+    let mut u = vec![0f32; m * k];
+    // u row i = [1, 0, 0, ...] so U·Vᵀ = broadcast of V's first column.
+    for i in 0..m {
+        u[i * k] = 1.0;
+    }
+    let v = vec![1f32; n * k];
+    let outs = engine
+        .run_f32(&[
+            (&s, &[m as i64, n as i64]),
+            (&u, &[m as i64, k as i64]),
+            (&v, &[n as i64, k as i64]),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 2, "(state, metric)");
+    let state = &outs[0];
+    assert_eq!(state.len(), m * n);
+    for &x in state.iter().take(64) {
+        assert!((x - 0.05).abs() < 1e-6, "expected lr*1, got {x}");
+    }
+    let metric = outs[1][0];
+    assert!((metric - 0.05 * 0.05).abs() < 1e-6, "metric {metric}");
+}
+
+#[test]
+fn apply_artifact_executes() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let rt = XlaRuntime::cpu().unwrap();
+    let engine = rt
+        .load(format!("{}/apply.hlo.txt", artifacts_dir()))
+        .unwrap();
+    let (m, n, c) = (256usize, 256usize, 4usize);
+    // S: 2.0 on the diagonal → Y = 2·X.
+    let mut s = vec![0f32; m * n];
+    for i in 0..m.min(n) {
+        s[i * n + i] = 2.0;
+    }
+    let x: Vec<f32> = (0..n * c).map(|i| (i % 7) as f32).collect();
+    let outs = engine
+        .run_f32(&[(&s, &[m as i64, n as i64]), (&x, &[n as i64, c as i64])])
+        .unwrap();
+    let y = &outs[0];
+    assert_eq!(y.len(), m * c);
+    for i in 0..y.len() {
+        assert!((y[i] - 2.0 * x[i]).abs() < 1e-5, "y[{i}]={} x={}", y[i], x[i]);
+    }
+}
+
+#[test]
+fn param_server_converges_like_the_model() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let rt = XlaRuntime::cpu().unwrap();
+    let ps = ParamServer::load(&rt, &artifacts_dir(), Default::default()).unwrap();
+    let (u, v) = ps.synth_factors(42);
+    // decay = 0.99 → time constant ~100 steps; run well past it.
+    let steps = 700;
+    let mut metrics = vec![];
+    for _ in 0..steps {
+        metrics.push(ps.step(&u, &v).unwrap());
+    }
+    // Approach to the fixed point S* = lr/(1−decay)·UVᵀ: the largest
+    // consecutive delta (growth phase) dwarfs the final delta, and the
+    // last 50 steps are flat to within 1%.
+    let peak_delta = metrics
+        .windows(2)
+        .map(|w| (w[1] - w[0]).abs())
+        .fold(0f32, f32::max);
+    let late = (metrics[steps - 1] - metrics[steps - 2]).abs();
+    assert!(
+        late < 0.01 * peak_delta,
+        "no convergence: late {late} peak {peak_delta}"
+    );
+    let flat = (metrics[steps - 1] - metrics[steps - 50]).abs() / metrics[steps - 1];
+    assert!(flat < 0.01, "tail not flat: {flat}");
+    assert!(metrics[steps - 1] > 0.0);
+    // state_msq readback agrees with the engine's metric.
+    assert!((ps.state_msq() - metrics[steps - 1]).abs() / metrics[steps - 1] < 1e-4);
+}
+
+#[test]
+fn param_server_apply_roundtrip() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let rt = XlaRuntime::cpu().unwrap();
+    let ps = ParamServer::load(&rt, &artifacts_dir(), Default::default()).unwrap();
+    let sh = ps.shape();
+    let x = vec![1f32; sh.n * sh.c];
+    let y0 = ps.apply(&x).unwrap();
+    assert!(y0.iter().all(|&v| v == 0.0), "zero state probes to zero");
+    let (u, v) = ps.synth_factors(7);
+    ps.step(&u, &v).unwrap();
+    let y1 = ps.apply(&x).unwrap();
+    assert!(y1.iter().any(|&v| v != 0.0), "state updated, probe nonzero");
+}
