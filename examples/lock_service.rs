@@ -36,8 +36,10 @@ fn main() {
             let shards = shards.clone();
             let counters = Arc::clone(&counters);
             joins.push(std::thread::spawn(move || {
-                let mut handles: Vec<_> =
-                    shards.iter().map(|s| svc.client(s, node)).collect();
+                let mut handles: Vec<_> = shards
+                    .iter()
+                    .map(|s| svc.client(s, node).expect("mint client"))
+                    .collect();
                 let mut acquired = vec![0u64; shards.len()];
                 for _ in 0..iters_per_shard {
                     for (i, h) in handles.iter_mut().enumerate() {

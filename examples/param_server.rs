@@ -1,7 +1,7 @@
 //! End-to-end driver (experiment E9): a qplock-protected parameter
-//! server whose critical sections execute the AOT-compiled JAX/Pallas
-//! update step through PJRT — all three layers composing on a real
-//! workload.
+//! server whose critical sections execute the native engine's port of
+//! the JAX/Pallas update step (see `runtime/` for the substitution) —
+//! the lock and compute layers composing on a real workload.
 //!
 //! Topology: 2 simulated machines; the shared state and the lock are
 //! homed on node 0; 2 writer processes per node (2 local + 2 remote)
@@ -10,7 +10,6 @@
 //! the analytic fixed point — the "loss curve" recorded in
 //! EXPERIMENTS.md.
 //!
-//! Requires artifacts: `make artifacts` (or `make build`).
 //! Run: `cargo run --release --example param_server [steps_per_writer]`
 
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
@@ -28,14 +27,11 @@ fn main() {
         .nth(1)
         .map(|s| s.parse().expect("steps_per_writer"))
         .unwrap_or(150);
-    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-
     let domain = RdmaDomain::new(2, 1 << 18, DomainConfig::timed());
-    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
-    println!("PJRT platform: {}", rt.platform());
+    let rt = XlaRuntime::cpu().expect("compute engine");
+    println!("compute platform: {}", rt.platform());
     let ps = Arc::new(
-        ParamServer::load(&rt, &artifacts, Default::default())
-            .expect("artifacts (run `make artifacts`)"),
+        ParamServer::load(&rt, "builtin", Default::default()).expect("parameter server"),
     );
     let sh = ps.shape();
     println!(
@@ -59,7 +55,7 @@ fn main() {
                 let (u, v) = ps.synth_factors((w as u64) << 32 | i);
                 let t = Instant::now();
                 h.lock();
-                let metric = ps.step(&u, &v).expect("XLA step");
+                let metric = ps.step(&u, &v).expect("model step");
                 h.unlock();
                 lat.record(t.elapsed().as_nanos() as u64);
                 let global = ctr.fetch_add(1, SeqCst) + 1;
@@ -83,7 +79,7 @@ fn main() {
             let mut reads = 0u64;
             while !stop.load(SeqCst) {
                 h.lock();
-                let _y = ps.apply(&x).expect("XLA apply");
+                let _y = ps.apply(&x).expect("model apply");
                 h.unlock();
                 reads += 1;
             }
@@ -114,5 +110,5 @@ fn main() {
     );
     println!("readers: {reads} probe reads interleaved");
     println!("final metric (mean S^2): {:.6}", ps.state_msq());
-    println!("all layers composed: Rust lock -> PJRT executable -> Pallas kernel. OK");
+    println!("all layers composed: Rust lock -> native ref-kernel engine. OK");
 }

@@ -91,10 +91,24 @@ SUBCOMMANDS:
             --budget <n>       qplock/cohort budget (default 8)
             --cs-ns <ns>       critical-section busy work (default 0)
             --counted          zero-latency op-count mode
-  bench   run experiments (DESIGN.md E1..E9)
+  bench   run experiments (DESIGN.md E1..E10)
             --exp <id|all>     experiment id (default all)
             --full             full scale (default quick)
             --csv              also print CSV
+  multi-lock
+          closed-loop sweep over a sharded multi-lock table: each
+          process draws keys Zipfian over K named locks through a
+          per-process handle cache
+            --locks <K>        named locks in the table (default 10000)
+            --skew <s>         Zipf skew, 0 = uniform (default 0.99)
+            --procs <n>        processes, round-robin over nodes (default 6)
+            --nodes <n>        cluster nodes (default 3)
+            --iters <n>        cycles per process (default 2000)
+            --millis <ms>      run for a duration instead of iters
+            --algo <name>      lock algorithm (default qplock)
+            --budget <n>       qplock/cohort budget (default 8)
+            --home0            home every lock on node 0 (default: hash-routed)
+            --timed            calibrated-latency mode (default counted)
   mc      model-check a spec (paper Appendix A)
             --model <name>     qplock|peterson|naive|spin (default qplock)
             --procs <n>        processes (default 3)

@@ -17,8 +17,11 @@ use std::sync::Arc;
 
 use crate::rdma::{DomainConfig, RdmaDomain};
 
-pub use runner::{run_workload, ProcResult, ProcSpec, RunResult};
-pub use service::LockService;
+pub use runner::{
+    lock_name, run_multi_lock_workload, run_workload, MultiLockRunResult, MultiProcResult,
+    ProcResult, ProcSpec, RunResult,
+};
+pub use service::{HandleCache, LockService, LockServiceError};
 pub use workload::{CsWork, Workload};
 
 /// A simulated cluster: the RDMA domain plus construction conveniences.
@@ -37,6 +40,19 @@ impl Cluster {
     /// Standard experimental cluster: 2 nodes, calibrated timing.
     pub fn standard() -> Cluster {
         Cluster::new(2, 1 << 20, DomainConfig::timed())
+    }
+
+    /// Round-robin `n` processes over every node — the natural
+    /// placement for multi-lock runs, where lock homes are themselves
+    /// hash-spread and "local" is a per-(process, lock) relation.
+    pub fn round_robin_procs(&self, n: u32) -> Vec<ProcSpec> {
+        let nodes = self.domain.num_nodes() as u32;
+        (0..n)
+            .map(|i| ProcSpec {
+                node: (i % nodes) as u16,
+                pid: i,
+            })
+            .collect()
     }
 
     /// Spread `n` processes across nodes: the first `n_local` on
@@ -81,5 +97,16 @@ mod tests {
         let c = Cluster::new(1, 1 << 12, DomainConfig::counted());
         let procs = c.spread_procs(4, 0, 0);
         assert!(procs.iter().all(|p| p.node == 0));
+    }
+
+    #[test]
+    fn round_robin_covers_all_nodes_with_dense_pids() {
+        let c = Cluster::new(3, 1 << 12, DomainConfig::counted());
+        let procs = c.round_robin_procs(7);
+        assert_eq!(procs.len(), 7);
+        for (i, p) in procs.iter().enumerate() {
+            assert_eq!(p.pid, i as u32);
+            assert_eq!(p.node, (i % 3) as u16);
+        }
     }
 }

@@ -1,14 +1,17 @@
-//! Multi-threaded workload execution with full instrumentation.
+//! Multi-threaded workload execution with full instrumentation — the
+//! single-lock closed loop ([`run_workload`]) and the sharded-table
+//! multi-lock closed loop ([`run_multi_lock_workload`]).
 
 use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
+use super::service::LockService;
 use super::workload::Workload;
 use crate::locks::{Class, CsChecker, SharedLock};
 use crate::rdma::{NodeId, ProcMetricsSnapshot, RdmaDomain};
 use crate::stats::{jain_index, Histogram};
-use crate::util::prng::Prng;
+use crate::util::prng::{Prng, Zipf};
 use crate::util::spin::spin_wait_ns;
 
 /// Placement of one simulated process.
@@ -175,6 +178,224 @@ pub fn run_workload(
     }
 }
 
+// ------------------------------------------------------- multi-lock runner
+
+/// Everything measured about one process of a multi-lock run. Unlike
+/// [`ProcResult`] there is no single locality class — the process is
+/// local to the locks homed on its node and remote to the rest — so verb
+/// counters come split by handle class (see
+/// [`super::service::HandleCache`]).
+pub struct MultiProcResult {
+    pub pid: u32,
+    pub node: NodeId,
+    pub acquisitions: u64,
+    /// Distinct named locks this process touched (its handle-cache size).
+    pub distinct_locks: u64,
+    /// Handle-cache hits/misses (misses = handles minted).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Lock-acquire latency (ns).
+    pub acquire_ns: Histogram,
+    /// Full cycle latency (acquire + CS + release, ns).
+    pub cycle_ns: Histogram,
+    /// Verbs issued through handles of locks homed on this node.
+    pub local_class_ops: ProcMetricsSnapshot,
+    /// Verbs issued through handles of remotely-homed locks.
+    pub remote_class_ops: ProcMetricsSnapshot,
+}
+
+/// Aggregated outcome of a multi-lock run.
+pub struct MultiLockRunResult {
+    pub wall: Duration,
+    pub procs: Vec<MultiProcResult>,
+    /// Per-lock mutual-exclusion violations, summed (0 for correct locks).
+    pub violations: u64,
+    /// Critical-section entries per named lock (rank order = Zipf rank
+    /// order, so index 0 is the intended-hottest lock).
+    pub per_lock_entries: Vec<u64>,
+}
+
+impl MultiLockRunResult {
+    pub fn total_acquisitions(&self) -> u64 {
+        self.procs.iter().map(|p| p.acquisitions).sum()
+    }
+
+    /// Aggregate throughput in acquisitions per second.
+    pub fn throughput(&self) -> f64 {
+        self.total_acquisitions() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Jain fairness index over per-process acquisition counts.
+    pub fn jain(&self) -> f64 {
+        let xs: Vec<u64> = self.procs.iter().map(|p| p.acquisitions).collect();
+        jain_index(&xs)
+    }
+
+    /// Remote verbs issued by local-class handles, summed over processes
+    /// (the paper's headline says this is exactly 0 under qplock).
+    /// Loopback verbs are already included — `remote_total()` counts
+    /// every `r_*` call; loopback is the subset that targeted the
+    /// issuer's own node — so class-blind baselines report their true
+    /// verb count here, not a doubled one.
+    pub fn local_class_remote_verbs(&self) -> u64 {
+        self.procs
+            .iter()
+            .map(|p| p.local_class_ops.remote_total())
+            .sum()
+    }
+
+    /// Remote verbs per remote-class acquisition is not directly
+    /// attributable (one process mixes classes per draw), so report the
+    /// aggregate: remote-class verbs / total acquisitions.
+    pub fn remote_verbs_per_acq(&self) -> f64 {
+        let ops: u64 = self
+            .procs
+            .iter()
+            .map(|p| p.remote_class_ops.remote_total())
+            .sum();
+        ops as f64 / self.total_acquisitions().max(1) as f64
+    }
+
+    /// Share of critical-section entries that hit the hottest lock.
+    pub fn hottest_share(&self) -> f64 {
+        let total: u64 = self.per_lock_entries.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        *self.per_lock_entries.iter().max().unwrap() as f64 / total as f64
+    }
+
+    /// Named locks that saw at least one acquisition.
+    pub fn locks_touched(&self) -> usize {
+        self.per_lock_entries.iter().filter(|&&e| e > 0).count()
+    }
+
+    /// Handle-cache hit rate over all processes.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits: u64 = self.procs.iter().map(|p| p.cache_hits).sum();
+        let total: u64 = hits + self.procs.iter().map(|p| p.cache_misses).sum::<u64>();
+        hits as f64 / total.max(1) as f64
+    }
+}
+
+/// Canonical name of lock `i` in a multi-lock run (`lk000042`-style, so
+/// lexicographic registry order is rank order).
+pub fn lock_name(i: u32) -> String {
+    format!("lk{i:06}")
+}
+
+/// Run `workload` with one thread per `ProcSpec`, each drawing its lock
+/// per cycle Zipfian-distributed over `workload.locks` named locks in
+/// `service`. Every lock gets its own mutual-exclusion oracle; every
+/// process works through a [`super::service::HandleCache`] session
+/// (handles minted once, reused per acquisition).
+pub fn run_multi_lock_workload(
+    service: &Arc<LockService>,
+    procs: &[ProcSpec],
+    workload: &Workload,
+) -> MultiLockRunResult {
+    let n = procs.len();
+    assert!(n > 0);
+    let nlocks = workload.locks;
+    assert!(nlocks >= 1);
+
+    // Pre-register the whole table so first-touch registration cost is
+    // not measured inside the run window, and fail fast on undersized
+    // client capacity — a mid-run CapacityExhausted would otherwise
+    // surface as a worker-thread panic.
+    let names: Arc<Vec<String>> = Arc::new((0..nlocks).map(lock_name).collect());
+    for name in names.iter() {
+        let free = service.ensure_free_slots(name);
+        assert!(
+            free as usize >= n,
+            "lock table capacity too small: '{name}' has {free} free client slots for {n} \
+             processes (construct the service with with_default_max_procs(..) or create \
+             locks with max_procs >= the process count)"
+        );
+    }
+    let checkers: Arc<Vec<CsChecker>> =
+        Arc::new((0..nlocks).map(|_| CsChecker::default()).collect());
+    let zipf = Arc::new(Zipf::new(nlocks, workload.zipf_s));
+
+    let barrier = Arc::new(Barrier::new(n + 1));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut joins = vec![];
+    for spec in procs.iter().copied() {
+        let mut session = service.session(spec.node);
+        let barrier = Arc::clone(&barrier);
+        let stop = Arc::clone(&stop);
+        let names = Arc::clone(&names);
+        let checkers = Arc::clone(&checkers);
+        let zipf = Arc::clone(&zipf);
+        let wl = workload.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut acquire_ns = Histogram::new();
+            let mut cycle_ns = Histogram::new();
+            let mut acquisitions = 0u64;
+            let mut rng = Prng::seed_from(wl.seed ^ (spec.pid as u64).wrapping_mul(0xA24B));
+            barrier.wait();
+            let deadline = wl.duration.map(|d| Instant::now() + d);
+            for _ in 0..wl.iters {
+                if stop.load(SeqCst) {
+                    break;
+                }
+                if let Some(dl) = deadline {
+                    if Instant::now() >= dl {
+                        break;
+                    }
+                }
+                if wl.think_ns_mean > 0 {
+                    spin_wait_ns(rng.exp(wl.think_ns_mean as f64) as u64);
+                }
+                let li = zipf.sample(&mut rng) as usize;
+                let handle = session
+                    .handle(&names[li])
+                    .expect("lock table capacity exceeded");
+                let t0 = Instant::now();
+                handle.lock();
+                let t1 = Instant::now();
+                checkers[li].enter(spec.pid + 1);
+                wl.cs.run(spec.pid);
+                checkers[li].exit(spec.pid + 1);
+                handle.unlock();
+                let t2 = Instant::now();
+                acquire_ns.record((t1 - t0).as_nanos() as u64);
+                cycle_ns.record((t2 - t0).as_nanos() as u64);
+                acquisitions += 1;
+            }
+            if deadline.is_some() {
+                stop.store(true, SeqCst);
+            }
+            let (cache_hits, cache_misses) = session.stats();
+            MultiProcResult {
+                pid: spec.pid,
+                node: spec.node,
+                acquisitions,
+                distinct_locks: session.cached_handles() as u64,
+                cache_hits,
+                cache_misses,
+                acquire_ns,
+                cycle_ns,
+                local_class_ops: session.local_class_metrics().snapshot(),
+                remote_class_ops: session.remote_class_metrics().snapshot(),
+            }
+        }));
+    }
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let procs: Vec<MultiProcResult> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed();
+
+    MultiLockRunResult {
+        wall,
+        procs,
+        violations: checkers.iter().map(|c| c.violations()).sum(),
+        per_lock_entries: checkers.iter().map(|c| c.entries()).collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +437,58 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(5));
         assert!(r.total_acquisitions() > 0);
         assert_eq!(r.violations, 0);
+    }
+
+    #[test]
+    fn multi_lock_run_collects_everything() {
+        let c = Cluster::new(3, 1 << 18, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(6);
+        let wl = Workload::cycles(200).with_locks(64, 0.99);
+        let r = run_multi_lock_workload(&svc, &procs, &wl);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.total_acquisitions(), 6 * 200);
+        assert_eq!(r.per_lock_entries.iter().sum::<u64>(), 6 * 200);
+        assert_eq!(r.per_lock_entries.len(), 64);
+        assert_eq!(svc.len(), 64, "table fully pre-registered");
+        // Zipf skew: the hottest lock dominates any single cold one.
+        assert!(r.hottest_share() > 0.05, "share {}", r.hottest_share());
+        // Handle reuse: far fewer mints than acquisitions.
+        assert!(r.cache_hit_rate() > 0.5, "hit rate {}", r.cache_hit_rate());
+        // The paper's headline, at table scale: local-class handles
+        // never touch the NIC.
+        assert_eq!(r.local_class_remote_verbs(), 0);
+        assert!(r.remote_verbs_per_acq() > 0.0, "remotes did work");
+        assert!(r.throughput() > 0.0);
+        for p in &r.procs {
+            assert!(p.distinct_locks >= 1);
+            assert_eq!(p.cache_misses, p.distinct_locks);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity too small")]
+    fn multi_lock_rejects_undersized_capacity_up_front() {
+        // 65 processes against the default 64 client slots per lock:
+        // refused before any worker thread spawns, instead of a
+        // CapacityExhausted panic inside one mid-run.
+        let c = Cluster::new(2, 1 << 18, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(65);
+        let _ = run_multi_lock_workload(&svc, &procs, &Workload::cycles(1).with_locks(4, 0.0));
+    }
+
+    #[test]
+    fn multi_lock_single_lock_degenerates_to_closed_loop() {
+        let c = Cluster::new(2, 1 << 14, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(4);
+        let wl = Workload::cycles(150).with_locks(1, 0.0);
+        let r = run_multi_lock_workload(&svc, &procs, &wl);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.total_acquisitions(), 600);
+        assert_eq!(r.locks_touched(), 1);
+        assert!((r.hottest_share() - 1.0).abs() < 1e-12);
     }
 
     #[test]

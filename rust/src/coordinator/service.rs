@@ -1,21 +1,70 @@
-//! Named-lock service with a router — the "deployment" face of the
-//! library (vLLM-router-style registry, for locks).
+//! Sharded named-lock table with a router — the "deployment" face of
+//! the library (a lock *service*, for clusters that guard thousands of
+//! named resources, as in ALock and the RDMA lock-management line of
+//! work).
 //!
-//! A [`LockService`] owns a set of named locks, each homed on a node
-//! (explicitly, or routed by a stable hash of the name). Clients ask
-//! for a handle by name from whatever node they live on; the service
-//! assigns unique pids and keeps per-lock client counts. The end-to-end
-//! example serves a sharded parameter store through this registry.
+//! A [`LockService`] owns a table of named locks striped over `S`
+//! internal shards (each shard its own `Mutex<HashMap>`, so registry
+//! traffic for ten thousand locks never funnels through one mutex).
+//! Each lock is homed on a node — explicitly, or routed by a stable
+//! FNV-1a hash of the name — and clients anywhere mint per-process
+//! handles by name. A [`HandleCache`] gives each simulated process a
+//! session that reuses minted handles across acquisitions instead of
+//! re-allocating MCS descriptors per touch, and splits its verb
+//! accounting by locality class so the paper's zero-local-RDMA claim
+//! stays observable per handle class at lock-table scale.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, Ordering::SeqCst};
 use std::sync::{Arc, Mutex};
 
 use crate::locks::{make_lock, LockHandle, SharedLock};
-use crate::rdma::{NodeId, RdmaDomain};
+use crate::rdma::{Endpoint, NodeId, ProcMetrics, RdmaDomain};
 
 /// Default capacity (max processes per lock) when not specified.
 const DEFAULT_MAX_PROCS: u32 = 64;
+
+/// Default shard count for the striped registry.
+const DEFAULT_SHARDS: usize = 32;
+
+/// Errors surfaced by the service instead of poisoning registry mutexes
+/// (an `assert!` while holding a shard lock would take every client on
+/// that shard down with it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LockServiceError {
+    /// `create_lock` on a name that already exists.
+    DuplicateName(String),
+    /// The lock's `max_procs` client slots are all taken. Slot-indexed
+    /// baselines (filter, bakery) address per-pid state arrays, so
+    /// overflowing silently would corrupt them.
+    CapacityExhausted { name: String, max_procs: u32 },
+}
+
+impl std::fmt::Display for LockServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LockServiceError::DuplicateName(n) => write!(f, "lock '{n}' already registered"),
+            LockServiceError::CapacityExhausted { name, max_procs } => {
+                write!(f, "lock '{name}' client capacity {max_procs} exhausted")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LockServiceError {}
+
+/// Stable FNV-1a of a lock name; the single hash that drives both home
+/// routing and shard striping (different bit ranges, so the two
+/// assignments don't correlate).
+#[inline]
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
 
 struct Entry {
     lock: Arc<dyn SharedLock>,
@@ -23,36 +72,103 @@ struct Entry {
     max_procs: u32,
 }
 
-/// Registry + router for named locks.
+impl Entry {
+    /// Claim the next free pid, refusing past capacity (no silent
+    /// overflow into slot-indexed baselines' state arrays).
+    fn claim_pid(&self) -> Option<u32> {
+        self.next_pid
+            .fetch_update(SeqCst, SeqCst, |p| (p < self.max_procs).then_some(p + 1))
+            .ok()
+    }
+
+    fn free_slots(&self) -> u32 {
+        self.max_procs.saturating_sub(self.next_pid.load(SeqCst))
+    }
+}
+
+struct Shard {
+    map: Mutex<HashMap<String, Arc<Entry>>>,
+}
+
+/// Registry + router for named locks, striped over shards.
 pub struct LockService {
     domain: Arc<RdmaDomain>,
-    locks: Mutex<HashMap<String, Arc<Entry>>>,
+    shards: Box<[Shard]>,
     default_algo: String,
     default_budget: u64,
+    default_max_procs: u32,
 }
 
 impl LockService {
     pub fn new(domain: &Arc<RdmaDomain>, default_algo: &str, default_budget: u64) -> LockService {
+        LockService::with_shards(domain, default_algo, default_budget, DEFAULT_SHARDS)
+    }
+
+    /// Explicit stripe width (tests and single-threaded tools can use 1).
+    pub fn with_shards(
+        domain: &Arc<RdmaDomain>,
+        default_algo: &str,
+        default_budget: u64,
+        nshards: usize,
+    ) -> LockService {
+        assert!(nshards > 0, "at least one shard");
         LockService {
             domain: Arc::clone(domain),
-            locks: Mutex::new(HashMap::new()),
+            shards: (0..nshards)
+                .map(|_| Shard {
+                    map: Mutex::new(HashMap::new()),
+                })
+                .collect(),
             default_algo: default_algo.to_string(),
             default_budget,
+            default_max_procs: DEFAULT_MAX_PROCS,
         }
+    }
+
+    /// Raise (or shrink) the per-lock client capacity used by the
+    /// get-or-create path — callers with more than `DEFAULT_MAX_PROCS`
+    /// (64) processes per lock set this once at construction.
+    pub fn with_default_max_procs(mut self, max_procs: u32) -> LockService {
+        assert!(max_procs >= 1, "at least one client slot");
+        self.default_max_procs = max_procs;
+        self
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
     /// Stable routing: FNV-1a of the name modulo node count.
     pub fn route(&self, name: &str) -> NodeId {
-        let mut h: u64 = 0xcbf29ce484222325;
-        for b in name.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        (h % self.domain.num_nodes() as u64) as NodeId
+        (fnv1a(name) % self.domain.num_nodes() as u64) as NodeId
     }
 
-    /// Create a lock with explicit placement and algorithm. Errors if
-    /// the name exists.
+    #[inline]
+    fn shard(&self, name: &str) -> &Shard {
+        // Fold the halves before the modulus: FNV-1a's high 32 bits
+        // barely vary across short sequential names (lk000001,
+        // lk000002, …), so `(h >> 32) % n` alone collapses onto a few
+        // shards. The xor spreads 10k runner-style names near-uniformly
+        // over 32 shards while staying decorrelated from the home
+        // routing (`h % num_nodes`).
+        let h = fnv1a(name);
+        let folded = (h >> 32) ^ (h & 0xFFFF_FFFF);
+        &self.shards[(folded % self.shards.len() as u64) as usize]
+    }
+
+    /// Build a registry entry. Callers hold the shard lock across this,
+    /// so a concurrent get-or-create of the same name cannot
+    /// double-allocate registers.
+    fn make_entry(&self, algo: &str, home: NodeId, max_procs: u32, budget: u64) -> Arc<Entry> {
+        Arc::new(Entry {
+            lock: make_lock(algo, &self.domain, home, max_procs, budget),
+            next_pid: AtomicU32::new(0),
+            max_procs,
+        })
+    }
+
+    /// Create a lock with explicit placement and algorithm. Errors (does
+    /// not panic) if the name exists.
     pub fn create_lock(
         &self,
         name: &str,
@@ -60,68 +176,240 @@ impl LockService {
         home: NodeId,
         max_procs: u32,
         budget: u64,
-    ) -> Arc<dyn SharedLock> {
-        let lock = make_lock(algo, &self.domain, home, max_procs, budget);
-        let mut map = self.locks.lock().unwrap();
-        assert!(
-            !map.contains_key(name),
-            "lock '{name}' already registered"
+    ) -> Result<Arc<dyn SharedLock>, LockServiceError> {
+        let mut map = self.shard(name).map.lock().unwrap();
+        if map.contains_key(name) {
+            return Err(LockServiceError::DuplicateName(name.to_string()));
+        }
+        let entry = self.make_entry(algo, home, max_procs, budget);
+        let lock = Arc::clone(&entry.lock);
+        map.insert(name.to_string(), entry);
+        Ok(lock)
+    }
+
+    /// Get-or-create the registry entry for `name` (default algorithm,
+    /// hash-routed home) in a single shard-lock acquisition.
+    fn entry(&self, name: &str) -> Arc<Entry> {
+        let home = self.route(name);
+        let mut map = self.shard(name).map.lock().unwrap();
+        if let Some(e) = map.get(name) {
+            return Arc::clone(e);
+        }
+        let entry = self.make_entry(
+            &self.default_algo,
+            home,
+            self.default_max_procs,
+            self.default_budget,
         );
-        map.insert(
-            name.to_string(),
-            Arc::new(Entry {
-                lock: Arc::clone(&lock),
-                next_pid: AtomicU32::new(0),
-                max_procs,
-            }),
-        );
-        lock
+        map.insert(name.to_string(), Arc::clone(&entry));
+        entry
     }
 
     /// Get-or-create with default algorithm, hash-routed home.
     pub fn ensure_lock(&self, name: &str) -> Arc<dyn SharedLock> {
-        {
-            let map = self.locks.lock().unwrap();
-            if let Some(e) = map.get(name) {
-                return Arc::clone(&e.lock);
-            }
-        }
-        let home = self.route(name);
-        self.create_lock(
-            name,
-            &self.default_algo,
-            home,
-            DEFAULT_MAX_PROCS,
-            self.default_budget,
-        )
+        Arc::clone(&self.entry(name).lock)
     }
 
-    /// Mint a client handle for a process running on `node`. Assigns the
-    /// next free pid for that lock.
-    pub fn client(&self, name: &str, node: NodeId) -> Box<dyn LockHandle> {
-        self.ensure_lock(name);
-        let entry = {
-            let map = self.locks.lock().unwrap();
-            Arc::clone(map.get(name).unwrap())
-        };
-        let pid = entry.next_pid.fetch_add(1, SeqCst);
-        assert!(
-            pid < entry.max_procs,
-            "lock '{name}' client capacity {} exhausted",
-            entry.max_procs
-        );
-        entry.lock.handle(self.domain.endpoint(node), pid)
+    /// Look up a registered lock without creating it.
+    pub fn get_lock(&self, name: &str) -> Option<Arc<dyn SharedLock>> {
+        let map = self.shard(name).map.lock().unwrap();
+        map.get(name).map(|e| Arc::clone(&e.lock))
+    }
+
+    /// Home node of a registered lock (the *actual* placement, which for
+    /// explicitly-created locks can differ from `route(name)`).
+    pub fn home_of(&self, name: &str) -> Option<NodeId> {
+        let map = self.shard(name).map.lock().unwrap();
+        map.get(name).map(|e| e.lock.home())
+    }
+
+    /// Remaining client slots on a registered lock (`None` if the name
+    /// is unknown). Lets orchestration layers fail fast *before*
+    /// spawning workers that would hit `CapacityExhausted` mid-run.
+    pub fn free_slots(&self, name: &str) -> Option<u32> {
+        let map = self.shard(name).map.lock().unwrap();
+        map.get(name).map(|e| e.free_slots())
+    }
+
+    /// Get-or-create `name` and report its remaining client slots in a
+    /// single registry round trip (the bulk pre-registration fast path:
+    /// one shard-mutex acquisition per lock instead of two).
+    pub fn ensure_free_slots(&self, name: &str) -> u32 {
+        self.entry(name).free_slots()
+    }
+
+    /// Claim a pid slot on `entry` and mint a handle bound to `ep`.
+    fn mint(
+        name: &str,
+        entry: &Entry,
+        ep: Endpoint,
+    ) -> Result<Box<dyn LockHandle>, LockServiceError> {
+        let pid = entry
+            .claim_pid()
+            .ok_or_else(|| LockServiceError::CapacityExhausted {
+                name: name.to_string(),
+                max_procs: entry.max_procs,
+            })?;
+        Ok(entry.lock.handle(ep, pid))
+    }
+
+    /// Mint a client handle for a process running on `node` (creating
+    /// the lock on demand). Assigns the next free pid for that lock;
+    /// errors once `max_procs` handles exist.
+    pub fn client(
+        &self,
+        name: &str,
+        node: NodeId,
+    ) -> Result<Box<dyn LockHandle>, LockServiceError> {
+        let entry = self.entry(name);
+        Self::mint(name, &entry, self.domain.endpoint(node))
+    }
+
+    /// Like [`LockService::client`] but attributes the handle's verbs to
+    /// an existing metrics sink (one logical process holding handles on
+    /// many locks — the [`HandleCache`] uses this).
+    pub fn client_with_metrics(
+        &self,
+        name: &str,
+        node: NodeId,
+        metrics: &Arc<ProcMetrics>,
+    ) -> Result<Box<dyn LockHandle>, LockServiceError> {
+        let entry = self.entry(name);
+        let ep = self.domain.endpoint_with_metrics(node, Arc::clone(metrics));
+        Self::mint(name, &entry, ep)
+    }
+
+    /// Open a per-process session with handle reuse (see [`HandleCache`]).
+    pub fn session(self: &Arc<Self>, node: NodeId) -> HandleCache {
+        HandleCache::new(Arc::clone(self), node)
+    }
+
+    /// Number of registered locks (across all shards).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.map.lock().unwrap().len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Names and homes of all registered locks.
     pub fn registry(&self) -> Vec<(String, NodeId, &'static str)> {
-        let map = self.locks.lock().unwrap();
-        let mut v: Vec<(String, NodeId, &'static str)> = map
-            .iter()
-            .map(|(k, e)| (k.clone(), e.lock.home(), e.lock.name()))
-            .collect();
+        let mut v: Vec<(String, NodeId, &'static str)> = vec![];
+        for s in self.shards.iter() {
+            let map = s.map.lock().unwrap();
+            v.extend(
+                map.iter()
+                    .map(|(k, e)| (k.clone(), e.lock.home(), e.lock.name())),
+            );
+        }
         v.sort();
         v
+    }
+
+    pub fn domain(&self) -> &Arc<RdmaDomain> {
+        &self.domain
+    }
+}
+
+/// Per-process handle cache: one session per simulated process. The
+/// first touch of a named lock mints a handle (allocating the process's
+/// MCS descriptor for that lock); every later acquisition reuses it —
+/// at a 10k-lock table, re-minting per acquisition would dominate the
+/// fast path and exhaust register arenas.
+///
+/// Verb accounting is split by locality class: handles on locks homed
+/// on this session's node feed `local_metrics`, all others feed
+/// `remote_metrics`. The split is what lets a multi-lock sweep still
+/// assert the paper's headline (local-class handles: zero remote verbs)
+/// even though one process usually holds handles of both classes.
+pub struct HandleCache {
+    svc: Arc<LockService>,
+    node: NodeId,
+    local_metrics: Arc<ProcMetrics>,
+    remote_metrics: Arc<ProcMetrics>,
+    handles: HashMap<String, Box<dyn LockHandle>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl HandleCache {
+    fn new(svc: Arc<LockService>, node: NodeId) -> HandleCache {
+        HandleCache {
+            svc,
+            node,
+            local_metrics: Arc::new(ProcMetrics::default()),
+            remote_metrics: Arc::new(ProcMetrics::default()),
+            handles: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    /// The cached handle for `name`, minting (and registering the lock)
+    /// on first touch.
+    pub fn handle(&mut self, name: &str) -> Result<&mut dyn LockHandle, LockServiceError> {
+        if !self.handles.contains_key(name) {
+            // One registry round trip: fetch (or create) the entry, read
+            // the actual placement off it, mint against the right sink.
+            let entry = self.svc.entry(name);
+            let sink = if entry.lock.home() == self.node {
+                &self.local_metrics
+            } else {
+                &self.remote_metrics
+            };
+            let ep = self
+                .svc
+                .domain
+                .endpoint_with_metrics(self.node, Arc::clone(sink));
+            let h = LockService::mint(name, &entry, ep)?;
+            self.handles.insert(name.to_string(), h);
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+        }
+        Ok(self.handles.get_mut(name).expect("just inserted").as_mut())
+    }
+
+    /// Convenience: full lock → critical section → unlock cycle on a
+    /// named lock.
+    pub fn with_lock<R>(
+        &mut self,
+        name: &str,
+        cs: impl FnOnce() -> R,
+    ) -> Result<R, LockServiceError> {
+        let h = self.handle(name)?;
+        h.lock();
+        let r = cs();
+        h.unlock();
+        Ok(r)
+    }
+
+    /// Distinct locks this session has touched.
+    pub fn cached_handles(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// `(hits, misses)` of the handle cache.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Verbs issued through handles local to this session's node.
+    pub fn local_class_metrics(&self) -> &Arc<ProcMetrics> {
+        &self.local_metrics
+    }
+
+    /// Verbs issued through handles on remotely-homed locks.
+    pub fn remote_class_metrics(&self) -> &Arc<ProcMetrics> {
+        &self.remote_metrics
     }
 }
 
@@ -133,6 +421,11 @@ mod tests {
     fn service() -> LockService {
         let d = RdmaDomain::new(3, 1 << 16, DomainConfig::counted());
         LockService::new(&d, "qplock", 8)
+    }
+
+    fn service_arc() -> Arc<LockService> {
+        let d = RdmaDomain::new(3, 1 << 18, DomainConfig::counted());
+        Arc::new(LockService::new(&d, "qplock", 8))
     }
 
     #[test]
@@ -154,13 +447,14 @@ mod tests {
         let l2 = s.ensure_lock("x");
         assert!(Arc::ptr_eq(&l1, &l2));
         assert_eq!(s.registry().len(), 1);
+        assert_eq!(s.len(), 1);
     }
 
     #[test]
     fn clients_get_unique_pids_and_work() {
         let s = service();
-        let mut h1 = s.client("y", 0);
-        let mut h2 = s.client("y", 1);
+        let mut h1 = s.client("y", 0).unwrap();
+        let mut h2 = s.client("y", 1).unwrap();
         h1.lock();
         h1.unlock();
         h2.lock();
@@ -168,19 +462,133 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "already registered")]
-    fn duplicate_create_rejected() {
+    fn duplicate_create_is_an_error_not_a_poisoned_mutex() {
         let s = service();
-        s.create_lock("z", "qplock", 0, 4, 8);
-        s.create_lock("z", "qplock", 1, 4, 8);
+        s.create_lock("z", "qplock", 0, 4, 8).unwrap();
+        let err = s.create_lock("z", "qplock", 1, 4, 8).unwrap_err();
+        assert_eq!(err, LockServiceError::DuplicateName("z".into()));
+        // The registry is still fully usable afterwards (the old
+        // assert!-under-mutex poisoned it for every client).
+        let mut h = s.client("z", 0).unwrap();
+        h.lock();
+        h.unlock();
+        assert_eq!(s.registry().len(), 1);
     }
 
     #[test]
-    #[should_panic(expected = "capacity")]
-    fn capacity_exhaustion_panics() {
+    fn capacity_exhaustion_is_an_error() {
         let s = service();
-        s.create_lock("w", "qplock", 0, 1, 8);
-        let _a = s.client("w", 0);
-        let _b = s.client("w", 0);
+        s.create_lock("w", "qplock", 0, 1, 8).unwrap();
+        assert_eq!(s.free_slots("w"), Some(1));
+        assert_eq!(s.free_slots("unknown"), None);
+        let _a = s.client("w", 0).unwrap();
+        assert_eq!(s.free_slots("w"), Some(0));
+        let err = s.client("w", 0).unwrap_err();
+        assert!(matches!(
+            err,
+            LockServiceError::CapacityExhausted { max_procs: 1, .. }
+        ));
+        // And stays an error (no wraparound on repeated attempts).
+        assert!(s.client("w", 0).is_err());
+    }
+
+    #[test]
+    fn default_capacity_is_configurable() {
+        let d = RdmaDomain::new(2, 1 << 16, DomainConfig::counted());
+        let s = LockService::new(&d, "qplock", 8).with_default_max_procs(1);
+        let _a = s.client("only-one", 0).unwrap();
+        assert!(s.client("only-one", 1).is_err());
+    }
+
+    #[test]
+    fn locks_spread_over_shards() {
+        let s = service();
+        for i in 0..256 {
+            s.ensure_lock(&format!("lk{i}"));
+        }
+        assert_eq!(s.len(), 256);
+        assert_eq!(s.registry().len(), 256);
+        // With 256 names over 32 shards, at least half the shards are
+        // touched unless the hash is broken.
+        let occupied = s
+            .shards
+            .iter()
+            .filter(|sh| !sh.map.lock().unwrap().is_empty())
+            .count();
+        assert!(occupied >= s.shard_count() / 2, "occupied {occupied}");
+    }
+
+    #[test]
+    fn concurrent_ensure_of_same_name_yields_one_lock() {
+        let s = service_arc();
+        let mut ts = vec![];
+        for _ in 0..8 {
+            let s = Arc::clone(&s);
+            ts.push(std::thread::spawn(move || {
+                for i in 0..64 {
+                    s.ensure_lock(&format!("hot-{}", i % 4));
+                }
+            }));
+        }
+        for t in ts {
+            t.join().unwrap();
+        }
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn handle_cache_reuses_handles() {
+        let s = service_arc();
+        let mut sess = s.session(0);
+        for _ in 0..10 {
+            sess.with_lock("a", || {}).unwrap();
+            sess.with_lock("b", || {}).unwrap();
+        }
+        assert_eq!(sess.cached_handles(), 2);
+        let (hits, misses) = sess.stats();
+        assert_eq!(misses, 2, "one mint per named lock");
+        assert_eq!(hits, 18);
+        // Only 2 pids were ever claimed per lock across 20 cycles.
+        let mut other = s.client("a", 1).unwrap();
+        other.lock();
+        other.unlock();
+    }
+
+    #[test]
+    fn handle_cache_splits_metrics_by_class() {
+        let s = service_arc();
+        // Find one name homed on node 0 and one homed elsewhere.
+        let mut local_name = None;
+        let mut remote_name = None;
+        for i in 0..64 {
+            let n = format!("probe-{i}");
+            match s.route(&n) {
+                0 if local_name.is_none() => local_name = Some(n),
+                h if h != 0 && remote_name.is_none() => remote_name = Some(n),
+                _ => {}
+            }
+        }
+        let (ln, rn) = (local_name.unwrap(), remote_name.unwrap());
+        let mut sess = s.session(0);
+        for _ in 0..20 {
+            sess.with_lock(&ln, || {}).unwrap();
+            sess.with_lock(&rn, || {}).unwrap();
+        }
+        let ls = sess.local_class_metrics().snapshot();
+        let rs = sess.remote_class_metrics().snapshot();
+        assert_eq!(ls.remote_total(), 0, "local-class handles: zero verbs");
+        assert_eq!(ls.loopback, 0);
+        assert!(ls.local_total() > 0);
+        assert!(rs.remote_total() > 0, "remote-class handles use the NIC");
+    }
+
+    #[test]
+    fn home_of_reports_actual_placement() {
+        let s = service();
+        s.create_lock("pinned", "qplock", 2, 4, 8).unwrap();
+        assert_eq!(s.home_of("pinned"), Some(2));
+        assert_eq!(s.home_of("nonexistent"), None);
+        assert!(s.get_lock("pinned").is_some());
+        assert!(s.get_lock("nonexistent").is_none());
     }
 }

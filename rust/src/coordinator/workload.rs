@@ -40,6 +40,12 @@ impl std::fmt::Debug for CsWork {
 /// Closed-loop workload: each process performs `think → lock → CS →
 /// unlock` until it has done `iters` cycles or `duration` elapses
 /// (whichever is configured; `duration` wins if both are set).
+///
+/// With `locks > 1` the workload is *multi-lock*: each cycle first
+/// draws a lock index Zipfian-distributed over `locks` named locks
+/// (`zipf_s = 0` is uniform; ~0.99 is the classic web/KV skew), then
+/// runs the cycle against that lock. The single-lock runner ignores
+/// those two fields.
 #[derive(Clone, Debug)]
 pub struct Workload {
     /// Cycles per process (ignored when `duration` is set).
@@ -51,8 +57,14 @@ pub struct Workload {
     /// Mean think time between cycles (exponentially distributed;
     /// 0 = fully closed loop).
     pub think_ns_mean: u64,
-    /// PRNG seed (think times are deterministic given the seed).
+    /// PRNG seed (think times and lock draws are deterministic given
+    /// the seed).
     pub seed: u64,
+    /// Number of named locks the keyspace spans (1 = classic
+    /// single-lock closed loop).
+    pub locks: u32,
+    /// Zipf skew parameter `s` for lock selection (0 = uniform).
+    pub zipf_s: f64,
 }
 
 impl Workload {
@@ -64,6 +76,8 @@ impl Workload {
             cs: CsWork::None,
             think_ns_mean: 0,
             seed: 0x9E3779B97F4A7C15,
+            locks: 1,
+            zipf_s: 0.0,
         }
     }
 
@@ -75,7 +89,18 @@ impl Workload {
             cs,
             think_ns_mean: 0,
             seed: 0x9E3779B97F4A7C15,
+            locks: 1,
+            zipf_s: 0.0,
         }
+    }
+
+    /// Spread cycles Zipfian over `locks` named locks with skew `s`.
+    pub fn with_locks(mut self, locks: u32, zipf_s: f64) -> Workload {
+        assert!(locks >= 1, "at least one lock");
+        assert!(zipf_s >= 0.0, "zipf skew must be non-negative");
+        self.locks = locks;
+        self.zipf_s = zipf_s;
+        self
     }
 
     pub fn with_cs(mut self, cs: CsWork) -> Workload {
@@ -118,5 +143,20 @@ mod tests {
         assert_eq!(w.think_ns_mean, 500);
         assert_eq!(w.seed, 7);
         assert!(w.duration.is_none());
+        assert_eq!(w.locks, 1);
+        assert_eq!(w.zipf_s, 0.0);
+    }
+
+    #[test]
+    fn multi_lock_builder() {
+        let w = Workload::cycles(10).with_locks(10_000, 0.99);
+        assert_eq!(w.locks, 10_000);
+        assert!((w.zipf_s - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one lock")]
+    fn zero_locks_rejected() {
+        let _ = Workload::cycles(10).with_locks(0, 0.0);
     }
 }

@@ -10,9 +10,12 @@
 //!   semantics, latency/congestion model).
 //! * [`locks`] — the paper's qplock plus every baseline.
 //! * [`mc`] — explicit-state model checker over the PlusCal spec.
-//! * [`coordinator`] — cluster topology, lock service, workload runner.
-//! * [`runtime`] — PJRT bridge executing AOT-compiled JAX/Pallas
-//!   artifacts inside critical sections.
+//! * [`coordinator`] — cluster topology, the sharded named-lock service
+//!   (striped registry, handle-cache sessions, multi-lock Zipfian
+//!   runner), and the single-lock workload runner.
+//! * [`runtime`] — compute engine executing the reference-kernel math
+//!   inside critical sections (native port of the JAX/Pallas kernels;
+//!   see `runtime/mod.rs` for the PJRT substitution note).
 //! * [`stats`], [`util`] — measurement and support code.
 pub mod bench;
 pub mod cli;

@@ -35,6 +35,7 @@
 //!
 //! `budget = u64::MAX` encodes the paper's −1 ("enqueued, not passed").
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Arc;
 
 use super::{Class, LockHandle, SharedLock};
@@ -47,13 +48,29 @@ const WAITING: u64 = u64::MAX;
 /// Offset of the `next` field inside a descriptor.
 const NEXT: u32 = 1;
 
-/// Shared side of a qplock: three registers on the home node plus the
-/// configured initial budget (`kInitBudget`).
-pub struct QpLock {
+/// The one shared identity of a qplock: the three home-node registers,
+/// the configured `kInitBudget`, and host-side per-lock state. Held by
+/// [`Arc`] from both [`QpLock`] and every [`QpHandle`], so all handles
+/// of one lock observe the *same* object — per-lock counters (and any
+/// future shared state: lease words, async wakeup lists) stay coherent
+/// no matter which path minted the handle.
+pub struct QpInner {
     victim: Addr,
     tail: [Addr; 2],
     home: NodeId,
     init_budget: u64,
+    /// Host-side accounting (not an RDMA register): acquisitions that
+    /// found their cohort queue non-empty. Relaxed — off the protocol's
+    /// critical decisions, like `ProcMetrics`.
+    contended: AtomicU64,
+    /// Handles minted over this lock's lifetime.
+    handles_minted: AtomicU64,
+}
+
+/// Shared side of a qplock: three registers on the home node plus the
+/// configured initial budget (`kInitBudget`).
+pub struct QpLock {
+    inner: Arc<QpInner>,
 }
 
 impl QpLock {
@@ -68,19 +85,43 @@ impl QpLock {
         );
         let mem = &domain.node(home).mem;
         Arc::new(QpLock {
-            victim: mem.alloc(1),
-            tail: [mem.alloc(1), mem.alloc(1)],
-            home,
-            init_budget,
+            inner: Arc::new(QpInner {
+                victim: mem.alloc(1),
+                tail: [mem.alloc(1), mem.alloc(1)],
+                home,
+                init_budget,
+                contended: AtomicU64::new(0),
+                handles_minted: AtomicU64::new(0),
+            }),
         })
     }
 
     pub fn init_budget(&self) -> u64 {
-        self.init_budget
+        self.inner.init_budget
+    }
+
+    /// Acquisitions (across *all* handles of this lock) that enqueued
+    /// behind a cohort predecessor — a contention signal for placement/
+    /// rebalancing decisions at the service layer.
+    pub fn contended_acquisitions(&self) -> u64 {
+        self.inner.contended.load(Relaxed)
+    }
+
+    /// Handles minted over this lock's lifetime, via either
+    /// [`QpLock::qp_handle`] or the object-safe [`SharedLock::handle`].
+    pub fn handles_minted(&self) -> u64 {
+        self.inner.handles_minted.load(Relaxed)
     }
 
     /// Mint a handle; locality class is derived from the endpoint's node.
-    pub fn qp_handle(self: &Arc<Self>, ep: Endpoint) -> QpHandle {
+    pub fn qp_handle(&self, ep: Endpoint) -> QpHandle {
+        self.inner.mint(ep)
+    }
+}
+
+impl QpInner {
+    fn mint(self: &Arc<Self>, ep: Endpoint) -> QpHandle {
+        self.handles_minted.fetch_add(1, Relaxed);
         let class = Class::of(&ep, self.home);
         let desc = ep.alloc(2); // budget, next — always on the caller's node
         QpHandle {
@@ -94,24 +135,13 @@ impl QpLock {
 
 impl SharedLock for QpLock {
     fn handle(&self, ep: Endpoint, _pid: u32) -> Box<dyn LockHandle> {
-        // Reconstruct an Arc: SharedLock is object-safe, so we can't take
-        // `self: &Arc<Self>` here. QpLock is always created via `create`
-        // which returns Arc, and `handle` is called through that Arc.
-        // We clone the shared registers instead (they are Copy addresses).
-        let shared = Arc::new(QpLock {
-            victim: self.victim,
-            tail: self.tail,
-            home: self.home,
-            init_budget: self.init_budget,
-        });
-        let class = Class::of(&ep, self.home);
-        let desc = ep.alloc(2);
-        Box::new(QpHandle {
-            shared,
-            ep,
-            class,
-            desc,
-        })
+        // `SharedLock` is object-safe so this can't take `self:
+        // &Arc<Self>` — but the shared identity lives one level down in
+        // `self.inner`, which *is* an `Arc` we can clone. Every handle
+        // therefore shares the original `QpInner` (registers and
+        // counters), instead of the old bug of reconstructing a fresh
+        // lock object per handle.
+        Box::new(self.inner.mint(ep))
     }
 
     fn name(&self) -> &'static str {
@@ -119,15 +149,15 @@ impl SharedLock for QpLock {
     }
 
     fn home(&self) -> NodeId {
-        self.home
+        self.inner.home
     }
 }
 
 /// Per-process handle: endpoint, locality class, and the process's MCS
 /// descriptor (resident on the process's own node, so every wait in the
-/// cohort layer is a local spin).
+/// cohort layer is a local spin). Shares the lock's [`QpInner`].
 pub struct QpHandle {
-    shared: Arc<QpLock>,
+    shared: Arc<QpInner>,
     ep: Endpoint,
     class: Class,
     desc: Addr,
@@ -219,6 +249,7 @@ impl QpHandle {
         }
         // Enqueue behind `curr`: mark ourselves waiting *before* linking,
         // so the predecessor cannot pass the lock before we are ready.
+        self.shared.contended.fetch_add(1, Relaxed);
         self.ep.write_desc(self.desc, WAITING);
         self.peer_write(Addr::from_bits(curr).offset(NEXT), self.desc.to_bits());
         // Busy-wait locally on our own budget word (Algorithm 2 line 10),
@@ -519,5 +550,39 @@ mod tests {
     fn zero_budget_rejected() {
         let d = RdmaDomain::new(1, 256, DomainConfig::counted());
         let _ = QpLock::create(&d, 0, 0);
+    }
+
+    #[test]
+    fn handles_share_one_inner_identity() {
+        // The old `SharedLock::handle` rebuilt a fresh Arc<QpLock> per
+        // handle: register addresses happened to match, but per-lock
+        // host state diverged. Now every handle holds the original
+        // QpInner — counters accumulate across mint paths.
+        use crate::locks::SharedLock;
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 4);
+        assert_eq!(l.handles_minted(), 0);
+        let dyn_lock: &dyn SharedLock = l.as_ref();
+        let mut a = dyn_lock.handle(d.endpoint(0), 1);
+        let b = dyn_lock.handle(d.endpoint(0), 2);
+        let h3 = l.qp_handle(d.endpoint(1));
+        assert!(Arc::ptr_eq(&h3.shared, &l.inner), "same inner identity");
+        assert_eq!(l.handles_minted(), 3);
+        // Contention observed through dyn-minted handles lands on the
+        // lock object's own counter: hold via `a`, enqueue `b` behind
+        // it, and watch the shared counter tick (the old fresh-Arc
+        // reconstruction would have ticked a private copy instead).
+        a.lock();
+        let t = std::thread::spawn(move || {
+            let mut b = b;
+            b.lock();
+            b.unlock();
+        });
+        while l.contended_acquisitions() == 0 {
+            std::thread::yield_now();
+        }
+        a.unlock();
+        t.join().unwrap();
+        assert_eq!(l.contended_acquisitions(), 1);
     }
 }

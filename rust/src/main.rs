@@ -1,11 +1,14 @@
 //! `qplock` CLI — launcher for workload runs, experiments, the model
 //! checker, and the lock-service demo. See `qplock help`.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
 use qplock::cli::{Args, HELP};
-use qplock::coordinator::{run_workload, Cluster, CsWork, LockService, Workload};
+use qplock::coordinator::{
+    lock_name, run_multi_lock_workload, run_workload, Cluster, CsWork, LockService, Workload,
+};
 use qplock::locks::{make_lock, Class, ALGORITHMS};
 use qplock::mc::{self, models};
 use qplock::rdma::DomainConfig;
@@ -15,6 +18,7 @@ fn main() {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("bench") => cmd_bench(&args),
+        Some("multi-lock") => cmd_multi_lock(&args),
         Some("mc") => cmd_mc(&args),
         Some("serve") => cmd_serve(&args),
         Some("list") => cmd_list(),
@@ -80,6 +84,89 @@ fn cmd_run(args: &Args) {
     println!("remote verbs/acq {:.2}", r.remote_ops_per_acq());
 }
 
+fn cmd_multi_lock(args: &Args) {
+    let nlocks: u32 = args.get_num("locks", 10_000);
+    let skew: f64 = args.get_num("skew", 0.99);
+    let nprocs: u32 = args.get_num("procs", 6);
+    let nodes: u16 = args.get_num("nodes", 3);
+    let iters: u64 = args.get_num("iters", 2_000);
+    let algo = args.get_or("algo", "qplock");
+    let budget: u64 = args.get_num("budget", 8);
+    let cfg = if args.flag("timed") {
+        DomainConfig::timed()
+    } else {
+        DomainConfig::counted()
+    };
+
+    let cluster = Cluster::new(nodes, 1 << 21, cfg);
+    // Capacity sized to the process count: every process may touch every
+    // lock, and overflowing a lock's client slots is a hard error.
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, algo, budget).with_default_max_procs(nprocs.max(1)),
+    );
+    if args.flag("home0") {
+        for i in 0..nlocks {
+            svc.create_lock(&lock_name(i), algo, 0, nprocs.max(1), budget)
+                .expect("fresh table");
+        }
+    }
+    let procs = cluster.round_robin_procs(nprocs);
+    let mut wl = match args.get("millis") {
+        Some(ms) => Workload::timed(
+            Duration::from_millis(ms.parse().expect("--millis")),
+            CsWork::None,
+        ),
+        None => Workload::cycles(iters),
+    };
+    wl = wl.with_locks(nlocks, skew);
+
+    println!(
+        "multi-lock: algo={algo} locks={nlocks} skew={skew} procs={nprocs} \
+         nodes={nodes} placement={}",
+        if args.flag("home0") { "node0" } else { "hash" }
+    );
+    let r = run_multi_lock_workload(&svc, &procs, &wl);
+    println!(
+        "throughput {:.0} acq/s | total {} | jain {:.3} | violations {}",
+        r.throughput(),
+        r.total_acquisitions(),
+        r.jain(),
+        r.violations
+    );
+    println!(
+        "table: {} locks registered, {} touched | hottest lock {:.1}% of traffic",
+        svc.len(),
+        r.locks_touched(),
+        100.0 * r.hottest_share()
+    );
+    println!(
+        "handle cache: {:.1}% hits ({} handles minted across processes)",
+        100.0 * r.cache_hit_rate(),
+        r.procs.iter().map(|p| p.cache_misses).sum::<u64>()
+    );
+    println!(
+        "verbs: local-class remote verbs {} (paper: must be 0 for qplock) | \
+         remote-class verbs/acq {:.2}",
+        r.local_class_remote_verbs(),
+        r.remote_verbs_per_acq()
+    );
+    for p in &r.procs {
+        println!(
+            "  pid {:3} node {} | {:6} acq over {:4} locks | acquire p50 {} p99 {} ns",
+            p.pid,
+            p.node,
+            p.acquisitions,
+            p.distinct_locks,
+            p.acquire_ns.p50(),
+            p.acquire_ns.p99()
+        );
+    }
+    if r.violations > 0 {
+        eprintln!("MUTUAL EXCLUSION VIOLATED");
+        std::process::exit(1);
+    }
+}
+
 fn cmd_bench(args: &Args) {
     let scale = if args.flag("full") {
         Scale::Full
@@ -141,7 +228,8 @@ fn cmd_serve(args: &Args) {
     for i in 0..nlocks {
         let name = format!("shard-{i}");
         svc.ensure_lock(&name);
-        handles.push((name.clone(), svc.client(&name, (i % 3) as u16)));
+        let h = svc.client(&name, (i % 3) as u16).expect("mint client");
+        handles.push((name.clone(), h));
     }
     for (name, h) in &mut handles {
         h.lock();

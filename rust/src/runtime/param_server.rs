@@ -1,146 +1,50 @@
 //! Lock-protected parameter server — the end-to-end workload (E9).
 //!
-//! Shared state: an `(m, n)` f32 matrix updated via the AOT-compiled
-//! `step` executable (decayed rank-k update + convergence metric) and
-//! read via `apply` (probe multiplication). All mutation happens inside
-//! a critical section of whichever [`crate::locks::SharedLock`] the
+//! Shared state: an `(m, n)` f32 matrix updated via the native `step`
+//! kernel (decayed rank-k update + convergence metric) and read via
+//! `apply` (probe multiplication). All mutation happens inside a
+//! critical section of whichever [`crate::locks::SharedLock`] the
 //! experiment selects; the [`ParamServer`] itself is lock-agnostic so
 //! E9 can compare qplock against the baselines with identical compute.
 //!
-//! Threading: the `xla` crate's PJRT handles are `Rc`-based and not
-//! `Send`, so the server owns a dedicated **engine thread** that holds
-//! the client, the compiled executables, and the state; simulated
-//! processes talk to it over an mpsc channel. The channel hop is ~1 µs
-//! against a ~ms XLA step, and requests are serialized by the lock
-//! under test anyway. Python never runs here — the artifacts were
-//! compiled once by `make artifacts`.
+//! The state sits behind an internal `Mutex` purely so the server is
+//! `Sync` (simulated processes are OS threads). That mutex is **not**
+//! the synchronization under test — callers hold the distributed lock
+//! around `step`/`apply` so E9 measures each lock's coordination cost
+//! over identical compute. Note the inner mutex *does* serialize engine
+//! access on its own, so lock-correctness is observed by the runner's
+//! `CsChecker` oracle (which brackets the whole critical section), not
+//! by state corruption here.
 
-use std::sync::mpsc;
-use std::thread::JoinHandle;
+use std::sync::Mutex;
 
-use anyhow::{Context, Result};
-
-use super::XlaRuntime;
+use super::{kernels, ParamShape, Result, RuntimeError, XlaRuntime};
 use crate::util::prng::Prng;
 
-/// Dimensions must match the AOT artifacts (see `artifacts/manifest.txt`).
-#[derive(Clone, Copy, Debug)]
-pub struct ParamShape {
-    pub m: usize,
-    pub n: usize,
-    pub k: usize,
-    pub c: usize,
-}
-
-impl Default for ParamShape {
-    fn default() -> Self {
-        // aot.py defaults.
-        ParamShape {
-            m: 256,
-            n: 256,
-            k: 8,
-            c: 4,
-        }
-    }
-}
-
-enum Request {
-    Step {
-        u: Vec<f32>,
-        v: Vec<f32>,
-        reply: mpsc::Sender<Result<f32>>,
-    },
-    Apply {
-        x: Vec<f32>,
-        reply: mpsc::Sender<Result<Vec<f32>>>,
-    },
-    StateMsq {
-        reply: mpsc::Sender<f32>,
-    },
-    Shutdown,
-}
-
-/// The protected shared state plus its compiled compute, behind the
-/// engine thread.
+/// The protected shared state plus its compute kernels.
 pub struct ParamServer {
-    tx: mpsc::Sender<Request>,
-    worker: Option<JoinHandle<()>>,
+    state: Mutex<Vec<f32>>,
     shape: ParamShape,
 }
 
 impl ParamServer {
-    /// Load both artifacts from `dir` (normally `artifacts/`) into a
-    /// fresh engine thread. `_rt` is accepted for API symmetry but the
-    /// engine thread creates its own client (PJRT handles cannot cross
-    /// threads).
-    pub fn load(_rt: &XlaRuntime, dir: &str, shape: ParamShape) -> Result<ParamServer> {
-        let dir = dir.to_string();
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let worker = std::thread::spawn(move || {
-            let setup = (|| -> Result<_> {
-                let rt = XlaRuntime::cpu()?;
-                let step = rt
-                    .load(format!("{dir}/step.hlo.txt"))
-                    .context("loading step artifact (run `make artifacts`)")?;
-                let apply = rt
-                    .load(format!("{dir}/apply.hlo.txt"))
-                    .context("loading apply artifact")?;
-                Ok((rt, step, apply))
-            })();
-            let (_rt, step_engine, apply_engine) = match setup {
-                Ok(x) => {
-                    let _ = ready_tx.send(Ok(()));
-                    x
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let mut state = vec![0f32; shape.m * shape.n];
-            while let Ok(req) = rx.recv() {
-                match req {
-                    Request::Step { u, v, reply } => {
-                        let res = step_engine
-                            .run_f32(&[
-                                (&state, &[shape.m as i64, shape.n as i64]),
-                                (&u, &[shape.m as i64, shape.k as i64]),
-                                (&v, &[shape.n as i64, shape.k as i64]),
-                            ])
-                            .and_then(|outs| {
-                                anyhow::ensure!(outs.len() == 2, "step returns (state, metric)");
-                                state.copy_from_slice(&outs[0]);
-                                Ok(outs[1][0])
-                            });
-                        let _ = reply.send(res);
-                    }
-                    Request::Apply { x, reply } => {
-                        let res = apply_engine
-                            .run_f32(&[
-                                (&state, &[shape.m as i64, shape.n as i64]),
-                                (&x, &[shape.n as i64, shape.c as i64]),
-                            ])
-                            .map(|outs| outs.into_iter().next().unwrap());
-                        let _ = reply.send(res);
-                    }
-                    Request::StateMsq { reply } => {
-                        let msq =
-                            state.iter().map(|x| x * x).sum::<f32>() / state.len() as f32;
-                        let _ = reply.send(msq);
-                    }
-                    Request::Shutdown => break,
-                }
-            }
-        });
-        ready_rx
-            .recv()
-            .context("engine thread died during setup")??;
-        Ok(ParamServer {
-            tx,
-            worker: Some(worker),
+    /// Fresh zero state with the given shape/constants.
+    pub fn new(shape: ParamShape) -> ParamServer {
+        ParamServer {
+            state: Mutex::new(vec![0f32; shape.m * shape.n]),
             shape,
-        })
+        }
+    }
+
+    /// Constructor kept signature-compatible with the PJRT-era API:
+    /// `dir` used to hold AOT HLO artifacts. The native engine needs no
+    /// artifacts, so the directory is accepted and ignored — only the
+    /// shape is validated.
+    pub fn load(_rt: &XlaRuntime, _dir: &str, shape: ParamShape) -> Result<ParamServer> {
+        if shape.m == 0 || shape.n == 0 || shape.k == 0 {
+            return Err(RuntimeError(format!("degenerate shape {shape:?}")));
+        }
+        Ok(ParamServer::new(shape))
     }
 
     pub fn shape(&self) -> ParamShape {
@@ -148,31 +52,32 @@ impl ParamServer {
     }
 
     /// One protected write: `S ← decay·S + lr·U·Vᵀ`; returns the
-    /// convergence metric `mean(S'^2)`. **Caller must hold the lock
-    /// under test** — the engine thread serializes requests but is not
-    /// the synchronization mechanism being evaluated.
+    /// convergence metric `mean(S'²)`. **Caller must hold the lock
+    /// under test** — see the module docs.
     pub fn step(&self, u: &[f32], v: &[f32]) -> Result<f32> {
-        assert_eq!(u.len(), self.shape.m * self.shape.k);
-        assert_eq!(v.len(), self.shape.n * self.shape.k);
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Step {
-                u: u.to_vec(),
-                v: v.to_vec(),
-                reply,
-            })
-            .context("engine thread gone")?;
-        rx.recv().context("engine thread dropped the request")?
+        let sh = self.shape;
+        if u.len() != sh.m * sh.k || v.len() != sh.n * sh.k {
+            return Err(RuntimeError(format!(
+                "factor shapes {}x? / {}x? do not match {sh:?}",
+                u.len(),
+                v.len()
+            )));
+        }
+        let mut state = self.state.lock().unwrap();
+        Ok(kernels::rankk_update(&mut state, u, v, &sh))
     }
 
-    /// One protected read: `Y = S @ X`. Caller must hold the lock.
+    /// One protected read: `Y = S·X`. Caller must hold the lock.
     pub fn apply(&self, x: &[f32]) -> Result<Vec<f32>> {
-        assert_eq!(x.len(), self.shape.n * self.shape.c);
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Apply { x: x.to_vec(), reply })
-            .context("engine thread gone")?;
-        rx.recv().context("engine thread dropped the request")?
+        let sh = self.shape;
+        if x.len() != sh.n * sh.c {
+            return Err(RuntimeError(format!(
+                "probe length {} does not match {sh:?}",
+                x.len()
+            )));
+        }
+        let state = self.state.lock().unwrap();
+        Ok(kernels::apply(&state, x, &sh))
     }
 
     /// Deterministic per-step synthetic "gradient sketch" factors.
@@ -192,19 +97,42 @@ impl ParamServer {
     /// Frobenius-mean-square of the current state (readback for
     /// assertions and logging).
     pub fn state_msq(&self) -> f32 {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::StateMsq { reply })
-            .expect("engine thread gone");
-        rx.recv().expect("engine thread dropped the request")
+        let state = self.state.lock().unwrap();
+        state.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() as f32
+            / state.len() as f32
     }
 }
 
-impl Drop for ParamServer {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Request::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_rejects_degenerate_shapes() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let bad = ParamShape {
+            m: 0,
+            ..Default::default()
+        };
+        assert!(ParamServer::load(&rt, "unused", bad).is_err());
+    }
+
+    #[test]
+    fn step_and_apply_validate_input_lengths() {
+        let ps = ParamServer::new(ParamShape::default());
+        assert!(ps.step(&[0f32; 3], &[0f32; 3]).is_err());
+        assert!(ps.apply(&[0f32; 3]).is_err());
+    }
+
+    #[test]
+    fn metric_matches_state_msq_readback() {
+        let ps = ParamServer::new(ParamShape::default());
+        let (u, v) = ps.synth_factors(42);
+        let m1 = ps.step(&u, &v).unwrap();
+        let m2 = ps.state_msq();
+        assert!(
+            (m1 - m2).abs() <= 1e-6 * m1.abs().max(1e-12),
+            "engine metric {m1} vs readback {m2}"
+        );
     }
 }

@@ -103,6 +103,53 @@ impl Prng {
     }
 }
 
+/// Zipfian sampler over `{0, …, n−1}` with weight `1/(i+1)^s` — the
+/// standard skewed-keyspace model for lock-table workloads (YCSB-style;
+/// `s = 0` degenerates to uniform). Construction is O(n) and the table
+/// is immutable, so one `Zipf` can be shared (`Arc`) across every
+/// process thread of a run; sampling is a binary search over the CDF
+/// with the caller's own [`Prng`] stream.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: u32, s: f64) -> Zipf {
+        assert!(n >= 1, "empty support");
+        assert!(s >= 0.0 && s.is_finite(), "skew must be finite and >= 0");
+        let mut cdf = Vec::with_capacity(n as usize);
+        let mut acc = 0f64;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.cdf.len() as u32
+    }
+
+    /// Draw one rank (0 is the hottest key).
+    #[inline]
+    pub fn sample(&self, rng: &mut Prng) -> u32 {
+        let u = rng.f64();
+        self.cdf
+            .partition_point(|&c| c < u)
+            .min(self.cdf.len() - 1) as u32
+    }
+
+    /// Probability mass of rank 0 (the hottest key) — used by reports.
+    pub fn hottest_mass(&self) -> f64 {
+        self.cdf[0]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +210,57 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| p.exp(3.0)).sum::<f64>() / n as f64;
         assert!((mean - 3.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_uniform_when_s_zero() {
+        let z = Zipf::new(10, 0.0);
+        let mut rng = Prng::seed_from(3);
+        let mut counts = [0u64; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.1).abs() < 0.01, "frac {frac}");
+        }
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_on_low_ranks() {
+        let z = Zipf::new(1_000, 0.99);
+        let mut rng = Prng::seed_from(17);
+        let n = 50_000;
+        let mut hot = 0u64;
+        let mut monotone = [0u64; 4];
+        for _ in 0..n {
+            let r = z.sample(&mut rng);
+            if r == 0 {
+                hot += 1;
+            }
+            if r < 4 {
+                monotone[r as usize] += 1;
+            }
+        }
+        let hot_frac = hot as f64 / n as f64;
+        // Analytic mass of rank 0 at s=0.99, n=1000 is ~0.125.
+        assert!((hot_frac - z.hottest_mass()).abs() < 0.02, "{hot_frac}");
+        assert!(hot_frac > 0.08, "skew missing: {hot_frac}");
+        assert!(monotone[0] > monotone[1] && monotone[1] > monotone[2]);
+    }
+
+    #[test]
+    fn zipf_samples_cover_support_and_stay_in_range() {
+        let z = Zipf::new(17, 1.2);
+        let mut rng = Prng::seed_from(5);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20_000 {
+            let r = z.sample(&mut rng);
+            assert!(r < 17);
+            seen.insert(r);
+        }
+        assert!(seen.len() >= 12, "tail unreachable: {} ranks", seen.len());
     }
 
     #[test]

@@ -6,9 +6,38 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use qplock::bench::{run_experiment, Scale};
-use qplock::coordinator::{run_workload, Cluster, CsWork, LockService, Workload};
+use qplock::coordinator::{
+    run_multi_lock_workload, run_workload, Cluster, CsWork, LockService, Workload,
+};
 use qplock::locks::make_lock;
 use qplock::rdma::DomainConfig;
+
+#[test]
+fn ten_thousand_lock_zipfian_sweep_is_clean() {
+    // The tentpole acceptance run: a 10k-named-lock table, Zipfian
+    // draws, processes on 3 nodes, per-lock mutual-exclusion oracles —
+    // zero violations, and local-class qplock handles end the sweep
+    // with zero remote verbs.
+    let cluster = Cluster::new(3, 1 << 21, DomainConfig::counted());
+    let svc = Arc::new(LockService::new(&cluster.domain, "qplock", 8));
+    let procs = cluster.round_robin_procs(6);
+    let wl = Workload::cycles(300).with_locks(10_000, 0.99).with_seed(0xA110C);
+    let r = run_multi_lock_workload(&svc, &procs, &wl);
+    assert_eq!(r.violations, 0, "mutual exclusion violated");
+    assert_eq!(r.total_acquisitions(), 6 * 300);
+    assert_eq!(svc.len(), 10_000, "whole table registered");
+    assert!(r.locks_touched() > 100, "zipf tail unexplored");
+    assert_eq!(
+        r.local_class_remote_verbs(),
+        0,
+        "local-class handles must end the sweep NIC-clean"
+    );
+    // Skew showed up: the hottest lock got a clear plurality.
+    assert!(r.hottest_share() > 0.03, "share {}", r.hottest_share());
+    // Handle caching did its job: minted handles ≪ acquisitions.
+    let minted: u64 = r.procs.iter().map(|p| p.cache_misses).sum();
+    assert!(minted < r.total_acquisitions(), "no reuse happened");
+}
 
 #[test]
 fn service_multi_shard_concurrent_clients() {
@@ -29,8 +58,10 @@ fn service_multi_shard_concurrent_clients() {
             let svc = Arc::clone(&svc);
             let hits = Arc::clone(&hits);
             ts.push(std::thread::spawn(move || {
-                let mut handles: Vec<_> =
-                    shards.iter().map(|s| svc.client(s, node)).collect();
+                let mut handles: Vec<_> = shards
+                    .iter()
+                    .map(|s| svc.client(s, node).expect("mint client"))
+                    .collect();
                 for _ in 0..100 {
                     for (i, h) in handles.iter_mut().enumerate() {
                         h.lock();
@@ -55,11 +86,11 @@ fn service_multi_shard_concurrent_clients() {
 fn mixed_algorithms_in_one_service() {
     let cluster = Cluster::new(2, 1 << 16, DomainConfig::counted());
     let svc = LockService::new(&cluster.domain, "qplock", 8);
-    svc.create_lock("q", "qplock", 0, 4, 8);
-    svc.create_lock("m", "rdma-mcs", 1, 4, 8);
-    svc.create_lock("r", "rpc-server", 0, 4, 8);
+    svc.create_lock("q", "qplock", 0, 4, 8).unwrap();
+    svc.create_lock("m", "rdma-mcs", 1, 4, 8).unwrap();
+    svc.create_lock("r", "rpc-server", 0, 4, 8).unwrap();
     for name in ["q", "m", "r"] {
-        let mut h = svc.client(name, 1);
+        let mut h = svc.client(name, 1).unwrap();
         h.lock();
         h.unlock();
     }

@@ -9,7 +9,9 @@
 
 use std::sync::Arc;
 
-use qplock::coordinator::{run_workload, Cluster, CsWork, Workload};
+use qplock::coordinator::{
+    run_multi_lock_workload, run_workload, Cluster, CsWork, LockService, Workload,
+};
 use qplock::locks::make_lock;
 use qplock::rdma::{Addr, DomainConfig};
 use qplock::stats::{jain_index, Histogram};
@@ -137,6 +139,97 @@ fn prop_random_topologies_protect_shared_state() {
                     assert_eq!(p.ops.remote_total(), 0, "seed {seed}");
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn prop_service_end_to_end_op_asymmetry() {
+    // The paper's headline claim, end to end through the *service*
+    // (hash-routed placement, pid assignment, handle-cache sessions),
+    // over randomized topologies and lock names:
+    //  * a local-class qplock handle completes full lock/unlock cycles
+    //    with exactly ZERO remote verbs (and zero loopback) in its
+    //    ProcMetrics;
+    //  * an uncontended remote-class handle stays O(1): per acquisition
+    //    exactly 1 rCAS + 1 rWrite + 1 rRead, per release 1 rCAS —
+    //    independent of topology, name, or how many cycles ran.
+    for seed in seeds().take(8) {
+        let mut rng = Prng::seed_from(seed);
+        let nodes = 2 + rng.below(3) as u16;
+        let cycles = 20 + rng.below(200);
+        let name = format!("prop-lk-{}", rng.next_u64());
+
+        let c = Cluster::new(nodes, 1 << 16, DomainConfig::counted());
+        let svc = Arc::new(LockService::new(&c.domain, "qplock", 8));
+        let home = svc.route(&name);
+
+        // Local-class session: lives on the lock's home node.
+        let mut local_sess = svc.session(home);
+        for _ in 0..cycles {
+            local_sess.with_lock(&name, || {}).unwrap();
+        }
+        let ls = local_sess.local_class_metrics().snapshot();
+        let lr = local_sess.remote_class_metrics().snapshot();
+        assert_eq!(
+            ls.remote_total(),
+            0,
+            "seed {seed}: local class must never touch the NIC"
+        );
+        assert_eq!(ls.loopback, 0, "seed {seed}");
+        assert!(ls.local_total() > 0, "seed {seed}: cycles really ran");
+        assert_eq!(lr.remote_total(), 0, "seed {seed}: no remote handles minted");
+
+        // Remote-class session on some other node, uncontended.
+        let away = (home + 1) % nodes;
+        let mut remote_sess = svc.session(away);
+        for _ in 0..cycles {
+            remote_sess.with_lock(&name, || {}).unwrap();
+        }
+        let rs = remote_sess.remote_class_metrics().snapshot();
+        assert_eq!(rs.remote_cas, 2 * cycles, "seed {seed}: rCAS acquire+release");
+        assert_eq!(rs.remote_write, cycles, "seed {seed}: Peterson victim write");
+        assert_eq!(rs.remote_read, cycles, "seed {seed}: one other-tail check");
+        assert_eq!(rs.loopback, 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_multi_lock_table_random_configs() {
+    // Random table sizes, skews, and topologies through the sharded
+    // service: totals must be exact, mutual exclusion per named lock
+    // must hold, and local-class handles must stay off the NIC.
+    for seed in seeds().take(6) {
+        let mut rng = Prng::seed_from(seed);
+        let nodes = 2 + rng.below(3) as u16;
+        let nprocs = 2 + rng.below(5) as u32;
+        let nlocks = 1 + rng.below(512) as u32;
+        let skew = [0.0, 0.6, 0.99, 1.2][rng.below(4) as usize];
+        let iters = 40 + rng.below(120);
+
+        let c = Cluster::new(nodes, 1 << 19, DomainConfig::counted());
+        let svc = Arc::new(LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(nprocs);
+        let wl = Workload::cycles(iters)
+            .with_seed(seed)
+            .with_locks(nlocks, skew);
+        let r = run_multi_lock_workload(&svc, &procs, &wl);
+        assert_eq!(r.violations, 0, "seed {seed}");
+        assert_eq!(
+            r.total_acquisitions(),
+            nprocs as u64 * iters,
+            "seed {seed}"
+        );
+        assert_eq!(
+            r.per_lock_entries.iter().sum::<u64>(),
+            nprocs as u64 * iters,
+            "seed {seed}: every CS entry attributed to exactly one lock"
+        );
+        assert_eq!(svc.len(), nlocks as usize, "seed {seed}");
+        assert_eq!(r.local_class_remote_verbs(), 0, "seed {seed}");
+        for p in &r.procs {
+            assert!(p.distinct_locks <= nlocks as u64, "seed {seed}");
+            assert_eq!(p.cache_misses, p.distinct_locks, "seed {seed}");
         }
     }
 }
