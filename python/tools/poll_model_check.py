@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""Randomized cross-validation of the qplock poll state machine.
+
+A line-by-line transliteration of `rust/src/locks/qplock.rs`'s
+resumable acquisition machine (Idle -> Enqueue -> WaitBudget ->
+Reacquire/EngagePeterson -> Held, plus the `abandoning` drain), driven
+by a random single-"cluster" scheduler. Every poll step is atomic here
+exactly as one `poll_lock` call is atomic from the simulator's
+perspective, so the schedules explored are the interleavings the Rust
+runner can produce.
+
+Checked invariants, over many random seeds:
+  * mutual exclusion (at most one holder per lock, both cohorts);
+  * progress (every handle completes its target cycles; bounded steps);
+  * cancellation consistency (a cancelled enqueued waiter drains via
+    poll, relays the budget handoff, and waiters behind it still
+    acquire — no lost handoff);
+  * local-class handles never issue remote verbs, and a parked waiter's
+    poll issues zero remote verbs (the multiplexing keystone).
+
+Run: python3 python/tools/poll_model_check.py [seeds]
+Exits non-zero on any violation.
+"""
+
+import random
+import sys
+
+WAITING = -1  # the paper's "enqueued, not passed" sentinel
+LOCAL, REMOTE = 0, 1
+
+
+class Lock:
+    def __init__(self, home, budget):
+        self.home = home
+        self.budget = budget
+        self.victim = 0
+        self.tail = [None, None]  # per-class cohort tails (handle or None)
+        self.holder = None  # oracle only
+
+
+class Handle:
+    def __init__(self, lock, node, hid):
+        self.lock = lock
+        self.node = node
+        self.hid = hid
+        self.cls = LOCAL if node == lock.home else REMOTE
+        self.bud = 0  # descriptor: budget word
+        self.next = None  # descriptor: link word
+        self.state = "Idle"
+        self.curr = None  # Enqueue's last observed tail
+        self.abandoning = False
+        self.remote_verbs = 0
+
+    def _verb(self):
+        if self.cls == REMOTE:
+            self.remote_verbs += 1
+
+    # -- one poll_lock step; returns "Pending" | "Held" | "Cancelled" --
+    def poll(self):
+        if self.state == "Idle":
+            self.next = None
+            self.state, self.curr = "Enqueue", None
+            return self._step_enqueue()
+        if self.state == "Enqueue":
+            return self._step_enqueue()
+        if self.state == "WaitBudget":
+            return self._step_wait_budget()
+        if self.state in ("Reacquire", "EngagePeterson"):
+            return self._step_peterson()
+        assert self.state == "Held"
+        return "Held"
+
+    def _step_enqueue(self):
+        lk = self.lock
+        self._verb()  # tail CAS
+        seen = lk.tail[self.cls]
+        if seen is not self.curr:
+            self.curr = seen
+            return "Pending"
+        lk.tail[self.cls] = self  # CAS landed
+        if self.curr is None:
+            self.bud = lk.budget
+            self._verb()  # victim write
+            lk.victim = self.cls
+            self.state = "EngagePeterson"
+            return self._step_peterson()
+        self.bud = WAITING
+        self._verb()  # predecessor link write
+        self.curr.next = self
+        self.state = "WaitBudget"
+        return self._step_wait_budget()
+
+    def _step_wait_budget(self):
+        # Local read of our own budget word: NO verb.
+        if self.bud == WAITING:
+            return "Pending"
+        if self.bud == 0:
+            self._verb()  # victim write
+            self.lock.victim = self.cls
+            self.state = "Reacquire"
+            return self._step_peterson()
+        return self._finish()
+
+    def _step_peterson(self):
+        lk = self.lock
+        self._verb()  # other-tail read
+        if lk.tail[1 - self.cls] is not None:
+            self._verb()  # victim read
+            if lk.victim == self.cls:
+                return "Pending"
+        if self.state == "Reacquire":
+            self.bud = lk.budget
+        return self._finish()
+
+    def _finish(self):
+        self.state = "Held"
+        if self.abandoning:
+            self.abandoning = False
+            self.state = "Idle"
+            self._q_unlock()
+            return "Cancelled"
+        assert self.lock.holder is None, (
+            f"ME violated: {self.hid} vs {self.lock.holder.hid}"
+        )
+        self.lock.holder = self
+        return "Held"
+
+    def cancel(self):
+        if self.state == "Idle":
+            return True
+        if self.state == "Enqueue":
+            self.state = "Idle"
+            return True
+        if self.state == "Held":
+            self.unlock()
+            return True
+        self.abandoning = True
+        return False
+
+    def unlock(self):
+        assert self.lock.holder is self
+        self.lock.holder = None
+        self.state = "Idle"
+        self._q_unlock()
+
+    def _q_unlock(self):
+        lk = self.lock
+        if self.next is None:
+            self._verb()  # tail CAS
+            if lk.tail[self.cls] is self:
+                lk.tail[self.cls] = None
+                return
+            # CAS->link gap is atomic within a poll step: in this
+            # single-scheduler model the link must already be visible.
+            assert self.next is not None, "dangling CAS->link window"
+        assert self.bud >= 1
+        self.next.bud = self.bud - 1  # pass the lock
+
+
+def run_schedule(seed):
+    rng = random.Random(seed)
+    nodes = rng.randint(1, 3)
+    home = rng.randrange(nodes)
+    lock = Lock(home, rng.randint(1, 8))
+    n = rng.randint(2, 7)
+    handles = [Handle(lock, rng.randrange(nodes), i) for i in range(n)]
+    target = 25
+    completed = [0] * n
+    parked_verb_checks = 0
+    steps = 0
+    while sum(completed) < target * n:
+        steps += 1
+        assert steps < 2_000_000, f"seed {seed}: no progress"
+        h = rng.choice(handles)
+        if h.state == "Idle":
+            if completed[h.hid] >= target:
+                continue
+            if h.poll() == "Held":
+                pass  # hold; release on a later visit
+        elif h.state == "Held":
+            if lock.holder is h and rng.random() < 0.5:
+                h.unlock()
+                completed[h.hid] += 1
+        else:
+            if rng.random() < 0.15:
+                h.cancel()
+                continue
+            if h.state == "WaitBudget" and h.bud == WAITING:
+                # Parked waiter: this poll must be verb-free.
+                before = h.remote_verbs
+                h.poll()
+                if h.bud == WAITING:
+                    assert h.remote_verbs == before, (
+                        f"seed {seed}: parked poll issued remote verbs"
+                    )
+                    parked_verb_checks += 1
+            else:
+                h.poll()
+    for h in handles:
+        if h.cls == LOCAL:
+            assert h.remote_verbs == 0, f"seed {seed}: local class used NIC"
+    return parked_verb_checks
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 300
+    parked = 0
+    for seed in range(cases):
+        parked += run_schedule(seed)
+    print(f"poll-model check: {cases} random schedules clean "
+          f"({parked} parked-poll verb checks)")
+
+
+if __name__ == "__main__":
+    main()

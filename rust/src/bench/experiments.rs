@@ -1,11 +1,13 @@
-//! Experiment implementations E1–E9 (see DESIGN.md experiment index).
+//! Experiment implementations E1–E11 (see EXPERIMENTS.md roster).
 //!
 //! Each experiment regenerates one table/figure of the evaluation:
 //! E1 reproduces the paper's Table 1; E2 verifies the §3.1 analytical
 //! operation-count claims; E3–E7 are the standard RDMA-lock evaluation
 //! suite (throughput scaling, locality mix, budget/fairness, latency,
 //! loopback congestion); E8 reproduces the TLA+ verification battery;
-//! E9 is the end-to-end parameter-server run over the PJRT runtime.
+//! E9 is the end-to-end parameter-server run over the PJRT runtime;
+//! E10 sweeps the sharded multi-lock table; E11 compares
+//! thread-per-process against poll-multiplexed acquisition.
 //!
 //! Every experiment runs at two scales: `Quick` (cargo bench / CI) and
 //! `Full` (the numbers recorded in EXPERIMENTS.md).
@@ -15,7 +17,8 @@ use std::time::{Duration, Instant};
 
 use super::table::Table;
 use crate::coordinator::{
-    run_multi_lock_workload, run_workload, Cluster, CsWork, LockService, RunResult, Workload,
+    run_multi_lock_workload, run_multiplexed_workload, run_workload, Cluster, CsWork,
+    LockService, RunResult, Workload,
 };
 use crate::locks::{make_lock, Class};
 use crate::mc::{self, models};
@@ -65,6 +68,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "e10",
         "multi-lock: Zipfian sweep over the sharded lock service (K x skew x placement)",
     ),
+    (
+        "e11",
+        "async: thread-per-process vs poll-multiplexed acquisition (K x skew)",
+    ),
 ];
 
 /// Run one experiment by id.
@@ -80,6 +87,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExpOutput {
         "e8" => e8_model_check(scale),
         "e9" => e9_param_server(scale),
         "e10" => e10_multi_lock(scale),
+        "e11" => e11_multiplexed(scale),
         other => panic!("unknown experiment '{other}'"),
     }
 }
@@ -764,16 +772,123 @@ fn e10_multi_lock(scale: Scale) -> ExpOutput {
     }
 }
 
+// ------------------------------------------------------------------ E11
+
+/// Thread-per-process vs poll-multiplexed acquisition: the same
+/// Zipfian multi-lock workload driven (a) by one OS thread per
+/// simulated process parked in blocking `lock()` and (b) by a few OS
+/// threads round-robining poll-based sessions
+/// ([`run_multiplexed_workload`]). The asymmetry property that makes
+/// (b) viable — a parked waiter polls its own node's memory, zero
+/// remote verbs — is re-asserted per row.
+fn e11_multiplexed(scale: Scale) -> ExpOutput {
+    let (iters, sims, mux_threads) = match scale {
+        Scale::Quick => (50u64, 64u32, 4usize),
+        Scale::Full => (400, 256, 8),
+    };
+    // (K, skew): table size x contention shape.
+    let configs: &[(u32, f64)] = &[(100, 0.0), (100, 0.99), (10_000, 0.0), (10_000, 0.99)];
+    let mut t = Table::new(
+        "E11: thread-per-process vs poll-multiplexed (qplock, 3 nodes, counted mode)",
+        &[
+            "locks",
+            "skew",
+            "thr/proc-thread",
+            "thr/multiplexed",
+            "os-threads",
+            "local-rdma",
+            "p99 acq ns (mux)",
+            "violations",
+        ],
+    );
+    for &(k, skew) in configs {
+        let wl = Workload::cycles(iters).with_locks(k, skew);
+        let mut thr = vec![];
+        let mut local_rdma = 0u64;
+        let mut p99 = 0u64;
+        let mut violations = 0u64;
+        for mode in ["thread-per-process", "multiplexed"] {
+            let cluster = Cluster::new(3, 1 << 21, DomainConfig::counted());
+            let svc = Arc::new(
+                LockService::new(&cluster.domain, "qplock", 8).with_default_max_procs(sims),
+            );
+            let procs = cluster.round_robin_procs(sims);
+            let r = if mode == "multiplexed" {
+                run_multiplexed_workload(&svc, &procs, &wl, mux_threads)
+            } else {
+                run_multi_lock_workload(&svc, &procs, &wl)
+            };
+            assert_eq!(r.violations, 0, "{mode} violated mutual exclusion");
+            thr.push(r.throughput());
+            violations += r.violations;
+            if mode == "multiplexed" {
+                local_rdma = r.local_class_remote_verbs();
+                let mut h = crate::stats::Histogram::new();
+                for p in &r.procs {
+                    h.merge(&p.acquire_ns);
+                }
+                p99 = h.p99();
+            }
+        }
+        t.row(&[
+            k.to_string(),
+            format!("{skew:.2}"),
+            format!("{:.0}", thr[0]),
+            format!("{:.0}", thr[1]),
+            format!("{sims}->{mux_threads}"),
+            local_rdma.to_string(),
+            p99.to_string(),
+            violations.to_string(),
+        ]);
+    }
+    ExpOutput {
+        id: "e11",
+        tables: vec![t],
+        notes: vec![
+            format!(
+                "{sims} simulated processes x {iters} cycles per row; thread-per-process \
+                 burns {sims} OS threads, multiplexed drives the same workload on \
+                 {mux_threads} (poll-based sessions, round-robin scheduling)"
+            ),
+            "local-rdma = remote verbs through locally-homed handles in the multiplexed \
+             run — polling parked waiters must add zero (paper's local-spin waiting)"
+                .into(),
+            "acquire latency in multiplexed mode includes multiplexing delay \
+             (submit -> held across poll rounds)"
+                .into(),
+        ],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn registry_covers_all_ids() {
-        assert_eq!(EXPERIMENTS.len(), 10);
+        assert_eq!(EXPERIMENTS.len(), 11);
         for (id, _) in EXPERIMENTS {
             assert!(id.starts_with('e'));
         }
+    }
+
+    #[test]
+    fn e11_quick_compares_modes_side_by_side() {
+        // The acceptance run: 64 simulated processes over >= 100 named
+        // locks on 4 OS threads, zero oracle violations, local-class
+        // handles NIC-clean, and both mode columns populated.
+        let out = run_experiment("e11", Scale::Quick);
+        let t = &out.tables[0];
+        assert_eq!(t.rows(), 4);
+        for r in 0..t.rows() {
+            let tpp: f64 = t.cell(r, 2).parse().unwrap();
+            let mux: f64 = t.cell(r, 3).parse().unwrap();
+            assert!(tpp > 0.0, "row {r}: thread-per-process throughput");
+            assert!(mux > 0.0, "row {r}: multiplexed throughput");
+            assert_eq!(t.cell(r, 5), "0", "row {r}: local-class rdma");
+            assert_eq!(t.cell(r, 7), "0", "row {r}: violations");
+        }
+        assert_eq!(t.lookup("10000", 1), Some("0.00"));
     }
 
     #[test]

@@ -91,7 +91,7 @@ SUBCOMMANDS:
             --budget <n>       qplock/cohort budget (default 8)
             --cs-ns <ns>       critical-section busy work (default 0)
             --counted          zero-latency op-count mode
-  bench   run experiments (DESIGN.md E1..E10)
+  bench   run experiments (EXPERIMENTS.md E1..E11)
             --exp <id|all>     experiment id (default all)
             --full             full scale (default quick)
             --csv              also print CSV
@@ -108,6 +108,18 @@ SUBCOMMANDS:
             --algo <name>      lock algorithm (default qplock)
             --budget <n>       qplock/cohort budget (default 8)
             --home0            home every lock on node 0 (default: hash-routed)
+            --timed            calibrated-latency mode (default counted)
+  async   poll-multiplexed sweep: many simulated processes per OS
+          thread, each driving poll-based acquisitions over K named
+          locks through a session (no thread parked per process)
+            --sim-procs <n>    simulated processes (default 64)
+            --threads <t>      OS threads to multiplex onto (default 4)
+            --locks <K>        named locks in the table (default 100)
+            --skew <s>         Zipf skew, 0 = uniform (default 0.99)
+            --nodes <n>        cluster nodes (default 3)
+            --iters <n>        cycles per simulated process (default 200)
+            --millis <ms>      run for a duration instead of iters
+            --budget <n>       qplock budget (default 8)
             --timed            calibrated-latency mode (default counted)
   mc      model-check a spec (paper Appendix A)
             --model <name>     qplock|peterson|naive|spin (default qplock)

@@ -2,12 +2,15 @@
 //! service + router, the workload generator, and the multi-threaded
 //! process runner that drives every experiment.
 //!
-//! One simulated process = one OS thread bound to a node of the
-//! [`crate::rdma::RdmaDomain`]. The runner owns the experimental
-//! discipline: barrier-synchronized start, closed-loop
-//! think/lock/CS/unlock cycles, per-process latency histograms and verb
-//! counters, and an always-on mutual-exclusion oracle (a broken lock
-//! fails loudly in every experiment, not just dedicated tests).
+//! A simulated process is bound to a node of the
+//! [`crate::rdma::RdmaDomain`] — one OS thread each in the classic
+//! runners, or many per OS thread in the poll-multiplexed runner
+//! (poll-based acquisition through [`HandleCache`] sessions). The
+//! runners own the experimental discipline: barrier-synchronized
+//! start, closed-loop think/lock/CS/unlock cycles, per-process latency
+//! histograms and verb counters, a common measured window in timed
+//! mode, and an always-on mutual-exclusion oracle (a broken lock fails
+//! loudly in every experiment, not just dedicated tests).
 
 pub mod runner;
 pub mod service;
@@ -18,8 +21,8 @@ use std::sync::Arc;
 use crate::rdma::{DomainConfig, RdmaDomain};
 
 pub use runner::{
-    lock_name, run_multi_lock_workload, run_workload, MultiLockRunResult, MultiProcResult,
-    ProcResult, ProcSpec, RunResult,
+    lock_name, run_multi_lock_workload, run_multiplexed_workload, run_workload,
+    MultiLockRunResult, MultiProcResult, ProcResult, ProcSpec, RunResult,
 };
 pub use service::{HandleCache, LockService, LockServiceError};
 pub use workload::{CsWork, Workload};

@@ -1,14 +1,26 @@
 //! Multi-threaded workload execution with full instrumentation — the
-//! single-lock closed loop ([`run_workload`]) and the sharded-table
-//! multi-lock closed loop ([`run_multi_lock_workload`]).
+//! single-lock closed loop ([`run_workload`]), the sharded-table
+//! multi-lock closed loop ([`run_multi_lock_workload`]), and the
+//! poll-based multiplexed loop ([`run_multiplexed_workload`], many
+//! simulated processes per OS thread).
+//!
+//! **Timed-run discipline:** in duration mode every worker measures
+//! against one shared window end (set by the coordinating thread at
+//! barrier release). Cycles completing after the window — the drain of
+//! acquisitions still in flight when the clock ran out — execute to
+//! completion (an MCS waiter cannot abort) but are **excluded** from
+//! acquisition counts and histograms, and `wall` is the window length
+//! itself, not the last join. The seed accounting measured wall to the
+//! last join while counting drain cycles, biasing timed-mode
+//! throughput at high contention.
 
 use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::service::LockService;
 use super::workload::Workload;
-use crate::locks::{Class, CsChecker, SharedLock};
+use crate::locks::{Class, CsChecker, LockPoll, SharedLock};
 use crate::rdma::{NodeId, ProcMetricsSnapshot, RdmaDomain};
 use crate::stats::{jain_index, Histogram};
 use crate::util::prng::{Prng, Zipf};
@@ -93,6 +105,57 @@ impl RunResult {
     }
 }
 
+/// The shared measured-window plumbing of every runner: two barriers
+/// (ready, go) around the coordinating thread's window setup, so all
+/// workers measure against one deadline instead of per-thread clocks.
+struct RunWindow {
+    ready: Barrier,
+    go: Barrier,
+    /// Window end, set by the coordinator between the barriers
+    /// (duration mode only).
+    end: OnceLock<Instant>,
+}
+
+impl RunWindow {
+    fn new(parties: usize) -> Arc<RunWindow> {
+        Arc::new(RunWindow {
+            ready: Barrier::new(parties + 1),
+            go: Barrier::new(parties + 1),
+            end: OnceLock::new(),
+        })
+    }
+
+    /// Worker side: rendezvous, then learn the (optional) deadline.
+    fn enter(&self) -> Option<Instant> {
+        self.ready.wait();
+        self.go.wait();
+        self.end.get().copied()
+    }
+
+    /// Coordinator side: release the workers and return the run start.
+    fn open(&self, duration: Option<Duration>) -> Instant {
+        self.ready.wait();
+        let t0 = Instant::now();
+        if let Some(d) = duration {
+            self.end.set(t0 + d).expect("window opened once");
+        }
+        self.go.wait();
+        t0
+    }
+
+    /// Wall time of the measured window (call after joining workers):
+    /// the window length in duration mode — capped by time-to-last-join
+    /// for runs that exhausted their cycles early — and time-to-last-
+    /// join in counted mode.
+    fn wall(&self, t0: Instant) -> Duration {
+        let joined = t0.elapsed();
+        match self.end.get() {
+            Some(&dl) => joined.min(dl - t0),
+            None => joined,
+        }
+    }
+}
+
 /// Run `workload` with one thread per `ProcSpec`, all contending on
 /// `lock`. Returns per-process and aggregate measurements.
 pub fn run_workload(
@@ -103,7 +166,7 @@ pub fn run_workload(
 ) -> RunResult {
     let n = procs.len();
     assert!(n > 0);
-    let barrier = Arc::new(Barrier::new(n + 1));
+    let window = RunWindow::new(n);
     let stop = Arc::new(AtomicBool::new(false));
     let checker = CsChecker::new();
     let home = lock.home();
@@ -114,7 +177,7 @@ pub fn run_workload(
         let metrics = Arc::clone(&ep.metrics);
         let class = Class::of(&ep, home);
         let mut handle = lock.handle(ep, spec.pid);
-        let barrier = Arc::clone(&barrier);
+        let window = Arc::clone(&window);
         let stop = Arc::clone(&stop);
         let checker = Arc::clone(&checker);
         let wl = workload.clone();
@@ -123,14 +186,14 @@ pub fn run_workload(
             let mut cycle_ns = Histogram::new();
             let mut acquisitions = 0u64;
             let mut rng = Prng::seed_from(wl.seed ^ (spec.pid as u64).wrapping_mul(0xA24B));
-            barrier.wait();
-            let deadline = wl.duration.map(|d| Instant::now() + d);
+            let deadline = window.enter();
             for _ in 0..wl.iters {
                 if stop.load(SeqCst) {
                     break;
                 }
                 if let Some(dl) = deadline {
                     if Instant::now() >= dl {
+                        stop.store(true, SeqCst);
                         break;
                     }
                 }
@@ -145,6 +208,14 @@ pub fn run_workload(
                 checker.exit(spec.pid + 1);
                 handle.unlock();
                 let t2 = Instant::now();
+                if let Some(dl) = deadline {
+                    if t2 >= dl {
+                        // Drain: this cycle was in flight when the
+                        // window closed — excluded from the counts.
+                        stop.store(true, SeqCst);
+                        break;
+                    }
+                }
                 acquire_ns.record((t1 - t0).as_nanos() as u64);
                 cycle_ns.record((t2 - t0).as_nanos() as u64);
                 acquisitions += 1;
@@ -166,10 +237,9 @@ pub fn run_workload(
         }));
     }
 
-    barrier.wait();
-    let t0 = Instant::now();
+    let t0 = window.open(workload.duration);
     let procs: Vec<ProcResult> = joins.into_iter().map(|j| j.join().unwrap()).collect();
-    let wall = t0.elapsed();
+    let wall = window.wall(t0);
 
     RunResult {
         wall,
@@ -317,13 +387,13 @@ pub fn run_multi_lock_workload(
         Arc::new((0..nlocks).map(|_| CsChecker::default()).collect());
     let zipf = Arc::new(Zipf::new(nlocks, workload.zipf_s));
 
-    let barrier = Arc::new(Barrier::new(n + 1));
+    let window = RunWindow::new(n);
     let stop = Arc::new(AtomicBool::new(false));
 
     let mut joins = vec![];
     for spec in procs.iter().copied() {
         let mut session = service.session(spec.node);
-        let barrier = Arc::clone(&barrier);
+        let window = Arc::clone(&window);
         let stop = Arc::clone(&stop);
         let names = Arc::clone(&names);
         let checkers = Arc::clone(&checkers);
@@ -334,14 +404,14 @@ pub fn run_multi_lock_workload(
             let mut cycle_ns = Histogram::new();
             let mut acquisitions = 0u64;
             let mut rng = Prng::seed_from(wl.seed ^ (spec.pid as u64).wrapping_mul(0xA24B));
-            barrier.wait();
-            let deadline = wl.duration.map(|d| Instant::now() + d);
+            let deadline = window.enter();
             for _ in 0..wl.iters {
                 if stop.load(SeqCst) {
                     break;
                 }
                 if let Some(dl) = deadline {
                     if Instant::now() >= dl {
+                        stop.store(true, SeqCst);
                         break;
                     }
                 }
@@ -360,6 +430,13 @@ pub fn run_multi_lock_workload(
                 checkers[li].exit(spec.pid + 1);
                 handle.unlock();
                 let t2 = Instant::now();
+                if let Some(dl) = deadline {
+                    if t2 >= dl {
+                        // Drain cycle past the window end — excluded.
+                        stop.store(true, SeqCst);
+                        break;
+                    }
+                }
                 acquire_ns.record((t1 - t0).as_nanos() as u64);
                 cycle_ns.record((t2 - t0).as_nanos() as u64);
                 acquisitions += 1;
@@ -383,10 +460,9 @@ pub fn run_multi_lock_workload(
         }));
     }
 
-    barrier.wait();
-    let t0 = Instant::now();
+    let t0 = window.open(workload.duration);
     let procs: Vec<MultiProcResult> = joins.into_iter().map(|j| j.join().unwrap()).collect();
-    let wall = t0.elapsed();
+    let wall = window.wall(t0);
 
     MultiLockRunResult {
         wall,
@@ -396,10 +472,265 @@ pub fn run_multi_lock_workload(
     }
 }
 
+// ----------------------------------------------------- multiplexed runner
+
+/// What one simulated process of the multiplexed runner is doing.
+enum SimPhase {
+    /// Between cycles: draw the next lock (or finish).
+    Draw,
+    /// Modeled think time before the next draw.
+    Think { until: Instant },
+    /// An acquisition of lock index `li` is in flight; `t0` is the
+    /// submit instant.
+    Acquiring { li: usize, t0: Instant },
+    /// All cycles done (or the measured window closed).
+    Done,
+}
+
+/// One simulated process multiplexed onto a shared OS thread: its
+/// session, PRNG, phase, and measurements.
+struct SimProc {
+    spec: ProcSpec,
+    session: super::service::HandleCache,
+    rng: Prng,
+    phase: SimPhase,
+    done_cycles: u64,
+    acquire_ns: Histogram,
+    cycle_ns: Histogram,
+}
+
+/// Read-only per-thread context shared by every sim-process step.
+struct SimCtx {
+    names: Arc<Vec<String>>,
+    checkers: Arc<Vec<CsChecker>>,
+    zipf: Arc<Zipf>,
+    wl: Workload,
+    deadline: Option<Instant>,
+}
+
+impl SimProc {
+    /// Advance this process by one bounded, non-blocking step. Returns
+    /// `true` if any forward progress happened (used by the scheduler
+    /// to decide whether to yield the OS thread).
+    fn step(&mut self, ctx: &SimCtx) -> bool {
+        match self.phase {
+            SimPhase::Done => false,
+            SimPhase::Draw => {
+                if self.done_cycles >= ctx.wl.iters
+                    || ctx.deadline.is_some_and(|dl| Instant::now() >= dl)
+                {
+                    self.phase = SimPhase::Done;
+                    return true;
+                }
+                if ctx.wl.think_ns_mean > 0 {
+                    let ns = self.rng.exp(ctx.wl.think_ns_mean as f64) as u64;
+                    self.phase = SimPhase::Think {
+                        until: Instant::now() + Duration::from_nanos(ns),
+                    };
+                    return true;
+                }
+                self.submit_cycle(ctx)
+            }
+            SimPhase::Think { until } => {
+                if Instant::now() < until {
+                    return false;
+                }
+                // Back through Draw so the window/iteration checks run
+                // before the next submission.
+                self.phase = SimPhase::Draw;
+                true
+            }
+            SimPhase::Acquiring { li, t0 } => {
+                if self.session.poll_all().is_empty() {
+                    return false;
+                }
+                self.complete_cycle(li, t0, ctx);
+                true
+            }
+        }
+    }
+
+    /// Draw a lock Zipfian and submit its acquisition; uncontended
+    /// submissions complete (CS and all) within this step.
+    fn submit_cycle(&mut self, ctx: &SimCtx) -> bool {
+        let li = self.zipf_draw(ctx);
+        let t0 = Instant::now();
+        match self
+            .session
+            .submit(&ctx.names[li])
+            .expect("lock table capacity exceeded")
+        {
+            LockPoll::Held => self.complete_cycle(li, t0, ctx),
+            _ => self.phase = SimPhase::Acquiring { li, t0 },
+        }
+        true
+    }
+
+    fn zipf_draw(&mut self, ctx: &SimCtx) -> usize {
+        ctx.zipf.sample(&mut self.rng) as usize
+    }
+
+    /// The in-flight acquisition completed: run the critical section
+    /// under the per-lock oracle, release, and record the cycle —
+    /// unless the window closed mid-acquisition, in which case this is
+    /// a drain (the handoff was accepted and is relayed by the release;
+    /// the cycle is excluded from the counts).
+    fn complete_cycle(&mut self, li: usize, t0: Instant, ctx: &SimCtx) {
+        let t1 = Instant::now();
+        let pid = self.spec.pid;
+        ctx.checkers[li].enter(pid + 1);
+        ctx.wl.cs.run(pid);
+        ctx.checkers[li].exit(pid + 1);
+        self.session.release(&ctx.names[li]);
+        let t2 = Instant::now();
+        if ctx.deadline.is_some_and(|dl| t2 >= dl) {
+            self.phase = SimPhase::Done;
+            return;
+        }
+        self.acquire_ns.record((t1 - t0).as_nanos() as u64);
+        self.cycle_ns.record((t2 - t0).as_nanos() as u64);
+        self.done_cycles += 1;
+        self.phase = SimPhase::Draw;
+    }
+
+    fn into_result(self) -> MultiProcResult {
+        let (cache_hits, cache_misses) = self.session.stats();
+        MultiProcResult {
+            pid: self.spec.pid,
+            node: self.spec.node,
+            acquisitions: self.done_cycles,
+            distinct_locks: self.session.cached_handles() as u64,
+            cache_hits,
+            cache_misses,
+            acquire_ns: self.acquire_ns,
+            cycle_ns: self.cycle_ns,
+            local_class_ops: self.session.local_class_metrics().snapshot(),
+            remote_class_ops: self.session.remote_class_metrics().snapshot(),
+        }
+    }
+}
+
+/// Run `workload` with **many simulated processes per OS thread**: the
+/// `procs` are partitioned round-robin over `os_threads` threads, and
+/// each thread round-robins its processes through one bounded
+/// [`super::service::HandleCache::submit`]/`poll_all` step at a time
+/// instead of parking an OS thread inside `lock()` per process. This
+/// is what the paper's local-spin-only waiting buys operationally: a
+/// parked waiter's poll is a read of its own node's memory, so one
+/// thread can wait on thousands of named locks at once, and the
+/// thread-per-process ceiling on sweep size disappears.
+///
+/// Requires a poll-capable lock algorithm (qplock). Semantics match
+/// [`run_multi_lock_workload`]: per-lock oracles, Zipfian draws,
+/// per-process acquire/cycle histograms (measured submit→held, i.e.
+/// including multiplexing delay), class-split verb accounting, and the
+/// common-window timed-mode discipline.
+///
+/// Liveness note: a simulated process never holds a lock across steps
+/// (the critical section runs inside the completing step), and the
+/// qplock state machine's enqueue step is atomic within one poll, so
+/// round-robin stepping cannot deadlock across threads.
+pub fn run_multiplexed_workload(
+    service: &Arc<LockService>,
+    procs: &[ProcSpec],
+    workload: &Workload,
+    os_threads: usize,
+) -> MultiLockRunResult {
+    let n = procs.len();
+    assert!(n > 0);
+    assert!(os_threads >= 1, "at least one OS thread");
+    let nlocks = workload.locks;
+    assert!(nlocks >= 1);
+
+    // Pre-register the table and fail fast on undersized capacity,
+    // exactly like the thread-per-process runner.
+    let names: Arc<Vec<String>> = Arc::new((0..nlocks).map(lock_name).collect());
+    for name in names.iter() {
+        let free = service.ensure_free_slots(name);
+        assert!(
+            free as usize >= n,
+            "lock table capacity too small: '{name}' has {free} free client slots for {n} \
+             simulated processes (construct the service with with_default_max_procs(..))"
+        );
+    }
+    let checkers: Arc<Vec<CsChecker>> =
+        Arc::new((0..nlocks).map(|_| CsChecker::default()).collect());
+    let zipf = Arc::new(Zipf::new(nlocks, workload.zipf_s));
+
+    // Partition simulated processes round-robin over the OS threads.
+    let threads = os_threads.min(n);
+    let mut groups: Vec<Vec<SimProc>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, spec) in procs.iter().copied().enumerate() {
+        groups[i % threads].push(SimProc {
+            spec,
+            session: service.session(spec.node),
+            rng: Prng::seed_from(workload.seed ^ (spec.pid as u64).wrapping_mul(0xA24B)),
+            phase: SimPhase::Draw,
+            done_cycles: 0,
+            acquire_ns: Histogram::new(),
+            cycle_ns: Histogram::new(),
+        });
+    }
+
+    let window = RunWindow::new(threads);
+    let mut joins = vec![];
+    for mut sims in groups {
+        let window = Arc::clone(&window);
+        let names = Arc::clone(&names);
+        let checkers = Arc::clone(&checkers);
+        let zipf = Arc::clone(&zipf);
+        let wl = workload.clone();
+        joins.push(std::thread::spawn(move || {
+            let deadline = window.enter();
+            let ctx = SimCtx {
+                names,
+                checkers,
+                zipf,
+                wl,
+                deadline,
+            };
+            let mut live = sims.len();
+            while live > 0 {
+                let mut progressed = false;
+                for sim in sims.iter_mut() {
+                    let was_done = matches!(sim.phase, SimPhase::Done);
+                    progressed |= sim.step(&ctx);
+                    if !was_done && matches!(sim.phase, SimPhase::Done) {
+                        live -= 1;
+                    }
+                }
+                if !progressed {
+                    // Every process is parked (waiting on a handoff or
+                    // thinking): let the threads that owe those
+                    // handoffs run — essential when OS threads
+                    // outnumber cores.
+                    std::thread::yield_now();
+                }
+            }
+            sims.into_iter().map(SimProc::into_result).collect::<Vec<_>>()
+        }));
+    }
+
+    let t0 = window.open(workload.duration);
+    let mut results: Vec<MultiProcResult> = joins
+        .into_iter()
+        .flat_map(|j| j.join().unwrap())
+        .collect();
+    let wall = window.wall(t0);
+    results.sort_by_key(|p| p.pid);
+
+    MultiLockRunResult {
+        wall,
+        procs: results,
+        violations: checkers.iter().map(|c| c.violations()).sum(),
+        per_lock_entries: checkers.iter().map(|c| c.entries()).collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Cluster;
+    use crate::coordinator::{Cluster, CsWork};
     use crate::locks::make_lock;
     use crate::rdma::DomainConfig;
 
@@ -464,6 +795,95 @@ mod tests {
             assert!(p.distinct_locks >= 1);
             assert_eq!(p.cache_misses, p.distinct_locks);
         }
+    }
+
+    #[test]
+    fn timed_mode_wall_is_the_window_not_the_last_join() {
+        // 4 procs contend on one lock with a ~10ms critical section and
+        // a 40ms window: at most 4 cycles can *complete* inside the
+        // window, but at the stop instant up to 3 threads are parked in
+        // lock() and each drains one more full cycle. The seed
+        // accounting counted the drains and stretched wall to the last
+        // join (~70ms), biasing timed-mode throughput; the fixed window
+        // pins wall == duration and excludes drain cycles.
+        let c = Cluster::new(2, 1 << 14, DomainConfig::counted());
+        let lock = make_lock("qplock", &c.domain, 0, 4, 8);
+        let procs = c.spread_procs(4, 2, 0);
+        let d = Duration::from_millis(40);
+        let wl = Workload::timed(d, CsWork::SpinNs(10_000_000));
+        let r = run_workload(&c.domain, &lock, &procs, &wl);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.wall, d, "wall is the measured window, not the drain");
+        let acq = r.total_acquisitions();
+        assert!((1..=4).contains(&acq), "drain cycles leaked in: {acq}");
+        // Histograms only contain counted cycles.
+        assert_eq!(r.acquire_hist(None).count(), acq);
+    }
+
+    #[test]
+    fn multiplexed_matches_thread_per_process_semantics() {
+        // 12 simulated processes on 3 OS threads over 32 locks: every
+        // cycle completes, per-lock oracles stay clean, local-class
+        // handles never touch the NIC, sessions stay per-process.
+        let c = Cluster::new(3, 1 << 18, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(12);
+        let wl = Workload::cycles(100).with_locks(32, 0.9);
+        let r = run_multiplexed_workload(&svc, &procs, &wl, 3);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.total_acquisitions(), 12 * 100);
+        assert_eq!(r.per_lock_entries.iter().sum::<u64>(), 12 * 100);
+        assert_eq!(r.local_class_remote_verbs(), 0);
+        assert!(r.remote_verbs_per_acq() > 0.0);
+        assert!(r.throughput() > 0.0);
+        assert_eq!(r.procs.len(), 12);
+        for (i, p) in r.procs.iter().enumerate() {
+            assert_eq!(p.pid, i as u32, "results sorted by pid");
+            assert_eq!(p.acquisitions, 100);
+            assert_eq!(p.cache_misses, p.distinct_locks);
+            assert_eq!(p.acquire_ns.count(), 100);
+        }
+    }
+
+    #[test]
+    fn multiplexed_single_thread_runs_the_whole_cohort() {
+        // The degenerate extreme: every simulated process on ONE OS
+        // thread, all hammering a 4-lock table at heavy skew. Liveness
+        // rests on the enqueue step being atomic within a poll (no
+        // cross-process handoff can dangle mid-link) — this test hangs
+        // if a suspension point ever splits the tail CAS from the
+        // predecessor link.
+        let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 4));
+        let procs = c.round_robin_procs(8);
+        let wl = Workload::cycles(60).with_locks(4, 0.99);
+        let r = run_multiplexed_workload(&svc, &procs, &wl, 1);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.total_acquisitions(), 8 * 60);
+    }
+
+    #[test]
+    fn multiplexed_timed_mode_honors_the_window() {
+        let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(6);
+        let d = Duration::from_millis(30);
+        let wl = Workload::timed(d, CsWork::None).with_locks(8, 0.5);
+        let r = run_multiplexed_workload(&svc, &procs, &wl, 2);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.wall, d);
+        assert!(r.total_acquisitions() > 0);
+    }
+
+    #[test]
+    fn multiplexed_with_think_time_still_completes() {
+        let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(4);
+        let wl = Workload::cycles(20).with_locks(8, 0.0).with_think_ns(5_000);
+        let r = run_multiplexed_workload(&svc, &procs, &wl, 2);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.total_acquisitions(), 80);
     }
 
     #[test]

@@ -15,10 +15,9 @@
 //! stays observable per handle class at lock-table scale.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU32, Ordering::SeqCst};
 use std::sync::{Arc, Mutex};
 
-use crate::locks::{make_lock, LockHandle, SharedLock};
+use crate::locks::{make_lock, AsyncLockHandle, LockHandle, LockPoll, SharedLock};
 use crate::rdma::{Endpoint, NodeId, ProcMetrics, RdmaDomain};
 
 /// Default capacity (max processes per lock) when not specified.
@@ -66,23 +65,102 @@ pub fn fnv1a(name: &str) -> u64 {
     h
 }
 
+/// Pid-slot allocator for one lock: a high-water mark plus a free list
+/// of returned slots. Without the free list, `next` only ever grew —
+/// every session churn leaked its pid slots, so any long-lived service
+/// eventually wedged on `CapacityExhausted` (seed bug, fixed here).
+#[derive(Default)]
+struct PidPool {
+    next: u32,
+    free: Vec<u32>,
+}
+
 struct Entry {
     lock: Arc<dyn SharedLock>,
-    next_pid: AtomicU32,
+    pids: Mutex<PidPool>,
     max_procs: u32,
 }
 
 impl Entry {
-    /// Claim the next free pid, refusing past capacity (no silent
-    /// overflow into slot-indexed baselines' state arrays).
+    /// Claim a free pid — preferring returned slots — refusing past
+    /// capacity (no silent overflow into slot-indexed baselines' state
+    /// arrays).
     fn claim_pid(&self) -> Option<u32> {
-        self.next_pid
-            .fetch_update(SeqCst, SeqCst, |p| (p < self.max_procs).then_some(p + 1))
-            .ok()
+        let mut pool = self.pids.lock().unwrap();
+        if let Some(pid) = pool.free.pop() {
+            return Some(pid);
+        }
+        if pool.next < self.max_procs {
+            pool.next += 1;
+            Some(pool.next - 1)
+        } else {
+            None
+        }
+    }
+
+    /// Return a slot to the pool (called by [`SlotHandle`]'s drop).
+    fn release_pid(&self, pid: u32) {
+        let mut pool = self.pids.lock().unwrap();
+        debug_assert!(pid < self.max_procs);
+        debug_assert!(!pool.free.contains(&pid), "double release of pid {pid}");
+        pool.free.push(pid);
     }
 
     fn free_slots(&self) -> u32 {
-        self.max_procs.saturating_sub(self.next_pid.load(SeqCst))
+        let pool = self.pids.lock().unwrap();
+        self.max_procs - pool.next + pool.free.len() as u32
+    }
+}
+
+/// A minted client handle wrapping the algorithm's own handle with the
+/// pid-slot lease: dropping it returns the slot to the lock's
+/// [`PidPool`]. Every mint path ([`LockService::client`],
+/// [`HandleCache`]) goes through this guard, so closing a session (or
+/// dropping a one-off client) frees its capacity instead of leaking it.
+struct SlotHandle {
+    inner: Box<dyn LockHandle>,
+    entry: Arc<Entry>,
+    pid: u32,
+}
+
+impl LockHandle for SlotHandle {
+    fn lock(&mut self) {
+        self.inner.lock();
+    }
+
+    fn unlock(&mut self) {
+        self.inner.unlock();
+    }
+
+    fn algorithm(&self) -> &'static str {
+        self.inner.algorithm()
+    }
+
+    fn as_async(&mut self) -> Option<&mut dyn AsyncLockHandle> {
+        self.inner.as_async()
+    }
+}
+
+impl Drop for SlotHandle {
+    fn drop(&mut self) {
+        // A pid slot must not rejoin the pool while the algorithm still
+        // references it: the monotonic counter this replaced could leak
+        // slots but never alias a live pid. Dropping a held or enqueued
+        // handle is a caller bug (the lock wedges on the dangling
+        // descriptor); catch it in debug builds where the algorithm is
+        // poll-capable and its state is observable. Skipped mid-unwind:
+        // a panic elsewhere legitimately drops handles in any state.
+        #[cfg(debug_assertions)]
+        if !std::thread::panicking() {
+            if let Some(a) = self.inner.as_async() {
+                debug_assert!(
+                    !a.is_acquiring() && !a.is_held(),
+                    "handle dropped while held or acquiring: pid {} would alias live lock state",
+                    self.pid
+                );
+            }
+        }
+        self.entry.release_pid(self.pid);
     }
 }
 
@@ -162,7 +240,7 @@ impl LockService {
     fn make_entry(&self, algo: &str, home: NodeId, max_procs: u32, budget: u64) -> Arc<Entry> {
         Arc::new(Entry {
             lock: make_lock(algo, &self.domain, home, max_procs, budget),
-            next_pid: AtomicU32::new(0),
+            pids: Mutex::new(PidPool::default()),
             max_procs,
         })
     }
@@ -238,10 +316,12 @@ impl LockService {
         self.entry(name).free_slots()
     }
 
-    /// Claim a pid slot on `entry` and mint a handle bound to `ep`.
+    /// Claim a pid slot on `entry` and mint a handle bound to `ep`. The
+    /// returned handle leases the slot: dropping it releases the pid
+    /// back to the entry's pool.
     fn mint(
         name: &str,
-        entry: &Entry,
+        entry: &Arc<Entry>,
         ep: Endpoint,
     ) -> Result<Box<dyn LockHandle>, LockServiceError> {
         let pid = entry
@@ -250,12 +330,17 @@ impl LockService {
                 name: name.to_string(),
                 max_procs: entry.max_procs,
             })?;
-        Ok(entry.lock.handle(ep, pid))
+        Ok(Box::new(SlotHandle {
+            inner: entry.lock.handle(ep, pid),
+            entry: Arc::clone(entry),
+            pid,
+        }))
     }
 
     /// Mint a client handle for a process running on `node` (creating
-    /// the lock on demand). Assigns the next free pid for that lock;
-    /// errors once `max_procs` handles exist.
+    /// the lock on demand). Assigns a free pid for that lock — errors
+    /// while `max_procs` handles are live; dropping the handle returns
+    /// its slot.
     pub fn client(
         &self,
         name: &str,
@@ -326,12 +411,23 @@ impl LockService {
 /// `remote_metrics`. The split is what lets a multi-lock sweep still
 /// assert the paper's headline (local-class handles: zero remote verbs)
 /// even though one process usually holds handles of both classes.
+///
+/// Sessions also drive **poll-based acquisition**: [`HandleCache::submit`]
+/// starts a non-blocking acquisition of a named lock and
+/// [`HandleCache::poll_all`] advances every in-flight one by one step —
+/// one session (one OS thread) can wait on many named locks at once.
+/// Dropping the session returns every leased pid slot to the registry
+/// (handles are [`SlotHandle`]s), so churning sessions no longer leaks
+/// lock-table capacity.
 pub struct HandleCache {
     svc: Arc<LockService>,
     node: NodeId,
     local_metrics: Arc<ProcMetrics>,
     remote_metrics: Arc<ProcMetrics>,
     handles: HashMap<String, Box<dyn LockHandle>>,
+    /// Names with a submitted-but-unresolved acquisition, in submit
+    /// order (poll order is FIFO over submissions).
+    pending: Vec<String>,
     hits: u64,
     misses: u64,
 }
@@ -344,6 +440,7 @@ impl HandleCache {
             local_metrics: Arc::new(ProcMetrics::default()),
             remote_metrics: Arc::new(ProcMetrics::default()),
             handles: HashMap::new(),
+            pending: Vec::new(),
             hits: 0,
             misses: 0,
         }
@@ -390,6 +487,103 @@ impl HandleCache {
         let r = cs();
         h.unlock();
         Ok(r)
+    }
+
+    /// Start a poll-based acquisition of `name`, minting the handle on
+    /// first touch. Returns the first poll's outcome: `Held` if the
+    /// acquisition completed immediately (the uncontended fast path —
+    /// no later `poll_all` round needed), `Pending` if it is now in
+    /// flight. Submitting a name that is already pending just polls it.
+    ///
+    /// Panics if the lock's algorithm does not implement
+    /// [`AsyncLockHandle`] — a blocking fallback here would silently
+    /// stall every other in-flight acquisition of the session — or if
+    /// the session already holds `name` (a second "acquisition" would
+    /// be a lie, and the paired double-release would corrupt the
+    /// queue).
+    pub fn submit(&mut self, name: &str) -> Result<LockPoll, LockServiceError> {
+        if self.pending.iter().any(|n| n == name) {
+            return Ok(self.poll_one(name));
+        }
+        let algo = self.handle(name)?.algorithm();
+        let h = self.handles.get_mut(name).expect("just ensured").as_mut();
+        let Some(a) = h.as_async() else {
+            panic!("algorithm '{algo}' does not support poll-based acquisition");
+        };
+        assert!(
+            !a.is_held(),
+            "submit('{name}'): the session already holds this lock"
+        );
+        match a.poll_lock() {
+            LockPoll::Held => Ok(LockPoll::Held),
+            other => {
+                self.pending.push(name.to_string());
+                Ok(other)
+            }
+        }
+    }
+
+    /// Advance one pending acquisition by a single poll step, clearing
+    /// it from the pending set if it resolved.
+    fn poll_one(&mut self, name: &str) -> LockPoll {
+        let h = self.handles.get_mut(name).expect("pending implies minted");
+        let r = h.as_async().expect("pending implies async").poll_lock();
+        if r != LockPoll::Pending {
+            self.pending.retain(|n| n != name);
+        }
+        r
+    }
+
+    /// Poll every in-flight acquisition once, in submit order. Returns
+    /// the names that became **held** during this round (cancelled
+    /// acquisitions resolve silently). Each poll of a parked waiter is
+    /// a local read on this session's node — zero remote verbs — so a
+    /// session can afford to poll large pending sets tightly.
+    pub fn poll_all(&mut self) -> Vec<String> {
+        let HandleCache {
+            pending, handles, ..
+        } = self;
+        let mut held = Vec::new();
+        pending.retain(|name| {
+            let h = handles.get_mut(name).expect("pending implies minted");
+            match h.as_async().expect("pending implies async").poll_lock() {
+                LockPoll::Pending => true,
+                LockPoll::Held => {
+                    held.push(name.clone());
+                    false
+                }
+                LockPoll::Cancelled => false,
+            }
+        });
+        held
+    }
+
+    /// Release a lock acquired via [`HandleCache::submit`]/
+    /// [`HandleCache::poll_all`].
+    pub fn release(&mut self, name: &str) {
+        let h = self.handles.get_mut(name).expect("release of unminted lock");
+        h.unlock();
+    }
+
+    /// Abandon an in-flight acquisition of `name`. If the handle was
+    /// not yet queue-visible it detaches immediately; otherwise it
+    /// stays pending and later `poll_all` rounds drain it (the owed
+    /// handoff is relayed, never lost).
+    pub fn cancel(&mut self, name: &str) {
+        let Some(h) = self.handles.get_mut(name) else {
+            return;
+        };
+        let Some(a) = h.as_async() else {
+            return;
+        };
+        if a.cancel_lock() {
+            self.pending.retain(|n| n != name);
+        }
+    }
+
+    /// Acquisitions currently in flight (submitted, not yet resolved).
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
     }
 
     /// Distinct locks this session has touched.
@@ -580,6 +774,110 @@ mod tests {
         assert_eq!(ls.loopback, 0);
         assert!(ls.local_total() > 0);
         assert!(rs.remote_total() > 0, "remote-class handles use the NIC");
+    }
+
+    #[test]
+    fn churning_sessions_does_not_leak_pid_slots() {
+        // Seed bug: `next_pid` only grew, so any service that opened
+        // and closed more sessions than `max_procs` over its lifetime
+        // permanently wedged on CapacityExhausted. Slots are leases
+        // now: 16x the capacity in session churn must succeed.
+        let d = RdmaDomain::new(2, 1 << 18, DomainConfig::counted());
+        let s = Arc::new(LockService::new(&d, "qplock", 8).with_default_max_procs(4));
+        for i in 0..64u16 {
+            let mut sess = s.session(i % 2);
+            sess.with_lock("churn", || {}).unwrap();
+        }
+        assert_eq!(s.free_slots("churn"), Some(4), "all slots returned");
+    }
+
+    #[test]
+    fn dropped_client_handles_return_their_slots() {
+        let s = service();
+        s.create_lock("leasehold", "qplock", 0, 2, 8).unwrap();
+        for _ in 0..10 {
+            let _h0 = s.client("leasehold", 0).unwrap();
+            let _h1 = s.client("leasehold", 1).unwrap();
+            assert_eq!(s.free_slots("leasehold"), Some(0));
+            assert!(s.client("leasehold", 0).is_err(), "full while both live");
+        }
+        assert_eq!(s.free_slots("leasehold"), Some(2));
+    }
+
+    #[test]
+    fn submit_uncontended_completes_on_the_spot() {
+        let s = service_arc();
+        let mut sess = s.session(0);
+        assert_eq!(sess.submit("solo").unwrap(), LockPoll::Held);
+        assert_eq!(sess.pending_count(), 0);
+        sess.release("solo");
+    }
+
+    #[test]
+    fn session_drives_many_inflight_acquisitions() {
+        // One session waits on four named locks at once — the thing a
+        // blocking lock() fundamentally cannot do from one thread.
+        let s = service_arc();
+        let names: Vec<String> = (0..4).map(|i| format!("mx-{i}")).collect();
+        let mut holder = s.session(0);
+        for n in &names {
+            holder.handle(n).unwrap().lock();
+        }
+        let mut waiter = s.session(1);
+        for n in &names {
+            assert_eq!(waiter.submit(n).unwrap(), LockPoll::Pending);
+        }
+        assert_eq!(waiter.pending_count(), 4);
+        assert!(waiter.poll_all().is_empty(), "all four still held");
+        // Release two; exactly those two resolve.
+        holder.release(&names[1]);
+        holder.release(&names[3]);
+        let mut got = vec![];
+        while got.len() < 2 {
+            got.extend(waiter.poll_all());
+        }
+        got.sort();
+        assert_eq!(got, vec![names[1].clone(), names[3].clone()]);
+        assert_eq!(waiter.pending_count(), 2);
+        waiter.release(&names[1]);
+        waiter.release(&names[3]);
+        holder.release(&names[0]);
+        holder.release(&names[2]);
+        while waiter.pending_count() > 0 {
+            for n in waiter.poll_all() {
+                waiter.release(&n);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds this lock")]
+    fn double_submit_of_a_held_lock_panics() {
+        // Without the guard, the second submit would report Held for an
+        // acquisition that never happened, and the paired release would
+        // double-unlock the queue.
+        let s = service_arc();
+        let mut sess = s.session(0);
+        assert_eq!(sess.submit("dup").unwrap(), LockPoll::Held);
+        let _ = sess.submit("dup");
+    }
+
+    #[test]
+    fn session_cancel_of_queued_acquisition_drains_cleanly() {
+        let s = service_arc();
+        let mut holder = s.session(0);
+        holder.handle("c").unwrap().lock();
+        let mut w = s.session(1);
+        assert_eq!(w.submit("c").unwrap(), LockPoll::Pending);
+        w.cancel("c"); // queued: cannot unlink; drains via poll_all
+        assert_eq!(w.pending_count(), 1);
+        holder.release("c");
+        while w.pending_count() > 0 {
+            assert!(w.poll_all().is_empty(), "cancelled: never reported held");
+        }
+        // The lock is free again for anyone.
+        let mut z = s.session(2);
+        z.with_lock("c", || {}).unwrap();
     }
 
     #[test]

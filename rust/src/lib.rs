@@ -8,11 +8,13 @@
 //! Layer map:
 //! * [`rdma`] — simulated RDMA fabric (registers, verbs, NIC atomicity
 //!   semantics, latency/congestion model).
-//! * [`locks`] — the paper's qplock plus every baseline.
+//! * [`locks`] — the paper's qplock (blocking *and* poll-based
+//!   acquisition over one resumable state machine) plus every baseline.
 //! * [`mc`] — explicit-state model checker over the PlusCal spec.
 //! * [`coordinator`] — cluster topology, the sharded named-lock service
-//!   (striped registry, handle-cache sessions, multi-lock Zipfian
-//!   runner), and the single-lock workload runner.
+//!   (striped registry, handle-cache sessions with pid-slot leases and
+//!   submit/poll_all multiplexing, multi-lock Zipfian runner,
+//!   poll-multiplexed runner), and the single-lock workload runner.
 //! * [`runtime`] — compute engine executing the reference-kernel math
 //!   inside critical sections (native port of the JAX/Pallas kernels;
 //!   see `runtime/mod.rs` for the PJRT substitution note).

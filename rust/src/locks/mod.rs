@@ -48,6 +48,30 @@ impl Class {
     }
 }
 
+/// Outcome of one [`AsyncLockHandle::poll_lock`] step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockPoll {
+    /// The acquisition is in flight — poll again.
+    Pending,
+    /// The lock is now held; release with [`LockHandle::unlock`].
+    Held,
+    /// A cancelled acquisition finished draining: the handoff it was
+    /// owed has been received and relayed, and the handle is idle again.
+    Cancelled,
+}
+
+impl LockPoll {
+    #[inline]
+    pub fn is_held(self) -> bool {
+        self == LockPoll::Held
+    }
+
+    #[inline]
+    pub fn is_pending(self) -> bool {
+        self == LockPoll::Pending
+    }
+}
+
 /// A process's handle on a shared lock. Handles are not `Sync`: one
 /// handle per process, used from that process's thread only.
 pub trait LockHandle: Send {
@@ -57,6 +81,47 @@ pub trait LockHandle: Send {
     fn unlock(&mut self);
     /// Algorithm name (for reports).
     fn algorithm(&self) -> &'static str;
+    /// Non-blocking view of this handle, if the algorithm supports
+    /// poll-based acquisition. The default is `None` (blocking only);
+    /// algorithms whose waiting is a pure local spin (qplock — the
+    /// paper's remote path waits on the process's own node) override
+    /// this, which is what lets one OS thread drive many in-flight
+    /// acquisitions through [`crate::coordinator::HandleCache`].
+    fn as_async(&mut self) -> Option<&mut dyn AsyncLockHandle> {
+        None
+    }
+}
+
+/// Poll-based acquisition: the blocking protocol decomposed into a
+/// resumable state machine. There is exactly **one** protocol
+/// implementation — [`LockHandle::lock`] on an async-capable handle is
+/// `loop { poll_lock }` — so every blocking test exercises these steps.
+pub trait AsyncLockHandle: LockHandle {
+    /// Advance the acquisition by one bounded step, without blocking.
+    /// The first call after idle *submits* (starts the acquisition);
+    /// subsequent calls resume it. Returns [`LockPoll::Held`] once the
+    /// lock is owned. Each step issues O(1) verbs; for a queued waiter
+    /// the step is a read of its **own node's** memory, so polling a
+    /// pending acquisition costs zero remote verbs per poll.
+    fn poll_lock(&mut self) -> LockPoll;
+
+    /// Abandon an in-flight acquisition. Returns `true` if the handle
+    /// detached immediately (it had not yet made itself visible in the
+    /// lock's queue — or it already held the lock, which is released).
+    /// Returns `false` if the handle is already enqueued: MCS-style
+    /// queues cannot unlink a waiter, so the caller must keep calling
+    /// [`AsyncLockHandle::poll_lock`] until it returns
+    /// [`LockPoll::Cancelled`] — the handle accepts the handoff it is
+    /// owed and immediately relays it, so no handoff is lost and
+    /// waiters behind it still make progress.
+    fn cancel_lock(&mut self) -> bool;
+
+    /// True iff an acquisition has been submitted and neither completed
+    /// nor finished cancelling.
+    fn is_acquiring(&self) -> bool;
+
+    /// True iff the lock is currently owned through this handle.
+    fn is_held(&self) -> bool;
 }
 
 /// The shared side of a lock: knows how to mint per-process handles.

@@ -34,11 +34,20 @@
 //! ```
 //!
 //! `budget = u64::MAX` encodes the paper's −1 ("enqueued, not passed").
+//!
+//! Acquisition is a **resumable state machine** (`Idle → Enqueue →
+//! WaitBudget → Reacquire → Held`, leaders short-cutting through
+//! `EngagePeterson`), exposed non-blockingly via
+//! [`super::AsyncLockHandle::poll_lock`]; the blocking
+//! [`super::LockHandle::lock`] is a poll loop over the same machine.
+//! Because the remote path waits by local spinning only, every poll of
+//! a parked waiter is a read of the process's own node — which is what
+//! lets one OS thread multiplex thousands of in-flight acquisitions.
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Arc;
 
-use super::{Class, LockHandle, SharedLock};
+use super::{AsyncLockHandle, Class, LockHandle, LockPoll, SharedLock};
 use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
 use crate::util::spin::Backoff;
 
@@ -129,6 +138,8 @@ impl QpInner {
             ep,
             class,
             desc,
+            state: AcqState::Idle,
+            abandoning: false,
         }
     }
 }
@@ -153,6 +164,33 @@ impl SharedLock for QpLock {
     }
 }
 
+/// Resumable acquisition state (paper Algorithms 1 + 2, decomposed into
+/// the suspension points a non-blocking poll can park at). The blocking
+/// path is `loop { poll }` over exactly this machine, so there is one
+/// protocol implementation, not two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum AcqState {
+    /// No acquisition in flight.
+    Idle,
+    /// Descriptor initialized; swapping into the cohort tail. `curr` is
+    /// the last observed tail value (the CAS's next `expected`). Until
+    /// the CAS lands the process is **not visible** in the queue —
+    /// cancellation from here is immediate.
+    Enqueue { curr: u64 },
+    /// Enqueued behind a predecessor; waiting for the budget word to be
+    /// written (Algorithm 2 line 10). A pure local spin — each poll is
+    /// one read of the process's own node's memory, zero remote verbs.
+    WaitBudget,
+    /// Budget arrived exhausted (0): victim is written, waiting to
+    /// re-acquire the Peterson lock (Algorithm 2 lines 11-13).
+    Reacquire,
+    /// Cohort leader: victim is written, waiting for the other cohort
+    /// to unlock or yield (Algorithm 1).
+    EngagePeterson,
+    /// The lock is owned; `unlock()` releases it.
+    Held,
+}
+
 /// Per-process handle: endpoint, locality class, and the process's MCS
 /// descriptor (resident on the process's own node, so every wait in the
 /// cohort layer is a local spin). Shares the lock's [`QpInner`].
@@ -161,6 +199,11 @@ pub struct QpHandle {
     ep: Endpoint,
     class: Class,
     desc: Addr,
+    state: AcqState,
+    /// Cancellation requested after the handle became queue-visible:
+    /// on reaching `Held` the handle releases immediately instead of
+    /// reporting ownership (the drain keeps the handoff chain intact).
+    abandoning: bool,
 }
 
 impl QpHandle {
@@ -214,62 +257,109 @@ impl QpHandle {
         }
     }
 
-    // ---- budgeted MCS cohort lock (paper Algorithm 2) ----
+    // ---- budgeted MCS cohort lock (paper Algorithm 2), poll steps ----
 
-    /// `qLock()`: enqueue into this class's cohort queue. Returns `true`
-    /// iff the queue was empty — the caller is the cohort *leader* and
-    /// must engage the Peterson protocol; `false` means the Peterson lock
-    /// was handed over inside the cohort.
-    fn q_lock(&mut self) -> bool {
-        let tail = self.shared.tail[self.class.idx()];
+    /// Submit: initialize the descriptor and enter `Enqueue`. Runs the
+    /// first enqueue attempt in the same step, so an uncontended
+    /// acquisition completes in a single poll with the paper's verb
+    /// counts (one rCAS for a lone remote process).
+    fn step_submit(&mut self) -> LockPoll {
         // Descriptor init (local writes: desc is ours). Perf note
         // (EXPERIMENTS.md §Perf): the budget word is written *after* the
         // tail swap decides our role — the leader keeps kInit, a waiter
         // needs WAITING — saving one store on every acquisition vs. the
         // paper's "init both fields first" presentation. Safe because a
         // predecessor can only touch our budget after we link (line 9),
-        // which happens after the WAITING store below. `next` must be
-        // null *before* the swap: a successor may link the instant the
-        // tail CAS lands.
+        // which happens after the WAITING store in `step_enqueue`.
+        // `next` must be null *before* the swap: a successor may link
+        // the instant the tail CAS lands.
         self.ep.write_desc(self.desc.offset(NEXT), 0);
-        // Swap ourselves in as the new tail (CAS loop, curr updated on
-        // failure — Algorithm 2 line 4).
-        let mut curr = 0u64;
-        loop {
-            let seen = self.home_cas(tail, curr, self.desc.to_bits());
-            if seen == curr {
-                break;
-            }
-            curr = seen;
+        self.state = AcqState::Enqueue { curr: 0 };
+        self.step_enqueue()
+    }
+
+    /// One tail-CAS attempt (Algorithm 2 line 4). On failure the
+    /// observed tail becomes the next attempt's `expected` and the
+    /// process stays outside the queue. On success the step finishes
+    /// the role decision *atomically within this poll*: either leader
+    /// (budget = kInit, engage Peterson) or waiter (mark WAITING, link
+    /// behind the predecessor). The CAS→link window therefore never
+    /// spans a suspension point — `q_unlock`'s wait-for-link spin can
+    /// only ever be closed by a concurrently *running* poll, which is
+    /// what keeps one-OS-thread multiplexing deadlock-free.
+    fn step_enqueue(&mut self) -> LockPoll {
+        let AcqState::Enqueue { curr } = self.state else {
+            unreachable!("step_enqueue outside Enqueue");
+        };
+        let tail = self.shared.tail[self.class.idx()];
+        let seen = self.home_cas(tail, curr, self.desc.to_bits());
+        if seen != curr {
+            self.state = AcqState::Enqueue { curr: seen };
+            return LockPoll::Pending;
         }
         if curr == 0 {
-            // Queue was empty: we are the leader; set budget = kInit.
+            // Queue was empty: we are the leader; set budget = kInit and
+            // engage the Peterson protocol (victim write is the
+            // engagement's one store — Algorithm 1).
             self.ep.write_desc(self.desc, self.shared.init_budget);
-            return true;
+            self.home_write(self.shared.victim, self.class.idx() as u64);
+            self.state = AcqState::EngagePeterson;
+            return self.step_peterson();
         }
         // Enqueue behind `curr`: mark ourselves waiting *before* linking,
         // so the predecessor cannot pass the lock before we are ready.
         self.shared.contended.fetch_add(1, Relaxed);
         self.ep.write_desc(self.desc, WAITING);
         self.peer_write(Addr::from_bits(curr).offset(NEXT), self.desc.to_bits());
-        // Busy-wait locally on our own budget word (Algorithm 2 line 10),
-        // remembering the handed-over value (saves a re-read on exit).
-        let mut bo = Backoff::default();
-        let mut budget;
-        loop {
-            budget = self.ep.read_desc(self.desc);
-            if budget != WAITING {
-                break;
-            }
-            bo.snooze();
+        self.state = AcqState::WaitBudget;
+        self.step_wait_budget()
+    }
+
+    /// One probe of our own budget word (Algorithm 2 line 10) — a local
+    /// read on the process's node, never a remote verb, no matter how
+    /// many times a multiplexer polls a parked waiter.
+    fn step_wait_budget(&mut self) -> LockPoll {
+        let budget = self.ep.read_desc(self.desc);
+        if budget == WAITING {
+            return LockPoll::Pending;
         }
-        // Budget exhausted: yield the global lock to the other class and
-        // re-acquire it (fairness — Algorithm 2 lines 11-13).
         if budget == 0 {
-            self.p_reacquire();
+            // Budget exhausted: yield the global lock to the other class
+            // and re-acquire it (fairness — Algorithm 2 lines 11-13).
+            self.home_write(self.shared.victim, self.class.idx() as u64);
+            self.state = AcqState::Reacquire;
+            return self.step_peterson();
+        }
+        self.finish_acquisition()
+    }
+
+    /// One probe of the Peterson wait condition (Algorithm 1): the
+    /// other cohort is unlocked, or we are no longer the victim. Serves
+    /// both `EngagePeterson` (leader) and `Reacquire` (budget
+    /// exhaustion); the latter refills the budget word on completion.
+    fn step_peterson(&mut self) -> LockPoll {
+        let me = self.class.idx() as u64;
+        if self.other_cohort_locked() && self.home_read(self.shared.victim) == me {
+            return LockPoll::Pending;
+        }
+        if self.state == AcqState::Reacquire {
             self.ep.write_desc(self.desc, self.shared.init_budget);
         }
-        false
+        self.finish_acquisition()
+    }
+
+    /// The acquisition just completed. Normally: report `Held`. Under a
+    /// pending cancellation: release immediately — the handoff we were
+    /// owed is relayed to any successor — and report `Cancelled`.
+    fn finish_acquisition(&mut self) -> LockPoll {
+        self.state = AcqState::Held;
+        if self.abandoning {
+            self.abandoning = false;
+            self.state = AcqState::Idle;
+            self.q_unlock();
+            return LockPoll::Cancelled;
+        }
+        LockPoll::Held
     }
 
     /// `qUnlock()`: release the cohort lock — either reset the tail (also
@@ -300,44 +390,87 @@ impl QpHandle {
         self.home_read(self.shared.tail[1 - self.class.idx()]) != 0
     }
 
-    // ---- modified Peterson lock (paper Algorithm 1) ----
-
-    /// Global-lock engagement for a cohort leader: set ourselves as the
-    /// victim, then wait until the other cohort is unlocked or yields.
-    fn p_engage(&mut self) {
-        let me = self.class.idx() as u64;
-        self.home_write(self.shared.victim, me);
-        let mut bo = Backoff::default();
-        while self.other_cohort_locked() && self.home_read(self.shared.victim) == me {
-            bo.snooze();
-        }
-    }
-
-    /// `pReacquire()` (Algorithm 1 line 12): release-and-reacquire the
-    /// global lock — yields to a waiting opposite-class leader, then
-    /// takes the lock back. Called on budget exhaustion.
-    fn p_reacquire(&mut self) {
-        self.p_engage();
+    /// Current acquisition state (test/diagnostic visibility).
+    #[cfg(test)]
+    fn acq_state(&self) -> AcqState {
+        self.state
     }
 }
 
 impl LockHandle for QpHandle {
     /// `pLock()` (Algorithm 1): cohort first; leaders engage Peterson.
+    /// Implemented as a poll loop over the resumable state machine —
+    /// the one protocol implementation — with the same local-spin
+    /// backoff discipline the monolithic version used.
     fn lock(&mut self) {
-        let is_leader = self.q_lock();
-        if is_leader {
-            self.p_engage();
+        debug_assert_eq!(self.state, AcqState::Idle, "lock() while acquiring");
+        let mut bo = Backoff::default();
+        while self.poll_lock().is_pending() {
+            bo.snooze();
         }
     }
 
     /// `pUnlock()` (Algorithm 1): release the cohort lock; releasing the
     /// tail releases the Peterson flag implicitly.
     fn unlock(&mut self) {
+        debug_assert_eq!(self.state, AcqState::Held, "unlock() without holding");
+        self.state = AcqState::Idle;
         self.q_unlock();
     }
 
     fn algorithm(&self) -> &'static str {
         "qplock"
+    }
+
+    fn as_async(&mut self) -> Option<&mut dyn AsyncLockHandle> {
+        Some(self)
+    }
+}
+
+impl AsyncLockHandle for QpHandle {
+    fn poll_lock(&mut self) -> LockPoll {
+        match self.state {
+            AcqState::Idle => self.step_submit(),
+            AcqState::Enqueue { .. } => self.step_enqueue(),
+            AcqState::WaitBudget => self.step_wait_budget(),
+            AcqState::Reacquire | AcqState::EngagePeterson => self.step_peterson(),
+            AcqState::Held => LockPoll::Held,
+        }
+    }
+
+    fn cancel_lock(&mut self) -> bool {
+        match self.state {
+            // Nothing in flight. (`Idle` implies `!abandoning`: a drain
+            // clears the flag before parking the state back at `Idle`.)
+            AcqState::Idle => true,
+            // Not yet visible in the queue: the tail CAS has not landed
+            // (a landed CAS transitions out of Enqueue within the same
+            // poll), so nobody can be waiting on our descriptor.
+            AcqState::Enqueue { .. } => {
+                self.state = AcqState::Idle;
+                true
+            }
+            // Enqueued (or owed the Peterson lock): drain via poll until
+            // `Cancelled` — the handoff is accepted and relayed.
+            AcqState::WaitBudget | AcqState::Reacquire | AcqState::EngagePeterson => {
+                self.abandoning = true;
+                false
+            }
+            // Already held: cancelling releases on the spot.
+            AcqState::Held => {
+                self.state = AcqState::Idle;
+                self.q_unlock();
+                true
+            }
+        }
+    }
+
+    fn is_acquiring(&self) -> bool {
+        !matches!(self.state, AcqState::Idle | AcqState::Held)
+    }
+
+    fn is_held(&self) -> bool {
+        self.state == AcqState::Held
     }
 }
 
@@ -550,6 +683,135 @@ mod tests {
     fn zero_budget_rejected() {
         let d = RdmaDomain::new(1, 256, DomainConfig::counted());
         let _ = QpLock::create(&d, 0, 0);
+    }
+
+    #[test]
+    fn poll_uncontended_acquisition_completes_in_one_poll() {
+        // The submit step chains through enqueue and Peterson engagement
+        // when nothing contends, so poll #1 returns Held with exactly
+        // the blocking path's verb counts.
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut h = l.qp_handle(d.endpoint(1));
+        let before = h.ep.metrics.snapshot();
+        assert_eq!(h.poll_lock(), LockPoll::Held);
+        let acq = h.ep.metrics.snapshot() - before;
+        assert_eq!(acq.remote_cas, 1);
+        assert_eq!(acq.remote_write, 1);
+        assert_eq!(acq.remote_read, 1);
+        // Polling a held lock is a no-op.
+        assert_eq!(h.poll_lock(), LockPoll::Held);
+        assert!(!h.is_acquiring());
+        h.unlock();
+    }
+
+    #[test]
+    fn poll_queued_waiter_spins_locally_zero_remote_verbs_per_poll() {
+        // A queued remote waiter parks in WaitBudget; every poll there
+        // reads its *own node's* budget word. Polling it thousands of
+        // times must not issue a single additional remote verb — the
+        // property that makes one-thread multiplexing of thousands of
+        // clients viable.
+        let d = RdmaDomain::new(3, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(1));
+        let mut waiter = l.qp_handle(d.endpoint(2));
+        holder.lock();
+        assert_eq!(waiter.poll_lock(), LockPoll::Pending);
+        assert_eq!(waiter.acq_state(), AcqState::WaitBudget);
+        assert!(waiter.is_acquiring());
+        let before = waiter.ep.metrics.snapshot();
+        for _ in 0..2_000 {
+            assert_eq!(waiter.poll_lock(), LockPoll::Pending);
+        }
+        let spin = waiter.ep.metrics.snapshot() - before;
+        assert_eq!(spin.remote_total(), 0, "parked polls must stay local");
+        assert_eq!(spin.loopback, 0);
+        holder.unlock(); // budget handoff
+        assert_eq!(waiter.poll_lock(), LockPoll::Held);
+        waiter.unlock();
+    }
+
+    #[test]
+    fn cancel_before_queue_visibility_is_immediate() {
+        // A failed tail CAS leaves the process parked in Enqueue —
+        // outside the queue — so cancellation detaches on the spot and
+        // the holder's release still finds a clean tail.
+        let d = RdmaDomain::new(1, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(0));
+        let mut h2 = l.qp_handle(d.endpoint(0));
+        holder.lock();
+        assert_eq!(h2.poll_lock(), LockPoll::Pending);
+        assert!(matches!(h2.acq_state(), AcqState::Enqueue { .. }));
+        assert!(h2.cancel_lock(), "not queue-visible: immediate");
+        assert!(!h2.is_acquiring());
+        holder.unlock();
+        // Both handles are fully reusable.
+        h2.lock();
+        h2.unlock();
+        holder.lock();
+        holder.unlock();
+    }
+
+    #[test]
+    fn cancel_while_queued_drains_and_relays_the_handoff() {
+        // h1 holds; h2 and h3 queue behind it. Cancelling h2 cannot
+        // unlink it from the MCS queue — instead the drain accepts the
+        // budget handoff from h1 and immediately relays it to h3, so
+        // no handoff is lost and h3 still acquires.
+        let d = RdmaDomain::new(1, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut h1 = l.qp_handle(d.endpoint(0));
+        let mut h2 = l.qp_handle(d.endpoint(0));
+        let mut h3 = l.qp_handle(d.endpoint(0));
+        h1.lock();
+        assert_eq!(h2.poll_lock(), LockPoll::Pending);
+        assert_eq!(h2.acq_state(), AcqState::WaitBudget);
+        // h3 needs two polls: first CAS attempt observes h2's swap.
+        while h3.acq_state() != AcqState::WaitBudget {
+            assert_eq!(h3.poll_lock(), LockPoll::Pending);
+        }
+        assert!(!h2.cancel_lock(), "queued: must drain via poll");
+        assert!(h2.is_acquiring());
+        h1.unlock();
+        // The drain completes on the poll that receives the handoff.
+        let mut polls = 0;
+        loop {
+            match h2.poll_lock() {
+                LockPoll::Cancelled => break,
+                LockPoll::Pending => polls += 1,
+                LockPoll::Held => panic!("cancelled acquisition reported Held"),
+            }
+            assert!(polls < 10_000, "drain never completed");
+        }
+        assert!(!h2.is_acquiring());
+        assert_eq!(h3.poll_lock(), LockPoll::Held, "handoff relayed to h3");
+        h3.unlock();
+        // Everyone is reusable afterwards, including the cancelled one.
+        h2.lock();
+        h2.unlock();
+    }
+
+    #[test]
+    fn blocking_lock_and_poll_loop_issue_identical_verbs() {
+        // One protocol implementation: a blocking lock() and a manual
+        // poll loop over an uncontended remote handle produce the same
+        // verb trace.
+        let d = RdmaDomain::new(2, 2048, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut h = l.qp_handle(d.endpoint(1));
+        let b0 = h.ep.metrics.snapshot();
+        h.lock();
+        h.unlock();
+        let blocking = h.ep.metrics.snapshot() - b0;
+        let b1 = h.ep.metrics.snapshot();
+        while h.poll_lock().is_pending() {}
+        h.unlock();
+        let polled = h.ep.metrics.snapshot() - b1;
+        assert_eq!(blocking.remote_cas, polled.remote_cas);
+        assert_eq!(blocking.remote_read, polled.remote_read);
+        assert_eq!(blocking.remote_write, polled.remote_write);
     }
 
     #[test]

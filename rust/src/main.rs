@@ -7,7 +7,8 @@ use std::time::Duration;
 use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
 use qplock::cli::{Args, HELP};
 use qplock::coordinator::{
-    lock_name, run_multi_lock_workload, run_workload, Cluster, CsWork, LockService, Workload,
+    lock_name, run_multi_lock_workload, run_multiplexed_workload, run_workload, Cluster, CsWork,
+    LockService, Workload,
 };
 use qplock::locks::{make_lock, Class, ALGORITHMS};
 use qplock::mc::{self, models};
@@ -19,6 +20,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("bench") => cmd_bench(&args),
         Some("multi-lock") => cmd_multi_lock(&args),
+        Some("async") => cmd_async(&args),
         Some("mc") => cmd_mc(&args),
         Some("serve") => cmd_serve(&args),
         Some("list") => cmd_list(),
@@ -161,6 +163,75 @@ fn cmd_multi_lock(args: &Args) {
             p.acquire_ns.p99()
         );
     }
+    if r.violations > 0 {
+        eprintln!("MUTUAL EXCLUSION VIOLATED");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_async(args: &Args) {
+    let sims: u32 = args.get_num("sim-procs", 64);
+    let threads: usize = args.get_num("threads", 4);
+    let nlocks: u32 = args.get_num("locks", 100);
+    let skew: f64 = args.get_num("skew", 0.99);
+    let nodes: u16 = args.get_num("nodes", 3);
+    let iters: u64 = args.get_num("iters", 200);
+    let budget: u64 = args.get_num("budget", 8);
+    let cfg = if args.flag("timed") {
+        DomainConfig::timed()
+    } else {
+        DomainConfig::counted()
+    };
+
+    let cluster = Cluster::new(nodes, 1 << 21, cfg);
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", budget).with_default_max_procs(sims.max(1)),
+    );
+    let procs = cluster.round_robin_procs(sims);
+    let mut wl = match args.get("millis") {
+        Some(ms) => Workload::timed(
+            Duration::from_millis(ms.parse().expect("--millis")),
+            CsWork::None,
+        ),
+        None => Workload::cycles(iters),
+    };
+    wl = wl.with_locks(nlocks, skew);
+
+    println!(
+        "async: {sims} simulated processes multiplexed onto {threads} OS threads | \
+         locks={nlocks} skew={skew} nodes={nodes}"
+    );
+    let r = run_multiplexed_workload(&svc, &procs, &wl, threads);
+    println!(
+        "throughput {:.0} acq/s | total {} | jain {:.3} | violations {}",
+        r.throughput(),
+        r.total_acquisitions(),
+        r.jain(),
+        r.violations
+    );
+    println!(
+        "table: {} locks registered, {} touched | hottest lock {:.1}% of traffic",
+        svc.len(),
+        r.locks_touched(),
+        100.0 * r.hottest_share()
+    );
+    println!(
+        "verbs: local-class remote verbs {} (paper: must be 0 for qplock) | \
+         remote-class verbs/acq {:.2}",
+        r.local_class_remote_verbs(),
+        r.remote_verbs_per_acq()
+    );
+    let mut h = qplock::stats::Histogram::new();
+    for p in &r.procs {
+        h.merge(&p.acquire_ns);
+    }
+    println!(
+        "acquire ns (incl. multiplexing delay): p50 {} p95 {} p99 {} max {}",
+        h.p50(),
+        h.p95(),
+        h.p99(),
+        h.max()
+    );
     if r.violations > 0 {
         eprintln!("MUTUAL EXCLUSION VIOLATED");
         std::process::exit(1);

@@ -68,7 +68,9 @@ impl Backoff {
 
     /// Spin for the current backoff window, then double it (capped). Once
     /// the cap is reached, also yield the OS scheduler — essential when
-    /// simulated processes outnumber host cores.
+    /// simulated processes outnumber host cores. The doubling saturates:
+    /// with `max > u32::MAX / 2` a plain `* 2` would overflow (and panic
+    /// in debug builds) the step before the cap engages.
     #[inline]
     pub fn snooze(&mut self) {
         for _ in 0..self.cur {
@@ -77,7 +79,13 @@ impl Backoff {
         if self.cur >= self.max {
             std::thread::yield_now();
         }
-        self.cur = (self.cur * 2).min(self.max);
+        self.widen();
+    }
+
+    /// Double the backoff window, saturating at the cap.
+    #[inline]
+    fn widen(&mut self) {
+        self.cur = self.cur.saturating_mul(2).min(self.max);
     }
 
     #[inline]
@@ -130,6 +138,23 @@ mod tests {
             b.snooze();
         }
         assert!(b.cur <= 8);
+        b.reset();
+        assert_eq!(b.cur, 1);
+    }
+
+    #[test]
+    fn backoff_with_huge_cap_does_not_overflow() {
+        // With a cap above u32::MAX / 2 the old `cur * 2` overflowed
+        // (debug-build panic) the step after cur crossed 2^31. Drive the
+        // widening directly — snoozing at cur ≈ 2^31 would pause-spin
+        // for seconds — and check it saturates at the cap.
+        let mut b = Backoff::new(u32::MAX);
+        for _ in 0..40 {
+            b.widen();
+        }
+        assert_eq!(b.cur, u32::MAX);
+        b.widen();
+        assert_eq!(b.cur, u32::MAX, "stays pinned at the cap");
         b.reset();
         assert_eq!(b.cur, 1);
     }

@@ -1,0 +1,314 @@
+//! Poll-based acquisition: property tests (deterministic PRNG
+//! schedules, reproducible from the printed seed) plus the multiplexed
+//! runner acceptance sweep.
+//!
+//! Invariants covered:
+//! * the paper's verb asymmetry survives the poll decomposition —
+//!   local-class handles issue zero remote verbs under arbitrary poll
+//!   schedules, and a *queued* remote waiter's polls are free of
+//!   remote verbs no matter how often it is polled (O(1) remote verbs
+//!   per acquisition);
+//! * cancelling a submitted-but-not-held acquisition leaves the queue
+//!   consistent: no handoff is lost, every other waiter still
+//!   acquires, and the oracle stays clean;
+//! * one session (one OS thread) can drive many in-flight
+//!   acquisitions (`run_multiplexed_workload` at the ISSUE acceptance
+//!   scale: ≥ 64 simulated processes, ≥ 100 locks, ≤ 4 OS threads).
+
+use std::sync::Arc;
+
+use qplock::coordinator::{run_multiplexed_workload, Cluster, LockService, Workload};
+use qplock::locks::{make_lock, AsyncLockHandle, CsChecker, LockHandle, LockPoll};
+use qplock::rdma::{DomainConfig, RdmaDomain};
+use qplock::util::prng::Prng;
+
+const CASES: u64 = 16;
+
+fn seeds() -> impl Iterator<Item = u64> {
+    (0..CASES).map(|i| 0xA51C ^ (i * 0x9E3779B9))
+}
+
+/// Single-threaded random scheduler over a set of poll-driven handles:
+/// submits, polls, unlocks, and (optionally) cancels in a random
+/// order, checking mutual exclusion throughout. Returns the number of
+/// completed (held) acquisitions per handle.
+fn random_poll_schedule(
+    handles: &mut [Box<dyn LockHandle>],
+    rng: &mut Prng,
+    target_cycles: u64,
+    cancel_chance: f64,
+    seed: u64,
+) -> Vec<u64> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum S {
+        Idle,
+        Pending,
+        Held,
+    }
+    let n = handles.len();
+    let checker = CsChecker::new();
+    let mut state = vec![S::Idle; n];
+    let mut completed = vec![0u64; n];
+    let mut steps = 0u64;
+    let budget = 200_000 + target_cycles * n as u64 * 1_000;
+    while completed.iter().sum::<u64>() < target_cycles * n as u64 {
+        steps += 1;
+        assert!(steps < budget, "seed {seed}: schedule failed to make progress");
+        let i = rng.below(n as u64) as usize;
+        let a = handles[i].as_async().expect("qplock is poll-capable");
+        match state[i] {
+            S::Idle => {
+                if completed[i] >= target_cycles {
+                    continue;
+                }
+                state[i] = match a.poll_lock() {
+                    LockPoll::Held => S::Held,
+                    LockPoll::Pending => S::Pending,
+                    LockPoll::Cancelled => panic!("seed {seed}: fresh submit cancelled"),
+                };
+                if state[i] == S::Held {
+                    checker.enter(i as u32 + 1);
+                }
+            }
+            S::Pending => {
+                if rng.chance(cancel_chance) {
+                    if a.cancel_lock() {
+                        state[i] = S::Idle;
+                    }
+                    // else: stays pending, drains through later polls.
+                    continue;
+                }
+                match a.poll_lock() {
+                    LockPoll::Pending => {}
+                    LockPoll::Cancelled => state[i] = S::Idle,
+                    LockPoll::Held => {
+                        state[i] = S::Held;
+                        checker.enter(i as u32 + 1);
+                    }
+                }
+            }
+            S::Held => {
+                // Hold for a few scheduler steps, then release.
+                if rng.chance(0.5) {
+                    checker.exit(i as u32 + 1);
+                    handles[i].unlock();
+                    state[i] = S::Idle;
+                    completed[i] += 1;
+                }
+            }
+        }
+    }
+    // Resolve stragglers: drain every pending handle, release any hold.
+    let mut drains = 0u64;
+    loop {
+        let mut open = false;
+        for i in 0..n {
+            match state[i] {
+                S::Idle => {}
+                S::Held => {
+                    checker.exit(i as u32 + 1);
+                    handles[i].unlock();
+                    state[i] = S::Idle;
+                }
+                S::Pending => {
+                    open = true;
+                    match handles[i].as_async().unwrap().poll_lock() {
+                        LockPoll::Pending => {}
+                        LockPoll::Cancelled => state[i] = S::Idle,
+                        LockPoll::Held => {
+                            checker.enter(i as u32 + 1);
+                            state[i] = S::Held;
+                        }
+                    }
+                }
+            }
+        }
+        if !open {
+            break;
+        }
+        drains += 1;
+        assert!(drains < 1_000_000, "seed {seed}: drain never completed");
+    }
+    assert_eq!(checker.violations(), 0, "seed {seed}: mutual exclusion");
+    completed
+}
+
+#[test]
+fn prop_local_class_polls_issue_zero_remote_verbs() {
+    // Any poll schedule over local-class handles — including
+    // cancellations — must leave the NIC untouched: every register the
+    // protocol reads or writes lives on the home node.
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let d = RdmaDomain::new(2, 1 << 14, DomainConfig::counted());
+        let lock = make_lock("qplock", &d, 0, 8, 1 + rng.below(8));
+        let n = 2 + rng.below(4) as usize;
+        let mut metrics = vec![];
+        let mut handles = vec![];
+        for pid in 0..n {
+            let ep = d.endpoint(0);
+            metrics.push(Arc::clone(&ep.metrics));
+            handles.push(lock.handle(ep, pid as u32));
+        }
+        let completed = random_poll_schedule(&mut handles, &mut rng, 20, 0.1, seed);
+        assert!(completed.iter().all(|&c| c >= 20), "seed {seed}");
+        for m in &metrics {
+            let s = m.snapshot();
+            assert_eq!(s.remote_total(), 0, "seed {seed}: local class used the NIC");
+            assert_eq!(s.loopback, 0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_mixed_class_random_poll_schedules_stay_exclusive() {
+    // Random single-threaded poll schedules over handles of both
+    // classes (with cancellations): the oracle stays clean and every
+    // handle completes its cycles — no lost handoff under any
+    // interleaving of polls and cancels.
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let nodes = 2 + rng.below(2) as u16;
+        let d = RdmaDomain::new(nodes, 1 << 14, DomainConfig::counted());
+        let home = rng.below(nodes as u64) as u16;
+        let lock = make_lock("qplock", &d, home, 8, 1 + rng.below(4));
+        let n = 2 + rng.below(5) as usize;
+        let mut handles = vec![];
+        for pid in 0..n {
+            let node = rng.below(nodes as u64) as u16;
+            handles.push(lock.handle(d.endpoint(node), pid as u32));
+        }
+        let completed = random_poll_schedule(&mut handles, &mut rng, 12, 0.25, seed);
+        assert!(completed.iter().all(|&c| c >= 12), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_queued_remote_waiter_polls_cost_no_remote_verbs() {
+    // The scalability keystone: once enqueued, a remote-class waiter's
+    // poll reads its own node's budget word. A multiplexer can poll a
+    // parked waiter any number of times without adding remote verbs —
+    // acquisition stays O(1) remote verbs however long the wait.
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let d = RdmaDomain::new(3, 1 << 14, DomainConfig::counted());
+        let lock = make_lock("qplock", &d, 0, 4, 8);
+        let mut holder = lock.handle(d.endpoint(1), 0);
+        let ep = d.endpoint(2);
+        let metrics = Arc::clone(&ep.metrics);
+        let mut waiter = lock.handle(ep, 1);
+        for cycle in 0..8 {
+            holder.lock();
+            let w = waiter.as_async().unwrap();
+            // Two polls park the waiter deterministically: poll #1's
+            // tail CAS observes the holder (fails), poll #2 swaps in
+            // and links behind it (WaitBudget).
+            assert_eq!(w.poll_lock(), LockPoll::Pending, "seed {seed}");
+            assert_eq!(w.poll_lock(), LockPoll::Pending, "seed {seed}");
+            assert!(w.is_acquiring(), "seed {seed}: waiter not enqueued");
+            let parked = metrics.snapshot();
+            let polls = 100 + rng.below(1_900);
+            for _ in 0..polls {
+                assert_eq!(w.poll_lock(), LockPoll::Pending, "seed {seed}");
+            }
+            let spin = metrics.snapshot() - parked;
+            assert_eq!(
+                spin.remote_total(),
+                0,
+                "seed {seed} cycle {cycle}: {polls} parked polls issued remote verbs"
+            );
+            holder.unlock();
+            loop {
+                match waiter.as_async().unwrap().poll_lock() {
+                    LockPoll::Held => break,
+                    LockPoll::Pending => {}
+                    LockPoll::Cancelled => panic!("seed {seed}: not cancelled"),
+                }
+            }
+            waiter.unlock();
+        }
+        // O(1) per acquisition overall: across 8 cycles with thousands
+        // of parked polls, the waiter's verb total stays tiny.
+        let total = metrics.snapshot();
+        let per_acq = total.remote_total() as f64 / 8.0;
+        assert!(per_acq <= 8.0, "seed {seed}: {per_acq} remote verbs/acq");
+    }
+}
+
+#[test]
+fn prop_cancelled_waiter_relays_handoff_to_successor() {
+    // holder → cancelled-waiter → successor chains of random length:
+    // the cancelled waiters drain (accepting and relaying the budget
+    // handoff), the successor always acquires, and nothing leaks.
+    for seed in seeds() {
+        let mut rng = Prng::seed_from(seed);
+        let d = RdmaDomain::new(2, 1 << 14, DomainConfig::counted());
+        let lock = make_lock("qplock", &d, 0, 8, 1 + rng.below(4));
+        let mut holder = lock.handle(d.endpoint(rng.below(2) as u16), 0);
+        let k = 1 + rng.below(3) as usize; // waiters to cancel
+        holder.lock();
+        let mut cancelled = vec![];
+        for pid in 0..k {
+            let mut h = lock.handle(d.endpoint(rng.below(2) as u16), pid as u32 + 1);
+            // Two polls make the waiter queue-visible (or a parked
+            // Peterson leader, if it opened the other cohort's queue);
+            // Pending is guaranteed both times while the holder holds.
+            assert_eq!(h.as_async().unwrap().poll_lock(), LockPoll::Pending, "seed {seed}");
+            assert_eq!(h.as_async().unwrap().poll_lock(), LockPoll::Pending, "seed {seed}");
+            cancelled.push(h);
+        }
+        let mut successor = lock.handle(d.endpoint(rng.below(2) as u16), 7);
+        assert_eq!(
+            successor.as_async().unwrap().poll_lock(),
+            LockPoll::Pending,
+            "seed {seed}: holder still holds"
+        );
+        for h in cancelled.iter_mut() {
+            let _ = h.as_async().unwrap().cancel_lock();
+        }
+        holder.unlock();
+        // Drain the cancelled waiters and the successor together.
+        let mut rounds = 0;
+        let mut got_lock = false;
+        while !got_lock {
+            rounds += 1;
+            assert!(rounds < 1_000_000, "seed {seed}: handoff lost");
+            for h in cancelled.iter_mut() {
+                let _ = h.as_async().unwrap().poll_lock();
+            }
+            got_lock = successor.as_async().unwrap().poll_lock() == LockPoll::Held;
+        }
+        successor.unlock();
+        // The lock is healthy: a fresh blocking cycle completes.
+        holder.lock();
+        holder.unlock();
+    }
+}
+
+#[test]
+fn multiplexed_acceptance_64_procs_100_locks_4_threads() {
+    // ISSUE acceptance: ≥ 64 simulated processes over ≥ 100 named
+    // locks on ≤ 4 OS threads — zero oracle violations and
+    // local-class handles reporting exactly 0 remote verbs.
+    let cluster = Cluster::new(3, 1 << 20, DomainConfig::counted());
+    let svc = Arc::new(LockService::new(&cluster.domain, "qplock", 8));
+    let procs = cluster.round_robin_procs(64);
+    let wl = Workload::cycles(40).with_locks(100, 0.99).with_seed(0xA511C);
+    let r = run_multiplexed_workload(&svc, &procs, &wl, 4);
+    assert_eq!(r.violations, 0, "mutual exclusion violated");
+    assert_eq!(r.total_acquisitions(), 64 * 40);
+    assert_eq!(svc.len(), 100, "table fully pre-registered");
+    assert_eq!(
+        r.local_class_remote_verbs(),
+        0,
+        "local-class handles must stay NIC-clean under multiplexing"
+    );
+    assert!(r.remote_verbs_per_acq() > 0.0, "remote class did work");
+    assert_eq!(r.procs.len(), 64);
+    for p in &r.procs {
+        assert_eq!(p.acquisitions, 40);
+        assert!(p.distinct_locks >= 1);
+    }
+    // Zipf skew visible at the table level.
+    assert!(r.hottest_share() > 0.05, "share {}", r.hottest_share());
+}
