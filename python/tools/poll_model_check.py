@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Randomized cross-validation of the qplock poll state machine.
+"""Randomized cross-validation of the qplock poll state machine and the
+ready-list wakeup protocol.
 
 A line-by-line transliteration of `rust/src/locks/qplock.rs`'s
 resumable acquisition machine (Idle -> Enqueue -> WaitBudget ->
@@ -9,14 +10,33 @@ exactly as one `poll_lock` call is atomic from the simulator's
 perspective, so the schedules explored are the interleavings the Rust
 runner can produce.
 
+Wakeup extension (mirrors `coordinator/service.rs` + the `WakeupRing`):
+handles are grouped into *sessions*, each owning a wakeup ring. A
+waiter parked in WaitBudget may arm a registration; the passer, after
+writing the budget word, reads the registration and publishes the
+waiter's token into its session's ring. Armed handles are polled ONLY
+when their token is consumed — so every schedule completing is a proof
+that no wakeup is lost. The passer's budget-write -> wake-read and the
+waiter's wake-write -> budget-recheck are modeled as interleavable
+steps (the `race` hook below), covering the store-load race the SeqCst
+handshake closes: when the arm lands inside the passer's window it
+must observe the budget and report "already ready" instead of parking
+forever. (The Rust ring keeps two producer lanes so CPU and NIC
+fetch-and-adds never share a cursor word — a Table-1 atomicity
+concern this model cannot exhibit, since a Python list append is
+atomic; the ring is therefore modeled as one queue.)
+
 Checked invariants, over many random seeds:
   * mutual exclusion (at most one holder per lock, both cohorts);
-  * progress (every handle completes its target cycles; bounded steps);
+  * progress (every handle completes its target cycles in bounded
+    steps, with armed handles woken only by their tokens);
   * cancellation consistency (a cancelled enqueued waiter drains via
-    poll, relays the budget handoff, and waiters behind it still
-    acquire — no lost handoff);
-  * local-class handles never issue remote verbs, and a parked waiter's
-    poll issues zero remote verbs (the multiplexing keystone).
+    poll or via its token, relays the budget handoff, and waiters
+    behind it still acquire — no lost handoff);
+  * local-class handles never issue remote verbs — including the
+    wakeup publication a local-class passer performs — and a parked
+    waiter's poll issues zero remote verbs (the multiplexing
+    keystone).
 
 Run: python3 python/tools/poll_model_check.py [seeds]
 Exits non-zero on any violation.
@@ -38,27 +58,43 @@ class Lock:
         self.holder = None  # oracle only
 
 
-class Handle:
-    def __init__(self, lock, node, hid):
-        self.lock = lock
+class Session:
+    """One multiplexing session: a wakeup ring on its node plus the
+    armed/scan bookkeeping of HandleCache."""
+
+    def __init__(self, node):
         self.node = node
+        self.ring = []  # published tokens (hids), in fire order
+        self.armed = {}  # hid -> Handle, polled only via tokens
+        self.scan = set()  # pending hids polled every round
+
+
+class Handle:
+    def __init__(self, lock, session, hid, race):
+        self.lock = lock
+        self.session = session
+        self.node = session.node
         self.hid = hid
-        self.cls = LOCAL if node == lock.home else REMOTE
+        self.cls = LOCAL if session.node == lock.home else REMOTE
         self.bud = 0  # descriptor: budget word
         self.next = None  # descriptor: link word
+        self.wake_armed = False  # descriptor: wake-ring word (0 / set)
         self.state = "Idle"
         self.curr = None  # Enqueue's last observed tail
         self.abandoning = False
         self.remote_verbs = 0
+        self.race = race  # adversarial interleaving hook (see unlock)
+        self.stats = {"fired": 0, "already_ready": 0}
 
-    def _verb(self):
+    def _verb(self, n=1):
         if self.cls == REMOTE:
-            self.remote_verbs += 1
+            self.remote_verbs += n
 
     # -- one poll_lock step; returns "Pending" | "Held" | "Cancelled" --
     def poll(self):
         if self.state == "Idle":
             self.next = None
+            self.wake_armed = False
             self.state, self.curr = "Enqueue", None
             return self._step_enqueue()
         if self.state == "Enqueue":
@@ -125,6 +161,20 @@ class Handle:
         self.lock.holder = self
         return "Held"
 
+    # -- wakeup registration (arm_wakeup transliteration) --
+    def arm(self):
+        """Returns 'armed' | 'ready' | 'no' (Unsupported)."""
+        if self.state != "WaitBudget":
+            return "no"
+        self.wake_armed = True  # publish registration (SeqCst store)
+        if self.bud != WAITING:  # re-check (SeqCst load)
+            # The handoff already landed; the passer may or may not
+            # have seen the registration. Disarm and poll now.
+            self.wake_armed = False
+            self.stats["already_ready"] += 1
+            return "ready"
+        return "armed"
+
     def cancel(self):
         if self.state == "Idle":
             return True
@@ -154,7 +204,18 @@ class Handle:
             # single-scheduler model the link must already be visible.
             assert self.next is not None, "dangling CAS->link window"
         assert self.bud >= 1
-        self.next.bud = self.bud - 1  # pass the lock
+        succ = self.next
+        succ.bud = self.bud - 1  # pass the lock (budget write)
+        # Adversarial interleaving point: the successor's session may
+        # run its arm attempt between our budget write and our wake
+        # read — the arm's budget re-check must catch the handoff.
+        self.race(succ)
+        if succ.wake_armed:  # wake-ring read, after the budget write
+            succ.wake_armed = False
+            # faa slot claim + slot write, both on the successor's node
+            self._verb(2)
+            succ.session.ring.append(succ.hid)
+            self.stats["fired"] += 1
 
 
 def run_schedule(seed):
@@ -162,53 +223,150 @@ def run_schedule(seed):
     nodes = rng.randint(1, 3)
     home = rng.randrange(nodes)
     lock = Lock(home, rng.randint(1, 8))
+    nsessions = rng.randint(1, 3)
+    sessions = [Session(rng.randrange(nodes)) for _ in range(nsessions)]
     n = rng.randint(2, 7)
-    handles = [Handle(lock, rng.randrange(nodes), i) for i in range(n)]
+    fired = already_ready = 0
+
+    def race(succ):
+        # With some probability, squeeze the successor's arm attempt
+        # into the passer's budget-write -> wake-read window.
+        if rng.random() < 0.5 and succ.hid in succ.session.scan:
+            try_arm(succ)
+
+    handles = [
+        Handle(lock, sessions[rng.randrange(nsessions)], i, race)
+        for i in range(n)
+    ]
     target = 25
     completed = [0] * n
     parked_verb_checks = 0
+
+    def try_arm(h):
+        out = h.arm()
+        if out == "armed":
+            h.session.scan.discard(h.hid)
+            h.session.armed[h.hid] = h
+        return out
+
+    def session_poll(h):
+        """Poll a scan-set handle, with the parked-poll verb check."""
+        nonlocal parked_verb_checks
+        if h.state == "WaitBudget" and h.bud == WAITING:
+            before = h.remote_verbs
+            r = h.poll()
+            if h.bud == WAITING:
+                assert h.remote_verbs == before, (
+                    f"seed {seed}: parked poll issued remote verbs"
+                )
+                parked_verb_checks += 1
+            return r
+        return h.poll()
+
+    def poll_ready(sess):
+        """HandleCache::poll_ready, sweep disabled: armed handles are
+        woken only by their tokens."""
+        done = []
+        while sess.ring:
+            hid = sess.ring.pop(0)
+            if hid not in sess.armed:
+                continue  # stale token: registration resolved elsewhere
+            h = sess.armed.pop(hid)
+            r = h.poll()
+            if r == "Pending":
+                if try_arm(h) != "armed":
+                    sess.scan.add(hid)
+            elif r == "Held":
+                done.append(h)
+        for hid in list(sess.scan):
+            h = handles[hid]
+            if h.state in ("Idle", "Held"):
+                sess.scan.discard(hid)
+                continue
+            r = session_poll(h)
+            if r == "Pending":
+                # Arm opportunistically (not always: keeps the pure
+                # scan path covered too).
+                if rng.random() < 0.8:
+                    try_arm(h)
+            else:
+                sess.scan.discard(hid)
+                if r == "Held":
+                    done.append(h)
+        return done
+
     steps = 0
     while sum(completed) < target * n:
         steps += 1
-        assert steps < 2_000_000, f"seed {seed}: no progress"
+        assert steps < 2_000_000, (
+            f"seed {seed}: no progress (lost wakeup?) completed={completed}"
+        )
         h = rng.choice(handles)
-        if h.state == "Idle":
+        sess = h.session
+        action = rng.random()
+        if h.state == "Idle" and h.hid not in sess.scan:
             if completed[h.hid] >= target:
                 continue
-            if h.poll() == "Held":
-                pass  # hold; release on a later visit
-        elif h.state == "Held":
-            if lock.holder is h and rng.random() < 0.5:
+            if h.poll() != "Held":  # submit
+                sess.scan.add(h.hid)
+                if rng.random() < 0.8:
+                    try_arm(h)
+        elif h.state == "Held" and lock.holder is h:
+            if action < 0.5:
                 h.unlock()
                 completed[h.hid] += 1
-        else:
-            if rng.random() < 0.15:
-                h.cancel()
-                continue
-            if h.state == "WaitBudget" and h.bud == WAITING:
-                # Parked waiter: this poll must be verb-free.
-                before = h.remote_verbs
-                h.poll()
-                if h.bud == WAITING:
-                    assert h.remote_verbs == before, (
-                        f"seed {seed}: parked poll issued remote verbs"
-                    )
-                    parked_verb_checks += 1
+        elif h.hid in sess.armed:
+            # Armed: the ONLY way forward is the token — model a
+            # session poll round (which may consume it), never a
+            # direct poll. Cancellation is still allowed and must
+            # drain through the token.
+            if action < 0.1:
+                h.cancel()  # enqueued: stays armed, drains via token
             else:
-                h.poll()
+                for done in poll_ready(sess):
+                    completed[done.hid] += 1
+        else:
+            if action < 0.1 and h.hid in sess.scan:
+                if h.cancel():
+                    sess.scan.discard(h.hid)
+            else:
+                for done in poll_ready(sess):
+                    completed[done.hid] += 1
+
+    # Drain: finish every in-flight acquisition and release holders.
+    drains = 0
+    while any(s.scan or s.armed for s in sessions) or lock.holder is not None:
+        drains += 1
+        assert drains < 1_000_000, f"seed {seed}: drain never completed"
+        if lock.holder is not None:
+            lock.holder.unlock()
+        for sess in sessions:
+            for done in poll_ready(sess):
+                done.unlock()
+
     for h in handles:
         if h.cls == LOCAL:
             assert h.remote_verbs == 0, f"seed {seed}: local class used NIC"
-    return parked_verb_checks
+        fired += h.stats["fired"]
+        already_ready += h.stats["already_ready"]
+    return parked_verb_checks, fired, already_ready
 
 
 def main():
-    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 300
-    parked = 0
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 500
+    parked = fired = ready = 0
     for seed in range(cases):
-        parked += run_schedule(seed)
-    print(f"poll-model check: {cases} random schedules clean "
-          f"({parked} parked-poll verb checks)")
+        p, f, r = run_schedule(seed)
+        parked += p
+        fired += f
+        ready += r
+    assert fired > 0, "no wakeup token was ever published — model inert"
+    assert ready > 0, "the arm-vs-handoff race was never exercised"
+    print(
+        f"poll-model check: {cases} random schedules clean "
+        f"({parked} parked-poll verb checks, {fired} wakeups fired, "
+        f"{ready} already-ready races caught)"
+    )
 
 
 if __name__ == "__main__":

@@ -7,7 +7,9 @@
 //! loopback congestion); E8 reproduces the TLA+ verification battery;
 //! E9 is the end-to-end parameter-server run over the PJRT runtime;
 //! E10 sweeps the sharded multi-lock table; E11 compares
-//! thread-per-process against poll-multiplexed acquisition.
+//! thread-per-process against poll-multiplexed acquisition; E12
+//! measures the scan-vs-ready-list poll cost at large parked-waiter
+//! counts.
 //!
 //! Every experiment runs at two scales: `Quick` (cargo bench / CI) and
 //! `Full` (the numbers recorded in EXPERIMENTS.md).
@@ -17,8 +19,8 @@ use std::time::{Duration, Instant};
 
 use super::table::Table;
 use crate::coordinator::{
-    run_multi_lock_workload, run_multiplexed_workload, run_workload, Cluster, CsWork,
-    LockService, RunResult, Workload,
+    ready_list_probe, run_multi_lock_workload, run_multiplexed_workload, run_workload, Cluster,
+    CsWork, LockService, PollMode, RunResult, Workload,
 };
 use crate::locks::{make_lock, Class};
 use crate::mc::{self, models};
@@ -72,6 +74,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "e11",
         "async: thread-per-process vs poll-multiplexed acquisition (K x skew)",
     ),
+    (
+        "e12",
+        "ready-list wakeups: scan vs ready poll cost at K parked waiters",
+    ),
 ];
 
 /// Run one experiment by id.
@@ -88,6 +94,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExpOutput {
         "e9" => e9_param_server(scale),
         "e10" => e10_multi_lock(scale),
         "e11" => e11_multiplexed(scale),
+        "e12" => e12_ready_wakeups(scale),
         other => panic!("unknown experiment '{other}'"),
     }
 }
@@ -403,7 +410,14 @@ fn e4_mix(scale: Scale) -> ExpOutput {
                 continue;
             }
             let nlocal = nprocs * f / 100;
-            let r = timed_run(algo, nprocs, nlocal, dur, 8, timed_domain(LatencyModel::calibrated()));
+            let r = timed_run(
+                algo,
+                nprocs,
+                nlocal,
+                dur,
+                8,
+                timed_domain(LatencyModel::calibrated()),
+            );
             cells.push(fmt_thr(&r.result));
         }
         t.row(&cells);
@@ -717,7 +731,7 @@ fn e10_multi_lock(scale: Scale) -> ExpOutput {
             "thr acq/s",
             "local-rdma",
             "rverbs/acq",
-            "hot%",
+            "rank0%",
             "touched",
             "cache-hit%",
             "violations",
@@ -728,8 +742,10 @@ fn e10_multi_lock(scale: Scale) -> ExpOutput {
          locks homed on the issuing process's node — the paper requires exactly 0 \
          for qplock at any table size"
             .into(),
-        "hot% = share of acquisitions landing on the hottest lock; cache-hit% = \
-         handle-cache reuse (misses are one-time descriptor mints)"
+        "rank0% = share of acquisitions landing on the Zipf rank-0 (intended-hottest) \
+         lock — ~1/K at skew 0 (the old 'hot%' reported the max per-lock share, an \
+         upward-biased extreme at low skew); cache-hit% = handle-cache reuse (misses \
+         are one-time descriptor mints)"
             .into(),
     ];
     for &(k, skew, placement) in configs {
@@ -860,15 +876,96 @@ fn e11_multiplexed(scale: Scale) -> ExpOutput {
     }
 }
 
+// ------------------------------------------------------------------ E12
+
+/// Scan-mode vs ready-mode poll cost at large in-flight waiter counts:
+/// K acquisitions parked in one session (every named lock held by a
+/// holder session), single releases, counting the waiter session's
+/// handle polls. The ready list turns per-release discovery cost from
+/// O(pending) — `poll_all` touching every parked waiter — into
+/// O(ready): consume the token the handoff published, poll that one
+/// handle. This is what makes the 100k-waiter-per-thread regime
+/// affordable.
+fn e12_ready_wakeups(scale: Scale) -> ExpOutput {
+    let (ks, releases): (&[u32], u32) = match scale {
+        Scale::Quick => (&[1_000, 10_000], 20),
+        Scale::Full => (&[10_000, 100_000], 100),
+    };
+    let mut t = Table::new(
+        "E12: poll cost at K parked waiters — scan vs ready-list (qplock, counted mode)",
+        &[
+            "pending",
+            "mode",
+            "releases",
+            "rounds",
+            "polls",
+            "polls/release",
+            "us/release",
+        ],
+    );
+    for &k in ks {
+        for (label, mode) in [("scan", PollMode::Scan), ("ready", PollMode::Ready)] {
+            let s = ready_list_probe(k, releases, mode);
+            t.row(&[
+                k.to_string(),
+                label.into(),
+                s.releases.to_string(),
+                s.rounds.to_string(),
+                s.handle_polls.to_string(),
+                format!("{:.1}", s.polls_per_release()),
+                format!("{:.1}", s.wall.as_secs_f64() * 1e6 / s.releases as f64),
+            ]);
+        }
+    }
+    ExpOutput {
+        id: "e12",
+        tables: vec![t],
+        notes: vec![
+            "scenario: one session holds all K locks, a second session (same node, \
+             same cohort) has all K acquisitions parked in WaitBudget; each release \
+             hands off to exactly one waiter"
+                .into(),
+            "expected shape: scan polls/release ≈ K (every parked waiter touched per \
+             round); ready polls/release ≈ 1 (the handoff's token names the one \
+             ready handle) — per-round work scales with ready count, not pending \
+             count"
+                .into(),
+            "setup polls (parking + arming the waiters) are excluded; ready-mode \
+             arming is O(K) once, amortized over the session's lifetime"
+                .into(),
+        ],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn registry_covers_all_ids() {
-        assert_eq!(EXPERIMENTS.len(), 11);
+        assert_eq!(EXPERIMENTS.len(), 12);
         for (id, _) in EXPERIMENTS {
             assert!(id.starts_with('e'));
+        }
+    }
+
+    #[test]
+    fn e12_quick_ready_mode_scales_with_ready_count_not_pending() {
+        let out = run_experiment("e12", Scale::Quick);
+        let t = &out.tables[0];
+        assert_eq!(t.rows(), 4);
+        // Rows: (1k scan), (1k ready), (10k scan), (10k ready).
+        for (scan_row, ready_row, k) in [(0, 1, 1_000f64), (2, 3, 10_000f64)] {
+            let scan: f64 = t.cell(scan_row, 5).parse().unwrap();
+            let ready: f64 = t.cell(ready_row, 5).parse().unwrap();
+            assert!(
+                scan >= k * 0.9,
+                "scan polls/release should be O(pending): {scan} at K={k}"
+            );
+            assert!(
+                ready <= 4.0,
+                "ready polls/release should be O(1): {ready} at K={k}"
+            );
         }
     }
 

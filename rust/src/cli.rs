@@ -91,7 +91,7 @@ SUBCOMMANDS:
             --budget <n>       qplock/cohort budget (default 8)
             --cs-ns <ns>       critical-section busy work (default 0)
             --counted          zero-latency op-count mode
-  bench   run experiments (EXPERIMENTS.md E1..E11)
+  bench   run experiments (EXPERIMENTS.md E1..E12)
             --exp <id|all>     experiment id (default all)
             --full             full scale (default quick)
             --csv              also print CSV
@@ -121,6 +121,15 @@ SUBCOMMANDS:
             --millis <ms>      run for a duration instead of iters
             --budget <n>       qplock budget (default 8)
             --timed            calibrated-latency mode (default counted)
+            --ready            event-driven scheduler: sessions consume
+                               their wakeup rings instead of scanning
+                               every pending acquisition per step
+  ready   ready-list wakeup probe: K waiters parked on held locks,
+          single releases, scan-mode vs ready-mode poll cost (the
+          E12 scenario)
+            --pending <K>      parked in-flight acquisitions (default 10000)
+            --releases <n>     single releases to measure (default 50)
+            --mode <m>         both|scan|ready (default both)
   mc      model-check a spec (paper Appendix A)
             --model <name>     qplock|peterson|naive|spin (default qplock)
             --procs <n>        processes (default 3)

@@ -326,13 +326,30 @@ impl MultiLockRunResult {
         ops as f64 / self.total_acquisitions().max(1) as f64
     }
 
-    /// Share of critical-section entries that hit the hottest lock.
+    /// Share of critical-section entries that hit the *intended
+    /// hottest* lock — Zipf rank 0, i.e. `per_lock_entries[0]`. (The
+    /// old implementation returned the max per-lock share, which is an
+    /// extreme-order statistic: biased upward at low skew, where every
+    /// lock's expected share is 1/K but the luckiest lock's observed
+    /// share is well above it. Use [`MultiLockRunResult::max_share`]
+    /// for that quantity.)
     pub fn hottest_share(&self) -> f64 {
         let total: u64 = self.per_lock_entries.iter().sum();
         if total == 0 {
             return 0.0;
         }
-        *self.per_lock_entries.iter().max().unwrap() as f64 / total as f64
+        self.per_lock_entries.first().copied().unwrap_or(0) as f64 / total as f64
+    }
+
+    /// Share of the *empirically* hottest lock (the max per-lock
+    /// share) — the extreme across the table, not any single lock's
+    /// expectation.
+    pub fn max_share(&self) -> f64 {
+        let total: u64 = self.per_lock_entries.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.per_lock_entries.iter().copied().max().unwrap_or(0) as f64 / total as f64
     }
 
     /// Named locks that saw at least one acquisition.
@@ -474,6 +491,20 @@ pub fn run_multi_lock_workload(
 
 // ----------------------------------------------------- multiplexed runner
 
+/// How the multiplexed runner discovers completed acquisitions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PollMode {
+    /// Poll every pending acquisition each step
+    /// ([`super::service::HandleCache::poll_all`]): O(pending) handle
+    /// polls per round.
+    Scan,
+    /// Consume the session's wakeup ring and poll only signalled (and
+    /// not-yet-armed) names
+    /// ([`super::service::HandleCache::poll_ready`]): O(ready) handle
+    /// polls per round.
+    Ready,
+}
+
 /// What one simulated process of the multiplexed runner is doing.
 enum SimPhase {
     /// Between cycles: draw the next lock (or finish).
@@ -506,6 +537,7 @@ struct SimCtx {
     zipf: Arc<Zipf>,
     wl: Workload,
     deadline: Option<Instant>,
+    mode: PollMode,
 }
 
 impl SimProc {
@@ -541,7 +573,11 @@ impl SimProc {
                 true
             }
             SimPhase::Acquiring { li, t0 } => {
-                if self.session.poll_all().is_empty() {
+                let done = match ctx.mode {
+                    PollMode::Scan => self.session.poll_all(),
+                    PollMode::Ready => self.session.poll_ready(),
+                };
+                if done.is_empty() {
                     return false;
                 }
                 self.complete_cycle(li, t0, ctx);
@@ -636,6 +672,20 @@ pub fn run_multiplexed_workload(
     workload: &Workload,
     os_threads: usize,
 ) -> MultiLockRunResult {
+    run_multiplexed_workload_mode(service, procs, workload, os_threads, PollMode::Scan)
+}
+
+/// [`run_multiplexed_workload`] with an explicit completion-discovery
+/// mode: [`PollMode::Ready`] gives every session a wakeup ring, so a
+/// scheduler step over a parked process costs O(ready) handle polls
+/// instead of scanning its pending set.
+pub fn run_multiplexed_workload_mode(
+    service: &Arc<LockService>,
+    procs: &[ProcSpec],
+    workload: &Workload,
+    os_threads: usize,
+    mode: PollMode,
+) -> MultiLockRunResult {
     let n = procs.len();
     assert!(n > 0);
     assert!(os_threads >= 1, "at least one OS thread");
@@ -661,9 +711,15 @@ pub fn run_multiplexed_workload(
     let threads = os_threads.min(n);
     let mut groups: Vec<Vec<SimProc>> = (0..threads).map(|_| Vec::new()).collect();
     for (i, spec) in procs.iter().copied().enumerate() {
+        let mut session = service.session(spec.node);
+        if mode == PollMode::Ready {
+            // One in-flight acquisition per simulated process; a few
+            // spare slots absorb benign duplicate tokens.
+            session.enable_ready_wakeups(4);
+        }
         groups[i % threads].push(SimProc {
             spec,
-            session: service.session(spec.node),
+            session,
             rng: Prng::seed_from(workload.seed ^ (spec.pid as u64).wrapping_mul(0xA24B)),
             phase: SimPhase::Draw,
             done_cycles: 0,
@@ -688,6 +744,7 @@ pub fn run_multiplexed_workload(
                 zipf,
                 wl,
                 deadline,
+                mode,
             };
             let mut live = sims.len();
             while live > 0 {
@@ -725,6 +782,141 @@ pub fn run_multiplexed_workload(
         violations: checkers.iter().map(|c| c.violations()).sum(),
         per_lock_entries: checkers.iter().map(|c| c.entries()).collect(),
     }
+}
+
+// --------------------------------------------------------- ready-list probe
+
+/// Poll-work accounting from [`ready_list_probe`]: the K-parked-waiters
+/// / R-single-releases scenario experiment E12 and `qplock ready`
+/// report.
+pub struct ReadyProbeStats {
+    pub pending: u32,
+    pub releases: u32,
+    /// Poll rounds driven during the measured (release) phase.
+    pub rounds: u64,
+    /// Handle polls issued during the measured phase.
+    pub handle_polls: u64,
+    /// Handle polls spent parking the waiters (setup, excluded from
+    /// the measured phase).
+    pub setup_polls: u64,
+    /// Wall time of the measured phase.
+    pub wall: Duration,
+}
+
+impl ReadyProbeStats {
+    pub fn polls_per_round(&self) -> f64 {
+        self.handle_polls as f64 / self.rounds.max(1) as f64
+    }
+
+    pub fn polls_per_release(&self) -> f64 {
+        self.handle_polls as f64 / self.releases.max(1) as f64
+    }
+}
+
+/// Park `pending` waiters — one per named lock, every lock held by a
+/// holder session — then release `releases` of them one at a time,
+/// driving the waiter session in `mode` and counting its handle polls.
+/// Holder and waiter share a node (and thus a cohort per lock), so
+/// each waiter parks in the armable budget-wait state; the locks are
+/// homed on the *other* node, making both sessions remote-class — the
+/// regime where a scan over 100k parked waiters is pure overhead. The
+/// measured phase isolates the steady-state cost the ready list
+/// removes: in scan mode each release costs O(pending) handle polls,
+/// in ready mode O(1).
+pub fn ready_list_probe(pending: u32, releases: u32, mode: PollMode) -> ReadyProbeStats {
+    use crate::rdma::DomainConfig;
+
+    assert!(pending >= 1 && releases >= 1 && releases <= pending);
+    // Arena sizing: ~3 padded registers per lock on the home node plus
+    // two 4-word (one-line) descriptors and a ring slot per lock on
+    // the session node, with headroom.
+    let words = (64u64 * pending as u64 + (1 << 16)).min(u32::MAX as u64) as u32;
+    let cluster = super::Cluster::new(2, words, DomainConfig::counted());
+    let svc = Arc::new(LockService::new(&cluster.domain, "qplock", 8).with_default_max_procs(2));
+    let names: Vec<String> = (0..pending).map(lock_name).collect();
+    for name in &names {
+        svc.create_lock(name, "qplock", 0, 2, 8).expect("fresh table");
+    }
+
+    let mut holder = svc.session(1);
+    for name in &names {
+        assert_eq!(
+            holder.submit(name).expect("capacity"),
+            LockPoll::Held,
+            "holder must take every lock uncontended"
+        );
+    }
+    let mut waiter = svc.session(1);
+    if mode == PollMode::Ready {
+        waiter.enable_ready_wakeups(pending);
+        waiter.set_sweep_interval(0); // isolate the event-driven cost
+    }
+    for name in &names {
+        assert_eq!(waiter.submit(name).expect("capacity"), LockPoll::Pending);
+    }
+    // Setup: advance every waiter into its parked state (ready mode:
+    // armed on the ring; scan mode: enqueued behind the holder). Each
+    // needs only a couple of polls to link and park.
+    match mode {
+        PollMode::Ready => {
+            let mut rounds = 0;
+            while waiter.armed_count() < pending as usize {
+                assert!(waiter.poll_ready().is_empty(), "holder still holds");
+                rounds += 1;
+                assert!(rounds < 64, "waiters failed to park and arm");
+            }
+        }
+        PollMode::Scan => {
+            for _ in 0..3 {
+                assert!(waiter.poll_all().is_empty(), "holder still holds");
+            }
+        }
+    }
+    let setup_polls = waiter.handle_polls();
+
+    // Measured phase: single releases, each driven to completion.
+    let t0 = Instant::now();
+    let mut rounds = 0u64;
+    for name in names.iter().take(releases as usize) {
+        holder.release(name);
+        let mut got = Vec::new();
+        while got.is_empty() {
+            rounds += 1;
+            got = match mode {
+                PollMode::Scan => waiter.poll_all(),
+                PollMode::Ready => waiter.poll_ready(),
+            };
+        }
+        assert_eq!(got, vec![name.clone()], "the released lock's waiter wakes");
+        waiter.release(name);
+    }
+    let wall = t0.elapsed();
+    let stats = ReadyProbeStats {
+        pending,
+        releases,
+        rounds,
+        handle_polls: waiter.handle_polls() - setup_polls,
+        setup_polls,
+        wall,
+    };
+
+    // Drain the remaining population so both sessions drop clean (a
+    // leaked held/acquiring handle trips the pid-lease drop guard).
+    for name in names.iter().skip(releases as usize) {
+        holder.release(name);
+    }
+    let mut open = pending as usize - releases as usize;
+    while open > 0 {
+        let done = match mode {
+            PollMode::Scan => waiter.poll_all(),
+            PollMode::Ready => waiter.poll_ready(),
+        };
+        for name in done {
+            waiter.release(&name);
+            open -= 1;
+        }
+    }
+    stats
 }
 
 #[cfg(test)]
@@ -884,6 +1076,66 @@ mod tests {
         let r = run_multiplexed_workload(&svc, &procs, &wl, 2);
         assert_eq!(r.violations, 0);
         assert_eq!(r.total_acquisitions(), 80);
+    }
+
+    #[test]
+    fn multiplexed_ready_mode_matches_scan_semantics() {
+        // The event-driven scheduler must deliver the same totals,
+        // oracle cleanliness, and local-class NIC silence as the scan
+        // scheduler.
+        let c = Cluster::new(3, 1 << 18, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(12);
+        let wl = Workload::cycles(80).with_locks(32, 0.9);
+        let r = run_multiplexed_workload_mode(&svc, &procs, &wl, 3, PollMode::Ready);
+        assert_eq!(r.violations, 0);
+        assert_eq!(r.total_acquisitions(), 12 * 80);
+        assert_eq!(r.per_lock_entries.iter().sum::<u64>(), 12 * 80);
+        assert_eq!(r.local_class_remote_verbs(), 0);
+        for p in &r.procs {
+            assert_eq!(p.acquisitions, 80);
+        }
+    }
+
+    #[test]
+    fn hottest_share_is_rank_zero_not_the_max() {
+        // Regression: hottest_share promised the Zipf rank-0 lock's
+        // share but returned the max per-lock share — at zero skew
+        // that's the luckiest lock (an extreme-order statistic), a
+        // biased stand-in for "how hot is the hot key".
+        let r = MultiLockRunResult {
+            wall: Duration::from_millis(1),
+            procs: vec![],
+            violations: 0,
+            per_lock_entries: vec![10, 25, 15],
+        };
+        assert!((r.hottest_share() - 0.2).abs() < 1e-12, "rank-0 share");
+        assert!((r.max_share() - 0.5).abs() < 1e-12, "extreme share");
+        let empty = MultiLockRunResult {
+            wall: Duration::from_millis(1),
+            procs: vec![],
+            violations: 0,
+            per_lock_entries: vec![],
+        };
+        assert_eq!(empty.hottest_share(), 0.0);
+        assert_eq!(empty.max_share(), 0.0);
+    }
+
+    #[test]
+    fn ready_probe_small_scale_separates_the_modes() {
+        let ready = ready_list_probe(64, 8, PollMode::Ready);
+        assert_eq!(ready.releases, 8);
+        assert!(
+            ready.polls_per_release() <= 3.0,
+            "ready mode polled {} per release",
+            ready.polls_per_release()
+        );
+        let scan = ready_list_probe(64, 8, PollMode::Scan);
+        assert!(
+            scan.polls_per_release() >= 32.0,
+            "scan mode polled only {} per release",
+            scan.polls_per_release()
+        );
     }
 
     #[test]

@@ -14,11 +14,13 @@
 //! accounting by locality class so the paper's zero-local-RDMA claim
 //! stays observable per handle class at lock-table scale.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
-use crate::locks::{make_lock, AsyncLockHandle, LockHandle, LockPoll, SharedLock};
-use crate::rdma::{Endpoint, NodeId, ProcMetrics, RdmaDomain};
+use crate::locks::{
+    make_lock, ArmOutcome, AsyncLockHandle, LockHandle, LockPoll, SharedLock, WakeupReg,
+};
+use crate::rdma::{Endpoint, NodeId, ProcMetrics, RdmaDomain, WakeupRing};
 
 /// Default capacity (max processes per lock) when not specified.
 const DEFAULT_MAX_PROCS: u32 = 64;
@@ -416,6 +418,11 @@ impl LockService {
 /// starts a non-blocking acquisition of a named lock and
 /// [`HandleCache::poll_all`] advances every in-flight one by one step —
 /// one session (one OS thread) can wait on many named locks at once.
+/// [`HandleCache::poll_ready`] is the event-driven variant: the session
+/// owns a [`WakeupRing`] in its own node's memory, parked waiters arm
+/// a registration, the handoff that resolves each wait publishes the
+/// waiter's token, and a poll round touches only signalled (plus
+/// not-yet-armed) names — O(ready) instead of O(pending).
 /// Dropping the session returns every leased pid slot to the registry
 /// (handles are [`SlotHandle`]s), so churning sessions no longer leaks
 /// lock-table capacity.
@@ -425,12 +432,63 @@ pub struct HandleCache {
     local_metrics: Arc<ProcMetrics>,
     remote_metrics: Arc<ProcMetrics>,
     handles: HashMap<String, Box<dyn LockHandle>>,
-    /// Names with a submitted-but-unresolved acquisition, in submit
-    /// order (poll order is FIFO over submissions).
-    pending: Vec<String>,
+    /// Names with a submitted-but-unresolved acquisition (membership
+    /// truth; O(1) for the submit/poll hot paths).
+    pending: HashSet<String>,
+    /// Submit-order view of `pending` (poll_all's FIFO order).
+    /// Resolved names are compacted lazily: inside `poll_all`'s pass,
+    /// and amortized against the live count in `resolve`.
+    pending_order: Vec<String>,
+    /// Pending names that must be polled every ready round (no armed
+    /// registration: fresh enqueues, Peterson-engaged leaders,
+    /// algorithms without wakeup support). Compacted lazily against
+    /// `pending`/`armed`.
+    scan: Vec<String>,
+    /// Pending names whose completion will arrive as a ring token —
+    /// `poll_ready` does not touch them until it does.
+    armed: HashMap<String, u64>,
+    /// Pending names whose acquisition is a *cancelled drain* (the
+    /// queue cannot unlink them; they resolve to `Cancelled`).
+    cancelled: HashSet<String>,
+    /// Names the caller re-submitted while their cancelled drain was
+    /// still in flight: when the drain resolves, the fresh acquisition
+    /// is started automatically instead of dropping the request.
+    resubmit: HashSet<String>,
+    /// Session wakeup ring (created by
+    /// [`HandleCache::enable_ready_wakeups`], or on the first
+    /// `poll_ready` with a default capacity).
+    ring: Option<WakeupRing>,
+    /// token → name registry backing the armed set.
+    tokens: Vec<Option<String>>,
+    /// Token ids safe to reuse: no publication of them can be
+    /// outstanding in the ring.
+    free_tokens: Vec<u64>,
+    /// Token ids released host-side (their registration resolved
+    /// without consuming a ring token), whose publication may still
+    /// occupy an unconsumed slot. They count against the arming bound
+    /// — a lane slot is overwritten once unconsumed publications
+    /// exceed the lane — and become free when a pop proves their slot
+    /// consumed.
+    dirty_tokens: Vec<u64>,
+    /// Names re-listed by a drain-with-intent since the last
+    /// reconciliation (see [`HandleCache::reconcile_relisted`]).
+    relisted: Vec<String>,
+    /// Full-sweep fallback cadence for `poll_ready`, in rounds (0 =
+    /// never sweep).
+    sweep_every: u32,
+    ready_rounds: u64,
+    /// Handle `poll_lock` invocations issued by this session — the
+    /// poll-work metric E12 compares across scheduler modes.
+    handle_polls: u64,
     hits: u64,
     misses: u64,
 }
+
+/// Ring capacity when `poll_ready` has to self-enable wakeups.
+const DEFAULT_WAKEUP_CAPACITY: u32 = 1024;
+
+/// Default fallback-sweep cadence (rounds) for `poll_ready`.
+const DEFAULT_SWEEP_EVERY: u32 = 256;
 
 impl HandleCache {
     fn new(svc: Arc<LockService>, node: NodeId) -> HandleCache {
@@ -440,7 +498,20 @@ impl HandleCache {
             local_metrics: Arc::new(ProcMetrics::default()),
             remote_metrics: Arc::new(ProcMetrics::default()),
             handles: HashMap::new(),
-            pending: Vec::new(),
+            pending: HashSet::new(),
+            pending_order: Vec::new(),
+            scan: Vec::new(),
+            armed: HashMap::new(),
+            cancelled: HashSet::new(),
+            resubmit: HashSet::new(),
+            ring: None,
+            tokens: Vec::new(),
+            free_tokens: Vec::new(),
+            dirty_tokens: Vec::new(),
+            relisted: Vec::new(),
+            sweep_every: DEFAULT_SWEEP_EVERY,
+            ready_rounds: 0,
+            handle_polls: 0,
             hits: 0,
             misses: 0,
         }
@@ -492,8 +563,12 @@ impl HandleCache {
     /// Start a poll-based acquisition of `name`, minting the handle on
     /// first touch. Returns the first poll's outcome: `Held` if the
     /// acquisition completed immediately (the uncontended fast path —
-    /// no later `poll_all` round needed), `Pending` if it is now in
-    /// flight. Submitting a name that is already pending just polls it.
+    /// no later poll round needed), `Pending` if it is now in flight.
+    /// Submitting a name that is already pending polls it; if that
+    /// poll finishes draining a *cancelled* acquisition, a fresh
+    /// acquisition starts within the same call (returning the drain's
+    /// `Cancelled` here used to wedge callers that treat non-`Held` as
+    /// still-in-flight and then wait on a poll that never resolves).
     ///
     /// Panics if the lock's algorithm does not implement
     /// [`AsyncLockHandle`] — a blocking fallback here would silently
@@ -502,8 +577,34 @@ impl HandleCache {
     /// be a lie, and the paired double-release would corrupt the
     /// queue).
     pub fn submit(&mut self, name: &str) -> Result<LockPoll, LockServiceError> {
-        if self.pending.iter().any(|n| n == name) {
-            return Ok(self.poll_one(name));
+        if self.pending.contains(name) {
+            match self.poll_one(name) {
+                LockPoll::Cancelled => {
+                    // The drain just resolved: purge its stale order and
+                    // scan entries eagerly so the fresh submission below
+                    // cannot leave duplicates that would be double-polled
+                    // every round (the resubmit-after-cancel path is
+                    // rare; an O(pending) purge here is fine).
+                    self.pending_order.retain(|n| n != name);
+                    self.scan.retain(|n| n != name);
+                }
+                other => {
+                    self.reconcile_relisted();
+                    // Still in flight. If it is a cancelled drain (not
+                    // an acquisition for the caller), record the intent:
+                    // when the drain resolves inside a later poll round,
+                    // the fresh acquisition starts automatically —
+                    // otherwise this submit would be silently dropped
+                    // and a caller treating non-Held as in-flight would
+                    // poll forever. (If the drain resolved during this
+                    // very poll, `cancelled` is already clear and the
+                    // re-listed acquisition is the caller's.)
+                    if self.cancelled.contains(name) {
+                        self.resubmit.insert(name.to_string());
+                    }
+                    return Ok(other);
+                }
+            }
         }
         let algo = self.handle(name)?.algorithm();
         let h = self.handles.get_mut(name).expect("just ensured").as_mut();
@@ -514,52 +615,336 @@ impl HandleCache {
             !a.is_held(),
             "submit('{name}'): the session already holds this lock"
         );
+        self.handle_polls += 1;
         match a.poll_lock() {
             LockPoll::Held => Ok(LockPoll::Held),
             other => {
-                self.pending.push(name.to_string());
+                self.pending.insert(name.to_string());
+                self.pending_order.push(name.to_string());
+                // Ready bookkeeping only exists alongside a ring;
+                // scan-mode sessions (poll_all) track nothing extra,
+                // and enable_ready_wakeups seeds the scan set from
+                // `pending` if a ring appears later.
+                if self.ring.is_some() && !self.try_arm(name) {
+                    self.scan.push(name.to_string());
+                }
                 Ok(other)
             }
         }
     }
 
     /// Advance one pending acquisition by a single poll step, clearing
-    /// it from the pending set if it resolved.
+    /// it from the pending bookkeeping if it resolved. A cancelled
+    /// drain that resolves with a recorded resubmit intent is re-listed
+    /// (reported as `Pending`): the handle is idle again, and the next
+    /// poll round's touch of it submits the fresh acquisition.
     fn poll_one(&mut self, name: &str) -> LockPoll {
+        self.handle_polls += 1;
         let h = self.handles.get_mut(name).expect("pending implies minted");
         let r = h.as_async().expect("pending implies async").poll_lock();
         if r != LockPoll::Pending {
-            self.pending.retain(|n| n != name);
+            self.resolve(name);
+            if r == LockPoll::Cancelled {
+                self.cancelled.remove(name);
+                if self.resubmit.remove(name) {
+                    self.relist(name);
+                    return LockPoll::Pending;
+                }
+            }
         }
         r
     }
 
-    /// Poll every in-flight acquisition once, in submit order. Returns
-    /// the names that became **held** during this round (cancelled
-    /// acquisitions resolve silently). Each poll of a parked waiter is
-    /// a local read on this session's node — zero remote verbs — so a
-    /// session can afford to poll large pending sets tightly.
+    /// Re-list `name` as pending on behalf of a recorded resubmit
+    /// intent, purging the drained acquisition's stale entries first.
+    /// No poll here — the handle is idle, and polling an idle handle
+    /// submits, which the next round does through its normal path.
+    /// Scan membership is settled by [`HandleCache::reconcile_relisted`]
+    /// at the end of the poll entry point, where duplicates can be
+    /// detected.
+    fn relist(&mut self, name: &str) {
+        self.pending_order.retain(|n| n != name);
+        self.scan.retain(|n| n != name);
+        self.pending.insert(name.to_string());
+        self.pending_order.push(name.to_string());
+        self.relisted.push(name.to_string());
+    }
+
+    /// Ensure every just-re-listed name is on the scan list of a ready
+    /// session (deduplicating against entries the poll round may have
+    /// added itself). Rare path, so the linear dedup is fine.
+    fn reconcile_relisted(&mut self) {
+        while let Some(name) = self.relisted.pop() {
+            if self.ring.is_none()
+                || !self.pending.contains(&name)
+                || self.armed.contains_key(&name)
+                || self.scan.iter().any(|n| *n == name)
+            {
+                continue;
+            }
+            self.scan.push(name);
+        }
+    }
+
+    /// A pending acquisition finished (held or drained): drop every
+    /// trace of it. A ring token that was already published for it is
+    /// discarded on consumption by `poll_ready`'s token/armed
+    /// cross-check; the `scan` list is compacted lazily.
+    fn resolve(&mut self, name: &str) {
+        self.pending.remove(name);
+        self.resolve_registration(name);
+        // Amortized GC of the order view (sessions that only ever use
+        // poll_ready never run poll_all's compacting pass): once stale
+        // entries outnumber live ones, sweep them in O(n) — O(1)
+        // amortized per resolution, and never during a phase that
+        // hasn't already resolved half its pending set.
+        if self.pending_order.len() > 2 * self.pending.len() + 16 {
+            let pending = &self.pending;
+            self.pending_order.retain(|n| pending.contains(n));
+        }
+    }
+
+    /// Release `name`'s armed registration, if any — the single owner
+    /// of the token-bookkeeping invariant; every resolution path
+    /// funnels through here (as an associated fn so `poll_all`'s
+    /// borrow-split pass can use it too). The token goes to the
+    /// *dirty* list, not the free list: an armed registration's
+    /// handoff publishes exactly one ring token, and unless this
+    /// release happened by consuming it (`poll_ready` reclaims it
+    /// right after the pop), that publication may still occupy a slot.
+    fn release_registration(
+        armed: &mut HashMap<String, u64>,
+        tokens: &mut [Option<String>],
+        dirty_tokens: &mut Vec<u64>,
+        name: &str,
+    ) {
+        if let Some(token) = armed.remove(name) {
+            tokens[token as usize] = None;
+            dirty_tokens.push(token);
+        }
+    }
+
+    /// A ring pop just consumed whatever publication used `token`'s
+    /// slot: a dirty token id becomes reusable again.
+    fn reclaim_token(&mut self, token: u64) {
+        if let Some(i) = self.dirty_tokens.iter().position(|&t| t == token) {
+            self.dirty_tokens.swap_remove(i);
+            self.free_tokens.push(token);
+        }
+    }
+
+    /// Try to register an event-driven wakeup for pending `name`.
+    /// Returns true iff the handle is now armed (needs no polling
+    /// until its token arrives). Arming is skipped — falling back to
+    /// scanning — when no ring exists, when the ring is at capacity,
+    /// or when the handle's wait state cannot be signalled.
+    fn try_arm(&mut self, name: &str) -> bool {
+        let Some(ring) = &self.ring else {
+            return false;
+        };
+        // The bound is on *unconsumed publications*, so dirty tokens
+        // (released registrations whose ring slot may still be
+        // occupied) count alongside live ones.
+        if (self.armed.len() + self.dirty_tokens.len()) as u64 >= ring.capacity() {
+            return false; // full: scanning is safe, overwriting slots is not
+        }
+        let reg = WakeupReg {
+            ring: ring.header(),
+            ring_slots: ring.lane_slots(),
+            token: match self.free_tokens.pop() {
+                Some(t) => t,
+                None => {
+                    self.tokens.push(None);
+                    self.tokens.len() as u64 - 1
+                }
+            },
+        };
+        let h = self.handles.get_mut(name).expect("pending implies minted");
+        match h.as_async().expect("pending implies async").arm_wakeup(reg) {
+            ArmOutcome::Armed => {
+                self.tokens[reg.token as usize] = Some(name.to_string());
+                self.armed.insert(name.to_string(), reg.token);
+                true
+            }
+            ArmOutcome::AlreadyReady | ArmOutcome::Unsupported => {
+                self.free_tokens.push(reg.token);
+                false
+            }
+        }
+    }
+
+    /// Poll every in-flight acquisition once, in submit order (scan
+    /// mode). Returns the names that became **held** during this round
+    /// (cancelled acquisitions resolve silently). Each poll of a
+    /// parked waiter is a local read on this session's node — zero
+    /// remote verbs — so a session can afford to poll large pending
+    /// sets tightly; `poll_ready` additionally avoids touching parked
+    /// waiters at all.
     pub fn poll_all(&mut self) -> Vec<String> {
         let HandleCache {
-            pending, handles, ..
+            pending,
+            pending_order,
+            handles,
+            armed,
+            tokens,
+            dirty_tokens,
+            cancelled,
+            resubmit,
+            handle_polls,
+            ..
         } = self;
         let mut held = Vec::new();
-        pending.retain(|name| {
+        let mut restart = Vec::new();
+        pending_order.retain(|name| {
+            if !pending.contains(name) {
+                return false; // resolved through another path earlier
+            }
             let h = handles.get_mut(name).expect("pending implies minted");
+            *handle_polls += 1;
             match h.as_async().expect("pending implies async").poll_lock() {
                 LockPoll::Pending => true,
+                r => {
+                    pending.remove(name);
+                    Self::release_registration(armed, tokens, dirty_tokens, name);
+                    if r == LockPoll::Held {
+                        held.push(name.clone());
+                    } else {
+                        cancelled.remove(name);
+                        if resubmit.remove(name) {
+                            restart.push(name.clone());
+                        }
+                    }
+                    false
+                }
+            }
+        });
+        for name in restart {
+            self.relist(&name);
+        }
+        self.reconcile_relisted();
+        held
+    }
+
+    /// Create this session's wakeup ring (idempotent). `capacity`
+    /// bounds how many acquisitions can be armed at once; pendings
+    /// beyond it fall back to scanning. The register arena cannot
+    /// free, so size it once to the session's maximum in-flight count.
+    pub fn enable_ready_wakeups(&mut self, capacity: u32) {
+        if self.ring.is_none() {
+            // Ring consumption is session-node-local activity: feed the
+            // local-class sink so the NIC-silence assertions actually
+            // observe it (an orphan metrics object would make them
+            // vacuous for ring traffic).
+            let ep = self
+                .svc
+                .domain
+                .endpoint_with_metrics(self.node, Arc::clone(&self.local_metrics));
+            self.ring = Some(WakeupRing::new(ep, capacity));
+            // Acquisitions submitted before the ring existed enter the
+            // scan set, so the first poll_ready round sees them (and
+            // arms the armable ones).
+            self.scan = self.pending.iter().cloned().collect();
+        }
+    }
+
+    /// Cadence of `poll_ready`'s full fallback sweep, in rounds (0
+    /// disables it). The sweep is a safety net for wakeup paths the
+    /// session cannot vouch for (e.g. future algorithms with weaker
+    /// signalling); qplock's handshake makes it find nothing the
+    /// tokens would not.
+    pub fn set_sweep_interval(&mut self, every_rounds: u32) {
+        self.sweep_every = every_rounds;
+    }
+
+    /// Event-driven poll round: consume the session's wakeup ring and
+    /// poll only (a) names whose token arrived and (b) the unarmed
+    /// scan set — O(ready + unarmed) handle polls instead of
+    /// `poll_all`'s O(pending). Names that park on a signallable wait
+    /// are armed along the way and drop out of the scan set, so a
+    /// steady-state session of parked waiters polls *nothing* until a
+    /// handoff lands. Returns the names that became held, like
+    /// [`HandleCache::poll_all`].
+    pub fn poll_ready(&mut self) -> Vec<String> {
+        if self.ring.is_none() {
+            self.enable_ready_wakeups(DEFAULT_WAKEUP_CAPACITY);
+        }
+        self.ready_rounds += 1;
+        let mut held = Vec::new();
+
+        // 1. Ready list: tokens published by handoffs since the last
+        // round. Validate before polling — a stale token (whose
+        // registration resolved through another path, e.g. the sweep)
+        // no longer cross-checks and is discarded.
+        while let Some(token) = self.ring.as_mut().expect("just enabled").pop() {
+            let name = self.tokens.get(token as usize).cloned().flatten();
+            if let Some(name) = name {
+                if self.armed.get(&name) == Some(&token) {
+                    match self.poll_one(&name) {
+                        LockPoll::Held => held.push(name),
+                        LockPoll::Cancelled => {}
+                        LockPoll::Pending => {
+                            // Still in flight: the budget arrived
+                            // exhausted and the handle moved on to
+                            // re-engaging the Peterson lock (no further
+                            // handoff will be written for it), or the
+                            // token was a benign spurious duplicate.
+                            // Disarm and keep it progressing.
+                            self.resolve_registration(&name);
+                            if !self.try_arm(&name) {
+                                self.scan.push(name);
+                            }
+                        }
+                    }
+                }
+            }
+            // Whatever this slot held — live or stale — its publication
+            // is now consumed; the token id is safe to reuse.
+            self.reclaim_token(token);
+        }
+
+        // 2. Scan set: pending names without a registration, polled
+        // every round; compact entries that resolved or armed.
+        let mut scan = std::mem::take(&mut self.scan);
+        scan.retain(|name| {
+            if !self.pending.contains(name) || self.armed.contains_key(name) {
+                return false;
+            }
+            match self.poll_one(name) {
                 LockPoll::Held => {
                     held.push(name.clone());
                     false
                 }
                 LockPoll::Cancelled => false,
+                LockPoll::Pending => !self.try_arm(name),
             }
         });
+        self.scan = scan;
+
+        // 3. Periodic fallback sweep over the armed set.
+        if self.sweep_every > 0 && self.ready_rounds % self.sweep_every as u64 == 0 {
+            let armed: Vec<String> = self.armed.keys().cloned().collect();
+            for name in armed {
+                if self.poll_one(&name) == LockPoll::Held {
+                    held.push(name);
+                }
+            }
+        }
+        self.reconcile_relisted();
         held
     }
 
+    /// Drop `name`'s armed registration (keeping it pending).
+    fn resolve_registration(&mut self, name: &str) {
+        Self::release_registration(
+            &mut self.armed,
+            &mut self.tokens,
+            &mut self.dirty_tokens,
+            name,
+        );
+    }
+
     /// Release a lock acquired via [`HandleCache::submit`]/
-    /// [`HandleCache::poll_all`].
+    /// [`HandleCache::poll_all`]/[`HandleCache::poll_ready`].
     pub fn release(&mut self, name: &str) {
         let h = self.handles.get_mut(name).expect("release of unminted lock");
         h.unlock();
@@ -567,8 +952,9 @@ impl HandleCache {
 
     /// Abandon an in-flight acquisition of `name`. If the handle was
     /// not yet queue-visible it detaches immediately; otherwise it
-    /// stays pending and later `poll_all` rounds drain it (the owed
-    /// handoff is relayed, never lost).
+    /// stays pending and later poll rounds drain it (the owed handoff
+    /// is relayed, never lost — an *armed* cancelled waiter still gets
+    /// its token, and the drain resolves on consuming it).
     pub fn cancel(&mut self, name: &str) {
         let Some(h) = self.handles.get_mut(name) else {
             return;
@@ -576,14 +962,45 @@ impl HandleCache {
         let Some(a) = h.as_async() else {
             return;
         };
+        // A new cancel revokes any standing resubmit intent either way.
+        self.resubmit.remove(name);
         if a.cancel_lock() {
-            self.pending.retain(|n| n != name);
+            self.resolve(name);
+            self.cancelled.remove(name);
+        } else {
+            self.cancelled.insert(name.to_string());
         }
     }
 
     /// Acquisitions currently in flight (submitted, not yet resolved).
     pub fn pending_count(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Whether `name` has an in-flight acquisition in this session.
+    pub fn is_pending(&self, name: &str) -> bool {
+        self.pending.contains(name)
+    }
+
+    /// Names currently in flight (order unspecified).
+    pub fn pending_names(&self) -> Vec<String> {
+        self.pending.iter().cloned().collect()
+    }
+
+    /// Acquisitions currently armed for event-driven wakeup.
+    pub fn armed_count(&self) -> usize {
+        self.armed.len()
+    }
+
+    /// Handle `poll_lock` invocations this session has issued so far
+    /// (across `submit`, `poll_all`, and `poll_ready`).
+    pub fn handle_polls(&self) -> u64 {
+        self.handle_polls
+    }
+
+    /// `poll_ready` rounds driven so far.
+    pub fn ready_rounds(&self) -> u64 {
+        self.ready_rounds
     }
 
     /// Distinct locks this session has touched.
@@ -878,6 +1295,254 @@ mod tests {
         // The lock is free again for anyone.
         let mut z = s.session(2);
         z.with_lock("c", || {}).unwrap();
+    }
+
+    #[test]
+    fn submit_after_cancel_starts_a_fresh_acquisition() {
+        // Regression: submitting a name whose *cancelled* acquisition
+        // was still draining returned the drain's poll result — a
+        // fresh submit could observe Cancelled and never start an
+        // acquisition, wedging callers that treat non-Held as
+        // in-flight and then poll forever.
+        let s = service_arc();
+        let mut holder = s.session(0);
+        holder.handle("sc").unwrap().lock();
+        let mut w = s.session(1);
+        assert_eq!(w.submit("sc").unwrap(), LockPoll::Pending);
+        w.cancel("sc"); // queued: cannot unlink, drains via poll
+        assert_eq!(w.pending_count(), 1);
+        holder.release("sc");
+        // Re-submit while the drain is unresolved: submit must finish
+        // the drain AND start (or complete) the new acquisition.
+        let mut polls = 0;
+        loop {
+            match w.submit("sc").unwrap() {
+                LockPoll::Held => break,
+                LockPoll::Pending => {}
+                LockPoll::Cancelled => panic!("fresh submit reported the drain"),
+            }
+            polls += 1;
+            assert!(polls < 10_000, "resubmit never acquired: wedged");
+        }
+        w.release("sc");
+    }
+
+    #[test]
+    fn resubmit_while_drain_still_pending_restarts_after_the_drain() {
+        // Deeper variant of the submit-after-cancel wedge: the
+        // re-submit lands while the cancelled drain is still Pending.
+        // The intent must be recorded and the fresh acquisition must
+        // start automatically when the drain resolves inside a later
+        // poll round — no further submit() calls.
+        let s = service_arc();
+        let mut holder = s.session(1);
+        holder.handle("rd").unwrap().lock();
+        let mut w = s.session(1);
+        assert_eq!(w.submit("rd").unwrap(), LockPoll::Pending);
+        w.cancel("rd"); // queued: drains via poll
+        assert_eq!(w.submit("rd").unwrap(), LockPoll::Pending, "intent recorded");
+        holder.release("rd");
+        let mut held = Vec::new();
+        let mut rounds = 0;
+        while held.is_empty() {
+            held = w.poll_all();
+            rounds += 1;
+            assert!(rounds < 10_000, "resubmit intent lost: wedged");
+        }
+        assert_eq!(held, vec!["rd".to_string()]);
+        w.release("rd");
+        assert_eq!(w.pending_count(), 0);
+    }
+
+    #[test]
+    fn resubmit_intent_survives_a_ready_mode_token_drain() {
+        // Same wedge through the event-driven path: the cancelled
+        // waiter is armed, its drain resolves by consuming its wakeup
+        // token, and the recorded resubmit must restart — with the
+        // sweep disabled, so only the token/scan machinery can do it.
+        let s = service_arc();
+        let mut holder = s.session(1);
+        holder.handle("ri").unwrap().lock();
+        let mut w = s.session(1);
+        w.enable_ready_wakeups(4);
+        w.set_sweep_interval(0);
+        assert_eq!(w.submit("ri").unwrap(), LockPoll::Pending);
+        while w.armed_count() < 1 {
+            assert!(w.poll_ready().is_empty());
+        }
+        w.cancel("ri"); // armed drain: resolves through its token
+        assert_eq!(w.submit("ri").unwrap(), LockPoll::Pending, "intent recorded");
+        holder.release("ri");
+        let mut held = Vec::new();
+        let mut rounds = 0;
+        while held.is_empty() {
+            held = w.poll_ready();
+            rounds += 1;
+            assert!(rounds < 10_000, "resubmit intent lost in ready mode");
+        }
+        assert_eq!(held, vec!["ri".to_string()]);
+        w.release("ri");
+        assert_eq!(w.pending_count(), 0);
+    }
+
+    #[test]
+    fn arming_gate_counts_dirty_tokens_not_just_armed() {
+        // Overwrite-safety regression (white box): a registration
+        // released host-side leaves a possibly-unconsumed publication
+        // in the ring; until a pop proves its slot consumed, its token
+        // must count against the arming bound — otherwise lane cursors
+        // could lap the consumer and destroy a live token (a lost
+        // wakeup, a silent wedge with the sweep disabled).
+        let s = service_arc();
+        let mut holder = s.session(1);
+        let mut w = s.session(1);
+        w.enable_ready_wakeups(2);
+        w.set_sweep_interval(0);
+        let names = ["ga", "gb", "gc"];
+        for n in names {
+            assert_eq!(holder.submit(n).unwrap(), LockPoll::Held);
+            assert_eq!(w.submit(n).unwrap(), LockPoll::Pending);
+        }
+        while w.armed_count() < 2 {
+            assert!(w.poll_ready().is_empty());
+        }
+        assert_eq!(w.armed_count(), 2, "third waiter overflows to scan");
+        // Simulate a host-side resolution racing an in-flight
+        // publication: drop one registration without consuming the
+        // ring.
+        let victim = w.armed.keys().next().cloned().unwrap();
+        w.resolve(&victim);
+        assert_eq!(w.armed_count(), 1);
+        assert_eq!(w.dirty_tokens.len(), 1, "released token is dirty");
+        // One armed + one dirty fills the capacity-2 bound: the scan
+        // waiter must be refused.
+        let scanned = w
+            .pending_names()
+            .into_iter()
+            .find(|n| !w.armed.contains_key(n))
+            .unwrap();
+        assert!(
+            !w.try_arm(&scanned),
+            "gate ignored the dirty token: a lane slot could be overwritten"
+        );
+        // Drain everything clean: the victim's handle is still queued,
+        // so finish it directly; its (now stale) publication is
+        // reclaimed by a later pop.
+        for n in names {
+            holder.release(n);
+        }
+        let a = w.handle(&victim).unwrap().as_async().unwrap();
+        while a.poll_lock() == LockPoll::Pending {}
+        w.release(&victim);
+        let mut done = 1;
+        while done < names.len() {
+            for n in w.poll_ready() {
+                w.release(&n);
+                done += 1;
+            }
+        }
+        assert!(w.dirty_tokens.is_empty(), "stale publication reclaimed");
+    }
+
+    #[test]
+    fn poll_ready_parks_armed_waiters_and_wakes_them_on_release() {
+        // Holder and waiter share a node: the waiter queues behind the
+        // holder *within one cohort*, parking in the armable
+        // WaitBudget state. (A cross-class waiter engages Peterson
+        // instead — no passer-written word — and stays on the scan
+        // path.)
+        let s = service_arc();
+        let mut holder = s.session(1);
+        let mut w = s.session(1);
+        w.enable_ready_wakeups(8);
+        w.set_sweep_interval(0); // isolate the event-driven path
+        let names: Vec<String> = (0..4).map(|i| format!("rw-{i}")).collect();
+        for n in &names {
+            assert_eq!(holder.submit(n).unwrap(), LockPoll::Held);
+            assert_eq!(w.submit(n).unwrap(), LockPoll::Pending);
+        }
+        // A few rounds park + arm every waiter.
+        while w.armed_count() < names.len() {
+            assert!(w.poll_ready().is_empty(), "holder still holds everything");
+        }
+        // Armed steady state: rounds poll nothing at all.
+        let polls0 = w.handle_polls();
+        for _ in 0..100 {
+            assert!(w.poll_ready().is_empty());
+        }
+        assert_eq!(w.handle_polls() - polls0, 0, "parked waiters were polled");
+        // One release ⇒ exactly that name wakes, with O(1) polls.
+        holder.release(&names[2]);
+        let polls1 = w.handle_polls();
+        let mut got = Vec::new();
+        while got.is_empty() {
+            got = w.poll_ready();
+        }
+        assert_eq!(got, vec![names[2].clone()]);
+        assert!(w.handle_polls() - polls1 <= 2, "release woke O(1) polls");
+        w.release(&names[2]);
+        // Drain everything so the sessions drop clean.
+        for (i, n) in names.iter().enumerate() {
+            if i != 2 {
+                holder.release(n);
+            }
+        }
+        let mut done = 1;
+        while done < names.len() {
+            for n in w.poll_ready() {
+                w.release(&n);
+                done += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn cancelled_armed_waiter_drains_through_its_token() {
+        // Cancel + wakeup interplay: the cancelled waiter still
+        // receives its handoff token; consuming it drains the
+        // acquisition (relaying the handoff) without reporting Held.
+        let s = service_arc();
+        let mut holder = s.session(1);
+        holder.handle("cw").unwrap().lock();
+        let mut w = s.session(1); // same node: same cohort as the holder
+        w.enable_ready_wakeups(4);
+        w.set_sweep_interval(0);
+        assert_eq!(w.submit("cw").unwrap(), LockPoll::Pending);
+        while w.armed_count() < 1 {
+            assert!(w.poll_ready().is_empty());
+        }
+        w.cancel("cw"); // queued + armed: stays pending, drains via token
+        assert_eq!(w.pending_count(), 1);
+        holder.release("cw");
+        let mut rounds = 0;
+        while w.pending_count() > 0 {
+            assert!(w.poll_ready().is_empty(), "cancelled: never reported held");
+            rounds += 1;
+            assert!(rounds < 10_000, "drain never completed");
+        }
+        // The lock is free again for anyone.
+        let mut z = s.session(2);
+        z.with_lock("cw", || {}).unwrap();
+    }
+
+    #[test]
+    fn poll_ready_self_enables_and_matches_poll_all_semantics() {
+        // Without explicit enable_ready_wakeups, poll_ready still
+        // works (default-capacity ring) and resolves the same set of
+        // names poll_all would.
+        let s = service_arc();
+        let mut holder = s.session(0);
+        holder.handle("se").unwrap().lock();
+        let mut w = s.session(1);
+        assert_eq!(w.submit("se").unwrap(), LockPoll::Pending);
+        assert!(w.poll_ready().is_empty());
+        holder.release("se");
+        let mut got = Vec::new();
+        while got.is_empty() {
+            got = w.poll_ready();
+        }
+        assert_eq!(got, vec!["se".to_string()]);
+        w.release("se");
     }
 
     #[test]

@@ -12,9 +12,11 @@
 //!   acquisition over one resumable state machine) plus every baseline.
 //! * [`mc`] — explicit-state model checker over the PlusCal spec.
 //! * [`coordinator`] — cluster topology, the sharded named-lock service
-//!   (striped registry, handle-cache sessions with pid-slot leases and
-//!   submit/poll_all multiplexing, multi-lock Zipfian runner,
-//!   poll-multiplexed runner), and the single-lock workload runner.
+//!   (striped registry, handle-cache sessions with pid-slot leases,
+//!   submit/poll_all multiplexing and event-driven `poll_ready`
+//!   wakeup rings, multi-lock Zipfian runner, poll-multiplexed runner
+//!   with scan/ready scheduler modes), and the single-lock workload
+//!   runner.
 //! * [`runtime`] — compute engine executing the reference-kernel math
 //!   inside critical sections (native port of the JAX/Pallas kernels;
 //!   see `runtime/mod.rs` for the PJRT substitution note).

@@ -19,7 +19,7 @@ pub mod qplock;
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 use std::sync::Arc;
 
-use crate::rdma::{Endpoint, NodeId};
+use crate::rdma::{Addr, Endpoint, NodeId};
 
 /// Locality class of a process w.r.t. a lock's home node (paper §2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -72,6 +72,42 @@ impl LockPoll {
     }
 }
 
+/// Where a parked acquisition wants its completion signalled: the
+/// header of the session's [`crate::rdma::WakeupRing`] (on the waiting
+/// process's own node) plus the session's token for this acquisition.
+/// Carried by [`AsyncLockHandle::arm_wakeup`].
+#[derive(Clone, Copy, Debug)]
+pub struct WakeupReg {
+    /// Ring header address (see `rdma::wakeup` for the layout).
+    pub ring: Addr,
+    /// Session-scoped token identifying the acquisition (published
+    /// into the ring as `token + 1`). Must fit in 32 bits — it travels
+    /// packed beside `ring_slots` in one descriptor word.
+    pub token: u64,
+    /// Physical slots per ring lane ([`crate::rdma::WakeupRing::lane_slots`],
+    /// the producer's modulo base; also ≤ 32 bits). Carried in the
+    /// registration so the passer never reads ring geometry remotely.
+    pub ring_slots: u64,
+}
+
+/// Outcome of [`AsyncLockHandle::arm_wakeup`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArmOutcome {
+    /// Registered: the handoff that resolves this wait will publish
+    /// the token into the ring; until it arrives the handle needs no
+    /// polling at all.
+    Armed,
+    /// The wait already resolved (or its handoff raced the
+    /// registration): poll now; no token is guaranteed to arrive. This
+    /// closes the race with a passer that wrote the handoff before
+    /// observing the registration.
+    AlreadyReady,
+    /// This handle — or its current wait state (e.g. a Peterson-engaged
+    /// leader, whose release path writes no waiter-side word) — cannot
+    /// be signalled. Keep polling it.
+    Unsupported,
+}
+
 /// A process's handle on a shared lock. Handles are not `Sync`: one
 /// handle per process, used from that process's thread only.
 pub trait LockHandle: Send {
@@ -122,6 +158,17 @@ pub trait AsyncLockHandle: LockHandle {
 
     /// True iff the lock is currently owned through this handle.
     fn is_held(&self) -> bool;
+
+    /// Arm an event-driven wakeup for the current parked wait: ask the
+    /// process that will resolve it to publish `reg.token` into
+    /// `reg.ring` alongside the handoff it already writes, so the
+    /// session can stop polling this handle until the token arrives.
+    /// Only meaningful while the handle is parked on state that a
+    /// passer writes (qplock: `WaitBudget`); the default is
+    /// [`ArmOutcome::Unsupported`] (keep polling).
+    fn arm_wakeup(&mut self, _reg: WakeupReg) -> ArmOutcome {
+        ArmOutcome::Unsupported
+    }
 }
 
 /// The shared side of a lock: knows how to mint per-process handles.

@@ -29,11 +29,20 @@
 //! Register/descriptor layout:
 //!
 //! ```text
-//! home node:   victim | tail[LOCAL] | tail[REMOTE]      (1 word each)
-//! each proc:   desc = [ budget | next ]                 (on its own node)
+//! home node:   victim | tail[LOCAL] | tail[REMOTE]          (1 word each)
+//! each proc:   desc = [ budget | next | wake-ring | wake-token ]
+//!                                                       (on its own node)
 //! ```
 //!
 //! `budget = u64::MAX` encodes the paper's −1 ("enqueued, not passed").
+//! The two wake words are the optional **ready-list registration**: a
+//! waiter parked in `WaitBudget` may advertise its session's
+//! [`crate::rdma::WakeupRing`] (and a token), and `q_unlock`'s budget
+//! handoff then also publishes the token into that ring — same target
+//! node as the budget write, so the handoff stays O(1) remote verbs
+//! and local-class releases still issue zero. That lets a multiplexing
+//! session discover ready acquisitions in O(ready) instead of scanning
+//! every parked one.
 //!
 //! Acquisition is a **resumable state machine** (`Idle → Enqueue →
 //! WaitBudget → Reacquire → Held`, leaders short-cutting through
@@ -44,11 +53,11 @@
 //! a parked waiter is a read of the process's own node — which is what
 //! lets one OS thread multiplex thousands of in-flight acquisitions.
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
 use std::sync::Arc;
 
-use super::{AsyncLockHandle, Class, LockHandle, LockPoll, SharedLock};
-use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use super::{ArmOutcome, AsyncLockHandle, Class, LockHandle, LockPoll, SharedLock, WakeupReg};
+use crate::rdma::{wakeup, Addr, Endpoint, NodeId, RdmaDomain};
 use crate::util::spin::Backoff;
 
 /// The paper's −1 sentinel for "waiting" in the budget word.
@@ -56,6 +65,14 @@ const WAITING: u64 = u64::MAX;
 
 /// Offset of the `next` field inside a descriptor.
 const NEXT: u32 = 1;
+
+/// Offset of the wakeup-ring header address (0 = no wakeup armed).
+const WAKE_RING: u32 = 2;
+
+/// Offset of the wakeup token word: the ring's per-lane slot count in
+/// the high 32 bits (the producer's modulo base), the token to publish
+/// in the low 32.
+const WAKE_TOKEN: u32 = 3;
 
 /// The one shared identity of a qplock: the three home-node registers,
 /// the configured `kInitBudget`, and host-side per-lock state. Held by
@@ -74,6 +91,16 @@ pub struct QpInner {
     contended: AtomicU64,
     /// Handles minted over this lock's lifetime.
     handles_minted: AtomicU64,
+    /// Sticky marker: some handle of this lock has armed a ready-list
+    /// registration at least once. Gates the handoff's registration
+    /// read, so locks never used through wakeup sessions pay zero
+    /// extra verbs. Deployment-wise this would be lock metadata a
+    /// client learns at mint time; the simulator keeps it host-side
+    /// like the contention counters. SeqCst: the arm-side store
+    /// (before the budget re-check) and the passer's load (after the
+    /// budget write) pair under the same SC argument as the wake words
+    /// themselves, so gating cannot lose a wakeup.
+    wakeups: AtomicBool,
 }
 
 /// Shared side of a qplock: three registers on the home node plus the
@@ -101,6 +128,7 @@ impl QpLock {
                 init_budget,
                 contended: AtomicU64::new(0),
                 handles_minted: AtomicU64::new(0),
+                wakeups: AtomicBool::new(false),
             }),
         })
     }
@@ -132,7 +160,9 @@ impl QpInner {
     fn mint(self: &Arc<Self>, ep: Endpoint) -> QpHandle {
         self.handles_minted.fetch_add(1, Relaxed);
         let class = Class::of(&ep, self.home);
-        let desc = ep.alloc(2); // budget, next — always on the caller's node
+        // budget, next, wake ring, wake token — always on the caller's
+        // node (waiting *and* wakeup registration are local state).
+        let desc = ep.alloc(4);
         QpHandle {
             shared: Arc::clone(self),
             ep,
@@ -257,6 +287,28 @@ impl QpHandle {
         }
     }
 
+    /// Read a field of another cohort member's descriptor (or its
+    /// session's ring header). Cohorts are class-homogeneous, so for a
+    /// local-class process the peer is co-located (local read); a
+    /// remote-class process uses rRead.
+    #[inline]
+    fn peer_read(&self, a: Addr) -> u64 {
+        match self.class {
+            Class::Local => self.ep.read(a),
+            Class::Remote => self.ep.r_read(a),
+        }
+    }
+
+    /// Fetch-and-add on a peer session's ring cursor (wakeup slot
+    /// claim).
+    #[inline]
+    fn peer_faa(&self, a: Addr, add: u64) -> u64 {
+        match self.class {
+            Class::Local => self.ep.faa(a, add),
+            Class::Remote => self.ep.r_faa(a, add),
+        }
+    }
+
     // ---- budgeted MCS cohort lock (paper Algorithm 2), poll steps ----
 
     /// Submit: initialize the descriptor and enter `Enqueue`. Runs the
@@ -272,8 +324,11 @@ impl QpHandle {
         // predecessor can only touch our budget after we link (line 9),
         // which happens after the WAITING store in `step_enqueue`.
         // `next` must be null *before* the swap: a successor may link
-        // the instant the tail CAS lands.
+        // the instant the tail CAS lands. The wakeup registration is
+        // per-acquisition state: clear any stale one from a previous
+        // parked wait before a predecessor can observe it.
         self.ep.write_desc(self.desc.offset(NEXT), 0);
+        self.ep.write_desc(self.desc.offset(WAKE_RING), 0);
         self.state = AcqState::Enqueue { curr: 0 };
         self.step_enqueue()
     }
@@ -382,6 +437,44 @@ impl QpHandle {
         let budget = self.ep.read_desc(self.desc);
         debug_assert!(budget >= 1 && budget != WAITING);
         self.peer_write(next, budget - 1); // pass the lock
+        if self.shared.wakeups.load(SeqCst) {
+            self.signal_successor(next);
+        }
+    }
+
+    /// Publish the successor's wakeup token — if it armed one — into
+    /// its session's ring: claim a slot with fetch-and-add, fill it
+    /// with `token + 1`. The registration is read *after* the budget
+    /// write, and the successor's `arm_wakeup` re-checks its budget
+    /// *after* publishing the registration (all SeqCst), so under SC
+    /// at least one side observes the other: either the token lands in
+    /// the ring or the arm reports `AlreadyReady` — a wakeup is never
+    /// lost. Every access here targets the successor's node, exactly
+    /// like the budget write: a local-class passer stays off the NIC
+    /// and a remote-class one adds O(1) verbs to the handoff.
+    fn signal_successor(&self, next: Addr) {
+        let ring_bits = self.peer_read(next.offset(WAKE_RING));
+        if ring_bits == 0 {
+            return;
+        }
+        let token_word = self.peer_read(next.offset(WAKE_TOKEN));
+        let (slots, token) = (token_word >> 32, token_word & 0xFFFF_FFFF);
+        if slots == 0 {
+            return; // malformed registration: nothing to signal safely
+        }
+        let hdr = Addr::from_bits(ring_bits);
+        // Lane discipline (same as the per-class cohort tails): under
+        // commodity atomicity a CPU RMW and a NIC RMW on one word are
+        // not atomic with each other, so each ring cursor is claimed
+        // by exactly one unit — the CPU lane by co-located (local-
+        // class) passers, the NIC lane by rFAA (remote-class) passers.
+        let (cursor, lane_base) = match self.class {
+            Class::Local => (wakeup::CPU_CURSOR_WORD, 0),
+            Class::Remote => (wakeup::NIC_CURSOR_WORD, slots as u32),
+        };
+        let claimed = self.peer_faa(hdr.offset(cursor), 1);
+        let slot = hdr.offset(wakeup::HDR_WORDS + lane_base + (claimed % slots) as u32);
+        self.peer_write(slot, token + 1);
     }
 
     /// `qIsLocked()` on the *other* cohort: its tail register is non-null.
@@ -471,6 +564,44 @@ impl AsyncLockHandle for QpHandle {
 
     fn is_held(&self) -> bool {
         self.state == AcqState::Held
+    }
+
+    fn arm_wakeup(&mut self, reg: WakeupReg) -> ArmOutcome {
+        // Only a waiter parked on its budget word has a guaranteed
+        // future handoff to piggyback on. Leaders engaged in Peterson
+        // (and mid-enqueue CAS retries) resolve through registers no
+        // passer writes for them — those must keep being polled.
+        if self.state != AcqState::WaitBudget {
+            return ArmOutcome::Unsupported;
+        }
+        // Token first, ring last: the passer reads the ring word and
+        // only then the token. SeqCst stores/loads (`write`/`read`,
+        // not the Release/Acquire descriptor fast path): the passer's
+        // budget-write → ring-read and our ring-write → budget-read
+        // must not both pass each other (store-load reordering would
+        // let both sides miss, losing the wakeup).
+        debug_assert!(
+            reg.token >> 32 == 0 && reg.ring_slots >> 32 == 0 && reg.ring_slots > 0,
+            "token and lane size must pack into one registration word"
+        );
+        self.ep.write(
+            self.desc.offset(WAKE_TOKEN),
+            (reg.ring_slots << 32) | reg.token,
+        );
+        self.ep.write(self.desc.offset(WAKE_RING), reg.ring.to_bits());
+        // Open the lock's signalling gate before the re-check, so a
+        // passer that misses the gate must have written the budget
+        // early enough for the re-check to see it.
+        self.shared.wakeups.store(true, SeqCst);
+        if self.ep.read(self.desc) != WAITING {
+            // The handoff already landed; the passer may or may not
+            // have seen the registration. Disarm and have the caller
+            // poll now — if a token was published anyway, the session
+            // discards it on consumption.
+            self.ep.write(self.desc.offset(WAKE_RING), 0);
+            return ArmOutcome::AlreadyReady;
+        }
+        ArmOutcome::Armed
     }
 }
 
@@ -791,6 +922,81 @@ mod tests {
         // Everyone is reusable afterwards, including the cancelled one.
         h2.lock();
         h2.unlock();
+    }
+
+    #[test]
+    fn armed_waiter_gets_its_token_published_on_handoff() {
+        use crate::rdma::WakeupRing;
+        let d = RdmaDomain::new(3, 2048, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(1));
+        let mut waiter = l.qp_handle(d.endpoint(2));
+        let mut ring = WakeupRing::new(d.endpoint(2), 4);
+        holder.lock();
+        while waiter.acq_state() != AcqState::WaitBudget {
+            assert_eq!(waiter.poll_lock(), LockPoll::Pending);
+        }
+        let reg = WakeupReg {
+            ring: ring.header(),
+            token: 42,
+            ring_slots: ring.lane_slots(),
+        };
+        assert_eq!(waiter.arm_wakeup(reg), ArmOutcome::Armed);
+        assert_eq!(ring.pop(), None, "no handoff yet");
+        // The waiter is armed: zero polls needed until the token lands.
+        holder.unlock(); // budget write + token publication
+        assert_eq!(ring.pop(), Some(42), "handoff published the token");
+        assert_eq!(waiter.poll_lock(), LockPoll::Held);
+        waiter.unlock();
+    }
+
+    #[test]
+    fn arm_after_handoff_already_landed_reports_ready_not_lost() {
+        // The registration race: the passer wrote the budget before the
+        // waiter armed. The arm's budget re-check must catch it — the
+        // caller polls immediately instead of parking on a token that
+        // will never arrive.
+        use crate::rdma::WakeupRing;
+        let d = RdmaDomain::new(3, 2048, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(1));
+        let mut waiter = l.qp_handle(d.endpoint(2));
+        let mut ring = WakeupRing::new(d.endpoint(2), 4);
+        holder.lock();
+        while waiter.acq_state() != AcqState::WaitBudget {
+            assert_eq!(waiter.poll_lock(), LockPoll::Pending);
+        }
+        holder.unlock(); // handoff lands while the waiter is unarmed
+        let reg = WakeupReg {
+            ring: ring.header(),
+            token: 7,
+            ring_slots: ring.lane_slots(),
+        };
+        assert_eq!(waiter.arm_wakeup(reg), ArmOutcome::AlreadyReady);
+        assert_eq!(ring.pop(), None, "passer saw no registration");
+        assert_eq!(waiter.poll_lock(), LockPoll::Held);
+        waiter.unlock();
+    }
+
+    #[test]
+    fn arm_outside_wait_budget_is_unsupported() {
+        use crate::rdma::WakeupRing;
+        let d = RdmaDomain::new(2, 2048, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut h = l.qp_handle(d.endpoint(1));
+        let ring = WakeupRing::new(d.endpoint(1), 4);
+        let reg = WakeupReg {
+            ring: ring.header(),
+            token: 1,
+            ring_slots: ring.lane_slots(),
+        };
+        // Idle: nothing to signal.
+        assert_eq!(h.arm_wakeup(reg), ArmOutcome::Unsupported);
+        // Held (an uncontended poll acquires on the spot): nothing to
+        // signal either — the "wait" is over.
+        assert_eq!(h.poll_lock(), LockPoll::Held);
+        assert_eq!(h.arm_wakeup(reg), ArmOutcome::Unsupported);
+        h.unlock();
     }
 
     #[test]

@@ -7,8 +7,8 @@ use std::time::Duration;
 use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
 use qplock::cli::{Args, HELP};
 use qplock::coordinator::{
-    lock_name, run_multi_lock_workload, run_multiplexed_workload, run_workload, Cluster, CsWork,
-    LockService, Workload,
+    lock_name, ready_list_probe, run_multi_lock_workload, run_multiplexed_workload_mode,
+    run_workload, Cluster, CsWork, LockService, PollMode, Workload,
 };
 use qplock::locks::{make_lock, Class, ALGORITHMS};
 use qplock::mc::{self, models};
@@ -21,6 +21,7 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("multi-lock") => cmd_multi_lock(&args),
         Some("async") => cmd_async(&args),
+        Some("ready") => cmd_ready(&args),
         Some("mc") => cmd_mc(&args),
         Some("serve") => cmd_serve(&args),
         Some("list") => cmd_list(),
@@ -136,10 +137,12 @@ fn cmd_multi_lock(args: &Args) {
         r.violations
     );
     println!(
-        "table: {} locks registered, {} touched | hottest lock {:.1}% of traffic",
+        "table: {} locks registered, {} touched | rank-0 lock {:.1}% of traffic \
+         (max {:.1}%)",
         svc.len(),
         r.locks_touched(),
-        100.0 * r.hottest_share()
+        100.0 * r.hottest_share(),
+        100.0 * r.max_share()
     );
     println!(
         "handle cache: {:.1}% hits ({} handles minted across processes)",
@@ -197,11 +200,16 @@ fn cmd_async(args: &Args) {
     };
     wl = wl.with_locks(nlocks, skew);
 
+    let mode = if args.flag("ready") {
+        PollMode::Ready
+    } else {
+        PollMode::Scan
+    };
     println!(
         "async: {sims} simulated processes multiplexed onto {threads} OS threads | \
-         locks={nlocks} skew={skew} nodes={nodes}"
+         locks={nlocks} skew={skew} nodes={nodes} scheduler={mode:?}"
     );
-    let r = run_multiplexed_workload(&svc, &procs, &wl, threads);
+    let r = run_multiplexed_workload_mode(&svc, &procs, &wl, threads, mode);
     println!(
         "throughput {:.0} acq/s | total {} | jain {:.3} | violations {}",
         r.throughput(),
@@ -210,10 +218,12 @@ fn cmd_async(args: &Args) {
         r.violations
     );
     println!(
-        "table: {} locks registered, {} touched | hottest lock {:.1}% of traffic",
+        "table: {} locks registered, {} touched | rank-0 lock {:.1}% of traffic \
+         (max {:.1}%)",
         svc.len(),
         r.locks_touched(),
-        100.0 * r.hottest_share()
+        100.0 * r.hottest_share(),
+        100.0 * r.max_share()
     );
     println!(
         "verbs: local-class remote verbs {} (paper: must be 0 for qplock) | \
@@ -235,6 +245,44 @@ fn cmd_async(args: &Args) {
     if r.violations > 0 {
         eprintln!("MUTUAL EXCLUSION VIOLATED");
         std::process::exit(1);
+    }
+}
+
+fn cmd_ready(args: &Args) {
+    let pending: u32 = args.get_num("pending", 10_000);
+    let releases: u32 = args.get_num("releases", 50);
+    let which = args.get_or("mode", "both");
+    if pending == 0 || releases == 0 || releases > pending {
+        eprintln!("--releases must be in 1..=--pending (got {releases} of {pending})");
+        std::process::exit(2);
+    }
+    println!(
+        "ready: {pending} parked in-flight waiters, {releases} single releases \
+         (E12's scenario)"
+    );
+    let run = |mode: PollMode, label: &str| {
+        let s = ready_list_probe(pending, releases, mode);
+        println!(
+            "  {label:>5}: {:>9} polls over {:>6} rounds | {:>9.1} polls/release | \
+             {:>8.1} us/release | setup {} polls",
+            s.handle_polls,
+            s.rounds,
+            s.polls_per_release(),
+            s.wall.as_secs_f64() * 1e6 / s.releases as f64,
+            s.setup_polls
+        );
+    };
+    match which {
+        "both" => {
+            run(PollMode::Scan, "scan");
+            run(PollMode::Ready, "ready");
+        }
+        "scan" => run(PollMode::Scan, "scan"),
+        "ready" => run(PollMode::Ready, "ready"),
+        other => {
+            eprintln!("unknown --mode '{other}' (both|scan|ready)");
+            std::process::exit(2);
+        }
     }
 }
 

@@ -89,16 +89,20 @@ impl LatencyModel {
         }
     }
 
-    /// Base cost of one verb, before congestion.
+    /// Base cost of one verb, before congestion. Fetch-and-add shares
+    /// the CAS cost: both execute in the RNIC's RMW unit.
     pub fn base_ns(&self, kind: OpKind, loopback: bool) -> u64 {
         match (kind, loopback) {
-            (OpKind::LocalRead | OpKind::LocalWrite | OpKind::LocalCas, _) => self.local_ns,
+            (
+                OpKind::LocalRead | OpKind::LocalWrite | OpKind::LocalCas | OpKind::LocalFaa,
+                _,
+            ) => self.local_ns,
             (OpKind::RemoteRead, false) => self.remote_read_ns,
             (OpKind::RemoteWrite, false) => self.remote_write_ns,
-            (OpKind::RemoteCas, false) => self.remote_cas_ns,
+            (OpKind::RemoteCas | OpKind::RemoteFaa, false) => self.remote_cas_ns,
             (OpKind::RemoteRead, true) => self.loopback_read_ns,
             (OpKind::RemoteWrite, true) => self.loopback_write_ns,
-            (OpKind::RemoteCas, true) => self.loopback_cas_ns,
+            (OpKind::RemoteCas | OpKind::RemoteFaa, true) => self.loopback_cas_ns,
         }
     }
 

@@ -18,29 +18,36 @@ pub enum OpKind {
     LocalWrite,
     /// CPU compare-and-swap on a local register.
     LocalCas,
+    /// CPU fetch-and-add on a local register.
+    LocalFaa,
     /// One-sided RDMA read.
     RemoteRead,
     /// One-sided RDMA write.
     RemoteWrite,
     /// RDMA compare-and-swap (RNIC-executed RMW).
     RemoteCas,
+    /// RDMA fetch-and-add (RNIC-executed RMW; the wakeup-ring slot
+    /// claim of the ready-list subsystem).
+    RemoteFaa,
 }
 
 impl OpKind {
     pub fn is_remote(self) -> bool {
         matches!(
             self,
-            OpKind::RemoteRead | OpKind::RemoteWrite | OpKind::RemoteCas
+            OpKind::RemoteRead | OpKind::RemoteWrite | OpKind::RemoteCas | OpKind::RemoteFaa
         )
     }
 
-    pub const ALL: [OpKind; 6] = [
+    pub const ALL: [OpKind; 8] = [
         OpKind::LocalRead,
         OpKind::LocalWrite,
         OpKind::LocalCas,
+        OpKind::LocalFaa,
         OpKind::RemoteRead,
         OpKind::RemoteWrite,
         OpKind::RemoteCas,
+        OpKind::RemoteFaa,
     ];
 }
 
@@ -50,9 +57,11 @@ pub struct ProcMetrics {
     pub local_read: AtomicU64,
     pub local_write: AtomicU64,
     pub local_cas: AtomicU64,
+    pub local_faa: AtomicU64,
     pub remote_read: AtomicU64,
     pub remote_write: AtomicU64,
     pub remote_cas: AtomicU64,
+    pub remote_faa: AtomicU64,
     /// Remote ops that targeted the issuing process's own node (loopback).
     pub loopback: AtomicU64,
     /// Total modeled network time attributed to this process (ns).
@@ -65,9 +74,11 @@ impl ProcMetrics {
             OpKind::LocalRead => &self.local_read,
             OpKind::LocalWrite => &self.local_write,
             OpKind::LocalCas => &self.local_cas,
+            OpKind::LocalFaa => &self.local_faa,
             OpKind::RemoteRead => &self.remote_read,
             OpKind::RemoteWrite => &self.remote_write,
             OpKind::RemoteCas => &self.remote_cas,
+            OpKind::RemoteFaa => &self.remote_faa,
         }
         .fetch_add(1, Relaxed);
     }
@@ -85,9 +96,11 @@ impl ProcMetrics {
             local_read: self.local_read.load(Relaxed),
             local_write: self.local_write.load(Relaxed),
             local_cas: self.local_cas.load(Relaxed),
+            local_faa: self.local_faa.load(Relaxed),
             remote_read: self.remote_read.load(Relaxed),
             remote_write: self.remote_write.load(Relaxed),
             remote_cas: self.remote_cas.load(Relaxed),
+            remote_faa: self.remote_faa.load(Relaxed),
             loopback: self.loopback.load(Relaxed),
             net_ns: self.net_ns.load(Relaxed),
         }
@@ -98,9 +111,11 @@ impl ProcMetrics {
             &self.local_read,
             &self.local_write,
             &self.local_cas,
+            &self.local_faa,
             &self.remote_read,
             &self.remote_write,
             &self.remote_cas,
+            &self.remote_faa,
             &self.loopback,
             &self.net_ns,
         ] {
@@ -116,20 +131,22 @@ pub struct ProcMetricsSnapshot {
     pub local_read: u64,
     pub local_write: u64,
     pub local_cas: u64,
+    pub local_faa: u64,
     pub remote_read: u64,
     pub remote_write: u64,
     pub remote_cas: u64,
+    pub remote_faa: u64,
     pub loopback: u64,
     pub net_ns: u64,
 }
 
 impl ProcMetricsSnapshot {
     pub fn remote_total(&self) -> u64 {
-        self.remote_read + self.remote_write + self.remote_cas
+        self.remote_read + self.remote_write + self.remote_cas + self.remote_faa
     }
 
     pub fn local_total(&self) -> u64 {
-        self.local_read + self.local_write + self.local_cas
+        self.local_read + self.local_write + self.local_cas + self.local_faa
     }
 }
 
@@ -140,9 +157,11 @@ impl std::ops::Sub for ProcMetricsSnapshot {
             local_read: self.local_read - rhs.local_read,
             local_write: self.local_write - rhs.local_write,
             local_cas: self.local_cas - rhs.local_cas,
+            local_faa: self.local_faa - rhs.local_faa,
             remote_read: self.remote_read - rhs.remote_read,
             remote_write: self.remote_write - rhs.remote_write,
             remote_cas: self.remote_cas - rhs.remote_cas,
+            remote_faa: self.remote_faa - rhs.remote_faa,
             loopback: self.loopback - rhs.loopback,
             net_ns: self.net_ns - rhs.net_ns,
         }

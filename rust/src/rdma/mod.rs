@@ -20,6 +20,7 @@ pub mod memory;
 pub mod metrics;
 pub mod nic;
 pub mod verbs;
+pub mod wakeup;
 
 use std::sync::Arc;
 
@@ -28,6 +29,7 @@ pub use latency::{LatencyModel, TimeMode};
 pub use metrics::{OpKind, ProcMetrics, ProcMetricsSnapshot};
 pub use nic::AtomicityMode;
 pub use verbs::Endpoint;
+pub use wakeup::WakeupRing;
 
 /// Domain-wide configuration.
 #[derive(Clone, Debug)]

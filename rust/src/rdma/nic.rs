@@ -70,7 +70,7 @@ impl Nic {
             self.metrics.loopback_ops.fetch_add(1, SeqCst);
             proc.record_loopback();
         }
-        if kind == OpKind::RemoteCas {
+        if matches!(kind, OpKind::RemoteCas | OpKind::RemoteFaa) {
             self.metrics.rmw_ops.fetch_add(1, SeqCst);
         }
         let base = model.base_ns(kind, loopback);
@@ -119,6 +119,26 @@ impl Nic {
                     }
                     word.store(swap, SeqCst);
                 }
+                cur
+            }
+        }
+    }
+
+    /// Execute a remote fetch-and-add on `word` with the configured
+    /// atomicity semantics. Returns the observed (pre-add) value, like
+    /// the verb (`IBV_WR_ATOMIC_FETCH_AND_ADD`). Same RMW unit and
+    /// Table-1 caveats as [`Nic::rmw_cas`]: under `NicSerialized` it is
+    /// atomic among remote RMWs only.
+    pub fn rmw_faa(&self, word: &AtomicU64, add: u64, mode: AtomicityMode, hazard_ns: u64) -> u64 {
+        match mode {
+            AtomicityMode::Global => word.fetch_add(add, SeqCst),
+            AtomicityMode::NicSerialized => {
+                let _g = self.rmw_lock.lock().unwrap();
+                let cur = word.load(SeqCst);
+                if hazard_ns > 0 {
+                    spin_wait_ns(hazard_ns);
+                }
+                word.store(cur.wrapping_add(add), SeqCst);
                 cur
             }
         }
@@ -211,6 +231,15 @@ mod tests {
         assert_eq!(w.load(SeqCst), 9);
         assert_eq!(nic.rmw_cas(&w, 5, 1, AtomicityMode::NicSerialized, 0), 9);
         assert_eq!(w.load(SeqCst), 9);
+    }
+
+    #[test]
+    fn faa_returns_previous_and_accumulates_in_both_modes() {
+        let nic = Nic::new();
+        let w = AtomicU64::new(10);
+        assert_eq!(nic.rmw_faa(&w, 5, AtomicityMode::Global, 0), 10);
+        assert_eq!(nic.rmw_faa(&w, 1, AtomicityMode::NicSerialized, 0), 15);
+        assert_eq!(w.load(SeqCst), 16);
     }
 
     #[test]

@@ -110,6 +110,17 @@ impl Endpoint {
         }
     }
 
+    /// Local atomic fetch-and-add; returns the pre-add value. Enabled
+    /// only for local registers (the CPU's `lock xadd`). Used by the
+    /// ready-list wakeup protocol to claim ring slots when the passer
+    /// is co-located with the waiter's session.
+    #[inline]
+    pub fn faa(&self, a: Addr, add: u64) -> u64 {
+        self.assert_local(a, "FAA");
+        self.metrics.record(OpKind::LocalFaa);
+        self.domain.node(self.node).mem.word(a).fetch_add(add, SeqCst)
+    }
+
     /// Local **descriptor-field** store with Release ordering (perf
     /// fast path — EXPERIMENTS.md §Perf). The paper's SC assumption is
     /// required for the *protocol registers* (victim, cohort tails,
@@ -182,6 +193,28 @@ impl Endpoint {
             tgt.mem.word(a),
             expected,
             swap,
+            self.domain.cfg.atomicity,
+            self.domain.cfg.hazard_ns,
+        )
+    }
+
+    /// RDMA fetch-and-add, executed by the target NIC with the
+    /// configured [`super::nic::AtomicityMode`]. Returns the pre-add
+    /// value. Loopback when the register is local.
+    pub fn r_faa(&self, a: Addr, add: u64) -> u64 {
+        let tgt = self.domain.node(a.node());
+        let loopback = self.is_local(a);
+        self.metrics.record(OpKind::RemoteFaa);
+        let _g = tgt.nic.admit(
+            OpKind::RemoteFaa,
+            loopback,
+            &self.domain.cfg.latency,
+            self.domain.cfg.time_mode,
+            &self.metrics,
+        );
+        tgt.nic.rmw_faa(
+            tgt.mem.word(a),
+            add,
             self.domain.cfg.atomicity,
             self.domain.cfg.hazard_ns,
         )
@@ -295,6 +328,31 @@ mod tests {
         assert_eq!(ep1.r_cas(a, 10, 30), 10);
         assert_eq!(ep1.r_cas(a, 10, 40), 30);
         assert_eq!(ep0.read(a), 30);
+    }
+
+    #[test]
+    fn faa_local_and_remote() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep0.alloc(1);
+        assert_eq!(ep0.faa(a, 5), 0);
+        assert_eq!(ep1.r_faa(a, 3), 5);
+        assert_eq!(ep0.read(a), 8);
+        assert_eq!(ep0.metrics.snapshot().local_faa, 1);
+        let s1 = ep1.metrics.snapshot();
+        assert_eq!(s1.remote_faa, 1);
+        assert_eq!(s1.remote_total(), 1, "faa counts as a remote verb");
+    }
+
+    #[test]
+    #[should_panic(expected = "not an enabled operation")]
+    fn local_faa_of_remote_register_panics() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep1.alloc(1);
+        ep0.faa(a, 1);
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Event-driven wakeup rings — the ready-list substrate for
+//! multiplexed sessions.
+//!
+//! A [`WakeupRing`] is a small MPSC notification queue laid out in the
+//! consuming session's *own node's* registered memory: a capacity
+//! word, two producer cursors, and two lanes of `capacity` token slots
+//! each. A lock-releasing process that passes a lock to a parked
+//! waiter publishes the waiter's session token into the waiter's ring
+//! — one fetch-and-add to claim a slot, one write to fill it, both
+//! targeting the same node the budget handoff already wrote, so the
+//! remote-verb count per handoff stays O(1). The session then
+//! discovers which of its K pending acquisitions became ready with
+//! plain local reads: O(ready) per poll round instead of the O(K)
+//! scan `poll_all` pays.
+//!
+//! **Lane discipline.** Under commodity atomicity
+//! ([`crate::rdma::AtomicityMode::NicSerialized`], the paper's Table
+//! 1), a CPU RMW and a NIC RMW on the same word are *not* atomic with
+//! each other — exactly the race qplock avoids by keeping each cohort
+//! tail single-class. The ring applies the same discipline to its
+//! cursors: co-located passers (CPU fetch-and-add) claim through the
+//! CPU-lane cursor, remote passers (rFAA through the session node's
+//! NIC) through the NIC-lane cursor, so each cursor is only ever
+//! RMW'd by one atomic unit and no claim can be lost.
+//!
+//! Layout (the header address is what waiters advertise to their
+//! passers, see [`crate::locks::WakeupReg`]; the per-lane slot count
+//! travels packed inside the registration's token word, so the passer
+//! never has to read it remotely):
+//!
+//! ```text
+//! hdr + 0:                         CPU-lane producer cursor (local FAA)
+//! hdr + 1:                         NIC-lane producer cursor (rFAA)
+//! hdr + 2 + (i % slots):           CPU-lane token slot of claim i
+//! hdr + 2 + slots + (i % slots):   NIC-lane token slot of claim i
+//! ```
+//!
+//! Tokens are published as `token + 1` so a zero slot unambiguously
+//! means "empty". A producer can be preempted between claiming a slot
+//! and filling it, so the consumer may transiently see an empty slot
+//! in front of a filled one; the later token is simply discovered on a
+//! following drain (the claim→fill window is a few instructions inside
+//! one lock release, and the consumer's fallback sweep bounds the
+//! tail).
+//!
+//! **Overwrite safety.** A lane slot is overwritten once its cursor
+//! runs more than one lap ahead of the consumer, so the consumer must
+//! bound *unconsumed publications*, not just live registrations: a
+//! registration resolved host-side (without consuming its token) may
+//! still have a published slot outstanding. [`WakeupRing::capacity`]
+//! is therefore the consumer's arming bound — armed plus
+//! maybe-unconsumed ("dirty") tokens — while each lane actually holds
+//! [`WakeupRing::lane_slots`] = capacity + [`LANE_SLACK`] slots; the
+//! slack absorbs the rare publications the accounting cannot see (a
+//! passer racing an `AlreadyReady` disarm, or a stalled passer
+//! re-reading a re-armed registration).
+
+use super::addr::Addr;
+use super::verbs::Endpoint;
+
+/// Header words before the token slots.
+pub const HDR_WORDS: u32 = 2;
+/// Offset of the CPU-lane producer cursor (co-located passers only).
+pub const CPU_CURSOR_WORD: u32 = 0;
+/// Offset of the NIC-lane producer cursor (rFAA passers only).
+pub const NIC_CURSOR_WORD: u32 = 1;
+
+/// Extra slots per lane beyond the consumer's arming bound (see the
+/// module docs on overwrite safety).
+pub const LANE_SLACK: u32 = 8;
+
+/// Per-session notification ring in session-node memory. The session
+/// (single consumer) drains it with local reads; lock releases (many
+/// producers, any node) publish into it through the class-appropriate
+/// verbs.
+pub struct WakeupRing {
+    ep: Endpoint,
+    hdr: Addr,
+    /// Consumer's arming bound (requested capacity).
+    capacity: u64,
+    /// Physical slots per lane (`capacity + LANE_SLACK`), the modulo
+    /// base producers use.
+    lane_slots: u64,
+    consumed: [u64; 2],
+}
+
+impl WakeupRing {
+    /// Allocate a ring whose consumer may keep up to `capacity`
+    /// registrations outstanding (armed + dirty) on `ep`'s node.
+    pub fn new(ep: Endpoint, capacity: u32) -> WakeupRing {
+        assert!(capacity >= 1, "ring needs at least one slot");
+        let lane = capacity
+            .checked_add(LANE_SLACK)
+            .expect("ring capacity overflow");
+        let hdr = ep.alloc(HDR_WORDS + 2 * lane);
+        WakeupRing {
+            ep,
+            hdr,
+            capacity: capacity as u64,
+            lane_slots: lane as u64,
+            consumed: [0, 0],
+        }
+    }
+
+    /// Header address — the value a waiter advertises to its passer.
+    pub fn header(&self) -> Addr {
+        self.hdr
+    }
+
+    /// The consumer's arming bound: armed plus dirty tokens must stay
+    /// at or below this.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Physical slots per lane — the modulo base a registration
+    /// advertises to passers (packed into the token word).
+    pub fn lane_slots(&self) -> u64 {
+        self.lane_slots
+    }
+
+    /// Tokens consumed over the ring's lifetime (diagnostic).
+    pub fn consumed(&self) -> u64 {
+        self.consumed[0] + self.consumed[1]
+    }
+
+    #[inline]
+    fn lane_slot(&self, lane: usize, claim: u64) -> Addr {
+        let base = HDR_WORDS + lane as u32 * self.lane_slots as u32;
+        self.hdr.offset(base + (claim % self.lane_slots) as u32)
+    }
+
+    /// Consume the next published token from either lane, if any — at
+    /// most two local reads (plus a local write when a token is
+    /// taken); never a remote verb.
+    pub fn pop(&mut self) -> Option<u64> {
+        for lane in 0..2 {
+            let slot = self.lane_slot(lane, self.consumed[lane]);
+            let v = self.ep.read(slot);
+            if v != 0 {
+                self.ep.write(slot, 0);
+                self.consumed[lane] += 1;
+                return Some(v - 1);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::{DomainConfig, RdmaDomain};
+    use std::sync::Arc;
+
+    fn setup(cap: u32) -> (Arc<RdmaDomain>, WakeupRing) {
+        let d = RdmaDomain::new(2, 1 << 12, DomainConfig::counted());
+        let ring = WakeupRing::new(d.endpoint(0), cap);
+        (d, ring)
+    }
+
+    /// Emulate the NIC-lane producer protocol from `ep`: claim a slot,
+    /// fill it (what a remote-class lock release does; `slots` arrives
+    /// packed in the registration word it already read).
+    fn publish(ep: &Endpoint, hdr: Addr, slots: u64, token: u64) {
+        let claimed = ep.r_faa(hdr.offset(NIC_CURSOR_WORD), 1);
+        let slot = hdr.offset(HDR_WORDS + slots as u32 + (claimed % slots) as u32);
+        ep.r_write(slot, token + 1);
+    }
+
+    /// Emulate the CPU-lane producer protocol (a co-located passer).
+    fn publish_cpu(ep: &Endpoint, hdr: Addr, slots: u64, token: u64) {
+        let claimed = ep.faa(hdr.offset(CPU_CURSOR_WORD), 1);
+        ep.write(hdr.offset(HDR_WORDS + (claimed % slots) as u32), token + 1);
+    }
+
+    #[test]
+    fn pop_on_empty_ring_is_none() {
+        let (_d, mut ring) = setup(4);
+        assert_eq!(ring.pop(), None);
+        assert_eq!(ring.consumed(), 0);
+    }
+
+    #[test]
+    fn publish_then_consume_in_claim_order() {
+        let (d, mut ring) = setup(8);
+        let producer = d.endpoint(1);
+        for t in [7u64, 0, 3] {
+            publish(&producer, ring.header(), ring.lane_slots(), t);
+        }
+        assert_eq!(ring.pop(), Some(7));
+        assert_eq!(ring.pop(), Some(0), "token 0 survives the +1 encoding");
+        assert_eq!(ring.pop(), Some(3));
+        assert_eq!(ring.pop(), None);
+        assert_eq!(ring.consumed(), 3);
+    }
+
+    #[test]
+    fn wraparound_reuses_consumed_slots() {
+        let (d, mut ring) = setup(2);
+        let producer = d.endpoint(1);
+        // More publish/pop rounds than physical lane slots (capacity +
+        // slack), so the cursor laps the lane at least twice.
+        for round in 0..(3 * ring.lane_slots()) {
+            publish(&producer, ring.header(), ring.lane_slots(), round);
+            assert_eq!(ring.pop(), Some(round));
+        }
+        assert_eq!(ring.pop(), None);
+    }
+
+    #[test]
+    fn out_of_order_fill_is_discovered_on_a_later_drain() {
+        // Producer A claims slot 0 and stalls; producer B claims slot 1
+        // and fills it. The consumer must stop at the hole (not skip
+        // it), then find both tokens once A lands.
+        let (d, mut ring) = setup(4);
+        let ep = d.endpoint(1);
+        let hdr = ring.header();
+        let slots = ring.lane_slots();
+        let a = ep.r_faa(hdr.offset(NIC_CURSOR_WORD), 1);
+        let b = ep.r_faa(hdr.offset(NIC_CURSOR_WORD), 1);
+        let slot_of = |claim: u64| hdr.offset(HDR_WORDS + slots as u32 + (claim % slots) as u32);
+        ep.r_write(slot_of(b), 20 + 1);
+        assert_eq!(ring.pop(), None, "hole in front: nothing consumable yet");
+        ep.r_write(slot_of(a), 10 + 1);
+        assert_eq!(ring.pop(), Some(10));
+        assert_eq!(ring.pop(), Some(20));
+    }
+
+    #[test]
+    fn lanes_are_independent_and_both_drain() {
+        // CPU-lane and NIC-lane producers never touch each other's
+        // cursor (the single-atomic-unit discipline); the consumer
+        // drains both.
+        let d = RdmaDomain::new(2, 1 << 12, DomainConfig::counted());
+        let consumer_ep = d.endpoint(0);
+        let cpu_producer = d.endpoint(0); // co-located with the ring
+        let mut ring = WakeupRing::new(consumer_ep, 4);
+        let slots = ring.lane_slots();
+        let nic_producer = d.endpoint(1);
+        publish_cpu(&cpu_producer, ring.header(), slots, 1);
+        publish(&nic_producer, ring.header(), slots, 2);
+        publish_cpu(&cpu_producer, ring.header(), slots, 3);
+        let mut got = vec![];
+        while let Some(t) = ring.pop() {
+            got.push(t);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(ring.consumed(), 3);
+        // The CPU producer issued zero remote verbs.
+        assert_eq!(cpu_producer.metrics.snapshot().remote_total(), 0);
+    }
+
+    #[test]
+    fn consumption_never_issues_remote_verbs() {
+        let d = RdmaDomain::new(2, 1 << 12, DomainConfig::counted());
+        let consumer_ep = d.endpoint(0);
+        let metrics = Arc::clone(&consumer_ep.metrics);
+        let mut ring = WakeupRing::new(consumer_ep, 4);
+        let producer = d.endpoint(1);
+        publish(&producer, ring.header(), ring.lane_slots(), 1);
+        for _ in 0..100 {
+            let _ = ring.pop();
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.remote_total(), 0, "consumer must stay off the NIC");
+        assert_eq!(s.loopback, 0);
+        assert!(s.local_total() > 0);
+    }
+
+    #[test]
+    fn lane_sizing_includes_the_slack() {
+        let (_d, ring) = setup(4);
+        assert_eq!(ring.capacity(), 4);
+        assert_eq!(ring.lane_slots(), 4 + LANE_SLACK as u64);
+    }
+}

@@ -1,13 +1,18 @@
 //! Log-bucketed nanosecond histogram (HdrHistogram-flavored, tiny).
 //!
 //! Buckets are `[2^k, 2^(k+1))` with 16 linear sub-buckets each, giving
-//! ≲ 6.25% relative error across 1 ns … ~18 s — plenty for lock
-//! acquisition latencies — in a fixed 1024-slot table with `u64` counts.
+//! ≲ 6.25% relative error across the full `u64` range — plenty for lock
+//! acquisition latencies — in a fixed 976-slot table with `u64` counts.
 //! Recording is two shifts and an increment; merging is element-wise.
 
 const SUB_BITS: u32 = 4;
 const SUB: usize = 1 << SUB_BITS; // 16 sub-buckets per octave
-const OCTAVES: usize = 64 - SUB_BITS as usize;
+// One linear region for values below 2^SUB_BITS (slots 0..16) plus one
+// group per octave SUB_BITS..=63: `slot()` maps the top octave (v ≥
+// 2^63) to `(63 - SUB_BITS + 1) * SUB + sub`, so the table must span
+// `64 - SUB_BITS + 1` groups. The previous sizing dropped the `+ 1`
+// and `record(v ≥ 2^63)` indexed past the end and panicked.
+const OCTAVES: usize = 64 - SUB_BITS as usize + 1;
 const SLOTS: usize = OCTAVES * SUB;
 
 /// Fixed-size latency histogram.
@@ -209,6 +214,24 @@ mod tests {
         h.record(0);
         assert_eq!(h.count(), 1);
         assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn extreme_values_do_not_panic() {
+        // Regression: for v ≥ 2^63 `slot()` reaches up to 975, which the
+        // old 960-entry table turned into an out-of-bounds panic inside
+        // `record()`.
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(1u64 << 63);
+        h.record((1u64 << 63) - 1);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(Histogram::slot(u64::MAX), SLOTS - 1);
+        let lo = Histogram::slot_value(Histogram::slot(u64::MAX));
+        assert!(lo <= u64::MAX);
+        assert!((u64::MAX - lo) as f64 / u64::MAX as f64 <= 0.0625 + 1e-9);
+        assert!(h.quantile(1.0) >= (1u64 << 63) - 1);
     }
 
     #[test]

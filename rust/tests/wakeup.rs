@@ -1,0 +1,217 @@
+//! Ready-list wakeup subsystem: property tests over random
+//! submit/poll/cancel/release schedules, the O(ready) poll-work bound
+//! at 10k parked waiters, and the verb accounting of armed waiting.
+//!
+//! Invariants covered (ISSUE 3 acceptance):
+//! * **No lost wakeups** — with the fallback sweep disabled, armed
+//!   acquisitions are polled *only* when their ring token is consumed;
+//!   every random schedule still completing proves each handoff's
+//!   wakeup arrives (or the arm-time re-check caught the race).
+//! * **O(ready) poll work** — a session with 10k parked waiters
+//!   performs O(1) handle polls per `poll_ready` round after a single
+//!   release (scan mode: O(pending)), counted by session
+//!   instrumentation.
+//! * **Zero remote verbs for parked polls still holds** — idle ready
+//!   rounds (ring consumption included) never touch the NIC, and the
+//!   wakeup publication keeps handoffs at O(1) remote verbs.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use qplock::coordinator::{ready_list_probe, Cluster, HandleCache, LockService, PollMode};
+use qplock::locks::LockPoll;
+use qplock::rdma::DomainConfig;
+use qplock::util::prng::Prng;
+
+#[test]
+fn ten_k_parked_waiters_one_release_is_o1_polls_per_round() {
+    // The instrumented acceptance bound: 10k parked waiters, 1 release
+    // ⇒ O(1) handle polls in ready mode vs O(N) in scan mode.
+    let k = 10_000u32;
+    let ready = ready_list_probe(k, 1, PollMode::Ready);
+    assert!(
+        ready.handle_polls <= 4,
+        "ready mode polled {} handles for one release at K={k}",
+        ready.handle_polls
+    );
+    let scan = ready_list_probe(k, 1, PollMode::Scan);
+    assert!(
+        scan.handle_polls >= k as u64,
+        "scan mode should touch every parked waiter: {} polls",
+        scan.handle_polls
+    );
+}
+
+#[test]
+fn armed_remote_waiters_idle_rounds_are_nic_silent_and_handoffs_stay_o1() {
+    // Locks homed on node 0, both sessions on node 1: remote class,
+    // shared cohort, so every waiter parks in the armable budget-wait.
+    let cycles = 16u32;
+    let cluster = Cluster::new(2, 1 << 18, DomainConfig::counted());
+    let svc = Arc::new(LockService::new(&cluster.domain, "qplock", 8).with_default_max_procs(2));
+    let names: Vec<String> = (0..cycles).map(|i| format!("ow-{i}")).collect();
+    for n in &names {
+        svc.create_lock(n, "qplock", 0, 2, 8).unwrap();
+    }
+    let mut holder = svc.session(1);
+    for n in &names {
+        assert_eq!(holder.submit(n).unwrap(), LockPoll::Held);
+    }
+    let mut waiter = svc.session(1);
+    waiter.enable_ready_wakeups(32);
+    waiter.set_sweep_interval(0);
+    for n in &names {
+        assert_eq!(waiter.submit(n).unwrap(), LockPoll::Pending);
+    }
+    while waiter.armed_count() < names.len() {
+        assert!(waiter.poll_ready().is_empty());
+    }
+
+    // (c) Parked polling is free: 1000 idle ready rounds issue zero
+    // handle polls and zero remote verbs (ring consumption is local).
+    let polls0 = waiter.handle_polls();
+    let before = waiter.remote_class_metrics().snapshot();
+    for _ in 0..1_000 {
+        assert!(waiter.poll_ready().is_empty());
+    }
+    assert_eq!(waiter.handle_polls() - polls0, 0);
+    let idle = waiter.remote_class_metrics().snapshot() - before;
+    assert_eq!(idle.remote_total(), 0, "idle ready rounds used the NIC");
+
+    // Drain, then check O(1) remote verbs per acquisition for BOTH
+    // sides — the wakeup publication (ring-header read, slot claim,
+    // slot write) rides the handoff at constant cost.
+    for n in &names {
+        holder.release(n);
+    }
+    let mut done = 0;
+    while done < names.len() {
+        for n in waiter.poll_ready() {
+            waiter.release(&n);
+            done += 1;
+        }
+    }
+    let w = waiter.remote_class_metrics().snapshot();
+    let h = holder.remote_class_metrics().snapshot();
+    let per_w = w.remote_total() as f64 / cycles as f64;
+    let per_h = h.remote_total() as f64 / cycles as f64;
+    assert!(per_w <= 8.0, "waiter remote verbs/acq too high: {per_w}");
+    assert!(per_h <= 12.0, "holder remote verbs/acq too high: {per_h}");
+}
+
+/// Random single-threaded schedules over several ready-mode sessions:
+/// submits, ready polls, cancels, and releases in random order, with
+/// the fallback sweep disabled so armed names resolve *only* through
+/// their tokens. Completion of every schedule within the step budget
+/// is the no-lost-wakeup proof; a global owner map is the
+/// mutual-exclusion oracle.
+#[test]
+fn prop_random_schedules_complete_on_wakeups_alone() {
+    for seed in 0..12u64 {
+        let mut rng = Prng::seed_from(0x3A11 ^ seed.wrapping_mul(0x9E3779B9));
+        let nodes = 2 + rng.below(2) as u16;
+        let cluster = Cluster::new(nodes, 1 << 18, DomainConfig::counted());
+        let nsessions = 2 + rng.below(3) as usize;
+        let budget = 1 + rng.below(4);
+        let svc = Arc::new(
+            LockService::new(&cluster.domain, "qplock", budget)
+                .with_default_max_procs(nsessions as u32),
+        );
+        let nlocks = 1 + rng.below(5) as usize;
+        let names: Vec<String> = (0..nlocks).map(|i| format!("rs-{i}")).collect();
+        let mut sessions: Vec<HandleCache> = (0..nsessions)
+            .map(|i| {
+                let mut s = svc.session((i as u16) % nodes);
+                s.enable_ready_wakeups(16);
+                s.set_sweep_interval(0);
+                s
+            })
+            .collect();
+        let mut held: Vec<HashSet<String>> = vec![HashSet::new(); nsessions];
+        let mut owner: HashMap<String, usize> = HashMap::new();
+        let mut completed = vec![0u64; nsessions];
+        let target = 25u64;
+        let total_target = target * nsessions as u64;
+        let claim = |owner: &mut HashMap<String, usize>, name: &str, who: usize| {
+            let prev = owner.insert(name.to_string(), who);
+            assert!(
+                prev.is_none(),
+                "seed {seed}: ME violated on '{name}': {who} vs {prev:?}"
+            );
+        };
+        let mut steps = 0u64;
+        while completed.iter().sum::<u64>() < total_target {
+            steps += 1;
+            assert!(
+                steps < 2_000_000,
+                "seed {seed}: no progress — lost wakeup? completed {completed:?}"
+            );
+            let i = rng.below(nsessions as u64) as usize;
+            match rng.below(10) {
+                0..=3 => {
+                    // Submit a name this session neither holds nor has
+                    // in flight.
+                    if completed[i] >= target {
+                        continue;
+                    }
+                    let n = &names[rng.below(nlocks as u64) as usize];
+                    if held[i].contains(n) || sessions[i].is_pending(n) {
+                        continue;
+                    }
+                    if sessions[i].submit(n).unwrap() == LockPoll::Held {
+                        claim(&mut owner, n, i);
+                        held[i].insert(n.clone());
+                        completed[i] += 1;
+                    }
+                }
+                4..=7 => {
+                    for n in sessions[i].poll_ready() {
+                        claim(&mut owner, &n, i);
+                        held[i].insert(n);
+                        completed[i] += 1;
+                    }
+                }
+                8 => {
+                    if let Some(n) = held[i].iter().next().cloned() {
+                        held[i].remove(&n);
+                        owner.remove(&n);
+                        sessions[i].release(&n);
+                    }
+                }
+                _ => {
+                    // Cancel a random in-flight acquisition: either it
+                    // detaches now or it drains through its token.
+                    let pending = sessions[i].pending_names();
+                    if let Some(n) = pending.first() {
+                        sessions[i].cancel(n);
+                    }
+                }
+            }
+        }
+        // Drain so every handle is idle before the sessions drop.
+        let mut guard = 0u64;
+        loop {
+            guard += 1;
+            assert!(guard < 500_000, "seed {seed}: drain stuck");
+            let mut open = false;
+            for i in 0..nsessions {
+                let got = sessions[i].poll_ready();
+                for n in got {
+                    claim(&mut owner, &n, i);
+                    held[i].insert(n);
+                }
+                let hs: Vec<String> = held[i].drain().collect();
+                for n in &hs {
+                    owner.remove(n);
+                    sessions[i].release(n);
+                }
+                if sessions[i].pending_count() > 0 {
+                    open = true;
+                }
+            }
+            if !open {
+                break;
+            }
+        }
+    }
+}
