@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
-"""Randomized cross-validation of the qplock poll state machine and the
-ready-list wakeup protocol.
+"""Randomized cross-validation of the qplock poll state machine, the
+ready-list wakeup protocol, and the lease-based crash-recovery layer.
 
 A line-by-line transliteration of `rust/src/locks/qplock.rs`'s
 resumable acquisition machine (Idle -> Enqueue -> WaitBudget ->
@@ -19,24 +19,38 @@ when their token is consumed — so every schedule completing is a proof
 that no wakeup is lost. The passer's budget-write -> wake-read and the
 waiter's wake-write -> budget-recheck are modeled as interleavable
 steps (the `race` hook below), covering the store-load race the SeqCst
-handshake closes: when the arm lands inside the passer's window it
-must observe the budget and report "already ready" instead of parking
-forever. (The Rust ring keeps two producer lanes so CPU and NIC
-fetch-and-adds never share a cursor word — a Table-1 atomicity
-concern this model cannot exhibit, since a Python list append is
-atomic; the ring is therefore modeled as one queue.)
+handshake closes. (The Rust ring keeps two producer lanes so CPU and
+NIC fetch-and-adds never share a cursor word — a Table-1 atomicity
+concern this model cannot exhibit; the ring is modeled as one queue.)
+
+Lease extension (mirrors the lease word, the per-node sweeper, and the
+fence/repair machinery): every acquisition carries a lease
+(epoch/phase/deadline against a logical clock the scheduler advances),
+renewed on every poll and by the session heartbeat for armed
+(unpolled) waiters. A sweeper action fences expired leases and repairs
+the queue around them — relaying owed handoffs past dead waiters
+(clearing their wakeup registration first, so the zombie's token is
+never published), completing dead leaders' Peterson waits by proxy,
+and resetting abandoned tails. Crash actions kill handles at the four
+protocol points (holding, enqueued, mid-handoff, armed) or stall them
+as *zombies* that wake only after their epoch is provably fenced and
+then attempt the late write the fence must reject. As in Rust, the
+lease-word arbitration is what keeps revocation single-grant; the
+model checks the protocol logic at poll/sweep atomicity (the Rust CAS
+races live below this granularity and are covered by the Rust tests).
 
 Checked invariants, over many random seeds:
-  * mutual exclusion (at most one holder per lock, both cohorts);
-  * progress (every handle completes its target cycles in bounded
-    steps, with armed handles woken only by their tokens);
+  * mutual exclusion (at most one holder per lock, both cohorts),
+    including across every revoke/fence/repair;
+  * progress (every surviving handle completes its target cycles in
+    bounded steps, with armed handles woken only by their tokens; dead
+    handles never wedge the survivors behind them);
+  * fenced late writes (a zombie's post-revoke unlock/poll is a no-op
+    that touches no shared state — never a double grant);
   * cancellation consistency (a cancelled enqueued waiter drains via
-    poll or via its token, relays the budget handoff, and waiters
-    behind it still acquire — no lost handoff);
-  * local-class handles never issue remote verbs — including the
-    wakeup publication a local-class passer performs — and a parked
-    waiter's poll issues zero remote verbs (the multiplexing
-    keystone).
+    poll or via its token, relaying the budget handoff);
+  * local-class handles never issue remote verbs — including wakeup
+    publication — and a parked waiter's poll issues zero remote verbs.
 
 Run: python3 python/tools/poll_model_check.py [seeds]
 Exits non-zero on any violation.
@@ -50,9 +64,10 @@ LOCAL, REMOTE = 0, 1
 
 
 class Lock:
-    def __init__(self, home, budget):
+    def __init__(self, home, budget, lease_ticks):
         self.home = home
         self.budget = budget
+        self.lease_ticks = lease_ticks
         self.victim = 0
         self.tail = [None, None]  # per-class cohort tails (handle or None)
         self.holder = None  # oracle only
@@ -79,34 +94,85 @@ class Handle:
         self.bud = 0  # descriptor: budget word
         self.next = None  # descriptor: link word
         self.wake_armed = False  # descriptor: wake-ring word (0 / set)
+        # descriptor: lease word (None = idle; else a dict mirroring
+        # the packed epoch/phase/flags/deadline fields)
+        self.lease = None
+        self.epoch = 0
         self.state = "Idle"
         self.curr = None  # Enqueue's last observed tail
         self.abandoning = False
+        self.dead = False  # killed by the crash injector
+        self.stalled = False  # zombie: no steps until provably fenced
+        self.stalled_holding = False
         self.remote_verbs = 0
         self.race = race  # adversarial interleaving hook (see unlock)
-        self.stats = {"fired": 0, "already_ready": 0}
+        self.stats = {
+            "fired": 0,
+            "already_ready": 0,
+            "late_rejected": 0,
+            "expired_polls": 0,
+        }
 
     def _verb(self, n=1):
         if self.cls == REMOTE:
             self.remote_verbs += n
 
-    # -- one poll_lock step; returns "Pending" | "Held" | "Cancelled" --
-    def poll(self):
+    # -- lease word (owner side; mirrors lease_update / the claim) --
+
+    def _lease_update(self, phase, now):
+        """Renew + tag. Returns False (expired) if the sweeper fenced
+        this epoch — the owner lost the lease-word arbitration."""
+        if self.lease is None:
+            return True
+        if self.lease["fenced"]:
+            return False
+        assert self.lease["epoch"] == self.epoch
+        self.lease["phase"] = phase
+        self.lease["deadline"] = now + self.lock.lease_ticks
+        return True
+
+    def _lease_expired(self):
+        self.abandoning = False
+        self.state = "Idle"
+        self.stats["expired_polls"] += 1
+        return "Expired"
+
+    # -- one poll_lock step; "Pending" | "Held" | "Cancelled" | "Expired" --
+    def poll(self, now):
         if self.state == "Idle":
+            if self.lease is not None and self.lease["fenced"]:
+                if not self.lease["reaped"]:
+                    # Revoked slot still mid-repair: a resubmit would
+                    # corrupt the relay — park until the reap.
+                    return "Pending"
+            self.epoch += 1
+            self.lease = {
+                "epoch": self.epoch,
+                "phase": "ENQ",
+                "deadline": now + self.lock.lease_ticks,
+                "fenced": False,
+                "reaped": False,
+            }
             self.next = None
             self.wake_armed = False
             self.state, self.curr = "Enqueue", None
-            return self._step_enqueue()
+            return self._step_enqueue(now)
         if self.state == "Enqueue":
-            return self._step_enqueue()
+            return self._step_enqueue(now)
         if self.state == "WaitBudget":
-            return self._step_wait_budget()
+            return self._step_wait_budget(now)
         if self.state in ("Reacquire", "EngagePeterson"):
-            return self._step_peterson()
+            return self._step_peterson(now)
         assert self.state == "Held"
+        if not self._lease_update("HELD", now):
+            if self.lock.holder is self:
+                self.lock.holder = None
+            return self._lease_expired()
         return "Held"
 
-    def _step_enqueue(self):
+    def _step_enqueue(self, now):
+        if not self._lease_update("ENQ", now):
+            return self._lease_expired()
         lk = self.lock
         self._verb()  # tail CAS
         seen = lk.tail[self.cls]
@@ -119,14 +185,16 @@ class Handle:
             self._verb()  # victim write
             lk.victim = self.cls
             self.state = "EngagePeterson"
-            return self._step_peterson()
+            return self._step_peterson(now)
         self.bud = WAITING
         self._verb()  # predecessor link write
         self.curr.next = self
         self.state = "WaitBudget"
-        return self._step_wait_budget()
+        return self._step_wait_budget(now)
 
-    def _step_wait_budget(self):
+    def _step_wait_budget(self, now):
+        if not self._lease_update("WAIT", now):
+            return self._lease_expired()
         # Local read of our own budget word: NO verb.
         if self.bud == WAITING:
             return "Pending"
@@ -134,10 +202,12 @@ class Handle:
             self._verb()  # victim write
             self.lock.victim = self.cls
             self.state = "Reacquire"
-            return self._step_peterson()
-        return self._finish()
+            return self._step_peterson(now)
+        return self._finish(now)
 
-    def _step_peterson(self):
+    def _step_peterson(self, now):
+        if not self._lease_update("ENGAGE", now):
+            return self._lease_expired()
         lk = self.lock
         self._verb()  # other-tail read
         if lk.tail[1 - self.cls] is not None:
@@ -146,13 +216,19 @@ class Handle:
                 return "Pending"
         if self.state == "Reacquire":
             self.bud = lk.budget
-        return self._finish()
+        return self._finish(now)
 
-    def _finish(self):
+    def _finish(self, now):
+        # The HELD transition is the ownership commit point: losing it
+        # to the fence means the sweeper owns (and relays) this
+        # acquisition — back off without entering (single grant).
+        if not self._lease_update("HELD", now):
+            return self._lease_expired()
         self.state = "Held"
         if self.abandoning:
             self.abandoning = False
             self.state = "Idle"
+            self.lease = None  # release claim (live: cannot fail here)
             self._q_unlock()
             return "Cancelled"
         assert self.lock.holder is None, (
@@ -166,10 +242,10 @@ class Handle:
         """Returns 'armed' | 'ready' | 'no' (Unsupported)."""
         if self.state != "WaitBudget":
             return "no"
+        if self.lease is not None and self.lease["fenced"]:
+            return "ready"  # revoked: caller polls, sees Expired
         self.wake_armed = True  # publish registration (SeqCst store)
         if self.bud != WAITING:  # re-check (SeqCst load)
-            # The handoff already landed; the passer may or may not
-            # have seen the registration. Disarm and poll now.
             self.wake_armed = False
             self.stats["already_ready"] += 1
             return "ready"
@@ -180,6 +256,7 @@ class Handle:
             return True
         if self.state == "Enqueue":
             self.state = "Idle"
+            self.lease = None
             return True
         if self.state == "Held":
             self.unlock()
@@ -188,10 +265,18 @@ class Handle:
         return False
 
     def unlock(self):
+        """try_unlock: the release claim on the lease word is the
+        arbitration — a fenced epoch's release is a provable no-op."""
+        if self.lease is not None and self.lease["fenced"]:
+            self.state = "Idle"
+            self.stats["late_rejected"] += 1
+            return False
         assert self.lock.holder is self
         self.lock.holder = None
         self.state = "Idle"
+        self.lease = None  # claim: live -> 0; sweeper can never revoke
         self._q_unlock()
+        return True
 
     def _q_unlock(self):
         lk = self.lock
@@ -218,14 +303,98 @@ class Handle:
             self.stats["fired"] += 1
 
 
+class Sweeper:
+    """Per-node expiry sweep + queue repair (sweep_slot/repair/relay
+    transliteration). Single agent per model cluster — sweeps are
+    serialized in Rust too."""
+
+    def __init__(self, handles):
+        self.handles = handles
+        self.stats = {
+            "fenced": 0,
+            "relayed": 0,
+            "released": 0,
+            "reaped": 0,
+            "recovered_ticks": [],
+        }
+
+    def sweep(self, now):
+        for h in self.handles:
+            le = h.lease
+            if le is None or le["reaped"]:
+                continue
+            if not le["fenced"]:
+                if le["deadline"] >= now:
+                    continue
+                # Fence (the owner's renewals lose from here on).
+                le["fenced"] = True
+                self.stats["fenced"] += 1
+                # A revoked waiter must not be signalled.
+                h.wake_armed = False
+                # The abandoned CS is over (mirror: checker exit at
+                # crash; the zombie's own ops are fenced from now on).
+                if h.lock.holder is h:
+                    h.lock.holder = None
+            self._repair(h, now)
+
+    def _repair(self, h, now):
+        le = h.lease
+        lk = h.lock
+        if le["phase"] == "ENQ":
+            self._reap(h, now)
+        elif le["phase"] == "WAIT":
+            if h.bud == WAITING:
+                return  # watch: the owed handoff has not landed yet
+            if h.bud == 0:
+                lk.victim = h.cls  # the dead waiter's Reacquire yield
+                le["phase"] = "ENGAGE"
+                return
+            self._relay(h, h.bud - 1, now)
+        elif le["phase"] == "ENGAGE":
+            if lk.tail[1 - h.cls] is not None and lk.victim == h.cls:
+                return  # Peterson wait continues; retry next sweep
+            self._relay(h, lk.budget - 1, now)
+        else:
+            assert le["phase"] == "HELD"
+            assert h.bud >= 1 and h.bud != WAITING
+            self._relay(h, h.bud - 1, now)
+
+    def _relay(self, h, passed, now):
+        lk = h.lock
+        if h.next is None:
+            if lk.tail[h.cls] is h:
+                lk.tail[h.cls] = None  # tail reset (owning-lane CAS)
+                self.stats["released"] += 1
+                self._reap(h, now)
+                return
+            if h.next is None:
+                return  # successor mid-link; next sweep picks it up
+        succ = h.next
+        succ.bud = passed
+        if succ.wake_armed:
+            succ.wake_armed = False
+            succ.session.ring.append(succ.hid)
+        self.stats["relayed"] += 1
+        self._reap(h, now)
+
+    def _reap(self, h, now):
+        h.lease["reaped"] = True
+        self.stats["reaped"] += 1
+        self.stats["recovered_ticks"].append(now - h.lease["deadline"])
+
+
 def run_schedule(seed):
     rng = random.Random(seed)
     nodes = rng.randint(1, 3)
     home = rng.randrange(nodes)
-    lock = Lock(home, rng.randint(1, 8))
+    lease_ticks = rng.randint(8, 24)
+    lock = Lock(home, rng.randint(1, 8), lease_ticks)
     nsessions = rng.randint(1, 3)
     sessions = [Session(rng.randrange(nodes)) for _ in range(nsessions)]
     n = rng.randint(2, 7)
+    now = 0
+    max_crashes = rng.randint(0, 3)
+    crashes = {"killed": 0, "stalled": 0, "points": set()}
     fired = already_ready = 0
 
     def race(succ):
@@ -238,6 +407,7 @@ def run_schedule(seed):
         Handle(lock, sessions[rng.randrange(nsessions)], i, race)
         for i in range(n)
     ]
+    sweeper = Sweeper(handles)
     target = 25
     completed = [0] * n
     parked_verb_checks = 0
@@ -254,25 +424,38 @@ def run_schedule(seed):
         nonlocal parked_verb_checks
         if h.state == "WaitBudget" and h.bud == WAITING:
             before = h.remote_verbs
-            r = h.poll()
-            if h.bud == WAITING:
+            r = h.poll(now)
+            if r == "Pending" and h.bud == WAITING:
                 assert h.remote_verbs == before, (
                     f"seed {seed}: parked poll issued remote verbs"
                 )
                 parked_verb_checks += 1
             return r
-        return h.poll()
+        return h.poll(now)
+
+    def heartbeat(sess):
+        """Session lease heartbeat: armed (unpolled) handles renew
+        through the session; a fenced one surfaces as expired."""
+        for hid, h in list(sess.armed.items()):
+            if h.dead or h.stalled:
+                continue
+            if not h._lease_update(h.lease["phase"] if h.lease else "WAIT", now):
+                sess.armed.pop(hid)
+                h._lease_expired()
 
     def poll_ready(sess):
         """HandleCache::poll_ready, sweep disabled: armed handles are
-        woken only by their tokens."""
+        woken only by their tokens (heartbeat renewals are not polls)."""
+        heartbeat(sess)
         done = []
         while sess.ring:
             hid = sess.ring.pop(0)
             if hid not in sess.armed:
                 continue  # stale token: registration resolved elsewhere
             h = sess.armed.pop(hid)
-            r = h.poll()
+            if h.dead or h.stalled:
+                continue
+            r = h.poll(now)
             if r == "Pending":
                 if try_arm(h) != "armed":
                     sess.scan.add(hid)
@@ -280,6 +463,9 @@ def run_schedule(seed):
                 done.append(h)
         for hid in list(sess.scan):
             h = handles[hid]
+            if h.dead or h.stalled:
+                sess.scan.discard(hid)
+                continue
             if h.state in ("Idle", "Held"):
                 sess.scan.discard(hid)
                 continue
@@ -295,26 +481,103 @@ def run_schedule(seed):
                     done.append(h)
         return done
 
+    def crash_point_of(h):
+        if h.state == "Held" and lock.holder is h:
+            return "holding"
+        if h.state == "WaitBudget":
+            if h.bud != WAITING:
+                return "mid-handoff"
+            if h.hid in h.session.armed:
+                return "armed"
+            return "enqueued"
+        return None
+
+    def kill(h, point, stall):
+        crashes["points"].add(point)
+        h.session.scan.discard(h.hid)
+        if stall:
+            crashes["stalled"] += 1
+            h.stalled = True
+            h.stalled_holding = point == "holding"
+            if point == "holding":
+                # The stalled CS is abandoned (mirror: checker exit at
+                # stall; the zombie validates its lease before any
+                # further protected write).
+                lock.holder = None
+        else:
+            crashes["killed"] += 1
+            h.dead = True
+            h.session.armed.pop(h.hid, None)
+            if lock.holder is h:
+                lock.holder = None
+
     steps = 0
-    while sum(completed) < target * n:
+    while any(
+        completed[h.hid] < target for h in handles if not h.dead
+    ):
         steps += 1
-        assert steps < 2_000_000, (
-            f"seed {seed}: no progress (lost wakeup?) completed={completed}"
+        assert steps < 4_000_000, (
+            f"seed {seed}: no progress (lost wakeup / wedged survivor?) "
+            f"completed={completed}"
         )
-        h = rng.choice(handles)
-        sess = h.session
         action = rng.random()
+        # Clock + sweeper actions (also forced periodically so zombies
+        # always eventually wake).
+        if action < 0.04 or steps % 512 == 0:
+            now += rng.randint(1, 4)
+            continue
+        if action < 0.10 or steps % 64 == 0:
+            sweeper.sweep(now)
+            continue
+        h = rng.choice(handles)
+        if h.dead:
+            continue
+        if h.stalled:
+            # A zombie wakes only once its epoch is provably fenced,
+            # and its first act is the late write the fence rejects.
+            if h.lease is None or not h.lease["fenced"]:
+                continue
+            h.stalled = False
+            if h.stalled_holding:
+                h.stalled_holding = False
+                assert not h.unlock(), (
+                    f"seed {seed}: zombie release was not fenced"
+                )
+            else:
+                r = h.poll(now)
+                assert r != "Held", (
+                    f"seed {seed}: zombie poll was granted a revoked lock"
+                )
+            h.session.armed.pop(h.hid, None)
+            h.session.scan.discard(h.hid)
+            continue
+        # Crash injection at the four protocol points.
+        point = crash_point_of(h)
+        if (
+            point is not None
+            and crashes["killed"] + crashes["stalled"] < max_crashes
+            and rng.random() < 0.03
+        ):
+            kill(h, point, stall=rng.random() < 0.5)
+            continue
+        sess = h.session
         if h.state == "Idle" and h.hid not in sess.scan:
             if completed[h.hid] >= target:
                 continue
-            if h.poll() != "Held":  # submit
+            if h.poll(now) != "Held":  # submit (or fenced-slot gate)
                 sess.scan.add(h.hid)
                 if rng.random() < 0.8:
                     try_arm(h)
-        elif h.state == "Held" and lock.holder is h:
+        elif h.state == "Held":
             if action < 0.5:
-                h.unlock()
-                completed[h.hid] += 1
+                # Release — or, if the sweeper revoked us mid-hold (a
+                # live holder starved past its term), the fenced late
+                # write is rejected and the cycle retries.
+                if h.unlock():
+                    completed[h.hid] += 1
+            else:
+                # Holder heartbeat: renew, or discover the revocation.
+                h.poll(now)
         elif h.hid in sess.armed:
             # Armed: the ONLY way forward is the token — model a
             # session poll round (which may consume it), never a
@@ -333,39 +596,105 @@ def run_schedule(seed):
                 for done in poll_ready(sess):
                     completed[done.hid] += 1
 
-    # Drain: finish every in-flight acquisition and release holders.
+    # Drain: finish every in-flight acquisition, release holders, and
+    # let the sweeper complete every outstanding repair.
+    def open_repairs():
+        return any(
+            h.lease is not None and h.lease["fenced"] and not h.lease["reaped"]
+            for h in handles
+        )
+
     drains = 0
-    while any(s.scan or s.armed for s in sessions) or lock.holder is not None:
+    while (
+        any(s.scan or s.armed for s in sessions)
+        or lock.holder is not None
+        or open_repairs()
+    ):
         drains += 1
         assert drains < 1_000_000, f"seed {seed}: drain never completed"
-        if lock.holder is not None:
-            lock.holder.unlock()
+        now += 1
+        sweeper.sweep(now)
+        if lock.holder is not None and not lock.holder.dead:
+            if not lock.holder.stalled:
+                lock.holder.unlock()
         for sess in sessions:
             for done in poll_ready(sess):
                 done.unlock()
+        # Any still-stalled zombie is woken (fenced by now or soon).
+        for h in handles:
+            if h.stalled and h.lease is not None and h.lease["fenced"]:
+                h.stalled = False
+                if h.stalled_holding:
+                    h.stalled_holding = False
+                    assert not h.unlock()
+                h.session.armed.pop(h.hid, None)
+                h.session.scan.discard(h.hid)
 
     for h in handles:
         if h.cls == LOCAL:
             assert h.remote_verbs == 0, f"seed {seed}: local class used NIC"
         fired += h.stats["fired"]
         already_ready += h.stats["already_ready"]
-    return parked_verb_checks, fired, already_ready
+    late = sum(h.stats["late_rejected"] for h in handles)
+    expired = sum(h.stats["expired_polls"] for h in handles)
+    return {
+        "parked": parked_verb_checks,
+        "fired": fired,
+        "ready": already_ready,
+        "killed": crashes["killed"],
+        "stalled": crashes["stalled"],
+        "points": crashes["points"],
+        "fenced": sweeper.stats["fenced"],
+        "relayed": sweeper.stats["relayed"],
+        "released": sweeper.stats["released"],
+        "reaped": sweeper.stats["reaped"],
+        "late_rejected": late,
+        "expired_polls": expired,
+    }
 
 
 def main():
     cases = int(sys.argv[1]) if len(sys.argv) > 1 else 500
-    parked = fired = ready = 0
+    tot = {
+        "parked": 0,
+        "fired": 0,
+        "ready": 0,
+        "killed": 0,
+        "stalled": 0,
+        "fenced": 0,
+        "relayed": 0,
+        "released": 0,
+        "reaped": 0,
+        "late_rejected": 0,
+        "expired_polls": 0,
+    }
+    points = set()
     for seed in range(cases):
-        p, f, r = run_schedule(seed)
-        parked += p
-        fired += f
-        ready += r
-    assert fired > 0, "no wakeup token was ever published — model inert"
-    assert ready > 0, "the arm-vs-handoff race was never exercised"
+        r = run_schedule(seed)
+        for k in tot:
+            tot[k] += r[k]
+        points |= r["points"]
+    assert tot["fired"] > 0, "no wakeup token was ever published — model inert"
+    assert tot["ready"] > 0, "the arm-vs-handoff race was never exercised"
+    assert tot["killed"] > 0 and tot["stalled"] > 0, "crashes never injected"
+    assert points == {"holding", "enqueued", "mid-handoff", "armed"}, (
+        f"crash points not all covered: {sorted(points)}"
+    )
+    assert tot["fenced"] > 0 and tot["fenced"] == tot["reaped"], (
+        "revocations left unrepaired"
+    )
+    assert tot["relayed"] > 0, "no handoff was ever relayed past a corpse"
+    assert tot["released"] > 0, "no abandoned tail was ever reset"
+    assert tot["late_rejected"] > 0, "the zombie writeback race never fired"
     print(
         f"poll-model check: {cases} random schedules clean "
-        f"({parked} parked-poll verb checks, {fired} wakeups fired, "
-        f"{ready} already-ready races caught)"
+        f"({tot['parked']} parked-poll verb checks, {tot['fired']} wakeups "
+        f"fired, {tot['ready']} already-ready races caught; crashes: "
+        f"{tot['killed']} killed + {tot['stalled']} zombies at "
+        f"{len(points)}/4 points, {tot['fenced']} revoked, "
+        f"{tot['relayed']} relays, {tot['released']} tails reset, "
+        f"{tot['late_rejected']} late writes fenced, "
+        f"{tot['expired_polls']} expired polls)"
     )
 
 

@@ -19,8 +19,8 @@ use std::time::{Duration, Instant};
 
 use super::table::Table;
 use crate::coordinator::{
-    ready_list_probe, run_multi_lock_workload, run_multiplexed_workload, run_workload, Cluster,
-    CsWork, LockService, PollMode, RunResult, Workload,
+    ready_list_probe, run_crash_workload, run_multi_lock_workload, run_multiplexed_workload,
+    run_workload, Cluster, CrashPlan, CsWork, LockService, PollMode, RunResult, Workload,
 };
 use crate::locks::{make_lock, Class};
 use crate::mc::{self, models};
@@ -78,6 +78,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "e12",
         "ready-list wakeups: scan vs ready poll cost at K parked waiters",
     ),
+    (
+        "e13",
+        "crash recovery: fault injection x class mix under qplock leases",
+    ),
 ];
 
 /// Run one experiment by id.
@@ -95,6 +99,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExpOutput {
         "e10" => e10_multi_lock(scale),
         "e11" => e11_multiplexed(scale),
         "e12" => e12_ready_wakeups(scale),
+        "e13" => e13_crash_recovery(scale),
         other => panic!("unknown experiment '{other}'"),
     }
 }
@@ -937,16 +942,143 @@ fn e12_ready_wakeups(scale: Scale) -> ExpOutput {
     }
 }
 
+// ------------------------------------------------------------------ E13
+
+/// Crash recovery under fault injection: the E13 roster entry. Runs
+/// the multiplexed Zipfian workload over a **lease-enabled** service
+/// while a [`CrashPlan`] kills or stalls simulated processes at the
+/// four named protocol points (holding, enqueued, mid-handoff,
+/// armed-for-wakeup) and the service's sweeper revokes and repairs
+/// around them. Sweeps crash rate × class mix; reports revocation and
+/// relay counts, the recovery-latency histogram (lease-clock ticks
+/// from expiry to completed repair), and the two acceptance headlines:
+/// zero mutual-exclusion violations and zero wedged survivors.
+fn e13_crash_recovery(scale: Scale) -> ExpOutput {
+    // Quick scale IS the acceptance configuration: ≥ 64 procs, ≥ 100
+    // locks, crashes forced at all four protocol points.
+    let (procs_n, nlocks, iters, max_crashes) = match scale {
+        Scale::Quick => (64u32, 100u32, 12u64, 16u32),
+        Scale::Full => (128, 1_000, 40, 64),
+    };
+    // (crash_prob, mix): "mixed" round-robins processes over all nodes
+    // (every lock sees both classes); "local" pins all locks to node 0
+    // with half the processes there (the local-heavy extreme, where
+    // repair of local-class cohorts is CPU-only).
+    let configs: &[(f64, &str)] = &[(0.0005, "mixed"), (0.005, "mixed"), (0.005, "local")];
+    let mut t = Table::new(
+        "E13: crash recovery under fault injection (qplock leases, counted mode)",
+        &[
+            "crash-p",
+            "mix",
+            "kills",
+            "zombies",
+            "points",
+            "revoked",
+            "relays",
+            "fenced-late",
+            "rec p50",
+            "rec p99",
+            "completed",
+            "violations",
+            "wedged",
+        ],
+    );
+    for &(p, mix) in configs {
+        let cluster = Cluster::new(3, 1 << 21, DomainConfig::counted());
+        let svc = Arc::new(
+            LockService::new(&cluster.domain, "qplock", 8)
+                .with_default_max_procs(procs_n)
+                .with_lease_ticks(400),
+        );
+        let procs = if mix == "local" {
+            for i in 0..nlocks {
+                svc.create_lock(&crate::coordinator::lock_name(i), "qplock", 0, procs_n, 8)
+                    .expect("fresh table");
+            }
+            cluster.spread_procs(procs_n, procs_n / 2, 0)
+        } else {
+            cluster.round_robin_procs(procs_n)
+        };
+        let wl = Workload::cycles(iters).with_locks(nlocks, 0.9);
+        let plan = CrashPlan::all_points(p, 0.5, max_crashes);
+        let r = run_crash_workload(&svc, &procs, &wl, 4, &plan);
+        assert_eq!(
+            r.violations, 0,
+            "mutual exclusion violated across a revoke/fence at p={p} mix={mix}"
+        );
+        assert!(!r.wedged, "wedged survivors at p={p} mix={mix}");
+        t.row(&[
+            format!("{p}"),
+            mix.into(),
+            r.kills.iter().sum::<u64>().to_string(),
+            r.zombies.iter().sum::<u64>().to_string(),
+            r.points_injected().to_string(),
+            r.sweep.fenced.to_string(),
+            r.sweep.relayed.to_string(),
+            r.fenced_late_writes.to_string(),
+            r.sweep.recovery_ticks.p50().to_string(),
+            r.sweep.recovery_ticks.p99().to_string(),
+            r.completed.to_string(),
+            r.violations.to_string(),
+            if r.wedged { "yes".into() } else { "no".into() },
+        ]);
+    }
+    ExpOutput {
+        id: "e13",
+        tables: vec![t],
+        notes: vec![
+            format!(
+                "{procs_n} simulated processes x {iters} cycles over {nlocks} locks (skew \
+                 0.9), lease term 400 ticks, sweeper thread ticking + sweeping continuously; \
+                 first injection at each protocol point is forced (and a zombie), so every \
+                 repair shape is exercised in every row"
+            ),
+            "revoked = expired leases fenced; relays = owed handoffs passed around dead \
+             owners; fenced-late = zombie wake-side writes rejected by the fence (each one \
+             a prevented double release); rec p50/p99 = lease-clock ticks from expiry to \
+             completed repair"
+                .into(),
+            "invariants: zero oracle violations and zero wedged survivors in every row — \
+             asserted, not just reported"
+                .into(),
+        ],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn registry_covers_all_ids() {
-        assert_eq!(EXPERIMENTS.len(), 12);
+        assert_eq!(EXPERIMENTS.len(), 13);
         for (id, _) in EXPERIMENTS {
             assert!(id.starts_with('e'));
         }
+    }
+
+    #[test]
+    fn e13_quick_is_the_crash_acceptance_run() {
+        // ISSUE 4 acceptance: ≥64 procs, ≥100 locks, crashes injected
+        // at all four named protocol points, zero mutual-exclusion
+        // violations (asserted inside e13 too), zero wedged survivors,
+        // and revoked epochs' late writes provably fenced.
+        let out = run_experiment("e13", Scale::Quick);
+        let t = &out.tables[0];
+        assert_eq!(t.rows(), 3);
+        let mut saw_fenced_late_write = false;
+        for r in 0..t.rows() {
+            assert_eq!(t.cell(r, 4), "4", "row {r}: all four protocol points injected");
+            assert_eq!(t.cell(r, 11), "0", "row {r}: violations");
+            assert_eq!(t.cell(r, 12), "no", "row {r}: wedged survivors");
+            let revoked: u64 = t.cell(r, 5).parse().unwrap();
+            assert!(revoked >= 4, "row {r}: forced crashes were never revoked");
+            saw_fenced_late_write |= t.cell(r, 7) != "0";
+        }
+        assert!(
+            saw_fenced_late_write,
+            "no zombie late write was ever fenced — the writeback race went unexercised"
+        );
     }
 
     #[test]

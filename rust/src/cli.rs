@@ -91,7 +91,7 @@ SUBCOMMANDS:
             --budget <n>       qplock/cohort budget (default 8)
             --cs-ns <ns>       critical-section busy work (default 0)
             --counted          zero-latency op-count mode
-  bench   run experiments (EXPERIMENTS.md E1..E12)
+  bench   run experiments (EXPERIMENTS.md E1..E13)
             --exp <id|all>     experiment id (default all)
             --full             full scale (default quick)
             --csv              also print CSV
@@ -130,6 +130,21 @@ SUBCOMMANDS:
             --pending <K>      parked in-flight acquisitions (default 10000)
             --releases <n>     single releases to measure (default 50)
             --mode <m>         both|scan|ready (default both)
+  crash   fault-injection run over lease-enabled qplock: kill/stall
+          simulated processes at the four protocol points (holding,
+          enqueued, mid-handoff, armed) while the lease sweeper
+          revokes, fences, and repairs around them (the E13 scenario;
+          exits non-zero on any oracle violation or wedged survivor)
+            --sim-procs <n>    simulated processes (default 64)
+            --threads <t>      OS threads to multiplex onto (default 4)
+            --locks <K>        named locks in the table (default 100)
+            --skew <s>         Zipf skew (default 0.9)
+            --iters <n>        cycles per surviving process (default 12)
+            --crash-prob <p>   per-eligible-step injection prob (default 0.005)
+            --zombie-prob <p>  stall-instead-of-kill fraction (default 0.5)
+            --max-crashes <n>  injection cap (default 16)
+            --lease-ticks <n>  lease term in clock ticks (default 400)
+            --budget <n>       qplock budget (default 8)
   mc      model-check a spec (paper Appendix A)
             --model <name>     qplock|peterson|naive|spin (default qplock)
             --procs <n>        processes (default 3)

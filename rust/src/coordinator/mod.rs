@@ -21,9 +21,10 @@ use std::sync::Arc;
 use crate::rdma::{DomainConfig, RdmaDomain};
 
 pub use runner::{
-    lock_name, ready_list_probe, run_multi_lock_workload, run_multiplexed_workload,
-    run_multiplexed_workload_mode, run_workload, MultiLockRunResult, MultiProcResult, PollMode,
-    ProcResult, ProcSpec, ReadyProbeStats, RunResult,
+    lock_name, ready_list_probe, run_crash_workload, run_multi_lock_workload,
+    run_multiplexed_workload, run_multiplexed_workload_mode, run_workload, CrashPlan, CrashPoint,
+    CrashRunResult, MultiLockRunResult, MultiProcResult, PollMode, ProcResult, ProcSpec,
+    ReadyProbeStats, RunResult,
 };
 pub use service::{HandleCache, LockService, LockServiceError};
 pub use workload::{CsWork, Workload};

@@ -14,13 +14,13 @@
 //! last join while counting drain cycles, biasing timed-mode
 //! throughput at high contention.
 
-use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
-use std::sync::{Arc, Barrier, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::SeqCst};
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use super::service::LockService;
+use super::service::{HandleCache, LockService};
 use super::workload::Workload;
-use crate::locks::{Class, CsChecker, LockPoll, SharedLock};
+use crate::locks::{Class, CsChecker, LockPoll, SharedLock, SweepStats};
 use crate::rdma::{NodeId, ProcMetricsSnapshot, RdmaDomain};
 use crate::stats::{jain_index, Histogram};
 use crate::util::prng::{Prng, Zipf};
@@ -617,7 +617,7 @@ impl SimProc {
         ctx.checkers[li].enter(pid + 1);
         ctx.wl.cs.run(pid);
         ctx.checkers[li].exit(pid + 1);
-        self.session.release(&ctx.names[li]);
+        self.session.release(&ctx.names[li]).unwrap();
         let t2 = Instant::now();
         if ctx.deadline.is_some_and(|dl| t2 >= dl) {
             self.phase = SimPhase::Done;
@@ -878,7 +878,7 @@ pub fn ready_list_probe(pending: u32, releases: u32, mode: PollMode) -> ReadyPro
     let t0 = Instant::now();
     let mut rounds = 0u64;
     for name in names.iter().take(releases as usize) {
-        holder.release(name);
+        holder.release(name).unwrap();
         let mut got = Vec::new();
         while got.is_empty() {
             rounds += 1;
@@ -888,7 +888,7 @@ pub fn ready_list_probe(pending: u32, releases: u32, mode: PollMode) -> ReadyPro
             };
         }
         assert_eq!(got, vec![name.clone()], "the released lock's waiter wakes");
-        waiter.release(name);
+        waiter.release(name).unwrap();
     }
     let wall = t0.elapsed();
     let stats = ReadyProbeStats {
@@ -903,7 +903,7 @@ pub fn ready_list_probe(pending: u32, releases: u32, mode: PollMode) -> ReadyPro
     // Drain the remaining population so both sessions drop clean (a
     // leaked held/acquiring handle trips the pid-lease drop guard).
     for name in names.iter().skip(releases as usize) {
-        holder.release(name);
+        holder.release(name).unwrap();
     }
     let mut open = pending as usize - releases as usize;
     while open > 0 {
@@ -912,11 +912,589 @@ pub fn ready_list_probe(pending: u32, releases: u32, mode: PollMode) -> ReadyPro
             PollMode::Ready => waiter.poll_ready(),
         };
         for name in done {
-            waiter.release(&name);
+            waiter.release(&name).unwrap();
             open -= 1;
         }
     }
     stats
+}
+
+// ------------------------------------------------------------ crash runner
+
+/// Protocol point a fault injection targets (experiment E13 and the
+/// `qplock crash` CLI). The four points are the distinct repair shapes
+/// the lease layer must get right: a dead holder (relay its release),
+/// a dead queued waiter (become a pass-through, relay the owed handoff
+/// on arrival), a death in the window between the handoff landing and
+/// the waiter consuming it, and a dead waiter whose wakeup
+/// registration is armed (its token must be invalidated, not
+/// delivered — and the relayed successor gets its own signal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Inside the critical section (lock held across scheduler steps).
+    Holding,
+    /// Parked in the cohort queue; no handoff yet, no wakeup armed.
+    Enqueued,
+    /// Parked with the resolving handoff landed but not yet consumed.
+    MidHandoff,
+    /// Parked with an armed wakeup registration.
+    Armed,
+}
+
+impl CrashPoint {
+    pub const ALL: [CrashPoint; 4] = [
+        CrashPoint::Holding,
+        CrashPoint::Enqueued,
+        CrashPoint::MidHandoff,
+        CrashPoint::Armed,
+    ];
+
+    pub fn idx(self) -> usize {
+        match self {
+            CrashPoint::Holding => 0,
+            CrashPoint::Enqueued => 1,
+            CrashPoint::MidHandoff => 2,
+            CrashPoint::Armed => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CrashPoint::Holding => "holding",
+            CrashPoint::Enqueued => "enqueued",
+            CrashPoint::MidHandoff => "mid-handoff",
+            CrashPoint::Armed => "armed",
+        }
+    }
+}
+
+/// Fault-injection schedule for [`run_crash_workload`].
+#[derive(Clone, Debug)]
+pub struct CrashPlan {
+    /// Per-eligible-step injection probability.
+    pub crash_prob: f64,
+    /// Fraction of injections that *stall* the process (zombie)
+    /// instead of killing it. A zombie stops executing until its lease
+    /// is long expired, then wakes and attempts the late operation the
+    /// fence must reject (a revoked holder's release, a revoked
+    /// waiter's poll).
+    pub zombie_prob: f64,
+    /// Hard cap on injections (kills + zombies) across the run.
+    pub max_crashes: u32,
+    /// Eligible protocol points, indexed by [`CrashPoint::idx`].
+    pub points: [bool; 4],
+    /// Force-inject the first eligible occurrence of each enabled
+    /// point (as a zombie, when `zombie_prob > 0`), so even short runs
+    /// cover every point deterministically.
+    pub cover_all_points: bool,
+}
+
+impl CrashPlan {
+    /// All four points eligible, coverage forced.
+    pub fn all_points(crash_prob: f64, zombie_prob: f64, max_crashes: u32) -> CrashPlan {
+        CrashPlan {
+            crash_prob,
+            zombie_prob,
+            max_crashes,
+            points: [true; 4],
+            cover_all_points: true,
+        }
+    }
+}
+
+/// Outcome of a crash-injection run.
+pub struct CrashRunResult {
+    pub wall: Duration,
+    /// Mutual-exclusion oracle violations — the headline: must be 0
+    /// even with crashes at every protocol point.
+    pub violations: u64,
+    /// Critical-section cycles completed (all processes, pre-crash
+    /// work included).
+    pub completed: u64,
+    /// Processes never killed (zombies count as survivors — they must
+    /// recover and finish their cycles).
+    pub survivors: u32,
+    /// Kills by protocol point ([`CrashPoint::idx`]).
+    pub kills: [u64; 4],
+    /// Zombie stalls by protocol point.
+    pub zombies: [u64; 4],
+    /// Zombie wake-side operations rejected by the fence — each one a
+    /// would-be double release/grant that the revoked epoch turned
+    /// into a no-op.
+    pub fenced_late_writes: u64,
+    /// Zombies that woke before the sweeper revoked them (released
+    /// normally; still single-grant — the release claim won the lease
+    /// word, so the sweeper never repairs that epoch).
+    pub lucky_zombies: u64,
+    /// Acquisitions the session side observed as revoked (polled
+    /// `Expired` / failed heartbeat), each retried with a fresh draw.
+    pub expired_acquisitions: u64,
+    /// Aggregate sweeper accounting (fences, relays, recovery ticks).
+    pub sweep: SweepStats,
+    /// Sweep passes driven.
+    pub sweeps: u64,
+    /// Remote verbs issued by the sweeper agents (the sweep's fabric
+    /// budget; fencing itself is CPU-only).
+    pub sweeper_remote_verbs: u64,
+    /// True if survivors failed to finish inside the time cap — the
+    /// "wedged survivors" failure leases exist to prevent.
+    pub wedged: bool,
+}
+
+impl CrashRunResult {
+    pub fn total_crashes(&self) -> u64 {
+        self.kills.iter().sum::<u64>() + self.zombies.iter().sum::<u64>()
+    }
+
+    /// Distinct protocol points that saw at least one injection.
+    pub fn points_injected(&self) -> usize {
+        CrashPoint::ALL
+            .iter()
+            .filter(|p| self.kills[p.idx()] + self.zombies[p.idx()] > 0)
+            .count()
+    }
+}
+
+/// What one simulated process of the crash runner is doing.
+enum CrashPhase {
+    Draw,
+    Acquiring { li: usize },
+    Hold { li: usize, left: u32 },
+    /// Zombie: stalled (no polls, no renewals) until the lease clock
+    /// passes `wake_at`, then attempts the fenced late operation.
+    Stalled { li: usize, from: CrashPoint, wake_at: u64 },
+    Done,
+    Dead,
+}
+
+struct CrashProc {
+    spec: ProcSpec,
+    /// Taken (and leaked in place) on kill.
+    session: Option<HandleCache>,
+    rng: Prng,
+    phase: CrashPhase,
+    done_cycles: u64,
+    killed: bool,
+}
+
+/// A crash-runner process that will never step again.
+fn crash_settled(p: &CrashPhase) -> bool {
+    matches!(p, CrashPhase::Done | CrashPhase::Dead)
+}
+
+/// Cross-thread fault accounting.
+#[derive(Default)]
+struct CrashTally {
+    injected: AtomicU64,
+    covered: [AtomicBool; 4],
+    kills: [AtomicU64; 4],
+    zombies: [AtomicU64; 4],
+    fenced_late_writes: AtomicU64,
+    lucky_zombies: AtomicU64,
+    expired_acquisitions: AtomicU64,
+}
+
+struct CrashCtx {
+    names: Arc<Vec<String>>,
+    checkers: Arc<Vec<CsChecker>>,
+    zipf: Arc<Zipf>,
+    wl: Workload,
+    plan: CrashPlan,
+    domain: Arc<RdmaDomain>,
+    lease_ticks: u64,
+    /// Scheduler steps a holder keeps the lock (gives the Holding
+    /// point a window to exist between steps).
+    hold_steps: u32,
+    tally: Arc<CrashTally>,
+}
+
+impl CrashProc {
+    fn enter_hold(&mut self, li: usize, ctx: &CrashCtx) {
+        let pid = self.spec.pid;
+        ctx.checkers[li].enter(pid + 1);
+        ctx.wl.cs.run(pid);
+        self.phase = CrashPhase::Hold {
+            li,
+            left: ctx.hold_steps,
+        };
+    }
+
+    /// Try to inject a fault at `point`. Returns true if the process
+    /// crashed or stalled (the caller stops stepping it this round).
+    fn try_inject(&mut self, li: usize, point: CrashPoint, ctx: &CrashCtx) -> bool {
+        if !ctx.plan.points[point.idx()] {
+            return false;
+        }
+        let forced = ctx.plan.cover_all_points && !ctx.tally.covered[point.idx()].load(SeqCst);
+        if forced {
+            // Coverage injections (at most one per point, modulo a
+            // benign race) bypass the cap — random injections must not
+            // starve a rare point of its guaranteed hit.
+            ctx.tally.injected.fetch_add(1, SeqCst);
+        } else {
+            if !self.rng.chance(ctx.plan.crash_prob) {
+                return false;
+            }
+            // Respect the injection cap (atomically claimed).
+            if ctx
+                .tally
+                .injected
+                .fetch_update(SeqCst, SeqCst, |n| {
+                    (n < ctx.plan.max_crashes as u64).then_some(n + 1)
+                })
+                .is_err()
+            {
+                return false;
+            }
+        }
+        ctx.tally.covered[point.idx()].store(true, SeqCst);
+        // Abandoning a critical section: the oracle's entry is closed
+        // here — a crashed/stalled holder's CS is over, and the lease
+        // layer's job is exactly to re-grant the lock while its
+        // side effects stay un-rolled-back (ROADMAP §Failure model).
+        if point == CrashPoint::Holding {
+            ctx.checkers[li].exit(self.spec.pid + 1);
+        }
+        // The first injection at each point is a zombie (when enabled):
+        // every repair shape gets its fenced-late-write proof.
+        let zombie =
+            ctx.plan.zombie_prob > 0.0 && (forced || self.rng.chance(ctx.plan.zombie_prob));
+        if zombie {
+            ctx.tally.zombies[point.idx()].fetch_add(1, SeqCst);
+            // Wake long after expiry: several lease terms, so the
+            // sweeper has certainly fenced (and usually repaired) the
+            // acquisition before the late write fires.
+            self.phase = CrashPhase::Stalled {
+                li,
+                from: point,
+                wake_at: ctx.domain.lease_now() + 4 * ctx.lease_ticks,
+            };
+        } else {
+            ctx.tally.kills[point.idx()].fetch_add(1, SeqCst);
+            self.killed = true;
+            self.phase = CrashPhase::Dead;
+            // Abandon everything in place — only the sweeper can
+            // repair what this process held.
+            self.session.take().expect("live proc has a session").crash();
+        }
+        true
+    }
+
+    /// Advance by one bounded step; returns true on forward progress.
+    fn step(&mut self, ctx: &CrashCtx) -> bool {
+        match self.phase {
+            CrashPhase::Done | CrashPhase::Dead => false,
+            CrashPhase::Draw => {
+                if self.done_cycles >= ctx.wl.iters {
+                    self.phase = CrashPhase::Done;
+                    return true;
+                }
+                let li = ctx.zipf.sample(&mut self.rng) as usize;
+                let sess = self.session.as_mut().expect("live proc");
+                match sess.submit(&ctx.names[li]).expect("capacity checked") {
+                    LockPoll::Held => self.enter_hold(li, ctx),
+                    _ => self.phase = CrashPhase::Acquiring { li },
+                }
+                true
+            }
+            CrashPhase::Acquiring { li } => {
+                // Classify the current protocol point and maybe crash.
+                let name = &ctx.names[li];
+                let sess = self.session.as_mut().expect("live proc");
+                if sess.is_pending(name) {
+                    let point = if sess.handoff_arrived(name) {
+                        CrashPoint::MidHandoff
+                    } else if sess.is_armed(name) {
+                        CrashPoint::Armed
+                    } else {
+                        CrashPoint::Enqueued
+                    };
+                    if self.try_inject(li, point, ctx) {
+                        return true;
+                    }
+                }
+                let sess = self.session.as_mut().expect("live proc");
+                let done = sess.poll_ready();
+                let expired = sess.take_expired();
+                if expired.iter().any(|n| n == name) {
+                    // Revoked (a spurious expiry under scheduling
+                    // pressure, or a zombie resuming): retry fresh.
+                    ctx.tally.expired_acquisitions.fetch_add(1, SeqCst);
+                    self.phase = CrashPhase::Draw;
+                    return true;
+                }
+                if done.iter().any(|n| n == name) {
+                    self.enter_hold(li, ctx);
+                    return true;
+                }
+                false
+            }
+            CrashPhase::Hold { li, left } => {
+                let name = &ctx.names[li];
+                // Holder heartbeat: a live holder renews every step; a
+                // failure means the sweeper revoked us mid-hold — the
+                // CS must be abandoned (further writes are fenced).
+                let sess = self.session.as_mut().expect("live proc");
+                if sess.renew(name).is_err() {
+                    let _ = sess.take_expired();
+                    ctx.checkers[li].exit(self.spec.pid + 1);
+                    ctx.tally.expired_acquisitions.fetch_add(1, SeqCst);
+                    self.phase = CrashPhase::Draw;
+                    return true;
+                }
+                if self.try_inject(li, CrashPoint::Holding, ctx) {
+                    return true;
+                }
+                if left > 0 {
+                    self.phase = CrashPhase::Hold { li, left: left - 1 };
+                    return true;
+                }
+                ctx.checkers[li].exit(self.spec.pid + 1);
+                let sess = self.session.as_mut().expect("live proc");
+                match sess.release(name) {
+                    Ok(()) => self.done_cycles += 1,
+                    Err(_) => {
+                        // Revoked between the renewal and the release:
+                        // the fence rejected the late write.
+                        ctx.tally.fenced_late_writes.fetch_add(1, SeqCst);
+                        let _ = sess.take_expired();
+                    }
+                }
+                self.phase = CrashPhase::Draw;
+                true
+            }
+            CrashPhase::Stalled { li, from, wake_at } => {
+                if ctx.domain.lease_now() < wake_at {
+                    return false;
+                }
+                // The zombie wakes and issues the late operation its
+                // revoked epoch must fence.
+                let name = &ctx.names[li];
+                let sess = self.session.as_mut().expect("live proc");
+                match from {
+                    CrashPoint::Holding => {
+                        match sess.release(name) {
+                            Err(_) => {
+                                ctx.tally.fenced_late_writes.fetch_add(1, SeqCst);
+                            }
+                            Ok(()) => {
+                                // Not yet revoked: the release claim won
+                                // the lease word, so the sweeper will
+                                // never also relay it — still one grant.
+                                ctx.tally.lucky_zombies.fetch_add(1, SeqCst);
+                            }
+                        }
+                        let _ = sess.take_expired();
+                        self.phase = CrashPhase::Draw;
+                    }
+                    _ => {
+                        // Parked zombie: resume polling; the revocation
+                        // surfaces as an expired acquisition.
+                        self.phase = CrashPhase::Acquiring { li };
+                    }
+                }
+                true
+            }
+        }
+    }
+}
+
+/// Run a crash-injecting multiplexed workload over a **lease-enabled**
+/// service (construct it `with_lease_ticks(..)`): simulated processes
+/// acquire Zipfian-drawn named locks through ready-mode sessions and
+/// hold each lock across scheduler steps, while `plan` kills or stalls
+/// them at the four named protocol points and a dedicated sweeper
+/// thread advances the lease clock and runs
+/// [`LockService::sweep_leases`] continuously. Per-lock
+/// mutual-exclusion oracles stay armed throughout — a double grant
+/// across any revoke/fence shows up as a violation — and survivors
+/// must finish all their cycles (a wedged survivor is the failure
+/// leases exist to prevent; `wedged` reports it instead of hanging).
+pub fn run_crash_workload(
+    service: &Arc<LockService>,
+    procs: &[ProcSpec],
+    workload: &Workload,
+    os_threads: usize,
+    plan: &CrashPlan,
+) -> CrashRunResult {
+    let n = procs.len();
+    assert!(n > 0);
+    assert!(os_threads >= 1);
+    let lease_ticks = service.lease_ticks();
+    assert!(
+        lease_ticks > 0,
+        "crash workload needs a lease-enabled service (with_lease_ticks)"
+    );
+    let nlocks = workload.locks;
+    assert!(nlocks >= 1);
+
+    let names: Arc<Vec<String>> = Arc::new((0..nlocks).map(lock_name).collect());
+    for name in names.iter() {
+        let free = service.ensure_free_slots(name);
+        assert!(
+            free as usize >= n,
+            "lock table capacity too small: '{name}' has {free} free client slots for {n} \
+             processes"
+        );
+    }
+    let checkers: Arc<Vec<CsChecker>> =
+        Arc::new((0..nlocks).map(|_| CsChecker::default()).collect());
+    let zipf = Arc::new(Zipf::new(nlocks, workload.zipf_s));
+    let tally = Arc::new(CrashTally::default());
+    let domain = Arc::clone(service.domain());
+
+    // Sweeper thread: advances the lease clock and sweeps continuously
+    // until the workers finish (plus a final drain pass).
+    let stop_sweeper = Arc::new(AtomicBool::new(false));
+    let sweep_out = Arc::new(Mutex::new((SweepStats::default(), 0u64)));
+    let sweeper = {
+        let svc = Arc::clone(service);
+        let stop = Arc::clone(&stop_sweeper);
+        let out = Arc::clone(&sweep_out);
+        std::thread::spawn(move || {
+            while !stop.load(SeqCst) {
+                let now = svc.domain().advance_lease_clock(1);
+                let pass = svc.sweep_leases(now);
+                {
+                    let mut o = out.lock().unwrap();
+                    o.0.absorb(&pass);
+                    o.1 += 1;
+                }
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        })
+    };
+
+    let threads = os_threads.min(n);
+    let mut groups: Vec<Vec<CrashProc>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, spec) in procs.iter().copied().enumerate() {
+        let mut session = service.session(spec.node);
+        session.enable_ready_wakeups(4);
+        session.set_lease_heartbeat(4);
+        groups[i % threads].push(CrashProc {
+            spec,
+            session: Some(session),
+            rng: Prng::seed_from(workload.seed ^ (spec.pid as u64).wrapping_mul(0xC4A5)),
+            phase: CrashPhase::Draw,
+            done_cycles: 0,
+            killed: false,
+        });
+    }
+
+    let window = RunWindow::new(threads);
+    let wedged = Arc::new(AtomicBool::new(false));
+    // Generous liveness cap: if survivors cannot finish by then, the
+    // run reports `wedged` instead of hanging the harness.
+    let cap = Duration::from_secs(120);
+    let mut joins = vec![];
+    for mut sims in groups {
+        let window = Arc::clone(&window);
+        let ctx = CrashCtx {
+            names: Arc::clone(&names),
+            checkers: Arc::clone(&checkers),
+            zipf: Arc::clone(&zipf),
+            wl: workload.clone(),
+            plan: plan.clone(),
+            domain: Arc::clone(&domain),
+            lease_ticks,
+            hold_steps: 2,
+            tally: Arc::clone(&tally),
+        };
+        let wedged = Arc::clone(&wedged);
+        joins.push(std::thread::spawn(move || {
+            window.enter();
+            let t0 = Instant::now();
+            let mut live = sims.len();
+            while live > 0 && !wedged.load(SeqCst) {
+                let mut progressed = false;
+                for sim in sims.iter_mut() {
+                    let was_settled = crash_settled(&sim.phase);
+                    progressed |= sim.step(&ctx);
+                    if !was_settled && crash_settled(&sim.phase) {
+                        live -= 1;
+                    }
+                }
+                // Checked every round (not only idle ones): a run
+                // spinning through endless revoke/retry churn is as
+                // wedged as a silent one.
+                if t0.elapsed() > cap {
+                    wedged.store(true, SeqCst);
+                }
+                if !progressed {
+                    std::thread::yield_now();
+                }
+            }
+            let wedged_now = wedged.load(SeqCst);
+            sims.into_iter()
+                .map(|p| {
+                    // A wedged run leaves sessions holding live state;
+                    // leak them rather than letting the pid-lease drop
+                    // guards turn the diagnosis into a panic.
+                    if wedged_now {
+                        if let Some(s) = p.session {
+                            s.crash();
+                        }
+                    }
+                    (p.done_cycles, p.killed)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+
+    let t0 = window.open(None);
+    let mut per_proc: Vec<(u64, bool)> = Vec::new();
+    for j in joins {
+        per_proc.extend(j.join().unwrap());
+    }
+    let wall = t0.elapsed();
+
+    // Drain outstanding repairs before stopping the sweeper: a killed
+    // process's lease may only now be expiring, and multi-pass repairs
+    // (a fenced waiter's still-owed handoff, a fenced leader's
+    // Peterson win) need further sweeps. Converge on "every fence
+    // repaired" after at least two more lease terms have elapsed, with
+    // a hard cap so a repair bug reports instead of hanging.
+    let ticks_at_join = domain.lease_now();
+    let drain_cap = Instant::now() + Duration::from_secs(10);
+    loop {
+        let expired_out = domain.lease_now() >= ticks_at_join + 2 * lease_ticks;
+        let repaired = {
+            let o = sweep_out.lock().unwrap();
+            o.0.fenced == o.0.reaped
+        };
+        if (expired_out && repaired) || Instant::now() > drain_cap {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop_sweeper.store(true, SeqCst);
+    sweeper.join().unwrap();
+    let (sweep, sweeps) = {
+        let o = sweep_out.lock().unwrap();
+        (o.0.clone(), o.1)
+    };
+
+    let kills = std::array::from_fn(|i| tally.kills[i].load(SeqCst));
+    let zombies = std::array::from_fn(|i| tally.zombies[i].load(SeqCst));
+    CrashRunResult {
+        wall,
+        violations: checkers.iter().map(|c| c.violations()).sum(),
+        completed: per_proc.iter().map(|p| p.0).sum(),
+        survivors: per_proc.iter().filter(|p| !p.1).count() as u32,
+        kills,
+        zombies,
+        fenced_late_writes: tally.fenced_late_writes.load(SeqCst),
+        lucky_zombies: tally.lucky_zombies.load(SeqCst),
+        expired_acquisitions: tally.expired_acquisitions.load(SeqCst),
+        sweep,
+        sweeps,
+        sweeper_remote_verbs: service
+            .sweeper_metrics()
+            .iter()
+            .map(|s| s.remote_total())
+            .sum(),
+        wedged: wedged.load(SeqCst),
+    }
 }
 
 #[cfg(test)]
@@ -1135,6 +1713,50 @@ mod tests {
             scan.polls_per_release() >= 32.0,
             "scan mode polled only {} per release",
             scan.polls_per_release()
+        );
+    }
+
+    #[test]
+    fn crash_workload_recovers_and_keeps_the_oracle_clean() {
+        // Small-scale fault-injection smoke: kills and zombies at the
+        // eligible protocol points, a live sweeper, and the per-lock
+        // oracles — zero violations, no wedged survivor, and every
+        // surviving process finishes all of its cycles.
+        let c = Cluster::new(2, 1 << 19, DomainConfig::counted());
+        let svc = Arc::new(
+            crate::coordinator::LockService::new(&c.domain, "qplock", 8)
+                .with_default_max_procs(12)
+                .with_lease_ticks(200),
+        );
+        let procs = c.round_robin_procs(12);
+        let wl = Workload::cycles(8).with_locks(8, 0.9);
+        let plan = CrashPlan::all_points(0.01, 0.5, 8);
+        let r = run_crash_workload(&svc, &procs, &wl, 2, &plan);
+        assert_eq!(r.violations, 0, "double grant across a revoke/fence");
+        assert!(!r.wedged, "survivors wedged despite the lease layer");
+        assert!(r.total_crashes() >= 1, "nothing was ever injected");
+        assert!(
+            r.completed >= r.survivors as u64 * 8,
+            "a survivor lost cycles: {} completed, {} survivors",
+            r.completed,
+            r.survivors
+        );
+        // Every kill/zombie that left a fenced slot was repaired.
+        assert_eq!(r.sweep.fenced, r.sweep.reaped, "repairs left dangling");
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a lease-enabled service")]
+    fn crash_workload_requires_leases() {
+        let c = Cluster::new(2, 1 << 16, DomainConfig::counted());
+        let svc = Arc::new(crate::coordinator::LockService::new(&c.domain, "qplock", 8));
+        let procs = c.round_robin_procs(2);
+        let _ = run_crash_workload(
+            &svc,
+            &procs,
+            &Workload::cycles(1).with_locks(2, 0.0),
+            1,
+            &CrashPlan::all_points(0.0, 0.0, 0),
         );
     }
 

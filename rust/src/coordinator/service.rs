@@ -13,14 +13,25 @@
 //! re-allocating MCS descriptors per touch, and splits its verb
 //! accounting by locality class so the paper's zero-local-RDMA claim
 //! stays observable per handle class at lock-table scale.
+//!
+//! With [`LockService::with_lease_ticks`] the service also runs the
+//! **crash-recovery side** of the lease protocol (see
+//! `locks/qplock.rs` §Failure model): every registered lock gets
+//! protocol-level leases, and [`LockService::sweep_leases`] drives the
+//! per-node sweeper agents that fence expired acquisitions and repair
+//! the queues around dead clients. Sessions surface revocation as
+//! [`LockPoll::Expired`] / [`LeaseError::Expired`]
+//! ([`HandleCache::release`], [`HandleCache::take_expired`]) and keep
+//! armed waiters' leases alive through the `poll_ready` heartbeat.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::locks::{
-    make_lock, ArmOutcome, AsyncLockHandle, LockHandle, LockPoll, SharedLock, WakeupReg,
+    make_lock, ArmOutcome, AsyncLockHandle, LeaseError, LockHandle, LockPoll, SharedLock,
+    SweepStats, WakeupReg,
 };
-use crate::rdma::{Endpoint, NodeId, ProcMetrics, RdmaDomain, WakeupRing};
+use crate::rdma::{Endpoint, NodeId, ProcMetrics, ProcMetricsSnapshot, RdmaDomain, WakeupRing};
 
 /// Default capacity (max processes per lock) when not specified.
 const DEFAULT_MAX_PROCS: u32 = 64;
@@ -134,6 +145,10 @@ impl LockHandle for SlotHandle {
         self.inner.unlock();
     }
 
+    fn try_unlock(&mut self) -> Result<(), LeaseError> {
+        self.inner.try_unlock()
+    }
+
     fn algorithm(&self) -> &'static str {
         self.inner.algorithm()
     }
@@ -177,6 +192,18 @@ pub struct LockService {
     default_algo: String,
     default_budget: u64,
     default_max_procs: u32,
+    /// Protocol-level lease term applied to every lock this service
+    /// registers (0 = leases off, the failure-free default).
+    lease_ticks: u64,
+    /// Per-node sweeper endpoints: the expiry sweep is a set of
+    /// node-local agents (a slot is only ever swept by the endpoint on
+    /// its own node — the Table-1 lease-word discipline), and each
+    /// endpoint's metrics are the sweep's verb budget.
+    sweepers: Vec<Endpoint>,
+    /// Serializes sweep passes: the per-lock repair state machine
+    /// (phase transitions in fenced lease words) assumes one sweeper
+    /// per slot at a time.
+    sweep_serial: Mutex<()>,
 }
 
 impl LockService {
@@ -202,7 +229,31 @@ impl LockService {
             default_algo: default_algo.to_string(),
             default_budget,
             default_max_procs: DEFAULT_MAX_PROCS,
+            lease_ticks: 0,
+            sweepers: {
+                let mut eps = Vec::new();
+                for n in 0..domain.num_nodes() {
+                    eps.push(domain.endpoint(n));
+                }
+                eps
+            },
+            sweep_serial: Mutex::new(()),
         }
+    }
+
+    /// Enable protocol-level leases on every lock this service
+    /// registers: acquisitions expire `ticks` lease-clock ticks after
+    /// their last renewal, and [`LockService::sweep_leases`] revokes
+    /// and repairs around the dead ones. Only lease-capable algorithms
+    /// (qplock) honor it; baselines stay failure-free.
+    pub fn with_lease_ticks(mut self, ticks: u64) -> LockService {
+        self.lease_ticks = ticks;
+        self
+    }
+
+    /// The configured lease term (0 = leases off).
+    pub fn lease_ticks(&self) -> u64 {
+        self.lease_ticks
     }
 
     /// Raise (or shrink) the per-lock client capacity used by the
@@ -240,11 +291,51 @@ impl LockService {
     /// so a concurrent get-or-create of the same name cannot
     /// double-allocate registers.
     fn make_entry(&self, algo: &str, home: NodeId, max_procs: u32, budget: u64) -> Arc<Entry> {
+        let lock = make_lock(algo, &self.domain, home, max_procs, budget);
+        if self.lease_ticks > 0 {
+            lock.enable_leases(self.lease_ticks);
+        }
         Arc::new(Entry {
-            lock: make_lock(algo, &self.domain, home, max_procs, budget),
+            lock,
             pids: Mutex::new(PidPool::default()),
             max_procs,
         })
+    }
+
+    /// One expiry-sweep pass over every registered lock, from every
+    /// node's sweeper agent: fence acquisitions whose lease deadline
+    /// passed `now`, and advance the queue repairs around previously
+    /// fenced ones (relay owed handoffs, clear abandoned tails).
+    /// Returns the pass's accounting; call repeatedly — repairs that
+    /// wait on protocol events (a dead waiter's still-owed handoff, a
+    /// dead leader's Peterson win) complete across passes.
+    pub fn sweep_leases(&self, now: u64) -> SweepStats {
+        let _serial = self.sweep_serial.lock().unwrap();
+        let mut stats = SweepStats::default();
+        for shard in self.shards.iter() {
+            // Snapshot the shard's locks so repair work (which may
+            // issue verbs and take time) runs outside the shard mutex.
+            let locks: Vec<Arc<dyn SharedLock>> = {
+                let map = shard.map.lock().unwrap();
+                map.values().map(|e| Arc::clone(&e.lock)).collect()
+            };
+            for lock in locks {
+                for ep in &self.sweepers {
+                    lock.sweep_leases(ep, now, &mut stats);
+                }
+            }
+        }
+        stats
+    }
+
+    /// Per-node verb counters of the sweeper agents — the sweep's verb
+    /// budget (fencing and local-cohort repair are CPU-only; only
+    /// cross-node relays and NIC-lane tail resets hit the fabric).
+    pub fn sweeper_metrics(&self) -> Vec<ProcMetricsSnapshot> {
+        self.sweepers
+            .iter()
+            .map(|ep| ep.metrics.snapshot())
+            .collect()
     }
 
     /// Create a lock with explicit placement and algorithm. Errors (does
@@ -473,6 +564,22 @@ pub struct HandleCache {
     /// Names re-listed by a drain-with-intent since the last
     /// reconciliation (see [`HandleCache::reconcile_relisted`]).
     relisted: Vec<String>,
+    /// Names whose acquisition (or held lock) was revoked by the lease
+    /// sweeper and not yet acknowledged: [`HandleCache::release`] of
+    /// such a name returns [`LeaseError::Expired`] — including the
+    /// double-release-after-revoke case — until a fresh submit clears
+    /// it.
+    revoked: HashSet<String>,
+    /// Revocations observed since the last [`HandleCache::take_expired`].
+    expired: Vec<String>,
+    /// `poll_ready` lease-heartbeat cadence in rounds (0 = off): every
+    /// N rounds, renew the lease of each pending acquisition. Armed
+    /// waiters are not polled (that is the point of arming), so this
+    /// is the only thing keeping their leases alive — O(pending) local
+    /// writes amortized to O(pending/N) per round, the standard
+    /// heartbeat cost of leasing, and nothing at all on lease-less
+    /// locks (renewal is a no-op there).
+    heartbeat_every: u32,
     /// Full-sweep fallback cadence for `poll_ready`, in rounds (0 =
     /// never sweep).
     sweep_every: u32,
@@ -489,6 +596,9 @@ const DEFAULT_WAKEUP_CAPACITY: u32 = 1024;
 
 /// Default fallback-sweep cadence (rounds) for `poll_ready`.
 const DEFAULT_SWEEP_EVERY: u32 = 256;
+
+/// Default lease-heartbeat cadence (rounds) for `poll_ready`.
+const DEFAULT_HEARTBEAT_EVERY: u32 = 16;
 
 impl HandleCache {
     fn new(svc: Arc<LockService>, node: NodeId) -> HandleCache {
@@ -509,6 +619,9 @@ impl HandleCache {
             free_tokens: Vec::new(),
             dirty_tokens: Vec::new(),
             relisted: Vec::new(),
+            revoked: HashSet::new(),
+            expired: Vec::new(),
+            heartbeat_every: DEFAULT_HEARTBEAT_EVERY,
             sweep_every: DEFAULT_SWEEP_EVERY,
             ready_rounds: 0,
             handle_polls: 0,
@@ -579,12 +692,12 @@ impl HandleCache {
     pub fn submit(&mut self, name: &str) -> Result<LockPoll, LockServiceError> {
         if self.pending.contains(name) {
             match self.poll_one(name) {
-                LockPoll::Cancelled => {
-                    // The drain just resolved: purge its stale order and
-                    // scan entries eagerly so the fresh submission below
-                    // cannot leave duplicates that would be double-polled
-                    // every round (the resubmit-after-cancel path is
-                    // rare; an O(pending) purge here is fine).
+                LockPoll::Cancelled | LockPoll::Expired => {
+                    // The drain (or revoked acquisition) just resolved:
+                    // purge its stale order and scan entries eagerly so
+                    // the fresh submission below cannot leave duplicates
+                    // that would be double-polled every round (this
+                    // path is rare; an O(pending) purge here is fine).
                     self.pending_order.retain(|n| n != name);
                     self.scan.retain(|n| n != name);
                 }
@@ -606,6 +719,8 @@ impl HandleCache {
                 }
             }
         }
+        // A fresh submit acknowledges any standing revocation.
+        self.revoked.remove(name);
         let algo = self.handle(name)?.algorithm();
         let h = self.handles.get_mut(name).expect("just ensured").as_mut();
         let Some(a) = h.as_async() else {
@@ -643,6 +758,10 @@ impl HandleCache {
         let h = self.handles.get_mut(name).expect("pending implies minted");
         let r = h.as_async().expect("pending implies async").poll_lock();
         if r != LockPoll::Pending {
+            if r == LockPoll::Expired {
+                self.mark_expired(name);
+                return r;
+            }
             self.resolve(name);
             if r == LockPoll::Cancelled {
                 self.cancelled.remove(name);
@@ -653,6 +772,19 @@ impl HandleCache {
             }
         }
         r
+    }
+
+    /// The lease sweeper revoked `name`'s acquisition (observed via a
+    /// poll or a heartbeat renewal): drop every pending trace, record
+    /// the revocation for [`HandleCache::release`] error reporting and
+    /// [`HandleCache::take_expired`], and drop any resubmit intent —
+    /// the caller decides whether to retry a revoked acquisition.
+    fn mark_expired(&mut self, name: &str) {
+        self.resolve(name);
+        self.cancelled.remove(name);
+        self.resubmit.remove(name);
+        self.revoked.insert(name.to_string());
+        self.expired.push(name.to_string());
     }
 
     /// Re-list `name` as pending on behalf of a recorded resubmit
@@ -790,6 +922,8 @@ impl HandleCache {
             dirty_tokens,
             cancelled,
             resubmit,
+            revoked,
+            expired,
             handle_polls,
             ..
         } = self;
@@ -806,12 +940,19 @@ impl HandleCache {
                 r => {
                     pending.remove(name);
                     Self::release_registration(armed, tokens, dirty_tokens, name);
-                    if r == LockPoll::Held {
-                        held.push(name.clone());
-                    } else {
-                        cancelled.remove(name);
-                        if resubmit.remove(name) {
-                            restart.push(name.clone());
+                    match r {
+                        LockPoll::Held => held.push(name.clone()),
+                        LockPoll::Expired => {
+                            cancelled.remove(name);
+                            resubmit.remove(name);
+                            revoked.insert(name.clone());
+                            expired.push(name.clone());
+                        }
+                        _ => {
+                            cancelled.remove(name);
+                            if resubmit.remove(name) {
+                                restart.push(name.clone());
+                            }
                         }
                     }
                     false
@@ -871,6 +1012,22 @@ impl HandleCache {
         self.ready_rounds += 1;
         let mut held = Vec::new();
 
+        // 0. Lease heartbeat: armed waiters are (by design) not
+        // polled, so their renewals must ride the session instead —
+        // without this, every armed acquisition on a lease-enabled
+        // lock would expire while parked. Purely local writes, and
+        // `handle_polls` untouched, so the O(ready) poll-work
+        // invariant is preserved exactly. Gated on the service's
+        // lease config: lease-less deployments skip even the
+        // bookkeeping (callers enabling leases per-lock behind the
+        // service's back must heartbeat explicitly).
+        if self.heartbeat_every > 0
+            && self.svc.lease_ticks() > 0
+            && self.ready_rounds % self.heartbeat_every as u64 == 0
+        {
+            self.renew_pending();
+        }
+
         // 1. Ready list: tokens published by handoffs since the last
         // round. Validate before polling — a stale token (whose
         // registration resolved through another path, e.g. the sweep)
@@ -881,7 +1038,12 @@ impl HandleCache {
                 if self.armed.get(&name) == Some(&token) {
                     match self.poll_one(&name) {
                         LockPoll::Held => held.push(name),
-                        LockPoll::Cancelled => {}
+                        // A revoked acquisition's token — published by
+                        // a passer that raced the fence — is invalid
+                        // by construction: the poll surfaced Expired,
+                        // nothing is reported held, and the token id
+                        // is reclaimed below like any stale token.
+                        LockPoll::Cancelled | LockPoll::Expired => {}
                         LockPoll::Pending => {
                             // Still in flight: the budget arrived
                             // exhausted and the handle moved on to
@@ -914,7 +1076,7 @@ impl HandleCache {
                     held.push(name.clone());
                     false
                 }
-                LockPoll::Cancelled => false,
+                LockPoll::Cancelled | LockPoll::Expired => false,
                 LockPoll::Pending => !self.try_arm(name),
             }
         });
@@ -944,10 +1106,120 @@ impl HandleCache {
     }
 
     /// Release a lock acquired via [`HandleCache::submit`]/
-    /// [`HandleCache::poll_all`]/[`HandleCache::poll_ready`].
-    pub fn release(&mut self, name: &str) {
+    /// [`HandleCache::poll_all`]/[`HandleCache::poll_ready`]. On a
+    /// lease-enabled lock whose sweeper revoked this acquisition —
+    /// whether the session already observed the revocation through a
+    /// poll or is only finding out now — returns
+    /// [`LeaseError::Expired`] instead of panicking or silently
+    /// double-releasing: the sweeper already relayed the lock, and a
+    /// zombie's release must be a fenced no-op. The error is sticky
+    /// (a double release after a revoke errors again) until the next
+    /// submit of the name acknowledges it. Releasing a name that was
+    /// never minted or never held remains a caller bug (panic), as
+    /// before.
+    pub fn release(&mut self, name: &str) -> Result<(), LeaseError> {
+        if self.revoked.contains(name) {
+            return Err(LeaseError::Expired);
+        }
         let h = self.handles.get_mut(name).expect("release of unminted lock");
-        h.unlock();
+        match h.try_unlock() {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.revoked.insert(name.to_string());
+                self.expired.push(name.to_string());
+                Err(e)
+            }
+        }
+    }
+
+    /// Renew the lease of one acquisition this session drives —
+    /// pending or held (a critical-section holder's heartbeat). On a
+    /// fenced (revoked) acquisition the renewal fails, the handle is
+    /// parked back at idle, and the revocation is recorded exactly as
+    /// a poll observing [`LockPoll::Expired`] would. No-op `Ok` on
+    /// lease-less locks.
+    pub fn renew(&mut self, name: &str) -> Result<(), LeaseError> {
+        let Some(h) = self.handles.get_mut(name) else {
+            return Ok(());
+        };
+        let Some(a) = h.as_async() else {
+            return Ok(());
+        };
+        match a.renew_lease() {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if self.pending.contains(name) {
+                    self.mark_expired(name);
+                } else {
+                    self.revoked.insert(name.to_string());
+                    self.expired.push(name.to_string());
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Renew every pending acquisition's lease (the session heartbeat
+    /// `poll_ready` runs on its cadence; callers driving `poll_all`
+    /// don't need it — every poll renews). Revoked acquisitions are
+    /// resolved and reported through [`HandleCache::take_expired`].
+    /// Allocation-free on the all-live path (names are cloned only
+    /// for the rare revocations) — the heartbeat must not tax the
+    /// O(ready) poll loop it rides in.
+    pub fn renew_pending(&mut self) {
+        let mut revoked_now: Vec<String> = Vec::new();
+        for name in self.pending.iter() {
+            let h = self.handles.get_mut(name).expect("pending implies minted");
+            let Some(a) = h.as_async() else {
+                continue;
+            };
+            if a.renew_lease().is_err() {
+                revoked_now.push(name.clone());
+            }
+        }
+        for name in revoked_now {
+            self.mark_expired(&name);
+        }
+    }
+
+    /// Cadence of `poll_ready`'s lease heartbeat, in rounds (0
+    /// disables it — only safe when no lock this session touches has
+    /// leases enabled, or when the caller heartbeats explicitly).
+    pub fn set_lease_heartbeat(&mut self, every_rounds: u32) {
+        self.heartbeat_every = every_rounds;
+    }
+
+    /// Names whose acquisitions were revoked by the lease sweeper
+    /// since the last call (drained). A name here was silently removed
+    /// from the pending set — the caller decides whether to resubmit.
+    pub fn take_expired(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.expired)
+    }
+
+    /// Whether `name` currently waits on an armed wakeup registration.
+    pub fn is_armed(&self, name: &str) -> bool {
+        self.armed.contains_key(name)
+    }
+
+    /// Whether `name`'s parked acquisition has already received its
+    /// resolving handoff without having consumed it yet — the crash
+    /// harness's "mid-handoff" protocol point.
+    pub fn handoff_arrived(&mut self, name: &str) -> bool {
+        self.handles
+            .get_mut(name)
+            .and_then(|h| h.as_async())
+            .is_some_and(|a| a.has_pending_handoff())
+    }
+
+    /// Simulate this session's process dying mid-flight: every handle
+    /// — held locks, queued acquisitions, armed registrations, the
+    /// wakeup ring, the leased pid slots — is abandoned in place,
+    /// exactly what a crashed client leaves behind in the fabric.
+    /// Nothing is released or unlinked; only the lease sweeper can
+    /// repair what this session held. (The host-side memory is
+    /// intentionally leaked; register arenas never free anyway.)
+    pub fn crash(self) {
+        std::mem::forget(self);
     }
 
     /// Abandon an in-flight acquisition of `name`. If the handle was
@@ -1227,7 +1499,7 @@ mod tests {
         let mut sess = s.session(0);
         assert_eq!(sess.submit("solo").unwrap(), LockPoll::Held);
         assert_eq!(sess.pending_count(), 0);
-        sess.release("solo");
+        sess.release("solo").unwrap();
     }
 
     #[test]
@@ -1247,8 +1519,8 @@ mod tests {
         assert_eq!(waiter.pending_count(), 4);
         assert!(waiter.poll_all().is_empty(), "all four still held");
         // Release two; exactly those two resolve.
-        holder.release(&names[1]);
-        holder.release(&names[3]);
+        holder.release(&names[1]).unwrap();
+        holder.release(&names[3]).unwrap();
         let mut got = vec![];
         while got.len() < 2 {
             got.extend(waiter.poll_all());
@@ -1256,13 +1528,13 @@ mod tests {
         got.sort();
         assert_eq!(got, vec![names[1].clone(), names[3].clone()]);
         assert_eq!(waiter.pending_count(), 2);
-        waiter.release(&names[1]);
-        waiter.release(&names[3]);
-        holder.release(&names[0]);
-        holder.release(&names[2]);
+        waiter.release(&names[1]).unwrap();
+        waiter.release(&names[3]).unwrap();
+        holder.release(&names[0]).unwrap();
+        holder.release(&names[2]).unwrap();
         while waiter.pending_count() > 0 {
             for n in waiter.poll_all() {
-                waiter.release(&n);
+                waiter.release(&n).unwrap();
             }
         }
     }
@@ -1288,7 +1560,7 @@ mod tests {
         assert_eq!(w.submit("c").unwrap(), LockPoll::Pending);
         w.cancel("c"); // queued: cannot unlink; drains via poll_all
         assert_eq!(w.pending_count(), 1);
-        holder.release("c");
+        holder.release("c").unwrap();
         while w.pending_count() > 0 {
             assert!(w.poll_all().is_empty(), "cancelled: never reported held");
         }
@@ -1311,7 +1583,7 @@ mod tests {
         assert_eq!(w.submit("sc").unwrap(), LockPoll::Pending);
         w.cancel("sc"); // queued: cannot unlink, drains via poll
         assert_eq!(w.pending_count(), 1);
-        holder.release("sc");
+        holder.release("sc").unwrap();
         // Re-submit while the drain is unresolved: submit must finish
         // the drain AND start (or complete) the new acquisition.
         let mut polls = 0;
@@ -1320,11 +1592,12 @@ mod tests {
                 LockPoll::Held => break,
                 LockPoll::Pending => {}
                 LockPoll::Cancelled => panic!("fresh submit reported the drain"),
+                LockPoll::Expired => panic!("no leases enabled"),
             }
             polls += 1;
             assert!(polls < 10_000, "resubmit never acquired: wedged");
         }
-        w.release("sc");
+        w.release("sc").unwrap();
     }
 
     #[test]
@@ -1341,7 +1614,7 @@ mod tests {
         assert_eq!(w.submit("rd").unwrap(), LockPoll::Pending);
         w.cancel("rd"); // queued: drains via poll
         assert_eq!(w.submit("rd").unwrap(), LockPoll::Pending, "intent recorded");
-        holder.release("rd");
+        holder.release("rd").unwrap();
         let mut held = Vec::new();
         let mut rounds = 0;
         while held.is_empty() {
@@ -1350,7 +1623,7 @@ mod tests {
             assert!(rounds < 10_000, "resubmit intent lost: wedged");
         }
         assert_eq!(held, vec!["rd".to_string()]);
-        w.release("rd");
+        w.release("rd").unwrap();
         assert_eq!(w.pending_count(), 0);
     }
 
@@ -1372,7 +1645,7 @@ mod tests {
         }
         w.cancel("ri"); // armed drain: resolves through its token
         assert_eq!(w.submit("ri").unwrap(), LockPoll::Pending, "intent recorded");
-        holder.release("ri");
+        holder.release("ri").unwrap();
         let mut held = Vec::new();
         let mut rounds = 0;
         while held.is_empty() {
@@ -1381,7 +1654,7 @@ mod tests {
             assert!(rounds < 10_000, "resubmit intent lost in ready mode");
         }
         assert_eq!(held, vec!["ri".to_string()]);
-        w.release("ri");
+        w.release("ri").unwrap();
         assert_eq!(w.pending_count(), 0);
     }
 
@@ -1429,15 +1702,15 @@ mod tests {
         // so finish it directly; its (now stale) publication is
         // reclaimed by a later pop.
         for n in names {
-            holder.release(n);
+            holder.release(n).unwrap();
         }
         let a = w.handle(&victim).unwrap().as_async().unwrap();
         while a.poll_lock() == LockPoll::Pending {}
-        w.release(&victim);
+        w.release(&victim).unwrap();
         let mut done = 1;
         while done < names.len() {
             for n in w.poll_ready() {
-                w.release(&n);
+                w.release(&n).unwrap();
                 done += 1;
             }
         }
@@ -1472,7 +1745,7 @@ mod tests {
         }
         assert_eq!(w.handle_polls() - polls0, 0, "parked waiters were polled");
         // One release ⇒ exactly that name wakes, with O(1) polls.
-        holder.release(&names[2]);
+        holder.release(&names[2]).unwrap();
         let polls1 = w.handle_polls();
         let mut got = Vec::new();
         while got.is_empty() {
@@ -1480,17 +1753,17 @@ mod tests {
         }
         assert_eq!(got, vec![names[2].clone()]);
         assert!(w.handle_polls() - polls1 <= 2, "release woke O(1) polls");
-        w.release(&names[2]);
+        w.release(&names[2]).unwrap();
         // Drain everything so the sessions drop clean.
         for (i, n) in names.iter().enumerate() {
             if i != 2 {
-                holder.release(n);
+                holder.release(n).unwrap();
             }
         }
         let mut done = 1;
         while done < names.len() {
             for n in w.poll_ready() {
-                w.release(&n);
+                w.release(&n).unwrap();
                 done += 1;
             }
         }
@@ -1513,7 +1786,7 @@ mod tests {
         }
         w.cancel("cw"); // queued + armed: stays pending, drains via token
         assert_eq!(w.pending_count(), 1);
-        holder.release("cw");
+        holder.release("cw").unwrap();
         let mut rounds = 0;
         while w.pending_count() > 0 {
             assert!(w.poll_ready().is_empty(), "cancelled: never reported held");
@@ -1536,13 +1809,13 @@ mod tests {
         let mut w = s.session(1);
         assert_eq!(w.submit("se").unwrap(), LockPoll::Pending);
         assert!(w.poll_ready().is_empty());
-        holder.release("se");
+        holder.release("se").unwrap();
         let mut got = Vec::new();
         while got.is_empty() {
             got = w.poll_ready();
         }
         assert_eq!(got, vec!["se".to_string()]);
-        w.release("se");
+        w.release("se").unwrap();
     }
 
     #[test]

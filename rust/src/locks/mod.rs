@@ -48,6 +48,29 @@ impl Class {
     }
 }
 
+/// Error surfaced when an operation touches an acquisition whose lease
+/// the expiry sweeper has revoked (see `qplock`'s lease layer and
+/// [`SharedLock::sweep_leases`]). The revoked epoch is *fenced*: the
+/// operation that observed this error performed **no shared-state
+/// writes** — the sweeper already repaired the queue around the dead
+/// acquisition, and a zombie's late release/handoff is a no-op instead
+/// of a double grant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseError {
+    /// The acquisition's lease expired and its epoch was fenced.
+    Expired,
+}
+
+impl std::fmt::Display for LeaseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LeaseError::Expired => write!(f, "lease expired: epoch fenced by the sweeper"),
+        }
+    }
+}
+
+impl std::error::Error for LeaseError {}
+
 /// Outcome of one [`AsyncLockHandle::poll_lock`] step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LockPoll {
@@ -58,6 +81,11 @@ pub enum LockPoll {
     /// A cancelled acquisition finished draining: the handoff it was
     /// owed has been received and relayed, and the handle is idle again.
     Cancelled,
+    /// The acquisition's lease was revoked by the expiry sweeper: the
+    /// queue was repaired around this handle (any owed handoff is
+    /// relayed by the sweeper, not lost), no lock is held, and the
+    /// handle is idle again. Only surfaced by lease-enabled locks.
+    Expired,
 }
 
 impl LockPoll {
@@ -115,6 +143,18 @@ pub trait LockHandle: Send {
     fn lock(&mut self);
     /// Release the lock.
     fn unlock(&mut self);
+    /// Release the lock, surfacing a lease revocation instead of
+    /// corrupting the queue: on a lease-enabled lock whose sweeper
+    /// fenced this acquisition's epoch, the release performs no shared
+    /// writes (the sweeper already relayed the owed handoff) and
+    /// returns [`LeaseError::Expired`]. Lease-less algorithms — and
+    /// live leases — release normally. [`LockHandle::unlock`] is
+    /// `try_unlock().expect(..)`: callers that opted into leases must
+    /// use this method (or [`crate::coordinator::HandleCache::release`]).
+    fn try_unlock(&mut self) -> Result<(), LeaseError> {
+        self.unlock();
+        Ok(())
+    }
     /// Algorithm name (for reports).
     fn algorithm(&self) -> &'static str;
     /// Non-blocking view of this handle, if the algorithm supports
@@ -169,6 +209,67 @@ pub trait AsyncLockHandle: LockHandle {
     fn arm_wakeup(&mut self, _reg: WakeupReg) -> ArmOutcome {
         ArmOutcome::Unsupported
     }
+
+    /// Renew the current acquisition's lease without advancing the
+    /// protocol — the heartbeat an *armed* (unpolled) waiter or a
+    /// critical-section holder needs, since their renewals cannot ride
+    /// a poll. A local write on the process's own node, zero remote
+    /// verbs. Returns [`LeaseError::Expired`] — and parks the handle
+    /// back at idle — if the sweeper fenced the acquisition; no-op
+    /// `Ok` on lease-less locks or idle handles.
+    fn renew_lease(&mut self) -> Result<(), LeaseError> {
+        Ok(())
+    }
+
+    /// True iff this handle is parked on a wait whose resolving write
+    /// has already landed but has not been consumed by a poll yet
+    /// (qplock: `WaitBudget` with a written budget word). Crash
+    /// harnesses use this to target the "mid-handoff" protocol point.
+    fn has_pending_handoff(&self) -> bool {
+        false
+    }
+}
+
+/// Accounting for one lease-sweep pass (accumulated across locks and
+/// nodes by [`crate::coordinator::LockService::sweep_leases`]).
+#[derive(Default, Clone)]
+pub struct SweepStats {
+    /// Lease slots examined.
+    pub scanned: u64,
+    /// Slots with a live, unexpired lease.
+    pub live: u64,
+    /// Revocations performed: expired leases fenced this pass.
+    pub fenced: u64,
+    /// Owed handoffs relayed past dead owners to their successors.
+    pub relayed: u64,
+    /// Cohort tails cleared (dead owner with no successor).
+    pub released: u64,
+    /// Repairs completed (slot reaped; its handle may re-acquire).
+    pub reaped: u64,
+    /// Fenced waiters still awaiting the handoff the sweeper will relay.
+    pub watching: u64,
+    /// Fenced leaders whose Peterson win the sweeper is still awaiting
+    /// (plus successors caught mid-link).
+    pub engaged: u64,
+    /// Ticks from lease deadline to completed repair, per reaped slot —
+    /// the recovery-latency distribution E13 reports.
+    pub recovery_ticks: crate::stats::Histogram,
+}
+
+impl SweepStats {
+    /// Fold another pass's accounting into this one (the crash runner
+    /// aggregates across its sweeper thread's passes).
+    pub fn absorb(&mut self, other: &SweepStats) {
+        self.scanned += other.scanned;
+        self.live += other.live;
+        self.fenced += other.fenced;
+        self.relayed += other.relayed;
+        self.released += other.released;
+        self.reaped += other.reaped;
+        self.watching += other.watching;
+        self.engaged += other.engaged;
+        self.recovery_ticks.merge(&other.recovery_ticks);
+    }
 }
 
 /// The shared side of a lock: knows how to mint per-process handles.
@@ -181,6 +282,23 @@ pub trait SharedLock: Send + Sync {
     fn name(&self) -> &'static str;
     /// The node hosting the lock's registers.
     fn home(&self) -> NodeId;
+    /// Enable protocol-level leases: every acquisition through any
+    /// handle carries a lease of `ticks` (domain lease-clock units),
+    /// renewed by the owner's local writes and revocable by
+    /// [`SharedLock::sweep_leases`] once expired. Returns `false` if
+    /// the algorithm has no lease support (the default — the paper's
+    /// failure-free baselines stay untouched).
+    fn enable_leases(&self, _ticks: u64) -> bool {
+        false
+    }
+    /// One expiry-sweep pass over this lock's lease slots resident on
+    /// `ep`'s node: fence expired acquisitions and repair the queue
+    /// around them (relay owed handoffs, clear abandoned tails).
+    /// Sweepers are **per-node** agents: a slot is swept only by an
+    /// endpoint co-located with it, which is what keeps lease-word
+    /// arbitration CPU-only (Table-1 discipline) and descriptor reads
+    /// local. Callers must not run two sweeps of one lock concurrently.
+    fn sweep_leases(&self, _ep: &Endpoint, _now: u64, _stats: &mut SweepStats) {}
 }
 
 /// RAII guard over any handle.

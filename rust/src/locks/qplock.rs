@@ -30,7 +30,7 @@
 //!
 //! ```text
 //! home node:   victim | tail[LOCAL] | tail[REMOTE]          (1 word each)
-//! each proc:   desc = [ budget | next | wake-ring | wake-token ]
+//! each proc:   desc = [ budget | next | wake-ring | wake-token | lease ]
 //!                                                       (on its own node)
 //! ```
 //!
@@ -52,12 +52,55 @@
 //! Because the remote path waits by local spinning only, every poll of
 //! a parked waiter is a read of the process's own node — which is what
 //! lets one OS thread multiplex thousands of in-flight acquisitions.
+//!
+//! # Failure model: leases, fencing, and queue repair
+//!
+//! The paper's protocol is failure-free: a client that dies holding —
+//! or queued for — the lock wedges every later waiter. With
+//! [`QpLock::enable_leases`] (off by default; zero cost when off),
+//! each acquisition additionally carries a **lease word** in the
+//! descriptor: `epoch | phase | deadline`, written at submit and
+//! renewed by the owner's *local* writes on every poll (parked
+//! waiters), by the session heartbeat (armed waiters), and on the
+//! critical-section path (holders) — local-class processes stay at
+//! zero remote verbs, per the asymmetry discipline.
+//!
+//! A **per-node sweeper** ([`super::SharedLock::sweep_leases`], driven
+//! by the service) scans the lease slots resident on its own node.
+//! An expired lease is *fenced* by a CPU CAS on the lease word — the
+//! same word every owner-side update CASes, so owner and sweeper
+//! serialize on it: whoever wins owns the acquisition's continuation.
+//! A fenced (revoked) epoch's late operations are provable no-ops —
+//! the zombie's `try_unlock`/poll observes the fence *before* touching
+//! shared state and reports [`super::LeaseError::Expired`]. The
+//! sweeper then **repairs the queue** around the dead slot, by phase:
+//! a fenced parked waiter becomes a pass-through (the sweeper watches
+//! its budget word and relays the owed handoff — budget write + wakeup
+//! signal — to its successor, MCS-unlink by relay); a fenced leader's
+//! Peterson wait is completed by proxy (same reads the live leader
+//! would issue) before the relay; a dead holder's release is performed
+//! for it (relay, or tail reset when no successor waits). All repair
+//! RMWs go through each word's owning atomic unit
+//! ([`crate::rdma::RmwLane`]): per-node sweeping is what makes the
+//! lease word and local-cohort state CPU-only.
+//!
+//! **What leases do and do not guarantee** — see ROADMAP.md §Failure
+//! model. In short: crash-stop of *processes* at poll boundaries is
+//! recovered; mutual exclusion is preserved across revoke/fence
+//! (arbitration is the lease-word CAS, not check-then-act); a live
+//! process stalled beyond its lease term is treated as crashed —
+//! safely (its resumed operations are fenced) but its critical-section
+//! side effects are not rolled back, and whole-node failure (taking
+//! the sweeper with it) is out of scope.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use super::{ArmOutcome, AsyncLockHandle, Class, LockHandle, LockPoll, SharedLock, WakeupReg};
-use crate::rdma::{wakeup, Addr, Endpoint, NodeId, RdmaDomain};
+use super::{
+    ArmOutcome, AsyncLockHandle, Class, LeaseError, LockHandle, LockPoll, SharedLock, SweepStats,
+    WakeupReg,
+};
+use crate::rdma::{wakeup, Addr, Endpoint, NodeId, RdmaDomain, RmwLane};
 use crate::util::spin::Backoff;
 
 /// The paper's −1 sentinel for "waiting" in the budget word.
@@ -73,6 +116,108 @@ const WAKE_RING: u32 = 2;
 /// the high 32 bits (the producer's modulo base), the token to publish
 /// in the low 32.
 const WAKE_TOKEN: u32 = 3;
+
+/// Offset of the lease word (0 = no lease; see [`lease`]).
+const LEASE: u32 = 4;
+
+/// Descriptor size in words. Still a single cache line under the
+/// default line-padded arenas ([`crate::rdma::memory::WORDS_PER_LINE`]).
+const DESC_WORDS: u32 = 5;
+
+/// Lease-word encoding. One 8-byte register per descriptor carries the
+/// whole per-acquisition failure-detection state:
+///
+/// ```text
+/// bits 63..48  epoch     (per-handle acquisition counter mod 2^16, ≥ 1)
+/// bits 47..45  phase     (ENQ | WAIT | ENGAGE | HELD)
+/// bit  44      FENCED    (sweeper revoked this epoch)
+/// bit  43      REAPED    (repair finished; slot reusable)
+/// bits 42..0   deadline  (domain lease-clock ticks)
+/// ```
+///
+/// The 43-bit deadline spans the *clock*, not just the term: the
+/// domain lease clock is unbounded, and a deadline that saturated
+/// below the live clock would read as permanently expired — 2^43
+/// ticks is ~27 years at microsecond ticks, vs. the silent ~minutes
+/// horizon a 26-bit field would have had. The epoch wraps at 16 bits;
+/// it only needs to distinguish the slot's *current* acquisition
+/// (fence arbitration is by CAS on the exact word, not by epoch
+/// comparison), so wrap-around is harmless.
+///
+/// Only CPUs co-located with the descriptor ever touch the word — the
+/// owner (renew/claim CASes, submit/release writes) and its node's
+/// sweeper (fence CAS, repair-progress writes) — so its arbitration is
+/// a single atomic unit, never the Table-1 CPU/NIC mix. The `phase`
+/// tag is what tells the sweeper, post-mortem, which repair a dead
+/// acquisition needs; `FENCED` without `REAPED` marks a repair still
+/// in progress (the handle's next submit parks until the reap, so the
+/// zombie slot cannot be reused while it is still a queue
+/// pass-through).
+pub(crate) mod lease {
+    pub const PHASE_ENQ: u64 = 1;
+    pub const PHASE_WAIT: u64 = 2;
+    pub const PHASE_ENGAGE: u64 = 3;
+    pub const PHASE_HELD: u64 = 4;
+
+    const EPOCH_SHIFT: u32 = 48;
+    const PHASE_SHIFT: u32 = 45;
+    const PHASE_MASK: u64 = 0x7 << PHASE_SHIFT;
+    const FENCED_BIT: u64 = 1 << 44;
+    const REAPED_BIT: u64 = 1 << 43;
+    pub const DEADLINE_MASK: u64 = (1 << 43) - 1;
+    pub const EPOCH_MASK: u32 = 0xFFFF;
+
+    #[inline]
+    pub fn pack(epoch: u32, phase: u64, deadline: u64) -> u64 {
+        debug_assert!(epoch >= 1 && epoch <= EPOCH_MASK);
+        ((epoch as u64) << EPOCH_SHIFT) | (phase << PHASE_SHIFT) | deadline.min(DEADLINE_MASK)
+    }
+
+    #[inline]
+    pub fn epoch(w: u64) -> u32 {
+        (w >> EPOCH_SHIFT) as u32
+    }
+
+    #[inline]
+    pub fn phase(w: u64) -> u64 {
+        (w & PHASE_MASK) >> PHASE_SHIFT
+    }
+
+    #[inline]
+    pub fn fenced(w: u64) -> bool {
+        w & FENCED_BIT != 0
+    }
+
+    #[inline]
+    pub fn reaped(w: u64) -> bool {
+        w & REAPED_BIT != 0
+    }
+
+    #[inline]
+    pub fn deadline(w: u64) -> u64 {
+        w & DEADLINE_MASK
+    }
+
+    /// The sweeper's revocation: same word, `FENCED` set (deadline kept
+    /// — it timestamps the expiry for recovery-latency accounting).
+    #[inline]
+    pub fn fence(w: u64) -> u64 {
+        w | FENCED_BIT
+    }
+
+    /// Repair finished: the slot is inert and the handle may re-submit.
+    #[inline]
+    pub fn reap(w: u64) -> u64 {
+        w | REAPED_BIT
+    }
+
+    /// Sweeper-side repair-progress transition (e.g. a fenced waiter
+    /// whose exhausted handoff turns it into a fenced leader).
+    #[inline]
+    pub fn with_phase(w: u64, phase: u64) -> u64 {
+        (w & !PHASE_MASK) | (phase << PHASE_SHIFT)
+    }
+}
 
 /// The one shared identity of a qplock: the three home-node registers,
 /// the configured `kInitBudget`, and host-side per-lock state. Held by
@@ -101,6 +246,16 @@ pub struct QpInner {
     /// budget write) pair under the same SC argument as the wake words
     /// themselves, so gating cannot lose a wakeup.
     wakeups: AtomicBool,
+    /// Lease term in domain lease-clock ticks; 0 = leases disabled
+    /// (the paper's failure-free protocol, bit-for-bit: no lease word
+    /// is ever written and no extra ops run on any path).
+    lease_ticks: AtomicU64,
+    /// Every descriptor ever minted for this lock — the client table
+    /// the expiry sweeper scans. Host-side registry (like the
+    /// contention counters); deployment-wise, the lock service's
+    /// session records. Grows once per handle mint, never on the
+    /// acquisition hot path.
+    slots: Mutex<Vec<Addr>>,
 }
 
 /// Shared side of a qplock: three registers on the home node plus the
@@ -129,12 +284,19 @@ impl QpLock {
                 contended: AtomicU64::new(0),
                 handles_minted: AtomicU64::new(0),
                 wakeups: AtomicBool::new(false),
+                lease_ticks: AtomicU64::new(0),
+                slots: Mutex::new(Vec::new()),
             }),
         })
     }
 
     pub fn init_budget(&self) -> u64 {
         self.inner.init_budget
+    }
+
+    /// Lease term in domain lease-clock ticks (0 = leases off).
+    pub fn lease_ticks(&self) -> u64 {
+        self.inner.lease_ticks.load(SeqCst)
     }
 
     /// Acquisitions (across *all* handles of this lock) that enqueued
@@ -160,9 +322,11 @@ impl QpInner {
     fn mint(self: &Arc<Self>, ep: Endpoint) -> QpHandle {
         self.handles_minted.fetch_add(1, Relaxed);
         let class = Class::of(&ep, self.home);
-        // budget, next, wake ring, wake token — always on the caller's
-        // node (waiting *and* wakeup registration are local state).
-        let desc = ep.alloc(4);
+        // budget, next, wake ring, wake token, lease — always on the
+        // caller's node (waiting, wakeup registration, and lease
+        // renewal are all local state).
+        let desc = ep.alloc(DESC_WORDS);
+        self.slots.lock().unwrap().push(desc);
         QpHandle {
             shared: Arc::clone(self),
             ep,
@@ -170,7 +334,207 @@ impl QpInner {
             desc,
             state: AcqState::Idle,
             abandoning: false,
+            epoch: 0,
+            lease_active: false,
         }
+    }
+
+    #[inline]
+    fn class_of_desc(&self, desc: Addr) -> Class {
+        if desc.node() == self.home {
+            Class::Local
+        } else {
+            Class::Remote
+        }
+    }
+
+    // ---- expiry sweeper (per-node agent; see the module docs) ----
+
+    /// One sweep pass over this lock's lease slots on `ep`'s node.
+    /// Iterates under the slot-table mutex (no per-pass snapshot
+    /// allocation — the sweeper runs every few hundred microseconds);
+    /// the mutex only ever contends with the cold mint path.
+    fn sweep_node(&self, ep: &Endpoint, now: u64, stats: &mut SweepStats) {
+        if self.lease_ticks.load(SeqCst) == 0 {
+            return;
+        }
+        let slots = self.slots.lock().unwrap();
+        for desc in slots.iter().copied() {
+            if desc.node() != ep.node() {
+                continue;
+            }
+            stats.scanned += 1;
+            self.sweep_slot(ep, desc, now, stats);
+        }
+    }
+
+    /// Examine one co-located lease slot: fence it if expired, and
+    /// advance any in-progress repair. Every access to the descriptor
+    /// is a local CPU op (the slot lives on the sweeper's node).
+    fn sweep_slot(&self, ep: &Endpoint, desc: Addr, now: u64, stats: &mut SweepStats) {
+        let la = desc.offset(LEASE);
+        let w = ep.read(la);
+        if w == 0 || lease::reaped(w) {
+            return; // idle slot, or repair already finished
+        }
+        if !lease::fenced(w) {
+            if lease::deadline(w) >= now {
+                stats.live += 1;
+                return;
+            }
+            // Expired: revoke by CAS — the owner's renewals and release
+            // claim CAS the same word, so exactly one side wins this
+            // epoch. Losing here means the owner renewed or released
+            // concurrently; nothing to do.
+            let fenced = lease::fence(w);
+            if ep.cas(la, w, fenced) != w {
+                return;
+            }
+            stats.fenced += 1;
+            // A revoked waiter must not be signalled: clear its wakeup
+            // registration so the relayed handoff publishes the
+            // *successor's* token, not the zombie's. (A token already
+            // published for the zombie is discarded by its session's
+            // stale-epoch cross-check.)
+            ep.write(desc.offset(WAKE_RING), 0);
+            self.repair(ep, desc, fenced, now, stats);
+        } else {
+            self.repair(ep, desc, w, now, stats);
+        }
+    }
+
+    /// Advance the repair of a fenced slot, by crash phase. Idempotent
+    /// across sweeps: progress is recorded in the lease word itself
+    /// (phase transitions, final `REAPED`), and each relay happens
+    /// exactly once because only the single per-node sweeper writes
+    /// fenced words.
+    fn repair(&self, ep: &Endpoint, desc: Addr, w: u64, now: u64, stats: &mut SweepStats) {
+        match lease::phase(w) {
+            // Crashed before its tail CAS landed: never queue-visible,
+            // nothing shared to repair.
+            lease::PHASE_ENQ => self.reap(ep, desc, w, now, stats),
+            lease::PHASE_WAIT => {
+                let b = ep.read(desc);
+                if b == WAITING {
+                    // The owed handoff has not landed yet; the dead
+                    // waiter is now a pass-through — watch its budget
+                    // word (local read per sweep) and relay on arrival.
+                    stats.watching += 1;
+                    return;
+                }
+                if b == 0 {
+                    // Handoff arrived exhausted: perform the dead
+                    // waiter's Reacquire yield (victim write) and
+                    // continue as a fenced leader next pass.
+                    let cls = self.class_of_desc(desc);
+                    ep.write_best(self.victim, cls.idx() as u64);
+                    ep.write(desc.offset(LEASE), lease::with_phase(w, lease::PHASE_ENGAGE));
+                    stats.engaged += 1;
+                    return;
+                }
+                self.relay(ep, desc, w, b - 1, now, stats);
+            }
+            lease::PHASE_ENGAGE => {
+                // Complete the dead leader's Peterson wait by proxy:
+                // the exact reads (and win condition) the live leader's
+                // `step_peterson` issues.
+                let cls = self.class_of_desc(desc);
+                let other_locked = ep.read_best(self.tail[1 - cls.idx()]) != 0;
+                if other_locked && ep.read_best(self.victim) == cls.idx() as u64 {
+                    stats.engaged += 1;
+                    return; // still waiting; retry next sweep
+                }
+                // Won: the refilled budget minus the handoff, exactly
+                // what a live Reacquire → unlock sequence would pass.
+                self.relay(ep, desc, w, self.init_budget - 1, now, stats);
+            }
+            lease::PHASE_HELD => {
+                let b = ep.read(desc);
+                debug_assert!(b >= 1 && b != WAITING, "held implies a live budget");
+                self.relay(ep, desc, w, b - 1, now, stats);
+            }
+            _ => debug_assert!(false, "corrupt lease word {w:#x}"),
+        }
+    }
+
+    /// The dead slot's release, performed by the sweeper: pass `pass`
+    /// to the successor (plus its wakeup signal) or clear the cohort
+    /// tail — `q_unlock` by proxy, with every RMW routed through the
+    /// word's owning atomic unit.
+    fn relay(
+        &self,
+        ep: &Endpoint,
+        desc: Addr,
+        w: u64,
+        pass: u64,
+        now: u64,
+        stats: &mut SweepStats,
+    ) {
+        let cls = self.class_of_desc(desc);
+        if ep.read(desc.offset(NEXT)) == 0 {
+            // tail[LOCAL] is owned by co-located CPUs (and a local-class
+            // slot implies this sweeper runs on the home node);
+            // tail[REMOTE] is NIC-owned — rCAS even from the home node.
+            let lane = match cls {
+                Class::Local => RmwLane::Cpu,
+                Class::Remote => RmwLane::Nic,
+            };
+            if ep.cas_lane(self.tail[cls.idx()], desc.to_bits(), 0, lane) == desc.to_bits() {
+                stats.released += 1;
+                self.reap(ep, desc, w, now, stats);
+                return;
+            }
+            if ep.read(desc.offset(NEXT)) == 0 {
+                // A successor is between its tail CAS and its link
+                // write; it is live (the link lands within its own
+                // poll), so pick it up next sweep instead of spinning.
+                stats.engaged += 1;
+                return;
+            }
+        }
+        let next = Addr::from_bits(ep.read(desc.offset(NEXT)));
+        debug_assert!(pass != WAITING);
+        ep.write_best(next, pass);
+        if self.wakeups.load(SeqCst) {
+            self.signal_from(ep, next);
+        }
+        stats.relayed += 1;
+        self.reap(ep, desc, w, now, stats);
+    }
+
+    /// Repair finished: mark the slot reaped (its handle may start a
+    /// fresh acquisition) and record the recovery latency.
+    fn reap(&self, ep: &Endpoint, desc: Addr, w: u64, now: u64, stats: &mut SweepStats) {
+        ep.write(desc.offset(LEASE), lease::reap(w));
+        stats.reaped += 1;
+        stats
+            .recovery_ticks
+            .record(now.saturating_sub(lease::deadline(w)));
+    }
+
+    /// The sweeper-side mirror of `QpHandle::signal_successor`: publish
+    /// the relayed-to waiter's wakeup token, dispatching by the ring's
+    /// actual locality (the ring's CPU lane belongs to CPUs on the
+    /// session's node; everyone else claims through its NIC lane).
+    fn signal_from(&self, ep: &Endpoint, next: Addr) {
+        let ring_bits = ep.read_best(next.offset(WAKE_RING));
+        if ring_bits == 0 {
+            return;
+        }
+        let token_word = ep.read_best(next.offset(WAKE_TOKEN));
+        let (slots, token) = (token_word >> 32, token_word & 0xFFFF_FFFF);
+        if slots == 0 {
+            return;
+        }
+        let hdr = Addr::from_bits(ring_bits);
+        let (cursor, lane_base, lane) = if ep.is_local(hdr) {
+            (wakeup::CPU_CURSOR_WORD, 0, RmwLane::Cpu)
+        } else {
+            (wakeup::NIC_CURSOR_WORD, slots as u32, RmwLane::Nic)
+        };
+        let claimed = ep.faa_lane(hdr.offset(cursor), 1, lane);
+        let slot = hdr.offset(wakeup::HDR_WORDS + lane_base + (claimed % slots) as u32);
+        ep.write_best(slot, token + 1);
     }
 }
 
@@ -191,6 +555,20 @@ impl SharedLock for QpLock {
 
     fn home(&self) -> NodeId {
         self.inner.home
+    }
+
+    fn enable_leases(&self, ticks: u64) -> bool {
+        assert!(ticks >= 1, "a lease term must be at least one tick");
+        assert!(
+            ticks <= lease::DEADLINE_MASK / 2,
+            "lease term overflows the deadline field"
+        );
+        self.inner.lease_ticks.store(ticks, SeqCst);
+        true
+    }
+
+    fn sweep_leases(&self, ep: &Endpoint, now: u64, stats: &mut SweepStats) {
+        self.inner.sweep_node(ep, now, stats);
     }
 }
 
@@ -234,6 +612,11 @@ pub struct QpHandle {
     /// on reaching `Held` the handle releases immediately instead of
     /// reporting ownership (the drain keeps the handoff chain intact).
     abandoning: bool,
+    /// Acquisition counter; the epoch the current lease word carries.
+    epoch: u32,
+    /// The current acquisition carries a lease (snapshotted at submit,
+    /// so enabling leases mid-acquisition cannot half-cover one).
+    lease_active: bool,
 }
 
 impl QpHandle {
@@ -309,6 +692,58 @@ impl QpHandle {
         }
     }
 
+    // ---- lease layer (owner side; all ops local to this process) ----
+
+    /// Renew the current lease and record `phase` — the owner's half of
+    /// the lease-word arbitration. A read + CAS on the process's own
+    /// node (zero remote verbs); losing the CAS means the sweeper
+    /// fenced this epoch, i.e. the acquisition is revoked.
+    fn lease_update(&mut self, phase: u64) -> Result<(), LeaseError> {
+        if !self.lease_active {
+            return Ok(());
+        }
+        let a = self.desc.offset(LEASE);
+        let cur = self.ep.read(a);
+        if lease::fenced(cur) {
+            return Err(LeaseError::Expired);
+        }
+        debug_assert_eq!(lease::epoch(cur), self.epoch, "foreign epoch in lease word");
+        let deadline = self.ep.domain().lease_now() + self.shared.lease_ticks.load(SeqCst);
+        let next = lease::pack(self.epoch, phase, deadline);
+        if self.ep.cas(a, cur, next) != cur {
+            return Err(LeaseError::Expired);
+        }
+        Ok(())
+    }
+
+    /// Claim the release: live lease → 0. Whoever wins this word owns
+    /// the continuation — on `Ok` the sweeper can never revoke this
+    /// epoch (it only fences live-expired words), so the caller's
+    /// `q_unlock` writes are safe; on `Err` the sweeper owns it and
+    /// the caller must not touch shared state.
+    fn lease_release_claim(&mut self) -> Result<(), LeaseError> {
+        if !self.lease_active {
+            return Ok(());
+        }
+        self.lease_active = false;
+        let a = self.desc.offset(LEASE);
+        let cur = self.ep.read(a);
+        if lease::fenced(cur) || self.ep.cas(a, cur, 0) != cur {
+            return Err(LeaseError::Expired);
+        }
+        Ok(())
+    }
+
+    /// The sweeper revoked this acquisition: park the handle back at
+    /// idle without touching shared state (the sweeper repairs the
+    /// queue around the fenced slot).
+    fn lease_expired(&mut self) -> LockPoll {
+        self.abandoning = false;
+        self.lease_active = false;
+        self.state = AcqState::Idle;
+        LockPoll::Expired
+    }
+
     // ---- budgeted MCS cohort lock (paper Algorithm 2), poll steps ----
 
     /// Submit: initialize the descriptor and enter `Enqueue`. Runs the
@@ -327,6 +762,24 @@ impl QpHandle {
         // the instant the tail CAS lands. The wakeup registration is
         // per-acquisition state: clear any stale one from a previous
         // parked wait before a predecessor can observe it.
+        if self.shared.lease_ticks.load(SeqCst) > 0 {
+            let a = self.desc.offset(LEASE);
+            let cur = self.ep.read(a);
+            if lease::fenced(cur) && !lease::reaped(cur) {
+                // The previous acquisition was revoked and its repair
+                // is still in flight: the descriptor is a live queue
+                // pass-through the sweeper (and a predecessor's
+                // handoff) still write. Reusing it now would corrupt
+                // the relay — park until the sweeper reaps the slot.
+                return LockPoll::Pending;
+            }
+            self.epoch = (self.epoch.wrapping_add(1) & lease::EPOCH_MASK).max(1);
+            self.lease_active = true;
+            let deadline = self.ep.domain().lease_now() + self.shared.lease_ticks.load(SeqCst);
+            self.ep.write(a, lease::pack(self.epoch, lease::PHASE_ENQ, deadline));
+        } else {
+            self.lease_active = false;
+        }
         self.ep.write_desc(self.desc.offset(NEXT), 0);
         self.ep.write_desc(self.desc.offset(WAKE_RING), 0);
         self.state = AcqState::Enqueue { curr: 0 };
@@ -346,6 +799,13 @@ impl QpHandle {
         let AcqState::Enqueue { curr } = self.state else {
             unreachable!("step_enqueue outside Enqueue");
         };
+        // Renew first: the fresh deadline covers this whole step (a
+        // lease term must outlive a poll step — ROADMAP §Failure
+        // model), so the sweeper cannot fence us between the CAS below
+        // landing and the phase tag catching up.
+        if self.lease_update(lease::PHASE_ENQ).is_err() {
+            return self.lease_expired();
+        }
         let tail = self.shared.tail[self.class.idx()];
         let seen = self.home_cas(tail, curr, self.desc.to_bits());
         if seen != curr {
@@ -372,8 +832,12 @@ impl QpHandle {
 
     /// One probe of our own budget word (Algorithm 2 line 10) — a local
     /// read on the process's node, never a remote verb, no matter how
-    /// many times a multiplexer polls a parked waiter.
+    /// many times a multiplexer polls a parked waiter. With leases on,
+    /// each poll also renews the lease — still purely local ops.
     fn step_wait_budget(&mut self) -> LockPoll {
+        if self.lease_update(lease::PHASE_WAIT).is_err() {
+            return self.lease_expired();
+        }
         let budget = self.ep.read_desc(self.desc);
         if budget == WAITING {
             return LockPoll::Pending;
@@ -393,6 +857,9 @@ impl QpHandle {
     /// both `EngagePeterson` (leader) and `Reacquire` (budget
     /// exhaustion); the latter refills the budget word on completion.
     fn step_peterson(&mut self) -> LockPoll {
+        if self.lease_update(lease::PHASE_ENGAGE).is_err() {
+            return self.lease_expired();
+        }
         let me = self.class.idx() as u64;
         if self.other_cohort_locked() && self.home_read(self.shared.victim) == me {
             return LockPoll::Pending;
@@ -406,11 +873,21 @@ impl QpHandle {
     /// The acquisition just completed. Normally: report `Held`. Under a
     /// pending cancellation: release immediately — the handoff we were
     /// owed is relayed to any successor — and report `Cancelled`.
+    /// The HELD lease transition is the ownership commit point: losing
+    /// it to the sweeper's fence means the sweeper owns (and relays)
+    /// this acquisition, so we back off without entering — exactly one
+    /// side ever grants, the no-double-grant half of the fence.
     fn finish_acquisition(&mut self) -> LockPoll {
+        if self.lease_update(lease::PHASE_HELD).is_err() {
+            return self.lease_expired();
+        }
         self.state = AcqState::Held;
         if self.abandoning {
             self.abandoning = false;
             self.state = AcqState::Idle;
+            if self.lease_release_claim().is_err() {
+                return LockPoll::Expired;
+            }
             self.q_unlock();
             return LockPoll::Cancelled;
         }
@@ -498,17 +975,46 @@ impl LockHandle for QpHandle {
     fn lock(&mut self) {
         debug_assert_eq!(self.state, AcqState::Idle, "lock() while acquiring");
         let mut bo = Backoff::default();
-        while self.poll_lock().is_pending() {
-            bo.snooze();
+        loop {
+            match self.poll_lock() {
+                LockPoll::Held => return,
+                LockPoll::Pending => bo.snooze(),
+                // A blocking waiter renews on every poll, so a
+                // revocation here means it was starved past its whole
+                // lease term; returning normally would let the caller
+                // "hold" a lock the sweeper gave away. Fail loudly —
+                // crash-tolerant callers use the poll API.
+                LockPoll::Expired => panic!("blocking lock() revoked by the lease sweeper"),
+                LockPoll::Cancelled => unreachable!("blocking lock() cannot be cancelled"),
+            }
         }
     }
 
     /// `pUnlock()` (Algorithm 1): release the cohort lock; releasing the
-    /// tail releases the Peterson flag implicitly.
+    /// tail releases the Peterson flag implicitly. On a lease-enabled
+    /// lock a revoked holder must use [`LockHandle::try_unlock`]; a
+    /// plain `unlock` of a fenced acquisition fails loudly rather than
+    /// double-releasing a queue the sweeper already repaired.
     fn unlock(&mut self) {
+        self.try_unlock()
+            .expect("unlock() of a lease-revoked acquisition: use try_unlock()/release()");
+    }
+
+    /// Release, surfacing a fenced (revoked) epoch as an error instead
+    /// of a queue corruption. The release claim — a local CAS taking
+    /// the live lease word to 0 — is the arbitration: winning it makes
+    /// this epoch unrevokable, so the `q_unlock` writes that follow
+    /// can never race a sweeper repair; losing it means the sweeper
+    /// already owns (and relays) the release, and this call is the
+    /// zombie's provably-fenced no-op.
+    fn try_unlock(&mut self) -> Result<(), LeaseError> {
         debug_assert_eq!(self.state, AcqState::Held, "unlock() without holding");
         self.state = AcqState::Idle;
+        if self.lease_release_claim().is_err() {
+            return Err(LeaseError::Expired);
+        }
         self.q_unlock();
+        Ok(())
     }
 
     fn algorithm(&self) -> &'static str {
@@ -527,7 +1033,15 @@ impl AsyncLockHandle for QpHandle {
             AcqState::Enqueue { .. } => self.step_enqueue(),
             AcqState::WaitBudget => self.step_wait_budget(),
             AcqState::Reacquire | AcqState::EngagePeterson => self.step_peterson(),
-            AcqState::Held => LockPoll::Held,
+            AcqState::Held => {
+                // Polling a held lock renews its lease (a holder that
+                // keeps polling never spuriously expires); a fence
+                // here means the sweeper revoked us mid-hold.
+                if self.lease_update(lease::PHASE_HELD).is_err() {
+                    return self.lease_expired();
+                }
+                LockPoll::Held
+            }
         }
     }
 
@@ -549,10 +1063,13 @@ impl AsyncLockHandle for QpHandle {
                 self.abandoning = true;
                 false
             }
-            // Already held: cancelling releases on the spot.
+            // Already held: cancelling releases on the spot (a fenced
+            // epoch's release is the sweeper's — skip it either way).
             AcqState::Held => {
                 self.state = AcqState::Idle;
-                self.q_unlock();
+                if self.lease_release_claim().is_ok() {
+                    self.q_unlock();
+                }
                 true
             }
         }
@@ -573,6 +1090,12 @@ impl AsyncLockHandle for QpHandle {
         // passer writes for them — those must keep being polled.
         if self.state != AcqState::WaitBudget {
             return ArmOutcome::Unsupported;
+        }
+        // A revoked waiter must not park on a token the sweeper's
+        // relay will never publish for it: have the caller poll now
+        // (the poll surfaces `Expired`).
+        if self.lease_active && lease::fenced(self.ep.read(self.desc.offset(LEASE))) {
+            return ArmOutcome::AlreadyReady;
         }
         // Token first, ring last: the passer reads the ring word and
         // only then the token. SeqCst stores/loads (`write`/`read`,
@@ -602,6 +1125,30 @@ impl AsyncLockHandle for QpHandle {
             return ArmOutcome::AlreadyReady;
         }
         ArmOutcome::Armed
+    }
+
+    fn renew_lease(&mut self) -> Result<(), LeaseError> {
+        if !self.lease_active {
+            return Ok(());
+        }
+        let phase = match self.state {
+            AcqState::Idle => return Ok(()),
+            AcqState::Enqueue { .. } => lease::PHASE_ENQ,
+            AcqState::WaitBudget => lease::PHASE_WAIT,
+            AcqState::Reacquire | AcqState::EngagePeterson => lease::PHASE_ENGAGE,
+            AcqState::Held => lease::PHASE_HELD,
+        };
+        match self.lease_update(phase) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.lease_expired();
+                Err(e)
+            }
+        }
+    }
+
+    fn has_pending_handoff(&self) -> bool {
+        self.state == AcqState::WaitBudget && self.ep.read_desc(self.desc) != WAITING
     }
 }
 
@@ -913,6 +1460,7 @@ mod tests {
                 LockPoll::Cancelled => break,
                 LockPoll::Pending => polls += 1,
                 LockPoll::Held => panic!("cancelled acquisition reported Held"),
+                LockPoll::Expired => panic!("no leases enabled"),
             }
             assert!(polls < 10_000, "drain never completed");
         }
@@ -1018,6 +1566,139 @@ mod tests {
         assert_eq!(blocking.remote_cas, polled.remote_cas);
         assert_eq!(blocking.remote_read, polled.remote_read);
         assert_eq!(blocking.remote_write, polled.remote_write);
+    }
+
+    #[test]
+    fn lease_word_packing_roundtrips() {
+        let w = lease::pack(7, lease::PHASE_WAIT, 12345);
+        assert_eq!(lease::epoch(w), 7);
+        assert_eq!(lease::phase(w), lease::PHASE_WAIT);
+        assert_eq!(lease::deadline(w), 12345);
+        assert!(!lease::fenced(w) && !lease::reaped(w));
+        let f = lease::fence(w);
+        assert!(lease::fenced(f) && !lease::reaped(f));
+        assert_eq!(lease::deadline(f), 12345, "fence keeps the expiry stamp");
+        let r = lease::reap(f);
+        assert!(lease::fenced(r) && lease::reaped(r));
+        let e = lease::with_phase(f, lease::PHASE_ENGAGE);
+        assert_eq!(lease::phase(e), lease::PHASE_ENGAGE);
+        assert!(lease::fenced(e));
+        // Deadline saturates instead of corrupting the flag bits.
+        let sat = lease::pack(1, lease::PHASE_HELD, u64::MAX);
+        assert_eq!(lease::deadline(sat), lease::DEADLINE_MASK);
+        assert!(!lease::fenced(sat) && !lease::reaped(sat));
+    }
+
+    #[test]
+    fn leases_keep_local_class_off_the_nic() {
+        // Lease renewal/claim is descriptor-local: a lease-enabled lock
+        // must preserve the paper's zero-local-RDMA headline.
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        assert!(l.enable_leases(64));
+        assert_eq!(l.lease_ticks(), 64);
+        let mut h = l.qp_handle(d.endpoint(0));
+        for _ in 0..100 {
+            h.lock();
+            h.unlock();
+        }
+        let s = h.ep.metrics.snapshot();
+        assert_eq!(s.remote_total(), 0, "lease ops must stay local");
+        assert_eq!(s.loopback, 0);
+    }
+
+    #[test]
+    fn release_clears_the_lease_word() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        assert!(l.enable_leases(64));
+        let mut h = l.qp_handle(d.endpoint(1));
+        assert_eq!(h.poll_lock(), LockPoll::Held);
+        let lw = d.peek(h.desc.offset(LEASE));
+        assert_eq!(lease::epoch(lw), 1);
+        assert_eq!(lease::phase(lw), lease::PHASE_HELD);
+        h.unlock();
+        assert_eq!(d.peek(h.desc.offset(LEASE)), 0, "release claims the word");
+        // A second acquisition mints the next epoch.
+        assert_eq!(h.poll_lock(), LockPoll::Held);
+        assert_eq!(lease::epoch(d.peek(h.desc.offset(LEASE))), 2);
+        h.unlock();
+    }
+
+    #[test]
+    fn zombie_unlock_after_revoke_is_a_fenced_noop() {
+        // The core fence proof at handle level: a holder whose lease
+        // the sweeper revoked (and whose lock was relayed to a waiting
+        // successor) must observe Expired from try_unlock and touch no
+        // shared state — no double grant, and the successor's ownership
+        // survives the zombie's late write attempt.
+        let d = RdmaDomain::new(2, 2048, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        assert!(l.enable_leases(10));
+        let mut zombie = l.qp_handle(d.endpoint(1));
+        let mut waiter = l.qp_handle(d.endpoint(1));
+        assert_eq!(zombie.poll_lock(), LockPoll::Held);
+        while waiter.acq_state() != AcqState::WaitBudget {
+            assert_eq!(waiter.poll_lock(), LockPoll::Pending);
+        }
+        // The zombie stops renewing; the clock passes its deadline. The
+        // live waiter keeps polling (each parked poll renews), so only
+        // the zombie expires.
+        let now = d.advance_lease_clock(100);
+        assert_eq!(waiter.poll_lock(), LockPoll::Pending);
+        let mut stats = SweepStats::default();
+        l.sweep_leases(&d.endpoint(1), now, &mut stats);
+        assert_eq!(stats.fenced, 1);
+        assert_eq!(stats.relayed, 1, "handoff relayed to the waiter");
+        assert_eq!(stats.reaped, 1);
+        // The waiter (renewing via its polls) now owns the lock.
+        assert_eq!(waiter.poll_lock(), LockPoll::Held);
+        // The zombie wakes and tries its late release: fenced no-op.
+        assert_eq!(zombie.try_unlock(), Err(LeaseError::Expired));
+        // The waiter's ownership is intact; its release works.
+        waiter.unlock();
+        // The zombie's handle is reusable (slot reaped, fresh epoch).
+        zombie.lock();
+        zombie.unlock();
+    }
+
+    #[test]
+    fn expired_parked_waiter_poll_returns_expired_and_recovers() {
+        let d = RdmaDomain::new(2, 2048, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        assert!(l.enable_leases(10));
+        let mut holder = l.qp_handle(d.endpoint(1));
+        let mut dead = l.qp_handle(d.endpoint(1));
+        let mut live = l.qp_handle(d.endpoint(1));
+        holder.lock();
+        while dead.acq_state() != AcqState::WaitBudget {
+            assert_eq!(dead.poll_lock(), LockPoll::Pending);
+        }
+        while live.acq_state() != AcqState::WaitBudget {
+            assert_eq!(live.poll_lock(), LockPoll::Pending);
+        }
+        // `dead` stops polling; `live` and the holder keep renewing
+        // (parked polls and held polls both renew) across the expiry.
+        let now = d.advance_lease_clock(100);
+        assert_eq!(holder.poll_lock(), LockPoll::Held);
+        assert_eq!(live.poll_lock(), LockPoll::Pending);
+        let mut stats = SweepStats::default();
+        l.sweep_leases(&d.endpoint(1), now, &mut stats);
+        assert_eq!(stats.fenced, 1, "only the silent waiter is revoked");
+        assert_eq!(stats.watching, 1, "its handoff has not arrived yet");
+        // The holder releases: the handoff lands in the dead slot; the
+        // next sweep relays it to `live` (unlink by relay).
+        holder.unlock();
+        let mut stats = SweepStats::default();
+        l.sweep_leases(&d.endpoint(1), d.lease_now(), &mut stats);
+        assert_eq!(stats.relayed, 1);
+        assert_eq!(live.poll_lock(), LockPoll::Held, "survivor got the handoff");
+        // The dead waiter's own poll observes the revocation.
+        assert_eq!(dead.poll_lock(), LockPoll::Expired);
+        assert!(!dead.is_acquiring());
+        live.unlock();
+        dead.lock();
+        dead.unlock();
     }
 
     #[test]

@@ -7,8 +7,9 @@ use std::time::Duration;
 use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
 use qplock::cli::{Args, HELP};
 use qplock::coordinator::{
-    lock_name, ready_list_probe, run_multi_lock_workload, run_multiplexed_workload_mode,
-    run_workload, Cluster, CsWork, LockService, PollMode, Workload,
+    lock_name, ready_list_probe, run_crash_workload, run_multi_lock_workload,
+    run_multiplexed_workload_mode, run_workload, Cluster, CrashPlan, CrashPoint, CsWork,
+    LockService, PollMode, Workload,
 };
 use qplock::locks::{make_lock, Class, ALGORITHMS};
 use qplock::mc::{self, models};
@@ -22,6 +23,7 @@ fn main() {
         Some("multi-lock") => cmd_multi_lock(&args),
         Some("async") => cmd_async(&args),
         Some("ready") => cmd_ready(&args),
+        Some("crash") => cmd_crash(&args),
         Some("mc") => cmd_mc(&args),
         Some("serve") => cmd_serve(&args),
         Some("list") => cmd_list(),
@@ -283,6 +285,89 @@ fn cmd_ready(args: &Args) {
             eprintln!("unknown --mode '{other}' (both|scan|ready)");
             std::process::exit(2);
         }
+    }
+}
+
+fn cmd_crash(args: &Args) {
+    let sims: u32 = args.get_num("sim-procs", 64);
+    let threads: usize = args.get_num("threads", 4);
+    let nlocks: u32 = args.get_num("locks", 100);
+    let skew: f64 = args.get_num("skew", 0.9);
+    let iters: u64 = args.get_num("iters", 12);
+    let crash_prob: f64 = args.get_num("crash-prob", 0.005);
+    let zombie_prob: f64 = args.get_num("zombie-prob", 0.5);
+    let max_crashes: u32 = args.get_num("max-crashes", 16);
+    let lease_ticks: u64 = args.get_num("lease-ticks", 400);
+    let budget: u64 = args.get_num("budget", 8);
+    if !(0.0..=1.0).contains(&crash_prob) || !(0.0..=1.0).contains(&zombie_prob) {
+        eprintln!("--crash-prob and --zombie-prob must be in [0, 1]");
+        std::process::exit(2);
+    }
+    if lease_ticks == 0 {
+        eprintln!("--lease-ticks must be >= 1 (crash recovery needs leases)");
+        std::process::exit(2);
+    }
+
+    let cluster = Cluster::new(3, 1 << 21, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", budget)
+            .with_default_max_procs(sims.max(1))
+            .with_lease_ticks(lease_ticks),
+    );
+    let procs = cluster.round_robin_procs(sims);
+    let wl = Workload::cycles(iters).with_locks(nlocks, skew);
+    let plan = CrashPlan::all_points(crash_prob, zombie_prob, max_crashes);
+
+    println!(
+        "crash: {sims} simulated processes on {threads} OS threads | locks={nlocks} \
+         skew={skew} | lease term {lease_ticks} ticks | crash-p={crash_prob} \
+         zombie-p={zombie_prob} cap={max_crashes}"
+    );
+    let r = run_crash_workload(&svc, &procs, &wl, threads, &plan);
+    println!(
+        "completed {} cycles by {} survivors in {:.0} ms | violations {} | wedged {}",
+        r.completed,
+        r.survivors,
+        r.wall.as_secs_f64() * 1e3,
+        r.violations,
+        if r.wedged { "YES" } else { "no" }
+    );
+    print!("injected:");
+    for p in CrashPoint::ALL {
+        print!(
+            " {}={}k/{}z",
+            p.name(),
+            r.kills[p.idx()],
+            r.zombies[p.idx()]
+        );
+    }
+    println!(" ({} points covered)", r.points_injected());
+    println!(
+        "sweeper: {} passes | revoked {} | relays {} | tails cleared {} | reaped {} | \
+         remote verbs {}",
+        r.sweeps,
+        r.sweep.fenced,
+        r.sweep.relayed,
+        r.sweep.released,
+        r.sweep.reaped,
+        r.sweeper_remote_verbs
+    );
+    println!(
+        "fencing: {} zombie late writes rejected | {} lucky (pre-revoke) releases | \
+         {} session-side expiries",
+        r.fenced_late_writes, r.lucky_zombies, r.expired_acquisitions
+    );
+    if r.sweep.recovery_ticks.count() > 0 {
+        println!(
+            "recovery latency (ticks past expiry): p50 {} p99 {} max {}",
+            r.sweep.recovery_ticks.p50(),
+            r.sweep.recovery_ticks.p99(),
+            r.sweep.recovery_ticks.max()
+        );
+    }
+    if r.violations > 0 || r.wedged {
+        eprintln!("CRASH RECOVERY FAILED");
+        std::process::exit(1);
     }
 }
 

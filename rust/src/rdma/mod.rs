@@ -28,7 +28,7 @@ pub use addr::{Addr, NodeId};
 pub use latency::{LatencyModel, TimeMode};
 pub use metrics::{OpKind, ProcMetrics, ProcMetricsSnapshot};
 pub use nic::AtomicityMode;
-pub use verbs::Endpoint;
+pub use verbs::{Endpoint, RmwLane};
 pub use wakeup::WakeupRing;
 
 /// Domain-wide configuration.
@@ -107,6 +107,13 @@ pub struct Node {
 pub struct RdmaDomain {
     nodes: Vec<Node>,
     pub cfg: DomainConfig,
+    /// Logical lease clock (ticks). The lease layer's only time base:
+    /// deadlines are written as `lease_now() + term`, and the expiry
+    /// sweeper revokes when `lease_now()` passes a deadline. Advanced
+    /// explicitly (tests: deterministically; the crash runner: from its
+    /// sweeper thread) — a logical clock keeps lease expiry schedulable
+    /// instead of wall-clock-flaky.
+    lease_clock: std::sync::atomic::AtomicU64,
 }
 
 impl RdmaDomain {
@@ -118,7 +125,23 @@ impl RdmaDomain {
                 nic: nic::Nic::new(),
             })
             .collect();
-        Arc::new(RdmaDomain { nodes, cfg })
+        Arc::new(RdmaDomain {
+            nodes,
+            cfg,
+            lease_clock: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Current lease-clock reading (ticks).
+    pub fn lease_now(&self) -> u64 {
+        self.lease_clock.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Advance the lease clock by `ticks`; returns the new reading.
+    pub fn advance_lease_clock(&self, ticks: u64) -> u64 {
+        self.lease_clock
+            .fetch_add(ticks, std::sync::atomic::Ordering::SeqCst)
+            + ticks
     }
 
     pub fn num_nodes(&self) -> u16 {
@@ -188,6 +211,15 @@ mod tests {
         e1.write(a, 1);
         assert_eq!(e1.metrics.snapshot().local_write, 1);
         assert_eq!(e2.metrics.snapshot().local_write, 0);
+    }
+
+    #[test]
+    fn lease_clock_advances_monotonically() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        assert_eq!(d.lease_now(), 0);
+        assert_eq!(d.advance_lease_clock(5), 5);
+        assert_eq!(d.advance_lease_clock(3), 8);
+        assert_eq!(d.lease_now(), 8);
     }
 
     #[test]

@@ -17,6 +17,27 @@ use super::addr::{Addr, NodeId};
 use super::metrics::{OpKind, ProcMetrics};
 use super::RdmaDomain;
 
+/// Which atomic unit owns a word's RMW traffic (the paper's Table-1
+/// discipline). Under commodity atomicity a CPU RMW and a NIC RMW on
+/// the same word are **not** atomic with each other, so every
+/// RMW-arbitrated word must be claimed by exactly one unit: qplock's
+/// cohort tails are single-class (tail\[LOCAL\] only ever sees CPU CAS,
+/// tail\[REMOTE\] only rCAS), and the wakeup ring keeps one cursor per
+/// unit. A *repair agent* acting on another process's behalf — the
+/// lease sweeper relaying a dead client's handoff — must therefore
+/// pick the op by the **word's owning lane**, not by its own locality:
+/// a home-node sweeper still rCASes `tail[REMOTE]` (loopback, through
+/// the NIC — the correct unit), and may CPU-CAS `tail[LOCAL]` only
+/// because local-class descriptors live on the home node, putting the
+/// sweeper on the CPU that owns that lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RmwLane {
+    /// The word is RMW'd by co-located CPUs (local atomics).
+    Cpu,
+    /// The word is RMW'd through the target node's NIC.
+    Nic,
+}
+
 /// A process's handle onto the RDMA domain: its node identity, its
 /// operation metrics, and the verb implementations.
 ///
@@ -248,6 +269,33 @@ impl Endpoint {
             self.r_write(a, v)
         }
     }
+
+    // ---- lane-dispatched RMWs (repair agents) ----
+    //
+    // Unlike the `*_best` helpers, these do NOT pick by locality: the
+    // caller names the atomic unit that owns the word (see [`RmwLane`]).
+    // `RmwLane::Cpu` requires co-location (a CPU can only RMW its own
+    // node's memory — enforced by the local op's enabled-operation
+    // check); `RmwLane::Nic` goes through the target NIC from anywhere,
+    // loopback included.
+
+    /// Compare-and-swap through the word's owning RMW unit.
+    #[inline]
+    pub fn cas_lane(&self, a: Addr, expected: u64, swap: u64, lane: RmwLane) -> u64 {
+        match lane {
+            RmwLane::Cpu => self.cas(a, expected, swap),
+            RmwLane::Nic => self.r_cas(a, expected, swap),
+        }
+    }
+
+    /// Fetch-and-add through the word's owning RMW unit.
+    #[inline]
+    pub fn faa_lane(&self, a: Addr, add: u64, lane: RmwLane) -> u64 {
+        match lane {
+            RmwLane::Cpu => self.faa(a, add),
+            RmwLane::Nic => self.r_faa(a, add),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -366,6 +414,37 @@ mod tests {
         assert_eq!(ep1.read_best(a), 9);
         assert_eq!(ep0.metrics.snapshot().local_read, 1);
         assert_eq!(ep1.metrics.snapshot().remote_read, 1);
+    }
+
+    #[test]
+    fn lane_dispatch_picks_the_unit_not_the_locality() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let a = ep0.alloc(1);
+        // A co-located caller on the NIC lane still goes through the
+        // NIC (loopback) — the unit owns the word, not the caller.
+        assert_eq!(ep0.cas_lane(a, 0, 5, RmwLane::Nic), 0);
+        assert_eq!(ep0.faa_lane(a, 2, RmwLane::Nic), 5);
+        let s = ep0.metrics.snapshot();
+        assert_eq!(s.remote_cas, 1);
+        assert_eq!(s.remote_faa, 1);
+        assert_eq!(s.loopback, 2);
+        // CPU lane: plain local atomics.
+        assert_eq!(ep0.cas_lane(a, 7, 9, RmwLane::Cpu), 7);
+        assert_eq!(ep0.faa_lane(a, 1, RmwLane::Cpu), 9);
+        let s = ep0.metrics.snapshot();
+        assert_eq!(s.local_cas, 1);
+        assert_eq!(s.local_faa, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not an enabled operation")]
+    fn cpu_lane_requires_co_location() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep1.alloc(1);
+        ep0.cas_lane(a, 0, 1, RmwLane::Cpu);
     }
 
     #[test]

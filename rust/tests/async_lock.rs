@@ -65,6 +65,7 @@ fn random_poll_schedule(
                     LockPoll::Held => S::Held,
                     LockPoll::Pending => S::Pending,
                     LockPoll::Cancelled => panic!("seed {seed}: fresh submit cancelled"),
+                    LockPoll::Expired => panic!("seed {seed}: no leases enabled"),
                 };
                 if state[i] == S::Held {
                     checker.enter(i as u32 + 1);
@@ -80,6 +81,7 @@ fn random_poll_schedule(
                 }
                 match a.poll_lock() {
                     LockPoll::Pending => {}
+                    LockPoll::Expired => panic!("seed {seed}: no leases enabled"),
                     LockPoll::Cancelled => state[i] = S::Idle,
                     LockPoll::Held => {
                         state[i] = S::Held;
@@ -114,6 +116,7 @@ fn random_poll_schedule(
                     open = true;
                     match handles[i].as_async().unwrap().poll_lock() {
                         LockPoll::Pending => {}
+                        LockPoll::Expired => panic!("no leases enabled"),
                         LockPoll::Cancelled => state[i] = S::Idle,
                         LockPoll::Held => {
                             checker.enter(i as u32 + 1);
@@ -223,6 +226,7 @@ fn prop_queued_remote_waiter_polls_cost_no_remote_verbs() {
                     LockPoll::Held => break,
                     LockPoll::Pending => {}
                     LockPoll::Cancelled => panic!("seed {seed}: not cancelled"),
+                    LockPoll::Expired => panic!("seed {seed}: no leases enabled"),
                 }
             }
             waiter.unlock();

@@ -1,0 +1,352 @@
+//! Lease-based crash recovery: deterministic constructions of the four
+//! named protocol points (holding, enqueued, mid-handoff,
+//! armed-for-wakeup), the zombie-writeback fence proof, and random
+//! crash schedules through the fault-injection harness.
+//!
+//! Invariants covered (ISSUE 4 acceptance):
+//! * **Mutual exclusion across revoke/fence** — per-lock oracles stay
+//!   clean under random kills and stalls at every protocol point; a
+//!   double grant (sweeper relay racing a zombie's late release) would
+//!   surface as a violation.
+//! * **Eventual progress for survivors** — every process that is not
+//!   killed completes all of its cycles; a crashed holder or waiter
+//!   never wedges the processes behind it.
+//! * **Fenced late writes** — a revoked epoch's release/poll observes
+//!   `LeaseError::Expired`/`LockPoll::Expired` and touches no shared
+//!   state; the double-release-after-revoke path errors instead of
+//!   panicking or silently succeeding.
+
+use std::sync::Arc;
+
+use qplock::coordinator::{
+    run_crash_workload, Cluster, CrashPlan, HandleCache, LockService, Workload,
+};
+use qplock::locks::{LeaseError, LockPoll};
+use qplock::rdma::DomainConfig;
+
+const TICKS: u64 = 50;
+
+/// A 2-node cluster + lease-enabled service; every lock is created
+/// explicitly on node 0 so tests control locality.
+fn lease_service() -> (Cluster, Arc<LockService>) {
+    let cluster = Cluster::new(2, 1 << 18, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8)
+            .with_default_max_procs(8)
+            .with_lease_ticks(TICKS),
+    );
+    (cluster, svc)
+}
+
+/// Park a scan-mode pending acquisition (submit + enough polls to
+/// enqueue and reach the budget wait).
+fn park(sess: &mut HandleCache, name: &str) {
+    assert_eq!(sess.submit(name).unwrap(), LockPoll::Pending);
+    for _ in 0..3 {
+        assert!(sess.poll_all().is_empty(), "{name}: holder still holds");
+    }
+}
+
+#[test]
+fn crashed_holder_is_revoked_and_the_lock_relayed() {
+    // Protocol point: HOLDING. A holder dies in its critical section;
+    // the sweeper fences its epoch and relays the release, and the
+    // waiting survivor acquires. The zombie's late release — and the
+    // double release after it — both surface LeaseError::Expired.
+    let (cluster, svc) = lease_service();
+    svc.create_lock("h", "qplock", 0, 8, 8).unwrap();
+    let mut zombie = svc.session(1);
+    assert_eq!(zombie.submit("h").unwrap(), LockPoll::Held);
+    let mut survivor = svc.session(1);
+    park(&mut survivor, "h");
+
+    // The zombie stops renewing; the survivor keeps polling.
+    let now = cluster.domain.advance_lease_clock(10 * TICKS);
+    assert!(survivor.poll_all().is_empty());
+    let stats = svc.sweep_leases(now);
+    assert_eq!(stats.fenced, 1, "exactly the dead holder is revoked");
+    assert_eq!(stats.relayed, 1, "its release was relayed to the waiter");
+    assert_eq!(stats.reaped, 1);
+    assert_eq!(stats.recovery_ticks.count(), 1);
+
+    let held = survivor.poll_all();
+    assert_eq!(held, vec!["h".to_string()], "survivor owns the lock");
+
+    // Zombie wakes: the late release is a fenced no-op — and releasing
+    // again is the same distinct error, not a panic or silent success.
+    assert_eq!(zombie.release("h"), Err(LeaseError::Expired));
+    assert_eq!(zombie.release("h"), Err(LeaseError::Expired));
+    assert_eq!(zombie.take_expired(), vec!["h".to_string()]);
+
+    // The survivor's ownership was never disturbed.
+    survivor.release("h").unwrap();
+
+    // A fresh submit acknowledges the revocation and works again.
+    assert_eq!(zombie.submit("h").unwrap(), LockPoll::Held);
+    zombie.release("h").unwrap();
+}
+
+#[test]
+fn crashed_enqueued_waiter_becomes_a_pass_through() {
+    // Protocol point: ENQUEUED. A queued waiter dies before its
+    // handoff arrives. MCS cannot unlink it, so the sweeper fences it,
+    // watches its budget word, and relays the handoff on arrival — the
+    // waiter behind it still acquires.
+    let (cluster, svc) = lease_service();
+    svc.create_lock("e", "qplock", 0, 8, 8).unwrap();
+    let mut holder = svc.session(1);
+    assert_eq!(holder.submit("e").unwrap(), LockPoll::Held);
+    let mut dead = svc.session(1);
+    park(&mut dead, "e");
+    let mut live = svc.session(1);
+    park(&mut live, "e");
+
+    // `dead` goes silent; the holder and `live` renew.
+    let now = cluster.domain.advance_lease_clock(10 * TICKS);
+    holder.renew("e").unwrap();
+    assert!(live.poll_all().is_empty());
+    let stats = svc.sweep_leases(now);
+    assert_eq!(stats.fenced, 1);
+    assert_eq!(stats.watching, 1, "no handoff to relay yet");
+    assert_eq!(stats.relayed, 0);
+
+    // The holder releases: the handoff lands in the dead slot; the
+    // next sweep relays it past the corpse to `live`.
+    holder.release("e").unwrap();
+    let stats = svc.sweep_leases(cluster.domain.lease_now());
+    assert_eq!(stats.relayed, 1);
+    let held = live.poll_all();
+    assert_eq!(held, vec!["e".to_string()], "handoff relayed past the corpse");
+    live.release("e").unwrap();
+
+    // The dead session's own poll observes the revocation.
+    assert!(dead.poll_all().is_empty());
+    assert_eq!(dead.take_expired(), vec!["e".to_string()]);
+    assert_eq!(dead.pending_count(), 0);
+}
+
+#[test]
+fn crash_mid_handoff_clears_the_abandoned_tail() {
+    // Protocol point: MID-HANDOFF. The handoff lands in a waiter's
+    // budget word, and the waiter dies before consuming it. The
+    // sweeper finds a fenced slot that already owns the lock, has no
+    // successor, and resets the cohort tail — the lock is free again.
+    let (cluster, svc) = lease_service();
+    svc.create_lock("m", "qplock", 0, 8, 8).unwrap();
+    let mut holder = svc.session(1);
+    assert_eq!(holder.submit("m").unwrap(), LockPoll::Held);
+    let mut dead = svc.session(1);
+    park(&mut dead, "m");
+    assert!(!dead.handoff_arrived("m"));
+    holder.release("m").unwrap();
+    assert!(dead.handoff_arrived("m"), "budget landed, unconsumed");
+
+    // The waiter dies exactly here — never polls again.
+    let now = cluster.domain.advance_lease_clock(10 * TICKS);
+    let stats = svc.sweep_leases(now);
+    assert_eq!(stats.fenced, 1);
+    assert_eq!(stats.released, 1, "abandoned tail reset");
+    assert_eq!(stats.relayed, 0, "nobody was waiting behind it");
+
+    // The lock is fully available to a newcomer.
+    let mut fresh = svc.session(0);
+    assert_eq!(fresh.submit("m").unwrap(), LockPoll::Held);
+    fresh.release("m").unwrap();
+}
+
+#[test]
+fn crashed_armed_waiter_is_not_signalled_and_successor_is() {
+    // Protocol point: ARMED. A dead waiter with an armed wakeup
+    // registration must not receive the handoff's token (the sweeper
+    // clears its registration at fence time); the relayed-to survivor
+    // gets its own signal and wakes through its ring.
+    let (cluster, svc) = lease_service();
+    svc.create_lock("a", "qplock", 0, 8, 8).unwrap();
+    let mut holder = svc.session(1);
+    assert_eq!(holder.submit("a").unwrap(), LockPoll::Held);
+
+    let mut dead = svc.session(1);
+    dead.enable_ready_wakeups(4);
+    dead.set_sweep_interval(0);
+    dead.set_lease_heartbeat(0); // it will "die": nothing renews it
+    assert_eq!(dead.submit("a").unwrap(), LockPoll::Pending);
+    while !dead.is_armed("a") {
+        assert!(dead.poll_ready().is_empty());
+    }
+
+    let mut live = svc.session(1);
+    live.enable_ready_wakeups(4);
+    live.set_sweep_interval(0);
+    live.set_lease_heartbeat(1); // renew every ready round
+    assert_eq!(live.submit("a").unwrap(), LockPoll::Pending);
+    while !live.is_armed("a") {
+        assert!(live.poll_ready().is_empty());
+    }
+
+    // Expire the dead waiter (holder and live keep renewing).
+    let now = cluster.domain.advance_lease_clock(10 * TICKS);
+    holder.renew("a").unwrap();
+    assert!(live.poll_ready().is_empty());
+    let stats = svc.sweep_leases(now);
+    assert_eq!(stats.fenced, 1);
+    assert_eq!(stats.watching, 1);
+
+    // The holder's release writes the handoff into the dead slot; its
+    // cleared registration means no token is published for the corpse.
+    holder.release("a").unwrap();
+    let stats = svc.sweep_leases(cluster.domain.lease_now());
+    assert_eq!(stats.relayed, 1, "relay reached the armed survivor");
+
+    // The survivor wakes through its own ring token, O(1) polls.
+    let polls0 = live.handle_polls();
+    let mut held = Vec::new();
+    let mut rounds = 0;
+    while held.is_empty() {
+        held = live.poll_ready();
+        rounds += 1;
+        assert!(rounds < 100, "survivor's wakeup token never arrived");
+    }
+    assert_eq!(held, vec!["a".to_string()]);
+    assert!(live.handle_polls() - polls0 <= 2, "woke with O(1) polls");
+    live.release("a").unwrap();
+
+    // The dead session, were it to wake, observes the revocation
+    // through a renewal, and its release errors.
+    assert_eq!(dead.renew("a"), Err(LeaseError::Expired));
+    assert_eq!(dead.take_expired(), vec!["a".to_string()]);
+    assert_eq!(dead.release("a"), Err(LeaseError::Expired));
+}
+
+#[test]
+fn local_cohort_repair_stays_off_the_nic() {
+    // The asymmetry discipline extends to recovery: fencing is CPU-only
+    // everywhere, and repairing a local-class cohort (descriptors,
+    // victim, tail[LOCAL], the successor's budget — all on the home
+    // node, where the sweeper agent runs) must issue zero remote verbs.
+    let (cluster, svc) = lease_service();
+    svc.create_lock("l", "qplock", 0, 8, 8).unwrap();
+    let mut zombie = svc.session(0);
+    assert_eq!(zombie.submit("l").unwrap(), LockPoll::Held);
+    let mut survivor = svc.session(0);
+    park(&mut survivor, "l");
+    let now = cluster.domain.advance_lease_clock(10 * TICKS);
+    assert!(survivor.poll_all().is_empty());
+    let stats = svc.sweep_leases(now);
+    assert_eq!(stats.fenced, 1);
+    assert_eq!(stats.relayed, 1);
+    assert_eq!(survivor.poll_all(), vec!["l".to_string()]);
+    survivor.release("l").unwrap();
+    for (node, m) in svc.sweeper_metrics().iter().enumerate() {
+        assert_eq!(
+            m.remote_total(),
+            0,
+            "node-{node} sweeper used the NIC repairing a local cohort"
+        );
+    }
+}
+
+#[test]
+fn submit_on_an_unrepaired_slot_parks_until_the_reap() {
+    // A revoked waiter's descriptor is still a queue pass-through until
+    // the sweeper finishes the relay; a resubmit in that window must
+    // park (Pending) rather than reuse the slot and corrupt the relay.
+    let (cluster, svc) = lease_service();
+    svc.create_lock("p", "qplock", 0, 8, 8).unwrap();
+    let mut holder = svc.session(1);
+    assert_eq!(holder.submit("p").unwrap(), LockPoll::Held);
+    let mut w = svc.session(1);
+    park(&mut w, "p");
+    let now = cluster.domain.advance_lease_clock(10 * TICKS);
+    holder.renew("p").unwrap();
+    let stats = svc.sweep_leases(now);
+    assert_eq!(stats.fenced, 1);
+    assert_eq!(stats.watching, 1, "repair pending: handoff still owed");
+    // The revoked waiter notices and immediately resubmits — but the
+    // slot is fenced-unreaped, so the acquisition cannot start yet.
+    assert!(w.poll_all().is_empty());
+    assert_eq!(w.take_expired(), vec!["p".to_string()]);
+    assert_eq!(w.submit("p").unwrap(), LockPoll::Pending);
+    for _ in 0..50 {
+        assert!(w.poll_all().is_empty(), "parked until the reap");
+    }
+    // The holder releases; the sweeper relays (tail reset — the corpse
+    // had no successor... it *is* the tail) and reaps; the parked
+    // resubmit then proceeds and acquires.
+    holder.release("p").unwrap();
+    let stats = svc.sweep_leases(cluster.domain.lease_now());
+    assert_eq!(stats.reaped, 1);
+    let mut held = Vec::new();
+    let mut rounds = 0;
+    while held.is_empty() {
+        held = w.poll_all();
+        rounds += 1;
+        assert!(rounds < 1_000, "resubmit never recovered after the reap");
+    }
+    assert_eq!(held, vec!["p".to_string()]);
+    w.release("p").unwrap();
+}
+
+#[test]
+fn random_crash_schedules_preserve_safety_and_progress() {
+    // Property sweep: small fault-injected runs across seeds — mutual
+    // exclusion, survivor progress, and complete repair, every time.
+    for seed in 0..6u64 {
+        let cluster = Cluster::new(3, 1 << 19, DomainConfig::counted());
+        let svc = Arc::new(
+            LockService::new(&cluster.domain, "qplock", 8)
+                .with_default_max_procs(12)
+                .with_lease_ticks(200),
+        );
+        let procs = cluster.round_robin_procs(12);
+        let wl = Workload::cycles(6).with_locks(6, 0.9).with_seed(seed);
+        let plan = CrashPlan::all_points(0.01, 0.5, 6);
+        let r = run_crash_workload(&svc, &procs, &wl, 3, &plan);
+        assert_eq!(r.violations, 0, "seed {seed}: double grant");
+        assert!(!r.wedged, "seed {seed}: wedged survivors");
+        assert!(
+            r.completed >= r.survivors as u64 * 6,
+            "seed {seed}: a survivor lost cycles ({} completed, {} survivors)",
+            r.completed,
+            r.survivors
+        );
+        assert_eq!(
+            r.sweep.fenced, r.sweep.reaped,
+            "seed {seed}: a revocation was never repaired"
+        );
+    }
+}
+
+#[test]
+fn acceptance_64_procs_100_locks_all_four_points() {
+    // The E13 quick-scale acceptance run, as a property test: ≥64
+    // procs, ≥100 locks, crashes injected at all four named protocol
+    // points — zero violations, zero wedged survivors, every revoked
+    // epoch repaired, and at least one zombie late write provably
+    // fenced.
+    let cluster = Cluster::new(3, 1 << 21, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8)
+            .with_default_max_procs(64)
+            .with_lease_ticks(400),
+    );
+    let procs = cluster.round_robin_procs(64);
+    let wl = Workload::cycles(12).with_locks(100, 0.9);
+    let plan = CrashPlan::all_points(0.003, 0.5, 16);
+    let r = run_crash_workload(&svc, &procs, &wl, 4, &plan);
+    assert_eq!(r.violations, 0, "double grant across a revoke/fence");
+    assert!(!r.wedged, "wedged survivors");
+    assert_eq!(r.points_injected(), 4, "kills {:?} zombies {:?}", r.kills, r.zombies);
+    assert!(
+        r.completed >= r.survivors as u64 * 12,
+        "{} completed, {} survivors",
+        r.completed,
+        r.survivors
+    );
+    assert_eq!(r.sweep.fenced, r.sweep.reaped, "unrepaired revocations");
+    assert!(
+        r.fenced_late_writes >= 1,
+        "no zombie late write was fenced (lucky: {})",
+        r.lucky_zombies
+    );
+    assert!(r.sweep.recovery_ticks.count() > 0, "recovery latency unmeasured");
+}

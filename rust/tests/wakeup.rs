@@ -82,12 +82,12 @@ fn armed_remote_waiters_idle_rounds_are_nic_silent_and_handoffs_stay_o1() {
     // sides — the wakeup publication (ring-header read, slot claim,
     // slot write) rides the handoff at constant cost.
     for n in &names {
-        holder.release(n);
+        holder.release(n).unwrap();
     }
     let mut done = 0;
     while done < names.len() {
         for n in waiter.poll_ready() {
-            waiter.release(&n);
+            waiter.release(&n).unwrap();
             done += 1;
         }
     }
@@ -97,6 +97,141 @@ fn armed_remote_waiters_idle_rounds_are_nic_silent_and_handoffs_stay_o1() {
     let per_h = h.remote_total() as f64 / cycles as f64;
     assert!(per_w <= 8.0, "waiter remote verbs/acq too high: {per_w}");
     assert!(per_h <= 12.0, "holder remote verbs/acq too high: {per_h}");
+}
+
+#[test]
+fn revoked_waiters_published_token_is_discarded_not_delivered() {
+    // Lease/ring interaction (ISSUE 4 satellite): the handoff's token
+    // was published for an armed waiter, and the waiter's acquisition
+    // is then revoked before it consumes it. `poll_ready` must discard
+    // the token via the stale-epoch cross-check (the poll surfaces
+    // Expired) — never report the revoked acquisition as held.
+    let cluster = Cluster::new(2, 1 << 18, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8)
+            .with_default_max_procs(4)
+            .with_lease_ticks(50),
+    );
+    svc.create_lock("rv", "qplock", 0, 4, 8).unwrap();
+    let mut holder = svc.session(1);
+    assert_eq!(holder.submit("rv").unwrap(), LockPoll::Held);
+    let mut w = svc.session(1);
+    w.enable_ready_wakeups(4);
+    w.set_sweep_interval(0);
+    w.set_lease_heartbeat(0); // the waiter is about to "die"
+    assert_eq!(w.submit("rv").unwrap(), LockPoll::Pending);
+    while !w.is_armed("rv") {
+        assert!(w.poll_ready().is_empty());
+    }
+    // The holder releases while the waiter is armed and alive-looking:
+    // the token IS published into the waiter's ring.
+    holder.release("rv").unwrap();
+    assert!(w.handoff_arrived("rv"), "budget landed, token in the ring");
+    // The waiter stalls past its lease; the sweeper revokes it and
+    // clears the abandoned tail (the handoff had already arrived).
+    let now = cluster.domain.advance_lease_clock(500);
+    let stats = svc.sweep_leases(now);
+    assert_eq!(stats.fenced, 1);
+    assert_eq!(stats.released, 1, "abandoned lock freed");
+    // The zombie session wakes and drains its ring: the token must be
+    // discarded — the poll observes the fence, nothing is held.
+    for _ in 0..10 {
+        assert!(
+            w.poll_ready().is_empty(),
+            "a revoked acquisition was reported held off a stale token"
+        );
+    }
+    assert_eq!(w.take_expired(), vec!["rv".to_string()]);
+    assert_eq!(w.pending_count(), 0);
+    assert_eq!(w.release("rv"), Err(qplock::locks::LeaseError::Expired));
+    // The lock is free for anyone (the revoke freed it, the zombie's
+    // stale token did not resurrect it).
+    let mut fresh = svc.session(0);
+    assert_eq!(fresh.submit("rv").unwrap(), LockPoll::Held);
+    fresh.release("rv").unwrap();
+}
+
+#[test]
+fn ten_k_armed_lease_holders_keep_o1_rounds_and_never_expire() {
+    // The 10k-waiter O(1) invariant, restated under leases: with 10k
+    // armed (unpolled) waiters on lease-enabled locks, the session
+    // heartbeat keeps every lease alive — repeated sweeps at an
+    // advancing clock revoke nothing — while idle ready rounds still
+    // issue ZERO handle polls (renewals are not polls; the O(ready)
+    // property survives the lease layer).
+    let k = 10_000u32;
+    let ticks = 50u64;
+    let words = (64u64 * k as u64 + (1 << 16)).min(u32::MAX as u64) as u32;
+    let cluster = Cluster::new(2, words, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8)
+            .with_default_max_procs(2)
+            .with_lease_ticks(ticks),
+    );
+    let names: Vec<String> = (0..k).map(|i| format!("lk{i:06}")).collect();
+    for n in &names {
+        svc.create_lock(n, "qplock", 0, 2, 8).unwrap();
+    }
+    let mut holder = svc.session(1);
+    for n in &names {
+        assert_eq!(holder.submit(n).unwrap(), LockPoll::Held);
+    }
+    let mut w = svc.session(1);
+    w.enable_ready_wakeups(k);
+    w.set_sweep_interval(0);
+    w.set_lease_heartbeat(1);
+    for n in &names {
+        assert_eq!(w.submit(n).unwrap(), LockPoll::Pending);
+    }
+    let mut rounds = 0;
+    while w.armed_count() < k as usize {
+        assert!(w.poll_ready().is_empty());
+        rounds += 1;
+        assert!(rounds < 64, "waiters failed to park and arm");
+    }
+    // Steady state: clock advances in sub-term steps, the heartbeat
+    // renews all 10k armed leases each round, sweeps find everything
+    // alive, and no handle is ever polled. The holder renews its 10k
+    // held leases explicitly (its own heartbeat path).
+    let polls0 = w.handle_polls();
+    for _ in 0..20 {
+        cluster.domain.advance_lease_clock(ticks / 2);
+        for n in &names {
+            holder.renew(n).unwrap();
+        }
+        assert!(w.poll_ready().is_empty());
+        let stats = svc.sweep_leases(cluster.domain.lease_now());
+        assert_eq!(stats.fenced, 0, "a heartbeat-renewed lease was revoked");
+    }
+    assert_eq!(
+        w.handle_polls() - polls0,
+        0,
+        "idle ready rounds polled handles despite leases"
+    );
+    assert!(w.take_expired().is_empty());
+    // One release still wakes exactly its waiter with O(1) polls.
+    holder.release(&names[7]).unwrap();
+    let polls1 = w.handle_polls();
+    let mut got = Vec::new();
+    while got.is_empty() {
+        got = w.poll_ready();
+    }
+    assert_eq!(got, vec![names[7].clone()]);
+    assert!(w.handle_polls() - polls1 <= 2, "release woke O(1) polls");
+    w.release(&names[7]).unwrap();
+    // Drain everything clean.
+    for (i, n) in names.iter().enumerate() {
+        if i != 7 {
+            holder.release(n).unwrap();
+        }
+    }
+    let mut done = 1usize;
+    while done < names.len() {
+        for n in w.poll_ready() {
+            w.release(&n).unwrap();
+            done += 1;
+        }
+    }
 }
 
 /// Random single-threaded schedules over several ready-mode sessions:
@@ -175,7 +310,7 @@ fn prop_random_schedules_complete_on_wakeups_alone() {
                     if let Some(n) = held[i].iter().next().cloned() {
                         held[i].remove(&n);
                         owner.remove(&n);
-                        sessions[i].release(&n);
+                        sessions[i].release(&n).unwrap();
                     }
                 }
                 _ => {
@@ -203,7 +338,7 @@ fn prop_random_schedules_complete_on_wakeups_alone() {
                 let hs: Vec<String> = held[i].drain().collect();
                 for n in &hs {
                     owner.remove(n);
-                    sessions[i].release(n);
+                    sessions[i].release(n).unwrap();
                 }
                 if sessions[i].pending_count() > 0 {
                     open = true;
