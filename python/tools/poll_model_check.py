@@ -52,7 +52,18 @@ Checked invariants, over many random seeds:
   * local-class handles never issue remote verbs — including wakeup
     publication — and a parked waiter's poll issues zero remote verbs.
 
+Differential mode (`--trace`): instead of the random model check, run
+the **lockstep differential schedule** against the Rust side
+(`qplock sim --differential`): both sides seed the same xoshiro256**
+stream (reimplemented bit-for-bit below), derive the same
+state-independent schedule from it, drive their own implementation of
+the protocol — this transliteration here, the real `locks/qplock.rs`
+there — and emit the same JSONL trace (shared schema, see TESTING.md).
+`diff` of the two files is the oracle: any divergence between the Rust
+code and this model is a line-level failure, not a silent drift.
+
 Run: python3 python/tools/poll_model_check.py [seeds]
+     python3 python/tools/poll_model_check.py --trace FILE --seed S --steps N
 Exits non-zero on any violation.
 """
 
@@ -61,6 +72,50 @@ import sys
 
 WAITING = -1  # the paper's "enqueued, not passed" sentinel
 LOCAL, REMOTE = 0, 1
+
+# ---- xoshiro256** + SplitMix64, bit-identical to rust/src/util/prng.rs
+# (the shared schedule stream of the differential mode) ----
+
+_M64 = (1 << 64) - 1
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & _M64
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & _M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return state, z ^ (z >> 31)
+
+
+class Xoshiro:
+    """xoshiro256** seeded via SplitMix64, mirroring `Prng::seed_from`."""
+
+    def __init__(self, seed):
+        self.s = []
+        sm = seed & _M64
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & _M64, 7) * 9) & _M64
+        t = (s[1] << 17) & _M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, bound):
+        # Lemire multiply-shift, exact in Python's big ints.
+        return (self.next_u64() * bound) >> 64
 
 
 class Lock:
@@ -255,8 +310,13 @@ class Handle:
         if self.state == "Idle":
             return True
         if self.state == "Enqueue":
+            # Never queue-visible: release the lease on the spot (the
+            # live -> 0 claim); a fenced word stays for the sweeper's
+            # trivial ENQ reap and the next submit parks until then
+            # (mirrors qplock.rs `cancel_lock`).
             self.state = "Idle"
-            self.lease = None
+            if self.lease is not None and not self.lease["fenced"]:
+                self.lease = None
             return True
         if self.state == "Held":
             self.unlock()
@@ -320,22 +380,33 @@ class Sweeper:
 
     def sweep(self, now):
         for h in self.handles:
-            le = h.lease
-            if le is None or le["reaped"]:
-                continue
-            if not le["fenced"]:
-                if le["deadline"] >= now:
-                    continue
-                # Fence (the owner's renewals lose from here on).
-                le["fenced"] = True
-                self.stats["fenced"] += 1
-                # A revoked waiter must not be signalled.
-                h.wake_armed = False
-                # The abandoned CS is over (mirror: checker exit at
-                # crash; the zombie's own ops are fenced from now on).
-                if h.lock.holder is h:
-                    h.lock.holder = None
-            self._repair(h, now)
+            self._sweep_slot(h, now)
+
+    def sweep_node(self, now, node):
+        """Per-node sweeper agent (the differential mode's order: one
+        pass = nodes in ascending order, slots in mint order within
+        each — exactly `LockService::sweep_leases`'s iteration)."""
+        for h in self.handles:
+            if h.node == node:
+                self._sweep_slot(h, now)
+
+    def _sweep_slot(self, h, now):
+        le = h.lease
+        if le is None or le["reaped"]:
+            return
+        if not le["fenced"]:
+            if le["deadline"] >= now:
+                return
+            # Fence (the owner's renewals lose from here on).
+            le["fenced"] = True
+            self.stats["fenced"] += 1
+            # A revoked waiter must not be signalled.
+            h.wake_armed = False
+            # The abandoned CS is over (mirror: checker exit at
+            # crash; the zombie's own ops are fenced from now on).
+            if h.lock.holder is h:
+                h.lock.holder = None
+        self._repair(h, now)
 
     def _repair(self, h, now):
         le = h.lease
@@ -653,8 +724,150 @@ def run_schedule(seed):
     }
 
 
+def run_differential(seed, steps):
+    """The lockstep differential schedule (see the module docstring):
+    returns the JSONL trace lines. Every decision — config and per-step
+    action — is drawn from the shared xoshiro stream in the exact order
+    the Rust side (`sim::differential::differential_trace`) draws it,
+    and the schedule is state-independent, so the two sides execute the
+    same steps and the traces differ only where behavior does."""
+    rng = Xoshiro(seed)
+    nodes = 1 + rng.below(2)
+    home = rng.below(nodes)
+    budget = 1 + rng.below(4)
+    lease_ticks = 8 + rng.below(16)
+    n = 2 + rng.below(4)
+    places = [rng.below(nodes) for _ in range(n)]
+    max_crashes = rng.below(3)
+
+    lock = Lock(home, budget, lease_ticks)
+    handles = [
+        Handle(lock, Session(places[i]), i, lambda succ: None)
+        for i in range(n)
+    ]
+    sweeper = Sweeper(handles)
+    # Crash model (mirrors sim::differential): a *stall* freezes the
+    # handle — the sweeper repairs around it exactly as around a dead
+    # client — and a later crash draw *wakes* it so its next operation
+    # is the late write its fenced epoch must reject.
+    stalled = [False] * n
+    crashes = 0
+    now = 0
+    poll_out = {
+        "Pending": "pending",
+        "Held": "held",
+        "Cancelled": "cancelled",
+        "Expired": "expired",
+    }
+
+    out = []
+    places_s = ",".join(str(p) for p in places)
+    out.append(
+        f'{{"v":1,"kind":"qplock-sim-trace","alphabet":"handle",'
+        f'"seed":{seed},"nodes":{nodes},"home":{home},"budget":{budget},'
+        f'"lease":{lease_ticks},"handles":{n},"places":[{places_s}],'
+        f'"crashes":{max_crashes}}}'
+    )
+    for i in range(steps):
+        r = rng.below(100)
+        if r < 12:
+            d = 1 + rng.below(3)
+            now += d
+            out.append(f'{{"i":{i},"op":"tick","d":{d},"now":{now}}}')
+            continue
+        if r < 20:
+            before = {k: sweeper.stats[k] for k in
+                      ("fenced", "relayed", "released", "reaped")}
+            for node in range(nodes):
+                sweeper.sweep_node(now, node)
+            st = sweeper.stats
+            out.append(
+                f'{{"i":{i},"op":"sweep",'
+                f'"fenced":{st["fenced"] - before["fenced"]},'
+                f'"relayed":{st["relayed"] - before["relayed"]},'
+                f'"released":{st["released"] - before["released"]},'
+                f'"reaped":{st["reaped"] - before["reaped"]}}}'
+            )
+            continue
+        h = rng.below(n)
+        r2 = rng.below(10)
+        hd = handles[h]
+        if r2 <= 4:
+            o = "stalled" if stalled[h] else poll_out[hd.poll(now)]
+            out.append(f'{{"i":{i},"op":"poll","h":{h},"out":"{o}"}}')
+        elif r2 == 5:
+            if stalled[h]:
+                o = "stalled"
+            elif hd.state != "Held":
+                o = "noop"
+            else:
+                o = "ok" if hd.unlock() else "expired"
+            out.append(f'{{"i":{i},"op":"unlock","h":{h},"out":"{o}"}}')
+        elif r2 == 6:
+            o = "stalled" if stalled[h] else hd.arm()
+            out.append(f'{{"i":{i},"op":"arm","h":{h},"out":"{o}"}}')
+        elif r2 == 7:
+            if stalled[h]:
+                out.append(f'{{"i":{i},"op":"drain","h":{h},"out":"stalled"}}')
+            else:
+                tokens = sorted(hd.session.ring)
+                hd.session.ring = []
+                ts = ",".join(str(t) for t in tokens)
+                out.append(f'{{"i":{i},"op":"drain","h":{h},"tokens":[{ts}]}}')
+        elif r2 == 8:
+            if stalled[h]:
+                o = "stalled"
+            else:
+                o = "now" if hd.cancel() else "drain"
+            out.append(f'{{"i":{i},"op":"cancel","h":{h},"out":"{o}"}}')
+        else:
+            if stalled[h]:
+                stalled[h] = False
+                o = "woken"
+            elif crashes < max_crashes:
+                stalled[h] = True
+                crashes += 1
+                o = "stalled"
+            else:
+                o = "noop"
+            out.append(f'{{"i":{i},"op":"crash","h":{h},"out":"{o}"}}')
+
+    state_of = {
+        "Idle": "idle",
+        "Enqueue": "enqueue",
+        "WaitBudget": "wait",
+        "Reacquire": "engage",
+        "EngagePeterson": "engage",
+        "Held": "held",
+    }
+    states = ",".join(f'"{state_of[handles[h].state]}"' for h in range(n))
+    out.append(f'{{"op":"end","now":{now},"states":[{states}]}}')
+    return out
+
+
 def main():
-    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 500
+    argv = sys.argv[1:]
+    if "--trace" in argv:
+        def opt(name, default=None):
+            if name in argv:
+                return argv[argv.index(name) + 1]
+            if default is None:
+                sys.exit(f"missing {name}")
+            return default
+
+        path = opt("--trace")
+        seed = int(opt("--seed", "0"))
+        steps = int(opt("--steps", "400"))
+        lines = run_differential(seed, steps)
+        text = "\n".join(lines) + "\n"
+        if path == "-":
+            sys.stdout.write(text)
+        else:
+            with open(path, "w") as f:
+                f.write(text)
+        return
+
+    cases = int(argv[0]) if argv else 500
     tot = {
         "parked": 0,
         "fired": 0,

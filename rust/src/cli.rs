@@ -145,6 +145,32 @@ SUBCOMMANDS:
             --max-crashes <n>  injection cap (default 16)
             --lease-ticks <n>  lease term in clock ticks (default 400)
             --budget <n>       qplock budget (default 8)
+  sim     deterministic schedule explorer over the real stack (see
+          TESTING.md): seeded interleavings of poll/arm/ready/release/
+          sweep/clock steps with crash injection, ME/progress/lease
+          oracles, automatic shrinking of failing schedules to minimal
+          replayable JSONL artifacts (exit non-zero on violation)
+            --schedules <n>    seeds to explore (default 200)
+            --steps <n>        random-phase steps per schedule (default 400)
+            --seed <s>         base seed (default 1)
+            --procs <n>        simulated actors (default 4)
+            --locks <K>        named locks (default 3)
+            --nodes <n>        cluster nodes (default 2)
+            --lease-ticks <n>  lease term (default 64)
+            --ring <n>         session wakeup-ring arming bound (default 8)
+            --drain-rounds <n> progress-oracle round bound (default 5000)
+            --crash-prob <p>   per-step injection prob (default 0.02)
+            --zombie-prob <p>  stall-instead-of-kill fraction (default 0.5)
+            --max-crashes <n>  injection cap per schedule (default 2)
+            --mode <m>         uniform|pct|churn scheduler (default uniform)
+            --pct-depth <n>    priority-change points in pct mode (default 3)
+            --manual-arm       wakeup arming as its own scheduled step
+            --artifact-dir <d> where failing traces go (default
+                               target/sim-artifacts)
+            --replay <file>    re-execute a recorded artifact instead
+            --differential     emit the handle-level lockstep trace and
+                               exit (diff against poll_model_check.py
+                               --trace; --seed/--steps apply)
   mc      model-check a spec (paper Appendix A)
             --model <name>     qplock|peterson|naive|spin (default qplock)
             --procs <n>        processes (default 3)

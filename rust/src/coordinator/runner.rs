@@ -1046,6 +1046,14 @@ impl CrashRunResult {
         self.kills.iter().sum::<u64>() + self.zombies.iter().sum::<u64>()
     }
 
+    /// Crashed clients' pid slots the sweep returned to their locks'
+    /// pools (the service's orphan reclamation; a killed session's
+    /// slots come back once its descriptors are reaped, so crash churn
+    /// no longer erodes lock-table capacity).
+    pub fn pid_slots_reclaimed(&self) -> u64 {
+        self.sweep.pid_reclaimed
+    }
+
     /// Distinct protocol points that saw at least one injection.
     pub fn points_injected(&self) -> usize {
         CrashPoint::ALL

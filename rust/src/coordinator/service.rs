@@ -134,6 +134,11 @@ struct SlotHandle {
     inner: Box<dyn LockHandle>,
     entry: Arc<Entry>,
     pid: u32,
+    /// Owned by the service's orphan registry (its session crashed):
+    /// the drop-time liveness assert is waived — a crashed handle's
+    /// machine state is frozen mid-flight forever even after the
+    /// sweeper reaped its slot.
+    orphaned: bool,
 }
 
 impl LockHandle for SlotHandle {
@@ -168,7 +173,7 @@ impl Drop for SlotHandle {
         // poll-capable and its state is observable. Skipped mid-unwind:
         // a panic elsewhere legitimately drops handles in any state.
         #[cfg(debug_assertions)]
-        if !std::thread::panicking() {
+        if !std::thread::panicking() && !self.orphaned {
             if let Some(a) = self.inner.as_async() {
                 debug_assert!(
                     !a.is_acquiring() && !a.is_held(),
@@ -204,6 +209,14 @@ pub struct LockService {
     /// (phase transitions in fenced lease words) assumes one sweeper
     /// per slot at a time.
     sweep_serial: Mutex<()>,
+    /// Crashed clients' pid-slot leases, parked until their descriptors
+    /// quiesce: [`HandleCache::crash`] deposits every non-inert handle
+    /// here, and each [`LockService::sweep_leases`] pass probes the
+    /// parked handles' slots ([`AsyncLockHandle::slot_quiescent`] — the
+    /// lease word reaped, or inert) and returns the finished ones to
+    /// their locks' [`PidPool`]s. Without this, crashed-session churn
+    /// permanently wedged a long-lived service on `CapacityExhausted`.
+    orphans: Mutex<Vec<SlotHandle>>,
 }
 
 impl LockService {
@@ -238,6 +251,7 @@ impl LockService {
                 eps
             },
             sweep_serial: Mutex::new(()),
+            orphans: Mutex::new(Vec::new()),
         }
     }
 
@@ -325,7 +339,50 @@ impl LockService {
                 }
             }
         }
+        stats.pid_reclaimed += self.reclaim_orphans();
         stats
+    }
+
+    /// Return every orphaned pid slot whose descriptor has quiesced
+    /// (lease word reaped by the sweep above, or inert): dropping the
+    /// parked [`SlotHandle`] releases the pid to its lock's pool. Runs
+    /// under the sweep serial lock; returns how many slots came back.
+    fn reclaim_orphans(&self) -> u64 {
+        let mut orphans = self.orphans.lock().unwrap();
+        let before = orphans.len();
+        // A crashed handle without a poll machine can never be probed;
+        // keep it parked (pre-reclamation behavior: leaked by design).
+        orphans.retain_mut(|sh| match sh.inner.as_async() {
+            Some(a) => !a.slot_quiescent(),
+            None => true,
+        });
+        (before - orphans.len()) as u64
+    }
+
+    /// Park a crashed session's handle until its slot can be reclaimed
+    /// — or release its pid on the spot when the slot is already inert
+    /// (an idle handle abandons nothing in the fabric).
+    fn orphan_slot(&self, mut sh: SlotHandle) {
+        sh.orphaned = true;
+        // Probe liveness first (the borrow must end before the handle
+        // can be moved). No poll machine means liveness is forever
+        // unobservable: leak the slot in place, exactly as `crash`
+        // always did.
+        let Some(quiescent) = sh.inner.as_async().map(|a| a.slot_quiescent()) else {
+            std::mem::forget(sh);
+            return;
+        };
+        if quiescent {
+            drop(sh); // idle: the pid returns to its pool on the spot
+        } else {
+            self.orphans.lock().unwrap().push(sh);
+        }
+    }
+
+    /// Orphaned pid slots still awaiting their descriptor's repair
+    /// (diagnostic; drains toward 0 as sweeps reap crashed slots).
+    pub fn orphaned_slots(&self) -> usize {
+        self.orphans.lock().unwrap().len()
     }
 
     /// Per-node verb counters of the sweeper agents — the sweep's verb
@@ -416,18 +473,19 @@ impl LockService {
         name: &str,
         entry: &Arc<Entry>,
         ep: Endpoint,
-    ) -> Result<Box<dyn LockHandle>, LockServiceError> {
+    ) -> Result<SlotHandle, LockServiceError> {
         let pid = entry
             .claim_pid()
             .ok_or_else(|| LockServiceError::CapacityExhausted {
                 name: name.to_string(),
                 max_procs: entry.max_procs,
             })?;
-        Ok(Box::new(SlotHandle {
+        Ok(SlotHandle {
             inner: entry.lock.handle(ep, pid),
             entry: Arc::clone(entry),
             pid,
-        }))
+            orphaned: false,
+        })
     }
 
     /// Mint a client handle for a process running on `node` (creating
@@ -440,7 +498,7 @@ impl LockService {
         node: NodeId,
     ) -> Result<Box<dyn LockHandle>, LockServiceError> {
         let entry = self.entry(name);
-        Self::mint(name, &entry, self.domain.endpoint(node))
+        Self::mint(name, &entry, self.domain.endpoint(node)).map(|s| Box::new(s) as _)
     }
 
     /// Like [`LockService::client`] but attributes the handle's verbs to
@@ -454,7 +512,7 @@ impl LockService {
     ) -> Result<Box<dyn LockHandle>, LockServiceError> {
         let entry = self.entry(name);
         let ep = self.domain.endpoint_with_metrics(node, Arc::clone(metrics));
-        Self::mint(name, &entry, ep)
+        Self::mint(name, &entry, ep).map(|s| Box::new(s) as _)
     }
 
     /// Open a per-process session with handle reuse (see [`HandleCache`]).
@@ -522,7 +580,7 @@ pub struct HandleCache {
     node: NodeId,
     local_metrics: Arc<ProcMetrics>,
     remote_metrics: Arc<ProcMetrics>,
-    handles: HashMap<String, Box<dyn LockHandle>>,
+    handles: HashMap<String, SlotHandle>,
     /// Names with a submitted-but-unresolved acquisition (membership
     /// truth; O(1) for the submit/poll hot paths).
     pending: HashSet<String>,
@@ -572,6 +630,10 @@ pub struct HandleCache {
     revoked: HashSet<String>,
     /// Revocations observed since the last [`HandleCache::take_expired`].
     expired: Vec<String>,
+    /// Schedule-explorer hook ([`HandleCache::set_manual_arm`]): when
+    /// set, submit/poll_ready stop arming automatically and arming
+    /// becomes its own schedulable step ([`HandleCache::arm_now`]).
+    manual_arm: bool,
     /// `poll_ready` lease-heartbeat cadence in rounds (0 = off): every
     /// N rounds, renew the lease of each pending acquisition. Armed
     /// waiters are not polled (that is the point of arming), so this
@@ -621,6 +683,7 @@ impl HandleCache {
             relisted: Vec::new(),
             revoked: HashSet::new(),
             expired: Vec::new(),
+            manual_arm: false,
             heartbeat_every: DEFAULT_HEARTBEAT_EVERY,
             sweep_every: DEFAULT_SWEEP_EVERY,
             ready_rounds: 0,
@@ -656,7 +719,7 @@ impl HandleCache {
         } else {
             self.hits += 1;
         }
-        Ok(self.handles.get_mut(name).expect("just inserted").as_mut())
+        Ok(self.handles.get_mut(name).expect("just inserted") as &mut dyn LockHandle)
     }
 
     /// Convenience: full lock → critical section → unlock cycle on a
@@ -722,7 +785,7 @@ impl HandleCache {
         // A fresh submit acknowledges any standing revocation.
         self.revoked.remove(name);
         let algo = self.handle(name)?.algorithm();
-        let h = self.handles.get_mut(name).expect("just ensured").as_mut();
+        let h = self.handles.get_mut(name).expect("just ensured");
         let Some(a) = h.as_async() else {
             panic!("algorithm '{algo}' does not support poll-based acquisition");
         };
@@ -740,7 +803,7 @@ impl HandleCache {
                 // scan-mode sessions (poll_all) track nothing extra,
                 // and enable_ready_wakeups seeds the scan set from
                 // `pending` if a ring appears later.
-                if self.ring.is_some() && !self.try_arm(name) {
+                if self.ring.is_some() && (self.manual_arm || !self.try_arm(name)) {
                     self.scan.push(name.to_string());
                 }
                 Ok(other)
@@ -877,7 +940,17 @@ impl HandleCache {
         // The bound is on *unconsumed publications*, so dirty tokens
         // (released registrations whose ring slot may still be
         // occupied) count alongside live ones.
-        if (self.armed.len() + self.dirty_tokens.len()) as u64 >= ring.capacity() {
+        let mut outstanding = self.armed.len() + self.dirty_tokens.len();
+        // Mutation tooth (test builds only): counting only live
+        // registrations lets lane cursors lap the consumer and destroy
+        // a live waiter's token — the overwrite the dirty list exists
+        // to prevent.
+        #[cfg(debug_assertions)]
+        if crate::locks::test_knobs::IGNORE_DIRTY_TOKENS.load(std::sync::atomic::Ordering::Relaxed)
+        {
+            outstanding = self.armed.len();
+        }
+        if outstanding as u64 >= ring.capacity() {
             return false; // full: scanning is safe, overwriting slots is not
         }
         let reg = WakeupReg {
@@ -1052,7 +1125,7 @@ impl HandleCache {
                             // token was a benign spurious duplicate.
                             // Disarm and keep it progressing.
                             self.resolve_registration(&name);
-                            if !self.try_arm(&name) {
+                            if self.manual_arm || !self.try_arm(&name) {
                                 self.scan.push(name);
                             }
                         }
@@ -1077,7 +1150,7 @@ impl HandleCache {
                     false
                 }
                 LockPoll::Cancelled | LockPoll::Expired => false,
-                LockPoll::Pending => !self.try_arm(name),
+                LockPoll::Pending => self.manual_arm || !self.try_arm(name),
             }
         });
         self.scan = scan;
@@ -1145,6 +1218,15 @@ impl HandleCache {
         let Some(a) = h.as_async() else {
             return Ok(());
         };
+        // Mutation tooth (test builds only): dropping the CS-path
+        // renewal starves a live holder's lease — the sweeper revokes
+        // it mid-hold and hands its lock away under the holder's feet.
+        #[cfg(debug_assertions)]
+        if a.is_held()
+            && crate::locks::test_knobs::SKIP_CS_RENEW.load(std::sync::atomic::Ordering::Relaxed)
+        {
+            return Ok(());
+        }
         match a.renew_lease() {
             Ok(()) => Ok(()),
             Err(e) => {
@@ -1201,6 +1283,50 @@ impl HandleCache {
         self.armed.contains_key(name)
     }
 
+    // ---- schedule-explorer step hooks (see `crate::sim`) ----
+    //
+    // These decompose the session's compound rounds into separately
+    // schedulable steps so a deterministic explorer can interleave
+    // them against each other (and against sweeps, clock ticks, and
+    // crashes). They add *scheduling surface only*: every protocol
+    // decision still runs through the real submit/poll/arm machinery.
+
+    /// When set, `submit` and `poll_ready` stop arming wakeup
+    /// registrations automatically; pending names go to the scan set
+    /// and arming happens only through [`HandleCache::arm_now`]. This
+    /// makes the arm its own step, so the explorer can schedule it
+    /// *after* the resolving handoff already landed — the PR 3
+    /// store-load window the arm-time budget re-check closes.
+    pub fn set_manual_arm(&mut self, on: bool) {
+        self.manual_arm = on;
+    }
+
+    /// Explorer step: try to arm pending `name` now, through the real
+    /// arming path (capacity bound, token mint, `arm_wakeup`
+    /// handshake). Returns true iff the registration armed; false if
+    /// `name` is not pending, already armed, refused by the bound, or
+    /// already resolved (`AlreadyReady` — keep polling it).
+    pub fn arm_now(&mut self, name: &str) -> bool {
+        if !self.pending.contains(name) || self.armed.contains_key(name) {
+            return false;
+        }
+        if self.ring.is_none() {
+            self.enable_ready_wakeups(DEFAULT_WAKEUP_CAPACITY);
+        }
+        self.try_arm(name)
+    }
+
+    /// Explorer step: advance pending `name` by exactly one poll
+    /// (panics if `name` has no in-flight acquisition). The compound
+    /// rounds ([`HandleCache::poll_all`]/[`HandleCache::poll_ready`])
+    /// stay available as coarser steps.
+    pub fn poll_now(&mut self, name: &str) -> LockPoll {
+        assert!(self.pending.contains(name), "poll_now of a non-pending name");
+        let r = self.poll_one(name);
+        self.reconcile_relisted();
+        r
+    }
+
     /// Whether `name`'s parked acquisition has already received its
     /// resolving handoff without having consumed it yet — the crash
     /// harness's "mid-handoff" protocol point.
@@ -1213,12 +1339,21 @@ impl HandleCache {
 
     /// Simulate this session's process dying mid-flight: every handle
     /// — held locks, queued acquisitions, armed registrations, the
-    /// wakeup ring, the leased pid slots — is abandoned in place,
-    /// exactly what a crashed client leaves behind in the fabric.
-    /// Nothing is released or unlinked; only the lease sweeper can
-    /// repair what this session held. (The host-side memory is
-    /// intentionally leaked; register arenas never free anyway.)
-    pub fn crash(self) {
+    /// wakeup ring — is abandoned in place, exactly what a crashed
+    /// client leaves behind in the fabric. Nothing is released or
+    /// unlinked; only the lease sweeper can repair what this session
+    /// held. The leased pid slots are handed to the service's orphan
+    /// registry: idle handles' slots return to their pools on the
+    /// spot, in-flight ones as soon as a sweep pass observes the
+    /// sweeper's repair finished (lease word reaped) — so crashed
+    /// clients no longer consume lock-table capacity forever. On a
+    /// lease-less service an in-flight crashed slot still leaks by
+    /// design: nothing can ever prove the abandoned descriptor inert.
+    pub fn crash(mut self) {
+        let svc = Arc::clone(&self.svc);
+        for (_, sh) in self.handles.drain() {
+            svc.orphan_slot(sh);
+        }
         std::mem::forget(self);
     }
 

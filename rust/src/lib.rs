@@ -17,6 +17,9 @@
 //!   wakeup rings, multi-lock Zipfian runner, poll-multiplexed runner
 //!   with scan/ready scheduler modes), and the single-lock workload
 //!   runner.
+//! * [`sim`] — deterministic schedule explorer over the real stack:
+//!   record/replay/shrink, crash injection, mutation teeth, and
+//!   differential traces against the Python oracle (see TESTING.md).
 //! * [`runtime`] — compute engine executing the reference-kernel math
 //!   inside critical sections (native port of the JAX/Pallas kernels;
 //!   see `runtime/mod.rs` for the PJRT substitution note).
@@ -28,5 +31,6 @@ pub mod locks;
 pub mod mc;
 pub mod rdma;
 pub mod runtime;
+pub mod sim;
 pub mod stats;
 pub mod util;

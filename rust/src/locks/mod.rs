@@ -71,6 +71,63 @@ impl std::fmt::Display for LeaseError {
 
 impl std::error::Error for LeaseError {}
 
+/// Coarse protocol phase of an in-flight acquisition — the
+/// classification the schedule explorer ([`crate::sim`]) and crash
+/// harnesses key their step alphabets and injection points off.
+/// Algorithms without a poll machine report [`AcqPhase::Opaque`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcqPhase {
+    /// No acquisition in flight.
+    Idle,
+    /// Submitted but not yet queue-visible (tail CAS pending).
+    Enqueue,
+    /// Parked on the budget word (the armable wait).
+    WaitBudget,
+    /// Peterson-engaged (leader, or budget-exhausted reacquire).
+    Engage,
+    /// The lock is owned.
+    Held,
+    /// The algorithm does not expose its phases.
+    Opaque,
+}
+
+/// Test-only protocol sabotage knobs — the **mutation teeth** the
+/// schedule explorer ([`crate::sim`]) proves itself against. Each knob
+/// disables one known defense so a seeded exploration must rediscover
+/// the bug it guards:
+///
+/// * `SKIP_ARM_RECHECK` — drop `arm_wakeup`'s budget re-check after
+///   publishing the registration (the PR 3 store-load race fix): a
+///   handoff that landed before the arm is missed and the waiter
+///   parks on a token that never comes (lost wakeup).
+/// * `IGNORE_DIRTY_TOKENS` — the session arming bound counts only
+///   live registrations, not released-but-maybe-unconsumed tokens:
+///   ring lanes can lap the consumer and overwrite a live token.
+/// * `SKIP_CS_RENEW` — `HandleCache::renew` no-ops on the
+///   critical-section path (the PR 4 holder heartbeat): a live
+///   holder's lease expires mid-hold and the sweeper gives its lock
+///   away while it still believes it holds.
+///
+/// Compiled only under `debug_assertions` (the `cargo test` profile);
+/// release builds carry no knob and no check. Global statics: tests
+/// that flip them must serialize (see `rust/tests/sim_mutations.rs`)
+/// and reset via [`test_knobs::reset`].
+#[cfg(debug_assertions)]
+pub mod test_knobs {
+    use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+
+    pub static SKIP_ARM_RECHECK: AtomicBool = AtomicBool::new(false);
+    pub static IGNORE_DIRTY_TOKENS: AtomicBool = AtomicBool::new(false);
+    pub static SKIP_CS_RENEW: AtomicBool = AtomicBool::new(false);
+
+    /// Restore every knob to its defended state.
+    pub fn reset() {
+        SKIP_ARM_RECHECK.store(false, SeqCst);
+        IGNORE_DIRTY_TOKENS.store(false, SeqCst);
+        SKIP_CS_RENEW.store(false, SeqCst);
+    }
+}
+
 /// Outcome of one [`AsyncLockHandle::poll_lock`] step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LockPoll {
@@ -228,6 +285,23 @@ pub trait AsyncLockHandle: LockHandle {
     fn has_pending_handoff(&self) -> bool {
         false
     }
+
+    /// Current protocol phase (see [`AcqPhase`]). The schedule
+    /// explorer classifies crash-injection points and arm eligibility
+    /// off this; the default is [`AcqPhase::Opaque`].
+    fn phase(&self) -> AcqPhase {
+        AcqPhase::Opaque
+    }
+
+    /// True iff this handle's shared slot is inert: no acquisition in
+    /// flight *and* no lease repair outstanding (the word is clear or
+    /// already reaped). A crashed session's pid slot may only return
+    /// to the pool once its slot is quiescent — a fenced-unreaped
+    /// descriptor is still a live queue pass-through the sweeper
+    /// writes. Lease-less default: quiescent iff idle.
+    fn slot_quiescent(&self) -> bool {
+        !self.is_acquiring() && !self.is_held()
+    }
 }
 
 /// Accounting for one lease-sweep pass (accumulated across locks and
@@ -251,6 +325,11 @@ pub struct SweepStats {
     /// Fenced leaders whose Peterson win the sweeper is still awaiting
     /// (plus successors caught mid-link).
     pub engaged: u64,
+    /// Crashed clients' pid slots returned to their locks' pools by
+    /// the service's orphan reclamation (filled by
+    /// [`crate::coordinator::LockService::sweep_leases`], not by the
+    /// per-lock sweep).
+    pub pid_reclaimed: u64,
     /// Ticks from lease deadline to completed repair, per reaped slot —
     /// the recovery-latency distribution E13 reports.
     pub recovery_ticks: crate::stats::Histogram,
@@ -268,6 +347,7 @@ impl SweepStats {
         self.reaped += other.reaped;
         self.watching += other.watching;
         self.engaged += other.engaged;
+        self.pid_reclaimed += other.pid_reclaimed;
         self.recovery_ticks.merge(&other.recovery_ticks);
     }
 }

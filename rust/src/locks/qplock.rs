@@ -97,8 +97,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqC
 use std::sync::{Arc, Mutex};
 
 use super::{
-    ArmOutcome, AsyncLockHandle, Class, LeaseError, LockHandle, LockPoll, SharedLock, SweepStats,
-    WakeupReg,
+    AcqPhase, ArmOutcome, AsyncLockHandle, Class, LeaseError, LockHandle, LockPoll, SharedLock,
+    SweepStats, WakeupReg,
 };
 use crate::rdma::{wakeup, Addr, Endpoint, NodeId, RdmaDomain, RmwLane};
 use crate::util::spin::Backoff;
@@ -1052,9 +1052,15 @@ impl AsyncLockHandle for QpHandle {
             AcqState::Idle => true,
             // Not yet visible in the queue: the tail CAS has not landed
             // (a landed CAS transitions out of Enqueue within the same
-            // poll), so nobody can be waiting on our descriptor.
+            // poll), so nobody can be waiting on our descriptor. The
+            // lease is released on the spot (live → 0 claim) so the
+            // sweeper doesn't later fence-and-reap a slot that guards
+            // nothing; losing the claim — a sweeper already fenced an
+            // expired lease here — leaves the word to the sweeper's
+            // trivial ENQ reap, and the next submit parks until then.
             AcqState::Enqueue { .. } => {
                 self.state = AcqState::Idle;
+                let _ = self.lease_release_claim();
                 true
             }
             // Enqueued (or owed the Peterson lock): drain via poll until
@@ -1116,6 +1122,13 @@ impl AsyncLockHandle for QpHandle {
         // passer that misses the gate must have written the budget
         // early enough for the re-check to see it.
         self.shared.wakeups.store(true, SeqCst);
+        // Mutation tooth (test builds only): skipping the re-check
+        // re-opens the store-load race — an already-landed handoff is
+        // missed and the waiter parks on a token nobody will publish.
+        #[cfg(debug_assertions)]
+        if super::test_knobs::SKIP_ARM_RECHECK.load(Relaxed) {
+            return ArmOutcome::Armed;
+        }
         if self.ep.read(self.desc) != WAITING {
             // The handoff already landed; the passer may or may not
             // have seen the registration. Disarm and have the caller
@@ -1149,6 +1162,27 @@ impl AsyncLockHandle for QpHandle {
 
     fn has_pending_handoff(&self) -> bool {
         self.state == AcqState::WaitBudget && self.ep.read_desc(self.desc) != WAITING
+    }
+
+    fn phase(&self) -> AcqPhase {
+        match self.state {
+            AcqState::Idle => AcqPhase::Idle,
+            AcqState::Enqueue { .. } => AcqPhase::Enqueue,
+            AcqState::WaitBudget => AcqPhase::WaitBudget,
+            AcqState::Reacquire | AcqState::EngagePeterson => AcqPhase::Engage,
+            AcqState::Held => AcqPhase::Held,
+        }
+    }
+
+    fn slot_quiescent(&self) -> bool {
+        // Quiescence is judged by the *lease word*, not the handle's
+        // machine state: a crashed client's handle is frozen mid-state
+        // forever, but once the sweeper reaps its slot (or the word is
+        // clear and nothing is in flight) the descriptor is inert.
+        match self.ep.read(self.desc.offset(LEASE)) {
+            0 => self.state == AcqState::Idle,
+            w => lease::reaped(w),
+        }
     }
 }
 

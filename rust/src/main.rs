@@ -14,6 +14,7 @@ use qplock::coordinator::{
 use qplock::locks::{make_lock, Class, ALGORITHMS};
 use qplock::mc::{self, models};
 use qplock::rdma::DomainConfig;
+use qplock::sim;
 
 fn main() {
     let args = Args::from_env();
@@ -24,6 +25,7 @@ fn main() {
         Some("async") => cmd_async(&args),
         Some("ready") => cmd_ready(&args),
         Some("crash") => cmd_crash(&args),
+        Some("sim") => cmd_sim(&args),
         Some("mc") => cmd_mc(&args),
         Some("serve") => cmd_serve(&args),
         Some("list") => cmd_list(),
@@ -353,6 +355,10 @@ fn cmd_crash(args: &Args) {
         r.sweeper_remote_verbs
     );
     println!(
+        "reclamation: {} crashed pid slots returned to their pools",
+        r.pid_slots_reclaimed()
+    );
+    println!(
         "fencing: {} zombie late writes rejected | {} lucky (pre-revoke) releases | \
          {} session-side expiries",
         r.fenced_late_writes, r.lucky_zombies, r.expired_acquisitions
@@ -369,6 +375,112 @@ fn cmd_crash(args: &Args) {
         eprintln!("CRASH RECOVERY FAILED");
         std::process::exit(1);
     }
+}
+
+fn cmd_sim(args: &Args) {
+    // Replay a recorded counterexample artifact.
+    if let Some(path) = args.get("replay") {
+        let path = std::path::Path::new(path);
+        match sim::replay::replay_file(path) {
+            Err(e) => {
+                eprintln!("replay failed: {e}");
+                std::process::exit(2);
+            }
+            Ok((out, claimed)) => {
+                match &out.violation {
+                    Some(v) => println!(
+                        "replayed {}: reproduced {:?} (artifact claims '{}')",
+                        path.display(),
+                        v,
+                        claimed.as_deref().unwrap_or("none"),
+                    ),
+                    None => println!(
+                        "replayed {}: clean (artifact claims '{}')",
+                        path.display(),
+                        claimed.as_deref().unwrap_or("none"),
+                    ),
+                }
+                std::process::exit(if out.violation.is_some() { 1 } else { 0 });
+            }
+        }
+    }
+    // Emit the handle-level differential trace (lockstep with
+    // `python3 python/tools/poll_model_check.py --trace`).
+    if args.flag("differential") {
+        let seed: u64 = args.get_num("seed", 0);
+        let steps: u32 = args.get_num("steps", 400);
+        for line in sim::differential::differential_trace(seed, steps) {
+            println!("{line}");
+        }
+        return;
+    }
+    // Exploration sweep.
+    let mode = match args.get_or("mode", "uniform") {
+        "uniform" => sim::SchedMode::Uniform,
+        "pct" => sim::SchedMode::Pct {
+            depth: args.get_num("pct-depth", 3),
+        },
+        "churn" => sim::SchedMode::Churn,
+        other => {
+            eprintln!("unknown --mode '{other}' (uniform|pct|churn)");
+            std::process::exit(2);
+        }
+    };
+    let cfg = sim::SimConfig {
+        procs: args.get_num("procs", 4),
+        locks: args.get_num("locks", 3),
+        nodes: args.get_num("nodes", 2),
+        budget: args.get_num("budget", 4),
+        lease_ticks: args.get_num("lease-ticks", 64),
+        ring_capacity: args.get_num("ring", 8),
+        max_steps: args.get_num("steps", 400),
+        drain_rounds: args.get_num("drain-rounds", 5_000),
+        crash_prob: args.get_num("crash-prob", 0.02),
+        zombie_prob: args.get_num("zombie-prob", 0.5),
+        max_crashes: args.get_num("max-crashes", 2),
+        manual_arm: args.flag("manual-arm"),
+        mode,
+    };
+    let schedules: u32 = args.get_num("schedules", 200);
+    let base_seed: u64 = args.get_num("seed", 1);
+    let dir = std::path::PathBuf::from(args.get_or("artifact-dir", "target/sim-artifacts"));
+    println!(
+        "sim: {} schedules x {} steps | procs={} locks={} nodes={} mode={} \
+         crash-p={} manual-arm={}",
+        schedules,
+        cfg.max_steps,
+        cfg.procs,
+        cfg.locks,
+        cfg.nodes,
+        cfg.mode.name(),
+        cfg.crash_prob,
+        cfg.manual_arm
+    );
+    let report = sim::explore(&cfg, schedules, base_seed, Some(dir.as_path()));
+    println!(
+        "ran {} schedules | {} cycles completed | {} crashes injected | \
+         {} expiries | {} late writes fenced | sweeper fenced {} reaped {}",
+        report.schedules,
+        report.completed,
+        report.crashes,
+        report.expired,
+        report.late_rejected,
+        report.fenced,
+        report.reaped
+    );
+    if let Some((seed, v)) = &report.violation {
+        let shrunk = report.shrunk.as_ref().map(|t| t.steps.len()).unwrap_or(0);
+        eprintln!("VIOLATION at seed {seed}: {v:?} (shrunk to {shrunk} steps)");
+        if let Some(path) = &report.artifact {
+            eprintln!(
+                "artifact: {} (replay: qplock sim --replay {})",
+                path.display(),
+                path.display()
+            );
+        }
+        std::process::exit(1);
+    }
+    println!("all schedules passed the ME/progress/lease oracles");
 }
 
 fn cmd_bench(args: &Args) {

@@ -1,0 +1,243 @@
+//! Differential traces: the real Rust stack and the Python oracle
+//! (`python/tools/poll_model_check.py --trace`) executing the **same
+//! schedule** from the **same PRNG stream**, each emitting the shared
+//! JSONL schema — any behavioral divergence between the implementation
+//! and its transliteration becomes a line-level `diff`, not a latent
+//! blind spot.
+//!
+//! The alphabet is *handle-level* (poll / unlock / arm / drain /
+//! cancel / crash / tick / sweep) because that is the granularity at
+//! which the Python model transliterates `locks/qplock.rs`: one poll
+//! call is one atomic step on both sides. The schedule is
+//! state-independent — every step is drawn from the shared
+//! xoshiro256** stream regardless of applicability, and inapplicable
+//! steps record a `"noop"`/`"stalled"` outcome — so the two sides cannot
+//! diverge in *what* they execute, only in *what happens*, which is
+//! exactly what the trace records.
+//!
+//! Both sides must draw from their PRNG in the identical order (the
+//! config block first, then exactly one `below(100)` per step plus the
+//! step's operand draws). Python reimplements SplitMix64 + xoshiro256**
+//! bit-for-bit ([`crate::util::prng`]); the Lemire bound reduction
+//! `(x * bound) >> 64` is exact integer math in both languages.
+
+use crate::locks::{
+    make_lock, AcqPhase, ArmOutcome, AsyncLockHandle, LockHandle, LockPoll, WakeupReg,
+};
+use crate::rdma::{DomainConfig, Endpoint, RdmaDomain, WakeupRing};
+use crate::util::prng::Prng;
+
+/// Ring arming bound per handle (physical lane = this + slack); fixed,
+/// not drawn, so the config stream stays short.
+const RING_CAPACITY: u32 = 8;
+
+/// Run the differential schedule for `seed` over `steps` steps and
+/// return the trace lines (no trailing newline per line).
+pub fn differential_trace(seed: u64, steps: u32) -> Vec<String> {
+    let mut rng = Prng::seed_from(seed);
+    let nodes = (1 + rng.below(2)) as u16;
+    let home = rng.below(nodes as u64) as u16;
+    let budget = 1 + rng.below(4);
+    let lease_ticks = 8 + rng.below(16);
+    let n = (2 + rng.below(4)) as usize;
+    let places: Vec<u16> = (0..n).map(|_| rng.below(nodes as u64) as u16).collect();
+    let max_crashes = rng.below(3) as u32;
+
+    let domain = RdmaDomain::new(nodes, 1 << 14, DomainConfig::counted());
+    let lock = make_lock("qplock", &domain, home, n as u32, budget);
+    assert!(lock.enable_leases(lease_ticks));
+    let sweep_eps: Vec<Endpoint> = (0..nodes).map(|nd| domain.endpoint(nd)).collect();
+    let mut handles: Vec<Box<dyn LockHandle>> = (0..n)
+        .map(|i| lock.handle(domain.endpoint(places[i]), i as u32))
+        .collect();
+    let mut rings: Vec<WakeupRing> = (0..n)
+        .map(|i| WakeupRing::new(domain.endpoint(places[i]), RING_CAPACITY))
+        .collect();
+    // Crash model: a *stall* freezes the handle (no polls, no
+    // renewals — the sweeper sees exactly what a dead client leaves
+    // behind and fences/repairs around it); a later crash draw on a
+    // stalled handle *wakes* it, and its next operation is the late
+    // write its fenced epoch must reject ("expired" outcomes). This
+    // covers both the corpse-repair and the zombie-fence surfaces.
+    let mut stalled = vec![false; n];
+    let mut crashes = 0u32;
+    let mut sweep = crate::locks::SweepStats::default();
+
+    let mut out = Vec::with_capacity(steps as usize + 2);
+    let places_s: Vec<String> = places.iter().map(|p| p.to_string()).collect();
+    out.push(format!(
+        "{{\"v\":1,\"kind\":\"qplock-sim-trace\",\"alphabet\":\"handle\",\"seed\":{seed},\
+         \"nodes\":{nodes},\"home\":{home},\"budget\":{budget},\"lease\":{lease_ticks},\
+         \"handles\":{n},\"places\":[{}],\"crashes\":{max_crashes}}}",
+        places_s.join(",")
+    ));
+
+    for i in 0..steps {
+        let r = rng.below(100);
+        if r < 12 {
+            let d = 1 + rng.below(3);
+            let now = domain.advance_lease_clock(d);
+            out.push(format!("{{\"i\":{i},\"op\":\"tick\",\"d\":{d},\"now\":{now}}}"));
+            continue;
+        }
+        if r < 20 {
+            let before = (sweep.fenced, sweep.relayed, sweep.released, sweep.reaped);
+            let now = domain.lease_now();
+            for ep in &sweep_eps {
+                lock.sweep_leases(ep, now, &mut sweep);
+            }
+            out.push(format!(
+                "{{\"i\":{i},\"op\":\"sweep\",\"fenced\":{},\"relayed\":{},\
+                 \"released\":{},\"reaped\":{}}}",
+                sweep.fenced - before.0,
+                sweep.relayed - before.1,
+                sweep.released - before.2,
+                sweep.reaped - before.3,
+            ));
+            continue;
+        }
+        let h = rng.below(n as u64) as usize;
+        let r2 = rng.below(10);
+        match r2 {
+            0..=4 => {
+                let o = if stalled[h] {
+                    "stalled"
+                } else {
+                    match handles[h].as_async().expect("qplock").poll_lock() {
+                        LockPoll::Pending => "pending",
+                        LockPoll::Held => "held",
+                        LockPoll::Cancelled => "cancelled",
+                        LockPoll::Expired => "expired",
+                    }
+                };
+                out.push(format!("{{\"i\":{i},\"op\":\"poll\",\"h\":{h},\"out\":\"{o}\"}}"));
+            }
+            5 => {
+                let o = if stalled[h] {
+                    "stalled"
+                } else if !handles[h].as_async().expect("qplock").is_held() {
+                    "noop"
+                } else {
+                    match handles[h].try_unlock() {
+                        Ok(()) => "ok",
+                        Err(_) => "expired",
+                    }
+                };
+                out.push(format!(
+                    "{{\"i\":{i},\"op\":\"unlock\",\"h\":{h},\"out\":\"{o}\"}}"
+                ));
+            }
+            6 => {
+                let o = if stalled[h] {
+                    "stalled"
+                } else {
+                    let reg = WakeupReg {
+                        ring: rings[h].header(),
+                        token: h as u64,
+                        ring_slots: rings[h].lane_slots(),
+                    };
+                    match handles[h].as_async().expect("qplock").arm_wakeup(reg) {
+                        ArmOutcome::Armed => "armed",
+                        ArmOutcome::AlreadyReady => "ready",
+                        ArmOutcome::Unsupported => "no",
+                    }
+                };
+                out.push(format!("{{\"i\":{i},\"op\":\"arm\",\"h\":{h},\"out\":\"{o}\"}}"));
+            }
+            7 => {
+                if stalled[h] {
+                    out.push(format!(
+                        "{{\"i\":{i},\"op\":\"drain\",\"h\":{h},\"out\":\"stalled\"}}"
+                    ));
+                } else {
+                    let mut tokens = Vec::new();
+                    while let Some(t) = rings[h].pop() {
+                        tokens.push(t);
+                    }
+                    tokens.sort_unstable();
+                    let ts: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+                    out.push(format!(
+                        "{{\"i\":{i},\"op\":\"drain\",\"h\":{h},\"tokens\":[{}]}}",
+                        ts.join(",")
+                    ));
+                }
+            }
+            8 => {
+                let o = if stalled[h] {
+                    "stalled"
+                } else if handles[h].as_async().expect("qplock").cancel_lock() {
+                    "now"
+                } else {
+                    "drain"
+                };
+                out.push(format!(
+                    "{{\"i\":{i},\"op\":\"cancel\",\"h\":{h},\"out\":\"{o}\"}}"
+                ));
+            }
+            _ => {
+                let o = if stalled[h] {
+                    stalled[h] = false;
+                    "woken"
+                } else if crashes < max_crashes {
+                    stalled[h] = true;
+                    crashes += 1;
+                    "stalled"
+                } else {
+                    "noop"
+                };
+                out.push(format!(
+                    "{{\"i\":{i},\"op\":\"crash\",\"h\":{h},\"out\":\"{o}\"}}"
+                ));
+            }
+        }
+    }
+
+    let states: Vec<String> = (0..n)
+        .map(|h| {
+            let s = match handles[h].as_async().expect("qplock").phase() {
+                AcqPhase::Idle => "idle",
+                AcqPhase::Enqueue => "enqueue",
+                AcqPhase::WaitBudget => "wait",
+                AcqPhase::Engage => "engage",
+                AcqPhase::Held => "held",
+                AcqPhase::Opaque => "opaque",
+            };
+            format!("\"{s}\"")
+        })
+        .collect();
+    out.push(format!(
+        "{{\"op\":\"end\",\"now\":{},\"states\":[{}]}}",
+        domain.lease_now(),
+        states.join(",")
+    ));
+    // The harness abandons mid-flight handles by design (a schedule
+    // may end anywhere); raw algorithm handles carry no pid lease, so
+    // teardown needs no cleanup.
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn differential_trace_is_deterministic() {
+        let a = differential_trace(7, 300);
+        let b = differential_trace(7, 300);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 302, "header + steps + end");
+        assert!(a[0].contains("\"alphabet\":\"handle\""));
+        assert!(a.last().unwrap().starts_with("{\"op\":\"end\""));
+    }
+
+    #[test]
+    fn different_seeds_give_different_traces() {
+        let a = differential_trace(1, 200);
+        let b = differential_trace(2, 200);
+        assert_ne!(a, b);
+    }
+
+    // Coverage of the shared alphabet (holds, arms, fences, relays,
+    // zombie late writes) is asserted once, in
+    // `rust/tests/sim_differential.rs::differential_schedule_reaches_the_protocol_depths`.
+}

@@ -1,0 +1,153 @@
+//! Deterministic schedule explorer for the **real** qplock stack.
+//!
+//! The `mc/` module model-checks the paper's PlusCal spec (Appendix A),
+//! but the implementation has grown three protocol layers the spec
+//! never saw: the async poll machine (PR 2), the wakeup rings (PR 3),
+//! and the lease/sweeper crash-recovery layer (PR 4). This module
+//! closes that verification gap by driving the *actual* implementation
+//! — [`crate::coordinator::HandleCache`] sessions over a
+//! [`crate::coordinator::LockService`], `poll_now`/`arm_now` step
+//! hooks, `sweep_leases`, and the domain lease clock — as an explicit
+//! step alphabet under a seeded scheduler, with crash/zombie injection
+//! at step boundaries.
+//!
+//! Three pillars (see TESTING.md for the operational guide):
+//!
+//! * **Record / replay / shrink.** Every run is a recorded sequence of
+//!   [`world::Step`]s. Applying a step is deterministic (no threads,
+//!   no wall clock, logical lease time), so a failing schedule replays
+//!   exactly ([`replay`]), delta-debugs down to a minimal
+//!   counterexample ([`shrink`]), and round-trips through a JSONL
+//!   artifact ([`trace`]) that `qplock sim --replay` re-executes.
+//! * **Oracles.** Mutual exclusion (a [`crate::locks::CsChecker`] per
+//!   lock, live at every step), progress (a bounded deterministic
+//!   drain after the random phase — a lost wakeup or a wedged repair
+//!   fails the bound instead of hanging), and lease repair
+//!   (`fenced == reaped` at quiescence).
+//! * **Mutation teeth.** `crate::locks::test_knobs` disables known
+//!   defenses (the PR 3 arm-time budget re-check, the dirty-token
+//!   arming bound, the PR 4 CS-path renew); `rust/tests/sim_mutations.rs`
+//!   proves the explorer rediscovers each seeded bug within a bounded
+//!   schedule budget and shrinks it to a replayable artifact.
+//!
+//! [`differential`] additionally drives the protocol at *handle*
+//! granularity in lockstep with the Python transliteration
+//! (`python/tools/poll_model_check.py --trace`): both sides derive the
+//! same schedule from the same xoshiro256** stream and emit the same
+//! JSONL trace, so any divergence between the Rust code and the Python
+//! oracle is a line-level diff, not a latent blind spot.
+
+pub mod differential;
+pub mod replay;
+pub mod sched;
+pub mod shrink;
+pub mod trace;
+pub mod world;
+
+use std::path::{Path, PathBuf};
+
+pub use replay::replay;
+pub use sched::SchedMode;
+pub use shrink::shrink;
+pub use trace::TraceFile;
+pub use world::{RunOutcome, SimConfig, Step, Violation, World};
+
+use crate::util::prng::Prng;
+
+/// Outcome of an exploration sweep ([`explore`]).
+pub struct ExploreReport {
+    /// Schedules actually run (≤ the requested budget; stops at the
+    /// first violation).
+    pub schedules: u32,
+    /// First violating schedule: `(seed, violation)`.
+    pub violation: Option<(u64, Violation)>,
+    /// The violating schedule delta-debugged to a minimal step
+    /// sequence (same violation kind, deterministically replayable).
+    pub shrunk: Option<TraceFile>,
+    /// Where the shrunk counterexample was written, if an artifact
+    /// directory was given.
+    pub artifact: Option<PathBuf>,
+    /// Totals across all clean schedules (coverage evidence).
+    pub completed: u64,
+    pub crashes: u64,
+    pub expired: u64,
+    pub late_rejected: u64,
+    pub fenced: u64,
+    pub reaped: u64,
+}
+
+/// Run one seeded schedule: random phase under the configured
+/// scheduler, then the deterministic drain. Returns the recorded steps
+/// and the violation, if any.
+pub fn run_one(cfg: &SimConfig, seed: u64) -> RunOutcome {
+    let mut rng = Prng::seed_from(seed);
+    let mut world = World::new(cfg.clone());
+    let mut sched = sched::Scheduler::new(cfg, &mut rng);
+    let mut steps: Vec<Step> = Vec::with_capacity(cfg.max_steps as usize);
+    for _ in 0..cfg.max_steps {
+        let step = sched.propose(&world, &mut rng);
+        world.apply(&step);
+        steps.push(step);
+        if world.violation().is_some() {
+            break;
+        }
+    }
+    if world.violation().is_none() {
+        world.drain();
+    }
+    world.into_outcome(seed, steps)
+}
+
+/// Explore `schedules` seeds (`base_seed`, `base_seed + 1`, …). On the
+/// first violation, shrink it to a minimal counterexample and (when
+/// `artifact_dir` is given) write a replayable JSONL artifact.
+pub fn explore(
+    cfg: &SimConfig,
+    schedules: u32,
+    base_seed: u64,
+    artifact_dir: Option<&Path>,
+) -> ExploreReport {
+    let mut report = ExploreReport {
+        schedules: 0,
+        violation: None,
+        shrunk: None,
+        artifact: None,
+        completed: 0,
+        crashes: 0,
+        expired: 0,
+        late_rejected: 0,
+        fenced: 0,
+        reaped: 0,
+    };
+    for i in 0..schedules {
+        let seed = base_seed.wrapping_add(i as u64);
+        let out = run_one(cfg, seed);
+        report.schedules += 1;
+        report.completed += out.completed;
+        report.crashes += out.crashes as u64;
+        report.expired += out.expired;
+        report.late_rejected += out.late_rejected;
+        report.fenced += out.sweep.fenced;
+        report.reaped += out.sweep.reaped;
+        if let Some(v) = out.violation {
+            let minimal = shrink(cfg, &out.steps, v.kind());
+            let tf = TraceFile {
+                config: cfg.clone(),
+                seed,
+                violation: Some(v.kind().to_string()),
+                steps: minimal,
+            };
+            if let Some(dir) = artifact_dir {
+                std::fs::create_dir_all(dir).ok();
+                let path = dir.join(format!("sim-seed{}-{}.jsonl", seed, v.kind()));
+                if std::fs::write(&path, tf.encode()).is_ok() {
+                    report.artifact = Some(path);
+                }
+            }
+            report.violation = Some((seed, v));
+            report.shrunk = Some(tf);
+            break;
+        }
+    }
+    report
+}

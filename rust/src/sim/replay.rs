@@ -1,0 +1,39 @@
+//! Deterministic re-execution of a recorded schedule.
+//!
+//! A step sequence applied to a fresh [`World`] always produces the
+//! same behavior (see `world.rs` on determinism), so replaying a trace
+//! reproduces its violation exactly — same kind, same detection step.
+//! Steps whose guards no longer hold (because the shrinker deleted
+//! their prerequisites) are skipped benignly; the drain still runs, so
+//! progress violations are re-judged on the reduced schedule.
+
+use std::path::Path;
+
+use super::trace::TraceFile;
+use super::world::{RunOutcome, SimConfig, Step, World};
+
+/// Re-execute `steps` against a fresh world built from `cfg`: apply
+/// each step (skipping inapplicable ones), then run the deterministic
+/// drain exactly as the original run did.
+pub fn replay(cfg: &SimConfig, steps: &[Step]) -> RunOutcome {
+    let mut world = World::new(cfg.clone());
+    for step in steps {
+        world.apply(step);
+        if world.violation().is_some() {
+            break;
+        }
+    }
+    if world.violation().is_none() {
+        world.drain();
+    }
+    world.into_outcome(0, steps.to_vec())
+}
+
+/// Replay a JSONL artifact from disk. Returns the outcome plus the
+/// violation kind the artifact claims to reproduce.
+pub fn replay_file(path: &Path) -> Result<(RunOutcome, Option<String>), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let tf = TraceFile::decode(&text)?;
+    let out = replay(&tf.config, &tf.steps);
+    Ok((out, tf.violation))
+}

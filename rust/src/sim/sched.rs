@@ -1,0 +1,245 @@
+//! Schedule generators: how the explorer picks the next step.
+//!
+//! Three flavors, all seeded and fully deterministic given the seed:
+//!
+//! * [`SchedMode::Uniform`] — at each step, pick uniformly among the
+//!   currently-enabled steps (system steps — clock ticks and sweeps —
+//!   fire with fixed probability first). The baseline sweep.
+//! * [`SchedMode::Pct`] — PCT-style priority scheduling (Burckhardt et
+//!   al., "A Randomized Scheduler with Probabilistic Guarantees of
+//!   Finding Bugs"): actors get random priorities, the highest-priority
+//!   enabled actor runs, and at `depth` pre-drawn change points the
+//!   current leader drops to the lowest priority. Long runs of one
+//!   actor against a starved other is exactly the shape that exposes
+//!   ordering bugs (a handoff landing entirely before an arm, a holder
+//!   starved past its lease).
+//! * [`SchedMode::Churn`] — a bug-biased heuristic for the wakeup
+//!   bookkeeping: holders release eagerly, sessions re-submit and
+//!   re-arm aggressively, armed names are polled directly (resolving
+//!   them host-side and leaving their publications unconsumed — dirty
+//!   tokens), and `Ready` rounds are withheld until the drain. This is
+//!   the profile that drives ring-cursor laps, the overwrite the
+//!   dirty-token arming bound exists to prevent.
+
+use super::world::{Step, World};
+use super::SimConfig;
+use crate::util::prng::Prng;
+
+/// Scheduler flavor (serialized into trace artifacts by name).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    Uniform,
+    /// `depth` priority-change points over the run.
+    Pct { depth: u32 },
+    Churn,
+}
+
+impl SchedMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedMode::Uniform => "uniform",
+            SchedMode::Pct { .. } => "pct",
+            SchedMode::Churn => "churn",
+        }
+    }
+}
+
+pub struct Scheduler {
+    mode: SchedMode,
+    /// PCT: actor priorities (higher value = runs first) and the step
+    /// indices at which the current leader is demoted.
+    priorities: Vec<i64>,
+    change_points: Vec<u32>,
+    step_no: u32,
+}
+
+impl Scheduler {
+    pub fn new(cfg: &SimConfig, rng: &mut Prng) -> Scheduler {
+        let mut priorities: Vec<i64> = (0..cfg.procs as i64).collect();
+        rng.shuffle(&mut priorities);
+        let change_points = match cfg.mode {
+            SchedMode::Pct { depth } => {
+                (0..depth).map(|_| rng.below(cfg.max_steps.max(1) as u64) as u32).collect()
+            }
+            _ => Vec::new(),
+        };
+        Scheduler {
+            mode: cfg.mode,
+            priorities,
+            change_points,
+            step_no: 0,
+        }
+    }
+
+    /// Propose the next step. Always returns an applicable step (falls
+    /// back to a clock tick when nothing else is enabled — ticks are
+    /// always legal and drive zombies toward their wake deadlines).
+    pub fn propose(&mut self, world: &World, rng: &mut Prng) -> Step {
+        self.step_no += 1;
+        let cfg = world.cfg();
+        // System steps first: the lease clock and the sweeper are the
+        // "environment" — scheduled by rate, independent of actors.
+        let (tick_p, sweep_p) = match self.mode {
+            SchedMode::Churn => (0.04, 0.02),
+            _ => (0.10, 0.06),
+        };
+        let r = rng.f64();
+        if r < tick_p {
+            return Step::Tick { d: 1 + rng.below(3) };
+        }
+        if r < tick_p + sweep_p {
+            return Step::Sweep;
+        }
+        // Pick an actor.
+        let a = match self.pick_actor(world, rng) {
+            Some(a) => a,
+            None => return Step::Tick { d: 1 },
+        };
+        if world.wakeable(a) {
+            return Step::Wake { a };
+        }
+        // Crash injection at the step boundary.
+        if world.crashes() < cfg.max_crashes
+            && cfg.crash_prob > 0.0
+            && !(world.held_of(a).is_empty() && world.pending_of(a).is_empty())
+            && rng.chance(cfg.crash_prob)
+        {
+            return if rng.chance(cfg.zombie_prob) {
+                Step::Stall { a }
+            } else {
+                Step::Kill { a }
+            };
+        }
+        match self.mode {
+            SchedMode::Churn => self.churn_menu(world, a, rng),
+            _ => self.uniform_menu(world, a, rng),
+        }
+    }
+
+    fn pick_actor(&mut self, world: &World, rng: &mut Prng) -> Option<u32> {
+        let n = world.cfg().procs;
+        // Schedulable = alive, or a zombie whose wake deadline passed.
+        let runnable = |a: u32| world.is_alive(a) || world.wakeable(a);
+        match self.mode {
+            SchedMode::Pct { .. } => {
+                if self.change_points.contains(&self.step_no) {
+                    // Demote the current leader to the bottom.
+                    if let Some((leader, _)) = (0..n)
+                        .filter(|&a| runnable(a))
+                        .map(|a| (a, self.priorities[a as usize]))
+                        .max_by_key(|&(_, p)| p)
+                    {
+                        let min = self.priorities.iter().min().copied().unwrap_or(0);
+                        self.priorities[leader as usize] = min - 1;
+                    }
+                }
+                (0..n)
+                    .filter(|&a| runnable(a))
+                    .max_by_key(|&a| self.priorities[a as usize])
+            }
+            _ => {
+                // Uniform among runnable actors; bounded rejection.
+                for _ in 0..8 {
+                    let a = rng.below(n as u64) as u32;
+                    if runnable(a) {
+                        return Some(a);
+                    }
+                }
+                (0..n).find(|&a| runnable(a))
+            }
+        }
+    }
+
+    /// Weighted menu over actor `a`'s enabled operations.
+    fn uniform_menu(&self, world: &World, a: u32, rng: &mut Prng) -> Step {
+        let cfg = world.cfg();
+        let held: Vec<u32> = world.held_of(a).iter().copied().collect();
+        let pending: Vec<u32> = world.pending_of(a).iter().copied().collect();
+        let free: Vec<u32> = (0..cfg.locks)
+            .filter(|l| !world.held_of(a).contains(l) && !world.pending_of(a).contains(l))
+            .collect();
+        let mut menu: Vec<(Step, u32)> = Vec::new();
+        if !free.is_empty() {
+            let l = free[rng.below(free.len() as u64) as usize];
+            menu.push((Step::Submit { a, l }, 4));
+        }
+        if !pending.is_empty() {
+            // Direct polls and arms target unarmed names only: armed
+            // waiters resolve through their tokens (Ready), matching
+            // the production discipline — and keeping a lost wakeup
+            // observable instead of masked by a lucky direct poll.
+            let unarmed: Vec<u32> = pending
+                .iter()
+                .copied()
+                .filter(|&l| !world.is_armed(a, l))
+                .collect();
+            if !unarmed.is_empty() {
+                let l = unarmed[rng.below(unarmed.len() as u64) as usize];
+                menu.push((Step::Poll { a, l }, 4));
+                menu.push((Step::Arm { a, l }, 2));
+            }
+            let l = pending[rng.below(pending.len() as u64) as usize];
+            menu.push((Step::Cancel { a, l }, 1));
+            menu.push((Step::Ready { a }, 3));
+        }
+        if !held.is_empty() {
+            let l = held[rng.below(held.len() as u64) as usize];
+            menu.push((Step::Release { a, l }, 3));
+            menu.push((Step::Hold { a }, 2));
+        }
+        weighted(&menu, rng).unwrap_or(Step::Tick { d: 1 })
+    }
+
+    /// The wakeup-churn bias: see the module docs.
+    fn churn_menu(&self, world: &World, a: u32, rng: &mut Prng) -> Step {
+        let cfg = world.cfg();
+        let held: Vec<u32> = world.held_of(a).iter().copied().collect();
+        let pending: Vec<u32> = world.pending_of(a).iter().copied().collect();
+        let free: Vec<u32> = (0..cfg.locks)
+            .filter(|l| !world.held_of(a).contains(l) && !world.pending_of(a).contains(l))
+            .collect();
+        let mut menu: Vec<(Step, u32)> = Vec::new();
+        if !held.is_empty() {
+            // Holders release eagerly: churn needs handoffs.
+            let l = held[rng.below(held.len() as u64) as usize];
+            menu.push((Step::Release { a, l }, 8));
+        }
+        if let Some(l) = world.last_armed_of(a) {
+            // Poll the most recently armed name directly: once its
+            // handoff lands this resolves it host-side, leaving the
+            // published token unconsumed (a dirty token); until then
+            // it is a harmless parked poll.
+            menu.push((Step::Poll { a, l }, 8));
+        }
+        if !pending.is_empty() {
+            // Arm the newest unarmed pending name.
+            if let Some(&l) = pending.iter().rev().find(|&&l| !world.is_armed(a, l)) {
+                menu.push((Step::Arm { a, l }, 6));
+            }
+            let l = pending[rng.below(pending.len() as u64) as usize];
+            menu.push((Step::Poll { a, l }, 2));
+        }
+        if !free.is_empty() {
+            let l = free[rng.below(free.len() as u64) as usize];
+            menu.push((Step::Submit { a, l }, 6));
+        }
+        // No Ready rounds in the random phase: token consumption is
+        // deferred to the drain, so ring cursors run ahead.
+        weighted(&menu, rng).unwrap_or(Step::Tick { d: 1 })
+    }
+}
+
+fn weighted(menu: &[(Step, u32)], rng: &mut Prng) -> Option<Step> {
+    let total: u32 = menu.iter().map(|(_, w)| w).sum();
+    if total == 0 {
+        return None;
+    }
+    let mut pick = rng.below(total as u64) as u32;
+    for (s, w) in menu {
+        if pick < *w {
+            return Some(*s);
+        }
+        pick -= w;
+    }
+    None
+}

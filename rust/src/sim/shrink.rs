@@ -1,0 +1,79 @@
+//! Delta-debugging over recorded schedules (ddmin, Zeller/Hildebrandt
+//! style): find a locally-minimal step subsequence that still
+//! reproduces the violation.
+//!
+//! The predicate is "replaying the candidate yields a violation of the
+//! same kind" — kind, not exact detail, so the shrinker can cross
+//! harmless boundaries (a wedge at 3 pending shrinking to a wedge at
+//! 1) without wandering onto a different bug. Replays are deterministic
+//! and single-threaded; each candidate is a full fresh world, so the
+//! reduced trace is self-contained and replayable on its own.
+
+use super::replay::replay;
+use super::world::{SimConfig, Step};
+
+/// Is the candidate still failing with the same violation kind?
+fn still_fails(cfg: &SimConfig, steps: &[Step], kind: &str) -> bool {
+    replay(cfg, steps)
+        .violation
+        .map(|v| v.kind() == kind)
+        .unwrap_or(false)
+}
+
+/// ddmin over the step sequence. Returns a locally-minimal subsequence
+/// (1-minimal w.r.t. chunk removal at the final granularity) that
+/// still reproduces a violation of `kind`. If the input does not
+/// reproduce (it should — it was just recorded), it is returned
+/// unchanged.
+pub fn shrink(cfg: &SimConfig, steps: &[Step], kind: &str) -> Vec<Step> {
+    let mut current: Vec<Step> = steps.to_vec();
+    if !still_fails(cfg, &current, kind) {
+        return current;
+    }
+    let mut chunks = 2usize;
+    while current.len() >= 2 {
+        let chunk = current.len().div_ceil(chunks);
+        let mut reduced = false;
+        let mut start = 0;
+        while start < current.len() {
+            let end = (start + chunk).min(current.len());
+            // Try deleting current[start..end].
+            let mut candidate = Vec::with_capacity(current.len() - (end - start));
+            candidate.extend_from_slice(&current[..start]);
+            candidate.extend_from_slice(&current[end..]);
+            if !candidate.is_empty() && still_fails(cfg, &candidate, kind) {
+                current = candidate;
+                reduced = true;
+                // Re-scan from the same offset at the same granularity.
+            } else {
+                start = end;
+            }
+        }
+        if reduced {
+            chunks = chunks.max(2);
+        } else if chunk <= 1 {
+            break;
+        } else {
+            chunks = (chunks * 2).min(current.len());
+        }
+    }
+    current
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run_one;
+
+    #[test]
+    fn shrinking_a_clean_schedule_is_identity() {
+        let cfg = SimConfig {
+            max_steps: 60,
+            ..SimConfig::default()
+        };
+        let out = run_one(&cfg, 11);
+        assert!(out.violation.is_none(), "defended run must be clean");
+        let kept = shrink(&cfg, &out.steps, "wedged");
+        assert_eq!(kept, out.steps, "nothing to shrink toward");
+    }
+}

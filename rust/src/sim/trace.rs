@@ -1,0 +1,258 @@
+//! Trace artifacts: the compact JSONL schema shared with the Python
+//! oracle (`python/tools/poll_model_check.py --trace`).
+//!
+//! One JSON object per line, flat (no nesting except the header's
+//! `config`), hand-rolled in both languages so the two sides can be
+//! diffed byte-for-byte. Two alphabets share the schema:
+//!
+//! * `"alphabet":"session"` — the explorer's step alphabet
+//!   ([`super::world::Step`]); these artifacts are replayable with
+//!   [`super::replay`] / `qplock sim --replay`.
+//! * `"alphabet":"handle"` — the differential driver's handle-level
+//!   alphabet ([`super::differential`]); these are emitted identically
+//!   by Rust and Python and diffed by `rust/tests/sim_differential.rs`
+//!   and CI.
+//!
+//! Header line:
+//! `{"v":1,"kind":"qplock-sim-trace","alphabet":"session","seed":S,`
+//! `"violation":"wedged","config":{...}}`; step lines carry `"i"` (the
+//! 0-based index), `"op"`, and the op's operands.
+
+use super::world::{SimConfig, Step};
+use super::SchedMode;
+
+/// A recorded schedule plus the world shape needed to replay it.
+#[derive(Clone)]
+pub struct TraceFile {
+    pub config: SimConfig,
+    pub seed: u64,
+    /// Violation kind the schedule reproduces (`None` for clean runs).
+    pub violation: Option<String>,
+    pub steps: Vec<Step>,
+}
+
+impl TraceFile {
+    /// Serialize to the JSONL artifact format.
+    pub fn encode(&self) -> String {
+        let c = &self.config;
+        let (mode, depth) = match c.mode {
+            SchedMode::Pct { depth } => ("pct", depth),
+            m => (m.name(), 0),
+        };
+        let mut out = format!(
+            "{{\"v\":1,\"kind\":\"qplock-sim-trace\",\"alphabet\":\"session\",\
+             \"seed\":{},\"violation\":\"{}\",\"config\":{{\"procs\":{},\"locks\":{},\
+             \"nodes\":{},\"budget\":{},\"lease\":{},\"ring\":{},\"max_steps\":{},\
+             \"drain_rounds\":{},\"crash_prob\":{},\"zombie_prob\":{},\"max_crashes\":{},\
+             \"manual_arm\":{},\"mode\":\"{}\",\"pct_depth\":{}}}}}\n",
+            self.seed,
+            self.violation.as_deref().unwrap_or("none"),
+            c.procs,
+            c.locks,
+            c.nodes,
+            c.budget,
+            c.lease_ticks,
+            c.ring_capacity,
+            c.max_steps,
+            c.drain_rounds,
+            c.crash_prob,
+            c.zombie_prob,
+            c.max_crashes,
+            c.manual_arm,
+            mode,
+            depth,
+        );
+        for (i, s) in self.steps.iter().enumerate() {
+            out.push_str(&encode_step(i, s));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse an artifact produced by [`TraceFile::encode`].
+    pub fn decode(text: &str) -> Result<TraceFile, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or("empty trace")?;
+        if field_str(header, "kind").as_deref() != Some("qplock-sim-trace") {
+            return Err("not a qplock-sim-trace".into());
+        }
+        if field_str(header, "alphabet").as_deref() != Some("session") {
+            return Err("only session-alphabet traces are replayable".into());
+        }
+        let mode = match field_str(header, "mode").as_deref() {
+            Some("pct") => SchedMode::Pct {
+                depth: field_u64(header, "pct_depth").unwrap_or(0) as u32,
+            },
+            Some("churn") => SchedMode::Churn,
+            _ => SchedMode::Uniform,
+        };
+        let config = SimConfig {
+            procs: need(header, "procs")? as u32,
+            locks: need(header, "locks")? as u32,
+            nodes: need(header, "nodes")? as u16,
+            budget: need(header, "budget")?,
+            lease_ticks: need(header, "lease")?,
+            ring_capacity: need(header, "ring")? as u32,
+            max_steps: need(header, "max_steps")? as u32,
+            drain_rounds: need(header, "drain_rounds")? as u32,
+            crash_prob: field_f64(header, "crash_prob").unwrap_or(0.0),
+            zombie_prob: field_f64(header, "zombie_prob").unwrap_or(0.0),
+            max_crashes: need(header, "max_crashes")? as u32,
+            manual_arm: header.contains("\"manual_arm\":true"),
+            mode,
+        };
+        let violation = field_str(header, "violation").filter(|v| v.as_str() != "none");
+        let seed = need(header, "seed")?;
+        let mut steps = Vec::new();
+        for line in lines {
+            steps.push(decode_step(line)?);
+        }
+        Ok(TraceFile {
+            config,
+            seed,
+            violation,
+            steps,
+        })
+    }
+}
+
+fn encode_step(i: usize, s: &Step) -> String {
+    match *s {
+        Step::Submit { a, l } => format!("{{\"i\":{i},\"op\":\"submit\",\"a\":{a},\"l\":{l}}}"),
+        Step::Poll { a, l } => format!("{{\"i\":{i},\"op\":\"poll\",\"a\":{a},\"l\":{l}}}"),
+        Step::Arm { a, l } => format!("{{\"i\":{i},\"op\":\"arm\",\"a\":{a},\"l\":{l}}}"),
+        Step::Ready { a } => format!("{{\"i\":{i},\"op\":\"ready\",\"a\":{a}}}"),
+        Step::Release { a, l } => {
+            format!("{{\"i\":{i},\"op\":\"release\",\"a\":{a},\"l\":{l}}}")
+        }
+        Step::Cancel { a, l } => format!("{{\"i\":{i},\"op\":\"cancel\",\"a\":{a},\"l\":{l}}}"),
+        Step::Hold { a } => format!("{{\"i\":{i},\"op\":\"hold\",\"a\":{a}}}"),
+        Step::Tick { d } => format!("{{\"i\":{i},\"op\":\"tick\",\"d\":{d}}}"),
+        Step::Sweep => format!("{{\"i\":{i},\"op\":\"sweep\"}}"),
+        Step::Kill { a } => format!("{{\"i\":{i},\"op\":\"kill\",\"a\":{a}}}"),
+        Step::Stall { a } => format!("{{\"i\":{i},\"op\":\"stall\",\"a\":{a}}}"),
+        Step::Wake { a } => format!("{{\"i\":{i},\"op\":\"wake\",\"a\":{a}}}"),
+    }
+}
+
+fn decode_step(line: &str) -> Result<Step, String> {
+    let op = field_str(line, "op").ok_or_else(|| format!("no op in {line}"))?;
+    let a = || need(line, "a").map(|v| v as u32);
+    let l = || need(line, "l").map(|v| v as u32);
+    Ok(match op.as_str() {
+        "submit" => Step::Submit { a: a()?, l: l()? },
+        "poll" => Step::Poll { a: a()?, l: l()? },
+        "arm" => Step::Arm { a: a()?, l: l()? },
+        "ready" => Step::Ready { a: a()? },
+        "release" => Step::Release { a: a()?, l: l()? },
+        "cancel" => Step::Cancel { a: a()?, l: l()? },
+        "hold" => Step::Hold { a: a()? },
+        "tick" => Step::Tick { d: need(line, "d")? },
+        "sweep" => Step::Sweep,
+        "kill" => Step::Kill { a: a()? },
+        "stall" => Step::Stall { a: a()? },
+        "wake" => Step::Wake { a: a()? },
+        other => return Err(format!("unknown op '{other}'")),
+    })
+}
+
+// ---- minimal flat-JSON field extraction (we only parse our own
+// writer's output, so a scan for `"key":` is sufficient and keeps the
+// repo dependency-free) ----
+
+fn field_raw<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    let end = rest
+        .char_indices()
+        .find(|(i, c)| {
+            if rest.starts_with('"') {
+                *i > 0 && *c == '"'
+            } else {
+                *c == ',' || *c == '}' || *c == ']'
+            }
+        })
+        .map(|(i, _)| if rest.starts_with('"') { i + 1 } else { i })
+        .unwrap_or(rest.len());
+    Some(&rest[..end])
+}
+
+/// String field (quotes stripped); `None` for absent or non-string.
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let raw = field_raw(line, key)?;
+    raw.strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .map(|s| s.to_string())
+}
+
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    field_raw(line, key)?.parse().ok()
+}
+
+fn field_f64(line: &str, key: &str) -> Option<f64> {
+    field_raw(line, key)?.parse().ok()
+}
+
+fn need(line: &str, key: &str) -> Result<u64, String> {
+    field_u64(line, key).ok_or_else(|| format!("missing numeric field '{key}' in {line}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_round_trips() {
+        let cfg = SimConfig {
+            crash_prob: 0.25,
+            manual_arm: true,
+            mode: SchedMode::Pct { depth: 3 },
+            ..SimConfig::default()
+        };
+        let tf = TraceFile {
+            config: cfg,
+            seed: 42,
+            violation: Some("wedged".into()),
+            steps: vec![
+                Step::Submit { a: 1, l: 0 },
+                Step::Tick { d: 2 },
+                Step::Sweep,
+                Step::Arm { a: 1, l: 0 },
+                Step::Ready { a: 1 },
+                Step::Kill { a: 0 },
+                Step::Wake { a: 2 },
+            ],
+        };
+        let text = tf.encode();
+        let back = TraceFile::decode(&text).unwrap();
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.violation.as_deref(), Some("wedged"));
+        assert_eq!(back.steps, tf.steps);
+        assert_eq!(back.config.procs, tf.config.procs);
+        assert_eq!(back.config.lease_ticks, tf.config.lease_ticks);
+        assert!(back.config.manual_arm);
+        assert_eq!(back.config.mode, SchedMode::Pct { depth: 3 });
+        assert!((back.config.crash_prob - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clean_trace_has_no_violation() {
+        let tf = TraceFile {
+            config: SimConfig::default(),
+            seed: 7,
+            violation: None,
+            steps: vec![Step::Sweep],
+        };
+        let back = TraceFile::decode(&tf.encode()).unwrap();
+        assert_eq!(back.violation, None);
+        assert!(!back.config.manual_arm);
+        assert_eq!(back.config.mode, SchedMode::Uniform);
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(TraceFile::decode("").is_err());
+        assert!(TraceFile::decode("{\"v\":1}\n").is_err());
+    }
+}

@@ -1,0 +1,683 @@
+//! The explorer's world: the **real** lock stack (service, sessions,
+//! sweeper, lease clock) plus the explicit step alphabet a scheduler
+//! interleaves and the oracles that judge every interleaving.
+//!
+//! A [`World`] owns a single-threaded instance of the production
+//! objects — an [`RdmaDomain`], a lease-enabled [`LockService`], and
+//! one [`HandleCache`] session per simulated actor — and advances it
+//! only through [`World::apply`]. Every protocol decision still runs
+//! through the real submit/poll/arm/release/sweep machinery; the world
+//! adds *scheduling surface* (single-name polls via
+//! [`HandleCache::poll_now`], manually-scheduled arms via
+//! [`HandleCache::arm_now`], explicit clock ticks and sweep passes)
+//! and *fault injection* (kills via [`HandleCache::crash`], zombie
+//! stalls that stop renewing and later attempt the fenced late write).
+//!
+//! Determinism: applying the same step sequence to a fresh world
+//! always produces the same behavior. There are no threads, time is
+//! the logical lease clock, ring consumption order is fixed, and no
+//! protocol decision reads a `HashMap`'s iteration order. This is what
+//! makes record/replay/shrink sound.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::coordinator::{HandleCache, LockService};
+use crate::locks::{CsChecker, LockPoll, SweepStats};
+use crate::rdma::{DomainConfig, RdmaDomain};
+
+/// World shape + exploration budget. Carried verbatim inside trace
+/// artifacts so a replay reconstructs the exact world.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Simulated actors (one session each).
+    pub procs: u32,
+    /// Named locks (`L0`, `L1`, …), homed round-robin over the nodes.
+    pub locks: u32,
+    /// Cluster nodes.
+    pub nodes: u16,
+    /// qplock fairness budget.
+    pub budget: u64,
+    /// Lease term in lease-clock ticks (must be ≥ 8: a [`Step::Tick`]
+    /// advances the clock by at most 3, and live actors renew at every
+    /// tick, so a live lease can never expire spuriously).
+    pub lease_ticks: u64,
+    /// Session wakeup-ring arming bound.
+    pub ring_capacity: u32,
+    /// Random-phase length (scheduled steps) before the drain.
+    pub max_steps: u32,
+    /// Deterministic-drain round bound; exceeding it is the
+    /// progress-oracle failure ([`Violation::Wedged`]).
+    pub drain_rounds: u32,
+    /// Per-eligible-proposal crash probability.
+    pub crash_prob: f64,
+    /// Fraction of injections that stall (zombie) instead of kill.
+    pub zombie_prob: f64,
+    /// Hard cap on injections per schedule.
+    pub max_crashes: u32,
+    /// Sessions arm only through scheduled [`Step::Arm`]s (the PR 3
+    /// store-load window becomes schedulable). When false, submit and
+    /// `poll_ready` arm automatically, as production sessions do.
+    pub manual_arm: bool,
+    /// Scheduler flavor (recorded for reproducibility; replay ignores
+    /// it — the steps are already chosen).
+    pub mode: super::SchedMode,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            procs: 4,
+            locks: 3,
+            nodes: 2,
+            budget: 4,
+            lease_ticks: 64,
+            ring_capacity: 8,
+            max_steps: 400,
+            drain_rounds: 5_000,
+            crash_prob: 0.0,
+            zombie_prob: 0.5,
+            max_crashes: 2,
+            manual_arm: false,
+            mode: super::SchedMode::Uniform,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn lock_name(l: u32) -> String {
+        format!("L{l}")
+    }
+}
+
+/// One schedulable operation — the explorer's step alphabet. Every
+/// variant maps onto a real API call (or the fault injector); a step
+/// that is not applicable in the current state is skipped benignly,
+/// which is what lets the shrinker delete arbitrary subsets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Start a poll-based acquisition of lock `l` by actor `a`.
+    Submit { a: u32, l: u32 },
+    /// Advance actor `a`'s in-flight acquisition of `l` by one poll.
+    Poll { a: u32, l: u32 },
+    /// Arm an event-driven wakeup for actor `a`'s parked wait on `l`.
+    Arm { a: u32, l: u32 },
+    /// One `poll_ready` round of actor `a`'s session (consume ring
+    /// tokens, poll the unarmed scan set, heartbeat).
+    Ready { a: u32 },
+    /// Release lock `l` held by actor `a`.
+    Release { a: u32, l: u32 },
+    /// Cancel actor `a`'s in-flight acquisition of `l`.
+    Cancel { a: u32, l: u32 },
+    /// Actor `a` dwells inside its critical section for one step.
+    Hold { a: u32 },
+    /// Advance the lease clock by `d` (≤ 3); every live actor renews.
+    Tick { d: u64 },
+    /// One full sweep pass (every lock, every node's sweeper agent).
+    Sweep,
+    /// Kill actor `a`: its session is abandoned in place.
+    Kill { a: u32 },
+    /// Stall actor `a` as a zombie: no steps, no renewals, until the
+    /// clock passes its wake deadline.
+    Stall { a: u32 },
+    /// Wake a stalled zombie: it attempts the late operations its
+    /// fenced epochs must reject, then resumes normal life.
+    Wake { a: u32 },
+}
+
+/// An oracle failure. `step` is the 0-based index of the scheduled
+/// step at which it was detected (drain-phase detections carry the
+/// index of the last scheduled step — the drain runs after the
+/// recorded schedule).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// Two actors inside one lock's critical section at once.
+    MutualExclusion { lock: u32, step: usize },
+    /// The deterministic drain did not converge: a lost wakeup or a
+    /// wedged survivor.
+    Wedged { pending: u32, armed: u32 },
+    /// Quiescence reached but repairs dangle (`fenced != reaped`).
+    UnrepairedFence { fenced: u64, reaped: u64 },
+}
+
+impl Violation {
+    /// Stable short name — the shrinker's "same bug" predicate and the
+    /// artifact filename component.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Violation::MutualExclusion { .. } => "mutual-exclusion",
+            Violation::Wedged { .. } => "wedged",
+            Violation::UnrepairedFence { .. } => "unrepaired-fence",
+        }
+    }
+}
+
+/// What one seeded run produced: the recorded schedule, the verdict,
+/// and coverage counters.
+pub struct RunOutcome {
+    pub seed: u64,
+    pub steps: Vec<Step>,
+    pub violation: Option<Violation>,
+    /// Lock cycles completed (acquire → release) across actors.
+    pub completed: u64,
+    /// Injections performed (kills + stalls).
+    pub crashes: u32,
+    /// Acquisitions the session side observed as revoked.
+    pub expired: u64,
+    /// Late operations the fence rejected (zombie releases etc.).
+    pub late_rejected: u64,
+    /// Zombies that woke before the sweeper revoked them.
+    pub lucky_zombies: u64,
+    /// Aggregate sweeper accounting across the run.
+    pub sweep: SweepStats,
+    /// Remote verbs issued through local-class handles of surviving
+    /// sessions — the paper's headline, must stay 0.
+    pub local_remote_verbs: u64,
+    /// Crashed pid slots still parked at the end (0 once every repair
+    /// reaped).
+    pub orphaned_left: usize,
+}
+
+enum ActorState {
+    Alive,
+    Stalled { wake_at: u64 },
+    Dead,
+}
+
+struct Actor {
+    session: Option<HandleCache>,
+    state: ActorState,
+    /// World's view of locks this actor holds (oracle bookkeeping).
+    held: BTreeSet<u32>,
+    /// World's view of in-flight acquisitions (resynced from the
+    /// session after every step; BTreeSet for deterministic menus).
+    pending: BTreeSet<u32>,
+    /// Most recently armed lock (the churn scheduler's bias target).
+    last_armed: Option<u32>,
+}
+
+/// The explorer's world. See the module docs.
+pub struct World {
+    cfg: SimConfig,
+    domain: Arc<RdmaDomain>,
+    svc: Arc<LockService>,
+    names: Vec<String>,
+    checkers: Vec<CsChecker>,
+    actors: Vec<Actor>,
+    sweep: SweepStats,
+    crashes: u32,
+    completed: u64,
+    expired: u64,
+    late_rejected: u64,
+    lucky_zombies: u64,
+    applied: usize,
+    violation: Option<Violation>,
+}
+
+impl World {
+    pub fn new(cfg: SimConfig) -> World {
+        assert!(cfg.procs >= 1 && cfg.locks >= 1 && cfg.nodes >= 1);
+        assert!(cfg.lease_ticks >= 8, "a tick (≤3) must not cross a term");
+        let domain = RdmaDomain::new(cfg.nodes, 1 << 16, DomainConfig::counted());
+        let svc = Arc::new(
+            LockService::with_shards(&domain, "qplock", cfg.budget, 1)
+                .with_default_max_procs(cfg.procs)
+                .with_lease_ticks(cfg.lease_ticks),
+        );
+        let names: Vec<String> = (0..cfg.locks).map(SimConfig::lock_name).collect();
+        for (l, name) in names.iter().enumerate() {
+            svc.create_lock(name, "qplock", (l as u16) % cfg.nodes, cfg.procs, cfg.budget)
+                .expect("fresh registry");
+        }
+        let checkers: Vec<CsChecker> = (0..cfg.locks).map(|_| CsChecker::default()).collect();
+        let actors = (0..cfg.procs)
+            .map(|a| {
+                let mut s = svc.session((a as u16) % cfg.nodes);
+                s.enable_ready_wakeups(cfg.ring_capacity);
+                s.set_sweep_interval(0); // armed waiters wake ONLY by token
+                s.set_lease_heartbeat(1);
+                s.set_manual_arm(cfg.manual_arm);
+                Actor {
+                    session: Some(s),
+                    state: ActorState::Alive,
+                    held: BTreeSet::new(),
+                    pending: BTreeSet::new(),
+                    last_armed: None,
+                }
+            })
+            .collect();
+        World {
+            cfg,
+            domain,
+            svc,
+            names,
+            checkers,
+            actors,
+            sweep: SweepStats::default(),
+            crashes: 0,
+            completed: 0,
+            expired: 0,
+            late_rejected: 0,
+            lucky_zombies: 0,
+            applied: 0,
+            violation: None,
+        }
+    }
+
+    pub fn violation(&self) -> Option<&Violation> {
+        self.violation.as_ref()
+    }
+
+    // -- scheduler-facing views (deterministic: BTreeSets + counters) --
+
+    pub fn cfg(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn now(&self) -> u64 {
+        self.domain.lease_now()
+    }
+
+    pub fn crashes(&self) -> u32 {
+        self.crashes
+    }
+
+    pub fn is_alive(&self, a: u32) -> bool {
+        matches!(self.actors[a as usize].state, ActorState::Alive)
+    }
+
+    pub fn is_dead(&self, a: u32) -> bool {
+        matches!(self.actors[a as usize].state, ActorState::Dead)
+    }
+
+    pub fn wakeable(&self, a: u32) -> bool {
+        matches!(self.actors[a as usize].state, ActorState::Stalled { wake_at }
+            if self.now() >= wake_at)
+    }
+
+    pub fn held_of(&self, a: u32) -> &BTreeSet<u32> {
+        &self.actors[a as usize].held
+    }
+
+    pub fn pending_of(&self, a: u32) -> &BTreeSet<u32> {
+        &self.actors[a as usize].pending
+    }
+
+    pub fn last_armed_of(&self, a: u32) -> Option<u32> {
+        let actor = &self.actors[a as usize];
+        actor.last_armed.filter(|l| actor.pending.contains(l))
+    }
+
+    pub fn is_armed(&self, a: u32, l: u32) -> bool {
+        self.actors[a as usize]
+            .session
+            .as_ref()
+            .is_some_and(|s| s.is_armed(&self.names[l as usize]))
+    }
+
+    /// Apply one step. Returns `true` if the step acted (its guards
+    /// held), `false` if it was skipped — replays and shrunk traces
+    /// skip steps whose preconditions earlier deletions removed.
+    pub fn apply(&mut self, step: &Step) -> bool {
+        if self.violation.is_some() {
+            return false;
+        }
+        let acted = self.apply_inner(step);
+        self.applied += 1;
+        acted
+    }
+
+    fn apply_inner(&mut self, step: &Step) -> bool {
+        match *step {
+            Step::Submit { a, l } => self.do_submit(a, l),
+            Step::Poll { a, l } => self.do_poll(a, l),
+            Step::Arm { a, l } => self.do_arm(a, l),
+            Step::Ready { a } => self.do_ready(a),
+            Step::Release { a, l } => self.do_release(a, l),
+            Step::Cancel { a, l } => self.do_cancel(a, l),
+            Step::Hold { a } => {
+                self.is_alive(a) && !self.actors[a as usize].held.is_empty()
+            }
+            Step::Tick { d } => self.do_tick(d),
+            Step::Sweep => self.do_sweep(),
+            Step::Kill { a } => self.do_kill(a),
+            Step::Stall { a } => self.do_stall(a),
+            Step::Wake { a } => self.do_wake(a),
+        }
+    }
+
+    /// Oracle entry: actor `a` enters lock `l`'s critical section.
+    fn enter(&mut self, a: u32, l: u32) {
+        self.checkers[l as usize].enter(a + 1);
+        self.actors[a as usize].held.insert(l);
+        if self.checkers[l as usize].violations() > 0 {
+            self.violation = Some(Violation::MutualExclusion {
+                lock: l,
+                step: self.applied,
+            });
+        }
+    }
+
+    /// Post-step bookkeeping for actor `a`: absorb revocations the
+    /// session observed (closing the oracle for revoked holds) and
+    /// resync the world's pending view from the session's truth.
+    fn reconcile(&mut self, a: u32) {
+        let names = &self.names;
+        let actor = &mut self.actors[a as usize];
+        let Some(sess) = actor.session.as_mut() else {
+            return;
+        };
+        for name in sess.take_expired() {
+            let l = names.iter().position(|n| *n == name).expect("known name") as u32;
+            if actor.held.remove(&l) {
+                self.checkers[l as usize].exit(a + 1);
+            }
+            self.expired += 1;
+        }
+        actor.pending = (0..self.cfg.locks)
+            .filter(|&l| sess.is_pending(&names[l as usize]))
+            .collect();
+    }
+
+    fn do_submit(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) || self.actors[a as usize].held.contains(&l) {
+            return false;
+        }
+        let name = self.names[l as usize].clone();
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        if sess.is_pending(&name) {
+            return false;
+        }
+        let r = sess.submit(&name).expect("capacity sized to the cohort");
+        if r == LockPoll::Held {
+            self.enter(a, l);
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_poll(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        let name = self.names[l as usize].clone();
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        if !sess.is_pending(&name) {
+            return false;
+        }
+        let r = sess.poll_now(&name);
+        if r == LockPoll::Held {
+            self.enter(a, l);
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_arm(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        let name = self.names[l as usize].clone();
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        if !sess.is_pending(&name) {
+            return false;
+        }
+        if sess.arm_now(&name) {
+            self.actors[a as usize].last_armed = Some(l);
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_ready(&mut self, a: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        let got = sess.poll_ready();
+        for name in got {
+            let l = self.names.iter().position(|n| *n == name).expect("known") as u32;
+            self.enter(a, l);
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_release(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) || !self.actors[a as usize].held.contains(&l) {
+            return false;
+        }
+        // Close the oracle entry first, exactly like the runners: the
+        // release claim below is the shared-state commit, and a fenced
+        // claim means the CS was already over when the sweeper revoked.
+        self.checkers[l as usize].exit(a + 1);
+        self.actors[a as usize].held.remove(&l);
+        let name = self.names[l as usize].clone();
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        match sess.release(&name) {
+            Ok(()) => self.completed += 1,
+            Err(_) => self.late_rejected += 1,
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_cancel(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        let name = self.names[l as usize].clone();
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        if !sess.is_pending(&name) {
+            return false;
+        }
+        sess.cancel(&name);
+        self.reconcile(a);
+        true
+    }
+
+    fn do_tick(&mut self, d: u64) -> bool {
+        debug_assert!((1..=3).contains(&d));
+        self.domain.advance_lease_clock(d);
+        // Every live actor's runtime renews at step entry (ROADMAP
+        // §Failure model): held leases through the session's CS-path
+        // renew (the SKIP_CS_RENEW mutation gates exactly this call),
+        // pending ones through the heartbeat. Zombies and the dead
+        // renew nothing — that is what makes them expire.
+        for a in 0..self.cfg.procs {
+            if !self.is_alive(a) {
+                continue;
+            }
+            for l in self.actors[a as usize].held.clone() {
+                let name = self.names[l as usize].clone();
+                let sess = self.actors[a as usize].session.as_mut().expect("alive");
+                let _ = sess.renew(&name);
+            }
+            let sess = self.actors[a as usize].session.as_mut().expect("alive");
+            sess.renew_pending();
+            self.reconcile(a);
+        }
+        true
+    }
+
+    fn do_sweep(&mut self) -> bool {
+        let pass = self.svc.sweep_leases(self.domain.lease_now());
+        self.sweep.absorb(&pass);
+        true
+    }
+
+    fn crash_eligible(&self, a: u32) -> bool {
+        self.is_alive(a)
+            && self.crashes < self.cfg.max_crashes
+            && !(self.actors[a as usize].held.is_empty()
+                && self.actors[a as usize].pending.is_empty())
+    }
+
+    fn do_kill(&mut self, a: u32) -> bool {
+        if !self.crash_eligible(a) {
+            return false;
+        }
+        for l in self.actors[a as usize].held.clone() {
+            self.checkers[l as usize].exit(a + 1);
+        }
+        let actor = &mut self.actors[a as usize];
+        actor.held.clear();
+        actor.pending.clear();
+        actor.state = ActorState::Dead;
+        actor.session.take().expect("alive").crash();
+        self.crashes += 1;
+        true
+    }
+
+    fn do_stall(&mut self, a: u32) -> bool {
+        if !self.crash_eligible(a) {
+            return false;
+        }
+        // The stalled CS is abandoned (its side effects stay, per the
+        // failure model); the zombie's own late ops are fenced checks.
+        for l in self.actors[a as usize].held.clone() {
+            self.checkers[l as usize].exit(a + 1);
+        }
+        self.actors[a as usize].state = ActorState::Stalled {
+            wake_at: self.now() + 4 * self.cfg.lease_ticks,
+        };
+        self.crashes += 1;
+        true
+    }
+
+    fn do_wake(&mut self, a: u32) -> bool {
+        if !self.wakeable(a) {
+            return false;
+        }
+        self.actors[a as usize].state = ActorState::Alive;
+        // The zombie's first acts are the late writes its fenced
+        // epochs must reject. (A pre-revoke wake releases normally —
+        // the release claim won the lease word, still single-grant.)
+        for l in self.actors[a as usize].held.clone() {
+            self.actors[a as usize].held.remove(&l);
+            let name = self.names[l as usize].clone();
+            let sess = self.actors[a as usize].session.as_mut().expect("alive");
+            match sess.release(&name) {
+                Ok(()) => {
+                    // A pre-revoke wake: a genuine acquire → release
+                    // cycle completed, just by a process that was
+                    // presumed dead for a while.
+                    self.lucky_zombies += 1;
+                    self.completed += 1;
+                }
+                Err(_) => self.late_rejected += 1,
+            }
+        }
+        // Parked acquisitions resume through normal polling; the
+        // revocations surface as Expired on the next heartbeat/poll.
+        self.reconcile(a);
+        true
+    }
+
+    /// Deterministic quiescence drive — the progress oracle. Releases
+    /// every hold, lets every pending acquisition resolve through the
+    /// event-driven machinery alone (the fallback sweep is disabled,
+    /// so a lost wakeup stays lost), wakes every zombie, and sweeps
+    /// until all repairs reap. Failing to converge inside
+    /// `drain_rounds` is a [`Violation::Wedged`]; converging with
+    /// dangling repairs is [`Violation::UnrepairedFence`].
+    pub fn drain(&mut self) {
+        for _ in 0..self.cfg.drain_rounds {
+            if self.violation.is_some() {
+                return;
+            }
+            if self.drained() && self.sweep.fenced == self.sweep.reaped {
+                return;
+            }
+            for a in 0..self.cfg.procs {
+                match self.actors[a as usize].state {
+                    ActorState::Dead => continue,
+                    ActorState::Stalled { .. } => {
+                        self.do_wake(a); // no-op until the clock gets there
+                        continue;
+                    }
+                    ActorState::Alive => {}
+                }
+                for l in self.actors[a as usize].held.clone() {
+                    self.do_release(a, l);
+                }
+                self.do_ready(a);
+                if self.violation.is_some() {
+                    return;
+                }
+            }
+            self.do_tick(1);
+            self.do_sweep();
+        }
+        // Budget exhausted: idle sessions with dangling repairs are a
+        // sweeper bug; anything else is a stuck acquisition (a lost
+        // wakeup being the canonical cause with the fallback sweep
+        // off).
+        if self.drained() {
+            self.violation = Some(Violation::UnrepairedFence {
+                fenced: self.sweep.fenced,
+                reaped: self.sweep.reaped,
+            });
+            return;
+        }
+        let (mut pending, mut armed) = (0u32, 0u32);
+        for a in 0..self.cfg.procs {
+            if let Some(sess) = self.actors[a as usize].session.as_ref() {
+                pending += sess.pending_count() as u32;
+                armed += sess.armed_count() as u32;
+            }
+        }
+        self.violation = Some(Violation::Wedged { pending, armed });
+    }
+
+    fn drained(&self) -> bool {
+        self.actors.iter().all(|actor| match actor.state {
+            ActorState::Dead => true,
+            ActorState::Stalled { .. } => false,
+            ActorState::Alive => {
+                actor.held.is_empty()
+                    && actor.session.as_ref().is_some_and(|s| s.pending_count() == 0)
+            }
+        })
+    }
+
+    /// Finish the run: collect counters and tear the world down. A
+    /// violated world still holds mid-flight sessions — they are
+    /// crashed (abandoned in place) so the pid-lease drop guards don't
+    /// turn the report into a panic.
+    pub fn into_outcome(mut self, seed: u64, steps: Vec<Step>) -> RunOutcome {
+        let mut local_remote_verbs = 0;
+        let mut dirty = self.violation.is_some();
+        for actor in &self.actors {
+            if let Some(sess) = actor.session.as_ref() {
+                local_remote_verbs += sess.local_class_metrics().snapshot().remote_total();
+                if sess.pending_count() > 0 {
+                    dirty = true;
+                }
+            }
+            if !actor.held.is_empty() {
+                dirty = true;
+            }
+        }
+        if dirty {
+            for actor in &mut self.actors {
+                if let Some(sess) = actor.session.take() {
+                    sess.crash();
+                }
+            }
+        }
+        RunOutcome {
+            seed,
+            steps,
+            violation: self.violation.clone(),
+            completed: self.completed,
+            crashes: self.crashes,
+            expired: self.expired,
+            late_rejected: self.late_rejected,
+            lucky_zombies: self.lucky_zombies,
+            sweep: self.sweep.clone(),
+            local_remote_verbs,
+            orphaned_left: self.svc.orphaned_slots(),
+        }
+    }
+}

@@ -1,13 +1,16 @@
-//! Poll-based acquisition: property tests (deterministic PRNG
-//! schedules, reproducible from the printed seed) plus the multiplexed
-//! runner acceptance sweep.
+//! Poll-based acquisition: seeded deterministic explorer runs over the
+//! real session stack (see `qplock::sim` and TESTING.md — a failing
+//! seed is reproducible verbatim with `sim::run_one(&cfg, seed)` and
+//! shrinks to a replayable artifact), plus targeted deterministic
+//! constructions and one threaded smoke test (the multiplexed runner
+//! acceptance sweep).
 //!
 //! Invariants covered:
 //! * the paper's verb asymmetry survives the poll decomposition —
-//!   local-class handles issue zero remote verbs under arbitrary poll
-//!   schedules, and a *queued* remote waiter's polls are free of
-//!   remote verbs no matter how often it is polled (O(1) remote verbs
-//!   per acquisition);
+//!   local-class handles issue zero remote verbs under arbitrary
+//!   explored schedules, and a *queued* remote waiter's polls are free
+//!   of remote verbs no matter how often it is polled (O(1) remote
+//!   verbs per acquisition);
 //! * cancelling a submitted-but-not-held acquisition leaves the queue
 //!   consistent: no handoff is lost, every other waiter still
 //!   acquires, and the oracle stays clean;
@@ -18,8 +21,9 @@
 use std::sync::Arc;
 
 use qplock::coordinator::{run_multiplexed_workload, Cluster, LockService, Workload};
-use qplock::locks::{make_lock, AsyncLockHandle, CsChecker, LockHandle, LockPoll};
+use qplock::locks::{make_lock, AsyncLockHandle, LockHandle, LockPoll};
 use qplock::rdma::{DomainConfig, RdmaDomain};
+use qplock::sim::{run_one, SchedMode, SimConfig};
 use qplock::util::prng::Prng;
 
 const CASES: u64 = 16;
@@ -28,161 +32,69 @@ fn seeds() -> impl Iterator<Item = u64> {
     (0..CASES).map(|i| 0xA51C ^ (i * 0x9E3779B9))
 }
 
-/// Single-threaded random scheduler over a set of poll-driven handles:
-/// submits, polls, unlocks, and (optionally) cancels in a random
-/// order, checking mutual exclusion throughout. Returns the number of
-/// completed (held) acquisitions per handle.
-fn random_poll_schedule(
-    handles: &mut [Box<dyn LockHandle>],
-    rng: &mut Prng,
-    target_cycles: u64,
-    cancel_chance: f64,
-    seed: u64,
-) -> Vec<u64> {
-    #[derive(Clone, Copy, PartialEq)]
-    enum S {
-        Idle,
-        Pending,
-        Held,
-    }
-    let n = handles.len();
-    let checker = CsChecker::new();
-    let mut state = vec![S::Idle; n];
-    let mut completed = vec![0u64; n];
-    let mut steps = 0u64;
-    let budget = 200_000 + target_cycles * n as u64 * 1_000;
-    while completed.iter().sum::<u64>() < target_cycles * n as u64 {
-        steps += 1;
-        assert!(steps < budget, "seed {seed}: schedule failed to make progress");
-        let i = rng.below(n as u64) as usize;
-        let a = handles[i].as_async().expect("qplock is poll-capable");
-        match state[i] {
-            S::Idle => {
-                if completed[i] >= target_cycles {
-                    continue;
-                }
-                state[i] = match a.poll_lock() {
-                    LockPoll::Held => S::Held,
-                    LockPoll::Pending => S::Pending,
-                    LockPoll::Cancelled => panic!("seed {seed}: fresh submit cancelled"),
-                    LockPoll::Expired => panic!("seed {seed}: no leases enabled"),
-                };
-                if state[i] == S::Held {
-                    checker.enter(i as u32 + 1);
-                }
-            }
-            S::Pending => {
-                if rng.chance(cancel_chance) {
-                    if a.cancel_lock() {
-                        state[i] = S::Idle;
-                    }
-                    // else: stays pending, drains through later polls.
-                    continue;
-                }
-                match a.poll_lock() {
-                    LockPoll::Pending => {}
-                    LockPoll::Expired => panic!("seed {seed}: no leases enabled"),
-                    LockPoll::Cancelled => state[i] = S::Idle,
-                    LockPoll::Held => {
-                        state[i] = S::Held;
-                        checker.enter(i as u32 + 1);
-                    }
-                }
-            }
-            S::Held => {
-                // Hold for a few scheduler steps, then release.
-                if rng.chance(0.5) {
-                    checker.exit(i as u32 + 1);
-                    handles[i].unlock();
-                    state[i] = S::Idle;
-                    completed[i] += 1;
-                }
-            }
-        }
-    }
-    // Resolve stragglers: drain every pending handle, release any hold.
-    let mut drains = 0u64;
-    loop {
-        let mut open = false;
-        for i in 0..n {
-            match state[i] {
-                S::Idle => {}
-                S::Held => {
-                    checker.exit(i as u32 + 1);
-                    handles[i].unlock();
-                    state[i] = S::Idle;
-                }
-                S::Pending => {
-                    open = true;
-                    match handles[i].as_async().unwrap().poll_lock() {
-                        LockPoll::Pending => {}
-                        LockPoll::Expired => panic!("no leases enabled"),
-                        LockPoll::Cancelled => state[i] = S::Idle,
-                        LockPoll::Held => {
-                            checker.enter(i as u32 + 1);
-                            state[i] = S::Held;
-                        }
-                    }
-                }
-            }
-        }
-        if !open {
-            break;
-        }
-        drains += 1;
-        assert!(drains < 1_000_000, "seed {seed}: drain never completed");
-    }
-    assert_eq!(checker.violations(), 0, "seed {seed}: mutual exclusion");
-    completed
-}
-
 #[test]
-fn prop_local_class_polls_issue_zero_remote_verbs() {
-    // Any poll schedule over local-class handles — including
-    // cancellations — must leave the NIC untouched: every register the
-    // protocol reads or writes lives on the home node.
+fn prop_local_class_schedules_issue_zero_remote_verbs() {
+    // Any explored schedule over local-class sessions — submits,
+    // single-step polls, cancels, ready rounds, releases — must leave
+    // the NIC untouched: every register the protocol reads or writes
+    // lives on the home node. (Formerly a hand-rolled random poll
+    // loop; now the sim explorer drives the same invariant through
+    // the real HandleCache sessions, deterministically per seed.)
+    let cfg = SimConfig {
+        procs: 4,
+        locks: 3,
+        nodes: 1, // one node ⇒ every handle is local-class
+        budget: 4,
+        lease_ticks: 32,
+        ring_capacity: 8,
+        max_steps: 300,
+        drain_rounds: 3_000,
+        crash_prob: 0.0,
+        zombie_prob: 0.0,
+        max_crashes: 0,
+        manual_arm: false,
+        mode: SchedMode::Uniform,
+    };
     for seed in seeds() {
-        let mut rng = Prng::seed_from(seed);
-        let d = RdmaDomain::new(2, 1 << 14, DomainConfig::counted());
-        let lock = make_lock("qplock", &d, 0, 8, 1 + rng.below(8));
-        let n = 2 + rng.below(4) as usize;
-        let mut metrics = vec![];
-        let mut handles = vec![];
-        for pid in 0..n {
-            let ep = d.endpoint(0);
-            metrics.push(Arc::clone(&ep.metrics));
-            handles.push(lock.handle(ep, pid as u32));
-        }
-        let completed = random_poll_schedule(&mut handles, &mut rng, 20, 0.1, seed);
-        assert!(completed.iter().all(|&c| c >= 20), "seed {seed}");
-        for m in &metrics {
-            let s = m.snapshot();
-            assert_eq!(s.remote_total(), 0, "seed {seed}: local class used the NIC");
-            assert_eq!(s.loopback, 0, "seed {seed}");
-        }
+        let out = run_one(&cfg, seed);
+        assert!(out.violation.is_none(), "seed {seed}: {:?}", out.violation);
+        assert!(out.completed > 0, "seed {seed}: schedule was inert");
+        assert_eq!(
+            out.local_remote_verbs, 0,
+            "seed {seed}: local class used the NIC"
+        );
     }
 }
 
 #[test]
-fn prop_mixed_class_random_poll_schedules_stay_exclusive() {
-    // Random single-threaded poll schedules over handles of both
-    // classes (with cancellations): the oracle stays clean and every
-    // handle completes its cycles — no lost handoff under any
-    // interleaving of polls and cancels.
+fn prop_mixed_class_schedules_stay_exclusive() {
+    // Explored schedules over sessions of both classes (with cancels
+    // in the alphabet): the per-lock oracles stay clean and the drain
+    // always converges — no lost handoff under any explored
+    // interleaving of submits, polls, cancels, and releases.
     for seed in seeds() {
-        let mut rng = Prng::seed_from(seed);
-        let nodes = 2 + rng.below(2) as u16;
-        let d = RdmaDomain::new(nodes, 1 << 14, DomainConfig::counted());
-        let home = rng.below(nodes as u64) as u16;
-        let lock = make_lock("qplock", &d, home, 8, 1 + rng.below(4));
-        let n = 2 + rng.below(5) as usize;
-        let mut handles = vec![];
-        for pid in 0..n {
-            let node = rng.below(nodes as u64) as u16;
-            handles.push(lock.handle(d.endpoint(node), pid as u32));
-        }
-        let completed = random_poll_schedule(&mut handles, &mut rng, 12, 0.25, seed);
-        assert!(completed.iter().all(|&c| c >= 12), "seed {seed}");
+        let cfg = SimConfig {
+            procs: 3 + (seed % 3) as u32,
+            locks: 2 + (seed % 2) as u32,
+            nodes: 2 + (seed % 2) as u16,
+            budget: 1 + (seed % 4),
+            lease_ticks: 32,
+            ring_capacity: 8,
+            max_steps: 300,
+            drain_rounds: 3_000,
+            crash_prob: 0.0,
+            zombie_prob: 0.0,
+            max_crashes: 0,
+            manual_arm: false,
+            mode: if seed % 2 == 0 {
+                SchedMode::Uniform
+            } else {
+                SchedMode::Pct { depth: 3 }
+            },
+        };
+        let out = run_one(&cfg, seed);
+        assert!(out.violation.is_none(), "seed {seed}: {:?}", out.violation);
+        assert!(out.completed > 0, "seed {seed}: schedule was inert");
     }
 }
 

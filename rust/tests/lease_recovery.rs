@@ -287,6 +287,55 @@ fn submit_on_an_unrepaired_slot_parks_until_the_reap() {
 }
 
 #[test]
+fn crashed_session_churn_reclaims_pid_slots_16x_capacity() {
+    // ROADMAP open item (pid-slot reclamation): `HandleCache::crash`
+    // used to leak its pid leases by design, so crash churn beyond
+    // `max_procs` permanently wedged a service on CapacityExhausted.
+    // The service now parks crashed slots in its orphan registry and
+    // each sweep returns the ones whose descriptors the sweeper has
+    // reaped. 16x the capacity in crashing sessions must keep minting.
+    let (cluster, svc) = lease_service();
+    svc.create_lock("rc", "qplock", 0, 4, 8).unwrap(); // capacity 4
+    let mut reclaimed = 0u64;
+    for round in 0..64u64 {
+        let mut sess = svc.session((round % 2) as u16);
+        if round % 2 == 0 {
+            // Crash while HOLDING.
+            assert_eq!(
+                sess.submit("rc").unwrap(),
+                LockPoll::Held,
+                "round {round}: capacity eroded by earlier crashes"
+            );
+            sess.crash();
+        } else {
+            // Crash while ENQUEUED behind a live holder; the holder
+            // then releases onto the corpse (the relay shape).
+            let mut holder = svc.session(0);
+            assert_eq!(holder.submit("rc").unwrap(), LockPoll::Held, "round {round}");
+            assert_eq!(sess.submit("rc").unwrap(), LockPoll::Pending);
+            let _ = sess.poll_all(); // reach the parked budget wait
+            sess.crash();
+            holder.release("rc").unwrap();
+        }
+        // Sweep until the crashed slot quiesces and its pid returns.
+        let mut passes = 0;
+        while svc.orphaned_slots() > 0 {
+            let now = cluster.domain.advance_lease_clock(2 * TICKS);
+            reclaimed += svc.sweep_leases(now).pid_reclaimed;
+            passes += 1;
+            assert!(passes < 64, "round {round}: orphaned slot never reclaimed");
+        }
+    }
+    assert!(
+        reclaimed >= 64,
+        "every crashed acquisition's slot must come back: {reclaimed}"
+    );
+    assert_eq!(svc.free_slots("rc"), Some(4), "pool fully restored");
+    let mut fresh = svc.session(0);
+    fresh.with_lock("rc", || {}).unwrap();
+}
+
+#[test]
 fn random_crash_schedules_preserve_safety_and_progress() {
     // Property sweep: small fault-injected runs across seeds — mutual
     // exclusion, survivor progress, and complete repair, every time.
@@ -349,4 +398,15 @@ fn acceptance_64_procs_100_locks_all_four_points() {
         r.lucky_zombies
     );
     assert!(r.sweep.recovery_ticks.count() > 0, "recovery latency unmeasured");
+    // Crashed-client reclamation: every killed session parked at least
+    // one in-flight slot in the orphan registry, and the drain's
+    // fenced == reaped convergence means every one was reaped — so
+    // every kill must have returned at least one pid slot to its pool.
+    let kills: u64 = r.kills.iter().sum();
+    assert!(
+        r.pid_slots_reclaimed() >= kills,
+        "crash churn leaked pid slots: {} kills, {} reclaimed",
+        kills,
+        r.pid_slots_reclaimed()
+    );
 }

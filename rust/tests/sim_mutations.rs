@@ -1,0 +1,193 @@
+#![cfg(debug_assertions)]
+//! Mutation teeth: prove the schedule explorer can actually find bugs
+//! by disabling one known defense at a time
+//! (`qplock::locks::test_knobs`) and asserting the seeded exploration
+//! rediscovers the protocol violation it guards — within a bounded
+//! schedule budget — then shrinks it to a minimal counterexample whose
+//! replay reproduces the violation deterministically (ISSUE 5
+//! acceptance: ≤ 2000 schedules per knob).
+//!
+//! The knobs are process-global statics, so the three tests serialize
+//! on one mutex and reset the knobs on entry and exit. This file is
+//! its own test binary: no other test shares its process.
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::{Mutex, MutexGuard};
+
+use qplock::locks::test_knobs;
+use qplock::sim::{self, explore, SchedMode, SimConfig};
+
+static KNOBS: Mutex<()> = Mutex::new(());
+
+fn serialized() -> MutexGuard<'static, ()> {
+    let g = KNOBS.lock().unwrap_or_else(|p| p.into_inner());
+    test_knobs::reset();
+    g
+}
+
+/// Run the full find → shrink → replay pipeline for one armed knob:
+/// a defended sanity sweep first (no violation with the knob off),
+/// then exploration with the knob on must find `kind` within
+/// `budget` schedules, shrink it, and replay it deterministically
+/// (twice, plus once through the artifact file).
+fn assert_tooth(
+    label: &str,
+    knob: &AtomicBool,
+    cfg: &SimConfig,
+    budget: u32,
+    defended_budget: u32,
+    kind: &str,
+) {
+    let defended = explore(cfg, defended_budget, 1, None);
+    assert!(
+        defended.violation.is_none(),
+        "{label}: defended run violated: {:?}",
+        defended.violation
+    );
+
+    knob.store(true, SeqCst);
+    let dir = std::path::Path::new("target/sim-artifacts");
+    let report = explore(cfg, budget, 1, Some(dir));
+    let (seed, v) = report
+        .violation
+        .as_ref()
+        .unwrap_or_else(|| panic!("{label}: not rediscovered within {budget} schedules"));
+    assert_eq!(v.kind(), kind, "{label}: wrong violation at seed {seed}");
+    let tf = report.shrunk.as_ref().expect("violations are shrunk");
+    assert!(
+        tf.steps.len() < cfg.max_steps as usize,
+        "{label}: shrink made no progress ({} steps)",
+        tf.steps.len()
+    );
+    // Deterministic replay: twice in-process, once through the
+    // artifact file round trip.
+    let r1 = sim::replay(&tf.config, &tf.steps);
+    let r2 = sim::replay(&tf.config, &tf.steps);
+    assert_eq!(r1.violation, r2.violation, "{label}: replay nondeterministic");
+    assert_eq!(
+        r1.violation.as_ref().map(|v| v.kind()),
+        Some(kind),
+        "{label}: shrunk trace lost the violation"
+    );
+    let artifact = report.artifact.as_ref().expect("artifact written");
+    let (r3, claimed) = sim::replay::replay_file(artifact).expect("artifact parses");
+    assert_eq!(claimed.as_deref(), Some(kind), "{label}: artifact header");
+    assert_eq!(
+        r3.violation.as_ref().map(|v| v.kind()),
+        Some(kind),
+        "{label}: artifact replay lost the violation"
+    );
+    test_knobs::reset();
+    // And the minimal trace is clean again once the defense is back:
+    // the violation lived in the protocol, not in the harness.
+    let healed = sim::replay(&tf.config, &tf.steps);
+    assert!(
+        healed.violation.is_none(),
+        "{label}: defended replay of the counterexample still fails: {:?}",
+        healed.violation
+    );
+}
+
+#[test]
+fn skip_arm_recheck_loses_a_wakeup_and_is_rediscovered() {
+    // PR 3 defense: `arm_wakeup` re-checks the budget word after
+    // publishing the registration, closing the store-load race with a
+    // passer whose handoff landed first. With the re-check skipped, an
+    // arm scheduled after the handoff parks the waiter on a token
+    // nobody will publish — a lost wakeup the drain exposes as a
+    // wedge. Manual-arm mode makes the arm its own schedulable step,
+    // so the explorer can place it after the release.
+    let _g = serialized();
+    let cfg = SimConfig {
+        procs: 3,
+        locks: 2,
+        nodes: 1,
+        budget: 4,
+        lease_ticks: 64,
+        ring_capacity: 8,
+        max_steps: 300,
+        drain_rounds: 3_000,
+        crash_prob: 0.0,
+        zombie_prob: 0.0,
+        max_crashes: 0,
+        manual_arm: true,
+        mode: SchedMode::Uniform,
+    };
+    assert_tooth(
+        "skip-arm-recheck",
+        &test_knobs::SKIP_ARM_RECHECK,
+        &cfg,
+        2_000,
+        150,
+        "wedged",
+    );
+}
+
+#[test]
+fn ignore_dirty_tokens_overwrites_a_live_token_and_is_rediscovered() {
+    // PR 3 defense: the session arming bound counts released-but-
+    // maybe-unconsumed (dirty) tokens, so ring lanes can never lap the
+    // consumer. Counting only live registrations lets the churn
+    // profile — re-arm, resolve host-side by direct poll, repeat —
+    // push enough publications through a capacity-2 ring to overwrite
+    // an earlier live token: that waiter is never signalled and the
+    // drain wedges.
+    let _g = serialized();
+    let cfg = SimConfig {
+        procs: 3,
+        locks: 2,
+        nodes: 1,
+        budget: 6,
+        lease_ticks: 200,
+        ring_capacity: 2,
+        max_steps: 1_500,
+        drain_rounds: 4_000,
+        crash_prob: 0.0,
+        zombie_prob: 0.0,
+        max_crashes: 0,
+        manual_arm: true,
+        mode: SchedMode::Churn,
+    };
+    assert_tooth(
+        "ignore-dirty-tokens",
+        &test_knobs::IGNORE_DIRTY_TOKENS,
+        &cfg,
+        2_000,
+        100,
+        "wedged",
+    );
+}
+
+#[test]
+fn skip_cs_renew_starves_a_live_holder_and_is_rediscovered() {
+    // PR 4 defense: the critical-section path renews the holder's
+    // lease (`HandleCache::renew`), so a live holder is never revoked
+    // mid-hold. With the renew skipped, a PCT-demoted holder starves
+    // past its term, the sweeper fences and relays its lock, and the
+    // waiter enters while the oblivious holder is still inside — a
+    // mutual-exclusion violation the per-lock oracle catches at entry.
+    let _g = serialized();
+    let cfg = SimConfig {
+        procs: 3,
+        locks: 1,
+        nodes: 1,
+        budget: 4,
+        lease_ticks: 12,
+        ring_capacity: 8,
+        max_steps: 600,
+        drain_rounds: 3_000,
+        crash_prob: 0.0,
+        zombie_prob: 0.0,
+        max_crashes: 0,
+        manual_arm: false,
+        mode: SchedMode::Pct { depth: 3 },
+    };
+    assert_tooth(
+        "skip-cs-renew",
+        &test_knobs::SKIP_CS_RENEW,
+        &cfg,
+        2_000,
+        150,
+        "mutual-exclusion",
+    );
+}
