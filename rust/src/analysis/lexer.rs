@@ -1,0 +1,334 @@
+//! Minimal Rust token scanner for `verb-lint` — just enough lexing to
+//! see identifiers, numbers, and punctuation with their line numbers,
+//! while never being fooled by comments, strings, char literals, or
+//! lifetimes. Deliberately not a parser: the lint rules work on flat
+//! token patterns (see [`super::verb_lint`]), so a full grammar would
+//! buy nothing but dependencies — and the crate has none by design.
+
+/// What a scanned token is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`const`, `cas_lane`, `DESC_LEASE`, ...).
+    Ident,
+    /// Integer literal, any radix, suffixes/underscores included
+    /// verbatim (`0x10`, `1_000u64`).
+    Number,
+    /// Single punctuation character (`.`, `(`, `::` arrives as two
+    /// `:` tokens).
+    Punct,
+}
+
+/// One scanned token: its text, 1-based source line, and kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub text: String,
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+impl Token {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+}
+
+/// Scan `src` into tokens. Comments (line and nested block), string
+/// literals (plain, raw, byte), and char literals produce no tokens;
+/// lifetimes (`'a`) drop the quote and yield the identifier.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut line: u32 = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            '"' => i = skip_string(&b, i, &mut line),
+            '\'' => i = skip_char_or_lifetime(&b, i),
+            'r' | 'b' if starts_string_literal(&b, i) => {
+                // br"..", b"..", r".." , r#".."# — position on the
+                // quote machinery past the prefix letters.
+                let mut j = i + 1;
+                if b[i] == 'b' && j < b.len() && b[j] == 'r' {
+                    j += 1;
+                }
+                if b[j] == '"' {
+                    i = skip_string(&b, j, &mut line);
+                } else {
+                    i = skip_raw_string(&b, j, &mut line);
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Token {
+                    text: b[start..i].iter().collect(),
+                    line,
+                    kind: TokKind::Ident,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Token {
+                    text: b[start..i].iter().collect(),
+                    line,
+                    kind: TokKind::Number,
+                });
+            }
+            other => {
+                out.push(Token {
+                    text: other.to_string(),
+                    line,
+                    kind: TokKind::Punct,
+                });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does `b[i]` (an `r` or `b`) start a string literal rather than an
+/// identifier? True for `r"`, `r#"`, `b"`, `br"`, `br#"`.
+fn starts_string_literal(b: &[char], i: usize) -> bool {
+    let mut j = i + 1;
+    if b[i] == 'b' && j < b.len() && b[j] == 'r' {
+        j += 1;
+    } else if b[i] == 'b' {
+        return j < b.len() && b[j] == '"';
+    }
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+/// Skip a plain `"..."` with backslash escapes; `i` is at the opening
+/// quote. Returns the index past the closing quote.
+fn skip_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip `r#"..."#` (any number of hashes); `i` is at the first `#` or
+/// the quote.
+fn skip_raw_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    let mut hashes = 0;
+    while i < b.len() && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == '"' && raw_closes(b, i, hashes) {
+            return i + 1 + hashes;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Are the `hashes` chars after `b[i]` (a candidate closing quote of
+/// a raw string) all `#`?
+fn raw_closes(b: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| b.get(i + k) == Some(&'#'))
+}
+
+/// `'` is either a char literal (skip it) or a lifetime (drop the
+/// quote; the identifier after it is scanned normally).
+fn skip_char_or_lifetime(b: &[char], i: usize) -> usize {
+    if i + 1 < b.len() && b[i + 1] == '\\' {
+        // Escaped char literal: '\n', '\'', '\u{..}' — scan to the
+        // closing quote.
+        let mut j = i + 2;
+        while j < b.len() && b[j] != '\'' {
+            j += 1;
+        }
+        return j + 1;
+    }
+    if i + 2 < b.len() && b[i + 2] == '\'' {
+        return i + 3; // 'x'
+    }
+    i + 1 // lifetime: drop the quote
+}
+
+/// Remove every `#[cfg(test)]`-gated item from the stream: the
+/// attribute itself, any further attributes stacked on the item, and
+/// the item's body (to the matching `}` of its first brace, or to a
+/// top-level `;` for braceless items). Protocol tests legitimately
+/// poke raw words (seeded-violation fixtures, layout probes); the lint
+/// covers shipped code.
+pub fn filter_test_regions(toks: Vec<Token>) -> Vec<Token> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if is_cfg_test_attr(&toks, i) {
+            i += 7; // # [ cfg ( test ) ]
+            // Further stacked attributes on the same item.
+            while i < toks.len() && toks[i].is("#") {
+                i = skip_attr(&toks, i);
+            }
+            i = skip_item(&toks, i);
+        } else {
+            out.push(toks[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_cfg_test_attr(toks: &[Token], i: usize) -> bool {
+    const PAT: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    toks.len() >= i + PAT.len() && PAT.iter().enumerate().all(|(k, p)| toks[i + k].is(p))
+}
+
+/// Skip one `#[...]` attribute (balanced brackets); `i` is at `#`.
+fn skip_attr(toks: &[Token], mut i: usize) -> usize {
+    i += 1; // '#'
+    if i >= toks.len() || !toks[i].is("[") {
+        return i;
+    }
+    let mut depth = 0;
+    while i < toks.len() {
+        if toks[i].is("[") {
+            depth += 1;
+        } else if toks[i].is("]") {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip one item: to the matching `}` of its first `{`, or to the
+/// first `;` before any brace (e.g. `use`, expression statements).
+fn skip_item(toks: &[Token], mut i: usize) -> usize {
+    let mut depth = 0;
+    while i < toks.len() {
+        if toks[i].is("{") {
+            depth += 1;
+        } else if toks[i].is("}") {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        } else if toks[i].is(";") && depth == 0 {
+            return i + 1;
+        }
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        tokenize(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_vanish() {
+        let src = "a // cas(x)\n/* faa /* nested */ still */ b \"r_cas(\" 'c' c";
+        assert_eq!(texts(src), ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { r#\"cas_lane \" inner\"# ; g() }";
+        let t = texts(src);
+        assert!(t.contains(&"a".to_string()), "{t:?}");
+        assert!(!t.iter().any(|x| x.contains("cas_lane")), "{t:?}");
+    }
+
+    #[test]
+    fn lines_survive_multiline_constructs() {
+        let src = "x\n/* two\nlines */\ny \"s\ntr\" z";
+        let toks = tokenize(src);
+        let at = |name: &str| toks.iter().find(|t| t.is(name)).unwrap().line;
+        assert_eq!(at("x"), 1);
+        assert_eq!(at("y"), 4);
+        assert_eq!(at("z"), 5);
+    }
+
+    #[test]
+    fn numbers_keep_radix_and_suffix() {
+        let toks = tokenize("0x1F_u32 + 7");
+        assert_eq!(toks[0].text, "0x1F_u32");
+        assert_eq!(toks[0].kind, TokKind::Number);
+        assert_eq!(toks[2].text, "7");
+    }
+
+    #[test]
+    fn cfg_test_items_are_filtered() {
+        let src = "fn keep() { a() }\n\
+                   #[cfg(test)]\nmod tests { fn t() { ep.cas(x, 0, 1); } }\n\
+                   fn also_keep() { b() }";
+        let toks = filter_test_regions(tokenize(src));
+        let t: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(t.contains(&"keep"));
+        assert!(t.contains(&"also_keep"));
+        assert!(!t.contains(&"cas"), "{t:?}");
+    }
+
+    #[test]
+    fn cfg_test_with_stacked_attr_and_braceless_item() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nuse foo::cas;\nfn f() {}";
+        let toks = filter_test_regions(tokenize(src));
+        let t: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(!t.contains(&"cas"), "{t:?}");
+        assert!(t.contains(&"f"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Static analysis over the crate's own sources.
+//!
+//! Home of `verb-lint`, the zero-dependency static pass that enforces
+//! the word-ownership registry in [`crate::rdma::contract`]: protocol
+//! words are only touched through contract-tagged accessors, word
+//! offsets match the registry, RMW lanes are never mixed, and
+//! `Class::Local` code paths stay NIC-silent. Run it as
+//! `cargo run --bin verb_lint`, `qplock lint`, or let CI do it.
+
+pub mod lexer;
+pub mod verb_lint;
+
+pub use verb_lint::{lint_source, lint_tree, Diagnostic, FileClass};

@@ -1,0 +1,456 @@
+//! `verb-lint` — the static half of the machine-checked verb
+//! contracts (the dynamic half is the NIC-level monitor in
+//! [`crate::rdma::contract`]).
+//!
+//! The word-ownership registry declares, for every protocol word,
+//! which RMW lane owns it, which roles may touch it, and whether the
+//! local class must stay off the NIC for it. This pass tokenizes the
+//! crate's own sources (no external parser — the crate is
+//! dependency-free by design) and rejects, with `file:line`
+//! diagnostics:
+//!
+//! 1. **raw-lane-call** — `.cas_lane(..)` / `.faa_lane(..)` method
+//!    calls anywhere outside the accessor modules: explicit lane
+//!    choice is the accessor layer's job.
+//! 2. **raw-rmw** — `.cas/.faa/.r_cas/.r_faa(..)` in protocol files:
+//!    protocol words are RMW'd only through registry-tagged accessors.
+//! 3. **unregistered-offset** — a `const NAME: u32 = ..;` used inside
+//!    `.offset(..)` must exist in the registry with the same value.
+//! 4. **lane-mismatch / cross-lane** — a protocol word named together
+//!    with the wrong `RmwLane`, or reachable from both lanes in one
+//!    file without a declared split-lane contract (the ring-cursor
+//!    pair is declared split explicitly).
+//! 5. **local-silence** — a `Class::Local` code path (or a NIC-silent
+//!    word) combined with a remote verb: local-class processes issue
+//!    zero remote verbs, the paper's headline invariant.
+//!
+//! `#[cfg(test)]` items are excluded: tests legitimately poke raw
+//! words (layout probes, seeded-violation teeth).
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::lexer::{filter_test_regions, tokenize, TokKind, Token};
+use crate::rdma::contract::{canonical_offsets, lint_word_facts, WordFact};
+use crate::rdma::RmwLane;
+
+/// One lint finding, pointing at the offending source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// Which rule set a file gets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileClass {
+    /// The accessor layer itself (`rdma/contract.rs`, `rdma/verbs.rs`):
+    /// raw verbs are its job; only offset-registry drift is checked.
+    Accessor,
+    /// Protocol implementations (`locks/qplock.rs`, `rdma/wakeup.rs`):
+    /// the full rule set.
+    Protocol,
+    /// Everything else: no raw lane-dispatched RMWs, nothing more.
+    Other,
+}
+
+impl FileClass {
+    /// Classify by path suffix (separators normalized).
+    pub fn of(path: &str) -> FileClass {
+        let p = path.replace('\\', "/");
+        if p.ends_with("rdma/contract.rs") || p.ends_with("rdma/verbs.rs") {
+            FileClass::Accessor
+        } else if p.ends_with("locks/qplock.rs") || p.ends_with("rdma/wakeup.rs") {
+            FileClass::Protocol
+        } else {
+            FileClass::Other
+        }
+    }
+}
+
+/// Lint one source file (already read) under `class`'s rule set.
+pub fn lint_source(file: &str, src: &str, class: FileClass) -> Vec<Diagnostic> {
+    let toks = filter_test_regions(tokenize(src));
+    let mut diags = Vec::new();
+    match class {
+        FileClass::Accessor => {
+            rule_unregistered_offset(file, &toks, &mut diags);
+        }
+        FileClass::Protocol => {
+            rule_raw_lane_call(file, &toks, &mut diags);
+            rule_raw_rmw(file, &toks, &mut diags);
+            rule_unregistered_offset(file, &toks, &mut diags);
+            rule_lane_discipline(file, &toks, &mut diags);
+            rule_local_silence(file, &toks, &mut diags);
+        }
+        FileClass::Other => {
+            rule_raw_lane_call(file, &toks, &mut diags);
+        }
+    }
+    diags.sort_by_key(|d| d.line);
+    diags
+}
+
+/// Lint every `.rs` file under `root`, recursively, in sorted order.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = fs::read_dir(&dir)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let path = e.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                let label = path.display().to_string();
+                let src = fs::read_to_string(&path)?;
+                diags.extend(lint_source(&label, &src, FileClass::of(&label)));
+            }
+        }
+    }
+    Ok(diags)
+}
+
+/// Method-call occurrences of any of `names`: an identifier preceded
+/// by `.` and followed by `(`.
+fn method_calls<'a>(toks: &'a [Token], names: &[&str]) -> Vec<(&'a str, u32)> {
+    let mut out = Vec::new();
+    for i in 1..toks.len().saturating_sub(1) {
+        if toks[i].kind == TokKind::Ident
+            && names.contains(&toks[i].text.as_str())
+            && toks[i - 1].is(".")
+            && toks[i + 1].is("(")
+        {
+            out.push((toks[i].text.as_str(), toks[i].line));
+        }
+    }
+    out
+}
+
+fn rule_raw_lane_call(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>) {
+    for (name, line) in method_calls(toks, &["cas_lane", "faa_lane"]) {
+        diags.push(Diagnostic {
+            file: file.to_string(),
+            line,
+            rule: "raw-lane-call",
+            msg: format!(
+                "raw `{name}` call: lane choice on protocol words belongs to the \
+                 contract accessors (`rdma::contract`), which derive the lane \
+                 from the word-ownership registry"
+            ),
+        });
+    }
+}
+
+fn rule_raw_rmw(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>) {
+    for (name, line) in method_calls(toks, &["cas", "faa", "r_cas", "r_faa"]) {
+        diags.push(Diagnostic {
+            file: file.to_string(),
+            line,
+            rule: "raw-rmw",
+            msg: format!(
+                "raw `{name}` in a protocol file: RMW protocol words through \
+                 `rdma::contract` accessors so the word, role, and lane are checked"
+            ),
+        });
+    }
+}
+
+/// Parse an integer literal as scanned (radix prefix, `_`, suffix).
+fn parse_int(text: &str) -> Option<u32> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let hex = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X"));
+    let (digits, radix): (&str, u32) = if let Some(d) = hex {
+        (d, 16)
+    } else if let Some(d) = t.strip_prefix("0o") {
+        (d, 8)
+    } else if let Some(d) = t.strip_prefix("0b") {
+        (d, 2)
+    } else {
+        (&t, 10)
+    };
+    let end = digits
+        .find(|c: char| !c.is_digit(radix.max(10)))
+        .unwrap_or(digits.len());
+    u32::from_str_radix(&digits[..end], radix).ok()
+}
+
+fn rule_unregistered_offset(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>) {
+    // `const NAME : u32 = <int> ;` declarations.
+    let mut decls: Vec<(&str, &str, u32)> = Vec::new();
+    for i in 0..toks.len().saturating_sub(6) {
+        if toks[i].is("const")
+            && toks[i + 1].kind == TokKind::Ident
+            && toks[i + 2].is(":")
+            && toks[i + 3].is("u32")
+            && toks[i + 4].is("=")
+            && toks[i + 5].kind == TokKind::Number
+            && toks[i + 6].is(";")
+        {
+            decls.push((&toks[i + 1].text, &toks[i + 5].text, toks[i + 1].line));
+        }
+    }
+    // Names that appear inside `.offset( ... )` parentheses.
+    let mut used: HashSet<&str> = HashSet::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].is(".") && toks[i + 1].is("offset") && toks[i + 2].is("(") {
+            let mut depth = 1;
+            let mut j = i + 3;
+            while j < toks.len() && depth > 0 {
+                if toks[j].is("(") {
+                    depth += 1;
+                } else if toks[j].is(")") {
+                    depth -= 1;
+                } else if toks[j].kind == TokKind::Ident {
+                    used.insert(toks[j].text.as_str());
+                }
+                j += 1;
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    for (name, value, line) in decls {
+        if !used.contains(name) {
+            continue; // not a word-offset constant
+        }
+        match canonical_offsets().iter().find(|(n, _)| *n == name) {
+            None => diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                rule: "unregistered-offset",
+                msg: format!(
+                    "word-offset constant `{name}` is not declared in the \
+                     word-ownership registry (`rdma::contract::REGISTRY`)"
+                ),
+            }),
+            Some((_, canon)) if parse_int(value) != Some(*canon) => diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                rule: "unregistered-offset",
+                msg: format!(
+                    "word-offset constant `{name}` = {value} disagrees with the \
+                     registry's canonical value {canon}"
+                ),
+            }),
+            Some(_) => {}
+        }
+    }
+}
+
+/// Statement-level spans: the token stream split on `;`, `{`, `}`.
+fn spans(toks: &[Token]) -> Vec<&[Token]> {
+    toks.split(|t| t.is(";") || t.is("{") || t.is("}"))
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// `RmwLane :: Cpu|Nic` mentions in a span, with the lane token line.
+fn lane_mentions(span: &[Token]) -> Vec<(RmwLane, u32)> {
+    let mut out = Vec::new();
+    for i in 0..span.len().saturating_sub(3) {
+        if span[i].is("RmwLane") && span[i + 1].is(":") && span[i + 2].is(":") {
+            match span[i + 3].text.as_str() {
+                "Cpu" => out.push((RmwLane::Cpu, span[i + 3].line)),
+                "Nic" => out.push((RmwLane::Nic, span[i + 3].line)),
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+fn lane_name(l: RmwLane) -> &'static str {
+    match l {
+        RmwLane::Cpu => "Cpu",
+        RmwLane::Nic => "Nic",
+    }
+}
+
+fn rule_lane_discipline(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>) {
+    let facts = lint_word_facts();
+    let by_name: HashMap<&str, &WordFact> = facts.iter().map(|f| (f.const_name, f)).collect();
+    // Per-word lane sites across the whole file, in source order.
+    let mut sites: HashMap<&str, Vec<(RmwLane, u32)>> = HashMap::new();
+    for span in spans(toks) {
+        let lanes = lane_mentions(span);
+        if lanes.is_empty() {
+            continue;
+        }
+        for t in span.iter().filter(|t| t.kind == TokKind::Ident) {
+            let Some(fact) = by_name.get(t.text.as_str()) else {
+                continue;
+            };
+            for &(lane, lline) in &lanes {
+                if let Some(owner) = fact.lane {
+                    if owner != lane {
+                        diags.push(Diagnostic {
+                            file: file.to_string(),
+                            line: lline,
+                            rule: "lane-mismatch",
+                            msg: format!(
+                                "word `{}` is owned by the {} RMW lane but is \
+                                 used here with RmwLane::{}",
+                                fact.const_name,
+                                lane_name(owner),
+                                lane_name(lane)
+                            ),
+                        });
+                    }
+                }
+                sites.entry(fact.const_name).or_default().push((lane, lline));
+            }
+        }
+    }
+    // Cross-lane reachability without a declared split contract.
+    let mut names: Vec<&str> = sites.keys().copied().collect();
+    names.sort_unstable();
+    for name in names {
+        let fact = by_name[name];
+        if fact.split {
+            continue; // declared split-lane pair (ring cursors)
+        }
+        let s = &sites[name];
+        let first = s[0].0;
+        if let Some(&(_, second_line)) = s.iter().find(|(l, _)| *l != first) {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: second_line,
+                rule: "cross-lane",
+                msg: format!(
+                    "word `{name}` is reached from both RMW lanes in this file \
+                     but declares no split-lane contract in the registry"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_local_silence(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>) {
+    let facts = lint_word_facts();
+    for span in spans(toks) {
+        let has_local_class = (0..span.len().saturating_sub(3)).any(|i| {
+            span[i].is("Class")
+                && span[i + 1].is(":")
+                && span[i + 2].is(":")
+                && span[i + 3].is("Local")
+        });
+        let word = span.iter().find_map(|t| {
+            facts
+                .iter()
+                .find(|f| t.kind == TokKind::Ident && t.is(f.const_name))
+        });
+        let Some(fact) = word else { continue };
+        if !has_local_class && !fact.nic_silent {
+            continue;
+        }
+        for (name, line) in method_calls(span, &["r_read", "r_write", "r_cas", "r_faa"]) {
+            let why = if has_local_class {
+                "a Class::Local code path must stay NIC-silent (zero remote \
+                 verbs, the paper's headline invariant)"
+            } else {
+                "the registry marks this word NIC-silent / not remotely reachable"
+            };
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                rule: "local-silence",
+                msg: format!(
+                    "remote verb `{name}` on protocol word `{}`: {why}",
+                    fact.const_name
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn has_rule(d: &[Diagnostic], rule: &str) -> bool {
+        d.iter().any(|x| x.rule == rule)
+    }
+
+    fn hit(d: &[Diagnostic], rule: &str, line: u32) -> bool {
+        d.iter().any(|x| x.rule == rule && x.line == line)
+    }
+
+    #[test]
+    fn classifies_paths_by_suffix() {
+        assert_eq!(FileClass::of("src/rdma/contract.rs"), FileClass::Accessor);
+        assert_eq!(FileClass::of("src/rdma/verbs.rs"), FileClass::Accessor);
+        assert_eq!(FileClass::of("src/locks/qplock.rs"), FileClass::Protocol);
+        assert_eq!(FileClass::of("src/rdma/wakeup.rs"), FileClass::Protocol);
+        assert_eq!(FileClass::of("src/sim/world.rs"), FileClass::Other);
+    }
+
+    #[test]
+    fn int_literals_parse_across_radixes() {
+        assert_eq!(parse_int("7"), Some(7));
+        assert_eq!(parse_int("0x10"), Some(16));
+        assert_eq!(parse_int("0b101"), Some(5));
+        assert_eq!(parse_int("1_000"), Some(1000));
+        assert_eq!(parse_int("4u32"), Some(4));
+        assert_eq!(parse_int("0x1F_u32"), Some(31));
+    }
+
+    #[test]
+    fn offset_consts_matching_the_registry_pass() {
+        let src = "const DESC_LEASE: u32 = 4;\n\
+                   fn f(d: Addr) -> u64 { ep.read(d.offset(DESC_LEASE)) }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        assert!(!has_rule(&d, "unregistered-offset"), "{d:?}");
+    }
+
+    #[test]
+    fn offset_const_with_wrong_value_is_flagged() {
+        let src = "const DESC_LEASE: u32 = 3;\n\
+                   fn f(d: Addr) -> u64 { ep.read(d.offset(DESC_LEASE)) }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        assert!(hit(&d, "unregistered-offset", 1), "{d:?}");
+    }
+
+    #[test]
+    fn non_offset_consts_are_ignored() {
+        let src = "const RETRIES: u32 = 3;\nfn f() -> u32 { RETRIES }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn test_gated_raw_rmw_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests { fn t() { ep.cas(a, 0, 1); } }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn split_lane_words_may_name_both_lanes() {
+        // The ring cursors are a declared split-lane pair: naming each
+        // cursor with its own lane in one file is the design, not a
+        // cross-lane violation.
+        let src = "fn f() { g(RING_CPU_CURSOR, RmwLane::Cpu) }\n\
+                   fn h() { g(RING_NIC_CURSOR, RmwLane::Nic) }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        assert!(!has_rule(&d, "cross-lane"), "{d:?}");
+    }
+}

@@ -1,0 +1,34 @@
+//! `verb-lint` — standalone entry point for the static verb-contract
+//! pass (see `qplock::analysis`). Lints the crate sources (or a tree
+//! given as the first argument) against the word-ownership registry;
+//! exits non-zero on any finding, printing `file:line: [rule] msg`
+//! diagnostics to stderr.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use qplock::analysis::lint_tree;
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"),
+    };
+    match lint_tree(&root) {
+        Err(e) => {
+            eprintln!("verb-lint: cannot read {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+        Ok(diags) if diags.is_empty() => {
+            println!("verb-lint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                eprintln!("{d}");
+            }
+            eprintln!("verb-lint: {} violation(s)", diags.len());
+            ExitCode::FAILURE
+        }
+    }
+}

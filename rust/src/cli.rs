@@ -171,6 +171,13 @@ SUBCOMMANDS:
             --differential     emit the handle-level lockstep trace and
                                exit (diff against poll_model_check.py
                                --trace; --seed/--steps apply)
+  lint    static verb-contract pass over the crate sources: every
+          protocol-word access must go through the contract-tagged
+          accessors (rdma::contract), offsets must match the
+          word-ownership registry, RMW lanes must never mix, and
+          Class::Local paths must stay NIC-silent (exit non-zero on
+          any finding; same pass as the verb_lint binary)
+            --root <dir>       source tree to lint (default this crate's src/)
   mc      model-check a spec (paper Appendix A)
             --model <name>     qplock|peterson|naive|spin (default qplock)
             --procs <n>        processes (default 3)

@@ -23,7 +23,11 @@
 //! * [`runtime`] — compute engine executing the reference-kernel math
 //!   inside critical sections (native port of the JAX/Pallas kernels;
 //!   see `runtime/mod.rs` for the PJRT substitution note).
+//! * [`analysis`] — zero-dependency static verb-contract linter
+//!   (`verb-lint`) over the crate's own sources, enforcing the
+//!   word-ownership registry in [`rdma::contract`] at review time.
 //! * [`stats`], [`util`] — measurement and support code.
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

@@ -46,6 +46,14 @@ impl Class {
             Class::Remote => 1,
         }
     }
+
+    /// The opposite class (the Peterson opponent's cohort).
+    pub fn other(self) -> Class {
+        match self {
+            Class::Local => Class::Remote,
+            Class::Remote => Class::Local,
+        }
+    }
 }
 
 /// Error surfaced when an operation touches an acquisition whose lease
@@ -125,6 +133,8 @@ pub mod test_knobs {
         SKIP_ARM_RECHECK.store(false, SeqCst);
         IGNORE_DIRTY_TOKENS.store(false, SeqCst);
         SKIP_CS_RENEW.store(false, SeqCst);
+        #[cfg(debug_assertions)]
+        crate::rdma::contract::test_knobs::MISLANE_RING_CURSOR.store(false, SeqCst);
     }
 }
 

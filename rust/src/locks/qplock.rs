@@ -100,29 +100,32 @@ use super::{
     AcqPhase, ArmOutcome, AsyncLockHandle, Class, LeaseError, LockHandle, LockPoll, SharedLock,
     SweepStats, WakeupReg,
 };
-use crate::rdma::{wakeup, Addr, Endpoint, NodeId, RdmaDomain, RmwLane};
+use crate::rdma::contract::{self, Role, Via, Word};
+use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
 use crate::util::spin::Backoff;
 
 /// The paper's −1 sentinel for "waiting" in the budget word.
 const WAITING: u64 = u64::MAX;
 
-/// Offset of the `next` field inside a descriptor.
-const NEXT: u32 = 1;
+// The descriptor word layout (budget | next | wake-ring | wake-token |
+// lease) is declared once, in the word-ownership registry
+// ([`contract::REGISTRY`]); every access below goes through the
+// contract-tagged accessors, naming the word and the issuing role
+// instead of a raw offset. A descriptor is still a single cache line
+// under the default line-padded arenas
+// ([`crate::rdma::memory::WORDS_PER_LINE`]).
 
-/// Offset of the wakeup-ring header address (0 = no wakeup armed).
-const WAKE_RING: u32 = 2;
-
-/// Offset of the wakeup token word: the ring's per-lane slot count in
-/// the high 32 bits (the producer's modulo base), the token to publish
-/// in the low 32.
-const WAKE_TOKEN: u32 = 3;
-
-/// Offset of the lease word (0 = no lease; see [`lease`]).
-const LEASE: u32 = 4;
-
-/// Descriptor size in words. Still a single cache line under the
-/// default line-padded arenas ([`crate::rdma::memory::WORDS_PER_LINE`]).
-const DESC_WORDS: u32 = 5;
+/// The cohort tail register owned by a class — and, per the Table-1
+/// discipline, the RMW *lane* that owns it: `tail[LOCAL]` is only ever
+/// CPU-CAS'd, `tail[REMOTE]` only rCAS'd. Class dispatch IS lane
+/// dispatch for the tails.
+#[inline]
+fn tail_word(cls: Class) -> Word {
+    match cls {
+        Class::Local => Word::TailLocal,
+        Class::Remote => Word::TailRemote,
+    }
+}
 
 /// Lease-word encoding. One 8-byte register per descriptor carries the
 /// whole per-acquisition failure-detection state:
@@ -275,10 +278,13 @@ impl QpLock {
             "budget must be distinguishable from the WAITING sentinel"
         );
         let mem = &domain.node(home).mem;
+        let victim = mem.alloc(1);
+        let tail = [mem.alloc(1), mem.alloc(1)];
+        contract::register_lock_words(domain, victim, tail[0], tail[1]);
         Arc::new(QpLock {
             inner: Arc::new(QpInner {
-                victim: mem.alloc(1),
-                tail: [mem.alloc(1), mem.alloc(1)],
+                victim,
+                tail,
                 home,
                 init_budget,
                 contended: AtomicU64::new(0),
@@ -325,7 +331,8 @@ impl QpInner {
         // budget, next, wake ring, wake token, lease — always on the
         // caller's node (waiting, wakeup registration, and lease
         // renewal are all local state).
-        let desc = ep.alloc(DESC_WORDS);
+        let desc = ep.alloc(contract::DESC_WORDS);
+        contract::register_desc(ep.domain(), desc, class == Class::Local);
         self.slots.lock().unwrap().push(desc);
         QpHandle {
             shared: Arc::clone(self),
@@ -372,8 +379,7 @@ impl QpInner {
     /// advance any in-progress repair. Every access to the descriptor
     /// is a local CPU op (the slot lives on the sweeper's node).
     fn sweep_slot(&self, ep: &Endpoint, desc: Addr, now: u64, stats: &mut SweepStats) {
-        let la = desc.offset(LEASE);
-        let w = ep.read(la);
+        let w = contract::desc_read_sc(ep, Role::Sweeper, desc, Word::DescLease);
         if w == 0 || lease::reaped(w) {
             return; // idle slot, or repair already finished
         }
@@ -387,7 +393,7 @@ impl QpInner {
             // epoch. Losing here means the owner renewed or released
             // concurrently; nothing to do.
             let fenced = lease::fence(w);
-            if ep.cas(la, w, fenced) != w {
+            if contract::desc_cas(ep, Role::Sweeper, desc, Word::DescLease, w, fenced) != w {
                 return;
             }
             stats.fenced += 1;
@@ -396,7 +402,7 @@ impl QpInner {
             // *successor's* token, not the zombie's. (A token already
             // published for the zombie is discarded by its session's
             // stale-epoch cross-check.)
-            ep.write(desc.offset(WAKE_RING), 0);
+            contract::desc_write_sc(ep, Role::Sweeper, desc, Word::DescWakeRing, 0);
             self.repair(ep, desc, fenced, now, stats);
         } else {
             self.repair(ep, desc, w, now, stats);
@@ -414,7 +420,7 @@ impl QpInner {
             // nothing shared to repair.
             lease::PHASE_ENQ => self.reap(ep, desc, w, now, stats),
             lease::PHASE_WAIT => {
-                let b = ep.read(desc);
+                let b = contract::desc_read_sc(ep, Role::Sweeper, desc, Word::DescBudget);
                 if b == WAITING {
                     // The owed handoff has not landed yet; the dead
                     // waiter is now a pass-through — watch its budget
@@ -427,8 +433,21 @@ impl QpInner {
                     // waiter's Reacquire yield (victim write) and
                     // continue as a fenced leader next pass.
                     let cls = self.class_of_desc(desc);
-                    ep.write_best(self.victim, cls.idx() as u64);
-                    ep.write(desc.offset(LEASE), lease::with_phase(w, lease::PHASE_ENGAGE));
+                    contract::write_via(
+                        ep,
+                        Role::RepairProxy,
+                        Word::Victim,
+                        self.victim,
+                        cls.idx() as u64,
+                        Via::Best,
+                    );
+                    contract::desc_write_sc(
+                        ep,
+                        Role::Sweeper,
+                        desc,
+                        Word::DescLease,
+                        lease::with_phase(w, lease::PHASE_ENGAGE),
+                    );
                     stats.engaged += 1;
                     return;
                 }
@@ -439,8 +458,19 @@ impl QpInner {
                 // the exact reads (and win condition) the live leader's
                 // `step_peterson` issues.
                 let cls = self.class_of_desc(desc);
-                let other_locked = ep.read_best(self.tail[1 - cls.idx()]) != 0;
-                if other_locked && ep.read_best(self.victim) == cls.idx() as u64 {
+                let other = cls.other();
+                let other_locked = contract::read_via(
+                    ep,
+                    Role::RepairProxy,
+                    tail_word(other),
+                    self.tail[other.idx()],
+                    Via::Best,
+                ) != 0;
+                let we_are_victim = || {
+                    contract::read_via(ep, Role::RepairProxy, Word::Victim, self.victim, Via::Best)
+                        == cls.idx() as u64
+                };
+                if other_locked && we_are_victim() {
                     stats.engaged += 1;
                     return; // still waiting; retry next sweep
                 }
@@ -449,7 +479,7 @@ impl QpInner {
                 self.relay(ep, desc, w, self.init_budget - 1, now, stats);
             }
             lease::PHASE_HELD => {
-                let b = ep.read(desc);
+                let b = contract::desc_read_sc(ep, Role::Sweeper, desc, Word::DescBudget);
                 debug_assert!(b >= 1 && b != WAITING, "held implies a live budget");
                 self.relay(ep, desc, w, b - 1, now, stats);
             }
@@ -471,20 +501,25 @@ impl QpInner {
         stats: &mut SweepStats,
     ) {
         let cls = self.class_of_desc(desc);
-        if ep.read(desc.offset(NEXT)) == 0 {
+        if contract::desc_read_sc(ep, Role::Sweeper, desc, Word::DescNext) == 0 {
             // tail[LOCAL] is owned by co-located CPUs (and a local-class
             // slot implies this sweeper runs on the home node);
             // tail[REMOTE] is NIC-owned — rCAS even from the home node.
-            let lane = match cls {
-                Class::Local => RmwLane::Cpu,
-                Class::Remote => RmwLane::Nic,
-            };
-            if ep.cas_lane(self.tail[cls.idx()], desc.to_bits(), 0, lane) == desc.to_bits() {
+            // `rmw_cas` routes through the word's registry-owned lane.
+            let seen = contract::rmw_cas(
+                ep,
+                Role::RepairProxy,
+                tail_word(cls),
+                self.tail[cls.idx()],
+                desc.to_bits(),
+                0,
+            );
+            if seen == desc.to_bits() {
                 stats.released += 1;
                 self.reap(ep, desc, w, now, stats);
                 return;
             }
-            if ep.read(desc.offset(NEXT)) == 0 {
+            if contract::desc_read_sc(ep, Role::Sweeper, desc, Word::DescNext) == 0 {
                 // A successor is between its tail CAS and its link
                 // write; it is live (the link lands within its own
                 // poll), so pick it up next sweep instead of spinning.
@@ -492,9 +527,9 @@ impl QpInner {
                 return;
             }
         }
-        let next = Addr::from_bits(ep.read(desc.offset(NEXT)));
+        let next = Addr::from_bits(contract::desc_read_sc(ep, Role::Sweeper, desc, Word::DescNext));
         debug_assert!(pass != WAITING);
-        ep.write_best(next, pass);
+        contract::write_via(ep, Role::RepairProxy, Word::DescBudget, next, pass, Via::Best);
         if self.wakeups.load(SeqCst) {
             self.signal_from(ep, next);
         }
@@ -505,7 +540,7 @@ impl QpInner {
     /// Repair finished: mark the slot reaped (its handle may start a
     /// fresh acquisition) and record the recovery latency.
     fn reap(&self, ep: &Endpoint, desc: Addr, w: u64, now: u64, stats: &mut SweepStats) {
-        ep.write(desc.offset(LEASE), lease::reap(w));
+        contract::desc_write_sc(ep, Role::Sweeper, desc, Word::DescLease, lease::reap(w));
         stats.reaped += 1;
         stats
             .recovery_ticks
@@ -517,24 +552,33 @@ impl QpInner {
     /// actual locality (the ring's CPU lane belongs to CPUs on the
     /// session's node; everyone else claims through its NIC lane).
     fn signal_from(&self, ep: &Endpoint, next: Addr) {
-        let ring_bits = ep.read_best(next.offset(WAKE_RING));
+        let ring_bits = contract::read_via(
+            ep,
+            Role::RepairProxy,
+            Word::DescWakeRing,
+            contract::desc_addr(next, Word::DescWakeRing),
+            Via::Best,
+        );
         if ring_bits == 0 {
             return;
         }
-        let token_word = ep.read_best(next.offset(WAKE_TOKEN));
+        let token_word = contract::read_via(
+            ep,
+            Role::RepairProxy,
+            Word::DescWakeToken,
+            contract::desc_addr(next, Word::DescWakeToken),
+            Via::Best,
+        );
         let (slots, token) = (token_word >> 32, token_word & 0xFFFF_FFFF);
         if slots == 0 {
             return;
         }
+        // The repair proxy picks the publication lane by the ring's
+        // actual locality — the ring's CPU lane belongs to CPUs on the
+        // session's node; everyone else claims through its NIC lane.
         let hdr = Addr::from_bits(ring_bits);
-        let (cursor, lane_base, lane) = if ep.is_local(hdr) {
-            (wakeup::CPU_CURSOR_WORD, 0, RmwLane::Cpu)
-        } else {
-            (wakeup::NIC_CURSOR_WORD, slots as u32, RmwLane::Nic)
-        };
-        let claimed = ep.faa_lane(hdr.offset(cursor), 1, lane);
-        let slot = hdr.offset(wakeup::HDR_WORDS + lane_base + (claimed % slots) as u32);
-        ep.write_best(slot, token + 1);
+        let via = if ep.is_local(hdr) { Via::Cpu } else { Via::Verb };
+        contract::ring_publish(ep, Role::RepairProxy, hdr, slots, token, via);
     }
 }
 
@@ -628,67 +672,19 @@ impl QpHandle {
         &self.ep
     }
 
-    // ---- class-dispatched access to home-node registers ----
-    //
-    // A Local-class process co-resides with victim/tail and uses CPU
-    // accesses; a Remote-class process must use verbs. This dispatch *is*
-    // the paper's operation-asymmetry discipline.
-
+    /// Class-dispatched access path to home-node registers and peer
+    /// descriptors. A Local-class process co-resides with victim/tail
+    /// (and, cohorts being class-homogeneous, with every cohort peer)
+    /// and uses CPU accesses; a Remote-class process must use verbs.
+    /// This dispatch *is* the paper's operation-asymmetry discipline —
+    /// the contract accessors it feeds ([`contract::read_via`] and
+    /// friends) tag each access with the word and role so the registry
+    /// can check it.
     #[inline]
-    fn home_read(&self, a: Addr) -> u64 {
+    fn via(&self) -> Via {
         match self.class {
-            Class::Local => self.ep.read(a),
-            Class::Remote => self.ep.r_read(a),
-        }
-    }
-
-    #[inline]
-    fn home_write(&self, a: Addr, v: u64) {
-        match self.class {
-            Class::Local => self.ep.write(a, v),
-            Class::Remote => self.ep.r_write(a, v),
-        }
-    }
-
-    #[inline]
-    fn home_cas(&self, a: Addr, expected: u64, swap: u64) -> u64 {
-        match self.class {
-            Class::Local => self.ep.cas(a, expected, swap),
-            Class::Remote => self.ep.r_cas(a, expected, swap),
-        }
-    }
-
-    /// Write a field of *another* process's descriptor. For a local-class
-    /// process every cohort member is on the home node (local write); a
-    /// remote-class process reaches its predecessor/successor with rWrite
-    /// (paper Algorithm 2 lines 9 and 19).
-    #[inline]
-    fn peer_write(&self, a: Addr, v: u64) {
-        match self.class {
-            Class::Local => self.ep.write(a, v),
-            Class::Remote => self.ep.r_write(a, v),
-        }
-    }
-
-    /// Read a field of another cohort member's descriptor (or its
-    /// session's ring header). Cohorts are class-homogeneous, so for a
-    /// local-class process the peer is co-located (local read); a
-    /// remote-class process uses rRead.
-    #[inline]
-    fn peer_read(&self, a: Addr) -> u64 {
-        match self.class {
-            Class::Local => self.ep.read(a),
-            Class::Remote => self.ep.r_read(a),
-        }
-    }
-
-    /// Fetch-and-add on a peer session's ring cursor (wakeup slot
-    /// claim).
-    #[inline]
-    fn peer_faa(&self, a: Addr, add: u64) -> u64 {
-        match self.class {
-            Class::Local => self.ep.faa(a, add),
-            Class::Remote => self.ep.r_faa(a, add),
+            Class::Local => Via::Cpu,
+            Class::Remote => Via::Verb,
         }
     }
 
@@ -697,20 +693,21 @@ impl QpHandle {
     /// Renew the current lease and record `phase` — the owner's half of
     /// the lease-word arbitration. A read + CAS on the process's own
     /// node (zero remote verbs); losing the CAS means the sweeper
-    /// fenced this epoch, i.e. the acquisition is revoked.
-    fn lease_update(&mut self, phase: u64) -> Result<(), LeaseError> {
+    /// fenced this epoch, i.e. the acquisition is revoked. `role` is
+    /// the contract role the caller renews under (waiter, holder, or
+    /// session keep-alive).
+    fn lease_update(&mut self, role: Role, phase: u64) -> Result<(), LeaseError> {
         if !self.lease_active {
             return Ok(());
         }
-        let a = self.desc.offset(LEASE);
-        let cur = self.ep.read(a);
+        let cur = contract::desc_read_sc(&self.ep, role, self.desc, Word::DescLease);
         if lease::fenced(cur) {
             return Err(LeaseError::Expired);
         }
         debug_assert_eq!(lease::epoch(cur), self.epoch, "foreign epoch in lease word");
         let deadline = self.ep.domain().lease_now() + self.shared.lease_ticks.load(SeqCst);
         let next = lease::pack(self.epoch, phase, deadline);
-        if self.ep.cas(a, cur, next) != cur {
+        if contract::desc_cas(&self.ep, role, self.desc, Word::DescLease, cur, next) != cur {
             return Err(LeaseError::Expired);
         }
         Ok(())
@@ -721,14 +718,15 @@ impl QpHandle {
     /// epoch (it only fences live-expired words), so the caller's
     /// `q_unlock` writes are safe; on `Err` the sweeper owns it and
     /// the caller must not touch shared state.
-    fn lease_release_claim(&mut self) -> Result<(), LeaseError> {
+    fn lease_release_claim(&mut self, role: Role) -> Result<(), LeaseError> {
         if !self.lease_active {
             return Ok(());
         }
         self.lease_active = false;
-        let a = self.desc.offset(LEASE);
-        let cur = self.ep.read(a);
-        if lease::fenced(cur) || self.ep.cas(a, cur, 0) != cur {
+        let cur = contract::desc_read_sc(&self.ep, role, self.desc, Word::DescLease);
+        if lease::fenced(cur)
+            || contract::desc_cas(&self.ep, role, self.desc, Word::DescLease, cur, 0) != cur
+        {
             return Err(LeaseError::Expired);
         }
         Ok(())
@@ -763,8 +761,7 @@ impl QpHandle {
         // per-acquisition state: clear any stale one from a previous
         // parked wait before a predecessor can observe it.
         if self.shared.lease_ticks.load(SeqCst) > 0 {
-            let a = self.desc.offset(LEASE);
-            let cur = self.ep.read(a);
+            let cur = contract::desc_read_sc(&self.ep, Role::Waiter, self.desc, Word::DescLease);
             if lease::fenced(cur) && !lease::reaped(cur) {
                 // The previous acquisition was revoked and its repair
                 // is still in flight: the descriptor is a live queue
@@ -776,12 +773,18 @@ impl QpHandle {
             self.epoch = (self.epoch.wrapping_add(1) & lease::EPOCH_MASK).max(1);
             self.lease_active = true;
             let deadline = self.ep.domain().lease_now() + self.shared.lease_ticks.load(SeqCst);
-            self.ep.write(a, lease::pack(self.epoch, lease::PHASE_ENQ, deadline));
+            contract::desc_write_sc(
+                &self.ep,
+                Role::Waiter,
+                self.desc,
+                Word::DescLease,
+                lease::pack(self.epoch, lease::PHASE_ENQ, deadline),
+            );
         } else {
             self.lease_active = false;
         }
-        self.ep.write_desc(self.desc.offset(NEXT), 0);
-        self.ep.write_desc(self.desc.offset(WAKE_RING), 0);
+        contract::desc_write(&self.ep, Role::Waiter, self.desc, Word::DescNext, 0);
+        contract::desc_write(&self.ep, Role::Waiter, self.desc, Word::DescWakeRing, 0);
         self.state = AcqState::Enqueue { curr: 0 };
         self.step_enqueue()
     }
@@ -803,11 +806,20 @@ impl QpHandle {
         // lease term must outlive a poll step — ROADMAP §Failure
         // model), so the sweeper cannot fence us between the CAS below
         // landing and the phase tag catching up.
-        if self.lease_update(lease::PHASE_ENQ).is_err() {
+        if self.lease_update(Role::Waiter, lease::PHASE_ENQ).is_err() {
             return self.lease_expired();
         }
-        let tail = self.shared.tail[self.class.idx()];
-        let seen = self.home_cas(tail, curr, self.desc.to_bits());
+        // The tail CAS goes through the word's registry-owned lane:
+        // tail[LOCAL] is CPU-owned, tail[REMOTE] is NIC-owned — class
+        // dispatch *is* lane dispatch for the cohort tails.
+        let seen = contract::rmw_cas(
+            &self.ep,
+            Role::Waiter,
+            tail_word(self.class),
+            self.shared.tail[self.class.idx()],
+            curr,
+            self.desc.to_bits(),
+        );
         if seen != curr {
             self.state = AcqState::Enqueue { curr: seen };
             return LockPoll::Pending;
@@ -816,16 +828,40 @@ impl QpHandle {
             // Queue was empty: we are the leader; set budget = kInit and
             // engage the Peterson protocol (victim write is the
             // engagement's one store — Algorithm 1).
-            self.ep.write_desc(self.desc, self.shared.init_budget);
-            self.home_write(self.shared.victim, self.class.idx() as u64);
+            contract::desc_write(
+                &self.ep,
+                Role::Waiter,
+                self.desc,
+                Word::DescBudget,
+                self.shared.init_budget,
+            );
+            contract::write_via(
+                &self.ep,
+                Role::Waiter,
+                Word::Victim,
+                self.shared.victim,
+                self.class.idx() as u64,
+                self.via(),
+            );
             self.state = AcqState::EngagePeterson;
             return self.step_peterson();
         }
         // Enqueue behind `curr`: mark ourselves waiting *before* linking,
         // so the predecessor cannot pass the lock before we are ready.
+        // (Cohorts are class-homogeneous, so the predecessor's
+        // descriptor is reached the same way the home registers are —
+        // a local write for a local-class process, rWrite otherwise;
+        // paper Algorithm 2 line 9.)
         self.shared.contended.fetch_add(1, Relaxed);
-        self.ep.write_desc(self.desc, WAITING);
-        self.peer_write(Addr::from_bits(curr).offset(NEXT), self.desc.to_bits());
+        contract::desc_write(&self.ep, Role::Waiter, self.desc, Word::DescBudget, WAITING);
+        contract::write_via(
+            &self.ep,
+            Role::Waiter,
+            Word::DescNext,
+            contract::desc_addr(Addr::from_bits(curr), Word::DescNext),
+            self.desc.to_bits(),
+            self.via(),
+        );
         self.state = AcqState::WaitBudget;
         self.step_wait_budget()
     }
@@ -835,17 +871,24 @@ impl QpHandle {
     /// many times a multiplexer polls a parked waiter. With leases on,
     /// each poll also renews the lease — still purely local ops.
     fn step_wait_budget(&mut self) -> LockPoll {
-        if self.lease_update(lease::PHASE_WAIT).is_err() {
+        if self.lease_update(Role::Waiter, lease::PHASE_WAIT).is_err() {
             return self.lease_expired();
         }
-        let budget = self.ep.read_desc(self.desc);
+        let budget = contract::desc_read(&self.ep, Role::Waiter, self.desc, Word::DescBudget);
         if budget == WAITING {
             return LockPoll::Pending;
         }
         if budget == 0 {
             // Budget exhausted: yield the global lock to the other class
             // and re-acquire it (fairness — Algorithm 2 lines 11-13).
-            self.home_write(self.shared.victim, self.class.idx() as u64);
+            contract::write_via(
+                &self.ep,
+                Role::Waiter,
+                Word::Victim,
+                self.shared.victim,
+                self.class.idx() as u64,
+                self.via(),
+            );
             self.state = AcqState::Reacquire;
             return self.step_peterson();
         }
@@ -857,15 +900,31 @@ impl QpHandle {
     /// both `EngagePeterson` (leader) and `Reacquire` (budget
     /// exhaustion); the latter refills the budget word on completion.
     fn step_peterson(&mut self) -> LockPoll {
-        if self.lease_update(lease::PHASE_ENGAGE).is_err() {
+        if self.lease_update(Role::Waiter, lease::PHASE_ENGAGE).is_err() {
             return self.lease_expired();
         }
         let me = self.class.idx() as u64;
-        if self.other_cohort_locked() && self.home_read(self.shared.victim) == me {
+        // Short-circuit order matters for the paper's verb counts: the
+        // victim word is only read when the other cohort is engaged.
+        if self.other_cohort_locked()
+            && contract::read_via(
+                &self.ep,
+                Role::Waiter,
+                Word::Victim,
+                self.shared.victim,
+                self.via(),
+            ) == me
+        {
             return LockPoll::Pending;
         }
         if self.state == AcqState::Reacquire {
-            self.ep.write_desc(self.desc, self.shared.init_budget);
+            contract::desc_write(
+                &self.ep,
+                Role::Waiter,
+                self.desc,
+                Word::DescBudget,
+                self.shared.init_budget,
+            );
         }
         self.finish_acquisition()
     }
@@ -878,14 +937,14 @@ impl QpHandle {
     /// this acquisition, so we back off without entering — exactly one
     /// side ever grants, the no-double-grant half of the fence.
     fn finish_acquisition(&mut self) -> LockPoll {
-        if self.lease_update(lease::PHASE_HELD).is_err() {
+        if self.lease_update(Role::Waiter, lease::PHASE_HELD).is_err() {
             return self.lease_expired();
         }
         self.state = AcqState::Held;
         if self.abandoning {
             self.abandoning = false;
             self.state = AcqState::Idle;
-            if self.lease_release_claim().is_err() {
+            if self.lease_release_claim(Role::Holder).is_err() {
                 return LockPoll::Expired;
             }
             self.q_unlock();
@@ -898,22 +957,43 @@ impl QpHandle {
     /// releasing the Peterson lock, since `cohort[id]` becomes null) or
     /// pass to the successor with a decremented budget.
     fn q_unlock(&mut self) {
-        let tail = self.shared.tail[self.class.idx()];
-        if self.ep.read_desc(self.desc.offset(NEXT)) == 0 {
-            if self.home_cas(tail, self.desc.to_bits(), 0) == self.desc.to_bits() {
+        if contract::desc_read(&self.ep, Role::Passer, self.desc, Word::DescNext) == 0 {
+            let seen = contract::rmw_cas(
+                &self.ep,
+                Role::Passer,
+                tail_word(self.class),
+                self.shared.tail[self.class.idx()],
+                self.desc.to_bits(),
+                0,
+            );
+            if seen == self.desc.to_bits() {
                 return;
             }
             // A successor is between its tail-CAS and its link write;
             // wait for the link (local spin on our own next field).
             let mut bo = Backoff::default();
-            while self.ep.read_desc(self.desc.offset(NEXT)) == 0 {
+            while contract::desc_read(&self.ep, Role::Passer, self.desc, Word::DescNext) == 0 {
                 bo.snooze();
             }
         }
-        let next = Addr::from_bits(self.ep.read_desc(self.desc.offset(NEXT)));
-        let budget = self.ep.read_desc(self.desc);
+        let next = Addr::from_bits(contract::desc_read(
+            &self.ep,
+            Role::Passer,
+            self.desc,
+            Word::DescNext,
+        ));
+        let budget = contract::desc_read(&self.ep, Role::Passer, self.desc, Word::DescBudget);
         debug_assert!(budget >= 1 && budget != WAITING);
-        self.peer_write(next, budget - 1); // pass the lock
+        // Pass the lock: the successor's budget word, reached the same
+        // way as every cohort peer (local write or rWrite by class).
+        contract::write_via(
+            &self.ep,
+            Role::Passer,
+            Word::DescBudget,
+            next,
+            budget - 1,
+            self.via(),
+        );
         if self.shared.wakeups.load(SeqCst) {
             self.signal_successor(next);
         }
@@ -930,34 +1010,49 @@ impl QpHandle {
     /// like the budget write: a local-class passer stays off the NIC
     /// and a remote-class one adds O(1) verbs to the handoff.
     fn signal_successor(&self, next: Addr) {
-        let ring_bits = self.peer_read(next.offset(WAKE_RING));
+        let ring_bits = contract::read_via(
+            &self.ep,
+            Role::Passer,
+            Word::DescWakeRing,
+            contract::desc_addr(next, Word::DescWakeRing),
+            self.via(),
+        );
         if ring_bits == 0 {
             return;
         }
-        let token_word = self.peer_read(next.offset(WAKE_TOKEN));
+        let token_word = contract::read_via(
+            &self.ep,
+            Role::Passer,
+            Word::DescWakeToken,
+            contract::desc_addr(next, Word::DescWakeToken),
+            self.via(),
+        );
         let (slots, token) = (token_word >> 32, token_word & 0xFFFF_FFFF);
         if slots == 0 {
             return; // malformed registration: nothing to signal safely
         }
-        let hdr = Addr::from_bits(ring_bits);
         // Lane discipline (same as the per-class cohort tails): under
         // commodity atomicity a CPU RMW and a NIC RMW on one word are
         // not atomic with each other, so each ring cursor is claimed
         // by exactly one unit — the CPU lane by co-located (local-
         // class) passers, the NIC lane by rFAA (remote-class) passers.
-        let (cursor, lane_base) = match self.class {
-            Class::Local => (wakeup::CPU_CURSOR_WORD, 0),
-            Class::Remote => (wakeup::NIC_CURSOR_WORD, slots as u32),
-        };
-        let claimed = self.peer_faa(hdr.offset(cursor), 1);
-        let slot = hdr.offset(wakeup::HDR_WORDS + lane_base + (claimed % slots) as u32);
-        self.peer_write(slot, token + 1);
+        // `ring_publish` dispatches on the access path, which for a
+        // passer is its class.
+        let hdr = Addr::from_bits(ring_bits);
+        contract::ring_publish(&self.ep, Role::Passer, hdr, slots, token, self.via());
     }
 
     /// `qIsLocked()` on the *other* cohort: its tail register is non-null.
     #[inline]
     fn other_cohort_locked(&self) -> bool {
-        self.home_read(self.shared.tail[1 - self.class.idx()]) != 0
+        let other = self.class.other();
+        contract::read_via(
+            &self.ep,
+            Role::Waiter,
+            tail_word(other),
+            self.shared.tail[other.idx()],
+            self.via(),
+        ) != 0
     }
 
     /// Current acquisition state (test/diagnostic visibility).
@@ -1010,7 +1105,7 @@ impl LockHandle for QpHandle {
     fn try_unlock(&mut self) -> Result<(), LeaseError> {
         debug_assert_eq!(self.state, AcqState::Held, "unlock() without holding");
         self.state = AcqState::Idle;
-        if self.lease_release_claim().is_err() {
+        if self.lease_release_claim(Role::Holder).is_err() {
             return Err(LeaseError::Expired);
         }
         self.q_unlock();
@@ -1037,7 +1132,7 @@ impl AsyncLockHandle for QpHandle {
                 // Polling a held lock renews its lease (a holder that
                 // keeps polling never spuriously expires); a fence
                 // here means the sweeper revoked us mid-hold.
-                if self.lease_update(lease::PHASE_HELD).is_err() {
+                if self.lease_update(Role::Holder, lease::PHASE_HELD).is_err() {
                     return self.lease_expired();
                 }
                 LockPoll::Held
@@ -1060,7 +1155,7 @@ impl AsyncLockHandle for QpHandle {
             // trivial ENQ reap, and the next submit parks until then.
             AcqState::Enqueue { .. } => {
                 self.state = AcqState::Idle;
-                let _ = self.lease_release_claim();
+                let _ = self.lease_release_claim(Role::Waiter);
                 true
             }
             // Enqueued (or owed the Peterson lock): drain via poll until
@@ -1073,7 +1168,7 @@ impl AsyncLockHandle for QpHandle {
             // epoch's release is the sweeper's — skip it either way).
             AcqState::Held => {
                 self.state = AcqState::Idle;
-                if self.lease_release_claim().is_ok() {
+                if self.lease_release_claim(Role::Holder).is_ok() {
                     self.q_unlock();
                 }
                 true
@@ -1100,7 +1195,14 @@ impl AsyncLockHandle for QpHandle {
         // A revoked waiter must not park on a token the sweeper's
         // relay will never publish for it: have the caller poll now
         // (the poll surfaces `Expired`).
-        if self.lease_active && lease::fenced(self.ep.read(self.desc.offset(LEASE))) {
+        if self.lease_active
+            && lease::fenced(contract::desc_read_sc(
+                &self.ep,
+                Role::Session,
+                self.desc,
+                Word::DescLease,
+            ))
+        {
             return ArmOutcome::AlreadyReady;
         }
         // Token first, ring last: the passer reads the ring word and
@@ -1113,11 +1215,20 @@ impl AsyncLockHandle for QpHandle {
             reg.token >> 32 == 0 && reg.ring_slots >> 32 == 0 && reg.ring_slots > 0,
             "token and lane size must pack into one registration word"
         );
-        self.ep.write(
-            self.desc.offset(WAKE_TOKEN),
+        contract::desc_write_sc(
+            &self.ep,
+            Role::Session,
+            self.desc,
+            Word::DescWakeToken,
             (reg.ring_slots << 32) | reg.token,
         );
-        self.ep.write(self.desc.offset(WAKE_RING), reg.ring.to_bits());
+        contract::desc_write_sc(
+            &self.ep,
+            Role::Session,
+            self.desc,
+            Word::DescWakeRing,
+            reg.ring.to_bits(),
+        );
         // Open the lock's signalling gate before the re-check, so a
         // passer that misses the gate must have written the budget
         // early enough for the re-check to see it.
@@ -1129,12 +1240,12 @@ impl AsyncLockHandle for QpHandle {
         if super::test_knobs::SKIP_ARM_RECHECK.load(Relaxed) {
             return ArmOutcome::Armed;
         }
-        if self.ep.read(self.desc) != WAITING {
+        if contract::desc_read_sc(&self.ep, Role::Session, self.desc, Word::DescBudget) != WAITING {
             // The handoff already landed; the passer may or may not
             // have seen the registration. Disarm and have the caller
             // poll now — if a token was published anyway, the session
             // discards it on consumption.
-            self.ep.write(self.desc.offset(WAKE_RING), 0);
+            contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeRing, 0);
             return ArmOutcome::AlreadyReady;
         }
         ArmOutcome::Armed
@@ -1151,7 +1262,7 @@ impl AsyncLockHandle for QpHandle {
             AcqState::Reacquire | AcqState::EngagePeterson => lease::PHASE_ENGAGE,
             AcqState::Held => lease::PHASE_HELD,
         };
-        match self.lease_update(phase) {
+        match self.lease_update(Role::Session, phase) {
             Ok(()) => Ok(()),
             Err(e) => {
                 self.lease_expired();
@@ -1161,7 +1272,8 @@ impl AsyncLockHandle for QpHandle {
     }
 
     fn has_pending_handoff(&self) -> bool {
-        self.state == AcqState::WaitBudget && self.ep.read_desc(self.desc) != WAITING
+        self.state == AcqState::WaitBudget
+            && contract::desc_read(&self.ep, Role::Session, self.desc, Word::DescBudget) != WAITING
     }
 
     fn phase(&self) -> AcqPhase {
@@ -1179,7 +1291,7 @@ impl AsyncLockHandle for QpHandle {
         // machine state: a crashed client's handle is frozen mid-state
         // forever, but once the sweeper reaps its slot (or the word is
         // clear and nothing is in flight) the descriptor is inert.
-        match self.ep.read(self.desc.offset(LEASE)) {
+        match contract::desc_read_sc(&self.ep, Role::Session, self.desc, Word::DescLease) {
             0 => self.state == AcqState::Idle,
             w => lease::reaped(w),
         }
@@ -1648,14 +1760,15 @@ mod tests {
         assert!(l.enable_leases(64));
         let mut h = l.qp_handle(d.endpoint(1));
         assert_eq!(h.poll_lock(), LockPoll::Held);
-        let lw = d.peek(h.desc.offset(LEASE));
+        let lease_addr = contract::desc_addr(h.desc, Word::DescLease);
+        let lw = d.peek(lease_addr);
         assert_eq!(lease::epoch(lw), 1);
         assert_eq!(lease::phase(lw), lease::PHASE_HELD);
         h.unlock();
-        assert_eq!(d.peek(h.desc.offset(LEASE)), 0, "release claims the word");
+        assert_eq!(d.peek(lease_addr), 0, "release claims the word");
         // A second acquisition mints the next epoch.
         assert_eq!(h.poll_lock(), LockPoll::Held);
-        assert_eq!(lease::epoch(d.peek(h.desc.offset(LEASE))), 2);
+        assert_eq!(lease::epoch(d.peek(lease_addr)), 2);
         h.unlock();
     }
 
@@ -1767,5 +1880,19 @@ mod tests {
         a.unlock();
         t.join().unwrap();
         assert_eq!(l.contended_acquisitions(), 1);
+    }
+
+    /// S2 drift guard, doc half: the module-doc layout sketch above
+    /// must spell the descriptor words exactly as the registry does
+    /// (the registry's canonical names are the single source of
+    /// truth; [`contract::desc_layout`] renders them).
+    #[test]
+    fn module_doc_word_table_matches_registry() {
+        let src = include_str!("qplock.rs");
+        let rendered = format!("desc = [ {} ]", contract::desc_layout());
+        assert!(
+            src.contains(&rendered),
+            "module doc word table drifted from the registry; expected `{rendered}`"
+        );
     }
 }

@@ -26,6 +26,7 @@ fn main() {
         Some("ready") => cmd_ready(&args),
         Some("crash") => cmd_crash(&args),
         Some("sim") => cmd_sim(&args),
+        Some("lint") => cmd_lint(&args),
         Some("mc") => cmd_mc(&args),
         Some("serve") => cmd_serve(&args),
         Some("list") => cmd_list(),
@@ -502,6 +503,27 @@ fn cmd_bench(args: &Args) {
             for t in &out.tables {
                 println!("--- csv: {} ---\n{}", t.title, t.to_csv());
             }
+        }
+    }
+}
+
+fn cmd_lint(args: &Args) {
+    let default_root = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let root = std::path::PathBuf::from(args.get_or("root", default_root));
+    match qplock::analysis::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("verb-lint: cannot read {}: {e}", root.display());
+            std::process::exit(2);
+        }
+        Ok(diags) if diags.is_empty() => {
+            println!("verb-lint: clean ({})", root.display());
+        }
+        Ok(diags) => {
+            for d in &diags {
+                eprintln!("{d}");
+            }
+            eprintln!("verb-lint: {} violation(s)", diags.len());
+            std::process::exit(1);
         }
     }
 }

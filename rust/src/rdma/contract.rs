@@ -1,0 +1,1064 @@
+//! Machine-checked verb contracts: the word-ownership registry, the
+//! contract-tagged accessors, and the dynamic contract monitor.
+//!
+//! The paper's Table 1 is the reason qplock is subtle: under
+//! [`super::nic::AtomicityMode::NicSerialized`] a CPU RMW and a NIC
+//! RMW on the same word are **not** atomic with each other, so every
+//! RMW-arbitrated protocol word must be owned by exactly one atomic
+//! unit ([`super::verbs::RmwLane`]). Until this module, that ownership
+//! map lived in comments and per-call-site discipline — and it has
+//! bitten twice (the PR 3 split ring-cursor lanes, the PR 4 sweeper
+//! repair lanes). This module turns the map into data:
+//!
+//! * [`REGISTRY`] declares every protocol word — descriptor words 0–4,
+//!   `tail[LOCAL]`/`tail[REMOTE]`, the wakeup-ring cursors and slots,
+//!   the host-side lease slot table — with its owning lane, the access
+//!   kinds each protocol role may issue, whether it is remotely
+//!   reachable at all, and its NIC-silence class (which words must
+//!   cost the local class zero remote verbs).
+//! * The accessor functions below ([`desc_read`], [`rmw_cas`],
+//!   [`ring_publish`], …) are the **only** place protocol verbs are
+//!   issued from; `locks/qplock.rs` and `rdma/wakeup.rs` route every
+//!   protocol access through them. The `verb-lint` static pass
+//!   ([`crate::analysis`]) rejects raw lane calls and unregistered
+//!   word offsets anywhere else.
+//! * [`Monitor`] is the dynamic half: every *executed* verb on a
+//!   registered word is checked against the registry (mixed-lane RMW,
+//!   role violation, local-class remote verb), aborting with the
+//!   offending word, its lane history, and the schedule step. Always
+//!   on in debug builds; enabled in release via `QPLOCK_SANITIZE=1`
+//!   (abort reports go to `QPLOCK_SANITIZE_REPORT_DIR` when set).
+//!
+//! To declare a **new protocol word** when extending the protocol:
+//! add a [`Word`] variant, append its [`WordContract`] to [`REGISTRY`]
+//! (same order as the enum — tested), give its offset constant here if
+//! call sites need one, and register its instances with the monitor at
+//! allocation time ([`Monitor::register`] or a helper like
+//! [`register_desc`]). The lint and the drift tests then enforce it
+//! everywhere.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+use super::addr::Addr;
+use super::verbs::{Endpoint, RmwLane};
+
+// ---- canonical word offsets -------------------------------------------------
+//
+// The single source of truth for the descriptor and ring layouts. The
+// registry entries below carry the same values; `registry_offsets_match
+// _canonical_consts` pins them together, and `verb-lint` rejects any
+// word-offset constant elsewhere in the tree that is not one of these.
+
+/// Descriptor word 0: budget / WAITING flag (the MCS spin word).
+pub const DESC_BUDGET: u32 = 0;
+/// Descriptor word 1: successor link (`next`).
+pub const DESC_NEXT: u32 = 1;
+/// Descriptor word 2: wakeup-ring header address (0 = not armed).
+pub const DESC_WAKE_RING: u32 = 2;
+/// Descriptor word 3: packed `(ring_slots << 32) | session token`.
+pub const DESC_WAKE_TOKEN: u32 = 3;
+/// Descriptor word 4: lease word (epoch | phase | flags | deadline).
+pub const DESC_LEASE: u32 = 4;
+/// Words per MCS descriptor.
+pub const DESC_WORDS: u32 = 5;
+
+/// Wakeup-ring header words before the token slots.
+pub const RING_HDR_WORDS: u32 = 2;
+/// Ring header word 0: CPU-lane producer cursor (co-located FAA only).
+pub const RING_CPU_CURSOR: u32 = 0;
+/// Ring header word 1: NIC-lane producer cursor (rFAA only).
+pub const RING_NIC_CURSOR: u32 = 1;
+
+// ---- the registry -----------------------------------------------------------
+
+/// Every distinct protocol word the qplock stack shares between
+/// processes. Indexes [`REGISTRY`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Word {
+    /// Descriptor word 0: budget / WAITING.
+    DescBudget,
+    /// Descriptor word 1: successor link.
+    DescNext,
+    /// Descriptor word 2: wakeup-ring header address.
+    DescWakeRing,
+    /// Descriptor word 3: packed ring-slots + session token.
+    DescWakeToken,
+    /// Descriptor word 4: lease word.
+    DescLease,
+    /// The modified-Peterson victim word.
+    Victim,
+    /// Cohort tail of the local class (CPU-CAS only).
+    TailLocal,
+    /// Cohort tail of the remote class (rCAS only).
+    TailRemote,
+    /// Wakeup-ring CPU-lane producer cursor.
+    RingCpuCursor,
+    /// Wakeup-ring NIC-lane producer cursor.
+    RingNicCursor,
+    /// A CPU-lane token slot.
+    RingCpuSlot,
+    /// A NIC-lane token slot.
+    RingNicSlot,
+    /// Host-side per-session lease slot table (not an RDMA register;
+    /// registered for drift/documentation only).
+    LeaseSlotTable,
+}
+
+impl Word {
+    /// This word's registry entry.
+    pub fn contract(self) -> &'static WordContract {
+        &REGISTRY[self as usize]
+    }
+}
+
+/// A protocol participant, for per-role access gating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// A process acquiring the lock (submit → enqueue → wait →
+    /// Peterson).
+    Waiter,
+    /// A releasing holder passing the lock down its cohort queue.
+    Passer,
+    /// The current lock holder (CS-path lease renewal, release claim).
+    Holder,
+    /// The session/coordinator layer (arming, ring consumption, lease
+    /// renewal on behalf of parked acquisitions).
+    Session,
+    /// The per-node lease sweeper reading/fencing crashed slots.
+    Sweeper,
+    /// The sweeper acting *as* a dead client during repair (relay,
+    /// tail reset, proxy signal) — lane-dispatched, not
+    /// locality-dispatched.
+    RepairProxy,
+}
+
+/// How an accessor reaches a word: the local CPU path, the remote verb
+/// path, or locality-dispatched (`*_best`). Class dispatch in qplock
+/// maps Local → `Cpu`, Remote → `Verb`; only repair agents use `Best`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Via {
+    /// Local CPU op (requires co-location).
+    Cpu,
+    /// Remote verb through the target NIC (loopback when co-located).
+    Verb,
+    /// Cheapest enabled op by locality (`read_best`/`write_best`).
+    Best,
+}
+
+/// Which atomic unit — if any — owns a word's RMW traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneOwner {
+    /// RMW'd by co-located CPUs only.
+    Cpu,
+    /// RMW'd through the owning node's NIC only.
+    Nic,
+    /// Never RMW'd: plain reads/writes, so Table 1 does not apply.
+    NoRmw,
+    /// Not an RDMA register at all (host-side bookkeeping).
+    HostSide,
+}
+
+/// Access kinds gated per role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+    Rmw,
+}
+
+/// One registry entry: everything the lint, the drift tests, and the
+/// dynamic monitor need to know about a protocol word.
+pub struct WordContract {
+    pub word: Word,
+    /// Canonical short name (also the module-doc word-table name).
+    pub name: &'static str,
+    /// The offset constant's identifier, when call sites use one.
+    pub const_name: Option<&'static str>,
+    /// The offset value behind `const_name` (drift-tested).
+    pub offset: Option<u32>,
+    /// Owning RMW unit.
+    pub lane: LaneOwner,
+    /// `Some(unit)` when this word is one half of a declared
+    /// split-lane pair (the ring-cursor exception): two words of the
+    /// same unit intentionally split RMW traffic across both lanes.
+    pub split_unit: Option<&'static str>,
+    /// Whether any remote verb may ever target this word. `false`
+    /// words are CPU-only (e.g. the CPU-lane ring cursor).
+    pub remote_reachable: bool,
+    /// NIC-silence class: local-class instances of this word must cost
+    /// zero remote verbs, loopback included (the paper's headline).
+    pub local_silent: bool,
+    /// Roles allowed to read / write / RMW this word.
+    pub reads: &'static [Role],
+    pub writes: &'static [Role],
+    pub rmws: &'static [Role],
+}
+
+use LaneOwner::{Cpu, HostSide, Nic, NoRmw};
+use Role::{Holder, Passer, RepairProxy, Session, Sweeper, Waiter};
+
+/// The word-ownership registry. Order matches the [`Word`] enum
+/// (tested by `registry_is_indexed_by_word_discriminant`).
+pub const REGISTRY: &[WordContract] = &[
+    WordContract {
+        word: Word::DescBudget,
+        name: "budget",
+        const_name: Some("DESC_BUDGET"),
+        offset: Some(DESC_BUDGET),
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: false,
+        reads: &[Waiter, Passer, Session, Sweeper],
+        writes: &[Waiter, Passer, RepairProxy],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::DescNext,
+        name: "next",
+        const_name: Some("DESC_NEXT"),
+        offset: Some(DESC_NEXT),
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: false,
+        reads: &[Passer, Sweeper],
+        writes: &[Waiter],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::DescWakeRing,
+        name: "wake-ring",
+        const_name: Some("DESC_WAKE_RING"),
+        offset: Some(DESC_WAKE_RING),
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: false,
+        reads: &[Passer, RepairProxy],
+        writes: &[Waiter, Session, Sweeper],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::DescWakeToken,
+        name: "wake-token",
+        const_name: Some("DESC_WAKE_TOKEN"),
+        offset: Some(DESC_WAKE_TOKEN),
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: false,
+        reads: &[Passer, RepairProxy],
+        writes: &[Session],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::DescLease,
+        name: "lease",
+        const_name: Some("DESC_LEASE"),
+        offset: Some(DESC_LEASE),
+        lane: Cpu,
+        split_unit: None,
+        remote_reachable: false,
+        local_silent: false,
+        reads: &[Waiter, Holder, Session, Sweeper],
+        writes: &[Waiter, Sweeper],
+        rmws: &[Waiter, Holder, Session, Sweeper],
+    },
+    WordContract {
+        word: Word::Victim,
+        name: "victim",
+        const_name: None,
+        offset: None,
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: true,
+        reads: &[Waiter, RepairProxy],
+        writes: &[Waiter, RepairProxy],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::TailLocal,
+        name: "tail[LOCAL]",
+        const_name: None,
+        offset: None,
+        lane: Cpu,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: true,
+        reads: &[Waiter, RepairProxy],
+        writes: &[],
+        rmws: &[Waiter, Passer, RepairProxy],
+    },
+    WordContract {
+        word: Word::TailRemote,
+        name: "tail[REMOTE]",
+        const_name: None,
+        offset: None,
+        lane: Nic,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: false,
+        reads: &[Waiter, RepairProxy],
+        writes: &[],
+        rmws: &[Waiter, Passer, RepairProxy],
+    },
+    WordContract {
+        word: Word::RingCpuCursor,
+        name: "ring-cpu-cursor",
+        const_name: Some("RING_CPU_CURSOR"),
+        offset: Some(RING_CPU_CURSOR),
+        lane: Cpu,
+        split_unit: Some("wakeup-ring"),
+        remote_reachable: false,
+        local_silent: false,
+        reads: &[],
+        writes: &[],
+        rmws: &[Passer, RepairProxy],
+    },
+    WordContract {
+        word: Word::RingNicCursor,
+        name: "ring-nic-cursor",
+        const_name: Some("RING_NIC_CURSOR"),
+        offset: Some(RING_NIC_CURSOR),
+        lane: Nic,
+        split_unit: Some("wakeup-ring"),
+        remote_reachable: true,
+        local_silent: false,
+        reads: &[],
+        writes: &[],
+        rmws: &[Passer, RepairProxy],
+    },
+    WordContract {
+        word: Word::RingCpuSlot,
+        name: "ring-cpu-slot",
+        const_name: None,
+        offset: None,
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: false,
+        local_silent: false,
+        reads: &[Session],
+        writes: &[Passer, Session, RepairProxy],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::RingNicSlot,
+        name: "ring-nic-slot",
+        const_name: None,
+        offset: None,
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: false,
+        reads: &[Session],
+        writes: &[Passer, Session, RepairProxy],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::LeaseSlotTable,
+        name: "lease-slot-table",
+        const_name: None,
+        offset: None,
+        lane: HostSide,
+        split_unit: None,
+        remote_reachable: false,
+        local_silent: false,
+        reads: &[Sweeper],
+        writes: &[Session],
+        rmws: &[],
+    },
+];
+
+// ---- registry exports for the lint and the drift tests ----------------------
+
+/// Canonical `(const name, value)` pairs of every word-offset constant
+/// call sites may use. `verb-lint` rejects word-offset constants not
+/// in this list; the drift test pins them to the registry.
+pub fn canonical_offsets() -> &'static [(&'static str, u32)] {
+    &[
+        ("DESC_BUDGET", DESC_BUDGET),
+        ("DESC_NEXT", DESC_NEXT),
+        ("DESC_WAKE_RING", DESC_WAKE_RING),
+        ("DESC_WAKE_TOKEN", DESC_WAKE_TOKEN),
+        ("DESC_LEASE", DESC_LEASE),
+        ("DESC_WORDS", DESC_WORDS),
+        ("RING_HDR_WORDS", RING_HDR_WORDS),
+        ("RING_CPU_CURSOR", RING_CPU_CURSOR),
+        ("RING_NIC_CURSOR", RING_NIC_CURSOR),
+    ]
+}
+
+/// Lane/silence facts the static pass needs about each named word
+/// constant.
+pub struct WordFact {
+    pub const_name: &'static str,
+    /// `Some` when the word is RMW-arbitrated by exactly one lane.
+    pub lane: Option<RmwLane>,
+    /// Declared split-lane pair member (the ring-cursor exception).
+    pub split: bool,
+    /// Remote verbs on this word are a contract violation for the
+    /// local class (either NIC-silent or not remotely reachable).
+    pub nic_silent: bool,
+}
+
+/// Facts for every registry entry that has a named offset constant.
+pub fn lint_word_facts() -> Vec<WordFact> {
+    REGISTRY
+        .iter()
+        .filter_map(|c| {
+            c.const_name.map(|name| WordFact {
+                const_name: name,
+                lane: match c.lane {
+                    Cpu => Some(RmwLane::Cpu),
+                    Nic => Some(RmwLane::Nic),
+                    NoRmw | HostSide => None,
+                },
+                split: c.split_unit.is_some(),
+                nic_silent: c.local_silent || !c.remote_reachable,
+            })
+        })
+        .collect()
+}
+
+/// Canonical descriptor word table, in offset order — the module-doc
+/// word table in `qplock.rs` is drift-tested against this.
+pub fn desc_layout() -> String {
+    let mut names = vec![""; DESC_WORDS as usize];
+    for c in REGISTRY {
+        if let (Some(cn), Some(off)) = (c.const_name, c.offset) {
+            if cn.starts_with("DESC_") && cn != "DESC_WORDS" {
+                names[off as usize] = c.name;
+            }
+        }
+    }
+    names.join(" | ")
+}
+
+// ---- contract-tagged accessors ----------------------------------------------
+//
+// The only module from which protocol verbs are issued (enforced by
+// `verb-lint`). Every accessor names the word and the role, gates the
+// access against the registry through the domain's monitor, and then
+// issues the op the contract prescribes.
+
+/// Address of descriptor word `w` of the descriptor at `desc`.
+pub fn desc_addr(desc: Addr, w: Word) -> Addr {
+    match w {
+        Word::DescBudget => desc,
+        Word::DescNext => desc.offset(DESC_NEXT),
+        Word::DescWakeRing => desc.offset(DESC_WAKE_RING),
+        Word::DescWakeToken => desc.offset(DESC_WAKE_TOKEN),
+        Word::DescLease => desc.offset(DESC_LEASE),
+        other => panic!("{other:?} is not a descriptor word"),
+    }
+}
+
+fn gate(ep: &Endpoint, w: Word, role: Role, kind: AccessKind) {
+    let monitor = ep.domain().contract_monitor();
+    if !monitor.enabled() {
+        return;
+    }
+    let c = w.contract();
+    let allowed = match kind {
+        AccessKind::Read => c.reads,
+        AccessKind::Write => c.writes,
+        AccessKind::Rmw => c.rmws,
+    };
+    if !allowed.contains(&role) {
+        monitor.abort(&format!(
+            "role violation: {role:?} may not {kind:?} word `{}` \
+             (allowed: {allowed:?})",
+            c.name
+        ));
+    }
+}
+
+/// Contract-tagged read via the given path.
+pub fn read_via(ep: &Endpoint, role: Role, w: Word, a: Addr, via: Via) -> u64 {
+    gate(ep, w, role, AccessKind::Read);
+    match via {
+        Via::Cpu => ep.read(a),
+        Via::Verb => ep.r_read(a),
+        Via::Best => ep.read_best(a),
+    }
+}
+
+/// Contract-tagged write via the given path.
+pub fn write_via(ep: &Endpoint, role: Role, w: Word, a: Addr, v: u64, via: Via) {
+    gate(ep, w, role, AccessKind::Write);
+    match via {
+        Via::Cpu => ep.write(a, v),
+        Via::Verb => ep.r_write(a, v),
+        Via::Best => ep.write_best(a, v),
+    }
+}
+
+/// Local Acquire read of a descriptor word (co-located callers only).
+pub fn desc_read(ep: &Endpoint, role: Role, desc: Addr, w: Word) -> u64 {
+    gate(ep, w, role, AccessKind::Read);
+    ep.read_desc(desc_addr(desc, w))
+}
+
+/// Local Release write of a descriptor word (co-located callers only).
+pub fn desc_write(ep: &Endpoint, role: Role, desc: Addr, w: Word, v: u64) {
+    gate(ep, w, role, AccessKind::Write);
+    ep.write_desc(desc_addr(desc, w), v);
+}
+
+/// Local SeqCst read of a descriptor word (protocol registers keep
+/// the paper's SC assumption).
+pub fn desc_read_sc(ep: &Endpoint, role: Role, desc: Addr, w: Word) -> u64 {
+    gate(ep, w, role, AccessKind::Read);
+    ep.read(desc_addr(desc, w))
+}
+
+/// Local SeqCst write of a descriptor word.
+pub fn desc_write_sc(ep: &Endpoint, role: Role, desc: Addr, w: Word, v: u64) {
+    gate(ep, w, role, AccessKind::Write);
+    ep.write(desc_addr(desc, w), v);
+}
+
+/// CAS a descriptor word through its owning lane.
+pub fn desc_cas(ep: &Endpoint, role: Role, desc: Addr, w: Word, expected: u64, swap: u64) -> u64 {
+    rmw_cas(ep, role, w, desc_addr(desc, w), expected, swap)
+}
+
+/// Compare-and-swap through the word's registry-owned RMW lane.
+pub fn rmw_cas(ep: &Endpoint, role: Role, w: Word, a: Addr, expected: u64, swap: u64) -> u64 {
+    gate(ep, w, role, AccessKind::Rmw);
+    match w.contract().lane {
+        Cpu => ep.cas(a, expected, swap),
+        Nic => ep.r_cas(a, expected, swap),
+        NoRmw | HostSide => panic!(
+            "word `{}` is not RMW-arbitrated; the contract forbids RMWs on it",
+            w.contract().name
+        ),
+    }
+}
+
+/// Fetch-and-add through the word's registry-owned RMW lane.
+pub fn rmw_faa(ep: &Endpoint, role: Role, w: Word, a: Addr, add: u64) -> u64 {
+    gate(ep, w, role, AccessKind::Rmw);
+    match w.contract().lane {
+        Cpu => ep.faa(a, add),
+        Nic => ep.r_faa(a, add),
+        NoRmw | HostSide => panic!(
+            "word `{}` is not RMW-arbitrated; the contract forbids RMWs on it",
+            w.contract().name
+        ),
+    }
+}
+
+/// Address of the slot of claim number `claim` in the given lane of
+/// the ring at `hdr` (`lane_slots` physical slots per lane).
+pub fn ring_slot_addr(hdr: Addr, lane: RmwLane, lane_slots: u64, claim: u64) -> Addr {
+    let lane_base = match lane {
+        RmwLane::Cpu => 0,
+        RmwLane::Nic => lane_slots as u32,
+    };
+    hdr.offset(RING_HDR_WORDS + lane_base + (claim % lane_slots) as u32)
+}
+
+/// Consumer-side local read of a ring slot.
+pub fn ring_slot_read(
+    ep: &Endpoint,
+    role: Role,
+    hdr: Addr,
+    lane: RmwLane,
+    lane_slots: u64,
+    claim: u64,
+) -> u64 {
+    let w = match lane {
+        RmwLane::Cpu => Word::RingCpuSlot,
+        RmwLane::Nic => Word::RingNicSlot,
+    };
+    gate(ep, w, role, AccessKind::Read);
+    ep.read(ring_slot_addr(hdr, lane, lane_slots, claim))
+}
+
+/// Consumer-side local clear of a ring slot.
+pub fn ring_slot_clear(
+    ep: &Endpoint,
+    role: Role,
+    hdr: Addr,
+    lane: RmwLane,
+    lane_slots: u64,
+    claim: u64,
+) {
+    let w = match lane {
+        RmwLane::Cpu => Word::RingCpuSlot,
+        RmwLane::Nic => Word::RingNicSlot,
+    };
+    gate(ep, w, role, AccessKind::Write);
+    ep.write(ring_slot_addr(hdr, lane, lane_slots, claim), 0);
+}
+
+/// Publish `token` into the ring at `hdr`: claim a slot through the
+/// lane the access path owns, fill it with `token + 1`. `Via::Cpu`
+/// (co-located passer) claims through the CPU-lane cursor with a local
+/// FAA; `Via::Verb` claims through the NIC-lane cursor with an rFAA —
+/// the split-lane contract declared on the ring cursors.
+pub fn ring_publish(ep: &Endpoint, role: Role, hdr: Addr, lane_slots: u64, token: u64, via: Via) {
+    match via {
+        Via::Cpu => {
+            gate(ep, Word::RingCpuCursor, role, AccessKind::Rmw);
+            gate(ep, Word::RingCpuSlot, role, AccessKind::Write);
+            #[cfg(debug_assertions)]
+            if test_knobs::MISLANE_RING_CURSOR.load(Relaxed) {
+                // Seeded PR 3 hazard: claim the CPU-owned cursor
+                // through the NIC lane — the exact mixed-lane RMW the
+                // sanitizer must rediscover.
+                let claimed = ep.r_faa(hdr.offset(RING_CPU_CURSOR), 1);
+                ep.write(
+                    ring_slot_addr(hdr, RmwLane::Cpu, lane_slots, claimed),
+                    token + 1,
+                );
+                return;
+            }
+            let claimed = ep.faa(hdr.offset(RING_CPU_CURSOR), 1);
+            ep.write(
+                ring_slot_addr(hdr, RmwLane::Cpu, lane_slots, claimed),
+                token + 1,
+            );
+        }
+        Via::Verb => {
+            gate(ep, Word::RingNicCursor, role, AccessKind::Rmw);
+            gate(ep, Word::RingNicSlot, role, AccessKind::Write);
+            let claimed = ep.r_faa(hdr.offset(RING_NIC_CURSOR), 1);
+            ep.r_write(
+                ring_slot_addr(hdr, RmwLane::Nic, lane_slots, claimed),
+                token + 1,
+            );
+        }
+        Via::Best => unreachable!("ring publication is lane-dispatched, never locality-dispatched"),
+    }
+}
+
+/// Seeded-violation knobs for the contract sanitizer's own mutation
+/// teeth (mirrors `crate::locks::test_knobs`). Debug builds only.
+#[cfg(debug_assertions)]
+pub mod test_knobs {
+    use std::sync::atomic::AtomicBool;
+
+    /// Re-introduce the PR 3 hazard: a co-located passer claims the
+    /// CPU-owned ring cursor through the NIC lane (rFAA), racing the
+    /// CPU-lane FAA non-atomically under `NicSerialized`.
+    pub static MISLANE_RING_CURSOR: AtomicBool = AtomicBool::new(false);
+}
+
+// ---- dynamic contract monitor -----------------------------------------------
+
+/// Per-instance registration of a protocol word with the monitor.
+struct Registration {
+    word: Word,
+    /// This *instance* belongs to the local class, so any remote verb
+    /// on it (loopback included) violates NIC silence.
+    local_silent: bool,
+    /// Recent RMW lane history: `(lane label, schedule step)`.
+    history: Vec<(&'static str, u64)>,
+}
+
+const HISTORY_CAP: usize = 8;
+
+/// The dynamic half of the verb contracts: checks every executed verb
+/// on a registered word against [`REGISTRY`]. One per
+/// [`super::RdmaDomain`]; hooked from [`Endpoint::cas`]/[`Endpoint::faa`]
+/// (CPU RMWs) and [`super::nic::Nic::admit`] (every remote verb).
+pub struct Monitor {
+    enabled: bool,
+    report_dir: Option<PathBuf>,
+    /// Current schedule step (set by the sim explorer; 0 elsewhere).
+    step: AtomicU64,
+    violations: AtomicU64,
+    words: Mutex<HashMap<u64, Registration>>,
+}
+
+impl Monitor {
+    /// Environment-driven construction: always on in debug builds,
+    /// opt-in via `QPLOCK_SANITIZE=1` in release; abort reports are
+    /// written to `QPLOCK_SANITIZE_REPORT_DIR` when set.
+    pub fn from_env() -> Monitor {
+        Monitor {
+            enabled: cfg!(debug_assertions) || std::env::var_os("QPLOCK_SANITIZE").is_some(),
+            report_dir: std::env::var_os("QPLOCK_SANITIZE_REPORT_DIR").map(PathBuf::from),
+            step: AtomicU64::new(0),
+            violations: AtomicU64::new(0),
+            words: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A monitor that checks nothing (unit-test scaffolding).
+    pub fn disabled() -> Monitor {
+        Monitor {
+            enabled: false,
+            report_dir: None,
+            step: AtomicU64::new(0),
+            violations: AtomicU64::new(0),
+            words: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Advance the schedule-step tag attached to violations (called by
+    /// the sim explorer per applied step).
+    pub fn set_step(&self, step: u64) {
+        self.step.store(step, Relaxed);
+    }
+
+    /// Register one word instance. `local_silent` marks instances the
+    /// local class must keep off the NIC entirely. Re-registering an
+    /// address overwrites (domains are wiped and reused by benches).
+    pub fn register(&self, a: Addr, w: Word, local_silent: bool) {
+        if !self.enabled {
+            return;
+        }
+        self.words.lock().unwrap().insert(
+            a.to_bits(),
+            Registration {
+                word: w,
+                local_silent,
+                history: Vec::new(),
+            },
+        );
+    }
+
+    fn push_history(reg: &mut Registration, label: &'static str, step: u64) {
+        if reg.history.len() == HISTORY_CAP {
+            reg.history.remove(0);
+        }
+        reg.history.push((label, step));
+    }
+
+    fn render(&self, reg: &Registration, a: Addr, msg: &str) -> String {
+        let c = reg.word.contract();
+        format!(
+            "{msg}\n  word: `{}` at {:?} (owning lane: {:?}, split: {:?}, \
+             local-silent instance: {})\n  schedule step: {}\n  lane history: {:?}",
+            c.name,
+            a,
+            c.lane,
+            c.split_unit,
+            reg.local_silent,
+            self.step.load(Relaxed),
+            reg.history,
+        )
+    }
+
+    /// Hook: a CPU RMW (local CAS/FAA) executed on `a`.
+    pub fn on_cpu_rmw(&self, a: Addr) {
+        if !self.enabled {
+            return;
+        }
+        let mut map = self.words.lock().unwrap();
+        let Some(reg) = map.get_mut(&a.to_bits()) else {
+            return;
+        };
+        let step = self.step.load(Relaxed);
+        Self::push_history(reg, "CPU RMW", step);
+        if reg.word.contract().lane != Cpu {
+            let report = self.render(reg, a, "CPU RMW on a word not owned by the CPU lane");
+            drop(map);
+            self.abort(&report);
+        }
+    }
+
+    /// Hook: a remote verb admitted at a NIC targeting `a`. `rmw` for
+    /// rCAS/rFAA; `loopback` when the issuer is co-located.
+    pub fn on_nic_op(&self, a: Addr, rmw: bool, loopback: bool) {
+        if !self.enabled {
+            return;
+        }
+        let mut map = self.words.lock().unwrap();
+        let Some(reg) = map.get_mut(&a.to_bits()) else {
+            return;
+        };
+        let step = self.step.load(Relaxed);
+        let c = reg.word.contract();
+        if rmw {
+            Self::push_history(reg, "NIC RMW", step);
+            if c.lane != Nic {
+                let report = self.render(reg, a, "NIC RMW on a word not owned by the NIC lane");
+                drop(map);
+                self.abort(&report);
+            }
+        }
+        if !c.remote_reachable {
+            let report = self.render(reg, a, "remote verb on a CPU-only word");
+            drop(map);
+            self.abort(&report);
+        }
+        if reg.local_silent && loopback {
+            let report = self.render(
+                reg,
+                a,
+                "loopback remote verb on a NIC-silent word (local class must stay off the NIC)",
+            );
+            drop(map);
+            self.abort(&report);
+        }
+    }
+
+    /// Record a violation report (to `QPLOCK_SANITIZE_REPORT_DIR` when
+    /// configured) and abort the run.
+    pub fn abort(&self, report: &str) -> ! {
+        let n = self.violations.fetch_add(1, Relaxed);
+        if let Some(dir) = &self.report_dir {
+            std::fs::create_dir_all(dir).ok();
+            std::fs::write(dir.join(format!("contract-violation-{n}.txt")), report).ok();
+        }
+        panic!("verb-contract sanitizer: {report}");
+    }
+}
+
+// ---- registration helpers ---------------------------------------------------
+
+use super::RdmaDomain;
+
+/// Register a lock's shared words (victim + both cohort tails) with
+/// the domain monitor. The victim and `tail[LOCAL]` are NIC-silent for
+/// the local class; `tail[REMOTE]` legitimately sees loopback rCAS
+/// (the home sweeper's repair proxy), so it is registered lenient.
+pub fn register_lock_words(domain: &RdmaDomain, victim: Addr, tail_local: Addr, tail_remote: Addr) {
+    let m = domain.contract_monitor();
+    m.register(victim, Word::Victim, true);
+    m.register(tail_local, Word::TailLocal, true);
+    m.register(tail_remote, Word::TailRemote, false);
+}
+
+/// Register one descriptor's five words. `local_class` descriptors are
+/// NIC-silent: every access to them must be a local op.
+pub fn register_desc(domain: &RdmaDomain, desc: Addr, local_class: bool) {
+    let m = domain.contract_monitor();
+    for w in [
+        Word::DescBudget,
+        Word::DescNext,
+        Word::DescWakeRing,
+        Word::DescWakeToken,
+        Word::DescLease,
+    ] {
+        m.register(desc_addr(desc, w), w, local_class);
+    }
+}
+
+/// Register a wakeup ring's header cursors and every slot word. The
+/// CPU lane is CPU-only (`remote_reachable: false` does the policing);
+/// the NIC lane legitimately sees loopback from co-located
+/// remote-class passers, so its instances are lenient.
+pub fn register_ring(domain: &RdmaDomain, hdr: Addr, lane_slots: u64) {
+    let m = domain.contract_monitor();
+    m.register(hdr.offset(RING_CPU_CURSOR), Word::RingCpuCursor, false);
+    m.register(hdr.offset(RING_NIC_CURSOR), Word::RingNicCursor, false);
+    for claim in 0..lane_slots {
+        m.register(
+            ring_slot_addr(hdr, RmwLane::Cpu, lane_slots, claim),
+            Word::RingCpuSlot,
+            false,
+        );
+        m.register(
+            ring_slot_addr(hdr, RmwLane::Nic, lane_slots, claim),
+            Word::RingNicSlot,
+            false,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::{DomainConfig, RdmaDomain};
+
+    #[test]
+    fn registry_is_indexed_by_word_discriminant() {
+        for (i, c) in REGISTRY.iter().enumerate() {
+            assert_eq!(
+                c.word as usize, i,
+                "REGISTRY[{i}] is {:?} — registry order must match the Word enum",
+                c.word
+            );
+        }
+        assert_eq!(Word::LeaseSlotTable as usize + 1, REGISTRY.len());
+    }
+
+    /// S2 drift test: the registry's offsets and the canonical offset
+    /// constants are the same values.
+    #[test]
+    fn registry_offsets_match_canonical_consts() {
+        let canon = canonical_offsets();
+        for c in REGISTRY {
+            if let (Some(name), Some(off)) = (c.const_name, c.offset) {
+                let (_, v) = canon
+                    .iter()
+                    .find(|(n, _)| *n == name)
+                    .unwrap_or_else(|| panic!("{name} missing from canonical_offsets()"));
+                assert_eq!(*v, off, "offset drift on {name}");
+            }
+        }
+        // Layout invariants the protocol relies on.
+        assert_eq!(DESC_WORDS, 5);
+        assert_eq!(RING_HDR_WORDS, 2);
+        assert_ne!(RING_CPU_CURSOR, RING_NIC_CURSOR);
+    }
+
+    #[test]
+    fn desc_layout_renders_the_word_table() {
+        assert_eq!(desc_layout(), "budget | next | wake-ring | wake-token | lease");
+    }
+
+    #[test]
+    fn desc_addr_covers_all_descriptor_words() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        assert_eq!(desc_addr(desc, Word::DescBudget), desc);
+        assert_eq!(desc_addr(desc, Word::DescNext), desc.offset(DESC_NEXT));
+        assert_eq!(desc_addr(desc, Word::DescLease), desc.offset(DESC_LEASE));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a descriptor word")]
+    fn desc_addr_rejects_non_descriptor_words() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        desc_addr(desc, Word::Victim);
+    }
+
+    #[test]
+    fn ring_slot_addr_matches_documented_layout() {
+        let d = RdmaDomain::new(1, 1024, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let hdr = ep.alloc(RING_HDR_WORDS + 2 * 12);
+        // hdr + 2 + (i % slots) for the CPU lane,
+        // hdr + 2 + slots + (i % slots) for the NIC lane.
+        assert_eq!(
+            ring_slot_addr(hdr, RmwLane::Cpu, 12, 25),
+            hdr.offset(RING_HDR_WORDS + 25 % 12)
+        );
+        assert_eq!(
+            ring_slot_addr(hdr, RmwLane::Nic, 12, 25),
+            hdr.offset(RING_HDR_WORDS + 12 + 25 % 12)
+        );
+    }
+
+    #[test]
+    fn lint_word_facts_cover_every_named_const() {
+        let facts = lint_word_facts();
+        let named = REGISTRY.iter().filter(|c| c.const_name.is_some()).count();
+        assert_eq!(facts.len(), named);
+        let cursor = facts
+            .iter()
+            .find(|f| f.const_name == "RING_CPU_CURSOR")
+            .unwrap();
+        assert_eq!(cursor.lane, Some(RmwLane::Cpu));
+        assert!(cursor.split, "the ring-cursor split must be declared");
+        assert!(cursor.nic_silent, "the CPU cursor is not remotely reachable");
+        let lease = facts.iter().find(|f| f.const_name == "DESC_LEASE").unwrap();
+        assert_eq!(lease.lane, Some(RmwLane::Cpu));
+        assert!(!lease.split);
+    }
+
+    #[test]
+    fn monitor_role_gate_aborts_on_disallowed_access() {
+        // Sweeper may read `next` but never write it.
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        assert_eq!(desc_read_sc(&ep, Role::Sweeper, desc, Word::DescNext), 0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            desc_write_sc(&ep, Role::Sweeper, desc, Word::DescNext, 1);
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("role violation"), "{msg}");
+        assert!(msg.contains("next"), "{msg}");
+    }
+
+    #[test]
+    fn monitor_catches_mixed_lane_rmw() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let a = ep.alloc(1);
+        d.contract_monitor().register(a, Word::TailLocal, false);
+        // The legal lane first (builds history)...
+        assert_eq!(ep.cas(a, 0, 7), 0);
+        // ...then the illegal one: an rCAS on the CPU-owned tail.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ep.r_cas(a, 7, 9);
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("NIC RMW on a word not owned by the NIC lane"), "{msg}");
+        assert!(msg.contains("tail[LOCAL]"), "{msg}");
+        assert!(msg.contains("CPU RMW"), "history must show the CPU lane: {msg}");
+    }
+
+    #[test]
+    fn monitor_catches_loopback_on_nic_silent_instance() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let a = ep.alloc(1);
+        d.contract_monitor().register(a, Word::Victim, true);
+        // A genuinely remote write is fine for the victim word...
+        d.endpoint(1).r_write(a, 1);
+        // ...but a loopback verb on a local-silent instance aborts.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ep.r_write(a, 2);
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("NIC-silent"), "{msg}");
+    }
+
+    #[test]
+    fn monitor_catches_remote_verb_on_cpu_only_word() {
+        let d = RdmaDomain::new(2, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let a = ep.alloc(1);
+        d.contract_monitor().register(a, Word::RingCpuCursor, false);
+        let remote = d.endpoint(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            remote.r_faa(a, 1);
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("NIC RMW on a word not owned by the NIC lane"), "{msg}");
+    }
+
+    #[test]
+    fn unregistered_words_are_ignored() {
+        // Bench scratch words never registered with the monitor are
+        // outside the contract: anything goes.
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let a = ep.alloc(1);
+        ep.cas(a, 0, 1);
+        ep.r_cas(a, 1, 2);
+        ep.r_faa(a, 3);
+        assert_eq!(ep.read(a), 5);
+    }
+
+    #[test]
+    fn ring_publish_dispatches_by_lane_not_locality() {
+        let d = RdmaDomain::new(2, 1 << 12, DomainConfig::counted());
+        let ep0 = d.endpoint(0);
+        let hdr = ep0.alloc(RING_HDR_WORDS + 2 * 10);
+        register_ring(&d, hdr, 10);
+        // Co-located CPU-lane publish: zero remote verbs.
+        ring_publish(&ep0, Role::Passer, hdr, 10, 41, Via::Cpu);
+        assert_eq!(ep0.metrics.snapshot().remote_total(), 0);
+        assert_eq!(d.peek(hdr.offset(RING_CPU_CURSOR)), 1);
+        assert_eq!(d.peek(ring_slot_addr(hdr, RmwLane::Cpu, 10, 0)), 42);
+        // Remote NIC-lane publish: exactly rFAA + rWrite.
+        let ep1 = d.endpoint(1);
+        ring_publish(&ep1, Role::Passer, hdr, 10, 6, Via::Verb);
+        let s = ep1.metrics.snapshot();
+        assert_eq!(s.remote_faa, 1);
+        assert_eq!(s.remote_write, 1);
+        assert_eq!(d.peek(hdr.offset(RING_NIC_CURSOR)), 1);
+        assert_eq!(d.peek(ring_slot_addr(hdr, RmwLane::Nic, 10, 0)), 7);
+    }
+}

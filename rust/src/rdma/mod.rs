@@ -15,6 +15,7 @@
 //!   traffic both pays NIC latency and contributes to NIC queueing.
 
 pub mod addr;
+pub mod contract;
 pub mod latency;
 pub mod memory;
 pub mod metrics;
@@ -114,6 +115,10 @@ pub struct RdmaDomain {
     /// sweeper thread) — a logical clock keeps lease expiry schedulable
     /// instead of wall-clock-flaky.
     lease_clock: std::sync::atomic::AtomicU64,
+    /// Dynamic verb-contract sanitizer (see [`contract::Monitor`]):
+    /// checks every executed verb on a registered protocol word
+    /// against the ownership registry.
+    monitor: contract::Monitor,
 }
 
 impl RdmaDomain {
@@ -129,7 +134,14 @@ impl RdmaDomain {
             nodes,
             cfg,
             lease_clock: std::sync::atomic::AtomicU64::new(0),
+            monitor: contract::Monitor::from_env(),
         })
+    }
+
+    /// The domain's verb-contract monitor (always present; a no-op
+    /// unless enabled — debug builds, or `QPLOCK_SANITIZE=1`).
+    pub fn contract_monitor(&self) -> &contract::Monitor {
+        &self.monitor
     }
 
     /// Current lease-clock reading (ticks).

@@ -20,6 +20,8 @@
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 use std::sync::Mutex;
 
+use super::addr::Addr;
+use super::contract::Monitor;
 use super::latency::{LatencyModel, TimeMode};
 use super::metrics::{NicMetrics, OpKind, ProcMetrics};
 use crate::util::spin::spin_wait_ns;
@@ -52,17 +54,28 @@ impl Nic {
         }
     }
 
-    /// Account one verb arriving at this NIC: bump in-flight, compute and
-    /// (in [`TimeMode::Timed`]) apply the modeled delay, record metrics.
+    /// Account one verb arriving at this NIC: check it against the
+    /// verb-contract monitor, bump in-flight, compute and (in
+    /// [`TimeMode::Timed`]) apply the modeled delay, record metrics.
     /// Returns a guard that decrements in-flight on drop.
+    #[allow(clippy::too_many_arguments)]
     pub fn admit<'a>(
         &'a self,
         kind: OpKind,
+        target: Addr,
         loopback: bool,
+        monitor: &Monitor,
         model: &LatencyModel,
         time_mode: TimeMode,
         proc: &ProcMetrics,
     ) -> InflightGuard<'a> {
+        // Contract check first: a violating verb must abort before it
+        // is accounted as executed.
+        monitor.on_nic_op(
+            target,
+            matches!(kind, OpKind::RemoteCas | OpKind::RemoteFaa),
+            loopback,
+        );
         let depth = self.inflight.fetch_add(1, SeqCst) + 1;
         self.metrics.observe_inflight(depth);
         self.metrics.ops.fetch_add(1, SeqCst);
@@ -176,12 +189,29 @@ mod tests {
         let nic = Nic::new();
         let m = ProcMetrics::default();
         let model = LatencyModel::zero();
+        let mon = Monitor::disabled();
+        let a = Addr::new(0, 0);
         {
-            let _g1 = nic.admit(OpKind::RemoteRead, false, &model, TimeMode::Counted, &m);
+            let _g1 = nic.admit(
+                OpKind::RemoteRead,
+                a,
+                false,
+                &mon,
+                &model,
+                TimeMode::Counted,
+                &m,
+            );
             assert_eq!(nic.inflight(), 1);
             {
-                let _g2 =
-                    nic.admit(OpKind::RemoteWrite, false, &model, TimeMode::Counted, &m);
+                let _g2 = nic.admit(
+                    OpKind::RemoteWrite,
+                    a,
+                    false,
+                    &mon,
+                    &model,
+                    TimeMode::Counted,
+                    &m,
+                );
                 assert_eq!(nic.inflight(), 2);
             }
             assert_eq!(nic.inflight(), 1);
@@ -196,7 +226,15 @@ mod tests {
         let nic = Nic::new();
         let m = ProcMetrics::default();
         let model = LatencyModel::zero();
-        let _g = nic.admit(OpKind::RemoteCas, true, &model, TimeMode::Counted, &m);
+        let _g = nic.admit(
+            OpKind::RemoteCas,
+            Addr::new(0, 0),
+            true,
+            &Monitor::disabled(),
+            &model,
+            TimeMode::Counted,
+            &m,
+        );
         assert_eq!(nic.metrics.loopback_ops.load(SeqCst), 1);
         assert_eq!(m.snapshot().loopback, 1);
     }
@@ -207,7 +245,15 @@ mod tests {
         let m = ProcMetrics::default();
         let model = LatencyModel::calibrated();
         let t0 = std::time::Instant::now();
-        let _g = nic.admit(OpKind::RemoteCas, false, &model, TimeMode::Counted, &m);
+        let _g = nic.admit(
+            OpKind::RemoteCas,
+            Addr::new(0, 0),
+            false,
+            &Monitor::disabled(),
+            &model,
+            TimeMode::Counted,
+            &m,
+        );
         drop(_g);
         assert!(t0.elapsed().as_micros() < 1_000);
         assert_eq!(m.snapshot().net_ns, model.remote_cas_ns);

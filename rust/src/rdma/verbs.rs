@@ -119,6 +119,7 @@ impl Endpoint {
     pub fn cas(&self, a: Addr, expected: u64, swap: u64) -> u64 {
         self.assert_local(a, "CAS");
         self.metrics.record(OpKind::LocalCas);
+        self.domain.contract_monitor().on_cpu_rmw(a);
         match self
             .domain
             .node(self.node)
@@ -139,6 +140,7 @@ impl Endpoint {
     pub fn faa(&self, a: Addr, add: u64) -> u64 {
         self.assert_local(a, "FAA");
         self.metrics.record(OpKind::LocalFaa);
+        self.domain.contract_monitor().on_cpu_rmw(a);
         self.domain.node(self.node).mem.word(a).fetch_add(add, SeqCst)
     }
 
@@ -173,7 +175,9 @@ impl Endpoint {
         self.metrics.record(OpKind::RemoteRead);
         let _g = tgt.nic.admit(
             OpKind::RemoteRead,
+            a,
             loopback,
+            self.domain.contract_monitor(),
             &self.domain.cfg.latency,
             self.domain.cfg.time_mode,
             &self.metrics,
@@ -188,7 +192,9 @@ impl Endpoint {
         self.metrics.record(OpKind::RemoteWrite);
         let _g = tgt.nic.admit(
             OpKind::RemoteWrite,
+            a,
             loopback,
+            self.domain.contract_monitor(),
             &self.domain.cfg.latency,
             self.domain.cfg.time_mode,
             &self.metrics,
@@ -205,7 +211,9 @@ impl Endpoint {
         self.metrics.record(OpKind::RemoteCas);
         let _g = tgt.nic.admit(
             OpKind::RemoteCas,
+            a,
             loopback,
+            self.domain.contract_monitor(),
             &self.domain.cfg.latency,
             self.domain.cfg.time_mode,
             &self.metrics,
@@ -228,7 +236,9 @@ impl Endpoint {
         self.metrics.record(OpKind::RemoteFaa);
         let _g = tgt.nic.admit(
             OpKind::RemoteFaa,
+            a,
             loopback,
+            self.domain.contract_monitor(),
             &self.domain.cfg.latency,
             self.domain.cfg.time_mode,
             &self.metrics,
@@ -275,15 +285,31 @@ impl Endpoint {
     // Unlike the `*_best` helpers, these do NOT pick by locality: the
     // caller names the atomic unit that owns the word (see [`RmwLane`]).
     // `RmwLane::Cpu` requires co-location (a CPU can only RMW its own
-    // node's memory — enforced by the local op's enabled-operation
-    // check); `RmwLane::Nic` goes through the target NIC from anywhere,
+    // node's memory — asserted explicitly, since a lane caller naming
+    // the wrong node is a contract bug, not a generic enabled-operation
+    // slip); `RmwLane::Nic` goes through the target NIC from anywhere,
     // loopback included.
+
+    #[inline]
+    fn assert_cpu_lane_co_located(&self, a: Addr) {
+        assert!(
+            self.is_local(a),
+            "CPU lane requires co-location: word {a:?} is on node {} but the \
+             caller runs on node {} (a CPU can only RMW its own node's \
+             memory; use RmwLane::Nic)",
+            a.node(),
+            self.node
+        );
+    }
 
     /// Compare-and-swap through the word's owning RMW unit.
     #[inline]
     pub fn cas_lane(&self, a: Addr, expected: u64, swap: u64, lane: RmwLane) -> u64 {
         match lane {
-            RmwLane::Cpu => self.cas(a, expected, swap),
+            RmwLane::Cpu => {
+                self.assert_cpu_lane_co_located(a);
+                self.cas(a, expected, swap)
+            }
             RmwLane::Nic => self.r_cas(a, expected, swap),
         }
     }
@@ -292,7 +318,10 @@ impl Endpoint {
     #[inline]
     pub fn faa_lane(&self, a: Addr, add: u64, lane: RmwLane) -> u64 {
         match lane {
-            RmwLane::Cpu => self.faa(a, add),
+            RmwLane::Cpu => {
+                self.assert_cpu_lane_co_located(a);
+                self.faa(a, add)
+            }
             RmwLane::Nic => self.r_faa(a, add),
         }
     }
@@ -438,13 +467,29 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "not an enabled operation")]
+    #[should_panic(expected = "CPU lane requires co-location")]
     fn cpu_lane_requires_co_location() {
         let d = domain2();
         let ep0 = d.endpoint(0);
         let ep1 = d.endpoint(1);
         let a = ep1.alloc(1);
         ep0.cas_lane(a, 0, 1, RmwLane::Cpu);
+    }
+
+    #[test]
+    fn cpu_lane_assert_names_the_word_and_nodes() {
+        let d = domain2();
+        let ep0 = d.endpoint(0);
+        let ep1 = d.endpoint(1);
+        let a = ep1.alloc(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ep0.faa_lane(a, 1, RmwLane::Cpu);
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("CPU lane requires co-location"), "{msg}");
+        assert!(msg.contains(&format!("{a:?}")), "must name the word: {msg}");
+        assert!(msg.contains("on node 1"), "must name the word's node: {msg}");
+        assert!(msg.contains("runs on node 0"), "must name the caller's node: {msg}");
     }
 
     #[test]

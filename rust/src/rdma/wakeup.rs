@@ -56,14 +56,16 @@
 //! re-reading a re-armed registration).
 
 use super::addr::Addr;
-use super::verbs::Endpoint;
+use super::contract::{self, Role};
+use super::verbs::{Endpoint, RmwLane};
 
-/// Header words before the token slots.
-pub const HDR_WORDS: u32 = 2;
-/// Offset of the CPU-lane producer cursor (co-located passers only).
-pub const CPU_CURSOR_WORD: u32 = 0;
-/// Offset of the NIC-lane producer cursor (rFAA passers only).
-pub const NIC_CURSOR_WORD: u32 = 1;
+// The layout constants live in the word-ownership registry
+// ([`contract::REGISTRY`]); these aliases keep the ring's historical
+// names for existing call sites.
+pub use super::contract::{
+    RING_CPU_CURSOR as CPU_CURSOR_WORD, RING_HDR_WORDS as HDR_WORDS,
+    RING_NIC_CURSOR as NIC_CURSOR_WORD,
+};
 
 /// Extra slots per lane beyond the consumer's arming bound (see the
 /// module docs on overwrite safety).
@@ -93,6 +95,7 @@ impl WakeupRing {
             .checked_add(LANE_SLACK)
             .expect("ring capacity overflow");
         let hdr = ep.alloc(HDR_WORDS + 2 * lane);
+        contract::register_ring(ep.domain(), hdr, lane as u64);
         WakeupRing {
             ep,
             hdr,
@@ -124,21 +127,28 @@ impl WakeupRing {
         self.consumed[0] + self.consumed[1]
     }
 
-    #[inline]
-    fn lane_slot(&self, lane: usize, claim: u64) -> Addr {
-        let base = HDR_WORDS + lane as u32 * self.lane_slots as u32;
-        self.hdr.offset(base + (claim % self.lane_slots) as u32)
-    }
-
     /// Consume the next published token from either lane, if any — at
     /// most two local reads (plus a local write when a token is
     /// taken); never a remote verb.
     pub fn pop(&mut self) -> Option<u64> {
-        for lane in 0..2 {
-            let slot = self.lane_slot(lane, self.consumed[lane]);
-            let v = self.ep.read(slot);
+        for (lane, rlane) in [(0, RmwLane::Cpu), (1, RmwLane::Nic)] {
+            let v = contract::ring_slot_read(
+                &self.ep,
+                Role::Session,
+                self.hdr,
+                rlane,
+                self.lane_slots,
+                self.consumed[lane],
+            );
             if v != 0 {
-                self.ep.write(slot, 0);
+                contract::ring_slot_clear(
+                    &self.ep,
+                    Role::Session,
+                    self.hdr,
+                    rlane,
+                    self.lane_slots,
+                    self.consumed[lane],
+                );
                 self.consumed[lane] += 1;
                 return Some(v - 1);
             }

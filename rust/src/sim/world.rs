@@ -322,6 +322,9 @@ impl World {
         if self.violation.is_some() {
             return false;
         }
+        // Stamp the schedule position into the verb-contract monitor so
+        // a sanitizer abort mid-step names the exact scheduled step.
+        self.domain.contract_monitor().set_step(self.applied as u64);
         let acted = self.apply_inner(step);
         self.applied += 1;
         acted

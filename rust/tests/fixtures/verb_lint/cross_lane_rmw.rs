@@ -1,0 +1,8 @@
+// Seeded violation: the lease word is CPU-owned; reaching it through
+// the NIC lane is the Table-1 mixed-atomicity hazard. Flag line 7.
+use qplock::rdma::contract::DESC_LEASE;
+use qplock::rdma::{Addr, Endpoint, RmwLane};
+
+pub fn fence_from_afar(ep: &Endpoint, desc: Addr) -> u64 {
+    ep.cas_lane(desc.offset(DESC_LEASE), 0, 1, RmwLane::Nic)
+}

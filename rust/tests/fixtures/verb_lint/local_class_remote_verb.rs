@@ -1,0 +1,13 @@
+// Seeded violation: a local-class code path reaching for the NIC —
+// the headline invariant says local-class processes issue zero remote
+// verbs, loopback included. verb-lint must flag line 10.
+use qplock::locks::Class;
+use qplock::rdma::contract::DESC_BUDGET;
+use qplock::rdma::{Addr, Endpoint};
+
+pub fn probe(ep: &Endpoint, desc: Addr, cls: Class) -> u64 {
+    match cls {
+        Class::Local => ep.r_read(desc.offset(DESC_BUDGET)),
+        Class::Remote => ep.r_read(desc.offset(DESC_BUDGET)),
+    }
+}

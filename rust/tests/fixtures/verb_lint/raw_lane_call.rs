@@ -1,0 +1,7 @@
+// Seeded violation: an explicit lane-dispatched CAS on a cohort tail,
+// bypassing the contract accessors. verb-lint must flag line 6.
+use qplock::rdma::{Addr, Endpoint, RmwLane};
+
+pub fn sneaky_relay(ep: &Endpoint, tail: Addr) -> u64 {
+    ep.cas_lane(tail, 0, 1, RmwLane::Cpu)
+}

@@ -1,0 +1,9 @@
+// Seeded violation: a descriptor word that exists nowhere in the
+// word-ownership registry. verb-lint must flag the declaration line.
+use qplock::rdma::{Addr, Endpoint};
+
+const DESC_SPARE: u32 = 7;
+
+pub fn scribble(ep: &Endpoint, desc: Addr) {
+    ep.write(desc.offset(DESC_SPARE), 1);
+}
