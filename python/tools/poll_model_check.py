@@ -14,12 +14,19 @@ Wakeup extension (mirrors `coordinator/service.rs` + the `WakeupRing`):
 handles are grouped into *sessions*, each owning a wakeup ring. A
 waiter parked in WaitBudget may arm a registration; the passer, after
 writing the budget word, reads the registration and publishes the
-waiter's token into its session's ring. Armed handles are polled ONLY
-when their token is consumed — so every schedule completing is a proof
-that no wakeup is lost. The passer's budget-write -> wake-read and the
-waiter's wake-write -> budget-recheck are modeled as interleavable
-steps (the `race` hook below), covering the store-load race the SeqCst
-handshake closes. (The Rust ring keeps two producer lanes so CPU and
+waiter's token into its session's ring. A Peterson-engaged leader
+(EngagePeterson/Reacquire) has no passer-written word; it registers in
+the lock's per-class *waker block* instead, and every event that can
+resolve its wait — the other cohort's tail reset, or a victim write
+yielding the turn, by live handles and by the sweeper's proxies alike
+— publishes the registered token (`signal_peterson`). Armed handles
+are polled ONLY when their token is consumed — so every schedule
+completing is a proof that no wakeup is lost, for both waiter classes.
+The passer's budget-write -> wake-read and the waiter's wake-write ->
+budget-recheck are modeled as interleavable steps (the `race` hook
+below), covering the store-load race the SeqCst handshake closes; the
+engaged arm's win-condition re-check closes the same race shape
+against resolving actors. (The Rust ring keeps two producer lanes so CPU and
 NIC fetch-and-adds never share a cursor word — a Table-1 atomicity
 concern this model cannot exhibit; the ring is modeled as one queue.)
 
@@ -125,7 +132,28 @@ class Lock:
         self.lease_ticks = lease_ticks
         self.victim = 0
         self.tail = [None, None]  # per-class cohort tails (handle or None)
+        # Per-class Peterson waker blocks (home-node registers in Rust):
+        # (session, token) or None. Registered by an engaged leader's
+        # arm, published by whichever other-class actor resets its tail
+        # or writes the victim word, cleared only by the registrant.
+        self.waker = [None, None]
+        self.peterson_wakeups = False  # sticky signalling gate
+        self.peterson_fired = 0  # model stat: waker-block publications
         self.holder = None  # oracle only
+
+    def signal_peterson(self, woken_cls):
+        """`signal_peterson`: after an event that can resolve class
+        `woken_cls`'s Peterson wait, publish its registered leader
+        token, if any. Does NOT clear the registration — the registrant
+        retires it on resolution (or its arm re-check never parks)."""
+        if not self.peterson_wakeups:
+            return
+        reg = self.waker[woken_cls]
+        if reg is None:
+            return
+        sess, token = reg
+        sess.ring.append(token)
+        self.peterson_fired += 1
 
 
 class Session:
@@ -149,6 +177,7 @@ class Handle:
         self.bud = 0  # descriptor: budget word
         self.next = None  # descriptor: link word
         self.wake_armed = False  # descriptor: wake-ring word (0 / set)
+        self.waker_registered = False  # lock-level waker block is ours
         # descriptor: lease word (None = idle; else a dict mirroring
         # the packed epoch/phase/flags/deadline fields)
         self.lease = None
@@ -189,6 +218,10 @@ class Handle:
     def _lease_expired(self):
         self.abandoning = False
         self.state = "Idle"
+        # Forget (don't clear) any waker-block registration: a fenced
+        # epoch must not write shared words, and a successor leader's
+        # re-registration overwrites the block anyway.
+        self.waker_registered = False
         self.stats["expired_polls"] += 1
         return "Expired"
 
@@ -239,6 +272,9 @@ class Handle:
             self.bud = lk.budget
             self._verb()  # victim write
             lk.victim = self.cls
+            # The victim write yields the turn to the other class:
+            # resolve its parked leader's wait, if any.
+            lk.signal_peterson(1 - self.cls)
             self.state = "EngagePeterson"
             return self._step_peterson(now)
         self.bud = WAITING
@@ -256,6 +292,9 @@ class Handle:
         if self.bud == 0:
             self._verb()  # victim write
             self.lock.victim = self.cls
+            # The yield hands the turn to the other class: resolve its
+            # parked leader's wait, if any.
+            self.lock.signal_peterson(1 - self.cls)
             self.state = "Reacquire"
             return self._step_peterson(now)
         return self._finish(now)
@@ -269,6 +308,10 @@ class Handle:
             self._verb()  # victim read
             if lk.victim == self.cls:
                 return "Pending"
+        # Proceeding out of the Peterson wait: retire any waker-block
+        # registration so a later tail reset or victim write cannot
+        # signal a stale token for an acquisition that moved on.
+        self._clear_waker()
         if self.state == "Reacquire":
             self.bud = lk.budget
         return self._finish(now)
@@ -295,16 +338,53 @@ class Handle:
     # -- wakeup registration (arm_wakeup transliteration) --
     def arm(self):
         """Returns 'armed' | 'ready' | 'no' (Unsupported)."""
-        if self.state != "WaitBudget":
+        engaged = self.state in ("Reacquire", "EngagePeterson")
+        if self.state != "WaitBudget" and not engaged:
             return "no"
         if self.lease is not None and self.lease["fenced"]:
             return "ready"  # revoked: caller polls, sees Expired
+        if engaged:
+            return self._arm_peterson()
         self.wake_armed = True  # publish registration (SeqCst store)
         if self.bud != WAITING:  # re-check (SeqCst load)
             self.wake_armed = False
             self.stats["already_ready"] += 1
             return "ready"
         return "armed"
+
+    def _arm_peterson(self):
+        """Engage-phase arm (arm_peterson transliteration): register in
+        the lock's per-class waker block, open the sticky gate, then
+        re-check the Peterson win condition — the engaged-class twin of
+        the budget re-check, closing the same store-load race with a
+        resolving actor whose tail reset or victim write landed first."""
+        lk = self.lock
+        self._verb(2)  # token write + ring write (home-node block)
+        lk.waker[self.cls] = (self.session, self.hid)
+        self.waker_registered = True
+        lk.peterson_wakeups = True
+        # Same read order as _step_peterson (tail first, victim only
+        # when the other cohort is engaged).
+        self._verb()  # other-tail read
+        blocked = lk.tail[1 - self.cls] is not None
+        if blocked:
+            self._verb()  # victim read
+            blocked = lk.victim == self.cls
+        if not blocked:
+            # The resolving event already landed; a token published
+            # anyway is discarded by the session on consumption.
+            self._clear_waker()
+            self.stats["already_ready"] += 1
+            return "ready"
+        return "armed"
+
+    def _clear_waker(self):
+        """Retire our waker-block registration (no-op when none)."""
+        if not self.waker_registered:
+            return
+        self.waker_registered = False
+        self._verb()  # ring-word clear (WakerRing := 0)
+        self.lock.waker[self.cls] = None
 
     def cancel(self):
         if self.state == "Idle":
@@ -344,6 +424,9 @@ class Handle:
             self._verb()  # tail CAS
             if lk.tail[self.cls] is self:
                 lk.tail[self.cls] = None
+                # The tail reset releases the Peterson flag implicitly:
+                # wake the other cohort's parked leader, if registered.
+                lk.signal_peterson(1 - self.cls)
                 return
             # CAS->link gap is atomic within a poll step: in this
             # single-scheduler model the link must already be visible.
@@ -419,6 +502,9 @@ class Sweeper:
             if h.bud == 0:
                 lk.victim = h.cls  # the dead waiter's Reacquire yield
                 le["phase"] = "ENGAGE"
+                # The proxy yield hands the turn to the other class:
+                # wake its parked leader, if any.
+                lk.signal_peterson(1 - h.cls)
                 return
             self._relay(h, h.bud - 1, now)
         elif le["phase"] == "ENGAGE":
@@ -436,6 +522,9 @@ class Sweeper:
             if lk.tail[h.cls] is h:
                 lk.tail[h.cls] = None  # tail reset (owning-lane CAS)
                 self.stats["released"] += 1
+                # The proxy tail reset releases the Peterson flag:
+                # wake the other cohort's parked leader, if any.
+                lk.signal_peterson(1 - h.cls)
                 self._reap(h, now)
                 return
             if h.next is None:
@@ -711,6 +800,7 @@ def run_schedule(seed):
     return {
         "parked": parked_verb_checks,
         "fired": fired,
+        "peterson_fired": lock.peterson_fired,
         "ready": already_ready,
         "killed": crashes["killed"],
         "stalled": crashes["stalled"],
@@ -871,6 +961,7 @@ def main():
     tot = {
         "parked": 0,
         "fired": 0,
+        "peterson_fired": 0,
         "ready": 0,
         "killed": 0,
         "stalled": 0,
@@ -888,6 +979,9 @@ def main():
             tot[k] += r[k]
         points |= r["points"]
     assert tot["fired"] > 0, "no wakeup token was ever published — model inert"
+    assert tot["peterson_fired"] > 0, (
+        "no engaged leader was ever signalled through the waker block"
+    )
     assert tot["ready"] > 0, "the arm-vs-handoff race was never exercised"
     assert tot["killed"] > 0 and tot["stalled"] > 0, "crashes never injected"
     assert points == {"holding", "enqueued", "mid-handoff", "armed"}, (
@@ -902,7 +996,8 @@ def main():
     print(
         f"poll-model check: {cases} random schedules clean "
         f"({tot['parked']} parked-poll verb checks, {tot['fired']} wakeups "
-        f"fired, {tot['ready']} already-ready races caught; crashes: "
+        f"fired, {tot['peterson_fired']} Peterson-waker signals, "
+        f"{tot['ready']} already-ready races caught; crashes: "
         f"{tot['killed']} killed + {tot['stalled']} zombies at "
         f"{len(points)}/4 points, {tot['fenced']} revoked, "
         f"{tot['relayed']} relays, {tot['released']} tails reset, "

@@ -9,7 +9,8 @@
 //! E10 sweeps the sharded multi-lock table; E11 compares
 //! thread-per-process against poll-multiplexed acquisition; E12
 //! measures the scan-vs-ready-list poll cost at large parked-waiter
-//! counts.
+//! counts, plus the work-stealing executor fleet with the fallback
+//! sweep disabled (one million parked waiters at full scale).
 //!
 //! Every experiment runs at two scales: `Quick` (cargo bench / CI) and
 //! `Full` (the numbers recorded in EXPERIMENTS.md).
@@ -19,8 +20,9 @@ use std::time::{Duration, Instant};
 
 use super::table::Table;
 use crate::coordinator::{
-    ready_list_probe, run_crash_workload, run_multi_lock_workload, run_multiplexed_workload,
-    run_workload, Cluster, CrashPlan, CsWork, LockService, PollMode, RunResult, Workload,
+    exec_probe, ready_list_probe, run_crash_workload, run_multi_lock_workload,
+    run_multiplexed_workload, run_workload, Cluster, CrashPlan, CsWork, ExecProbeConfig,
+    LockService, PollMode, RunResult, Workload,
 };
 use crate::locks::{make_lock, Class};
 use crate::mc::{self, models};
@@ -922,9 +924,52 @@ fn e12_ready_wakeups(scale: Scale) -> ExpOutput {
             ]);
         }
     }
+    // Executor-scaled half: the work-stealing session executor drives
+    // many ready-mode sessions at once with every fallback sweep
+    // disabled, so the wakeup path alone carries the full population —
+    // including the Peterson-engaged leaders that used to need the
+    // scan loop. Full scale parks one million waiters.
+    let (sessions, per_session, releases2, threads) = match scale {
+        Scale::Quick => (4u32, 250u32, 25u32, 2usize),
+        Scale::Full => (16, 62_500, 100, 8),
+    };
+    let mut t2 = Table::new(
+        "E12b: executor fleet, fallback sweep disabled — every waiter class on wakeups alone",
+        &[
+            "total-pending",
+            "sessions",
+            "threads",
+            "waiter-class",
+            "releases",
+            "polls",
+            "polls/release",
+            "steals",
+            "us/release",
+        ],
+    );
+    for (label, cross_class) in [("budget-parked", false), ("peterson-leader", true)] {
+        let s = exec_probe(ExecProbeConfig {
+            sessions,
+            pending_per_session: per_session,
+            releases_per_session: releases2,
+            threads,
+            cross_class,
+        });
+        t2.row(&[
+            s.total_pending.to_string(),
+            sessions.to_string(),
+            threads.to_string(),
+            label.into(),
+            s.total_releases.to_string(),
+            s.handle_polls.to_string(),
+            format!("{:.2}", s.polls_per_release()),
+            s.exec.steals.to_string(),
+            format!("{:.1}", s.wall.as_secs_f64() * 1e6 / s.total_releases.max(1) as f64),
+        ]);
+    }
     ExpOutput {
         id: "e12",
-        tables: vec![t],
+        tables: vec![t, t2],
         notes: vec![
             "scenario: one session holds all K locks, a second session (same node, \
              same cohort) has all K acquisitions parked in WaitBudget; each release \
@@ -937,6 +982,13 @@ fn e12_ready_wakeups(scale: Scale) -> ExpOutput {
                 .into(),
             "setup polls (parking + arming the waiters) are excluded; ready-mode \
              arming is O(K) once, amortized over the session's lifetime"
+                .into(),
+            "E12b: waiter sessions run as tasks on the work-stealing executor with \
+             sweep_interval 0 — no scan fallback anywhere. budget-parked waiters \
+             wake via the passer-written descriptor token; peterson-leader waiters \
+             (cross-class, every waiter its cohort's engaged leader) wake via the \
+             lock's waker block. polls/release ≈ 1 for both classes is the \
+             last-scan-loop-closed acceptance"
                 .into(),
         ],
     }
@@ -1097,6 +1149,18 @@ mod tests {
             assert!(
                 ready <= 4.0,
                 "ready polls/release should be O(1): {ready} at K={k}"
+            );
+        }
+        // E12b: the executor fleet with every fallback sweep disabled
+        // — both waiter classes must complete on ~1 poll per release.
+        let t2 = &out.tables[1];
+        assert_eq!(t2.rows(), 2);
+        for (r, class) in [(0, "budget-parked"), (1, "peterson-leader")] {
+            assert_eq!(t2.cell(r, 3), class);
+            let ppr: f64 = t2.cell(r, 6).parse().unwrap();
+            assert!(
+                ppr <= 4.0,
+                "{class}: sweep-disabled polls/release should be O(1): {ppr}"
             );
         }
     }

@@ -130,6 +130,16 @@ SUBCOMMANDS:
             --pending <K>      parked in-flight acquisitions (default 10000)
             --releases <n>     single releases to measure (default 50)
             --mode <m>         both|scan|ready (default both)
+  exec    work-stealing executor probe: many ready-mode sessions run
+          as futures on a multi-threaded executor with every fallback
+          sweep disabled — wakeup tokens alone must complete both
+          waiter classes, budget-parked cohort waiters and
+          Peterson-engaged leaders (the E12b scenario)
+            --sessions <n>     waiter sessions, one task each (default 4)
+            --pending <K>      parked waiters per session (default 1000)
+            --releases <n>     measured releases per session (default 50)
+            --threads <t>      executor worker threads (default 2)
+            --mode <m>         both|budget|peterson (default both)
   crash   fault-injection run over lease-enabled qplock: kill/stall
           simulated processes at the four protocol points (holding,
           enqueued, mid-handoff, armed) while the lease sweeper
@@ -165,6 +175,8 @@ SUBCOMMANDS:
             --mode <m>         uniform|pct|churn scheduler (default uniform)
             --pct-depth <n>    priority-change points in pct mode (default 3)
             --manual-arm       wakeup arming as its own scheduled step
+            --executor-steps   schedule the executor-shaped steps too
+                               (steal, migrate, waker-drop, spurious)
             --artifact-dir <d> where failing traces go (default
                                target/sim-artifacts)
             --replay <file>    re-execute a recorded artifact instead

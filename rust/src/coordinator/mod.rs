@@ -12,6 +12,7 @@
 //! mode, and an always-on mutual-exclusion oracle (a broken lock fails
 //! loudly in every experiment, not just dedicated tests).
 
+pub mod executor;
 pub mod runner;
 pub mod service;
 pub mod workload;
@@ -20,6 +21,7 @@ use std::sync::Arc;
 
 use crate::rdma::{DomainConfig, RdmaDomain};
 
+pub use executor::{exec_probe, ExecHandle, ExecProbeConfig, ExecProbeStats, ExecStats, Executor};
 pub use runner::{
     lock_name, ready_list_probe, run_crash_workload, run_multi_lock_workload,
     run_multiplexed_workload, run_multiplexed_workload_mode, run_workload, CrashPlan, CrashPoint,

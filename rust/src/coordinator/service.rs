@@ -584,15 +584,25 @@ pub struct HandleCache {
     /// Names with a submitted-but-unresolved acquisition (membership
     /// truth; O(1) for the submit/poll hot paths).
     pending: HashSet<String>,
-    /// Submit-order view of `pending` (poll_all's FIFO order).
-    /// Resolved names are compacted lazily: inside `poll_all`'s pass,
-    /// and amortized against the live count in `resolve`.
-    pending_order: Vec<String>,
+    /// Submit-order view of `pending` (poll_all's FIFO order),
+    /// maintained **only in scan mode** (no ring): ready sessions are
+    /// driven through `poll_ready`, which never walks it, so keeping
+    /// it would be pure overhead at executor scale — `poll_all`
+    /// backfills it on demand. Entries carry the generation they were
+    /// pushed under (see `gen`); resolved/invalidated names are
+    /// compacted lazily: inside `poll_all`'s pass, and amortized
+    /// against the live count in `resolve`.
+    pending_order: Vec<(String, u64)>,
     /// Pending names that must be polled every ready round (no armed
-    /// registration: fresh enqueues, Peterson-engaged leaders,
-    /// algorithms without wakeup support). Compacted lazily against
-    /// `pending`/`armed`.
-    scan: Vec<String>,
+    /// registration: fresh enqueues, algorithms without wakeup
+    /// support, arming refused by the capacity bound). Entries carry
+    /// their generation; compacted lazily against `pending`/`armed`.
+    scan: Vec<(String, u64)>,
+    /// Per-name entry generation. Bumping it (every resolution does)
+    /// tombstones all of a name's order/scan entries in O(1) — the
+    /// eager `retain` this replaces made every cancel/resubmit
+    /// O(pending), i.e. quadratic under cancel-heavy churn.
+    gen: HashMap<String, u64>,
     /// Pending names whose completion will arrive as a ring token —
     /// `poll_ready` does not touch them until it does.
     armed: HashMap<String, u64>,
@@ -673,6 +683,7 @@ impl HandleCache {
             pending: HashSet::new(),
             pending_order: Vec::new(),
             scan: Vec::new(),
+            gen: HashMap::new(),
             armed: HashMap::new(),
             cancelled: HashSet::new(),
             resubmit: HashSet::new(),
@@ -757,12 +768,11 @@ impl HandleCache {
             match self.poll_one(name) {
                 LockPoll::Cancelled | LockPoll::Expired => {
                     // The drain (or revoked acquisition) just resolved:
-                    // purge its stale order and scan entries eagerly so
-                    // the fresh submission below cannot leave duplicates
-                    // that would be double-polled every round (this
-                    // path is rare; an O(pending) purge here is fine).
-                    self.pending_order.retain(|n| n != name);
-                    self.scan.retain(|n| n != name);
+                    // its stale order/scan entries were tombstoned
+                    // wholesale by the generation bump in `resolve`, so
+                    // the fresh submission below cannot be double-polled
+                    // — no eager O(pending) purge (that retain made
+                    // cancel-heavy churn quadratic).
                 }
                 other => {
                     self.reconcile_relisted();
@@ -798,13 +808,16 @@ impl HandleCache {
             LockPoll::Held => Ok(LockPoll::Held),
             other => {
                 self.pending.insert(name.to_string());
-                self.pending_order.push(name.to_string());
-                // Ready bookkeeping only exists alongside a ring;
-                // scan-mode sessions (poll_all) track nothing extra,
-                // and enable_ready_wakeups seeds the scan set from
-                // `pending` if a ring appears later.
-                if self.ring.is_some() && (self.manual_arm || !self.try_arm(name)) {
-                    self.scan.push(name.to_string());
+                if self.ring.is_none() {
+                    // Scan mode: maintain poll_all's FIFO order view.
+                    // Ready sessions skip it (poll_ready never walks
+                    // it; poll_all backfills on demand) — the
+                    // bookkeeping shrinks to the scan-mode fallback.
+                    let g = Self::live_gen(&self.gen, name);
+                    self.pending_order.push((name.to_string(), g));
+                } else if self.manual_arm || !self.try_arm(name) {
+                    let g = Self::live_gen(&self.gen, name);
+                    self.scan.push((name.to_string(), g));
                 }
                 Ok(other)
             }
@@ -850,52 +863,75 @@ impl HandleCache {
         self.expired.push(name.to_string());
     }
 
+    /// Current generation of `name`'s order/scan entries. An entry is
+    /// live iff it carries this value; [`Self::bump_gen`] tombstones
+    /// every older entry at once.
+    fn live_gen(gen: &HashMap<String, u64>, name: &str) -> u64 {
+        gen.get(name).copied().unwrap_or(0)
+    }
+
+    /// Invalidate every existing order/scan entry of `name` in O(1).
+    fn bump_gen(gen: &mut HashMap<String, u64>, name: &str) {
+        *gen.entry(name.to_string()).or_default() += 1;
+    }
+
     /// Re-list `name` as pending on behalf of a recorded resubmit
-    /// intent, purging the drained acquisition's stale entries first.
-    /// No poll here — the handle is idle, and polling an idle handle
-    /// submits, which the next round does through its normal path.
-    /// Scan membership is settled by [`HandleCache::reconcile_relisted`]
-    /// at the end of the poll entry point, where duplicates can be
-    /// detected.
+    /// intent. The drained acquisition's stale entries were already
+    /// tombstoned by `resolve`'s generation bump, so this is O(1) — no
+    /// eager purge. No poll here — the handle is idle, and polling an
+    /// idle handle submits, which the next round does through its
+    /// normal path. Scan membership is settled by
+    /// [`HandleCache::reconcile_relisted`] at the end of the poll
+    /// entry point.
     fn relist(&mut self, name: &str) {
-        self.pending_order.retain(|n| n != name);
-        self.scan.retain(|n| n != name);
         self.pending.insert(name.to_string());
-        self.pending_order.push(name.to_string());
+        if self.ring.is_none() {
+            let g = Self::live_gen(&self.gen, name);
+            self.pending_order.push((name.to_string(), g));
+        }
         self.relisted.push(name.to_string());
     }
 
     /// Ensure every just-re-listed name is on the scan list of a ready
-    /// session (deduplicating against entries the poll round may have
-    /// added itself). Rare path, so the linear dedup is fine.
+    /// session. No dedup walk needed: any scan entry the round pushed
+    /// for this name predates the drain's resolution, whose generation
+    /// bump tombstoned it — an unconditional push cannot double-list.
     fn reconcile_relisted(&mut self) {
         while let Some(name) = self.relisted.pop() {
             if self.ring.is_none()
                 || !self.pending.contains(&name)
                 || self.armed.contains_key(&name)
-                || self.scan.iter().any(|n| *n == name)
             {
                 continue;
             }
-            self.scan.push(name);
+            let g = Self::live_gen(&self.gen, &name);
+            self.scan.push((name, g));
         }
     }
 
     /// A pending acquisition finished (held or drained): drop every
-    /// trace of it. A ring token that was already published for it is
-    /// discarded on consumption by `poll_ready`'s token/armed
-    /// cross-check; the `scan` list is compacted lazily.
+    /// trace of it. The generation bump tombstones its order/scan
+    /// entries in O(1); a ring token that was already published for it
+    /// is discarded on consumption by `poll_ready`'s token/armed
+    /// cross-check; both entry lists are compacted lazily.
     fn resolve(&mut self, name: &str) {
         self.pending.remove(name);
+        Self::bump_gen(&mut self.gen, name);
         self.resolve_registration(name);
-        // Amortized GC of the order view (sessions that only ever use
-        // poll_ready never run poll_all's compacting pass): once stale
-        // entries outnumber live ones, sweep them in O(n) — O(1)
-        // amortized per resolution, and never during a phase that
-        // hasn't already resolved half its pending set.
+        // Amortized GC of the entry lists: once stale entries
+        // outnumber live ones, sweep them in O(n) — O(1) amortized
+        // per resolution, and never during a phase that hasn't
+        // already resolved half its pending set.
         if self.pending_order.len() > 2 * self.pending.len() + 16 {
-            let pending = &self.pending;
-            self.pending_order.retain(|n| pending.contains(n));
+            let (pending, gen) = (&self.pending, &self.gen);
+            self.pending_order
+                .retain(|(n, g)| pending.contains(n) && *g == Self::live_gen(gen, n));
+        }
+        if self.scan.len() > 2 * self.pending.len() + 16 {
+            let (pending, armed, gen) = (&self.pending, &self.armed, &self.gen);
+            self.scan.retain(|(n, g)| {
+                pending.contains(n) && !armed.contains_key(n) && *g == Self::live_gen(gen, n)
+            });
         }
     }
 
@@ -989,6 +1025,7 @@ impl HandleCache {
         let HandleCache {
             pending,
             pending_order,
+            gen,
             handles,
             armed,
             tokens,
@@ -1000,9 +1037,27 @@ impl HandleCache {
             handle_polls,
             ..
         } = self;
+        // Normalize the order view: drop tombstoned/resolved entries
+        // and backfill any pending name it is missing — ready-mode
+        // sessions do not maintain it (the executor drives them
+        // through poll_ready), so a direct poll_all on one falls back
+        // to the pending set, appended in arbitrary order. O(pending),
+        // which this walk already is.
+        // Live entries cannot duplicate — each (name, generation) is
+        // pushed at most once (a re-push is always preceded by a bump)
+        // — so dropping tombstones leaves a duplicate-free list.
+        pending_order.retain(|(n, g)| pending.contains(n) && *g == Self::live_gen(gen, n));
+        let listed: HashSet<&str> = pending_order.iter().map(|(n, _)| n.as_str()).collect();
+        let missing: Vec<(String, u64)> = pending
+            .iter()
+            .filter(|n| !listed.contains(n.as_str()))
+            .map(|n| (n.clone(), Self::live_gen(gen, n)))
+            .collect();
+        drop(listed);
+        pending_order.extend(missing);
         let mut held = Vec::new();
         let mut restart = Vec::new();
-        pending_order.retain(|name| {
+        pending_order.retain(|(name, _)| {
             if !pending.contains(name) {
                 return false; // resolved through another path earlier
             }
@@ -1012,6 +1067,7 @@ impl HandleCache {
                 LockPoll::Pending => true,
                 r => {
                     pending.remove(name);
+                    Self::bump_gen(gen, name);
                     Self::release_registration(armed, tokens, dirty_tokens, name);
                     match r {
                         LockPoll::Held => held.push(name.clone()),
@@ -1057,7 +1113,12 @@ impl HandleCache {
             // Acquisitions submitted before the ring existed enter the
             // scan set, so the first poll_ready round sees them (and
             // arms the armable ones).
-            self.scan = self.pending.iter().cloned().collect();
+            let gen = &self.gen;
+            self.scan = self
+                .pending
+                .iter()
+                .map(|n| (n.clone(), Self::live_gen(gen, n)))
+                .collect();
         }
     }
 
@@ -1120,13 +1181,15 @@ impl HandleCache {
                         LockPoll::Pending => {
                             // Still in flight: the budget arrived
                             // exhausted and the handle moved on to
-                            // re-engaging the Peterson lock (no further
-                            // handoff will be written for it), or the
+                            // re-engaging the Peterson lock (where a
+                            // re-arm targets the Peterson-waker block
+                            // instead of the budget word), or the
                             // token was a benign spurious duplicate.
                             // Disarm and keep it progressing.
                             self.resolve_registration(&name);
                             if self.manual_arm || !self.try_arm(&name) {
-                                self.scan.push(name);
+                                let g = Self::live_gen(&self.gen, &name);
+                                self.scan.push((name, g));
                             }
                         }
                     }
@@ -1138,10 +1201,14 @@ impl HandleCache {
         }
 
         // 2. Scan set: pending names without a registration, polled
-        // every round; compact entries that resolved or armed.
+        // every round; compact entries that resolved, armed, or were
+        // tombstoned by a generation bump.
         let mut scan = std::mem::take(&mut self.scan);
-        scan.retain(|name| {
-            if !self.pending.contains(name) || self.armed.contains_key(name) {
+        scan.retain(|(name, g)| {
+            if !self.pending.contains(name)
+                || self.armed.contains_key(name)
+                || *g != Self::live_gen(&self.gen, name)
+            {
                 return false;
             }
             match self.poll_one(name) {
@@ -1335,6 +1402,79 @@ impl HandleCache {
             .get_mut(name)
             .and_then(|h| h.as_async())
             .is_some_and(|a| a.has_pending_handoff())
+    }
+
+    /// Explorer step: one thief-grained bite of the ready source —
+    /// consume at most ONE published wakeup token, with the same
+    /// validation, poll, `Pending` re-arm, and token reclamation as a
+    /// single `poll_ready` ring iteration, but without the scan sweep
+    /// or heartbeat a full round carries. Models a work-stealing
+    /// executor worker lifting a single ready task off another
+    /// worker's queue mid-batch. Returns `None` when no publication
+    /// was waiting; otherwise `Some(held)`, where `held` names the
+    /// acquisition if consuming that token resolved it to held.
+    pub fn steal_ready(&mut self) -> Option<Option<String>> {
+        let token = self.ring.as_mut()?.pop()?;
+        let mut held = None;
+        let name = self.tokens.get(token as usize).cloned().flatten();
+        if let Some(name) = name {
+            if self.armed.get(&name) == Some(&token) {
+                match self.poll_one(&name) {
+                    LockPoll::Held => held = Some(name),
+                    LockPoll::Cancelled | LockPoll::Expired => {}
+                    LockPoll::Pending => {
+                        // Same as poll_ready's token branch: exhausted
+                        // budget moved the handle onto the Peterson
+                        // wait (or the token was a benign duplicate) —
+                        // disarm and keep it progressing.
+                        self.resolve_registration(&name);
+                        if self.manual_arm || !self.try_arm(&name) {
+                            let g = Self::live_gen(&self.gen, &name);
+                            self.scan.push((name, g));
+                        }
+                    }
+                }
+            }
+        }
+        self.reclaim_token(token);
+        self.reconcile_relisted();
+        Some(held)
+    }
+
+    /// Explorer step: forget `name`'s armed registration host-side —
+    /// an executor dropping a parked task's `Waker` (the task was
+    /// cancelled, or its waker replaced on a re-poll) — without
+    /// touching the remote protocol words. The registration's token
+    /// moves to the dirty list (its publication may still arrive and
+    /// must be discarded on consumption), and `name` re-enters the
+    /// scan set so the next round re-polls — and re-arms — it,
+    /// exactly as `AcqFuture` re-arms on every `Pending` poll.
+    pub fn drop_wakeup(&mut self, name: &str) -> bool {
+        if !self.armed.contains_key(name) {
+            return false;
+        }
+        self.resolve_registration(name);
+        // An explorer `arm_now` leaves the armed name's old scan entry
+        // for the next round's compaction, so guard against pushing a
+        // live duplicate (O(scan), explorer-only — not a hot path).
+        let g = Self::live_gen(&self.gen, name);
+        if !self.scan.iter().any(|(n, sg)| n == name && *sg == g) {
+            self.scan.push((name.to_string(), g));
+        }
+        true
+    }
+
+    /// Explorer step: the task driving this session migrates to
+    /// another executor worker, which resumes the fallback scan from
+    /// its own cursor — modelled as rotating the scan list by one
+    /// entry. Pure scheduling surface: no protocol word is touched,
+    /// only the order the next round polls unarmed names in.
+    pub fn migrate_scan(&mut self) -> bool {
+        if self.scan.len() < 2 {
+            return false;
+        }
+        self.scan.rotate_left(1);
+        true
     }
 
     /// Simulate this session's process dying mid-flight: every handle

@@ -15,8 +15,9 @@
 //!   (striped registry, handle-cache sessions with pid-slot leases,
 //!   submit/poll_all multiplexing and event-driven `poll_ready`
 //!   wakeup rings, multi-lock Zipfian runner, poll-multiplexed runner
-//!   with scan/ready scheduler modes), and the single-lock workload
-//!   runner.
+//!   with scan/ready scheduler modes), the futures-native
+//!   work-stealing session executor (`coordinator::executor`), and
+//!   the single-lock workload runner.
 //! * [`sim`] — deterministic schedule explorer over the real stack:
 //!   record/replay/shrink, crash injection, mutation teeth, and
 //!   differential traces against the Python oracle (see TESTING.md).

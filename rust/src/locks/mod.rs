@@ -115,6 +115,12 @@ pub enum AcqPhase {
 ///   critical-section path (the PR 4 holder heartbeat): a live
 ///   holder's lease expires mid-hold and the sweeper gives its lock
 ///   away while it still believes it holds.
+/// * `SKIP_WAKER_RECHECK` — drop `arm_wakeup`'s Peterson-condition
+///   re-check after an *engaged leader* publishes into its class's
+///   waker block: a tail reset or victim write that landed before the
+///   registration became visible is missed, and the leader parks
+///   forever on a signal nobody owes it (the engaged-class twin of
+///   `SKIP_ARM_RECHECK`'s store-load race).
 ///
 /// Compiled only under `debug_assertions` (the `cargo test` profile);
 /// release builds carry no knob and no check. Global statics: tests
@@ -127,12 +133,14 @@ pub mod test_knobs {
     pub static SKIP_ARM_RECHECK: AtomicBool = AtomicBool::new(false);
     pub static IGNORE_DIRTY_TOKENS: AtomicBool = AtomicBool::new(false);
     pub static SKIP_CS_RENEW: AtomicBool = AtomicBool::new(false);
+    pub static SKIP_WAKER_RECHECK: AtomicBool = AtomicBool::new(false);
 
     /// Restore every knob to its defended state.
     pub fn reset() {
         SKIP_ARM_RECHECK.store(false, SeqCst);
         IGNORE_DIRTY_TOKENS.store(false, SeqCst);
         SKIP_CS_RENEW.store(false, SeqCst);
+        SKIP_WAKER_RECHECK.store(false, SeqCst);
         #[cfg(debug_assertions)]
         crate::rdma::contract::test_knobs::MISLANE_RING_CURSOR.store(false, SeqCst);
     }
@@ -197,9 +205,9 @@ pub enum ArmOutcome {
     /// closes the race with a passer that wrote the handoff before
     /// observing the registration.
     AlreadyReady,
-    /// This handle — or its current wait state (e.g. a Peterson-engaged
-    /// leader, whose release path writes no waiter-side word) — cannot
-    /// be signalled. Keep polling it.
+    /// This handle — or its current wait state (e.g. a submit-side
+    /// tail CAS still in flight, or an algorithm without passer-side
+    /// signalling) — cannot be signalled. Keep polling it.
     Unsupported,
 }
 
@@ -270,9 +278,11 @@ pub trait AsyncLockHandle: LockHandle {
     /// process that will resolve it to publish `reg.token` into
     /// `reg.ring` alongside the handoff it already writes, so the
     /// session can stop polling this handle until the token arrives.
-    /// Only meaningful while the handle is parked on state that a
-    /// passer writes (qplock: `WaitBudget`); the default is
-    /// [`ArmOutcome::Unsupported`] (keep polling).
+    /// Only meaningful while the handle is parked on state that some
+    /// resolver writes (qplock: `WaitBudget`, whose passer writes the
+    /// budget word, and the Peterson-engaged `Engage` wait, whose
+    /// resolver signals through the lock's per-class waker block); the
+    /// default is [`ArmOutcome::Unsupported`] (keep polling).
     fn arm_wakeup(&mut self, _reg: WakeupReg) -> ArmOutcome {
         ArmOutcome::Unsupported
     }
@@ -311,6 +321,85 @@ pub trait AsyncLockHandle: LockHandle {
     /// writes. Lease-less default: quiescent iff idle.
     fn slot_quiescent(&self) -> bool {
         !self.is_acquiring() && !self.is_held()
+    }
+}
+
+/// An acquisition as a [`core::future::Future`] — ROADMAP item 3's
+/// futures-native face over the *same* poll machine every other layer
+/// drives. `poll` delegates to [`AsyncLockHandle::poll_lock`] (one
+/// bounded protocol step; the blocking path, the scan baseline, and
+/// the sim explorer's single-step hooks all share it, so futures add
+/// no second protocol implementation), then decides how the task gets
+/// woken:
+///
+/// * With a [`WakeupReg`] (the executor's session ring + a token
+///   routed back to this task), a `Pending` poll re-arms the
+///   event-driven wakeup. [`ArmOutcome::Armed`] means the resolver —
+///   budget passer or Peterson-waker signaller — will publish the
+///   token; the future returns [`core::task::Poll::Pending`] *without*
+///   waking, and the executor's ring consumption wakes the task. The
+///   re-arm on every `Pending` poll is load-bearing: a consumed token
+///   disarms the registration (passers clear it), so a spurious or
+///   racing wake must re-register before parking again.
+/// * [`ArmOutcome::AlreadyReady`] (the resolving write raced the
+///   registration) and [`ArmOutcome::Unsupported`] (state no resolver
+///   signals — e.g. mid-`Enqueue`) wake the task immediately via
+///   `cx.waker().wake_by_ref()`: the executor re-queues it, degrading
+///   to poll-driven progress exactly where the protocol requires it.
+/// * With no registration (plain `block_on`-style use), every
+///   `Pending` poll self-wakes — a busy-poll future, semantically the
+///   blocking loop.
+///
+/// The future resolves to the terminal [`LockPoll`] (`Held`,
+/// `Cancelled`, or `Expired` — never `Pending`). Dropping it mid-wait
+/// does **not** cancel the acquisition (MCS queues cannot unlink a
+/// waiter); use [`AsyncLockHandle::cancel_lock`] and keep polling, as
+/// the cancellation contract requires.
+pub struct AcqFuture<'a, H: AsyncLockHandle + ?Sized> {
+    handle: &'a mut H,
+    reg: Option<WakeupReg>,
+}
+
+impl<'a, H: AsyncLockHandle + ?Sized> AcqFuture<'a, H> {
+    /// Future the next acquisition step of `handle`, waking by
+    /// self-wake (busy-poll) only.
+    pub fn new(handle: &'a mut H) -> AcqFuture<'a, H> {
+        AcqFuture { handle, reg: None }
+    }
+
+    /// Future the acquisition with an event-driven wakeup: `reg`
+    /// names the session's [`crate::rdma::WakeupRing`] and the token
+    /// the executor maps back to this task's [`core::task::Waker`].
+    pub fn with_wakeup(handle: &'a mut H, reg: WakeupReg) -> AcqFuture<'a, H> {
+        AcqFuture { handle, reg: Some(reg) }
+    }
+}
+
+impl<H: AsyncLockHandle + ?Sized> core::future::Future for AcqFuture<'_, H> {
+    type Output = LockPoll;
+
+    fn poll(
+        self: core::pin::Pin<&mut Self>,
+        cx: &mut core::task::Context<'_>,
+    ) -> core::task::Poll<LockPoll> {
+        // `AcqFuture` holds only a `&mut H`, so it is `Unpin` and the
+        // pin projection is trivial.
+        let me = self.get_mut();
+        match me.handle.poll_lock() {
+            LockPoll::Pending => {
+                match me.reg {
+                    Some(reg) => match me.handle.arm_wakeup(reg) {
+                        ArmOutcome::Armed => {} // ring token will wake us
+                        ArmOutcome::AlreadyReady | ArmOutcome::Unsupported => {
+                            cx.waker().wake_by_ref();
+                        }
+                    },
+                    None => cx.waker().wake_by_ref(),
+                }
+                core::task::Poll::Pending
+            }
+            done => core::task::Poll::Ready(done),
+        }
     }
 }
 
@@ -525,5 +614,110 @@ mod tests {
         }
         assert_eq!(c.violations(), 0);
         assert_eq!(c.entries(), 99);
+    }
+
+    /// A waker that counts its wakes — enough to pin `AcqFuture`'s
+    /// wake discipline without an executor.
+    fn counting_waker(count: Arc<AtomicU64>) -> core::task::Waker {
+        use core::task::{RawWaker, RawWakerVTable, Waker};
+        unsafe fn bump(data: *const ()) {
+            unsafe { (*(data as *const AtomicU64)).fetch_add(1, SeqCst) };
+        }
+        unsafe fn clone(data: *const ()) -> RawWaker {
+            unsafe { Arc::increment_strong_count(data as *const AtomicU64) };
+            RawWaker::new(data, &VTABLE)
+        }
+        unsafe fn wake(data: *const ()) {
+            unsafe {
+                bump(data);
+                drop_raw(data);
+            }
+        }
+        unsafe fn drop_raw(data: *const ()) {
+            unsafe { drop(Arc::from_raw(data as *const AtomicU64)) };
+        }
+        static VTABLE: RawWakerVTable = RawWakerVTable::new(clone, wake, bump, drop_raw);
+        unsafe { Waker::from_raw(RawWaker::new(Arc::into_raw(count) as *const (), &VTABLE)) }
+    }
+
+    /// Without a registration, every `Pending` poll self-wakes (the
+    /// busy-poll contract) and the future resolves to `Held` once the
+    /// inner machine does.
+    #[test]
+    fn acq_future_self_wakes_and_resolves() {
+        use core::future::Future;
+        use core::task::{Context, Poll};
+
+        let d = RdmaDomain::new(1, 4096, DomainConfig::counted());
+        let l = qplock::QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(0));
+        let mut waiter = l.qp_handle(d.endpoint(0));
+        holder.lock();
+
+        let wakes = Arc::new(AtomicU64::new(0));
+        let waker = counting_waker(wakes.clone());
+        let mut cx = Context::from_waker(&waker);
+        let mut fut = AcqFuture::new(&mut waiter);
+        assert!(matches!(core::pin::Pin::new(&mut fut).poll(&mut cx), Poll::Pending));
+        assert_eq!(wakes.load(SeqCst), 1, "pending poll must self-wake");
+
+        holder.unlock();
+        let held = loop {
+            match core::pin::Pin::new(&mut fut).poll(&mut cx) {
+                Poll::Ready(p) => break p,
+                Poll::Pending => {}
+            }
+        };
+        assert_eq!(held, LockPoll::Held);
+        waiter.unlock();
+    }
+
+    /// With a registration, an armed pending poll does NOT self-wake
+    /// (the ring token is the wakeup), and the published token drives
+    /// the future to completion — the futures face of the ready-list.
+    #[test]
+    fn acq_future_armed_poll_parks_until_token() {
+        use core::future::Future;
+        use core::task::{Context, Poll};
+
+        let d = RdmaDomain::new(1, 4096, DomainConfig::counted());
+        let l = qplock::QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(0));
+        let mut waiter = l.qp_handle(d.endpoint(0));
+        let mut ring = crate::rdma::WakeupRing::new(d.endpoint(0), 4);
+        holder.lock();
+
+        let wakes = Arc::new(AtomicU64::new(0));
+        let waker = counting_waker(wakes.clone());
+        let mut cx = Context::from_waker(&waker);
+        let reg = WakeupReg {
+            ring: ring.header(),
+            token: 5,
+            ring_slots: ring.lane_slots(),
+        };
+        let mut fut = AcqFuture::with_wakeup(&mut waiter, reg);
+        // First poll submits (Enqueue: Unsupported → self-wake); keep
+        // polling until a poll parks armed without waking.
+        let mut parked = false;
+        for _ in 0..8 {
+            let before = wakes.load(SeqCst);
+            assert!(matches!(core::pin::Pin::new(&mut fut).poll(&mut cx), Poll::Pending));
+            if wakes.load(SeqCst) == before {
+                parked = true;
+                break;
+            }
+        }
+        assert!(parked, "an armed WaitBudget poll must not self-wake");
+
+        holder.unlock();
+        assert_eq!(ring.pop(), Some(5), "the handoff publishes the token");
+        let held = loop {
+            match core::pin::Pin::new(&mut fut).poll(&mut cx) {
+                Poll::Ready(p) => break p,
+                Poll::Pending => {}
+            }
+        };
+        assert_eq!(held, LockPoll::Held);
+        waiter.unlock();
     }
 }

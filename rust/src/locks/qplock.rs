@@ -30,6 +30,7 @@
 //!
 //! ```text
 //! home node:   victim | tail[LOCAL] | tail[REMOTE]          (1 word each)
+//!              waker[LOCAL] | waker[REMOTE]     (waker-ring + waker-token)
 //! each proc:   desc = [ budget | next | wake-ring | wake-token | lease ]
 //!                                                       (on its own node)
 //! ```
@@ -43,6 +44,21 @@
 //! and local-class releases still issue zero. That lets a multiplexing
 //! session discover ready acquisitions in O(ready) instead of scanning
 //! every parked one.
+//!
+//! The two **Peterson-waker blocks** (`waker[class]`, one per cohort,
+//! declared as [`contract::WAKER_RING`]/[`contract::WAKER_TOKEN`])
+//! extend the same registration to the one waiter class the descriptor
+//! words cannot reach: a *Peterson-engaged cross-class leader*, whose
+//! release-side events — the other cohort's tail reset, or a victim
+//! write yielding the turn — touch no word of the leader's own. An
+//! engaged leader arms by publishing its ring header and token into
+//! its class's block (home-node resident, so local-class arming stays
+//! CPU-only) and re-checking the Peterson condition afterwards; every
+//! event that resolves the wait (`q_unlock`'s tail reset, the budget-0
+//! victim yield, and the sweeper's relay/repair proxies of both) then
+//! signals the *other* class's block. A sticky gate keeps the hook
+//! free for workloads that never arm, so the paper-path verb counts
+//! are bit-identical. With it, no waiter class needs the scan loop.
 //!
 //! Acquisition is a **resumable state machine** (`Idle → Enqueue →
 //! WaitBudget → Reacquire → Held`, leaders short-cutting through
@@ -222,7 +238,7 @@ pub(crate) mod lease {
     }
 }
 
-/// The one shared identity of a qplock: the three home-node registers,
+/// The one shared identity of a qplock: the home-node registers,
 /// the configured `kInitBudget`, and host-side per-lock state. Held by
 /// [`Arc`] from both [`QpLock`] and every [`QpHandle`], so all handles
 /// of one lock observe the *same* object — per-lock counters (and any
@@ -231,6 +247,13 @@ pub(crate) mod lease {
 pub struct QpInner {
     victim: Addr,
     tail: [Addr; 2],
+    /// Per-class Peterson-waker register blocks (home-node resident,
+    /// like the victim): `wakers[c]` holds class `c`'s engaged
+    /// leader's wakeup registration — ring header + packed token —
+    /// written by the Engage-phase arm, consumed by whichever
+    /// *other*-class actor performs the tail reset or victim write
+    /// that resolves the leader's Peterson wait.
+    wakers: [Addr; 2],
     home: NodeId,
     init_budget: u64,
     /// Host-side accounting (not an RDMA register): acquisitions that
@@ -249,6 +272,13 @@ pub struct QpInner {
     /// budget write) pair under the same SC argument as the wake words
     /// themselves, so gating cannot lose a wakeup.
     wakeups: AtomicBool,
+    /// Sticky gate for the Peterson-waker hook, mirroring `wakeups`:
+    /// set the first time an Engage-phase arm registers in a waker
+    /// block, so workloads that never park a cross-class leader pay
+    /// zero extra reads on the tail-reset and victim-write paths —
+    /// existing paths keep bit-identical verb counts. Same SC pairing
+    /// argument as `wakeups`.
+    peterson_wakeups: AtomicBool,
     /// Lease term in domain lease-clock ticks; 0 = leases disabled
     /// (the paper's failure-free protocol, bit-for-bit: no lease word
     /// is ever written and no extra ops run on any path).
@@ -261,8 +291,9 @@ pub struct QpInner {
     slots: Mutex<Vec<Addr>>,
 }
 
-/// Shared side of a qplock: three registers on the home node plus the
-/// configured initial budget (`kInitBudget`).
+/// Shared side of a qplock: the home-node registers (victim, cohort
+/// tails, Peterson-waker blocks) plus the configured initial budget
+/// (`kInitBudget`).
 pub struct QpLock {
     inner: Arc<QpInner>,
 }
@@ -280,16 +311,22 @@ impl QpLock {
         let mem = &domain.node(home).mem;
         let victim = mem.alloc(1);
         let tail = [mem.alloc(1), mem.alloc(1)];
-        contract::register_lock_words(domain, victim, tail[0], tail[1]);
+        let wakers = [
+            mem.alloc(contract::WAKER_WORDS),
+            mem.alloc(contract::WAKER_WORDS),
+        ];
+        contract::register_lock_words(domain, victim, tail[0], tail[1], wakers[0], wakers[1]);
         Arc::new(QpLock {
             inner: Arc::new(QpInner {
                 victim,
                 tail,
+                wakers,
                 home,
                 init_budget,
                 contended: AtomicU64::new(0),
                 handles_minted: AtomicU64::new(0),
                 wakeups: AtomicBool::new(false),
+                peterson_wakeups: AtomicBool::new(false),
                 lease_ticks: AtomicU64::new(0),
                 slots: Mutex::new(Vec::new()),
             }),
@@ -341,6 +378,7 @@ impl QpInner {
             desc,
             state: AcqState::Idle,
             abandoning: false,
+            waker_registered: false,
             epoch: 0,
             lease_active: false,
         }
@@ -449,6 +487,9 @@ impl QpInner {
                         lease::with_phase(w, lease::PHASE_ENGAGE),
                     );
                     stats.engaged += 1;
+                    // The proxy yield hands the turn to the other
+                    // class: wake its parked leader, if any.
+                    self.signal_peterson(ep, Role::RepairProxy, cls.other(), Via::Best);
                     return;
                 }
                 self.relay(ep, desc, w, b - 1, now, stats);
@@ -516,6 +557,9 @@ impl QpInner {
             );
             if seen == desc.to_bits() {
                 stats.released += 1;
+                // The proxy tail reset releases the Peterson flag:
+                // wake the other cohort's parked leader, if any.
+                self.signal_peterson(ep, Role::RepairProxy, cls.other(), Via::Best);
                 self.reap(ep, desc, w, now, stats);
                 return;
             }
@@ -579,6 +623,50 @@ impl QpInner {
         let hdr = Addr::from_bits(ring_bits);
         let via = if ep.is_local(hdr) { Via::Cpu } else { Via::Verb };
         contract::ring_publish(ep, Role::RepairProxy, hdr, slots, token, via);
+    }
+
+    /// The Peterson-waker hook — the cross-class mirror of
+    /// `QpHandle::signal_successor`, closing the last scan loop: after
+    /// an event that can resolve class `woken`'s Peterson wait (the
+    /// other cohort's tail reset, or a victim write yielding the turn),
+    /// publish that class's registered leader token, if any. The
+    /// registration lives in home-node waker registers, so reading it
+    /// is a CPU op for co-located callers (`via` is the caller's class
+    /// dispatch, `Best` for the repair proxy — the local class stays
+    /// NIC-silent on every protocol word); the publish itself
+    /// dispatches by the *ring's* locality, exactly like the sweeper's
+    /// `signal_from`, and is charged to the resolving actor. Gated on
+    /// the sticky `peterson_wakeups` flag so unarmed workloads keep
+    /// bit-identical verb counts.
+    fn signal_peterson(&self, ep: &Endpoint, role: Role, woken: Class, via: Via) {
+        if !self.peterson_wakeups.load(SeqCst) {
+            return;
+        }
+        let base = self.wakers[woken.idx()];
+        let ring_bits = contract::read_via(
+            ep,
+            role,
+            Word::WakerRing,
+            contract::waker_addr(base, Word::WakerRing),
+            via,
+        );
+        if ring_bits == 0 {
+            return;
+        }
+        let token_word = contract::read_via(
+            ep,
+            role,
+            Word::WakerToken,
+            contract::waker_addr(base, Word::WakerToken),
+            via,
+        );
+        let (slots, token) = (token_word >> 32, token_word & 0xFFFF_FFFF);
+        if slots == 0 {
+            return; // malformed registration: nothing to signal safely
+        }
+        let hdr = Addr::from_bits(ring_bits);
+        let ring_via = if ep.is_local(hdr) { Via::Cpu } else { Via::Verb };
+        contract::ring_publish(ep, role, hdr, slots, token, ring_via);
     }
 }
 
@@ -656,6 +744,13 @@ pub struct QpHandle {
     /// on reaching `Held` the handle releases immediately instead of
     /// reporting ownership (the drain keeps the handoff chain intact).
     abandoning: bool,
+    /// This acquisition holds a live registration in the lock's
+    /// per-class Peterson-waker block (Engage-phase arm). Cleared when
+    /// the wait resolves (`step_peterson` retires the block entry) or
+    /// the arm's re-check disarms; a lease revocation only drops the
+    /// flag — the sweeper owns the slot, and stale block entries are
+    /// overwritten by the class's next engaged leader.
+    waker_registered: bool,
     /// Acquisition counter; the epoch the current lease word carries.
     epoch: u32,
     /// The current acquisition carries a lease (snapshotted at submit,
@@ -738,6 +833,11 @@ impl QpHandle {
     fn lease_expired(&mut self) -> LockPoll {
         self.abandoning = false;
         self.lease_active = false;
+        // Only the flag, not the block entry: the sweeper owns the
+        // slot now, and the class's next engaged leader overwrites the
+        // block. Writing 0 here could clobber that successor's live
+        // registration.
+        self.waker_registered = false;
         self.state = AcqState::Idle;
         LockPoll::Expired
     }
@@ -843,6 +943,10 @@ impl QpHandle {
                 self.class.idx() as u64,
                 self.via(),
             );
+            // The victim write yields the global lock's turn to the
+            // other class: resolve its parked leader's wait, if any.
+            self.shared
+                .signal_peterson(&self.ep, Role::Passer, self.class.other(), self.via());
             self.state = AcqState::EngagePeterson;
             return self.step_peterson();
         }
@@ -889,6 +993,10 @@ impl QpHandle {
                 self.class.idx() as u64,
                 self.via(),
             );
+            // The yield hands the global lock's turn to the other
+            // class: resolve its parked leader's wait, if any.
+            self.shared
+                .signal_peterson(&self.ep, Role::Passer, self.class.other(), self.via());
             self.state = AcqState::Reacquire;
             return self.step_peterson();
         }
@@ -917,6 +1025,10 @@ impl QpHandle {
         {
             return LockPoll::Pending;
         }
+        // Proceeding out of the Peterson wait: retire any waker-block
+        // registration so a later tail reset or victim write cannot
+        // signal a stale token for an acquisition that moved on.
+        self.clear_waker(Role::Waiter);
         if self.state == AcqState::Reacquire {
             contract::desc_write(
                 &self.ep,
@@ -967,6 +1079,11 @@ impl QpHandle {
                 0,
             );
             if seen == self.desc.to_bits() {
+                // The tail reset releases the Peterson flag implicitly
+                // (`cohort[id]` is now null): wake the other cohort's
+                // parked leader, if one registered a waker.
+                self.shared
+                    .signal_peterson(&self.ep, Role::Passer, self.class.other(), self.via());
                 return;
             }
             // A successor is between its tail-CAS and its link write;
@@ -1053,6 +1170,91 @@ impl QpHandle {
             self.shared.tail[other.idx()],
             self.via(),
         ) != 0
+    }
+
+    /// Engage-phase arm: register this leader's wakeup in the lock's
+    /// per-class waker block, consumed by whichever other-class actor
+    /// resets its tail or writes the victim (`signal_peterson`). Token
+    /// first, ring last — the signaller reads the ring word and only
+    /// then the token — then the sticky gate, then an SC re-check of
+    /// the Peterson win condition: the same store-load closure as the
+    /// budget-word arm, so either a resolving actor sees the
+    /// registration or this re-check sees the resolution. A wakeup is
+    /// never lost.
+    fn arm_peterson(&mut self, reg: WakeupReg) -> ArmOutcome {
+        let base = self.shared.wakers[self.class.idx()];
+        contract::write_via(
+            &self.ep,
+            Role::Session,
+            Word::WakerToken,
+            contract::waker_addr(base, Word::WakerToken),
+            (reg.ring_slots << 32) | reg.token,
+            self.via(),
+        );
+        contract::write_via(
+            &self.ep,
+            Role::Session,
+            Word::WakerRing,
+            contract::waker_addr(base, Word::WakerRing),
+            reg.ring.to_bits(),
+            self.via(),
+        );
+        self.waker_registered = true;
+        self.shared.peterson_wakeups.store(true, SeqCst);
+        // Mutation tooth (test builds only): skipping the re-check
+        // re-opens the store-load race — a tail reset or victim write
+        // that landed before the registration is missed and the leader
+        // parks on a token nobody will publish.
+        #[cfg(debug_assertions)]
+        if super::test_knobs::SKIP_WAKER_RECHECK.load(Relaxed) {
+            return ArmOutcome::Armed;
+        }
+        // Same read order as `step_peterson` (tail first, victim only
+        // when the other cohort is engaged).
+        let me = self.class.idx() as u64;
+        let other = self.class.other();
+        let blocked = contract::read_via(
+            &self.ep,
+            Role::Session,
+            tail_word(other),
+            self.shared.tail[other.idx()],
+            self.via(),
+        ) != 0
+            && contract::read_via(
+                &self.ep,
+                Role::Session,
+                Word::Victim,
+                self.shared.victim,
+                self.via(),
+            ) == me;
+        if !blocked {
+            // The resolving event already landed; the actor may or may
+            // not have seen the registration. Disarm and have the
+            // caller poll now — a token published anyway is discarded
+            // by the session on consumption.
+            self.clear_waker(Role::Session);
+            return ArmOutcome::AlreadyReady;
+        }
+        ArmOutcome::Armed
+    }
+
+    /// Retire this handle's waker-block registration (no-op when none):
+    /// clearing the ring word closes the block entry so later events
+    /// cannot signal a stale token at a descriptor that moved on.
+    fn clear_waker(&mut self, role: Role) {
+        if !self.waker_registered {
+            return;
+        }
+        self.waker_registered = false;
+        let base = self.shared.wakers[self.class.idx()];
+        contract::write_via(
+            &self.ep,
+            role,
+            Word::WakerRing,
+            contract::waker_addr(base, Word::WakerRing),
+            0,
+            self.via(),
+        );
     }
 
     /// Current acquisition state (test/diagnostic visibility).
@@ -1185,11 +1387,14 @@ impl AsyncLockHandle for QpHandle {
     }
 
     fn arm_wakeup(&mut self, reg: WakeupReg) -> ArmOutcome {
-        // Only a waiter parked on its budget word has a guaranteed
-        // future handoff to piggyback on. Leaders engaged in Peterson
-        // (and mid-enqueue CAS retries) resolve through registers no
-        // passer writes for them — those must keep being polled.
-        if self.state != AcqState::WaitBudget {
+        // A waiter parked on its budget word piggybacks on the owed
+        // handoff; a Peterson-engaged leader (`Reacquire` /
+        // `EngagePeterson`) registers in the lock's per-class waker
+        // block, consumed by the other class's tail resets and victim
+        // writes. Mid-enqueue CAS retries have no passer-written word
+        // and must keep being polled.
+        let engaged = matches!(self.state, AcqState::Reacquire | AcqState::EngagePeterson);
+        if self.state != AcqState::WaitBudget && !engaged {
             return ArmOutcome::Unsupported;
         }
         // A revoked waiter must not park on a token the sweeper's
@@ -1205,16 +1410,19 @@ impl AsyncLockHandle for QpHandle {
         {
             return ArmOutcome::AlreadyReady;
         }
+        debug_assert!(
+            reg.token >> 32 == 0 && reg.ring_slots >> 32 == 0 && reg.ring_slots > 0,
+            "token and lane size must pack into one registration word"
+        );
+        if engaged {
+            return self.arm_peterson(reg);
+        }
         // Token first, ring last: the passer reads the ring word and
         // only then the token. SeqCst stores/loads (`write`/`read`,
         // not the Release/Acquire descriptor fast path): the passer's
         // budget-write → ring-read and our ring-write → budget-read
         // must not both pass each other (store-load reordering would
         // let both sides miss, losing the wakeup).
-        debug_assert!(
-            reg.token >> 32 == 0 && reg.ring_slots >> 32 == 0 && reg.ring_slots > 0,
-            "token and lane size must pack into one registration word"
-        );
         contract::desc_write_sc(
             &self.ep,
             Role::Session,
@@ -1691,6 +1899,128 @@ mod tests {
         assert_eq!(h.poll_lock(), LockPoll::Held);
         assert_eq!(h.arm_wakeup(reg), ArmOutcome::Unsupported);
         h.unlock();
+    }
+
+    /// Drive a handle to the Peterson-engaged leader state against a
+    /// holder from the opposite cohort.
+    fn engage_leader(leader: &mut QpHandle) {
+        while leader.acq_state() != AcqState::EngagePeterson {
+            assert_eq!(leader.poll_lock(), LockPoll::Pending);
+        }
+        // Engaged and blocked: the other cohort holds and we yielded.
+        assert_eq!(leader.poll_lock(), LockPoll::Pending);
+    }
+
+    #[test]
+    fn engaged_leader_gets_its_token_published_on_tail_reset() {
+        // The last scan loop, closed: a Peterson-engaged cross-class
+        // leader arms its class's waker block, and the release-side
+        // tail reset publishes its token — no polling between arm and
+        // wake.
+        use crate::rdma::WakeupRing;
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(0)); // local cohort
+        let mut leader = l.qp_handle(d.endpoint(1)); // remote leader
+        let mut ring = WakeupRing::new(d.endpoint(1), 4);
+        holder.lock();
+        engage_leader(&mut leader);
+        let reg = WakeupReg {
+            ring: ring.header(),
+            token: 17,
+            ring_slots: ring.lane_slots(),
+        };
+        assert_eq!(leader.arm_wakeup(reg), ArmOutcome::Armed);
+        assert_eq!(ring.pop(), None, "still blocked: no signal yet");
+        holder.unlock(); // no local successor → tail reset → waker signal
+        assert_eq!(ring.pop(), Some(17), "tail reset published the token");
+        assert_eq!(leader.poll_lock(), LockPoll::Held);
+        leader.unlock();
+    }
+
+    #[test]
+    fn engaged_leader_gets_its_token_published_on_victim_yield() {
+        // The other resolving event: the opposite cohort exhausts its
+        // budget and its last holder yields the turn by writing the
+        // victim word — that write, not a tail reset, is what unblocks
+        // the engaged leader, so it must carry the waker signal too.
+        use crate::rdma::WakeupRing;
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 1); // budget 1: yield after one handoff
+        let mut holder = l.qp_handle(d.endpoint(0));
+        let mut succ = l.qp_handle(d.endpoint(0)); // local successor
+        let mut leader = l.qp_handle(d.endpoint(1)); // remote leader
+        let mut ring = WakeupRing::new(d.endpoint(1), 4);
+        holder.lock();
+        while succ.acq_state() != AcqState::WaitBudget {
+            assert_eq!(succ.poll_lock(), LockPoll::Pending);
+        }
+        engage_leader(&mut leader);
+        let reg = WakeupReg {
+            ring: ring.header(),
+            token: 23,
+            ring_slots: ring.lane_slots(),
+        };
+        assert_eq!(leader.arm_wakeup(reg), ArmOutcome::Armed);
+        holder.unlock(); // relays budget 0 to succ — tail stays set
+        assert_eq!(ring.pop(), None, "relay alone resolves nothing");
+        // succ consumes budget 0: victim yield + waker signal, then it
+        // reacquires through the Peterson protocol itself.
+        assert_eq!(succ.poll_lock(), LockPoll::Pending);
+        assert_eq!(
+            ring.pop(),
+            Some(23),
+            "the budget-0 victim write published the token"
+        );
+        assert_eq!(leader.poll_lock(), LockPoll::Held);
+        leader.unlock();
+        while !succ.poll_lock().is_held() {}
+        succ.unlock();
+    }
+
+    #[test]
+    fn arm_after_peterson_wait_already_resolved_reports_ready() {
+        // The engaged-class registration race: the tail reset lands
+        // before the arm. The arm-side re-check of the Peterson
+        // condition must catch it — AlreadyReady, clear registration,
+        // caller polls on.
+        use crate::rdma::WakeupRing;
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut holder = l.qp_handle(d.endpoint(0));
+        let mut leader = l.qp_handle(d.endpoint(1));
+        let mut ring = WakeupRing::new(d.endpoint(1), 4);
+        holder.lock();
+        engage_leader(&mut leader);
+        holder.unlock(); // wait resolves while the leader is unarmed
+        let reg = WakeupReg {
+            ring: ring.header(),
+            token: 3,
+            ring_slots: ring.lane_slots(),
+        };
+        assert_eq!(leader.arm_wakeup(reg), ArmOutcome::AlreadyReady);
+        assert_eq!(ring.pop(), None, "resolver saw no registration");
+        assert_eq!(leader.poll_lock(), LockPoll::Held);
+        leader.unlock();
+    }
+
+    #[test]
+    fn unarmed_workloads_pay_nothing_for_the_waker_hook() {
+        // The sticky gate: until some handle arms an engaged wait, the
+        // release paths must not even read the waker blocks — pinned
+        // here by the same uncontended verb counts the paper's Table 1
+        // promises (1 rCAS + 1 rWrite + 1 rRead acquire, 1 rCAS
+        // release), which predate the hook.
+        let d = RdmaDomain::new(2, 2048, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut h = l.qp_handle(d.endpoint(1));
+        let b = h.ep.metrics.snapshot();
+        h.lock();
+        h.unlock();
+        let used = h.ep.metrics.snapshot() - b;
+        assert_eq!(used.remote_cas, 2, "tail claim + tail reset");
+        assert_eq!(used.remote_write, 1, "victim announcement");
+        assert_eq!(used.remote_read, 1, "other-tail check");
     }
 
     #[test]

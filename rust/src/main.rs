@@ -7,9 +7,9 @@ use std::time::Duration;
 use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
 use qplock::cli::{Args, HELP};
 use qplock::coordinator::{
-    lock_name, ready_list_probe, run_crash_workload, run_multi_lock_workload,
+    exec_probe, lock_name, ready_list_probe, run_crash_workload, run_multi_lock_workload,
     run_multiplexed_workload_mode, run_workload, Cluster, CrashPlan, CrashPoint, CsWork,
-    LockService, PollMode, Workload,
+    ExecProbeConfig, LockService, PollMode, Workload,
 };
 use qplock::locks::{make_lock, Class, ALGORITHMS};
 use qplock::mc::{self, models};
@@ -24,6 +24,7 @@ fn main() {
         Some("multi-lock") => cmd_multi_lock(&args),
         Some("async") => cmd_async(&args),
         Some("ready") => cmd_ready(&args),
+        Some("exec") => cmd_exec(&args),
         Some("crash") => cmd_crash(&args),
         Some("sim") => cmd_sim(&args),
         Some("lint") => cmd_lint(&args),
@@ -291,6 +292,57 @@ fn cmd_ready(args: &Args) {
     }
 }
 
+fn cmd_exec(args: &Args) {
+    let sessions: u32 = args.get_num("sessions", 4);
+    let pending: u32 = args.get_num("pending", 1_000);
+    let releases: u32 = args.get_num("releases", 50);
+    let threads: usize = args.get_num("threads", 2);
+    let which = args.get_or("mode", "both");
+    if sessions == 0 || threads == 0 || pending == 0 || releases == 0 || releases > pending {
+        eprintln!(
+            "--sessions/--threads must be >= 1 and --releases in 1..=--pending \
+             (got {releases} of {pending})"
+        );
+        std::process::exit(2);
+    }
+    println!(
+        "exec: {sessions} sessions x {pending} parked waiters on {threads} worker \
+         threads, fallback sweep disabled, {releases} releases/session (E12b's scenario)"
+    );
+    let run = |cross_class: bool, label: &str| {
+        let s = exec_probe(ExecProbeConfig {
+            sessions,
+            pending_per_session: pending,
+            releases_per_session: releases,
+            threads,
+            cross_class,
+        });
+        println!(
+            "  {label:>8}: {:>9} polls / {:>6} releases | {:>6.2} polls/release | \
+             {:>8.1} us/release | {} steals, {} wakes | setup {} polls",
+            s.handle_polls,
+            s.total_releases,
+            s.polls_per_release(),
+            s.wall.as_secs_f64() * 1e6 / s.total_releases.max(1) as f64,
+            s.exec.steals,
+            s.exec.wakes,
+            s.setup_polls
+        );
+    };
+    match which {
+        "both" => {
+            run(false, "budget");
+            run(true, "peterson");
+        }
+        "budget" => run(false, "budget"),
+        "peterson" => run(true, "peterson"),
+        other => {
+            eprintln!("unknown --mode '{other}' (both|budget|peterson)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_crash(args: &Args) {
     let sims: u32 = args.get_num("sim-procs", 64);
     let threads: usize = args.get_num("threads", 4);
@@ -440,6 +492,7 @@ fn cmd_sim(args: &Args) {
         zombie_prob: args.get_num("zombie-prob", 0.5),
         max_crashes: args.get_num("max-crashes", 2),
         manual_arm: args.flag("manual-arm"),
+        executor_steps: args.flag("executor-steps"),
         mode,
     };
     let schedules: u32 = args.get_num("schedules", 200);

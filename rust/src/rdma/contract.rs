@@ -11,8 +11,9 @@
 //! repair lanes). This module turns the map into data:
 //!
 //! * [`REGISTRY`] declares every protocol word — descriptor words 0–4,
-//!   `tail[LOCAL]`/`tail[REMOTE]`, the wakeup-ring cursors and slots,
-//!   the host-side lease slot table — with its owning lane, the access
+//!   `tail[LOCAL]`/`tail[REMOTE]`, the per-class Peterson-waker
+//!   registers, the wakeup-ring cursors and slots, the host-side lease
+//!   slot table — with its owning lane, the access
 //!   kinds each protocol role may issue, whether it is remotely
 //!   reachable at all, and its NIC-silence class (which words must
 //!   cost the local class zero remote verbs).
@@ -65,6 +66,14 @@ pub const DESC_LEASE: u32 = 4;
 /// Words per MCS descriptor.
 pub const DESC_WORDS: u32 = 5;
 
+/// Waker-block word 0: the engaged leader's wakeup-ring header
+/// address (0 = no parked Peterson leader of this class).
+pub const WAKER_RING: u32 = 0;
+/// Waker-block word 1: packed `(ring_slots << 32) | session token`.
+pub const WAKER_TOKEN: u32 = 1;
+/// Words per per-class Peterson-waker register block.
+pub const WAKER_WORDS: u32 = 2;
+
 /// Wakeup-ring header words before the token slots.
 pub const RING_HDR_WORDS: u32 = 2;
 /// Ring header word 0: CPU-lane producer cursor (co-located FAA only).
@@ -94,6 +103,13 @@ pub enum Word {
     TailLocal,
     /// Cohort tail of the remote class (rCAS only).
     TailRemote,
+    /// Per-class Peterson-waker register, word 0: the engaged leader's
+    /// wakeup-ring header address (0 = not armed). Home-node resident,
+    /// like the victim and the tails.
+    WakerRing,
+    /// Per-class Peterson-waker register, word 1: packed ring-slots +
+    /// session token of the engaged leader's registration.
+    WakerToken,
     /// Wakeup-ring CPU-lane producer cursor.
     RingCpuCursor,
     /// Wakeup-ring NIC-lane producer cursor.
@@ -277,7 +293,7 @@ pub const REGISTRY: &[WordContract] = &[
         split_unit: None,
         remote_reachable: true,
         local_silent: true,
-        reads: &[Waiter, RepairProxy],
+        reads: &[Waiter, Session, RepairProxy],
         writes: &[Waiter, RepairProxy],
         rmws: &[],
     },
@@ -290,7 +306,7 @@ pub const REGISTRY: &[WordContract] = &[
         split_unit: None,
         remote_reachable: true,
         local_silent: true,
-        reads: &[Waiter, RepairProxy],
+        reads: &[Waiter, Session, RepairProxy],
         writes: &[],
         rmws: &[Waiter, Passer, RepairProxy],
     },
@@ -303,9 +319,35 @@ pub const REGISTRY: &[WordContract] = &[
         split_unit: None,
         remote_reachable: true,
         local_silent: false,
-        reads: &[Waiter, RepairProxy],
+        reads: &[Waiter, Session, RepairProxy],
         writes: &[],
         rmws: &[Waiter, Passer, RepairProxy],
+    },
+    WordContract {
+        word: Word::WakerRing,
+        name: "waker-ring",
+        const_name: Some("WAKER_RING"),
+        offset: Some(WAKER_RING),
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: true,
+        reads: &[Passer, RepairProxy],
+        writes: &[Waiter, Session],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::WakerToken,
+        name: "waker-token",
+        const_name: Some("WAKER_TOKEN"),
+        offset: Some(WAKER_TOKEN),
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: true,
+        reads: &[Passer, RepairProxy],
+        writes: &[Session],
+        rmws: &[],
     },
     WordContract {
         word: Word::RingCpuCursor,
@@ -387,6 +429,9 @@ pub fn canonical_offsets() -> &'static [(&'static str, u32)] {
         ("DESC_WAKE_TOKEN", DESC_WAKE_TOKEN),
         ("DESC_LEASE", DESC_LEASE),
         ("DESC_WORDS", DESC_WORDS),
+        ("WAKER_RING", WAKER_RING),
+        ("WAKER_TOKEN", WAKER_TOKEN),
+        ("WAKER_WORDS", WAKER_WORDS),
         ("RING_HDR_WORDS", RING_HDR_WORDS),
         ("RING_CPU_CURSOR", RING_CPU_CURSOR),
         ("RING_NIC_CURSOR", RING_NIC_CURSOR),
@@ -455,6 +500,16 @@ pub fn desc_addr(desc: Addr, w: Word) -> Addr {
         Word::DescWakeToken => desc.offset(DESC_WAKE_TOKEN),
         Word::DescLease => desc.offset(DESC_LEASE),
         other => panic!("{other:?} is not a descriptor word"),
+    }
+}
+
+/// Address of waker-block word `w` of the per-class Peterson-waker
+/// register block at `base`.
+pub fn waker_addr(base: Addr, w: Word) -> Addr {
+    match w {
+        Word::WakerRing => base.offset(WAKER_RING),
+        Word::WakerToken => base.offset(WAKER_TOKEN),
+        other => panic!("{other:?} is not a waker-block word"),
     }
 }
 
@@ -822,15 +877,29 @@ impl Monitor {
 
 use super::RdmaDomain;
 
-/// Register a lock's shared words (victim + both cohort tails) with
-/// the domain monitor. The victim and `tail[LOCAL]` are NIC-silent for
-/// the local class; `tail[REMOTE]` legitimately sees loopback rCAS
-/// (the home sweeper's repair proxy), so it is registered lenient.
-pub fn register_lock_words(domain: &RdmaDomain, victim: Addr, tail_local: Addr, tail_remote: Addr) {
+/// Register a lock's shared words (victim + both cohort tails + both
+/// Peterson-waker blocks) with the domain monitor. The victim and
+/// `tail[LOCAL]` are NIC-silent for the local class; `tail[REMOTE]`
+/// legitimately sees loopback rCAS (the home sweeper's repair proxy),
+/// so it is registered lenient. The waker blocks live on the home node
+/// like the victim: co-located (local-class) processes must reach them
+/// with CPU ops, so both blocks are registered NIC-silent.
+pub fn register_lock_words(
+    domain: &RdmaDomain,
+    victim: Addr,
+    tail_local: Addr,
+    tail_remote: Addr,
+    waker_local: Addr,
+    waker_remote: Addr,
+) {
     let m = domain.contract_monitor();
     m.register(victim, Word::Victim, true);
     m.register(tail_local, Word::TailLocal, true);
     m.register(tail_remote, Word::TailRemote, false);
+    for base in [waker_local, waker_remote] {
+        m.register(waker_addr(base, Word::WakerRing), Word::WakerRing, true);
+        m.register(waker_addr(base, Word::WakerToken), Word::WakerToken, true);
+    }
 }
 
 /// Register one descriptor's five words. `local_class` descriptors are
@@ -963,6 +1032,31 @@ mod tests {
         let lease = facts.iter().find(|f| f.const_name == "DESC_LEASE").unwrap();
         assert_eq!(lease.lane, Some(RmwLane::Cpu));
         assert!(!lease.split);
+        // The Peterson-waker registers: never RMW'd, NIC-silent for
+        // co-located accessors — the facts the seeded fixture pins.
+        for name in ["WAKER_RING", "WAKER_TOKEN"] {
+            let f = facts.iter().find(|f| f.const_name == name).unwrap();
+            assert_eq!(f.lane, None, "{name} is never RMW-arbitrated");
+            assert!(f.nic_silent, "{name} must be NIC-silent");
+        }
+    }
+
+    #[test]
+    fn waker_addr_covers_the_block_layout() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let base = ep.alloc(WAKER_WORDS);
+        assert_eq!(waker_addr(base, Word::WakerRing), base);
+        assert_eq!(waker_addr(base, Word::WakerToken), base.offset(WAKER_TOKEN));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a waker-block word")]
+    fn waker_addr_rejects_non_waker_words() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let base = ep.alloc(WAKER_WORDS);
+        waker_addr(base, Word::Victim);
     }
 
     #[test]

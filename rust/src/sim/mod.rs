@@ -26,9 +26,10 @@
 //!   (`fenced == reaped` at quiescence).
 //! * **Mutation teeth.** `crate::locks::test_knobs` disables known
 //!   defenses (the PR 3 arm-time budget re-check, the dirty-token
-//!   arming bound, the PR 4 CS-path renew); `rust/tests/sim_mutations.rs`
-//!   proves the explorer rediscovers each seeded bug within a bounded
-//!   schedule budget and shrinks it to a replayable artifact.
+//!   arming bound, the PR 4 CS-path renew, the PR 7 Peterson-waker
+//!   arm re-check); `rust/tests/sim_mutations.rs` proves the explorer
+//!   rediscovers each seeded bug within a bounded schedule budget and
+//!   shrinks it to a replayable artifact.
 //!
 //! [`differential`] additionally drives the protocol at *handle*
 //! granularity in lockstep with the Python transliteration

@@ -187,6 +187,26 @@ impl Scheduler {
             menu.push((Step::Release { a, l }, 3));
             menu.push((Step::Hold { a }, 2));
         }
+        if cfg.executor_steps {
+            // Executor-shaped steps (opt-in so pre-existing seeds keep
+            // their exact schedules): spurious polls and waker drops
+            // target armed names — the deliberate exceptions to the
+            // armed-resolve-by-token discipline — while steals and
+            // migrations bite at the session's ready source and scan
+            // cursor.
+            let armed: Vec<u32> = pending
+                .iter()
+                .copied()
+                .filter(|&l| world.is_armed(a, l))
+                .collect();
+            if !armed.is_empty() {
+                let l = armed[rng.below(armed.len() as u64) as usize];
+                menu.push((Step::SpuriousWake { a, l }, 1));
+                menu.push((Step::WakerDrop { a, l }, 1));
+            }
+            menu.push((Step::Steal { a }, 2));
+            menu.push((Step::Migrate { a }, 1));
+        }
         weighted(&menu, rng).unwrap_or(Step::Tick { d: 1 })
     }
 

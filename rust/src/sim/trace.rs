@@ -44,7 +44,7 @@ impl TraceFile {
              \"seed\":{},\"violation\":\"{}\",\"config\":{{\"procs\":{},\"locks\":{},\
              \"nodes\":{},\"budget\":{},\"lease\":{},\"ring\":{},\"max_steps\":{},\
              \"drain_rounds\":{},\"crash_prob\":{},\"zombie_prob\":{},\"max_crashes\":{},\
-             \"manual_arm\":{},\"mode\":\"{}\",\"pct_depth\":{}}}}}\n",
+             \"manual_arm\":{},\"exec_steps\":{},\"mode\":\"{}\",\"pct_depth\":{}}}}}\n",
             self.seed,
             self.violation.as_deref().unwrap_or("none"),
             c.procs,
@@ -59,6 +59,7 @@ impl TraceFile {
             c.zombie_prob,
             c.max_crashes,
             c.manual_arm,
+            c.executor_steps,
             mode,
             depth,
         );
@@ -99,6 +100,7 @@ impl TraceFile {
             zombie_prob: field_f64(header, "zombie_prob").unwrap_or(0.0),
             max_crashes: need(header, "max_crashes")? as u32,
             manual_arm: header.contains("\"manual_arm\":true"),
+            executor_steps: header.contains("\"exec_steps\":true"),
             mode,
         };
         let violation = field_str(header, "violation").filter(|v| v.as_str() != "none");
@@ -132,6 +134,14 @@ fn encode_step(i: usize, s: &Step) -> String {
         Step::Kill { a } => format!("{{\"i\":{i},\"op\":\"kill\",\"a\":{a}}}"),
         Step::Stall { a } => format!("{{\"i\":{i},\"op\":\"stall\",\"a\":{a}}}"),
         Step::Wake { a } => format!("{{\"i\":{i},\"op\":\"wake\",\"a\":{a}}}"),
+        Step::Steal { a } => format!("{{\"i\":{i},\"op\":\"steal\",\"a\":{a}}}"),
+        Step::Migrate { a } => format!("{{\"i\":{i},\"op\":\"migrate\",\"a\":{a}}}"),
+        Step::WakerDrop { a, l } => {
+            format!("{{\"i\":{i},\"op\":\"waker_drop\",\"a\":{a},\"l\":{l}}}")
+        }
+        Step::SpuriousWake { a, l } => {
+            format!("{{\"i\":{i},\"op\":\"spurious\",\"a\":{a},\"l\":{l}}}")
+        }
     }
 }
 
@@ -152,6 +162,10 @@ fn decode_step(line: &str) -> Result<Step, String> {
         "kill" => Step::Kill { a: a()? },
         "stall" => Step::Stall { a: a()? },
         "wake" => Step::Wake { a: a()? },
+        "steal" => Step::Steal { a: a()? },
+        "migrate" => Step::Migrate { a: a()? },
+        "waker_drop" => Step::WakerDrop { a: a()?, l: l()? },
+        "spurious" => Step::SpuriousWake { a: a()?, l: l()? },
         other => return Err(format!("unknown op '{other}'")),
     })
 }
@@ -207,6 +221,7 @@ mod tests {
         let cfg = SimConfig {
             crash_prob: 0.25,
             manual_arm: true,
+            executor_steps: true,
             mode: SchedMode::Pct { depth: 3 },
             ..SimConfig::default()
         };
@@ -220,6 +235,10 @@ mod tests {
                 Step::Sweep,
                 Step::Arm { a: 1, l: 0 },
                 Step::Ready { a: 1 },
+                Step::Steal { a: 2 },
+                Step::Migrate { a: 1 },
+                Step::WakerDrop { a: 1, l: 0 },
+                Step::SpuriousWake { a: 1, l: 1 },
                 Step::Kill { a: 0 },
                 Step::Wake { a: 2 },
             ],
@@ -232,6 +251,7 @@ mod tests {
         assert_eq!(back.config.procs, tf.config.procs);
         assert_eq!(back.config.lease_ticks, tf.config.lease_ticks);
         assert!(back.config.manual_arm);
+        assert!(back.config.executor_steps);
         assert_eq!(back.config.mode, SchedMode::Pct { depth: 3 });
         assert!((back.config.crash_prob - 0.25).abs() < 1e-12);
     }
@@ -247,6 +267,7 @@ mod tests {
         let back = TraceFile::decode(&tf.encode()).unwrap();
         assert_eq!(back.violation, None);
         assert!(!back.config.manual_arm);
+        assert!(!back.config.executor_steps);
         assert_eq!(back.config.mode, SchedMode::Uniform);
     }
 

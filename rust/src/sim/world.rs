@@ -59,6 +59,11 @@ pub struct SimConfig {
     /// store-load window becomes schedulable). When false, submit and
     /// `poll_ready` arm automatically, as production sessions do.
     pub manual_arm: bool,
+    /// Schedule the executor-shaped steps too ([`Step::Steal`],
+    /// [`Step::Migrate`], [`Step::WakerDrop`], [`Step::SpuriousWake`]).
+    /// Off by default so pre-existing seeds replay the exact schedules
+    /// they always produced; replay applies the steps regardless.
+    pub executor_steps: bool,
     /// Scheduler flavor (recorded for reproducibility; replay ignores
     /// it — the steps are already chosen).
     pub mode: super::SchedMode,
@@ -79,6 +84,7 @@ impl Default for SimConfig {
             zombie_prob: 0.5,
             max_crashes: 2,
             manual_arm: false,
+            executor_steps: false,
             mode: super::SchedMode::Uniform,
         }
     }
@@ -123,6 +129,24 @@ pub enum Step {
     /// Wake a stalled zombie: it attempts the late operations its
     /// fenced epochs must reject, then resumes normal life.
     Wake { a: u32 },
+    /// A thief worker lifts one ready task off actor `a`'s session:
+    /// consume at most one published wakeup token (no scan sweep, no
+    /// heartbeat) via [`HandleCache::steal_ready`].
+    Steal { a: u32 },
+    /// Actor `a`'s session migrates to another executor worker, which
+    /// resumes the fallback scan from its own cursor
+    /// ([`HandleCache::migrate_scan`]).
+    Migrate { a: u32 },
+    /// The executor drops the parked task's waker for actor `a`'s
+    /// armed acquisition of `l`: the registration is forgotten
+    /// host-side and the name falls back to the scan set, where the
+    /// next poll re-arms it ([`HandleCache::drop_wakeup`]).
+    WakerDrop { a: u32, l: u32 },
+    /// Spurious wake: poll actor `a`'s *armed* acquisition of `l`
+    /// directly, though no token fired — the Future contract's
+    /// spurious poll, which may resolve host-side and leave a dirty
+    /// token behind.
+    SpuriousWake { a: u32, l: u32 },
 }
 
 /// An oracle failure. `step` is the 0-based index of the scheduled
@@ -346,6 +370,10 @@ impl World {
             Step::Kill { a } => self.do_kill(a),
             Step::Stall { a } => self.do_stall(a),
             Step::Wake { a } => self.do_wake(a),
+            Step::Steal { a } => self.do_steal(a),
+            Step::Migrate { a } => self.do_migrate(a),
+            Step::WakerDrop { a, l } => self.do_waker_drop(a, l),
+            Step::SpuriousWake { a, l } => self.do_spurious_wake(a, l),
         }
     }
 
@@ -573,6 +601,67 @@ impl World {
         }
         // Parked acquisitions resume through normal polling; the
         // revocations surface as Expired on the next heartbeat/poll.
+        self.reconcile(a);
+        true
+    }
+
+    fn do_steal(&mut self, a: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        let Some(held) = sess.steal_ready() else {
+            return false; // nothing published: the thief found no work
+        };
+        if let Some(name) = held {
+            let l = self.names.iter().position(|n| *n == name).expect("known") as u32;
+            self.enter(a, l);
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_migrate(&mut self, a: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        self.actors[a as usize]
+            .session
+            .as_mut()
+            .expect("alive")
+            .migrate_scan()
+    }
+
+    fn do_waker_drop(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        let name = self.names[l as usize].clone();
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        if !sess.drop_wakeup(&name) {
+            return false;
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_spurious_wake(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) {
+            return false;
+        }
+        let name = self.names[l as usize].clone();
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        // Only an *armed* name qualifies: the step is the deliberate,
+        // bounded exception to the armed-names-resolve-by-token
+        // discipline — a spurious future poll, which the protocol must
+        // absorb (host-side resolution + a dirty token, or a re-arm).
+        if !sess.is_pending(&name) || !sess.is_armed(&name) {
+            return false;
+        }
+        let r = sess.poll_now(&name);
+        if r == LockPoll::Held {
+            self.enter(a, l);
+        }
         self.reconcile(a);
         true
     }

@@ -53,6 +53,7 @@ fn prop_local_class_schedules_issue_zero_remote_verbs() {
         zombie_prob: 0.0,
         max_crashes: 0,
         manual_arm: false,
+        executor_steps: false,
         mode: SchedMode::Uniform,
     };
     for seed in seeds() {
@@ -86,6 +87,7 @@ fn prop_mixed_class_schedules_stay_exclusive() {
             zombie_prob: 0.0,
             max_crashes: 0,
             manual_arm: false,
+            executor_steps: false,
             mode: if seed % 2 == 0 {
                 SchedMode::Uniform
             } else {

@@ -1,0 +1,10 @@
+// Seeded violation: the Peterson waker block lives in home-node
+// registers and the registry marks both its words NIC-silent — a
+// signaller co-located with the block must read it with CPU ops,
+// never the NIC loopback. verb-lint must flag line 9.
+use qplock::rdma::contract::WAKER_RING;
+use qplock::rdma::{Addr, Endpoint};
+
+pub fn sneaky_signal(ep: &Endpoint, block: Addr) -> u64 {
+    ep.r_read(block.offset(WAKER_RING))
+}

@@ -25,6 +25,7 @@ fn crashy(mode: SchedMode, manual_arm: bool) -> SimConfig {
         zombie_prob: 0.5,
         max_crashes: 2,
         manual_arm,
+        executor_steps: false,
         mode,
     }
 }
@@ -110,6 +111,63 @@ fn traces_round_trip_through_the_artifact_format() {
     let r = sim::replay(&back.config, &back.steps);
     assert_eq!(r.violation, out.violation);
     assert_eq!(r.completed, out.completed);
+}
+
+#[test]
+fn executor_step_schedules_pass_all_oracles_and_cover_the_new_alphabet() {
+    // PR 7: the executor-shaped steps — single-token steals, session
+    // migration, waker drops, spurious polls of armed names — are
+    // scheduled alongside crashes, and every schedule still passes the
+    // ME/progress/lease oracles: a dropped waker falls back to the
+    // scan set and re-arms, a spurious resolution leaves only a
+    // discardable dirty token, and a thief's partial ring consumption
+    // never strands the rest of the batch.
+    let cfg = SimConfig {
+        executor_steps: true,
+        ..crashy(SchedMode::Uniform, false)
+    };
+    let (mut steals, mut migrates, mut drops, mut spurious) = (0u64, 0u64, 0u64, 0u64);
+    for seed in 0..100u64 {
+        let out = run_one(&cfg, seed);
+        assert!(
+            out.violation.is_none(),
+            "seed {seed}: {:?}",
+            out.violation
+        );
+        assert_eq!(
+            out.sweep.fenced, out.sweep.reaped,
+            "seed {seed}: repairs left dangling"
+        );
+        for s in &out.steps {
+            match s {
+                sim::Step::Steal { .. } => steals += 1,
+                sim::Step::Migrate { .. } => migrates += 1,
+                sim::Step::WakerDrop { .. } => drops += 1,
+                sim::Step::SpuriousWake { .. } => spurious += 1,
+                _ => {}
+            }
+        }
+    }
+    assert!(steals > 0, "no steal was ever scheduled");
+    assert!(migrates > 0, "no migration was ever scheduled");
+    assert!(drops > 0, "no waker drop was ever scheduled");
+    assert!(spurious > 0, "no spurious wake was ever scheduled");
+
+    // Schedules containing the new ops replay deterministically and
+    // round-trip through the artifact format.
+    let a = run_one(&cfg, 7);
+    let r = sim::replay(&cfg, &a.steps);
+    assert_eq!(r.violation, a.violation, "replay diverged");
+    assert_eq!(r.completed, a.completed, "replay diverged");
+    let tf = TraceFile {
+        config: cfg.clone(),
+        seed: 7,
+        violation: None,
+        steps: a.steps.clone(),
+    };
+    let back = TraceFile::decode(&tf.encode()).expect("own format parses");
+    assert!(back.config.executor_steps, "flag lost in the round trip");
+    assert_eq!(back.steps, a.steps, "new ops lost in the round trip");
 }
 
 #[test]

@@ -111,11 +111,51 @@ fn skip_arm_recheck_loses_a_wakeup_and_is_rediscovered() {
         zombie_prob: 0.0,
         max_crashes: 0,
         manual_arm: true,
+        executor_steps: false,
         mode: SchedMode::Uniform,
     };
     assert_tooth(
         "skip-arm-recheck",
         &test_knobs::SKIP_ARM_RECHECK,
+        &cfg,
+        2_000,
+        150,
+        "wedged",
+    );
+}
+
+#[test]
+fn skip_waker_recheck_loses_an_engaged_wakeup_and_is_rediscovered() {
+    // PR 7 defense: `arm_peterson` re-checks the Peterson win
+    // condition after publishing the waker-block registration — the
+    // engaged-class twin of `arm_wakeup`'s budget re-check. With it
+    // skipped, an arm scheduled after the other cohort's last tail
+    // reset (or victim write) parks the leader on a token nobody will
+    // ever publish — a lost wakeup the token-only drain exposes as a
+    // wedge. Two nodes put actors in both classes (a one-node world
+    // never blocks in the Peterson wait); one lock concentrates the
+    // cross-class contention; manual-arm mode makes the late arm its
+    // own schedulable step.
+    let _g = serialized();
+    let cfg = SimConfig {
+        procs: 3,
+        locks: 1,
+        nodes: 2,
+        budget: 2,
+        lease_ticks: 64,
+        ring_capacity: 8,
+        max_steps: 400,
+        drain_rounds: 3_000,
+        crash_prob: 0.0,
+        zombie_prob: 0.0,
+        max_crashes: 0,
+        manual_arm: true,
+        executor_steps: false,
+        mode: SchedMode::Uniform,
+    };
+    assert_tooth(
+        "skip-waker-recheck",
+        &test_knobs::SKIP_WAKER_RECHECK,
         &cfg,
         2_000,
         150,
@@ -146,6 +186,7 @@ fn ignore_dirty_tokens_overwrites_a_live_token_and_is_rediscovered() {
         zombie_prob: 0.0,
         max_crashes: 0,
         manual_arm: true,
+        executor_steps: false,
         mode: SchedMode::Churn,
     };
     assert_tooth(
@@ -180,6 +221,7 @@ fn skip_cs_renew_starves_a_live_holder_and_is_rediscovered() {
         zombie_prob: 0.0,
         max_crashes: 0,
         manual_arm: false,
+        executor_steps: false,
         mode: SchedMode::Pct { depth: 3 },
     };
     assert_tooth(

@@ -64,6 +64,16 @@ fn local_class_remote_verb_fixture_is_flagged_at_line_10() {
     assert!(flagged(&d, "local-silence", 10), "{d:#?}");
 }
 
+#[test]
+fn waker_block_remote_verb_fixture_is_flagged_at_line_9() {
+    // PR 7: the Peterson-waker words are declared in the registry as
+    // NIC-silent home-node registers, so the machine-checked contract
+    // extends to the new protocol surface — a raw remote verb on the
+    // waker ring word is rejected at its exact line.
+    let d = lint_fixture("waker_local_silence.rs");
+    assert!(flagged(&d, "local-silence", 9), "{d:#?}");
+}
+
 /// The dynamic half of the acceptance bar: with the seeded PR 3
 /// hazard re-enabled (a co-located passer claiming the CPU-owned ring
 /// cursor through the NIC lane), the NIC-level sanitizer must abort

@@ -263,6 +263,7 @@ fn prop_explored_schedules_complete_on_wakeups_alone() {
             // arm-vs-handoff window is explored explicitly; even seeds
             // keep the production auto-arm path.
             manual_arm: seed % 2 == 1,
+            executor_steps: false,
             mode: SchedMode::Uniform,
         };
         let out = run_one(&cfg, seed);
