@@ -1,0 +1,473 @@
+//! `hb-lint` — the ordering-contract static pass (TESTING.md Layer 5).
+//!
+//! The second zero-dependency pass over the crate sources, sharing
+//! [`super::lexer`] with `verb-lint`. Where `verb-lint` enforces *who*
+//! may touch a protocol word and through which lane, `hb-lint`
+//! enforces *in what order* the touches happen: every
+//! [`crate::rdma::contract::OrderEdge`] row carries token-level
+//! anchors ([`crate::rdma::contract::EdgeAnchor`]) naming the two
+//! sides of the edge in their required program order, and this pass
+//! checks the shipped sources still realize them. Rules:
+//!
+//! * `hb-order` — an anchor's patterns occur out of the declared
+//!   program order (e.g. the ring write before the token write the
+//!   passer reads through it).
+//! * `hb-dropped-recheck` — an anchor's registration/publication
+//!   prefix matches but its post-registration re-check pattern is
+//!   gone: the exact refactor hazard the `SKIP_*_RECHECK` mutation
+//!   teeth guard dynamically, caught here at compile-adjacent time.
+//! * `hb-edge-anchor` — an anchored function matches the anchor's
+//!   first step but is missing a later publication-side step, or (at
+//!   tree level) a declared anchor matches nowhere in its file: the
+//!   edge's side has gone missing from the sources.
+//! * `hb-relaxed-ordering` — a `store`/`load` on a declared sticky
+//!   gate flag (`wakeups`, `peterson_wakeups`) names a non-SeqCst
+//!   ordering: Dekker store→load pairs tolerate no downgrade.
+//! * `hb-unregistered-edge` — a statement writes an edge's gate word
+//!   (`desc_write`/`desc_write_sc`/`write_via`) from a function not on
+//!   the edge's sanctioned `gate_writers` list: a new arming site that
+//!   bypassed the ordering contract.
+//!
+//! Run as `cargo run --bin verb_lint -- --hb`, `qplock lint --hb`, or
+//! let CI do it. Seeded violations live under
+//! `rust/tests/fixtures/hb_lint/`; `rust/tests/hb_lint.rs` pins each
+//! rule to an exact `file:line` and asserts the shipped tree is clean.
+
+use std::fs;
+use std::io;
+use std::ops::Range;
+use std::path::Path;
+
+use super::lexer::{filter_test_regions, tokenize, TokKind, Token};
+use super::verb_lint::Diagnostic;
+use crate::rdma::contract::{self, EdgeAnchor, OrderEdge, Word};
+
+/// Orderings whose appearance in a gate-flag `store`/`load` call is a
+/// downgrade from the required SeqCst.
+const DOWNGRADES: [&str; 4] = ["Relaxed", "Acquire", "Release", "AcqRel"];
+
+/// Accessors that write a word (the gate-writer rule's trigger set).
+const WRITE_ACCESSORS: [&str; 3] = ["desc_write", "desc_write_sc", "write_via"];
+
+/// Lint one source file (already read). Fixture tests drive this
+/// directly; [`lint_tree`] adds the tree-level anchor completeness
+/// check on top.
+pub fn lint_source(file: &str, src: &str) -> Vec<Diagnostic> {
+    let toks = filter_test_regions(tokenize(src));
+    lint_tokens(file, &toks).diags
+}
+
+/// Lint every `.rs` file under `root`, recursively, in sorted order,
+/// then require every declared anchor to have matched somewhere in a
+/// file ending with its declared path suffix.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    let mut matched: Vec<(String, &'static str, &'static str)> = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = fs::read_dir(&dir)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let path = e.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                let label = path.display().to_string().replace('\\', "/");
+                let src = fs::read_to_string(&path)?;
+                let toks = filter_test_regions(tokenize(&src));
+                let lint = lint_tokens(&label, &toks);
+                diags.extend(lint.diags);
+                for (edge, func) in lint.matched {
+                    matched.push((label.clone(), edge, func));
+                }
+            }
+        }
+    }
+    for e in contract::EDGES {
+        for a in e.anchors {
+            let hit = matched
+                .iter()
+                .any(|(p, en, f)| *en == e.name && *f == a.func && p.ends_with(a.file));
+            if !hit {
+                diags.push(Diagnostic {
+                    file: a.file.to_string(),
+                    line: 0,
+                    rule: "hb-edge-anchor",
+                    msg: format!(
+                        "edge `{}`: declared anchor `{}` matched nowhere in a file \
+                         ending with `{}` — the edge's side has gone missing from \
+                         the protocol sources (update the OrderEdge row if it moved)",
+                        e.name, a.func, a.file
+                    ),
+                });
+            }
+        }
+    }
+    Ok(diags)
+}
+
+struct FileLint {
+    diags: Vec<Diagnostic>,
+    /// `(edge name, anchor func)` pairs whose first pattern matched in
+    /// this file — the tree-level completeness input.
+    matched: Vec<(&'static str, &'static str)>,
+}
+
+fn lint_tokens(file: &str, toks: &[Token]) -> FileLint {
+    let fns = functions(toks);
+    let mut diags = Vec::new();
+    let mut matched = Vec::new();
+    for e in contract::EDGES {
+        for a in e.anchors {
+            for f in fns.iter().filter(|f| f.name == a.func) {
+                check_anchor(file, e, a, f, &toks[f.body.clone()], &mut diags, &mut matched);
+            }
+        }
+        if let Some(flag) = e.host_flag {
+            rule_flag_ordering(file, toks, e.name, flag, &mut diags);
+        }
+        if let Some(gate) = e.gate {
+            rule_gate_writers(file, toks, &fns, e, gate, &mut diags);
+        }
+    }
+    diags.sort_by_key(|d| d.line);
+    FileLint { diags, matched }
+}
+
+/// One `fn` item with a body: its name, declaration line, and the
+/// token range of the body (between the braces).
+struct FnItem {
+    name: String,
+    line: u32,
+    body: Range<usize>,
+}
+
+/// Extract every function body from the stream. Bodyless trait
+/// signatures (`;` before `{` at bracket depth 0) are skipped; nested
+/// functions are found too (the outer scan runs through bodies).
+fn functions(toks: &[Token]) -> Vec<FnItem> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].is("fn") || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let Some(name) = toks.get(i + 1).filter(|t| t.kind == TokKind::Ident) else {
+            continue;
+        };
+        let mut j = i + 2;
+        let mut open = None;
+        let mut depth = 0i32;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else { continue };
+        let mut braces = 0i32;
+        let mut k = open;
+        while k < toks.len() {
+            if toks[k].is("{") {
+                braces += 1;
+            } else if toks[k].is("}") {
+                braces -= 1;
+                if braces == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        out.push(FnItem {
+            name: name.text.clone(),
+            line: name.line,
+            body: (open + 1)..k.min(toks.len()),
+        });
+    }
+    out
+}
+
+/// Expand one anchor pattern into the token texts the lexer produces
+/// (`::` arrives as two `:` tokens).
+fn pattern(p: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    for part in p.split_whitespace() {
+        if part == "::" {
+            out.push(":");
+            out.push(":");
+        } else {
+            out.push(part);
+        }
+    }
+    out
+}
+
+/// First contiguous occurrence of `pat` in `toks`: `(position, line)`.
+fn find_first(toks: &[Token], pat: &[&str]) -> Option<(usize, u32)> {
+    if pat.is_empty() || toks.len() < pat.len() {
+        return None;
+    }
+    (0..=toks.len() - pat.len())
+        .find(|&i| pat.iter().enumerate().all(|(k, p)| toks[i + k].is(p)))
+        .map(|i| (i, toks[i].line))
+}
+
+/// Check one anchor against one function body: first-occurrence
+/// positions of each pattern must be strictly ordered, and every
+/// pattern must exist. A body without the *first* pattern is not an
+/// instance of the edge (stub impls, default trait methods) and is
+/// skipped.
+fn check_anchor(
+    file: &str,
+    e: &OrderEdge,
+    a: &EdgeAnchor,
+    f: &FnItem,
+    body: &[Token],
+    diags: &mut Vec<Diagnostic>,
+    matched: &mut Vec<(&'static str, &'static str)>,
+) {
+    let pats: Vec<Vec<&str>> = a.seq.iter().map(|p| pattern(p)).collect();
+    let Some(mut prev) = find_first(body, &pats[0]) else {
+        return;
+    };
+    matched.push((e.name, a.func));
+    for (k, pat) in pats.iter().enumerate().skip(1) {
+        match find_first(body, pat) {
+            None => {
+                if k >= a.recheck_from {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: prev.1,
+                        rule: "hb-dropped-recheck",
+                        msg: format!(
+                            "edge `{}`: the registration in `{}` is not followed by \
+                             its declared re-check (`{}` not found after this line)",
+                            e.name, a.func, a.seq[k]
+                        ),
+                    });
+                } else {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: f.line,
+                        rule: "hb-edge-anchor",
+                        msg: format!(
+                            "edge `{}`: `{}` matches the anchor's first step but is \
+                             missing `{}` — the declared publication side is incomplete",
+                            e.name, a.func, a.seq[k]
+                        ),
+                    });
+                }
+                return;
+            }
+            Some(cur) => {
+                if cur.0 < prev.0 {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: cur.1,
+                        rule: "hb-order",
+                        msg: format!(
+                            "edge `{}`: `{}` appears before `{}` in `{}` — the \
+                             declared happens-before order is reversed",
+                            e.name, a.seq[k], a.seq[k - 1], a.func
+                        ),
+                    });
+                    return;
+                }
+                prev = cur;
+            }
+        }
+    }
+}
+
+/// Flag non-SeqCst orderings in `store`/`load` calls on a declared
+/// sticky gate flag, anywhere in the file.
+fn rule_flag_ordering(
+    file: &str,
+    toks: &[Token],
+    edge: &'static str,
+    flag: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut i = 0;
+    while i + 3 < toks.len() {
+        if toks[i].is(flag)
+            && toks[i + 1].is(".")
+            && (toks[i + 2].is("store") || toks[i + 2].is("load"))
+            && toks[i + 3].is("(")
+        {
+            let mut depth = 0;
+            let mut k = i + 3;
+            while k < toks.len() {
+                if toks[k].is("(") {
+                    depth += 1;
+                } else if toks[k].is(")") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if DOWNGRADES.iter().any(|d| toks[k].is(d)) {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: toks[k].line,
+                        rule: "hb-relaxed-ordering",
+                        msg: format!(
+                            "edge `{edge}`: `{flag}.{}` uses `{}` — the sticky gate \
+                             flag is one side of a Dekker store→load pair and must \
+                             stay SeqCst",
+                            toks[i + 2].text, toks[k].text
+                        ),
+                    });
+                }
+                k += 1;
+            }
+            i = k;
+        }
+        i += 1;
+    }
+}
+
+/// Flag statements that write an edge's gate word from a function not
+/// on the edge's sanctioned writer list.
+fn rule_gate_writers(
+    file: &str,
+    toks: &[Token],
+    fns: &[FnItem],
+    e: &OrderEdge,
+    gate: Word,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let variant = format!("{gate:?}");
+    let pat: [&str; 4] = ["Word", ":", ":", &variant];
+    for f in fns {
+        if e.gate_writers.contains(&f.name.as_str()) {
+            continue;
+        }
+        let body = &toks[f.body.clone()];
+        let mut start = 0;
+        for idx in 0..=body.len() {
+            let boundary = idx == body.len()
+                || body[idx].is(";")
+                || body[idx].is("{")
+                || body[idx].is("}");
+            if !boundary {
+                continue;
+            }
+            let span = &body[start..idx];
+            if let Some((_, line)) = find_first(span, &pat) {
+                if span
+                    .iter()
+                    .any(|t| WRITE_ACCESSORS.iter().any(|w| t.is(w)))
+                {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line,
+                        rule: "hb-unregistered-edge",
+                        msg: format!(
+                            "edge `{}`: `{}` writes gate word `Word::{variant}` but is \
+                             not a declared gate writer ({:?}) — register the new \
+                             arming site on the OrderEdge row",
+                            e.name, f.name, e.gate_writers
+                        ),
+                    });
+                }
+            }
+            start = idx + 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn has(diags: &[Diagnostic], rule: &str, line: u32) -> bool {
+        diags.iter().any(|d| d.rule == rule && d.line == line)
+    }
+
+    #[test]
+    fn shipped_shapes_lint_clean() {
+        // A faithful miniature of the defended arm path: token write,
+        // ring write, SC gate store, budget re-check read.
+        let src = "fn arm_wakeup(&mut self) {\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeToken, t);\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeRing, r);\n\
+                   self.shared.wakeups.store(true, SeqCst);\n\
+                   if contract::desc_read_sc(ep, Role::Session, d, Word::DescBudget) != WAITING {\n\
+                   }\n\
+                   }";
+        assert_eq!(lint_source("locks/qplock.rs", src), vec![]);
+    }
+
+    #[test]
+    fn dropped_recheck_is_flagged_at_the_registration_line() {
+        let src = "fn arm_wakeup(&mut self) {\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeToken, t);\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeRing, r);\n\
+                   self.shared.wakeups.store(true, SeqCst);\n\
+                   }";
+        let diags = lint_source("locks/qplock.rs", src);
+        assert!(has(&diags, "hb-dropped-recheck", 4), "{diags:?}");
+    }
+
+    #[test]
+    fn reversed_publish_order_is_flagged() {
+        let src = "fn arm_wakeup(&mut self) {\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeRing, r);\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeToken, t);\n\
+                   self.shared.wakeups.store(true, SeqCst);\n\
+                   let _ = contract::desc_read_sc(ep, Role::Session, d, Word::DescBudget);\n\
+                   }";
+        let diags = lint_source("locks/qplock.rs", src);
+        assert!(has(&diags, "hb-order", 2), "{diags:?}");
+    }
+
+    #[test]
+    fn relaxed_gate_flag_is_flagged() {
+        let src = "fn arm_wakeup(&mut self) {\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeToken, t);\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeRing, r);\n\
+                   self.shared.wakeups.store(true, Ordering::Relaxed);\n\
+                   let _ = contract::desc_read_sc(ep, Role::Session, d, Word::DescBudget);\n\
+                   }";
+        let diags = lint_source("locks/qplock.rs", src);
+        assert!(has(&diags, "hb-relaxed-ordering", 4), "{diags:?}");
+    }
+
+    #[test]
+    fn unsanctioned_gate_writer_is_flagged() {
+        let src = "fn rogue_disarm(&mut self) {\n\
+                   contract::desc_write_sc(ep, Role::Session, d, Word::DescWakeRing, 0);\n\
+                   }";
+        let diags = lint_source("locks/qplock.rs", src);
+        assert!(has(&diags, "hb-unregistered-edge", 2), "{diags:?}");
+    }
+
+    #[test]
+    fn stub_impls_without_the_first_pattern_are_skipped() {
+        let src = "fn arm_wakeup(&mut self, _reg: WakeupReg) -> ArmOutcome {\n\
+                   ArmOutcome::Unsupported\n\
+                   }";
+        assert_eq!(lint_source("locks/other_lock.rs", src), vec![]);
+    }
+
+    #[test]
+    fn bodyless_trait_signatures_are_skipped() {
+        let src = "trait T { fn arm_wakeup(&mut self, reg: WakeupReg) -> ArmOutcome; }";
+        assert_eq!(lint_source("locks/mod.rs", src), vec![]);
+    }
+
+    #[test]
+    fn pattern_expands_path_separators() {
+        assert_eq!(
+            pattern("Word :: DescBudget"),
+            vec!["Word", ":", ":", "DescBudget"]
+        );
+        assert_eq!(pattern("wakeups . store"), vec!["wakeups", ".", "store"]);
+    }
+}

@@ -75,15 +75,18 @@ pub fn tokenize(src: &str) -> Vec<Token> {
             '\'' => i = skip_char_or_lifetime(&b, i),
             'r' | 'b' if starts_string_literal(&b, i) => {
                 // br"..", b"..", r".." , r#".."# — position on the
-                // quote machinery past the prefix letters.
+                // quote machinery past the prefix letters. Any `r`
+                // prefix means raw: no escape processing, even with
+                // zero hashes (`r"\"` is a complete literal).
+                let raw = b[i] == 'r' || b[i + 1] == 'r';
                 let mut j = i + 1;
                 if b[i] == 'b' && j < b.len() && b[j] == 'r' {
                     j += 1;
                 }
-                if b[j] == '"' {
-                    i = skip_string(&b, j, &mut line);
-                } else {
+                if raw {
                     i = skip_raw_string(&b, j, &mut line);
+                } else {
+                    i = skip_string(&b, j, &mut line);
                 }
             }
             c if c.is_ascii_alphabetic() || c == '_' => {
@@ -291,6 +294,23 @@ mod tests {
         let t = texts(src);
         assert!(t.contains(&"a".to_string()), "{t:?}");
         assert!(!t.iter().any(|x| x.contains("cas_lane")), "{t:?}");
+    }
+
+    /// Zero-hash raw strings must not be escape-processed: in
+    /// `r"\"`, the backslash is a literal character and the quote
+    /// closes the string. The old path routed `r"…"` through the
+    /// plain-string scanner, which ate the closing quote as an escape
+    /// and leaked the following code as tokens.
+    #[test]
+    fn zero_hash_raw_string_with_trailing_backslash() {
+        let src = "a r\"\\\" b \"cas_lane\" c";
+        assert_eq!(texts(src), ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn nested_hash_raw_strings() {
+        let src = "a r##\"quote \"# cas_lane \"## b br#\" faa_lane \"# c";
+        assert_eq!(texts(src), ["a", "b", "c"]);
     }
 
     #[test]

@@ -1,12 +1,21 @@
 //! Static analysis over the crate's own sources.
 //!
-//! Home of `verb-lint`, the zero-dependency static pass that enforces
-//! the word-ownership registry in [`crate::rdma::contract`]: protocol
-//! words are only touched through contract-tagged accessors, word
-//! offsets match the registry, RMW lanes are never mixed, and
-//! `Class::Local` code paths stay NIC-silent. Run it as
-//! `cargo run --bin verb_lint`, `qplock lint`, or let CI do it.
+//! Home of two zero-dependency static passes sharing one lexer:
+//!
+//! * `verb-lint` enforces the word-ownership registry in
+//!   [`crate::rdma::contract`]: protocol words are only touched
+//!   through contract-tagged accessors, word offsets match the
+//!   registry, RMW lanes are never mixed, and `Class::Local` code
+//!   paths stay NIC-silent. Run as `cargo run --bin verb_lint` or
+//!   `qplock lint`.
+//! * `hb-lint` enforces the ordering contracts
+//!   ([`crate::rdma::contract::EDGES`], TESTING.md Layer 5): each
+//!   declared happens-before edge's two sides exist in the protocol
+//!   sources in program order, gate flags stay SeqCst, and gate words
+//!   are only armed from sanctioned sites. Run as
+//!   `cargo run --bin verb_lint -- --hb` or `qplock lint --hb`.
 
+pub mod hb_lint;
 pub mod lexer;
 pub mod verb_lint;
 

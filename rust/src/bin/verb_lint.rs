@@ -1,33 +1,46 @@
-//! `verb-lint` — standalone entry point for the static verb-contract
-//! pass (see `qplock::analysis`). Lints the crate sources (or a tree
-//! given as the first argument) against the word-ownership registry;
-//! exits non-zero on any finding, printing `file:line: [rule] msg`
-//! diagnostics to stderr.
+//! `verb-lint` — standalone entry point for the static contract
+//! passes (see `qplock::analysis`). By default runs the verb-contract
+//! pass (word-ownership registry); with `--hb` runs the
+//! ordering-contract pass instead (declared happens-before edges,
+//! TESTING.md Layer 5). Lints the crate sources (or a tree given as
+//! the first non-flag argument); exits non-zero on any finding,
+//! printing `file:line: [rule] msg` diagnostics to stderr.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use qplock::analysis::lint_tree;
+use qplock::analysis::{hb_lint, lint_tree};
 
 fn main() -> ExitCode {
-    let root = match std::env::args().nth(1) {
-        Some(p) => PathBuf::from(p),
-        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"),
+    let mut hb = false;
+    let mut root = None;
+    for arg in std::env::args().skip(1) {
+        if arg == "--hb" {
+            hb = true;
+        } else {
+            root = Some(PathBuf::from(arg));
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+    let (pass, result) = if hb {
+        ("hb-lint", hb_lint::lint_tree(&root))
+    } else {
+        ("verb-lint", lint_tree(&root))
     };
-    match lint_tree(&root) {
+    match result {
         Err(e) => {
-            eprintln!("verb-lint: cannot read {}: {e}", root.display());
+            eprintln!("{pass}: cannot read {}: {e}", root.display());
             ExitCode::FAILURE
         }
         Ok(diags) if diags.is_empty() => {
-            println!("verb-lint: clean ({})", root.display());
+            println!("{pass}: clean ({})", root.display());
             ExitCode::SUCCESS
         }
         Ok(diags) => {
             for d in &diags {
                 eprintln!("{d}");
             }
-            eprintln!("verb-lint: {} violation(s)", diags.len());
+            eprintln!("{pass}: {} violation(s)", diags.len());
             ExitCode::FAILURE
         }
     }

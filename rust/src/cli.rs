@@ -177,6 +177,9 @@ SUBCOMMANDS:
             --manual-arm       wakeup arming as its own scheduled step
             --executor-steps   schedule the executor-shaped steps too
                                (steal, migrate, waker-drop, spurious)
+            --race-detect      vector-clock race detector: fail any
+                               cross-actor conflict no declared
+                               OrderEdge orders (also QPLOCK_RACE_DETECT=1)
             --artifact-dir <d> where failing traces go (default
                                target/sim-artifacts)
             --replay <file>    re-execute a recorded artifact instead
@@ -190,6 +193,10 @@ SUBCOMMANDS:
           Class::Local paths must stay NIC-silent (exit non-zero on
           any finding; same pass as the verb_lint binary)
             --root <dir>       source tree to lint (default this crate's src/)
+            --hb               run the ordering-contract pass instead:
+                               every declared OrderEdge's two sides in
+                               program order, SeqCst gate flags, and
+                               sanctioned gate writers (Layer 5)
   mc      model-check a spec (paper Appendix A)
             --model <name>     qplock|peterson|naive|spin (default qplock)
             --procs <n>        processes (default 3)

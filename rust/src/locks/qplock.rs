@@ -35,6 +35,30 @@
 //!                                                       (on its own node)
 //! ```
 //!
+//! Every word also belongs to at least one declared **ordering
+//! contract** ([`contract::EDGES`], TESTING.md Layer 5) naming its
+//! cross-actor publication pairing; the `hb-lint` static pass and the
+//! sim race detector both enforce the membership below (rendered by
+//! [`contract::edge_table`]):
+//!
+//! ```text
+//! budget          : arm-budget-window, enqueue-tail-link
+//! next            : enqueue-tail-link
+//! wake-ring       : arm-budget-window, gate-wakeups
+//! wake-token      : arm-budget-window
+//! lease           : lease-arbitration
+//! victim          : peterson-waker-block
+//! tail[LOCAL]     : peterson-waker-block, enqueue-tail-link
+//! tail[REMOTE]    : peterson-waker-block, enqueue-tail-link
+//! waker-ring      : peterson-waker-block, gate-peterson-wakeups
+//! waker-token     : peterson-waker-block
+//! ring-cpu-cursor : ring-publish
+//! ring-nic-cursor : ring-publish
+//! ring-cpu-slot   : ring-publish
+//! ring-nic-slot   : ring-publish
+//! lease-slot-table: lease-arbitration
+//! ```
+//!
 //! `budget = u64::MAX` encodes the paper's −1 ("enqueued, not passed").
 //! The two wake words are the optional **ready-list registration**: a
 //! waiter parked in `WaitBudget` may advertise its session's
@@ -2224,5 +2248,20 @@ mod tests {
             src.contains(&rendered),
             "module doc word table drifted from the registry; expected `{rendered}`"
         );
+    }
+
+    /// S2 drift guard, edge half: the module-doc edge-membership table
+    /// must match [`contract::edge_table`] line for line — a new word
+    /// or a new [`contract::OrderEdge`] row must be reflected here.
+    #[test]
+    fn module_doc_edge_table_matches_edges() {
+        let src = include_str!("qplock.rs");
+        for line in contract::edge_table().lines() {
+            assert!(
+                src.contains(&format!("//! {line}")),
+                "module doc edge table drifted from contract::EDGES; \
+                 expected `//! {line}`"
+            );
+        }
     }
 }

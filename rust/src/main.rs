@@ -493,6 +493,8 @@ fn cmd_sim(args: &Args) {
         max_crashes: args.get_num("max-crashes", 2),
         manual_arm: args.flag("manual-arm"),
         executor_steps: args.flag("executor-steps"),
+        race_detect: args.flag("race-detect")
+            || std::env::var_os("QPLOCK_RACE_DETECT").is_some_and(|v| v != "0"),
         mode,
     };
     let schedules: u32 = args.get_num("schedules", 200);
@@ -563,19 +565,24 @@ fn cmd_bench(args: &Args) {
 fn cmd_lint(args: &Args) {
     let default_root = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
     let root = std::path::PathBuf::from(args.get_or("root", default_root));
-    match qplock::analysis::lint_tree(&root) {
+    let (pass, result) = if args.flag("hb") {
+        ("hb-lint", qplock::analysis::hb_lint::lint_tree(&root))
+    } else {
+        ("verb-lint", qplock::analysis::lint_tree(&root))
+    };
+    match result {
         Err(e) => {
-            eprintln!("verb-lint: cannot read {}: {e}", root.display());
+            eprintln!("{pass}: cannot read {}: {e}", root.display());
             std::process::exit(2);
         }
         Ok(diags) if diags.is_empty() => {
-            println!("verb-lint: clean ({})", root.display());
+            println!("{pass}: clean ({})", root.display());
         }
         Ok(diags) => {
             for d in &diags {
                 eprintln!("{d}");
             }
-            eprintln!("verb-lint: {} violation(s)", diags.len());
+            eprintln!("{pass}: {} violation(s)", diags.len());
             std::process::exit(1);
         }
     }

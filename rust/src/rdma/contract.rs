@@ -29,6 +29,18 @@
 //!   offending word, its lane history, and the schedule step. Always
 //!   on in debug builds; enabled in release via `QPLOCK_SANITIZE=1`
 //!   (abort reports go to `QPLOCK_SANITIZE_REPORT_DIR` when set).
+//! * [`EDGES`] declares the **ordering contracts** (TESTING.md
+//!   Layer 5): every cross-actor publication pairing the protocol's
+//!   safety rests on — the arm/budget window, the Peterson-waker
+//!   block, the lease arbitration, the enqueue tail→link order, both
+//!   sticky gate flags, and the ring publish — as one [`OrderEdge`]
+//!   row each (publisher word+op → observer word+op, required fence
+//!   class, re-check obligation). Two enforcement layers read the
+//!   rows: the `hb-lint` static pass ([`crate::analysis::hb_lint`])
+//!   checks each edge's sides exist in program order in the protocol
+//!   sources, and the vector-clock race detector below (sim-only,
+//!   `QPLOCK_RACE_DETECT=1` / `SimConfig::race_detect`) reports any
+//!   conflicting access pair no declared edge orders.
 //!
 //! To declare a **new protocol word** when extending the protocol:
 //! add a [`Word`] variant, append its [`WordContract`] to [`REGISTRY`]
@@ -36,11 +48,14 @@
 //! call sites need one, and register its instances with the monitor at
 //! allocation time ([`Monitor::register`] or a helper like
 //! [`register_desc`]). The lint and the drift tests then enforce it
-//! everywhere.
+//! everywhere. A new word must also join (or add) an [`OrderEdge`]
+//! row naming its publication pairing — a word no edge covers makes
+//! the race detector treat *every* unordered cross-actor conflict on
+//! it as a race (TESTING.md Layer 5 has the new-edge checklist).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
 
 use super::addr::Addr;
@@ -484,6 +499,374 @@ pub fn desc_layout() -> String {
     names.join(" | ")
 }
 
+// ---- ordering contracts: declared happens-before edges ----------------------
+//
+// TESTING.md Layer 5. Every cross-actor publication pairing the
+// protocol's safety rests on is declared exactly once below. Two
+// consumers read the rows: the `hb-lint` static pass
+// (`crate::analysis::hb_lint`) checks each edge's sides exist in the
+// protocol sources in the declared program order, and the vector-clock
+// race detector (end of this file) checks *executed* sim schedules
+// against the same declarations.
+
+/// Names for the declared happens-before edges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Edge {
+    /// PR 3 arm/budget window: the armer publishes its ring
+    /// registration (token, then ring, then the sticky gate), then
+    /// must re-read the budget; the passer writes the handoff budget
+    /// before reading the gate — the Dekker store→load pair.
+    ArmBudget,
+    /// PR 7 Peterson-waker block: the engaged leader publishes its
+    /// waker registration, then must re-read the other cohort's tail
+    /// and the victim; every resolving event signals the block only
+    /// after its own resolving write.
+    ArmPeterson,
+    /// PR 4 lease arbitration: claim, renew, release, and fence all
+    /// commit through a CAS on the lease word — the CAS outcome *is*
+    /// the ordering.
+    LeaseArbitration,
+    /// MCS enqueue: the tail CAS publishes the descriptor (budget
+    /// pre-set to WAITING) before the predecessor-link write the
+    /// passer chases.
+    EnqueueTailLink,
+    /// The sticky host-side `wakeups` SC gate: armer's store must be
+    /// SeqCst-ordered against the passer's load.
+    GateWakeups,
+    /// The sticky host-side `peterson_wakeups` SC gate, same shape.
+    GatePetersonWakeups,
+    /// Wakeup-ring publication: slot ownership is FAA-arbitrated on
+    /// the per-lane cursor before the slot write lands.
+    RingPublish,
+}
+
+/// The ordering mechanism an edge's two sides rely on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FenceClass {
+    /// Dekker-style store→load closure: both sides must stay SeqCst —
+    /// `hb-lint` rejects any downgrade on the paired gate flag.
+    SeqCst,
+    /// Release-write → Acquire-read publication (the descriptor
+    /// accessors' `write_desc`/`read_desc` pair).
+    ReleaseAcquire,
+    /// Ordered by winning an RMW arbitration (CAS/FAA) on the word
+    /// itself; no fence obligation beyond the RMW lane contract.
+    RmwArbitrated,
+}
+
+/// One program-order witness for an edge side, keyed by function name.
+///
+/// `seq` entries are whitespace-separated token texts matched as
+/// contiguous runs against the lexed (comment/string/test-stripped)
+/// source, in order of first occurrence; `::` in a pattern matches the
+/// two `:` tokens the lexer produces. A function is an *instance* of
+/// the anchor iff its body contains the first pattern — stub trait
+/// impls and default methods are skipped. Entries from `recheck_from`
+/// on are the post-registration re-check obligation; a matched prefix
+/// with a missing re-check is the `hb-dropped-recheck` diagnostic.
+pub struct EdgeAnchor {
+    /// Path suffix of the file the anchor must match in.
+    pub file: &'static str,
+    /// Function the witness lives in.
+    pub func: &'static str,
+    /// Token patterns, in required program order.
+    pub seq: &'static [&'static str],
+    /// First index in `seq` that belongs to the re-check side
+    /// (`seq.len()` when the side has no re-check obligation).
+    pub recheck_from: usize,
+}
+
+/// One declared happens-before edge: a publisher-side access that must
+/// become visible before an observer-side access, plus everything the
+/// two enforcement layers need (gate word, re-check words, sanctioned
+/// gate writers, paired host flag, member words, static anchors).
+pub struct OrderEdge {
+    pub edge: Edge,
+    /// Stable name — race reports and lint diagnostics cite it.
+    pub name: &'static str,
+    /// Publisher side: the word+op whose effect must become visible.
+    pub publisher: (Word, AccessKind),
+    /// Observer side: the word+op that must see the publication.
+    pub observer: (Word, AccessKind),
+    /// Required fence/ordering class.
+    pub fence: FenceClass,
+    /// Registration ("gate") word: a *nonzero* write to it opens the
+    /// observer's race window and must be followed — within the same
+    /// schedule step — by a read of one of `recheck`. Zero writes
+    /// (init, disarm, consume) carry no obligation.
+    pub gate: Option<Word>,
+    /// Words whose re-read discharges the gate obligation.
+    pub recheck: &'static [Word],
+    /// Functions allowed to write the gate word at all (`hb-lint`'s
+    /// `hb-unregistered-edge` rule).
+    pub gate_writers: &'static [&'static str],
+    /// Paired sticky host-side SC flag (`wakeups` /
+    /// `peterson_wakeups`); `hb-lint` rejects ordering downgrades on
+    /// its store/load sites.
+    pub host_flag: Option<&'static str>,
+    /// Every registry word participating in this edge. Membership is
+    /// total over [`REGISTRY`] (tested): the race detector treats a
+    /// conflicting unordered access pair on a *non*-member word as a
+    /// missing edge.
+    pub words: &'static [Word],
+    /// Static program-order witnesses for both sides.
+    pub anchors: &'static [EdgeAnchor],
+}
+
+/// The ordering-contract registry: the happens-before edges the
+/// protocol's safety argument names (TESTING.md Layer 5 walks each).
+pub const EDGES: &[OrderEdge] = &[
+    OrderEdge {
+        edge: Edge::ArmBudget,
+        name: "arm-budget-window",
+        publisher: (Word::DescBudget, AccessKind::Write),
+        observer: (Word::DescBudget, AccessKind::Read),
+        fence: FenceClass::SeqCst,
+        gate: Some(Word::DescWakeRing),
+        recheck: &[Word::DescBudget],
+        gate_writers: &["arm_wakeup", "step_submit", "sweep_slot"],
+        host_flag: None,
+        words: &[Word::DescBudget, Word::DescWakeRing, Word::DescWakeToken],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "arm_wakeup",
+                seq: &[
+                    "Word :: DescWakeToken",
+                    "Word :: DescWakeRing",
+                    "wakeups . store",
+                    "Word :: DescBudget",
+                ],
+                recheck_from: 3,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "q_unlock",
+                seq: &["Word :: DescBudget", "wakeups . load"],
+                recheck_from: 2,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "relay",
+                seq: &["Word :: DescBudget", "wakeups . load"],
+                recheck_from: 2,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "signal_successor",
+                seq: &["Word :: DescWakeRing", "Word :: DescWakeToken"],
+                recheck_from: 2,
+            },
+        ],
+    },
+    OrderEdge {
+        edge: Edge::ArmPeterson,
+        name: "peterson-waker-block",
+        publisher: (Word::Victim, AccessKind::Write),
+        observer: (Word::Victim, AccessKind::Read),
+        fence: FenceClass::SeqCst,
+        gate: Some(Word::WakerRing),
+        recheck: &[Word::Victim, Word::TailLocal, Word::TailRemote],
+        gate_writers: &["arm_peterson", "clear_waker"],
+        host_flag: None,
+        words: &[
+            Word::WakerRing,
+            Word::WakerToken,
+            Word::Victim,
+            Word::TailLocal,
+            Word::TailRemote,
+        ],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "arm_peterson",
+                seq: &[
+                    "Word :: WakerToken",
+                    "Word :: WakerRing",
+                    "peterson_wakeups . store",
+                    "Word :: Victim",
+                ],
+                recheck_from: 3,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "signal_peterson",
+                seq: &[
+                    "peterson_wakeups . load",
+                    "Word :: WakerRing",
+                    "Word :: WakerToken",
+                ],
+                recheck_from: 3,
+            },
+        ],
+    },
+    OrderEdge {
+        edge: Edge::LeaseArbitration,
+        name: "lease-arbitration",
+        publisher: (Word::DescLease, AccessKind::Rmw),
+        observer: (Word::DescLease, AccessKind::Rmw),
+        fence: FenceClass::RmwArbitrated,
+        gate: None,
+        recheck: &[],
+        gate_writers: &[],
+        host_flag: None,
+        words: &[Word::DescLease, Word::LeaseSlotTable],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "lease_update",
+                seq: &["Word :: DescLease", "desc_cas"],
+                recheck_from: 2,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "lease_release_claim",
+                seq: &["Word :: DescLease", "desc_cas"],
+                recheck_from: 2,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "sweep_slot",
+                seq: &["Word :: DescLease", "desc_cas"],
+                recheck_from: 2,
+            },
+        ],
+    },
+    OrderEdge {
+        edge: Edge::EnqueueTailLink,
+        name: "enqueue-tail-link",
+        publisher: (Word::DescNext, AccessKind::Write),
+        observer: (Word::DescNext, AccessKind::Read),
+        fence: FenceClass::ReleaseAcquire,
+        gate: None,
+        recheck: &[],
+        gate_writers: &[],
+        host_flag: None,
+        words: &[
+            Word::TailLocal,
+            Word::TailRemote,
+            Word::DescNext,
+            Word::DescBudget,
+        ],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "step_enqueue",
+                seq: &["rmw_cas", "WAITING", "Word :: DescNext"],
+                recheck_from: 3,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "q_unlock",
+                seq: &["Word :: DescNext"],
+                recheck_from: 1,
+            },
+        ],
+    },
+    OrderEdge {
+        edge: Edge::GateWakeups,
+        name: "gate-wakeups",
+        publisher: (Word::DescWakeRing, AccessKind::Write),
+        observer: (Word::DescWakeRing, AccessKind::Read),
+        fence: FenceClass::SeqCst,
+        gate: None,
+        recheck: &[],
+        gate_writers: &[],
+        host_flag: Some("wakeups"),
+        words: &[Word::DescWakeRing],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "arm_wakeup",
+                seq: &["wakeups . store"],
+                recheck_from: 1,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "q_unlock",
+                seq: &["wakeups . load"],
+                recheck_from: 1,
+            },
+        ],
+    },
+    OrderEdge {
+        edge: Edge::GatePetersonWakeups,
+        name: "gate-peterson-wakeups",
+        publisher: (Word::WakerRing, AccessKind::Write),
+        observer: (Word::WakerRing, AccessKind::Read),
+        fence: FenceClass::SeqCst,
+        gate: None,
+        recheck: &[],
+        gate_writers: &[],
+        host_flag: Some("peterson_wakeups"),
+        words: &[Word::WakerRing],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "arm_peterson",
+                seq: &["peterson_wakeups . store"],
+                recheck_from: 1,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "signal_peterson",
+                seq: &["peterson_wakeups . load"],
+                recheck_from: 1,
+            },
+        ],
+    },
+    OrderEdge {
+        edge: Edge::RingPublish,
+        name: "ring-publish",
+        publisher: (Word::RingCpuSlot, AccessKind::Write),
+        observer: (Word::RingCpuSlot, AccessKind::Read),
+        fence: FenceClass::RmwArbitrated,
+        gate: None,
+        recheck: &[],
+        gate_writers: &[],
+        host_flag: None,
+        words: &[
+            Word::RingCpuCursor,
+            Word::RingNicCursor,
+            Word::RingCpuSlot,
+            Word::RingNicSlot,
+        ],
+        anchors: &[EdgeAnchor {
+            file: "rdma/contract.rs",
+            func: "ring_publish",
+            seq: &["RING_CPU_CURSOR", "RING_NIC_CURSOR"],
+            recheck_from: 2,
+        }],
+    },
+];
+
+/// Names of every declared edge the given word participates in, in
+/// declaration order. Empty means the word has no ordering contract —
+/// the race detector then flags *any* unordered cross-actor conflict
+/// on it as a missing edge.
+pub fn edges_of(w: Word) -> Vec<&'static str> {
+    EDGES
+        .iter()
+        .filter(|e| e.words.contains(&w))
+        .map(|e| e.name)
+        .collect()
+}
+
+/// The edge whose gate (registration) word is `w`, if any.
+pub fn gate_edge(w: Word) -> Option<&'static OrderEdge> {
+    EDGES.iter().find(|e| e.gate == Some(w))
+}
+
+/// Canonical word → edge-membership table — the qplock module-doc
+/// edge table is drift-tested against this rendering.
+pub fn edge_table() -> String {
+    REGISTRY
+        .iter()
+        .map(|c| format!("{:<16}: {}", c.name, edges_of(c.word).join(", ")))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 // ---- contract-tagged accessors ----------------------------------------------
 //
 // The only module from which protocol verbs are issued (enforced by
@@ -533,9 +916,18 @@ fn gate(ep: &Endpoint, w: Word, role: Role, kind: AccessKind) {
     }
 }
 
+/// Race-detector tap: every accessor reports the access it is about to
+/// issue. A no-op unless the domain monitor's vector-clock detector is
+/// on (`written` is the stored value for writes, the operand for RMWs,
+/// 0 for reads — the detector's gate rule keys off nonzero writes).
+fn observe(ep: &Endpoint, w: Word, a: Addr, kind: AccessKind, written: u64) {
+    ep.domain().contract_monitor().on_access(a, w, kind, written);
+}
+
 /// Contract-tagged read via the given path.
 pub fn read_via(ep: &Endpoint, role: Role, w: Word, a: Addr, via: Via) -> u64 {
     gate(ep, w, role, AccessKind::Read);
+    observe(ep, w, a, AccessKind::Read, 0);
     match via {
         Via::Cpu => ep.read(a),
         Via::Verb => ep.r_read(a),
@@ -546,6 +938,7 @@ pub fn read_via(ep: &Endpoint, role: Role, w: Word, a: Addr, via: Via) -> u64 {
 /// Contract-tagged write via the given path.
 pub fn write_via(ep: &Endpoint, role: Role, w: Word, a: Addr, v: u64, via: Via) {
     gate(ep, w, role, AccessKind::Write);
+    observe(ep, w, a, AccessKind::Write, v);
     match via {
         Via::Cpu => ep.write(a, v),
         Via::Verb => ep.r_write(a, v),
@@ -556,26 +949,34 @@ pub fn write_via(ep: &Endpoint, role: Role, w: Word, a: Addr, v: u64, via: Via) 
 /// Local Acquire read of a descriptor word (co-located callers only).
 pub fn desc_read(ep: &Endpoint, role: Role, desc: Addr, w: Word) -> u64 {
     gate(ep, w, role, AccessKind::Read);
-    ep.read_desc(desc_addr(desc, w))
+    let a = desc_addr(desc, w);
+    observe(ep, w, a, AccessKind::Read, 0);
+    ep.read_desc(a)
 }
 
 /// Local Release write of a descriptor word (co-located callers only).
 pub fn desc_write(ep: &Endpoint, role: Role, desc: Addr, w: Word, v: u64) {
     gate(ep, w, role, AccessKind::Write);
-    ep.write_desc(desc_addr(desc, w), v);
+    let a = desc_addr(desc, w);
+    observe(ep, w, a, AccessKind::Write, v);
+    ep.write_desc(a, v);
 }
 
 /// Local SeqCst read of a descriptor word (protocol registers keep
 /// the paper's SC assumption).
 pub fn desc_read_sc(ep: &Endpoint, role: Role, desc: Addr, w: Word) -> u64 {
     gate(ep, w, role, AccessKind::Read);
-    ep.read(desc_addr(desc, w))
+    let a = desc_addr(desc, w);
+    observe(ep, w, a, AccessKind::Read, 0);
+    ep.read(a)
 }
 
 /// Local SeqCst write of a descriptor word.
 pub fn desc_write_sc(ep: &Endpoint, role: Role, desc: Addr, w: Word, v: u64) {
     gate(ep, w, role, AccessKind::Write);
-    ep.write(desc_addr(desc, w), v);
+    let a = desc_addr(desc, w);
+    observe(ep, w, a, AccessKind::Write, v);
+    ep.write(a, v);
 }
 
 /// CAS a descriptor word through its owning lane.
@@ -586,6 +987,7 @@ pub fn desc_cas(ep: &Endpoint, role: Role, desc: Addr, w: Word, expected: u64, s
 /// Compare-and-swap through the word's registry-owned RMW lane.
 pub fn rmw_cas(ep: &Endpoint, role: Role, w: Word, a: Addr, expected: u64, swap: u64) -> u64 {
     gate(ep, w, role, AccessKind::Rmw);
+    observe(ep, w, a, AccessKind::Rmw, swap);
     match w.contract().lane {
         Cpu => ep.cas(a, expected, swap),
         Nic => ep.r_cas(a, expected, swap),
@@ -599,6 +1001,7 @@ pub fn rmw_cas(ep: &Endpoint, role: Role, w: Word, a: Addr, expected: u64, swap:
 /// Fetch-and-add through the word's registry-owned RMW lane.
 pub fn rmw_faa(ep: &Endpoint, role: Role, w: Word, a: Addr, add: u64) -> u64 {
     gate(ep, w, role, AccessKind::Rmw);
+    observe(ep, w, a, AccessKind::Rmw, add);
     match w.contract().lane {
         Cpu => ep.faa(a, add),
         Nic => ep.r_faa(a, add),
@@ -633,7 +1036,9 @@ pub fn ring_slot_read(
         RmwLane::Nic => Word::RingNicSlot,
     };
     gate(ep, w, role, AccessKind::Read);
-    ep.read(ring_slot_addr(hdr, lane, lane_slots, claim))
+    let a = ring_slot_addr(hdr, lane, lane_slots, claim);
+    observe(ep, w, a, AccessKind::Read, 0);
+    ep.read(a)
 }
 
 /// Consumer-side local clear of a ring slot.
@@ -650,7 +1055,9 @@ pub fn ring_slot_clear(
         RmwLane::Nic => Word::RingNicSlot,
     };
     gate(ep, w, role, AccessKind::Write);
-    ep.write(ring_slot_addr(hdr, lane, lane_slots, claim), 0);
+    let a = ring_slot_addr(hdr, lane, lane_slots, claim);
+    observe(ep, w, a, AccessKind::Write, 0);
+    ep.write(a, 0);
 }
 
 /// Publish `token` into the ring at `hdr`: claim a slot through the
@@ -675,20 +1082,22 @@ pub fn ring_publish(ep: &Endpoint, role: Role, hdr: Addr, lane_slots: u64, token
                 );
                 return;
             }
-            let claimed = ep.faa(hdr.offset(RING_CPU_CURSOR), 1);
-            ep.write(
-                ring_slot_addr(hdr, RmwLane::Cpu, lane_slots, claimed),
-                token + 1,
-            );
+            let cursor = hdr.offset(RING_CPU_CURSOR);
+            observe(ep, Word::RingCpuCursor, cursor, AccessKind::Rmw, 1);
+            let claimed = ep.faa(cursor, 1);
+            let slot = ring_slot_addr(hdr, RmwLane::Cpu, lane_slots, claimed);
+            observe(ep, Word::RingCpuSlot, slot, AccessKind::Write, token + 1);
+            ep.write(slot, token + 1);
         }
         Via::Verb => {
             gate(ep, Word::RingNicCursor, role, AccessKind::Rmw);
             gate(ep, Word::RingNicSlot, role, AccessKind::Write);
-            let claimed = ep.r_faa(hdr.offset(RING_NIC_CURSOR), 1);
-            ep.r_write(
-                ring_slot_addr(hdr, RmwLane::Nic, lane_slots, claimed),
-                token + 1,
-            );
+            let cursor = hdr.offset(RING_NIC_CURSOR);
+            observe(ep, Word::RingNicCursor, cursor, AccessKind::Rmw, 1);
+            let claimed = ep.r_faa(cursor, 1);
+            let slot = ring_slot_addr(hdr, RmwLane::Nic, lane_slots, claimed);
+            observe(ep, Word::RingNicSlot, slot, AccessKind::Write, token + 1);
+            ep.r_write(slot, token + 1);
         }
         Via::Best => unreachable!("ring publication is lane-dispatched, never locality-dispatched"),
     }
@@ -704,6 +1113,264 @@ pub mod test_knobs {
     /// CPU-owned ring cursor through the NIC lane (rFAA), racing the
     /// CPU-lane FAA non-atomically under `NicSerialized`.
     pub static MISLANE_RING_CURSOR: AtomicBool = AtomicBool::new(false);
+}
+
+// ---- the vector-clock race detector (sim-only; TESTING.md Layer 5) ----------
+//
+// Per-protocol-word vector clocks, advanced on every contract-accessor
+// access and every executed RMW verb, checked against [`EDGES`]. Two
+// rules: (a) a *nonzero* write to an edge's gate word opens a re-check
+// obligation the armer must discharge — by reading one of the edge's
+// re-check words — before its schedule step ends; (b) a conflicting
+// unordered cross-actor pair on a word no edge covers is a missing
+// edge. Reports surface through the sim world as `order-race`
+// violations: shrinkable and replayable like every other sim failure.
+
+/// A vector clock: per-actor logical components.
+#[derive(Clone, Debug, Default)]
+struct VClock(HashMap<u32, u64>);
+
+impl VClock {
+    fn tick(&mut self, actor: u32) {
+        *self.0.entry(actor).or_insert(0) += 1;
+    }
+
+    fn join(&mut self, other: &VClock) {
+        for (&a, &v) in &other.0 {
+            let e = self.0.entry(a).or_insert(0);
+            if *e < v {
+                *e = v;
+            }
+        }
+    }
+
+    /// Component-wise `self ≤ other` — the happened-before test.
+    fn le(&self, other: &VClock) -> bool {
+        self.0
+            .iter()
+            .all(|(a, &v)| other.0.get(a).copied().unwrap_or(0) >= v)
+    }
+}
+
+/// One clocked access to a tracked word.
+#[derive(Clone, Debug)]
+struct RaceAccess {
+    actor: u32,
+    step: u64,
+    clock: VClock,
+}
+
+/// Per-address clock state.
+struct WordClocks {
+    word: Word,
+    last_write: Option<RaceAccess>,
+    /// Latest read per actor (a write conflicts with unordered reads).
+    reads: HashMap<u32, RaceAccess>,
+}
+
+/// An open re-check obligation: a nonzero write to an edge's gate word
+/// not yet followed by a read of one of the edge's re-check words.
+struct Obligation {
+    edge: &'static str,
+    gate: &'static str,
+    armer: u32,
+    step: u64,
+    recheck: &'static [Word],
+    /// Earliest unordered publisher-side write, for attribution.
+    conflict: Option<(u32, u64)>,
+}
+
+/// A race the detector found, surfaced by the sim world as an
+/// `order-race` violation.
+#[derive(Clone, Debug)]
+pub struct RaceReport {
+    /// The violated edge's name, or `"(no declared edge)"` when a
+    /// conflicting pair landed on a word no [`OrderEdge`] covers.
+    pub edge: &'static str,
+    /// Canonical name of the word at the center of the conflict.
+    pub word: &'static str,
+    /// `(actor, schedule step)` of the access that broke the edge.
+    pub armer: (u32, u64),
+    /// The other side's `(actor, step)`, when a conflicting access had
+    /// already landed.
+    pub other: Option<(u32, u64)>,
+    /// Human-readable account (also written to the report dir).
+    pub detail: String,
+}
+
+#[derive(Default)]
+struct RaceState {
+    actor: Option<u32>,
+    clocks: HashMap<u32, VClock>,
+    words: HashMap<u64, WordClocks>,
+    obligations: Vec<Obligation>,
+    pending: Option<RaceReport>,
+}
+
+impl RaceState {
+    fn record(&mut self, a: Addr, w: Word, kind: AccessKind, written: u64, step: u64) {
+        let Some(actor) = self.actor else { return };
+        let member = !edges_of(w).is_empty();
+        // Tick this actor's own component; reads and RMWs of
+        // edge-member words join the last writer's clock — the
+        // declared edges are exactly the synchronization the protocol
+        // claims, so whatever stays concurrent afterwards is a race.
+        let clock = {
+            let c = self.clocks.entry(actor).or_default();
+            c.tick(actor);
+            if kind != AccessKind::Write && member {
+                if let Some(wr) = self.words.get(&a.to_bits()).and_then(|s| s.last_write.as_ref())
+                {
+                    c.join(&wr.clock);
+                }
+            }
+            c.clone()
+        };
+
+        // Rule (b): a conflicting, unordered cross-actor pair on a
+        // word no declared edge covers — EDGES is missing a row.
+        if !member && self.pending.is_none() {
+            if let Some(state) = self.words.get(&a.to_bits()) {
+                let mut other: Option<(u32, u64)> = None;
+                let mut consider = |acc: &RaceAccess| {
+                    if acc.actor != actor && !acc.clock.le(&clock) {
+                        let cand = (acc.actor, acc.step);
+                        if other.map_or(true, |o| (cand.1, cand.0) < (o.1, o.0)) {
+                            other = Some(cand);
+                        }
+                    }
+                };
+                if let Some(wr) = &state.last_write {
+                    consider(wr);
+                }
+                if kind != AccessKind::Read {
+                    for r in state.reads.values() {
+                        consider(r);
+                    }
+                }
+                if let Some((oa, os)) = other {
+                    let name = w.contract().name;
+                    self.pending = Some(RaceReport {
+                        edge: "(no declared edge)",
+                        word: name,
+                        armer: (actor, step),
+                        other: Some((oa, os)),
+                        detail: format!(
+                            "order-race: conflicting unordered accesses to word \
+                             `{name}` — actor {actor} {kind:?} at step {step} vs \
+                             actor {oa} at step {os}, and no declared OrderEdge \
+                             covers this word; declare its publication pairing in \
+                             contract::EDGES (TESTING.md Layer 5)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        let snap = RaceAccess { actor, step, clock: clock.clone() };
+        let state = self.words.entry(a.to_bits()).or_insert_with(|| WordClocks {
+            word: w,
+            last_write: None,
+            reads: HashMap::new(),
+        });
+        match kind {
+            AccessKind::Read => {
+                state.reads.insert(actor, snap);
+            }
+            AccessKind::Write | AccessKind::Rmw => {
+                state.last_write = Some(snap);
+            }
+        }
+
+        // Rule (a): a nonzero write to an edge's gate word opens a
+        // re-check obligation. Zero writes (init, disarm, consume)
+        // are exempt — they close windows rather than open them.
+        if kind == AccessKind::Write && written != 0 {
+            if let Some(e) = gate_edge(w) {
+                let conflict = self.unordered_recheck_write(e, actor, &clock);
+                self.obligations.push(Obligation {
+                    edge: e.name,
+                    gate: w.contract().name,
+                    armer: actor,
+                    step,
+                    recheck: e.recheck,
+                    conflict,
+                });
+            }
+        }
+        // A subsequent read of a re-check word discharges it.
+        if kind != AccessKind::Write {
+            self.obligations
+                .retain(|o| !(o.armer == actor && o.recheck.contains(&w)));
+        }
+    }
+
+    /// Earliest publisher-side write to one of `e`'s re-check words
+    /// that is not ordered before `clock` (deterministic: min by
+    /// `(step, actor)` so replays attribute identically).
+    fn unordered_recheck_write(
+        &self,
+        e: &OrderEdge,
+        actor: u32,
+        clock: &VClock,
+    ) -> Option<(u32, u64)> {
+        let mut best: Option<(u32, u64)> = None;
+        for s in self.words.values() {
+            if !e.recheck.contains(&s.word) {
+                continue;
+            }
+            if let Some(wr) = &s.last_write {
+                if wr.actor != actor && !wr.clock.le(clock) {
+                    let cand = (wr.actor, wr.step);
+                    if best.map_or(true, |b| (cand.1, cand.0) < (b.1, b.0)) {
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Close the current actor's step: the first still-open obligation
+    /// becomes the pending race report. No obligation outlives a step.
+    fn end_of_step(&mut self) {
+        if let Some(actor) = self.actor {
+            if self.pending.is_none() {
+                if let Some(o) = self.obligations.iter().find(|o| o.armer == actor) {
+                    let rechecks = o
+                        .recheck
+                        .iter()
+                        .map(|w| w.contract().name)
+                        .collect::<Vec<_>>()
+                        .join(", ");
+                    let tail = match o.conflict {
+                        Some((oa, os)) => format!(
+                            "a publisher-side write by actor {oa} at step {os} is not \
+                             ordered before the registration — `{}` is the missing \
+                             happens-before edge",
+                            o.edge
+                        ),
+                        None => "no conflicting publication had landed yet, but the \
+                                 registration alone breaks the declared edge"
+                            .to_string(),
+                    };
+                    self.pending = Some(RaceReport {
+                        edge: o.edge,
+                        word: o.gate,
+                        armer: (o.armer, o.step),
+                        other: o.conflict,
+                        detail: format!(
+                            "order-race: edge `{}` violated — actor {} registered in \
+                             gate word `{}` at step {} and ended the step without \
+                             re-reading any of its re-check words ({}); {}",
+                            o.edge, o.armer, o.gate, o.step, rechecks, tail
+                        ),
+                    });
+                }
+            }
+        }
+        self.obligations.clear();
+    }
 }
 
 // ---- dynamic contract monitor -----------------------------------------------
@@ -731,6 +1398,10 @@ pub struct Monitor {
     step: AtomicU64,
     violations: AtomicU64,
     words: Mutex<HashMap<u64, Registration>>,
+    /// Vector-clock race detector (TESTING.md Layer 5): off unless the
+    /// sim world or `QPLOCK_RACE_DETECT=1` turns it on.
+    race_on: AtomicBool,
+    race: Mutex<RaceState>,
 }
 
 impl Monitor {
@@ -738,12 +1409,15 @@ impl Monitor {
     /// opt-in via `QPLOCK_SANITIZE=1` in release; abort reports are
     /// written to `QPLOCK_SANITIZE_REPORT_DIR` when set.
     pub fn from_env() -> Monitor {
+        let race = matches!(std::env::var_os("QPLOCK_RACE_DETECT"), Some(v) if v != "0");
         Monitor {
             enabled: cfg!(debug_assertions) || std::env::var_os("QPLOCK_SANITIZE").is_some(),
             report_dir: std::env::var_os("QPLOCK_SANITIZE_REPORT_DIR").map(PathBuf::from),
             step: AtomicU64::new(0),
             violations: AtomicU64::new(0),
             words: Mutex::new(HashMap::new()),
+            race_on: AtomicBool::new(race),
+            race: Mutex::new(RaceState::default()),
         }
     }
 
@@ -755,6 +1429,8 @@ impl Monitor {
             step: AtomicU64::new(0),
             violations: AtomicU64::new(0),
             words: Mutex::new(HashMap::new()),
+            race_on: AtomicBool::new(false),
+            race: Mutex::new(RaceState::default()),
         }
     }
 
@@ -769,9 +1445,19 @@ impl Monitor {
     }
 
     /// Register one word instance. `local_silent` marks instances the
-    /// local class must keep off the NIC entirely. Re-registering an
-    /// address overwrites (domains are wiped and reused by benches).
+    /// local class must keep off the NIC entirely.
+    ///
+    /// Re-registering an address *replaces* the stale entry wholesale —
+    /// word, silence class, and lane history. Descriptors are re-minted
+    /// at the same address after a sweeper reap (and bench domains are
+    /// wiped and reused), so the previous incarnation's state must not
+    /// survive into the new lock's: its lane history would pollute
+    /// abort reports and its race-detector clocks would pair a dead
+    /// client's accesses with the re-minted lock's.
     pub fn register(&self, a: Addr, w: Word, local_silent: bool) {
+        if self.race_on.load(Relaxed) {
+            self.race.lock().unwrap().words.remove(&a.to_bits());
+        }
         if !self.enabled {
             return;
         }
@@ -809,6 +1495,7 @@ impl Monitor {
 
     /// Hook: a CPU RMW (local CAS/FAA) executed on `a`.
     pub fn on_cpu_rmw(&self, a: Addr) {
+        self.race_verb_tick();
         if !self.enabled {
             return;
         }
@@ -828,6 +1515,7 @@ impl Monitor {
     /// Hook: a remote verb admitted at a NIC targeting `a`. `rmw` for
     /// rCAS/rFAA; `loopback` when the issuer is co-located.
     pub fn on_nic_op(&self, a: Addr, rmw: bool, loopback: bool) {
+        self.race_verb_tick();
         if !self.enabled {
             return;
         }
@@ -870,6 +1558,86 @@ impl Monitor {
             std::fs::write(dir.join(format!("contract-violation-{n}.txt")), report).ok();
         }
         panic!("verb-contract sanitizer: {report}");
+    }
+
+    // -- the vector-clock race detector's monitor surface --
+
+    /// Whether the vector-clock race detector is recording.
+    pub fn race_detect_enabled(&self) -> bool {
+        self.race_on.load(Relaxed)
+    }
+
+    /// Turn the vector-clock race detector on (the sim world does this
+    /// when `SimConfig::race_detect` is set; `QPLOCK_RACE_DETECT=1`
+    /// does it from the environment).
+    pub fn enable_race_detect(&self) {
+        self.race_on.store(true, Relaxed);
+    }
+
+    /// Attribute subsequent accesses to `actor`; `None` detaches —
+    /// untracked phases (drain bookkeeping, lease ticks) record
+    /// nothing.
+    pub fn set_actor(&self, actor: Option<u32>) {
+        if !self.race_on.load(Relaxed) {
+            return;
+        }
+        self.race.lock().unwrap().actor = actor;
+    }
+
+    /// Hook: a contract accessor is about to issue `kind` on word `w`
+    /// at `a` (`written` = stored value / RMW operand; 0 for reads).
+    pub fn on_access(&self, a: Addr, w: Word, kind: AccessKind, written: u64) {
+        if !self.race_on.load(Relaxed) {
+            return;
+        }
+        let step = self.step.load(Relaxed);
+        self.race.lock().unwrap().record(a, w, kind, written, step);
+    }
+
+    /// Close the current actor's step: a still-open re-check
+    /// obligation becomes a pending race report.
+    pub fn end_of_actor_step(&self) {
+        if !self.race_on.load(Relaxed) {
+            return;
+        }
+        self.race.lock().unwrap().end_of_step();
+    }
+
+    /// Consume the pending race report, if any (written to the report
+    /// dir on the way out, like sanitizer aborts).
+    pub fn take_race(&self) -> Option<RaceReport> {
+        if !self.race_on.load(Relaxed) {
+            return None;
+        }
+        let report = self.race.lock().unwrap().pending.take();
+        if let Some(r) = &report {
+            let n = self.violations.fetch_add(1, Relaxed);
+            if let Some(dir) = &self.report_dir {
+                std::fs::create_dir_all(dir).ok();
+                std::fs::write(dir.join(format!("race-report-{n}.txt")), &r.detail).ok();
+            }
+        }
+        report
+    }
+
+    /// Advance the acting actor's clock for an executed RMW verb
+    /// (hooked from the CPU RMW path and `Nic::admit` alongside the
+    /// lane checks).
+    fn race_verb_tick(&self) {
+        if !self.race_on.load(Relaxed) {
+            return;
+        }
+        let mut st = self.race.lock().unwrap();
+        if let Some(actor) = st.actor {
+            st.clocks.entry(actor).or_default().tick(actor);
+        }
+    }
+
+    /// Whether the detector still tracks clock state for `a` —
+    /// re-registration must purge it (test scaffolding).
+    #[cfg(test)]
+    fn race_tracks(&self, a: Addr) -> bool {
+        self.race.lock().unwrap().words.contains_key(&a.to_bits())
     }
 }
 
@@ -1154,5 +1922,180 @@ mod tests {
         assert_eq!(s.remote_write, 1);
         assert_eq!(d.peek(hdr.offset(RING_NIC_CURSOR)), 1);
         assert_eq!(d.peek(ring_slot_addr(hdr, RmwLane::Nic, 10, 0)), 7);
+    }
+
+    // -- ordering contracts (TESTING.md Layer 5) --
+
+    /// Edge membership is total: a word outside every edge would make
+    /// the race detector's missing-edge rule fire on legitimate
+    /// protocol traffic, so declaring membership is part of adding a
+    /// word (the module-doc checklist).
+    #[test]
+    fn every_word_has_edge_membership() {
+        for c in REGISTRY {
+            assert!(
+                !edges_of(c.word).is_empty(),
+                "word `{}` participates in no declared OrderEdge",
+                c.name
+            );
+        }
+    }
+
+    #[test]
+    fn edges_are_internally_consistent() {
+        for e in EDGES {
+            assert!(e.words.contains(&e.publisher.0), "{}: publisher word", e.name);
+            assert!(e.words.contains(&e.observer.0), "{}: observer word", e.name);
+            if let Some(g) = e.gate {
+                assert!(e.words.contains(&g), "{}: gate word membership", e.name);
+                assert!(
+                    !e.recheck.is_empty(),
+                    "{}: a gated edge needs re-check words",
+                    e.name
+                );
+                assert!(
+                    !e.gate_writers.is_empty(),
+                    "{}: a gated edge needs sanctioned writers",
+                    e.name
+                );
+                for r in e.recheck {
+                    assert!(e.words.contains(r), "{}: re-check word membership", e.name);
+                }
+            }
+            assert!(!e.anchors.is_empty(), "{}: needs static anchors", e.name);
+            for a in e.anchors {
+                assert!(!a.seq.is_empty(), "{}: empty anchor seq", e.name);
+                assert!(
+                    a.recheck_from <= a.seq.len(),
+                    "{}: recheck_from out of range",
+                    e.name
+                );
+            }
+        }
+        // The two gated edges are the two arm re-check teeth.
+        assert_eq!(gate_edge(Word::DescWakeRing).unwrap().name, "arm-budget-window");
+        assert_eq!(gate_edge(Word::WakerRing).unwrap().name, "peterson-waker-block");
+        assert!(gate_edge(Word::DescBudget).is_none());
+    }
+
+    #[test]
+    fn edge_table_renders_membership_per_word() {
+        let table = edge_table();
+        assert_eq!(table.lines().count(), REGISTRY.len());
+        assert!(
+            table.contains("budget          : arm-budget-window, enqueue-tail-link"),
+            "{table}"
+        );
+        assert!(table.contains("lease           : lease-arbitration"), "{table}");
+    }
+
+    // -- the vector-clock race detector --
+
+    #[test]
+    fn race_detector_flags_a_gate_write_without_recheck() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        let m = d.contract_monitor();
+        m.enable_race_detect();
+        m.set_step(7);
+        // The passer's handoff budget write lands first, unordered
+        // with everything the armer will do.
+        m.set_actor(Some(2));
+        desc_write_sc(&ep, Role::Passer, desc, Word::DescBudget, 3);
+        m.end_of_actor_step();
+        assert!(m.take_race().is_none());
+        // The armer registers (token, then the nonzero ring write)
+        // and never re-reads the budget — the SKIP_ARM_RECHECK shape.
+        m.set_actor(Some(1));
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeToken, 5);
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeRing, 9);
+        m.end_of_actor_step();
+        let r = m.take_race().expect("missing re-check must be reported");
+        assert_eq!(r.edge, "arm-budget-window");
+        assert_eq!(r.word, "wake-ring");
+        assert_eq!(r.armer, (1, 7));
+        assert_eq!(r.other, Some((2, 7)), "conflict must name the passer's write");
+        assert!(r.detail.contains("arm-budget-window"), "{}", r.detail);
+        // Consumed: no double report.
+        assert!(m.take_race().is_none());
+    }
+
+    #[test]
+    fn race_detector_accepts_a_rechecked_arm() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        let m = d.contract_monitor();
+        m.enable_race_detect();
+        m.set_actor(Some(2));
+        desc_write_sc(&ep, Role::Passer, desc, Word::DescBudget, 3);
+        m.end_of_actor_step();
+        m.set_actor(Some(1));
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeToken, 5);
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeRing, 9);
+        // The defended arm path: re-read the budget inside the step.
+        let _ = desc_read_sc(&ep, Role::Session, desc, Word::DescBudget);
+        m.end_of_actor_step();
+        assert!(m.take_race().is_none(), "a re-checked arm is race-free");
+    }
+
+    #[test]
+    fn race_detector_exempts_zero_gate_writes() {
+        // Init/disarm/consume writes store 0: they close windows
+        // rather than open them, so no obligation.
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        let m = d.contract_monitor();
+        m.enable_race_detect();
+        m.set_actor(Some(1));
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeRing, 0);
+        m.end_of_actor_step();
+        assert!(m.take_race().is_none());
+    }
+
+    /// A read of the publisher's word joins clocks: the same dropped
+    /// re-check still violates the edge (rule (a) is program-order,
+    /// not luck-of-the-schedule), but the attribution shows no
+    /// unordered conflict.
+    #[test]
+    fn joined_reads_order_the_publisher_before_the_armer() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        let m = d.contract_monitor();
+        m.enable_race_detect();
+        m.set_actor(Some(2));
+        desc_write_sc(&ep, Role::Passer, desc, Word::DescBudget, 3);
+        m.end_of_actor_step();
+        m.set_actor(Some(1));
+        // Reading the budget *before* arming joins the passer's clock…
+        let _ = desc_read_sc(&ep, Role::Session, desc, Word::DescBudget);
+        // …but does not discharge an obligation opened afterwards.
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeToken, 5);
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeRing, 9);
+        m.end_of_actor_step();
+        let r = m.take_race().expect("pre-arm read is not a re-check");
+        assert_eq!(r.edge, "arm-budget-window");
+        assert_eq!(r.other, None, "the joined write is ordered, not a conflict");
+    }
+
+    /// S2 regression shape: a re-minted descriptor re-registers the
+    /// same address; the detector's clock state for the dead
+    /// incarnation must be purged with the sanitizer entry.
+    #[test]
+    fn reregistration_purges_race_detector_state() {
+        let d = RdmaDomain::new(1, 256, DomainConfig::counted());
+        let ep = d.endpoint(0);
+        let desc = ep.alloc(DESC_WORDS);
+        let m = d.contract_monitor();
+        m.enable_race_detect();
+        m.set_actor(Some(1));
+        desc_write_sc(&ep, Role::Session, desc, Word::DescWakeToken, 5);
+        let a = desc_addr(desc, Word::DescWakeToken);
+        assert!(m.race_tracks(a));
+        m.register(a, Word::DescWakeToken, false);
+        assert!(!m.race_tracks(a), "re-registration must purge clock state");
     }
 }

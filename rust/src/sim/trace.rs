@@ -44,7 +44,7 @@ impl TraceFile {
              \"seed\":{},\"violation\":\"{}\",\"config\":{{\"procs\":{},\"locks\":{},\
              \"nodes\":{},\"budget\":{},\"lease\":{},\"ring\":{},\"max_steps\":{},\
              \"drain_rounds\":{},\"crash_prob\":{},\"zombie_prob\":{},\"max_crashes\":{},\
-             \"manual_arm\":{},\"exec_steps\":{},\"mode\":\"{}\",\"pct_depth\":{}}}}}\n",
+             \"manual_arm\":{},\"exec_steps\":{},\"race\":{},\"mode\":\"{}\",\"pct_depth\":{}}}}}\n",
             self.seed,
             self.violation.as_deref().unwrap_or("none"),
             c.procs,
@@ -60,6 +60,7 @@ impl TraceFile {
             c.max_crashes,
             c.manual_arm,
             c.executor_steps,
+            c.race_detect,
             mode,
             depth,
         );
@@ -101,6 +102,9 @@ impl TraceFile {
             max_crashes: need(header, "max_crashes")? as u32,
             manual_arm: header.contains("\"manual_arm\":true"),
             executor_steps: header.contains("\"exec_steps\":true"),
+            // Absent in pre-Layer-5 artifacts: they replay without the
+            // detector, exactly as they always did.
+            race_detect: header.contains("\"race\":true"),
             mode,
         };
         let violation = field_str(header, "violation").filter(|v| v.as_str() != "none");
@@ -222,6 +226,7 @@ mod tests {
             crash_prob: 0.25,
             manual_arm: true,
             executor_steps: true,
+            race_detect: true,
             mode: SchedMode::Pct { depth: 3 },
             ..SimConfig::default()
         };
@@ -252,6 +257,7 @@ mod tests {
         assert_eq!(back.config.lease_ticks, tf.config.lease_ticks);
         assert!(back.config.manual_arm);
         assert!(back.config.executor_steps);
+        assert!(back.config.race_detect);
         assert_eq!(back.config.mode, SchedMode::Pct { depth: 3 });
         assert!((back.config.crash_prob - 0.25).abs() < 1e-12);
     }
@@ -268,6 +274,7 @@ mod tests {
         assert_eq!(back.violation, None);
         assert!(!back.config.manual_arm);
         assert!(!back.config.executor_steps);
+        assert!(!back.config.race_detect);
         assert_eq!(back.config.mode, SchedMode::Uniform);
     }
 

@@ -64,6 +64,15 @@ pub struct SimConfig {
     /// Off by default so pre-existing seeds replay the exact schedules
     /// they always produced; replay applies the steps regardless.
     pub executor_steps: bool,
+    /// Run the vector-clock race detector (TESTING.md Layer 5): every
+    /// protocol-word access is attributed to the scheduled actor, and
+    /// a cross-actor conflict no declared
+    /// [`crate::rdma::contract::OrderEdge`] orders — or a gate
+    /// registration whose declared re-check never happened — fails the
+    /// run as [`Violation::OrderRace`]. Off by default (clean runs pay
+    /// nothing); also switched on by `QPLOCK_RACE_DETECT=1` via the
+    /// CLI.
+    pub race_detect: bool,
     /// Scheduler flavor (recorded for reproducibility; replay ignores
     /// it — the steps are already chosen).
     pub mode: super::SchedMode,
@@ -85,6 +94,7 @@ impl Default for SimConfig {
             max_crashes: 2,
             manual_arm: false,
             executor_steps: false,
+            race_detect: false,
             mode: super::SchedMode::Uniform,
         }
     }
@@ -162,6 +172,21 @@ pub enum Violation {
     Wedged { pending: u32, armed: u32 },
     /// Quiescence reached but repairs dangle (`fenced != reaped`).
     UnrepairedFence { fenced: u64, reaped: u64 },
+    /// The vector-clock race detector found a cross-actor conflict on
+    /// a protocol word that no declared
+    /// [`crate::rdma::contract::OrderEdge`] orders, or a gate
+    /// registration whose declared re-check obligation was never
+    /// discharged.
+    OrderRace {
+        /// The violated edge's name (`"(no declared edge)"` when the
+        /// word belongs to no edge at all).
+        edge: &'static str,
+        /// Protocol word the conflict is on.
+        word: &'static str,
+        /// Full report: both actors' schedule positions and the
+        /// discharged-vs-missing re-check words.
+        detail: String,
+    },
 }
 
 impl Violation {
@@ -172,6 +197,7 @@ impl Violation {
             Violation::MutualExclusion { .. } => "mutual-exclusion",
             Violation::Wedged { .. } => "wedged",
             Violation::UnrepairedFence { .. } => "unrepaired-fence",
+            Violation::OrderRace { .. } => "order-race",
         }
     }
 }
@@ -243,6 +269,9 @@ impl World {
         assert!(cfg.procs >= 1 && cfg.locks >= 1 && cfg.nodes >= 1);
         assert!(cfg.lease_ticks >= 8, "a tick (≤3) must not cross a term");
         let domain = RdmaDomain::new(cfg.nodes, 1 << 16, DomainConfig::counted());
+        if cfg.race_detect {
+            domain.contract_monitor().enable_race_detect();
+        }
         let svc = Arc::new(
             LockService::with_shards(&domain, "qplock", cfg.budget, 1)
                 .with_default_max_procs(cfg.procs)
@@ -349,9 +378,51 @@ impl World {
         // Stamp the schedule position into the verb-contract monitor so
         // a sanitizer abort mid-step names the exact scheduled step.
         self.domain.contract_monitor().set_step(self.applied as u64);
+        if self.cfg.race_detect {
+            self.domain.contract_monitor().set_actor(Self::step_actor(&self.cfg, step));
+        }
         let acted = self.apply_inner(step);
+        if self.cfg.race_detect {
+            let mon = self.domain.contract_monitor();
+            mon.end_of_actor_step();
+            if let Some(r) = mon.take_race() {
+                if self.violation.is_none() {
+                    self.violation = Some(Violation::OrderRace {
+                        edge: r.edge,
+                        word: r.word,
+                        detail: r.detail,
+                    });
+                }
+            }
+        }
         self.applied += 1;
         acted
+    }
+
+    /// Which detector actor a step's accesses belong to: the step's
+    /// session actor, the sweeper (actor id `procs` — its own clock),
+    /// or nobody for clock ticks (every live actor renews inside one
+    /// tick, so per-actor attribution would lie; renewal RMWs go
+    /// through the lease-arbitration edge's CAS discipline regardless).
+    fn step_actor(cfg: &SimConfig, step: &Step) -> Option<u32> {
+        match *step {
+            Step::Submit { a, .. }
+            | Step::Poll { a, .. }
+            | Step::Arm { a, .. }
+            | Step::Ready { a }
+            | Step::Release { a, .. }
+            | Step::Cancel { a, .. }
+            | Step::Hold { a }
+            | Step::Kill { a }
+            | Step::Stall { a }
+            | Step::Wake { a }
+            | Step::Steal { a }
+            | Step::Migrate { a }
+            | Step::WakerDrop { a, .. }
+            | Step::SpuriousWake { a, .. } => Some(a),
+            Step::Sweep => Some(cfg.procs),
+            Step::Tick { .. } => None,
+        }
     }
 
     fn apply_inner(&mut self, step: &Step) -> bool {
@@ -674,6 +745,12 @@ impl World {
     /// `drain_rounds` is a [`Violation::Wedged`]; converging with
     /// dangling repairs is [`Violation::UnrepairedFence`].
     pub fn drain(&mut self) {
+        // The drain is the oracle's cooperative wind-down, not part of
+        // the adversarial schedule: its accesses are unattributed so
+        // the detector does not charge them to a stale actor.
+        if self.cfg.race_detect {
+            self.domain.contract_monitor().set_actor(None);
+        }
         for _ in 0..self.cfg.drain_rounds {
             if self.violation.is_some() {
                 return;

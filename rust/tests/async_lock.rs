@@ -54,6 +54,7 @@ fn prop_local_class_schedules_issue_zero_remote_verbs() {
         max_crashes: 0,
         manual_arm: false,
         executor_steps: false,
+        race_detect: false,
         mode: SchedMode::Uniform,
     };
     for seed in seeds() {
@@ -88,6 +89,7 @@ fn prop_mixed_class_schedules_stay_exclusive() {
             max_crashes: 0,
             manual_arm: false,
             executor_steps: false,
+            race_detect: false,
             mode: if seed % 2 == 0 {
                 SchedMode::Uniform
             } else {

@@ -1,0 +1,11 @@
+//! Seeded `hb-lint` violation: the arm path publishes its token and
+//! ring and opens the sticky gate, but the post-registration budget
+//! re-check is gone — the `SKIP_ARM_RECHECK` hazard committed to
+//! source. `hb-dropped-recheck` pins the gate-open line.
+
+fn arm_wakeup(&mut self) -> ArmOutcome {
+    contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeToken, t);
+    contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeRing, r);
+    self.shared.wakeups.store(true, SeqCst);
+    ArmOutcome::Armed
+}

@@ -1,0 +1,14 @@
+//! Seeded `hb-lint` violation: the sticky gate flag's Dekker store is
+//! downgraded from SeqCst — compiles clean, loses wakeups under
+//! store-load reordering. `hb-relaxed-ordering` pins the downgraded
+//! ordering token's line.
+
+fn arm_wakeup(&mut self) -> ArmOutcome {
+    contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeToken, t);
+    contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeRing, r);
+    self.shared.wakeups.store(true, Ordering::Relaxed);
+    if contract::desc_read_sc(&self.ep, Role::Session, self.desc, Word::DescBudget) != WAITING {
+        return ArmOutcome::AlreadyReady;
+    }
+    ArmOutcome::Armed
+}

@@ -1,0 +1,13 @@
+//! Seeded `hb-lint` violation: ring registration before the token
+//! write — a passer can read the ring, follow it, and publish a stale
+//! token. `hb-order` pins the early ring write's line.
+
+fn arm_wakeup(&mut self) -> ArmOutcome {
+    contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeRing, r);
+    contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeToken, t);
+    self.shared.wakeups.store(true, SeqCst);
+    if contract::desc_read_sc(&self.ep, Role::Session, self.desc, Word::DescBudget) != WAITING {
+        return ArmOutcome::AlreadyReady;
+    }
+    ArmOutcome::Armed
+}

@@ -1,0 +1,7 @@
+//! Seeded `hb-lint` violation: a new disarm path writes the
+//! arm-budget-window gate word without joining the edge's declared
+//! `gate_writers` set. `hb-unregistered-edge` pins the write's line.
+
+fn rogue_disarm(&mut self) {
+    contract::desc_write_sc(&self.ep, Role::Session, self.desc, Word::DescWakeRing, 0);
+}

@@ -336,6 +336,49 @@ fn crashed_session_churn_reclaims_pid_slots_16x_capacity() {
 }
 
 #[test]
+fn reminted_descriptor_reregisters_cleanly_after_reap() {
+    // contract::Monitor regression (ISSUE 8 satellite): a sweeper reap
+    // retires a crashed session's descriptor, and the next session
+    // minted from the pool re-registers the *same address* for its
+    // re-minted lock words. Re-registration must replace the stale
+    // entry wholesale — word, silence class, lane history, and the
+    // race detector's per-word clocks — not abort on the duplicate or
+    // leak the dead lifetime's state into the new one. Crash-churn
+    // with the sanitizer on (debug default) and the race detector
+    // enabled: re-minted sessions must keep acquiring and the detector
+    // must stay silent.
+    let (cluster, svc) = lease_service();
+    let mon = cluster.domain.contract_monitor();
+    mon.enable_race_detect();
+    svc.create_lock("rr", "qplock", 0, 2, 8).unwrap(); // capacity 2
+    for round in 0..8u64 {
+        mon.set_step(round);
+        mon.set_actor(Some((round % 2) as u32));
+        let mut sess = svc.session((round % 2) as u16);
+        assert_eq!(
+            sess.submit("rr").unwrap(),
+            LockPoll::Held,
+            "round {round}: capacity eroded — a re-registration was refused"
+        );
+        sess.crash();
+        mon.end_of_actor_step();
+        let mut passes = 0;
+        while svc.orphaned_slots() > 0 {
+            let now = cluster.domain.advance_lease_clock(2 * TICKS);
+            svc.sweep_leases(now);
+            passes += 1;
+            assert!(passes < 64, "round {round}: orphaned slot never reclaimed");
+        }
+    }
+    assert!(
+        mon.take_race().is_none(),
+        "stale registration state leaked a race report across lifetimes"
+    );
+    let mut fresh = svc.session(0);
+    fresh.with_lock("rr", || {}).unwrap();
+}
+
+#[test]
 fn random_crash_schedules_preserve_safety_and_progress() {
     // Property sweep: small fault-injected runs across seeds — mutual
     // exclusion, survivor progress, and complete repair, every time.

@@ -26,6 +26,7 @@ fn crashy(mode: SchedMode, manual_arm: bool) -> SimConfig {
         max_crashes: 2,
         manual_arm,
         executor_steps: false,
+        race_detect: false,
         mode,
     }
 }

@@ -37,7 +37,7 @@ fn assert_tooth(
     budget: u32,
     defended_budget: u32,
     kind: &str,
-) {
+) -> sim::ExploreReport {
     let defended = explore(cfg, defended_budget, 1, None);
     assert!(
         defended.violation.is_none(),
@@ -86,6 +86,7 @@ fn assert_tooth(
         "{label}: defended replay of the counterexample still fails: {:?}",
         healed.violation
     );
+    report
 }
 
 #[test]
@@ -112,6 +113,7 @@ fn skip_arm_recheck_loses_a_wakeup_and_is_rediscovered() {
         max_crashes: 0,
         manual_arm: true,
         executor_steps: false,
+        race_detect: false,
         mode: SchedMode::Uniform,
     };
     assert_tooth(
@@ -151,6 +153,7 @@ fn skip_waker_recheck_loses_an_engaged_wakeup_and_is_rediscovered() {
         max_crashes: 0,
         manual_arm: true,
         executor_steps: false,
+        race_detect: false,
         mode: SchedMode::Uniform,
     };
     assert_tooth(
@@ -161,6 +164,89 @@ fn skip_waker_recheck_loses_an_engaged_wakeup_and_is_rediscovered() {
         150,
         "wedged",
     );
+}
+
+/// ISSUE 8 acceptance: the vector-clock race detector reports the
+/// `SKIP_ARM_RECHECK` mutation as a *named missing edge* — and does it
+/// in strictly fewer schedules than the wedge oracle's 2000-schedule
+/// bound, because the detector condemns the first unrechecked arm
+/// rather than waiting for the schedule where the race actually loses
+/// the wakeup.
+#[test]
+fn race_detector_names_the_arm_budget_edge_for_skip_arm_recheck() {
+    let _g = serialized();
+    let cfg = SimConfig {
+        procs: 3,
+        locks: 2,
+        nodes: 1,
+        budget: 4,
+        lease_ticks: 64,
+        ring_capacity: 8,
+        max_steps: 300,
+        drain_rounds: 3_000,
+        crash_prob: 0.0,
+        zombie_prob: 0.0,
+        max_crashes: 0,
+        manual_arm: true,
+        executor_steps: false,
+        race_detect: true,
+        mode: SchedMode::Uniform,
+    };
+    let report = assert_tooth(
+        "skip-arm-recheck-race",
+        &test_knobs::SKIP_ARM_RECHECK,
+        &cfg,
+        50, // ≪ the wedge oracle's 2000-schedule bound
+        150,
+        "order-race",
+    );
+    match report.violation.expect("asserted by assert_tooth").1 {
+        sim::Violation::OrderRace { edge, word, .. } => {
+            assert_eq!(edge, "arm-budget-window", "wrong edge named");
+            assert_eq!(word, "wake-ring", "wrong gate word named");
+        }
+        other => panic!("expected OrderRace, got {other:?}"),
+    }
+}
+
+/// The PR 7 twin: `SKIP_WAKER_RECHECK` is condemned by the detector as
+/// the `peterson-waker-block` edge's dropped re-check, again in far
+/// fewer schedules than the wedge-oracle rediscovery.
+#[test]
+fn race_detector_names_the_peterson_edge_for_skip_waker_recheck() {
+    let _g = serialized();
+    let cfg = SimConfig {
+        procs: 3,
+        locks: 1,
+        nodes: 2,
+        budget: 2,
+        lease_ticks: 64,
+        ring_capacity: 8,
+        max_steps: 400,
+        drain_rounds: 3_000,
+        crash_prob: 0.0,
+        zombie_prob: 0.0,
+        max_crashes: 0,
+        manual_arm: true,
+        executor_steps: false,
+        race_detect: true,
+        mode: SchedMode::Uniform,
+    };
+    let report = assert_tooth(
+        "skip-waker-recheck-race",
+        &test_knobs::SKIP_WAKER_RECHECK,
+        &cfg,
+        200, // ≪ the wedge oracle's 2000-schedule bound
+        150,
+        "order-race",
+    );
+    match report.violation.expect("asserted by assert_tooth").1 {
+        sim::Violation::OrderRace { edge, word, .. } => {
+            assert_eq!(edge, "peterson-waker-block", "wrong edge named");
+            assert_eq!(word, "waker-ring", "wrong gate word named");
+        }
+        other => panic!("expected OrderRace, got {other:?}"),
+    }
 }
 
 #[test]
@@ -187,6 +273,7 @@ fn ignore_dirty_tokens_overwrites_a_live_token_and_is_rediscovered() {
         max_crashes: 0,
         manual_arm: true,
         executor_steps: false,
+        race_detect: false,
         mode: SchedMode::Churn,
     };
     assert_tooth(
@@ -222,6 +309,7 @@ fn skip_cs_renew_starves_a_live_holder_and_is_rediscovered() {
         max_crashes: 0,
         manual_arm: false,
         executor_steps: false,
+        race_detect: false,
         mode: SchedMode::Pct { depth: 3 },
     };
     assert_tooth(

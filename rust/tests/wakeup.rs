@@ -264,6 +264,7 @@ fn prop_explored_schedules_complete_on_wakeups_alone() {
             // keep the production auto-arm path.
             manual_arm: seed % 2 == 1,
             executor_steps: false,
+            race_detect: false,
             mode: SchedMode::Uniform,
         };
         let out = run_one(&cfg, seed);
