@@ -23,6 +23,11 @@
 //! 5. **local-silence** — a `Class::Local` code path (or a NIC-silent
 //!    word) combined with a remote verb: local-class processes issue
 //!    zero remote verbs, the paper's headline invariant.
+//! 6. **raw-doorbell** — a protocol-file function issuing two or more
+//!    raw verbs with no `DoorbellBatch` scope in its body: multi-verb
+//!    issue rings one doorbell per WQE; hot paths must chain through
+//!    the batch layer (or the contract accessors, which batch-enroll
+//!    automatically inside an open scope).
 //!
 //! `#[cfg(test)]` items are excluded: tests legitimately poke raw
 //! words (layout probes, seeded-violation teeth).
@@ -97,6 +102,7 @@ pub fn lint_source(file: &str, src: &str, class: FileClass) -> Vec<Diagnostic> {
             rule_unregistered_offset(file, &toks, &mut diags);
             rule_lane_discipline(file, &toks, &mut diags);
             rule_local_silence(file, &toks, &mut diags);
+            rule_raw_doorbell(file, &toks, &mut diags);
         }
         FileClass::Other => {
             rule_raw_lane_call(file, &toks, &mut diags);
@@ -344,6 +350,72 @@ fn rule_lane_discipline(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>)
     }
 }
 
+/// Function-body token slices: each `fn name .. { body }` in the
+/// stream, paired with the function's name. Bodies are delimited by
+/// brace depth from the first `{` after the `fn` keyword; trait
+/// method declarations (`fn f(..);`) have no body and are skipped.
+fn fn_bodies(toks: &[Token]) -> Vec<(&str, &[Token])> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !(toks[i].is("fn") && i + 1 < toks.len() && toks[i + 1].kind == TokKind::Ident) {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.as_str();
+        let mut j = i + 2;
+        while j < toks.len() && !toks[j].is("{") && !toks[j].is(";") {
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].is(";") {
+            i = j; // bodyless declaration
+            continue;
+        }
+        let start = j + 1;
+        let mut depth = 1;
+        let mut k = start;
+        while k < toks.len() && depth > 0 {
+            if toks[k].is("{") {
+                depth += 1;
+            } else if toks[k].is("}") {
+                depth -= 1;
+            }
+            k += 1;
+        }
+        out.push((name, &toks[start..k.saturating_sub(1).max(start)]));
+        i = k;
+    }
+    out
+}
+
+fn rule_raw_doorbell(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>) {
+    for (name, body) in fn_bodies(toks) {
+        let verbs = method_calls(body, &["r_read", "r_write", "r_cas", "r_faa"]);
+        if verbs.len() < 2 {
+            continue;
+        }
+        if body
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && t.is("DoorbellBatch"))
+        {
+            continue; // chained behind a batch scope
+        }
+        let (second, line) = verbs[1];
+        diags.push(Diagnostic {
+            file: file.to_string(),
+            line,
+            rule: "raw-doorbell",
+            msg: format!(
+                "`{name}` issues {} raw verbs (`{second}` is the second) with no \
+                 `DoorbellBatch` scope: multi-verb issue in a protocol file rings \
+                 one doorbell per WQE — open a batch (or go through the contract \
+                 accessors, which enroll in the enclosing scope)",
+                verbs.len()
+            ),
+        });
+    }
+}
+
 fn rule_local_silence(file: &str, toks: &[Token], diags: &mut Vec<Diagnostic>) {
     let facts = lint_word_facts();
     for span in spans(toks) {
@@ -441,6 +513,37 @@ mod tests {
         let src = "#[cfg(test)]\nmod tests { fn t() { ep.cas(a, 0, 1); } }";
         let d = lint_source("x.rs", src, FileClass::Protocol);
         assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn multi_verb_fn_without_batch_scope_is_flagged() {
+        let src = "fn relay(ep: &Endpoint, a: Addr, b: Addr) {\n\
+                   let v = ep.r_read(a);\n\
+                   ep.r_write(b, v);\n\
+                   }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        // Flagged at the *second* verb issue — that is where the extra
+        // doorbell rings.
+        assert!(hit(&d, "raw-doorbell", 3), "{d:?}");
+    }
+
+    #[test]
+    fn batch_scope_exempts_multi_verb_fn() {
+        let src = "fn relay(ep: &Endpoint, a: Addr, b: Addr) {\n\
+                   let _b = DoorbellBatch::open(ep);\n\
+                   let v = ep.r_read(a);\n\
+                   ep.r_write(b, v);\n\
+                   }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        assert!(!has_rule(&d, "raw-doorbell"), "{d:?}");
+    }
+
+    #[test]
+    fn single_verb_fns_are_not_doorbell_flagged() {
+        let src = "fn one(ep: &Endpoint, a: Addr) -> u64 { ep.r_read(a) }\n\
+                   fn two(ep: &Endpoint, a: Addr) { ep.r_write(a, 1); }";
+        let d = lint_source("x.rs", src, FileClass::Protocol);
+        assert!(!has_rule(&d, "raw-doorbell"), "{d:?}");
     }
 
     #[test]

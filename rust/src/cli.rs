@@ -91,10 +91,15 @@ SUBCOMMANDS:
             --budget <n>       qplock/cohort budget (default 8)
             --cs-ns <ns>       critical-section busy work (default 0)
             --counted          zero-latency op-count mode
-  bench   run experiments (EXPERIMENTS.md E1..E13)
+  bench   run experiments (EXPERIMENTS.md E1..E15)
             --exp <id|all>     experiment id (default all)
             --full             full scale (default quick)
             --csv              also print CSV
+  batch   doorbell-batching smoke: the E15 ablation (batch on/off x
+          NIC congestion x lock count) plus a pass/fail headline — a
+          signalled remote handoff must ring fewer doorbells batched
+          than unbatched (exit non-zero otherwise)
+            --full             full scale (default quick)
   multi-lock
           closed-loop sweep over a sharded multi-lock table: each
           process draws keys Zipfian over K named locks through a

@@ -153,13 +153,27 @@ impl Shared {
     /// Wake everything on the idle board; returns how many tasks were
     /// woken. Called by workers that ran out of stealable work — the
     /// "spare capacity" signal parked sessions re-check their rings on.
+    ///
+    /// Wakers are coalesced per task within one drain: a session that
+    /// parked, was woken, and re-parked leaves multiple board entries
+    /// behind, and N ring tokens delivered for one session used to fire
+    /// N redundant wakes (`Task::schedule` dedups the enqueue, but each
+    /// `wake()` still cost a counter bump and a scheduling round trip).
+    /// The vtable wakers are clones of one `Arc<Task>`, so
+    /// `Waker::will_wake` identifies same-task duplicates exactly.
     fn drain_idle_board(&self) -> usize {
         let drained: Vec<Waker> = std::mem::take(&mut *self.idle_board.lock().unwrap());
         if !drained.is_empty() {
             self.board_drains.fetch_add(1, SeqCst);
         }
-        let n = drained.len();
+        let mut unique: Vec<Waker> = Vec::with_capacity(drained.len());
         for w in drained {
+            if !unique.iter().any(|u| u.will_wake(&w)) {
+                unique.push(w);
+            }
+        }
+        let n = unique.len();
+        for w in unique {
             w.wake();
         }
         n
@@ -610,6 +624,36 @@ mod tests {
         assert_eq!(count.load(SeqCst), 8);
         assert!(stats.idle_parks >= 40);
         assert!(stats.board_drains > 0);
+    }
+
+    #[test]
+    fn board_drain_coalesces_same_task_wakers() {
+        // Regression (PR 9 satellite): N ring tokens delivered for one
+        // parked session leave N board entries behind, and a drain used
+        // to fire N redundant wakes for that one task. `will_wake`
+        // dedup must wake each distinct task exactly once per drain.
+        let exec = Executor::new(1);
+        let mk_task = || {
+            let fut: BoxFuture = Box::pin(async {});
+            Arc::new(Task {
+                future: Mutex::new(Some(fut)),
+                queued: AtomicBool::new(false),
+                shared: Arc::clone(&exec.shared),
+            })
+        };
+        let t1 = mk_task();
+        let t2 = mk_task();
+        {
+            let mut board = exec.shared.idle_board.lock().unwrap();
+            for _ in 0..5 {
+                board.push(task_waker(&t1));
+            }
+            board.push(task_waker(&t2));
+        }
+        let woken = exec.shared.drain_idle_board();
+        assert_eq!(woken, 2, "5 duplicates + 1 distinct must coalesce to 2 wakes");
+        assert_eq!(exec.shared.wakes.load(SeqCst), 2);
+        assert_eq!(exec.shared.board_drains.load(SeqCst), 1);
     }
 
     #[test]

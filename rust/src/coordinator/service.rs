@@ -31,7 +31,9 @@ use crate::locks::{
     make_lock, ArmOutcome, AsyncLockHandle, LeaseError, LockHandle, LockPoll, SharedLock,
     SweepStats, WakeupReg,
 };
-use crate::rdma::{Endpoint, NodeId, ProcMetrics, ProcMetricsSnapshot, RdmaDomain, WakeupRing};
+use crate::rdma::{
+    DoorbellBatch, Endpoint, NodeId, ProcMetrics, ProcMetricsSnapshot, RdmaDomain, WakeupRing,
+};
 
 /// Default capacity (max processes per lock) when not specified.
 const DEFAULT_MAX_PROCS: u32 = 64;
@@ -1316,6 +1318,15 @@ impl HandleCache {
     /// for the rare revocations) — the heartbeat must not tax the
     /// O(ready) poll loop it rides in.
     pub fn renew_pending(&mut self) {
+        // Batch scope over the whole heartbeat pass: it spans every
+        // handle endpoint the loop walks, chaining any same-node NIC
+        // traffic into one doorbell per target. qplock renewals are by
+        // design a local read + CPU CAS on the session's own node
+        // (leases are NIC-silent — EXPERIMENTS.md §Perf), so today the
+        // chain stays empty and the pass is byte-identical; the scope
+        // is what keeps a future NIC-lane lease word from regressing
+        // to a doorbell per handle.
+        let _batch = DoorbellBatch::open_in(&self.svc.domain);
         let mut revoked_now: Vec<String> = Vec::new();
         for name in self.pending.iter() {
             let h = self.handles.get_mut(name).expect("pending implies minted");

@@ -67,7 +67,12 @@
 //! node as the budget write, so the handoff stays O(1) remote verbs
 //! and local-class releases still issue zero. That lets a multiplexing
 //! session discover ready acquisitions in O(ready) instead of scanning
-//! every parked one.
+//! every parked one. Because every verb of a signalled handoff aims at
+//! one NIC, `q_unlock` opens a [`DoorbellBatch`] scope around the
+//! release: with [`crate::rdma::DomainConfig::batching`] on (default
+//! off), the same verbs chain behind a single doorbell — counts,
+//! traces, and memory effects bit-identical, only admission pricing
+//! amortized (EXPERIMENTS.md E15, §Perf 8).
 //!
 //! The two **Peterson-waker blocks** (`waker[class]`, one per cohort,
 //! declared as [`contract::WAKER_RING`]/[`contract::WAKER_TOKEN`])
@@ -141,7 +146,7 @@ use super::{
     SweepStats, WakeupReg,
 };
 use crate::rdma::contract::{self, Role, Via, Word};
-use crate::rdma::{Addr, Endpoint, NodeId, RdmaDomain};
+use crate::rdma::{Addr, DoorbellBatch, Endpoint, NodeId, RdmaDomain};
 use crate::util::spin::Backoff;
 
 /// The paper's −1 sentinel for "waiting" in the budget word.
@@ -427,6 +432,12 @@ impl QpInner {
         if self.lease_ticks.load(SeqCst) == 0 {
             return;
         }
+        // Coalesce the pass's repair verbs (relayed budget writes, NIC-
+        // lane tail resets, wakeup publishes): one doorbell chain per
+        // target NIC, re-opened on target change. Descriptor fields are
+        // co-located CPU accesses and never enqueue, so an all-live pass
+        // stays NIC-silent with or without batching.
+        let _batch = DoorbellBatch::open(ep);
         let slots = self.slots.lock().unwrap();
         for desc in slots.iter().copied() {
             if desc.node() != ep.node() {
@@ -1125,6 +1136,12 @@ impl QpHandle {
         ));
         let budget = contract::desc_read(&self.ep, Role::Passer, self.desc, Word::DescBudget);
         debug_assert!(budget >= 1 && budget != WAITING);
+        // A signalled remote handoff is the hot path this scope exists
+        // for: the budget rWrite and the successor's ring publish chain
+        // into one doorbell at the successor's NIC. A local-class
+        // passer issues only CPU ops here, so its scope stays empty —
+        // local NIC-silence is untouched.
+        let _batch = DoorbellBatch::open(&self.ep);
         // Pass the lock: the successor's budget word, reached the same
         // way as every cohort peer (local write or rWrite by class).
         contract::write_via(

@@ -21,6 +21,7 @@ fn main() {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("bench") => cmd_bench(&args),
+        Some("batch") => cmd_batch(&args),
         Some("multi-lock") => cmd_multi_lock(&args),
         Some("async") => cmd_async(&args),
         Some("ready") => cmd_ready(&args),
@@ -560,6 +561,37 @@ fn cmd_bench(args: &Args) {
             }
         }
     }
+}
+
+fn cmd_batch(args: &Args) {
+    let scale = if args.flag("full") {
+        Scale::Full
+    } else {
+        Scale::Quick
+    };
+    let out = run_experiment("e15", scale);
+    println!("{out}");
+    // Pass/fail headline off the uncongested K=1 rows: batching must
+    // amortize fabric transactions on the signalled-handoff path.
+    let t = &out.tables[0];
+    let row = |batch: &str| {
+        (0..t.rows())
+            .find(|&r| {
+                t.cell(r, 0) == batch && t.cell(r, 1) == "uncongested" && t.cell(r, 2) == "1"
+            })
+            .expect("e15 uncongested K=1 row")
+    };
+    let on: f64 = t.cell(row("on"), 5).parse().expect("doorbells/handoff");
+    let off: f64 = t.cell(row("off"), 5).parse().expect("doorbells/handoff");
+    println!(
+        "headline: signalled remote handoff rings {on:.2} doorbells batched \
+         vs {off:.2} unbatched"
+    );
+    if on >= off {
+        eprintln!("FAIL: doorbell batching did not amortize fabric transactions");
+        std::process::exit(1);
+    }
+    println!("PASS: release+signal chains behind one doorbell");
 }
 
 fn cmd_lint(args: &Args) {

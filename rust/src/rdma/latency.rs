@@ -39,6 +39,14 @@ pub struct LatencyModel {
     /// Extra ns added per op already queued beyond `nic_capacity`
     /// (linearized head-of-line blocking; Collie-style anomaly knob).
     pub congestion_ns_per_op: u64,
+    /// Cost of ringing the doorbell once for a chained WQE batch: one
+    /// MMIO write + DMA of the chain head (Kalia et al., ATC'16). Paid
+    /// once per `DoorbellBatch` post, regardless of chain length.
+    pub doorbell_ns: u64,
+    /// Incremental cost per chained WQE after the doorbell: the NIC
+    /// fetches successive WQEs by DMA without further CPU involvement,
+    /// so each entry is far cheaper than an independently-issued verb.
+    pub wqe_chain_ns: u64,
 }
 
 impl LatencyModel {
@@ -55,6 +63,8 @@ impl LatencyModel {
             loopback_cas_ns: 1_800,
             nic_capacity: 8,
             congestion_ns_per_op: 400,
+            doorbell_ns: 1_500,
+            wqe_chain_ns: 250,
         }
     }
 
@@ -70,6 +80,8 @@ impl LatencyModel {
             loopback_cas_ns: 0,
             nic_capacity: u64::MAX,
             congestion_ns_per_op: 0,
+            doorbell_ns: 0,
+            wqe_chain_ns: 0,
         }
     }
 
@@ -86,6 +98,8 @@ impl LatencyModel {
             loopback_cas_ns: 180,
             nic_capacity: 8,
             congestion_ns_per_op: 40,
+            doorbell_ns: 150,
+            wqe_chain_ns: 25,
         }
     }
 
@@ -151,6 +165,22 @@ mod tests {
         assert_eq!(m.congestion_ns(0), 0);
         assert_eq!(m.congestion_ns(m.nic_capacity), 0);
         assert_eq!(m.congestion_ns(m.nic_capacity + 3), 3 * m.congestion_ns_per_op);
+    }
+
+    #[test]
+    fn chained_wqe_is_cheaper_than_independent_issue() {
+        // The whole point of doorbell batching: a chain of N WQEs costs
+        // one doorbell + N chain increments, strictly less than N
+        // independently-doorbelled verbs for every N >= 2.
+        let m = LatencyModel::calibrated();
+        for n in 2u64..=8 {
+            let chained = m.doorbell_ns + n * m.wqe_chain_ns;
+            let independent = n * (m.doorbell_ns + m.wqe_chain_ns);
+            assert!(chained < independent, "chain of {n} must amortize");
+        }
+        // And the doorbell dominates the per-WQE increment, so the
+        // amortization is meaningful, not marginal.
+        assert!(m.doorbell_ns >= 4 * m.wqe_chain_ns);
     }
 
     #[test]

@@ -152,18 +152,23 @@ impl ProcMetricsSnapshot {
 
 impl std::ops::Sub for ProcMetricsSnapshot {
     type Output = ProcMetricsSnapshot;
+    // Saturating on every field: a `ProcMetrics::reset()` landing
+    // between an interval meter's before/after snapshots (e.g. the
+    // RunWindow post-drain exclusion path) makes `after < before`,
+    // which must read as an empty interval — not a debug panic or a
+    // release-mode wraparound to ~u64::MAX ops.
     fn sub(self, rhs: ProcMetricsSnapshot) -> ProcMetricsSnapshot {
         ProcMetricsSnapshot {
-            local_read: self.local_read - rhs.local_read,
-            local_write: self.local_write - rhs.local_write,
-            local_cas: self.local_cas - rhs.local_cas,
-            local_faa: self.local_faa - rhs.local_faa,
-            remote_read: self.remote_read - rhs.remote_read,
-            remote_write: self.remote_write - rhs.remote_write,
-            remote_cas: self.remote_cas - rhs.remote_cas,
-            remote_faa: self.remote_faa - rhs.remote_faa,
-            loopback: self.loopback - rhs.loopback,
-            net_ns: self.net_ns - rhs.net_ns,
+            local_read: self.local_read.saturating_sub(rhs.local_read),
+            local_write: self.local_write.saturating_sub(rhs.local_write),
+            local_cas: self.local_cas.saturating_sub(rhs.local_cas),
+            local_faa: self.local_faa.saturating_sub(rhs.local_faa),
+            remote_read: self.remote_read.saturating_sub(rhs.remote_read),
+            remote_write: self.remote_write.saturating_sub(rhs.remote_write),
+            remote_cas: self.remote_cas.saturating_sub(rhs.remote_cas),
+            remote_faa: self.remote_faa.saturating_sub(rhs.remote_faa),
+            loopback: self.loopback.saturating_sub(rhs.loopback),
+            net_ns: self.net_ns.saturating_sub(rhs.net_ns),
         }
     }
 }
@@ -177,6 +182,12 @@ pub struct NicMetrics {
     pub rmw_ops: AtomicU64,
     pub peak_inflight: AtomicU64,
     pub congestion_penalty_ns: AtomicU64,
+    /// Fabric transactions: doorbell rings at this NIC. Every unbatched
+    /// verb rings its own doorbell (`doorbells == ops`); a chained
+    /// `DoorbellBatch` rings once for the whole chain, so
+    /// `ops - doorbells` is exactly the number of round trips the
+    /// batching layer amortized away (the E15 headline metric).
+    pub doorbells: AtomicU64,
 }
 
 impl NicMetrics {
@@ -225,6 +236,31 @@ mod tests {
         m.add_net_ns(100);
         m.reset();
         assert_eq!(m.snapshot(), ProcMetricsSnapshot::default());
+    }
+
+    #[test]
+    fn reset_between_snapshots_saturates_instead_of_underflowing() {
+        // Regression: `reset()` landing between an interval meter's
+        // before/after snapshots (RunWindow's post-drain exclusion)
+        // used to underflow the subtraction — debug panic, release
+        // wraparound. The interval must instead read as empty.
+        let m = ProcMetrics::default();
+        for k in OpKind::ALL {
+            m.record(k);
+        }
+        m.record_loopback();
+        m.add_net_ns(5_000);
+        let before = m.snapshot();
+        m.reset(); // e.g. a concurrent RunWindow rollover
+        m.record(OpKind::RemoteRead);
+        let delta = m.snapshot() - before;
+        // Fields that went backwards clamp to zero...
+        assert_eq!(delta.remote_cas, 0);
+        assert_eq!(delta.loopback, 0);
+        assert_eq!(delta.net_ns, 0);
+        // ...and nothing wrapped toward u64::MAX.
+        assert!(delta.remote_total() <= 1);
+        assert_eq!(delta.local_total(), 0);
     }
 
     #[test]

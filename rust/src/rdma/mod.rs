@@ -29,7 +29,7 @@ pub use addr::{Addr, NodeId};
 pub use latency::{LatencyModel, TimeMode};
 pub use metrics::{OpKind, ProcMetrics, ProcMetricsSnapshot};
 pub use nic::AtomicityMode;
-pub use verbs::{Endpoint, RmwLane};
+pub use verbs::{DoorbellBatch, Endpoint, RmwLane};
 pub use wakeup::WakeupRing;
 
 /// Domain-wide configuration.
@@ -43,6 +43,14 @@ pub struct DomainConfig {
     pub hazard_ns: u64,
     /// Cache-line-align allocations (see [`memory::NodeMemory`]).
     pub pad_lines: bool,
+    /// Enable doorbell batching: verbs issued inside an open
+    /// [`DoorbellBatch`] scope chain into one WQE list per target NIC
+    /// and are priced by [`nic::Nic::admit_batch`] (one doorbell + per-
+    /// WQE chain increments) instead of per-verb admissions. Off by
+    /// default: unbatched behavior — op counts, pricing, traces — is
+    /// bit-identical to pre-batching builds, and batch scopes become
+    /// transparent pass-throughs.
+    pub batching: bool,
 }
 
 impl DomainConfig {
@@ -55,6 +63,7 @@ impl DomainConfig {
             atomicity: AtomicityMode::NicSerialized,
             hazard_ns: 0,
             pad_lines: true,
+            batching: false,
         }
     }
 
@@ -66,6 +75,7 @@ impl DomainConfig {
             atomicity: AtomicityMode::NicSerialized,
             hazard_ns: 0,
             pad_lines: true,
+            batching: false,
         }
     }
 
@@ -77,6 +87,7 @@ impl DomainConfig {
             atomicity: AtomicityMode::NicSerialized,
             hazard_ns: 0,
             pad_lines: true,
+            batching: false,
         }
     }
 
@@ -92,6 +103,11 @@ impl DomainConfig {
 
     pub fn with_hazard_ns(mut self, ns: u64) -> Self {
         self.hazard_ns = ns;
+        self
+    }
+
+    pub fn with_batching(mut self, on: bool) -> Self {
+        self.batching = on;
         self
     }
 }

@@ -79,6 +79,9 @@ impl Nic {
         let depth = self.inflight.fetch_add(1, SeqCst) + 1;
         self.metrics.observe_inflight(depth);
         self.metrics.ops.fetch_add(1, SeqCst);
+        // An unbatched verb rings its own doorbell: one fabric
+        // transaction per verb (`DoorbellBatch` is what amortizes this).
+        self.metrics.doorbells.fetch_add(1, SeqCst);
         if loopback {
             self.metrics.loopback_ops.fetch_add(1, SeqCst);
             proc.record_loopback();
@@ -87,7 +90,17 @@ impl Nic {
             self.metrics.rmw_ops.fetch_add(1, SeqCst);
         }
         let base = model.base_ns(kind, loopback);
-        let queue = model.congestion_ns(depth);
+        let queue = match time_mode {
+            // Timed runs model real queueing: the penalty comes from
+            // whatever is actually in flight at this instant.
+            TimeMode::Timed => model.congestion_ns(depth),
+            // Counted runs must be schedule-independent: price queueing
+            // from the *modeled* depth of this issue — a lone unbatched
+            // verb is alone in its doorbell — not from wall-clock-
+            // overlapping guards owned by other host threads. (Chained
+            // issues price their own depth in [`Nic::admit_batch`].)
+            TimeMode::Counted => model.congestion_ns(1),
+        };
         if queue > 0 {
             self.metrics.congestion_penalty_ns.fetch_add(queue, SeqCst);
         }
@@ -97,6 +110,74 @@ impl Nic {
             spin_wait_ns(total);
         }
         InflightGuard { nic: self }
+    }
+
+    /// Account one WQE joining an open [`DoorbellBatch`] chain aimed at
+    /// this NIC. The contract check and the per-op counters happen here,
+    /// at enqueue — in the verb's program order, exactly as an unbatched
+    /// issue would — so the sanitizer, the race detector, and per-class
+    /// verb totals are identical with batching on or off. Only the
+    /// doorbell and the latency/congestion pricing are deferred to
+    /// [`Nic::admit_batch`].
+    ///
+    /// [`DoorbellBatch`]: super::verbs::DoorbellBatch
+    pub fn enqueue_wqe(
+        &self,
+        kind: OpKind,
+        target: Addr,
+        loopback: bool,
+        monitor: &Monitor,
+        proc: &ProcMetrics,
+    ) {
+        monitor.on_nic_op(
+            target,
+            matches!(kind, OpKind::RemoteCas | OpKind::RemoteFaa),
+            loopback,
+        );
+        self.metrics.ops.fetch_add(1, SeqCst);
+        if loopback {
+            self.metrics.loopback_ops.fetch_add(1, SeqCst);
+            proc.record_loopback();
+        }
+        if matches!(kind, OpKind::RemoteCas | OpKind::RemoteFaa) {
+            self.metrics.rmw_ops.fetch_add(1, SeqCst);
+        }
+    }
+
+    /// Post a chain of `len` WQEs with a single doorbell and price it as
+    /// one admission: one base doorbell cost, one chain increment per
+    /// WQE, and a congestion penalty computed from the batch's own
+    /// modeled depth (WQE `i` queues behind its `i-1` chain
+    /// predecessors) — never from racing [`InflightGuard`]s, so counted
+    /// runs stay schedule-independent. The chain still occupies the
+    /// in-flight counter while it drains, so concurrent timed-mode
+    /// singles see it as real queue depth.
+    pub fn admit_batch(
+        &self,
+        len: u64,
+        model: &LatencyModel,
+        time_mode: TimeMode,
+        proc: &ProcMetrics,
+    ) {
+        if len == 0 {
+            return;
+        }
+        self.metrics.doorbells.fetch_add(1, SeqCst);
+        let wall = self.inflight.fetch_add(len, SeqCst) + len;
+        self.metrics.observe_inflight(wall);
+        let mut queue = 0u64;
+        for pos in 1..=len {
+            queue += model.congestion_ns(pos);
+        }
+        if queue > 0 {
+            self.metrics.congestion_penalty_ns.fetch_add(queue, SeqCst);
+        }
+        let total = model.doorbell_ns + len * model.wqe_chain_ns + queue;
+        proc.add_net_ns(total);
+        if time_mode == TimeMode::Timed && total > 0 {
+            spin_wait_ns(total);
+        }
+        self.inflight.fetch_sub(len, SeqCst);
     }
 
     /// Execute a remote CAS on `word` with the configured atomicity
@@ -257,6 +338,73 @@ mod tests {
         drop(_g);
         assert!(t0.elapsed().as_micros() < 1_000);
         assert_eq!(m.snapshot().net_ns, model.remote_cas_ns);
+    }
+
+    #[test]
+    fn counted_congestion_prices_modeled_depth_not_racing_guards() {
+        // Regression (satellite of PR 9): counted-mode pricing used to
+        // sample the wall-clock in-flight counter, so a guard held by
+        // another host thread inflated this verb's modeled ns — E7's
+        // Counted numbers varied with scheduler interleaving. A lone
+        // unbatched verb is alone in its doorbell: modeled depth 1.
+        let nic = Nic::new();
+        let m = ProcMetrics::default();
+        let mut model = LatencyModel::calibrated();
+        model.nic_capacity = 1;
+        model.congestion_ns_per_op = 10_000;
+        let mon = Monitor::disabled();
+        let a = Addr::new(0, 0);
+        // A wall-clock-overlapping guard (e.g. another thread mid-verb).
+        let _g1 = nic.admit(OpKind::RemoteRead, a, false, &mon, &model, TimeMode::Counted, &m);
+        let before = m.snapshot().net_ns;
+        let _g2 = nic.admit(OpKind::RemoteCas, a, false, &mon, &model, TimeMode::Counted, &m);
+        // Depth was 2 on the wall counter, but the modeled price must be
+        // congestion-free: base CAS cost only, deterministically.
+        assert_eq!(m.snapshot().net_ns - before, model.remote_cas_ns);
+        assert_eq!(nic.metrics.congestion_penalty_ns.load(SeqCst), 0);
+    }
+
+    #[test]
+    fn admit_batch_rings_one_doorbell_and_prices_chain_depth() {
+        let nic = Nic::new();
+        let m = ProcMetrics::default();
+        let mut model = LatencyModel::zero();
+        model.doorbell_ns = 1_000;
+        model.wqe_chain_ns = 100;
+        model.nic_capacity = 2;
+        model.congestion_ns_per_op = 10;
+        let mon = Monitor::disabled();
+        let a = Addr::new(0, 0);
+        let kinds = [
+            OpKind::RemoteWrite,
+            OpKind::RemoteRead,
+            OpKind::RemoteFaa,
+            OpKind::RemoteWrite,
+        ];
+        for kind in kinds {
+            nic.enqueue_wqe(kind, a, false, &mon, &m);
+        }
+        nic.admit_batch(4, &model, TimeMode::Counted, &m);
+        // One fabric transaction for four verbs.
+        assert_eq!(nic.metrics.doorbells.load(SeqCst), 1);
+        assert_eq!(nic.metrics.ops.load(SeqCst), 4);
+        assert_eq!(nic.metrics.rmw_ops.load(SeqCst), 1);
+        // Chain positions 1..=4 queue behind their own predecessors:
+        // congestion = (3-2)*10 + (4-2)*10 = 30 past capacity 2.
+        assert_eq!(nic.metrics.congestion_penalty_ns.load(SeqCst), 30);
+        assert_eq!(m.snapshot().net_ns, 1_000 + 4 * 100 + 30);
+        // The chain drained: nothing left in flight.
+        assert_eq!(nic.inflight(), 0);
+        assert_eq!(nic.metrics.peak_inflight.load(SeqCst), 4);
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let nic = Nic::new();
+        let m = ProcMetrics::default();
+        nic.admit_batch(0, &LatencyModel::calibrated(), TimeMode::Counted, &m);
+        assert_eq!(nic.metrics.doorbells.load(SeqCst), 0);
+        assert_eq!(m.snapshot().net_ns, 0);
     }
 
     #[test]

@@ -10,12 +10,136 @@
 //! calling a local op on a remote register panics, because in the paper's
 //! model such an access does not exist.
 
+use std::cell::RefCell;
 use std::sync::atomic::Ordering::{Acquire, Release, SeqCst};
 use std::sync::Arc;
 
 use super::addr::{Addr, NodeId};
 use super::metrics::{OpKind, ProcMetrics};
 use super::RdmaDomain;
+
+// ---- doorbell batching (chained WQE issue) ----
+
+/// A WQE chain under construction: verbs aimed at one NIC of one
+/// domain, accounted per-WQE at enqueue (contract check, op counters)
+/// and priced as a single admission at post time
+/// ([`super::nic::Nic::admit_batch`]). The latency charge lands on the
+/// process that started the chain.
+struct OpenChain {
+    domain: Arc<RdmaDomain>,
+    target: NodeId,
+    len: u64,
+    proc: Arc<ProcMetrics>,
+}
+
+impl OpenChain {
+    fn post(self) {
+        self.domain.node(self.target).nic.admit_batch(
+            self.len,
+            &self.domain.cfg.latency,
+            self.domain.cfg.time_mode,
+            &self.proc,
+        );
+    }
+}
+
+/// This thread's batch scope. Thread-local rather than per-`Endpoint`
+/// so one scope covers every endpoint a pass touches (the heartbeat
+/// loop walks many handles) and `Endpoint` stays a plain `Clone`
+/// handle; protocol batch scopes never span suspension points, so a
+/// chain can never migrate between executor threads while open.
+struct BatchScope {
+    open: bool,
+    chain: Option<OpenChain>,
+}
+
+thread_local! {
+    static BATCH_SCOPE: RefCell<BatchScope> =
+        const { RefCell::new(BatchScope { open: false, chain: None }) };
+}
+
+/// RAII scope for doorbell-batched issue (Kalia et al., ATC'16: real
+/// RNICs amortize MMIO doorbells by chaining WQEs). While a scope is
+/// open on the current thread, remote verbs issued by *any* endpoint of
+/// a batching-enabled domain chain into one WQE list per target NIC;
+/// dropping the scope (or switching target NICs, or hitting the pacing
+/// cap) posts the chain with a single doorbell.
+///
+/// Semantics are deliberately *pricing-only*: every chained verb still
+/// executes its memory effect eagerly in program order, still runs the
+/// contract monitor / sanitizer check at issue, and still bumps the
+/// same per-process and per-NIC op counters. Batching changes how the
+/// NIC admission is charged (one doorbell + per-WQE chain increments +
+/// a congestion penalty from the chain's own modeled depth), never
+/// what the protocol does — so differential traces and per-class verb
+/// totals are identical with batching on or off.
+///
+/// With `DomainConfig::batching` off — the default — a scope is a
+/// transparent pass-through and every verb admits individually, bit-
+/// identical to pre-batching builds. A scope opened while another is
+/// already open on this thread is also inert: its verbs chain into the
+/// outer scope, which posts everything.
+pub struct DoorbellBatch {
+    armed: bool,
+}
+
+impl DoorbellBatch {
+    /// Open a batch scope on the current thread (inert unless `ep`'s
+    /// domain has `batching` enabled and no scope is already open).
+    pub fn open(ep: &Endpoint) -> DoorbellBatch {
+        Self::open_in(&ep.domain)
+    }
+
+    /// Open a scope without a single endpoint in hand — session-level
+    /// passes (e.g. the lease heartbeat) cover verbs issued through
+    /// every handle endpoint they walk.
+    pub fn open_in(domain: &RdmaDomain) -> DoorbellBatch {
+        if !domain.cfg.batching {
+            return DoorbellBatch { armed: false };
+        }
+        let armed = BATCH_SCOPE.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.open {
+                false
+            } else {
+                s.open = true;
+                true
+            }
+        });
+        DoorbellBatch { armed }
+    }
+
+    /// Post the chain built so far (if any) without closing the scope.
+    pub fn flush(&self) {
+        if !self.armed {
+            return;
+        }
+        if let Some(chain) = BATCH_SCOPE.with(|s| s.borrow_mut().chain.take()) {
+            chain.post();
+        }
+    }
+
+    /// Whether this guard actually owns an open scope (diagnostics).
+    pub fn is_armed(&self) -> bool {
+        self.armed
+    }
+}
+
+impl Drop for DoorbellBatch {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let chain = BATCH_SCOPE.with(|s| {
+            let mut s = s.borrow_mut();
+            s.open = false;
+            s.chain.take()
+        });
+        if let Some(chain) = chain {
+            chain.post();
+        }
+    }
+}
 
 /// Which atomic unit owns a word's RMW traffic (the paper's Table-1
 /// discipline). Under commodity atomicity a CPU RMW and a NIC RMW on
@@ -168,11 +292,62 @@ impl Endpoint {
 
     // ---- remote operations (through the target node's NIC) ----
 
+    /// Try to chain this verb into the thread's open [`DoorbellBatch`]
+    /// scope. Returns true iff the verb was enqueued (contract-checked
+    /// and op-counted, admission pricing deferred to the chain's post);
+    /// false means the caller must admit individually, exactly as if no
+    /// batching layer existed. A chain targets one NIC: switching
+    /// targets (or domains) posts the chain built so far, and the
+    /// congestion-aware pacing cap posts it whenever the chain's own
+    /// modeled depth would exceed `nic_capacity`.
+    fn try_enqueue(&self, kind: OpKind, a: Addr, loopback: bool) -> bool {
+        if !self.domain.cfg.batching {
+            return false;
+        }
+        BATCH_SCOPE.with(|s| {
+            let mut s = s.borrow_mut();
+            if !s.open {
+                return false;
+            }
+            if let Some(chain) = s.chain.as_ref() {
+                if chain.target != a.node() || !Arc::ptr_eq(&chain.domain, &self.domain) {
+                    if let Some(done) = s.chain.take() {
+                        done.post();
+                    }
+                }
+            }
+            let chain = s.chain.get_or_insert_with(|| OpenChain {
+                domain: Arc::clone(&self.domain),
+                target: a.node(),
+                len: 0,
+                proc: Arc::clone(&self.metrics),
+            });
+            self.domain.node(a.node()).nic.enqueue_wqe(
+                kind,
+                a,
+                loopback,
+                self.domain.contract_monitor(),
+                &self.metrics,
+            );
+            chain.len += 1;
+            let len = chain.len;
+            if len >= self.domain.cfg.latency.nic_capacity.max(1) {
+                if let Some(done) = s.chain.take() {
+                    done.post();
+                }
+            }
+            true
+        })
+    }
+
     /// One-sided RDMA read. Loopback when the register is local.
     pub fn r_read(&self, a: Addr) -> u64 {
         let tgt = self.domain.node(a.node());
         let loopback = self.is_local(a);
         self.metrics.record(OpKind::RemoteRead);
+        if self.try_enqueue(OpKind::RemoteRead, a, loopback) {
+            return tgt.mem.word(a).load(SeqCst);
+        }
         let _g = tgt.nic.admit(
             OpKind::RemoteRead,
             a,
@@ -190,6 +365,10 @@ impl Endpoint {
         let tgt = self.domain.node(a.node());
         let loopback = self.is_local(a);
         self.metrics.record(OpKind::RemoteWrite);
+        if self.try_enqueue(OpKind::RemoteWrite, a, loopback) {
+            tgt.mem.word(a).store(v, SeqCst);
+            return;
+        }
         let _g = tgt.nic.admit(
             OpKind::RemoteWrite,
             a,
@@ -209,15 +388,24 @@ impl Endpoint {
         let tgt = self.domain.node(a.node());
         let loopback = self.is_local(a);
         self.metrics.record(OpKind::RemoteCas);
-        let _g = tgt.nic.admit(
-            OpKind::RemoteCas,
-            a,
-            loopback,
-            self.domain.contract_monitor(),
-            &self.domain.cfg.latency,
-            self.domain.cfg.time_mode,
-            &self.metrics,
-        );
+        if !self.try_enqueue(OpKind::RemoteCas, a, loopback) {
+            let _g = tgt.nic.admit(
+                OpKind::RemoteCas,
+                a,
+                loopback,
+                self.domain.contract_monitor(),
+                &self.domain.cfg.latency,
+                self.domain.cfg.time_mode,
+                &self.metrics,
+            );
+            return tgt.nic.rmw_cas(
+                tgt.mem.word(a),
+                expected,
+                swap,
+                self.domain.cfg.atomicity,
+                self.domain.cfg.hazard_ns,
+            );
+        }
         tgt.nic.rmw_cas(
             tgt.mem.word(a),
             expected,
@@ -234,15 +422,23 @@ impl Endpoint {
         let tgt = self.domain.node(a.node());
         let loopback = self.is_local(a);
         self.metrics.record(OpKind::RemoteFaa);
-        let _g = tgt.nic.admit(
-            OpKind::RemoteFaa,
-            a,
-            loopback,
-            self.domain.contract_monitor(),
-            &self.domain.cfg.latency,
-            self.domain.cfg.time_mode,
-            &self.metrics,
-        );
+        if !self.try_enqueue(OpKind::RemoteFaa, a, loopback) {
+            let _g = tgt.nic.admit(
+                OpKind::RemoteFaa,
+                a,
+                loopback,
+                self.domain.contract_monitor(),
+                &self.domain.cfg.latency,
+                self.domain.cfg.time_mode,
+                &self.metrics,
+            );
+            return tgt.nic.rmw_faa(
+                tgt.mem.word(a),
+                add,
+                self.domain.cfg.atomicity,
+                self.domain.cfg.hazard_ns,
+            );
+        }
         tgt.nic.rmw_faa(
             tgt.mem.word(a),
             add,
@@ -490,6 +686,137 @@ mod tests {
         assert!(msg.contains(&format!("{a:?}")), "must name the word: {msg}");
         assert!(msg.contains("on node 1"), "must name the word's node: {msg}");
         assert!(msg.contains("runs on node 0"), "must name the caller's node: {msg}");
+    }
+
+    fn batching_domain(mut model: crate::rdma::LatencyModel) -> Arc<RdmaDomain> {
+        model.nic_capacity = model.nic_capacity.max(8);
+        RdmaDomain::new(
+            2,
+            1024,
+            DomainConfig::counted()
+                .with_latency(model)
+                .with_batching(true),
+        )
+    }
+
+    #[test]
+    fn batch_chains_verbs_into_one_doorbell() {
+        let d = batching_domain(crate::rdma::LatencyModel::calibrated());
+        let ep1 = d.endpoint(1);
+        let a = d.endpoint(0).alloc(2);
+        {
+            let _b = DoorbellBatch::open(&ep1);
+            ep1.r_write(a, 7);
+            assert_eq!(ep1.r_faa(a, 3), 7, "chained RMW still returns its value");
+            assert_eq!(ep1.r_read(a), 10, "chained read sees earlier chain writes");
+        }
+        let nic = &d.node(0).nic;
+        assert_eq!(nic.metrics.doorbells.load(SeqCst), 1, "one fabric transaction");
+        assert_eq!(nic.metrics.ops.load(SeqCst), 3, "per-NIC op counts unchanged");
+        let s = ep1.metrics.snapshot();
+        assert_eq!((s.remote_write, s.remote_faa, s.remote_read), (1, 1, 1));
+        let lat = &d.cfg.latency;
+        assert_eq!(s.net_ns, lat.doorbell_ns + 3 * lat.wqe_chain_ns);
+    }
+
+    #[test]
+    fn batching_off_makes_scope_a_passthrough() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let ep1 = d.endpoint(1);
+        let a = d.endpoint(0).alloc(1);
+        let b = DoorbellBatch::open(&ep1);
+        assert!(!b.is_armed());
+        ep1.r_write(a, 1);
+        ep1.r_read(a);
+        drop(b);
+        let nic = &d.node(0).nic;
+        // Unbatched: every verb rings its own doorbell, priced as before.
+        assert_eq!(nic.metrics.doorbells.load(SeqCst), 2);
+        assert_eq!(nic.metrics.ops.load(SeqCst), 2);
+        let lat = &d.cfg.latency;
+        assert_eq!(
+            ep1.metrics.snapshot().net_ns,
+            lat.remote_write_ns + lat.remote_read_ns
+        );
+    }
+
+    #[test]
+    fn target_nic_change_posts_the_chain() {
+        let d = batching_domain(crate::rdma::LatencyModel::calibrated());
+        let ep1 = d.endpoint(1);
+        let a0 = d.endpoint(0).alloc(1);
+        let a1 = ep1.alloc(1);
+        {
+            let _b = DoorbellBatch::open(&ep1);
+            ep1.r_write(a0, 1);
+            ep1.r_write(a1, 2); // loopback — different NIC, new chain
+            ep1.r_write(a0, 3);
+        }
+        assert_eq!(d.node(0).nic.metrics.doorbells.load(SeqCst), 2);
+        assert_eq!(d.node(1).nic.metrics.doorbells.load(SeqCst), 1);
+        assert_eq!(d.node(1).nic.metrics.loopback_ops.load(SeqCst), 1);
+        assert_eq!(ep1.metrics.snapshot().loopback, 1);
+    }
+
+    #[test]
+    fn pacing_cap_limits_chain_to_nic_capacity() {
+        let mut model = crate::rdma::LatencyModel::calibrated();
+        model.nic_capacity = 2;
+        let d = RdmaDomain::new(
+            2,
+            1024,
+            DomainConfig::counted()
+                .with_latency(model)
+                .with_batching(true),
+        );
+        let ep1 = d.endpoint(1);
+        let a = d.endpoint(0).alloc(1);
+        {
+            let _b = DoorbellBatch::open(&ep1);
+            for v in 0..5 {
+                ep1.r_write(a, v);
+            }
+        }
+        let nic = &d.node(0).nic;
+        // 5 WQEs paced into chains of <= capacity 2: 2 + 2 + 1.
+        assert_eq!(nic.metrics.doorbells.load(SeqCst), 3);
+        assert_eq!(nic.metrics.ops.load(SeqCst), 5);
+        // No chain ever exceeded the pipeline, so no congestion charge.
+        assert_eq!(nic.metrics.congestion_penalty_ns.load(SeqCst), 0);
+    }
+
+    #[test]
+    fn nested_scope_chains_into_the_outer_batch() {
+        let d = batching_domain(crate::rdma::LatencyModel::calibrated());
+        let ep1 = d.endpoint(1);
+        let a = d.endpoint(0).alloc(1);
+        {
+            let outer = DoorbellBatch::open(&ep1);
+            assert!(outer.is_armed());
+            ep1.r_write(a, 1);
+            {
+                let inner = DoorbellBatch::open(&ep1);
+                assert!(!inner.is_armed(), "inner scope must defer to the outer");
+                ep1.r_write(a, 2);
+            }
+            ep1.r_write(a, 3);
+        }
+        assert_eq!(d.node(0).nic.metrics.doorbells.load(SeqCst), 1);
+        assert_eq!(d.node(0).nic.metrics.ops.load(SeqCst), 3);
+    }
+
+    #[test]
+    fn explicit_flush_posts_without_closing_the_scope() {
+        let d = batching_domain(crate::rdma::LatencyModel::calibrated());
+        let ep1 = d.endpoint(1);
+        let a = d.endpoint(0).alloc(1);
+        let b = DoorbellBatch::open(&ep1);
+        ep1.r_write(a, 1);
+        b.flush();
+        assert_eq!(d.node(0).nic.metrics.doorbells.load(SeqCst), 1);
+        ep1.r_write(a, 2);
+        drop(b);
+        assert_eq!(d.node(0).nic.metrics.doorbells.load(SeqCst), 2);
     }
 
     #[test]

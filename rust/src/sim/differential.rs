@@ -34,6 +34,17 @@ const RING_CAPACITY: u32 = 8;
 /// Run the differential schedule for `seed` over `steps` steps and
 /// return the trace lines (no trailing newline per line).
 pub fn differential_trace(seed: u64, steps: u32) -> Vec<String> {
+    differential_trace_with_batching(seed, steps, false)
+}
+
+/// [`differential_trace`] with doorbell batching toggled. The trace
+/// alphabet records protocol outcomes, never pricing, and the batch
+/// layer executes memory effects eagerly in program order — so the
+/// batched trace must be byte-identical to the unbatched one on every
+/// seed. That equivalence is the Python-oracle half of the batching
+/// acceptance: the oracle transliterates the unbatched protocol, and
+/// stays lockstep with a batched Rust run for free.
+pub fn differential_trace_with_batching(seed: u64, steps: u32, batching: bool) -> Vec<String> {
     let mut rng = Prng::seed_from(seed);
     let nodes = (1 + rng.below(2)) as u16;
     let home = rng.below(nodes as u64) as u16;
@@ -43,7 +54,7 @@ pub fn differential_trace(seed: u64, steps: u32) -> Vec<String> {
     let places: Vec<u16> = (0..n).map(|_| rng.below(nodes as u64) as u16).collect();
     let max_crashes = rng.below(3) as u32;
 
-    let domain = RdmaDomain::new(nodes, 1 << 14, DomainConfig::counted());
+    let domain = RdmaDomain::new(nodes, 1 << 14, DomainConfig::counted().with_batching(batching));
     let lock = make_lock("qplock", &domain, home, n as u32, budget);
     assert!(lock.enable_leases(lease_ticks));
     let sweep_eps: Vec<Endpoint> = (0..nodes).map(|nd| domain.endpoint(nd)).collect();
@@ -235,6 +246,19 @@ mod tests {
         let a = differential_trace(1, 200);
         let b = differential_trace(2, 200);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn batched_trace_is_byte_identical_to_unbatched() {
+        // Doorbell batching defers only NIC pricing; every memory
+        // effect still executes eagerly in program order, so the
+        // handle-level trace — and with it the Python-oracle diff —
+        // cannot move.
+        for seed in [1, 7, 42] {
+            let unbatched = differential_trace_with_batching(seed, 300, false);
+            let batched = differential_trace_with_batching(seed, 300, true);
+            assert_eq!(unbatched, batched, "seed {seed}");
+        }
     }
 
     // Coverage of the shared alphabet (holds, arms, fences, relays,

@@ -1,0 +1,9 @@
+// Seeded violation: two raw verb issues in one function with no
+// DoorbellBatch scope — each rings its own doorbell where a chained
+// post would ring one. verb-lint must flag line 8 (the second issue).
+use qplock::rdma::{Addr, Endpoint};
+
+pub fn double_ring(ep: &Endpoint, desc: Addr, ring: Addr) {
+    let token = ep.r_read(desc);
+    ep.r_write(ring, token + 1);
+}

@@ -453,3 +453,40 @@ fn acceptance_64_procs_100_locks_all_four_points() {
         r.pid_slots_reclaimed()
     );
 }
+
+#[test]
+fn batched_lease_heartbeat_stays_nic_silent() {
+    // Doorbell-batching satellite: `HandleCache::renew_pending` opens a
+    // batch scope over the whole heartbeat pass, but renewals are local
+    // writes on the session's own node by design — the scope must stay
+    // empty and the pass must ring zero doorbells on either NIC,
+    // keeping the "leases are NIC-silent" §Perf entry intact with
+    // batching enabled.
+    use std::sync::atomic::Ordering::SeqCst;
+
+    let cluster = Cluster::new(2, 1 << 18, DomainConfig::counted().with_batching(true));
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8)
+            .with_default_max_procs(8)
+            .with_lease_ticks(TICKS),
+    );
+    svc.create_lock("h", "qplock", 0, 8, 8).unwrap();
+    let mut holder = svc.session(1);
+    assert_eq!(holder.submit("h").unwrap(), LockPoll::Held);
+    let mut parked = svc.session(1);
+    park(&mut parked, "h");
+
+    let nics = |n: u16| {
+        let m = &cluster.domain.node(n).nic.metrics;
+        (m.ops.load(SeqCst), m.doorbells.load(SeqCst))
+    };
+    let before = (nics(0), nics(1));
+    parked.renew_pending();
+    holder.renew_pending();
+    assert_eq!(before, (nics(0), nics(1)), "lease heartbeat touched a NIC");
+
+    holder.release("h").unwrap();
+    let held = parked.poll_all();
+    assert_eq!(held, vec!["h".to_string()], "handoff survives the batched heartbeat");
+    parked.release("h").unwrap();
+}

@@ -278,3 +278,101 @@ fn prop_spread_procs_always_well_formed() {
         assert_eq!(pids, (0..n).collect::<Vec<_>>(), "seed {seed}");
     }
 }
+
+/// One deterministic randomized qplock schedule (polls, unlocks, arms,
+/// ring drains, lease ticks, sweeps) with per-actor verb accounting.
+/// Returns every actor's op-count snapshot (handles first, then the
+/// per-node sweeper endpoints) with `net_ns` zeroed — batching changes
+/// *pricing*, never the verb stream, so everything else must match.
+fn scheduled_verb_totals(seed: u64, batching: bool) -> Vec<qplock::rdma::ProcMetricsSnapshot> {
+    use qplock::locks::{AsyncLockHandle, LockHandle, SweepStats, WakeupReg};
+    use qplock::rdma::{Endpoint, RdmaDomain, WakeupRing};
+
+    let mut rng = Prng::seed_from(seed);
+    let nodes = (1 + rng.below(2)) as u16;
+    let home = rng.below(nodes as u64) as u16;
+    let budget = 1 + rng.below(4);
+    let n = (2 + rng.below(3)) as usize;
+    let places: Vec<u16> = (0..n).map(|_| rng.below(nodes as u64) as u16).collect();
+
+    let domain = RdmaDomain::new(nodes, 1 << 14, DomainConfig::counted().with_batching(batching));
+    let lock = qplock::locks::make_lock("qplock", &domain, home, n as u32, budget);
+    assert!(lock.enable_leases(10));
+    let sweep_eps: Vec<Endpoint> = (0..nodes).map(|nd| domain.endpoint(nd)).collect();
+    let mut metrics = Vec::new();
+    let mut handles: Vec<Box<dyn LockHandle>> = (0..n)
+        .map(|i| {
+            let ep = domain.endpoint(places[i]);
+            metrics.push(Arc::clone(&ep.metrics));
+            lock.handle(ep, i as u32)
+        })
+        .collect();
+    let mut rings: Vec<WakeupRing> = (0..n)
+        .map(|i| WakeupRing::new(domain.endpoint(places[i]), 8))
+        .collect();
+    let mut sweep = SweepStats::default();
+
+    for _ in 0..400 {
+        let r = rng.below(100);
+        if r < 12 {
+            domain.advance_lease_clock(1 + rng.below(3));
+            continue;
+        }
+        if r < 20 {
+            // Sweep pass from every node: exercises the batched
+            // per-pass repair path in `QpInner::sweep_node`.
+            let now = domain.lease_now();
+            for ep in &sweep_eps {
+                lock.sweep_leases(ep, now, &mut sweep);
+            }
+            continue;
+        }
+        let h = rng.below(n as u64) as usize;
+        let a = handles[h].as_async().expect("qplock is poll-capable");
+        match rng.below(8) {
+            0..=4 => {
+                let _ = a.poll_lock();
+            }
+            5 => {
+                if a.is_held() {
+                    // Held releases hit the batched `q_unlock` scope,
+                    // signalled or tail-reset as the schedule dictates.
+                    let _ = handles[h].try_unlock();
+                }
+            }
+            6 => {
+                let reg = WakeupReg {
+                    ring: rings[h].header(),
+                    token: h as u64,
+                    ring_slots: rings[h].lane_slots(),
+                };
+                let _ = a.arm_wakeup(reg);
+            }
+            _ => while rings[h].pop().is_some() {},
+        }
+    }
+
+    metrics
+        .iter()
+        .chain(sweep_eps.iter().map(|ep| &ep.metrics))
+        .map(|m| {
+            let mut s = m.snapshot();
+            s.net_ns = 0;
+            s
+        })
+        .collect()
+}
+
+#[test]
+fn prop_doorbell_batching_is_protocol_equivalent() {
+    // ISSUE satellite: the batched release / sweep-repair / heartbeat
+    // paths must be protocol-equivalent to unbatched issue — identical
+    // per-class verb totals for every actor on every seed. Runs under
+    // the debug-build verb sanitizer, so any contract violation on the
+    // batched path panics here too.
+    for seed in seeds() {
+        let unbatched = scheduled_verb_totals(seed, false);
+        let batched = scheduled_verb_totals(seed, true);
+        assert_eq!(unbatched, batched, "seed {seed}: verb totals diverged");
+    }
+}

@@ -74,6 +74,18 @@ fn waker_block_remote_verb_fixture_is_flagged_at_line_9() {
     assert!(flagged(&d, "local-silence", 9), "{d:#?}");
 }
 
+#[test]
+fn raw_doorbell_fixture_is_flagged_at_line_8() {
+    // PR 9: two raw verb issues in one function, no DoorbellBatch
+    // scope — flagged at the second issue, where the extra doorbell
+    // rings.
+    let d = lint_fixture("raw_doorbell.rs");
+    assert!(flagged(&d, "raw-doorbell", 8), "{d:#?}");
+    // The fixture trips nothing else: reads and writes are not RMWs,
+    // and no registry word is named.
+    assert_eq!(d.len(), 1, "{d:#?}");
+}
+
 /// The dynamic half of the acceptance bar: with the seeded PR 3
 /// hazard re-enabled (a co-located passer claiming the CPU-owned ring
 /// cursor through the NIC lane), the NIC-level sanitizer must abort
