@@ -46,9 +46,27 @@ lease-word arbitration is what keeps revocation single-grant; the
 model checks the protocol logic at poll/sweep atomicity (the Rust CAS
 races live below this granularity and are covered by the Rust tests).
 
+Shared-mode extension (mirrors ISSUE 10's reader–writer layer): a
+handle may carry `LockMode::Shared`. A reader's fast path is one count
+FAA (`rcount[class]`) plus one read of the batch-close flag — admitted
+with no queue traffic while no writer has closed the batch; a closed
+batch sends the reader down the ordinary queue path, where reaching
+the queue head admits it FIFO (bumping the generation word if its
+admission reopens the batch), joins via the count FAA, and relays the
+queue token immediately. A writer's enqueue closes the batch (bounding
+the crowd), and after its ownership commit it sits in `WaitDrain`
+until both class counts read zero; its release reopens the batch. A
+fenced shared member's repair is the sweeper's proxy count decrement —
+a crashed reader can never wedge a writer's drain. The sticky `rw`
+gate mirrors the Rust one: exclusive-only locks execute the identical
+pre-shared protocol.
+
 Checked invariants, over many random seeds:
   * mutual exclusion (at most one holder per lock, both cohorts),
     including across every revoke/fence/repair;
+  * reader–writer exclusion (a writer enters only over zero committed
+    readers, a reader is never admitted over a writer), including
+    across crashed readers repaired by proxy;
   * progress (every surviving handle completes its target cycles in
     bounded steps, with armed handles woken only by their tokens; dead
     handles never wedge the survivors behind them);
@@ -139,7 +157,16 @@ class Lock:
         self.waker = [None, None]
         self.peterson_wakeups = False  # sticky signalling gate
         self.peterson_fired = 0  # model stat: waker-block publications
+        # Shared-mode registers (ISSUE 10): the sticky rw gate, the
+        # batch-close flag, the generation word, and the per-class
+        # live-reader counts (rcount[LOCAL] CPU-FAA'd, rcount[REMOTE]
+        # rFAA'd — one queue in this single-scheduler model).
+        self.rw = False
+        self.batch_close = 0
+        self.reader_gen = 0
+        self.rcount = [0, 0]
         self.holder = None  # oracle only
+        self.readers = 0  # oracle only: committed shared holds
 
     def signal_peterson(self, woken_cls):
         """`signal_peterson`: after an event that can resolve class
@@ -174,6 +201,9 @@ class Handle:
         self.node = session.node
         self.hid = hid
         self.cls = LOCAL if session.node == lock.home else REMOTE
+        self.mode = "excl"  # "excl" | "shared" (set while Idle only)
+        self.shared_hold = False  # current Held is a reader hold
+        self.drain_closed = False  # WaitDrain re-asserted batch-close
         self.bud = 0  # descriptor: budget word
         self.next = None  # descriptor: link word
         self.wake_armed = False  # descriptor: wake-ring word (0 / set)
@@ -195,6 +225,9 @@ class Handle:
             "already_ready": 0,
             "late_rejected": 0,
             "expired_polls": 0,
+            "shared_fast": 0,
+            "shared_queued": 0,
+            "drain_waits": 0,
         }
 
     def _verb(self, n=1):
@@ -218,6 +251,8 @@ class Handle:
     def _lease_expired(self):
         self.abandoning = False
         self.state = "Idle"
+        # A fenced shared member's decrement belongs to the sweeper.
+        self.shared_hold = False
         # Forget (don't clear) any waker-block registration: a fenced
         # epoch must not write shared words, and a successor leader's
         # re-registration overwrites the block anyway.
@@ -233,6 +268,26 @@ class Handle:
                     # Revoked slot still mid-repair: a resubmit would
                     # corrupt the relay — park until the reap.
                     return "Pending"
+            # Shared-mode fast path (step_submit): while no writer has
+            # the batch closed, a reader's whole acquisition is one
+            # count FAA plus one flag read — no queue traffic at all.
+            if self.mode == "shared" and self._admit_shared():
+                self.epoch += 1
+                self.lease = {
+                    "epoch": self.epoch,
+                    "phase": "SHARED",
+                    "deadline": now + self.lock.lease_ticks,
+                    "fenced": False,
+                    "reaped": False,
+                }
+                self.shared_hold = True
+                self.state = "Held"
+                assert self.lock.holder is None, (
+                    f"RW violated: reader {self.hid} admitted over a writer"
+                )
+                self.lock.readers += 1
+                self.stats["shared_fast"] += 1
+                return "Held"
             self.epoch += 1
             self.lease = {
                 "epoch": self.epoch,
@@ -251,8 +306,12 @@ class Handle:
             return self._step_wait_budget(now)
         if self.state in ("Reacquire", "EngagePeterson"):
             return self._step_peterson(now)
+        if self.state == "WaitDrain":
+            return self._step_wait_drain(now)
         assert self.state == "Held"
-        if not self._lease_update("HELD", now):
+        # A shared hold renews under its own phase tag so the sweeper
+        # repairs it as a generation member.
+        if not self._lease_update("SHARED" if self.shared_hold else "HELD", now):
             if self.lock.holder is self:
                 self.lock.holder = None
             return self._lease_expired()
@@ -268,6 +327,12 @@ class Handle:
             self.curr = seen
             return "Pending"
         lk.tail[self.cls] = self  # CAS landed
+        if self.mode == "excl" and lk.rw:
+            # A writer's enqueue closes the reader batch: fast-path
+            # readers arriving after this write queue behind it, which
+            # is what bounds the crowd a draining writer waits out.
+            self._verb()  # batch-close write
+            lk.batch_close = 1
         if self.curr is None:
             self.bud = lk.budget
             self._verb()  # victim write
@@ -317,11 +382,20 @@ class Handle:
         return self._finish(now)
 
     def _finish(self, now):
+        if self.mode == "shared":
+            return self._finish_shared(now)
         # The HELD transition is the ownership commit point: losing it
         # to the fence means the sweeper owns (and relays) this
         # acquisition — back off without entering (single grant).
         if not self._lease_update("HELD", now):
             return self._lease_expired()
+        if self.lock.rw:
+            # Shared mode is live on this lock: before entering the
+            # critical section the writer must wait out the reader
+            # generation admitted ahead of it.
+            self.state = "WaitDrain"
+            self.drain_closed = False
+            return self._step_wait_drain(now)
         self.state = "Held"
         if self.abandoning:
             self.abandoning = False
@@ -334,6 +408,95 @@ class Handle:
         )
         self.lock.holder = self
         return "Held"
+
+    def _finish_shared(self, now):
+        """A shared waiter reached the queue head: FIFO admitted.
+        Commit under the SHARED phase (the sweeper's repair for this
+        slot is the count decrement, not a queue relay), bump the
+        generation word if this admission reopens a closed batch, join
+        via the count FAA, and relay the queue token immediately —
+        shared holders never pin the queue."""
+        if not self._lease_update("SHARED", now):
+            return self._lease_expired()
+        if self.abandoning:
+            self.abandoning = False
+            self.state = "Idle"
+            self.lease = None  # release claim (live: cannot fail here)
+            self._q_unlock()
+            return "Cancelled"
+        lk = self.lock
+        self._verb()  # batch-close read
+        if lk.batch_close == 0:
+            self._verb(2)  # generation read + write
+            lk.reader_gen += 1
+        self._verb()  # count FAA
+        lk.rcount[self.cls] += 1
+        self.shared_hold = True
+        self.state = "Held"
+        assert lk.holder is None, (
+            f"RW violated: reader {self.hid} admitted over a writer"
+        )
+        lk.readers += 1
+        self.stats["shared_queued"] += 1
+        self._q_unlock()
+        return "Held"
+
+    def _step_wait_drain(self, now):
+        """One drain probe of a committed writer (step_wait_drain):
+        re-assert the batch-close flag once (the previous writer's
+        release reopened it; the store precedes the count reads — the
+        writer's half of the reader-admit-window Dekker pair), then
+        read both class's live-reader counts. Zero on both means the
+        generation drained and the critical section is ours."""
+        if not self._lease_update("HELD", now):
+            return self._lease_expired()
+        lk = self.lock
+        if not self.drain_closed:
+            self._verb()  # batch-close write
+            lk.batch_close = 1
+            self.drain_closed = True
+        self._verb(2)  # both count reads
+        if lk.rcount[LOCAL] != 0 or lk.rcount[REMOTE] != 0:
+            self.stats["drain_waits"] += 1
+            return "Pending"
+        self.state = "Held"
+        if self.abandoning:
+            self.abandoning = False
+            self.state = "Idle"
+            self.lease = None  # release claim (live: cannot fail here)
+            self._release_exclusive()
+            return "Cancelled"
+        assert lk.holder is None and lk.readers == 0, (
+            f"RW violated: writer {self.hid} entered over "
+            f"{lk.readers} readers"
+        )
+        lk.holder = self
+        return "Held"
+
+    def _admit_shared(self):
+        """Reader fast-path admission (admit_shared): publish with the
+        count FAA, then re-read the batch-close flag — the reader's
+        half of the reader-admit-window Dekker pair: either the
+        draining writer sees our count or we see its flag. Flag set:
+        withdraw the optimistic admit and take the queue path."""
+        lk = self.lock
+        self._verb(2)  # count FAA + flag read
+        lk.rcount[self.cls] += 1
+        if lk.batch_close == 0:
+            return True
+        self._verb()  # withdrawing FAA
+        lk.rcount[self.cls] -= 1
+        return False
+
+    def _release_exclusive(self):
+        """An exclusive holder's release: reopen the reader fast path
+        (ending the closed batch — this is what admits the next reader
+        crowd), then the ordinary queue handoff. With the rw gate off
+        this is exactly _q_unlock."""
+        if self.lock.rw:
+            self._verb()  # batch-close write
+            self.lock.batch_close = 0
+        self._q_unlock()
 
     # -- wakeup registration (arm_wakeup transliteration) --
     def arm(self):
@@ -409,13 +572,25 @@ class Handle:
         arbitration — a fenced epoch's release is a provable no-op."""
         if self.lease is not None and self.lease["fenced"]:
             self.state = "Idle"
+            self.shared_hold = False
             self.stats["late_rejected"] += 1
             return False
+        if self.shared_hold:
+            # A shared holder's release: the single count decrement,
+            # ours exclusively — the release claim won the lease word,
+            # so the sweeper can never also decrement for this epoch.
+            self.shared_hold = False
+            self.state = "Idle"
+            self.lease = None  # claim: live -> 0
+            self.lock.readers -= 1
+            self._verb()  # count FAA
+            self.lock.rcount[self.cls] -= 1
+            return True
         assert self.lock.holder is self
         self.lock.holder = None
         self.state = "Idle"
         self.lease = None  # claim: live -> 0; sweeper can never revoke
-        self._q_unlock()
+        self._release_exclusive()
         return True
 
     def _q_unlock(self):
@@ -489,6 +664,10 @@ class Sweeper:
             # crash; the zombie's own ops are fenced from now on).
             if h.lock.holder is h:
                 h.lock.holder = None
+            if le["phase"] == "SHARED":
+                # The fenced member leaves the oracle's reader set now;
+                # its count decrement is the repair's, below.
+                h.lock.readers -= 1
         self._repair(h, now)
 
     def _repair(self, h, now):
@@ -511,6 +690,16 @@ class Sweeper:
             if lk.tail[1 - h.cls] is not None and lk.victim == h.cls:
                 return  # Peterson wait continues; retry next sweep
             self._relay(h, lk.budget - 1, now)
+        elif le["phase"] == "SHARED":
+            # A dead shared member holds no queue state — its queue
+            # token (if it ever had one) was relayed in the admission
+            # poll. The repair is the member's single count decrement
+            # by proxy, so a crashed reader can never wedge a writer's
+            # drain. Ours exclusively: the fence beat the member's
+            # release claim, and a fenced member's release is a no-op.
+            lk.rcount[h.cls] -= 1
+            self.stats["released"] += 1
+            self._reap(h, now)
         else:
             assert le["phase"] == "HELD"
             assert h.bud >= 1 and h.bud != WAITING
@@ -567,6 +756,10 @@ def run_schedule(seed):
         Handle(lock, sessions[rng.randrange(nsessions)], i, race)
         for i in range(n)
     ]
+    for h in handles:
+        if rng.random() < 0.4:
+            h.mode = "shared"
+            lock.rw = True  # the sticky gate (set_lock_mode)
     sweeper = Sweeper(handles)
     target = 25
     completed = [0] * n
@@ -644,6 +837,10 @@ def run_schedule(seed):
     def crash_point_of(h):
         if h.state == "Held" and lock.holder is h:
             return "holding"
+        if h.state == "Held" and h.shared_hold:
+            return "holding-shared"
+        if h.state == "WaitDrain":
+            return "draining"
         if h.state == "WaitBudget":
             if h.bud != WAITING:
                 return "mid-handoff"
@@ -658,7 +855,7 @@ def run_schedule(seed):
         if stall:
             crashes["stalled"] += 1
             h.stalled = True
-            h.stalled_holding = point == "holding"
+            h.stalled_holding = point in ("holding", "holding-shared")
             if point == "holding":
                 # The stalled CS is abandoned (mirror: checker exit at
                 # stall; the zombie validates its lease before any
@@ -757,17 +954,30 @@ def run_schedule(seed):
                     completed[done.hid] += 1
 
     # Drain: finish every in-flight acquisition, release holders, and
-    # let the sweeper complete every outstanding repair.
+    # let the sweeper complete every outstanding repair — including
+    # crash debris whose lease has not even expired yet, so quiescence
+    # below can assert the reader counts returned to zero.
     def open_repairs():
+        for h in handles:
+            le = h.lease
+            if le is None:
+                continue
+            if le["fenced"] and not le["reaped"]:
+                return True
+            if (h.dead or h.stalled) and not le["fenced"]:
+                return True  # crash debris: sweep until fenced+reaped
+        return False
+
+    def live_shared_holds():
         return any(
-            h.lease is not None and h.lease["fenced"] and not h.lease["reaped"]
-            for h in handles
+            h.shared_hold and not h.dead and not h.stalled for h in handles
         )
 
     drains = 0
     while (
         any(s.scan or s.armed for s in sessions)
         or lock.holder is not None
+        or live_shared_holds()
         or open_repairs()
     ):
         drains += 1
@@ -777,6 +987,9 @@ def run_schedule(seed):
         if lock.holder is not None and not lock.holder.dead:
             if not lock.holder.stalled:
                 lock.holder.unlock()
+        for h in handles:
+            if h.shared_hold and not h.dead and not h.stalled and h.state == "Held":
+                h.unlock()
         for sess in sessions:
             for done in poll_ready(sess):
                 done.unlock()
@@ -790,6 +1003,16 @@ def run_schedule(seed):
                 h.session.armed.pop(h.hid, None)
                 h.session.scan.discard(h.hid)
 
+    # Quiescence: every committed reader — released, killed, stalled,
+    # or fenced mid-hold — returned its count, and the batch state is
+    # consistent (a closed batch with no writer left is legal debris
+    # only while a dead writer's relay is mid-flight, which the drain
+    # above ruled out... except that a crashed WaitDrain writer's
+    # closed batch is reopened by the *next* writer's release, so the
+    # flag itself may stay set; the counts must not).
+    assert lock.holder is None, f"seed {seed}: holder leaked"
+    assert lock.readers == 0, f"seed {seed}: reader oracle leaked: {lock.readers}"
+    assert lock.rcount == [0, 0], f"seed {seed}: rcount leaked: {lock.rcount}"
     for h in handles:
         if h.cls == LOCAL:
             assert h.remote_verbs == 0, f"seed {seed}: local class used NIC"
@@ -811,6 +1034,9 @@ def run_schedule(seed):
         "reaped": sweeper.stats["reaped"],
         "late_rejected": late,
         "expired_polls": expired,
+        "shared_fast": sum(h.stats["shared_fast"] for h in handles),
+        "shared_queued": sum(h.stats["shared_queued"] for h in handles),
+        "drain_waits": sum(h.stats["drain_waits"] for h in handles),
     }
 
 
@@ -828,6 +1054,10 @@ def run_differential(seed, steps):
     lease_ticks = 8 + rng.below(16)
     n = 2 + rng.below(4)
     places = [rng.below(nodes) for _ in range(n)]
+    # Per-handle lock mode for the whole run: 1 = shared (a reader),
+    # 0 = exclusive (a writer). Drawn between `places` and
+    # `max_crashes` — the Rust side draws in the identical order.
+    modes = [rng.below(2) for _ in range(n)]
     max_crashes = rng.below(3)
 
     lock = Lock(home, budget, lease_ticks)
@@ -835,6 +1065,10 @@ def run_differential(seed, steps):
         Handle(lock, Session(places[i]), i, lambda succ: None)
         for i in range(n)
     ]
+    for i, h in enumerate(handles):
+        if modes[i] == 1:
+            h.mode = "shared"
+            lock.rw = True  # the sticky gate (set_lock_mode)
     sweeper = Sweeper(handles)
     # Crash model (mirrors sim::differential): a *stall* freezes the
     # handle — the sweeper repairs around it exactly as around a dead
@@ -852,11 +1086,12 @@ def run_differential(seed, steps):
 
     out = []
     places_s = ",".join(str(p) for p in places)
+    modes_s = ",".join(str(m) for m in modes)
     out.append(
         f'{{"v":1,"kind":"qplock-sim-trace","alphabet":"handle",'
         f'"seed":{seed},"nodes":{nodes},"home":{home},"budget":{budget},'
         f'"lease":{lease_ticks},"handles":{n},"places":[{places_s}],'
-        f'"crashes":{max_crashes}}}'
+        f'"modes":[{modes_s}],"crashes":{max_crashes}}}'
     )
     for i in range(steps):
         r = rng.below(100)
@@ -928,6 +1163,7 @@ def run_differential(seed, steps):
         "WaitBudget": "wait",
         "Reacquire": "engage",
         "EngagePeterson": "engage",
+        "WaitDrain": "engage",  # post-commit wait; AcqPhase::Engage
         "Held": "held",
     }
     states = ",".join(f'"{state_of[handles[h].state]}"' for h in range(n))
@@ -971,6 +1207,9 @@ def main():
         "reaped": 0,
         "late_rejected": 0,
         "expired_polls": 0,
+        "shared_fast": 0,
+        "shared_queued": 0,
+        "drain_waits": 0,
     }
     points = set()
     for seed in range(cases):
@@ -984,8 +1223,16 @@ def main():
     )
     assert tot["ready"] > 0, "the arm-vs-handoff race was never exercised"
     assert tot["killed"] > 0 and tot["stalled"] > 0, "crashes never injected"
-    assert points == {"holding", "enqueued", "mid-handoff", "armed"}, (
-        f"crash points not all covered: {sorted(points)}"
+    assert points == {
+        "holding", "enqueued", "mid-handoff", "armed",
+        "holding-shared", "draining",
+    }, f"crash points not all covered: {sorted(points)}"
+    assert tot["shared_fast"] > 0, "no reader ever took the fast path"
+    assert tot["shared_queued"] > 0, (
+        "no reader ever queued behind a closed batch"
+    )
+    assert tot["drain_waits"] > 0, (
+        "no writer ever waited out a reader generation"
     )
     assert tot["fenced"] > 0 and tot["fenced"] == tot["reaped"], (
         "revocations left unrepaired"
@@ -999,10 +1246,13 @@ def main():
         f"fired, {tot['peterson_fired']} Peterson-waker signals, "
         f"{tot['ready']} already-ready races caught; crashes: "
         f"{tot['killed']} killed + {tot['stalled']} zombies at "
-        f"{len(points)}/4 points, {tot['fenced']} revoked, "
+        f"{len(points)}/6 points, {tot['fenced']} revoked, "
         f"{tot['relayed']} relays, {tot['released']} tails reset, "
         f"{tot['late_rejected']} late writes fenced, "
-        f"{tot['expired_polls']} expired polls)"
+        f"{tot['expired_polls']} expired polls; shared: "
+        f"{tot['shared_fast']} fast-path admits, "
+        f"{tot['shared_queued']} queued readers, "
+        f"{tot['drain_waits']} writer drain waits)"
     )
 
 

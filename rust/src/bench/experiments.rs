@@ -10,7 +10,9 @@
 //! thread-per-process against poll-multiplexed acquisition; E12
 //! measures the scan-vs-ready-list poll cost at large parked-waiter
 //! counts, plus the work-stealing executor fleet with the fallback
-//! sweep disabled (one million parked waiters at full scale); E15
+//! sweep disabled (one million parked waiters at full scale); E14
+//! sweeps shared-mode reader–writer traffic (read-ratio × skew × K)
+//! against the exclusive-only and RPC-server baselines; E15
 //! ablates doorbell batching on the signalled remote-handoff path
 //! (batch on/off × NIC congestion × lock count).
 //!
@@ -22,9 +24,9 @@ use std::time::{Duration, Instant};
 
 use super::table::Table;
 use crate::coordinator::{
-    exec_probe, ready_list_probe, run_crash_workload, run_multi_lock_workload,
-    run_multiplexed_workload, run_workload, Cluster, CrashPlan, CsWork, ExecProbeConfig,
-    LockService, PollMode, RunResult, Workload,
+    exec_crash_probe, exec_probe, ready_list_probe, run_crash_workload, run_multi_lock_workload,
+    run_multiplexed_workload, run_workload, Cluster, CrashPlan, CsWork, ExecCrashConfig,
+    ExecProbeConfig, LockService, PollMode, RunResult, Workload,
 };
 use crate::locks::{make_lock, AcqPhase, ArmOutcome, Class, WakeupReg};
 use crate::mc::{self, models};
@@ -89,6 +91,11 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "crash recovery: fault injection x class mix under qplock leases",
     ),
     (
+        "e14",
+        "read-write: shared-mode reader scaling vs exclusive-only and RPC baselines \
+         (read-ratio x skew x K)",
+    ),
+    (
         "e15",
         "doorbell ablation: chained WQEs per signalled remote handoff (batch x congestion x K)",
     ),
@@ -110,6 +117,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExpOutput {
         "e11" => e11_multiplexed(scale),
         "e12" => e12_ready_wakeups(scale),
         "e13" => e13_crash_recovery(scale),
+        "e14" => e14_read_write(scale),
         "e15" => e15_doorbell_ablation(scale),
         other => panic!("unknown experiment '{other}'"),
     }
@@ -1134,9 +1142,75 @@ fn e13_crash_recovery(scale: Scale) -> ExpOutput {
             if r.wedged { "yes".into() } else { "no".into() },
         ]);
     }
+    // Worker-thread kill (ISSUE 10 satellite): the same crash
+    // discipline aimed at the scheduling layer. The E12b fleet shape —
+    // reader and writer sessions as executor tasks — loses a worker
+    // thread mid-run, and the pool itself is the repair mechanism:
+    // queued sessions are stolen, parked ones re-woken by survivors'
+    // board drains. Zero lost locks and full completion are asserted.
+    let mut wt = Table::new(
+        "E13w: worker-thread kill on the session executor (qplock, counted mode)",
+        &[
+            "sessions",
+            "locks",
+            "threads",
+            "completed",
+            "rd-cycles",
+            "wr-cycles",
+            "kill-at",
+            "steals",
+            "lost-locks",
+        ],
+    );
+    let wt_cfgs: &[ExecCrashConfig] = match scale {
+        Scale::Quick => &[ExecCrashConfig {
+            sessions: 12,
+            locks: 6,
+            cycles: 8,
+            threads: 4,
+            reader_every: 3,
+        }],
+        Scale::Full => &[
+            ExecCrashConfig {
+                sessions: 24,
+                locks: 8,
+                cycles: 16,
+                threads: 4,
+                reader_every: 3,
+            },
+            ExecCrashConfig {
+                sessions: 48,
+                locks: 12,
+                cycles: 16,
+                threads: 8,
+                reader_every: 2,
+            },
+        ],
+    };
+    for &cfg in wt_cfgs {
+        let r = exec_crash_probe(cfg);
+        assert_eq!(
+            r.completed,
+            cfg.sessions as u64 * cfg.cycles as u64,
+            "cycles lost with the dead worker"
+        );
+        assert_eq!(r.lost_locks, 0, "a session stranded a hold across the kill");
+        assert_eq!(r.exec.worker_kills, 1);
+        wt.row(&[
+            cfg.sessions.to_string(),
+            cfg.locks.to_string(),
+            cfg.threads.to_string(),
+            r.completed.to_string(),
+            r.reader_cycles.to_string(),
+            r.writer_cycles.to_string(),
+            r.kill_at.to_string(),
+            r.exec.steals.to_string(),
+            r.lost_locks.to_string(),
+        ]);
+    }
     ExpOutput {
         id: "e13",
-        tables: vec![t],
+        tables: vec![t, wt],
         notes: vec![
             format!(
                 "{procs_n} simulated processes x {iters} cycles over {nlocks} locks (skew \
@@ -1151,6 +1225,413 @@ fn e13_crash_recovery(scale: Scale) -> ExpOutput {
                 .into(),
             "invariants: zero oracle violations and zero wedged survivors in every row — \
              asserted, not just reported"
+                .into(),
+            "E13w kills a *scheduler worker* instead of a process: sessions are healthy, \
+             the work-stealing pool is the recovery mechanism, and zero lost locks plus \
+             full completion (readers included) are asserted per row"
+                .into(),
+        ],
+    }
+}
+
+// ------------------------------------------------------------------ E14
+
+/// Result of one E14 configuration run.
+struct RwStats {
+    reads: u64,
+    writes: u64,
+    /// Scheduler rounds until every actor finished its op quota — the
+    /// concurrency proxy: overlapping readers finish in fewer rounds.
+    rounds: u64,
+    /// Rounds from submit to admission, readers (0 = fast path).
+    read_wait: crate::stats::Histogram,
+    /// Rounds from submit to admission, writers.
+    write_wait: crate::stats::Histogram,
+    /// Peak readers observed inside one lock's critical section.
+    max_read_overlap: u32,
+    /// Per-mode overlap oracle violations (readers never overlap a
+    /// writer; writers overlap nothing).
+    violations: u64,
+    /// NIC ops across all nodes attributable to this run.
+    fabric_ops: u64,
+}
+
+/// Per-lock per-mode overlap oracle: tracks who is inside each critical
+/// section from the *caller's* view (between admission and release).
+struct RwOracle {
+    lk: Vec<(u32, bool)>, // (readers inside, writer inside)
+    violations: u64,
+    max_read_overlap: u32,
+}
+
+impl RwOracle {
+    fn new(k: u32) -> RwOracle {
+        RwOracle {
+            lk: vec![(0, false); k as usize],
+            violations: 0,
+            max_read_overlap: 0,
+        }
+    }
+
+    fn enter(&mut self, li: usize, write: bool) {
+        let (r, w) = &mut self.lk[li];
+        if write {
+            if *w || *r > 0 {
+                self.violations += 1; // writer overlapped someone
+            }
+            *w = true;
+        } else {
+            if *w {
+                self.violations += 1; // reader overlapped a writer
+            }
+            *r += 1;
+            self.max_read_overlap = self.max_read_overlap.max(*r);
+        }
+    }
+
+    fn exit(&mut self, li: usize, write: bool) {
+        let (r, w) = &mut self.lk[li];
+        if write {
+            *w = false;
+        } else {
+            *r -= 1;
+        }
+    }
+}
+
+/// Deterministic shared-mode headline: `n` readers on three nodes all
+/// hold one qplock concurrently on the fast path; a writer then
+/// enqueues, closes the batch, drains the generation, and acquires
+/// exclusively; after its release the generation reopens for readers.
+/// Returns `(readers held concurrently, writer drain polls)`.
+fn rw_headline(n: u32) -> (u32, u64) {
+    let cluster = Cluster::new(3, 1 << 18, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8).with_default_max_procs(n + 1),
+    );
+    let mut readers: Vec<_> = (0..n).map(|i| svc.session((i % 3) as u16)).collect();
+    let mut held = 0u32;
+    for r in readers.iter_mut() {
+        if r.submit_shared("rw-headline").expect("headline submit").is_held() {
+            held += 1;
+        }
+    }
+    let mut w = svc.session(0);
+    assert!(
+        w.submit("rw-headline").expect("headline writer").is_pending(),
+        "writer must queue behind the open generation"
+    );
+    assert!(w.poll_all().is_empty(), "writer admitted while readers hold");
+    for r in readers.iter_mut() {
+        r.release("rw-headline").expect("reader release");
+    }
+    let mut polls = 0u64;
+    while !w.poll_all().iter().any(|x| x == "rw-headline") {
+        polls += 1;
+        assert!(polls < 64, "writer never drained the generation");
+    }
+    w.release("rw-headline").expect("writer release");
+    // The writer's release reopens the generation: a fresh reader gets
+    // the fast path again.
+    assert!(
+        readers[0].submit_shared("rw-headline").expect("reopen").is_held(),
+        "generation failed to reopen after the writer"
+    );
+    readers[0].release("rw-headline").expect("reopen release");
+    (held, polls)
+}
+
+/// Round-robin reader–writer probe over the sharded lock service:
+/// `procs` single-op-in-flight actors (sessions spread over 3 nodes)
+/// each complete `iters` operations, drawing the lock Zipfian(`skew`)
+/// over `k` locks and the mode Bernoulli(`read_ratio`). `shared`
+/// selects `submit_shared` for reads; off, the identical draw sequence
+/// runs exclusive-only (the baseline). Held sections span one extra
+/// round so admissions can overlap observably. Counted mode, one OS
+/// thread: bit-deterministic.
+fn rw_probe(shared: bool, procs: u32, k: u32, iters: u64, read_ratio: f64, skew: f64) -> RwStats {
+    enum St {
+        Idle,
+        Pending { li: usize, name: String, write: bool, since: u64 },
+        Held { li: usize, name: String, write: bool, left: u32 },
+    }
+    struct Actor {
+        sess: crate::coordinator::HandleCache,
+        rng: crate::util::prng::Prng,
+        st: St,
+        left_ops: u64,
+        done: bool,
+    }
+    let cluster = Cluster::new(3, 1 << 21, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8).with_default_max_procs(procs),
+    );
+    let zipf = crate::util::prng::Zipf::new(k, skew);
+    let mut actors: Vec<Actor> = (0..procs)
+        .map(|i| Actor {
+            sess: svc.session((i % 3) as u16),
+            // Same seeds in every E14 configuration, so the op streams
+            // are identical across shared / exclusive / RPC runs.
+            rng: crate::util::prng::Prng::seed_from(0xE14_0000 + i as u64 * 7919),
+            st: St::Idle,
+            left_ops: iters,
+            done: false,
+        })
+        .collect();
+    let mut oracle = RwOracle::new(k);
+    let mut s = RwStats {
+        reads: 0,
+        writes: 0,
+        rounds: 0,
+        read_wait: crate::stats::Histogram::new(),
+        write_wait: crate::stats::Histogram::new(),
+        max_read_overlap: 0,
+        violations: 0,
+        fabric_ops: 0,
+    };
+    let (ops0, _) = nic_totals(&cluster.domain);
+    let mut rounds = 0u64;
+    while actors.iter().any(|a| !a.done) {
+        rounds += 1;
+        assert!(rounds < 1 << 20, "e14 wedged at rr={read_ratio} skew={skew} K={k}");
+        for a in actors.iter_mut() {
+            if a.done {
+                continue;
+            }
+            match &mut a.st {
+                St::Idle => {
+                    if a.left_ops == 0 {
+                        a.done = true;
+                        continue;
+                    }
+                    let li = zipf.sample(&mut a.rng) as usize;
+                    let write = !a.rng.chance(read_ratio);
+                    let name = crate::coordinator::lock_name(li as u32);
+                    let poll = if !write && shared {
+                        a.sess.submit_shared(&name)
+                    } else {
+                        a.sess.submit(&name)
+                    }
+                    .expect("e14 submit");
+                    if poll.is_held() {
+                        oracle.enter(li, write);
+                        if write {
+                            s.write_wait.record(0);
+                        } else {
+                            s.read_wait.record(0);
+                        }
+                        a.st = St::Held { li, name, write, left: 1 };
+                    } else {
+                        a.st = St::Pending { li, name, write, since: rounds };
+                    }
+                }
+                St::Pending { li, name, write, since } => {
+                    let (li, name, write, since) = (*li, name.clone(), *write, *since);
+                    if a.sess.poll_all().iter().any(|n| *n == name) {
+                        oracle.enter(li, write);
+                        if write {
+                            s.write_wait.record(rounds - since);
+                        } else {
+                            s.read_wait.record(rounds - since);
+                        }
+                        a.st = St::Held { li, name, write, left: 1 };
+                    }
+                }
+                St::Held { left, .. } if *left > 0 => *left -= 1,
+                St::Held { li, name, write, .. } => {
+                    let (li, name, write) = (*li, name.clone(), *write);
+                    oracle.exit(li, write);
+                    a.sess.release(&name).expect("e14 release");
+                    if write {
+                        s.writes += 1;
+                    } else {
+                        s.reads += 1;
+                    }
+                    a.left_ops -= 1;
+                    a.st = St::Idle;
+                }
+            }
+        }
+    }
+    let (ops1, _) = nic_totals(&cluster.domain);
+    s.rounds = rounds;
+    s.max_read_overlap = oracle.max_read_overlap;
+    s.violations = oracle.violations;
+    s.fabric_ops = ops1 - ops0;
+    s
+}
+
+/// RPC-server reader baseline: the same actor seeds and draw order as
+/// [`rw_probe`], but every op — read or write — is a blocking
+/// lock/unlock round trip through the home-node server. Ops are
+/// closed-loop (one per actor turn, nothing held across turns), so
+/// reads can never overlap: the column the shared rows are measured
+/// against.
+fn rpc_probe(procs: u32, k: u32, iters: u64, read_ratio: f64, skew: f64) -> RwStats {
+    let d = RdmaDomain::new(3, 1 << 21, DomainConfig::counted());
+    let locks: Vec<_> = (0..k)
+        .map(|i| make_lock("rpc-server", &d, (i % 3) as u16, procs, 8))
+        .collect();
+    let mut handles: Vec<Vec<_>> = (0..procs)
+        .map(|p| {
+            locks
+                .iter()
+                .map(|l| l.handle(d.endpoint((p % 3) as u16), p))
+                .collect()
+        })
+        .collect();
+    let zipf = crate::util::prng::Zipf::new(k, skew);
+    let mut s = RwStats {
+        reads: 0,
+        writes: 0,
+        rounds: procs as u64 * iters, // one completed op per actor turn
+        read_wait: crate::stats::Histogram::new(),
+        write_wait: crate::stats::Histogram::new(),
+        max_read_overlap: 1,
+        violations: 0,
+        fabric_ops: 0,
+    };
+    let (ops0, _) = nic_totals(&d);
+    for p in 0..procs as usize {
+        let mut rng = crate::util::prng::Prng::seed_from(0xE14_0000 + p as u64 * 7919);
+        for _ in 0..iters {
+            let li = zipf.sample(&mut rng) as usize;
+            let write = !rng.chance(read_ratio);
+            handles[p][li].lock();
+            handles[p][li].unlock();
+            if write {
+                s.writes += 1;
+            } else {
+                s.reads += 1;
+            }
+        }
+    }
+    let (ops1, _) = nic_totals(&d);
+    s.fabric_ops = ops1 - ops0;
+    s
+}
+
+/// E14: shared-mode reader scaling (read-ratio × skew × K) against the
+/// exclusive-only qplock baseline and the RPC lock-server baseline,
+/// with the per-mode overlap oracle asserted in every cell.
+fn e14_read_write(scale: Scale) -> ExpOutput {
+    let (procs, k, iters, combos): (u32, u32, u64, &[(f64, f64)]) = match scale {
+        Scale::Quick => (12, 16, 6, &[(0.5, 0.9), (0.95, 0.9)]),
+        Scale::Full => (
+            48,
+            100,
+            20,
+            &[
+                (0.5, 0.5),
+                (0.9, 0.5),
+                (0.99, 0.5),
+                (0.5, 0.99),
+                (0.9, 0.99),
+                (0.99, 0.99),
+            ],
+        ),
+    };
+    let headline_n = procs.min(8);
+    let (held, drain_polls) = rw_headline(headline_n);
+    assert_eq!(held, headline_n, "every reader must share the open generation");
+    let mut ht = Table::new(
+        "E14a: shared-mode headline — one qplock, N readers, one writer (counted mode)",
+        &["readers", "held-concurrently", "writer-drain-polls", "reopened"],
+    );
+    ht.row(&[
+        headline_n.to_string(),
+        held.to_string(),
+        drain_polls.to_string(),
+        "yes".into(),
+    ]);
+
+    let mut t = Table::new(
+        "E14b: reader-writer sweep — read-ratio x skew x K (qplock shared vs \
+         exclusive-only vs RPC server; counted mode)",
+        &[
+            "config",
+            "read%",
+            "skew",
+            "K",
+            "reads",
+            "writes",
+            "rounds",
+            "rd-wait p50",
+            "rd-wait p99",
+            "wr-wait p50",
+            "wr-wait p99",
+            "max-rd-overlap",
+            "fabric/op",
+            "violations",
+        ],
+    );
+    let wait = |h: &crate::stats::Histogram, q: f64| {
+        if h.count() == 0 {
+            "-".to_string()
+        } else {
+            h.quantile(q).to_string()
+        }
+    };
+    for &(rr, skew) in combos {
+        let sh = rw_probe(true, procs, k, iters, rr, skew);
+        let ex = rw_probe(false, procs, k, iters, rr, skew);
+        let rp = rpc_probe(procs, k, iters, rr, skew);
+        // Same seeds everywhere, so the three runs execute the same op
+        // stream — the columns differ only in how the lock admits it.
+        assert_eq!(sh.reads, ex.reads, "shared/exclusive draw streams diverged");
+        assert_eq!(sh.reads, rp.reads, "qplock/rpc draw streams diverged");
+        // The budget word arbitrates shared batches like any other
+        // cohort: the writer tail stays bounded even at peak skew.
+        assert!(
+            sh.write_wait.count() == 0 || sh.write_wait.p99() <= 16 * procs as u64,
+            "writer p99 unbounded under shared batches: {} rounds",
+            sh.write_wait.p99()
+        );
+        for (cfg, s) in [("qplock rw", &sh), ("qplock excl", &ex), ("rpc excl", &rp)] {
+            assert_eq!(
+                s.violations, 0,
+                "{cfg}: per-mode overlap oracle violated at rr={rr} skew={skew} K={k}"
+            );
+            t.row(&[
+                cfg.into(),
+                format!("{:.0}", rr * 100.0),
+                format!("{skew}"),
+                k.to_string(),
+                s.reads.to_string(),
+                s.writes.to_string(),
+                s.rounds.to_string(),
+                wait(&s.read_wait, 0.50),
+                wait(&s.read_wait, 0.99),
+                wait(&s.write_wait, 0.50),
+                wait(&s.write_wait, 0.99),
+                s.max_read_overlap.to_string(),
+                format!("{:.2}", s.fabric_ops as f64 / (s.reads + s.writes).max(1) as f64),
+                s.violations.to_string(),
+            ]);
+        }
+    }
+    ExpOutput {
+        id: "e14",
+        tables: vec![ht, t],
+        notes: vec![
+            format!(
+                "{procs} actors (sessions over 3 nodes) x {iters} ops each; lock drawn \
+                 Zipfian over K locks, mode Bernoulli(read%); held sections span one \
+                 extra scheduler round so admissions can overlap observably"
+            ),
+            "rounds = scheduler rounds until every actor finished — the concurrency \
+             proxy: shared-mode readers overlap, so high read% completes in fewer \
+             rounds than the same draw stream run exclusive-only"
+                .into(),
+            "rpc rows are closed-loop blocking round trips (nothing held across \
+             turns): reads can never overlap (max-rd-overlap 1) and every op pays \
+             the request/reply fabric cost, server CPU included in fabric/op"
+                .into(),
+            "invariants, asserted not just reported: zero per-mode oracle violations \
+             in every cell (readers never overlap a writer, writers overlap \
+             nothing); identical op streams across configs; writer wait p99 \
+             bounded at peak skew; headline: all N readers hold concurrently, the \
+             writer drains the generation, and the generation reopens"
                 .into(),
         ],
     }
@@ -1362,7 +1843,7 @@ mod tests {
 
     #[test]
     fn registry_covers_all_ids() {
-        assert_eq!(EXPERIMENTS.len(), 14);
+        assert_eq!(EXPERIMENTS.len(), 15);
         for (id, _) in EXPERIMENTS {
             assert!(id.starts_with('e'));
         }
@@ -1390,6 +1871,49 @@ mod tests {
             saw_fenced_late_write,
             "no zombie late write was ever fenced — the writeback race went unexercised"
         );
+        // ISSUE 10 satellite: the worker-thread-kill table rides along.
+        // One worker died mid-run, sessions were stolen and completed
+        // (readers and writers both), and no lock was stranded.
+        let wt = &out.tables[1];
+        assert_eq!(wt.rows(), 1);
+        assert_eq!(wt.cell(0, 3), "96", "completed cycles");
+        assert_ne!(wt.cell(0, 4), "0", "reader cycles crossed the kill");
+        assert_ne!(wt.cell(0, 5), "0", "writer cycles crossed the kill");
+        assert_eq!(wt.cell(0, 8), "0", "lost locks");
+    }
+
+    #[test]
+    fn e14_quick_is_the_shared_mode_acceptance_run() {
+        // ISSUE 10 acceptance: readers share the generation (headline:
+        // all N concurrent), the per-mode oracle holds in every cell,
+        // the same draw stream completes in strictly fewer rounds with
+        // shared admission at a high read ratio, and the RPC baseline
+        // never overlaps readers.
+        let out = run_experiment("e14", Scale::Quick);
+        let ht = &out.tables[0];
+        assert_eq!(ht.rows(), 1);
+        assert_eq!(ht.cell(0, 0), ht.cell(0, 1), "all headline readers held concurrently");
+        assert_eq!(ht.cell(0, 3), "yes", "generation must reopen after the writer");
+
+        let t = &out.tables[1];
+        assert_eq!(t.rows(), 6); // 2 (read%, skew) combos x 3 configs
+        for r in 0..t.rows() {
+            assert_eq!(t.cell(r, 13), "0", "row {r}: oracle violations");
+            if t.cell(r, 0).starts_with("rpc") {
+                assert_eq!(t.cell(r, 11), "1", "row {r}: rpc reads can never overlap");
+            }
+        }
+        // Rows 3..6 are the 95%-read combo: qplock rw / qplock excl /
+        // rpc excl. Shared admission must beat exclusive-only on the
+        // identical draw stream, via genuine reader overlap.
+        let sh_rounds: u64 = t.cell(3, 6).parse().unwrap();
+        let ex_rounds: u64 = t.cell(4, 6).parse().unwrap();
+        assert!(
+            sh_rounds < ex_rounds,
+            "shared admission did not shorten the 95%-read run ({sh_rounds} vs {ex_rounds})"
+        );
+        let overlap: u32 = t.cell(3, 11).parse().unwrap();
+        assert!(overlap >= 2, "no reader overlap ever observed in the shared run");
     }
 
     #[test]

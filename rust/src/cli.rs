@@ -1,26 +1,247 @@
 //! Hand-rolled CLI (clap is not in the vendored registry): flag parsing
 //! with `--key value` / `--flag` syntax, subcommand dispatch, and help
 //! text. Kept deliberately dependency-free.
+//!
+//! Parsing is **strict** (PR 10): every subcommand declares its known
+//! `--key value` options and boolean `--flags` in [`SPECS`], and
+//! [`Args::validate`] rejects unknown options (a typo like `--procss
+//! 64` used to run silently at defaults), extra positional tokens
+//! (previously smuggled into the flag list as `__extra_positional=…`
+//! that no caller ever checked), and a trailing option missing its
+//! value (previously demoted to a bare flag, so `get_num` silently
+//! returned the default). Number parsing reports humane errors
+//! ([`Args::try_num`]) instead of a raw `Debug` panic.
 
 use std::collections::HashMap;
 
 /// Parsed arguments: positional subcommand + `--key value` options +
-/// boolean `--flags`.
+/// boolean `--flags`, with any extra positionals kept aside for
+/// [`Args::validate`] to reject.
 pub struct Args {
     pub subcommand: Option<String>,
     opts: HashMap<String, String>,
     flags: Vec<String>,
+    extra: Vec<String>,
 }
+
+/// One subcommand's declared CLI surface: the options that take a
+/// value and the boolean flags it accepts. The single source of truth
+/// for [`Args::validate`] and the per-subcommand usage line.
+pub struct Spec {
+    pub name: &'static str,
+    /// `--key value` options.
+    pub opts: &'static [&'static str],
+    /// Boolean `--flags`.
+    pub flags: &'static [&'static str],
+}
+
+/// Known-flags table, one row per subcommand (kept in the dispatch
+/// order of `main.rs` / the HELP text).
+pub const SPECS: &[Spec] = &[
+    Spec {
+        name: "run",
+        opts: &["algo", "procs", "local", "iters", "millis", "budget", "cs-ns"],
+        flags: &["counted"],
+    },
+    Spec {
+        name: "bench",
+        opts: &["exp"],
+        flags: &["full", "csv"],
+    },
+    Spec {
+        name: "batch",
+        opts: &[],
+        flags: &["full"],
+    },
+    Spec {
+        name: "rw",
+        opts: &[],
+        flags: &["full"],
+    },
+    Spec {
+        name: "multi-lock",
+        opts: &[
+            "locks", "skew", "procs", "nodes", "iters", "millis", "algo", "budget",
+        ],
+        flags: &["home0", "timed"],
+    },
+    Spec {
+        name: "async",
+        opts: &[
+            "sim-procs", "threads", "locks", "skew", "nodes", "iters", "millis", "budget",
+        ],
+        flags: &["timed", "ready"],
+    },
+    Spec {
+        name: "ready",
+        opts: &["pending", "releases", "mode"],
+        flags: &[],
+    },
+    Spec {
+        name: "exec",
+        opts: &["sessions", "pending", "releases", "threads", "mode"],
+        flags: &[],
+    },
+    Spec {
+        name: "crash",
+        opts: &[
+            "sim-procs",
+            "threads",
+            "locks",
+            "skew",
+            "iters",
+            "crash-prob",
+            "zombie-prob",
+            "max-crashes",
+            "lease-ticks",
+            "budget",
+        ],
+        flags: &[],
+    },
+    Spec {
+        name: "sim",
+        opts: &[
+            "schedules",
+            "steps",
+            "seed",
+            "procs",
+            "locks",
+            "nodes",
+            "budget",
+            "lease-ticks",
+            "ring",
+            "drain-rounds",
+            "crash-prob",
+            "zombie-prob",
+            "max-crashes",
+            "mode",
+            "pct-depth",
+            "artifact-dir",
+            "replay",
+        ],
+        flags: &[
+            "manual-arm",
+            "executor-steps",
+            "race-detect",
+            "differential",
+            "shared",
+        ],
+    },
+    Spec {
+        name: "lint",
+        opts: &["root"],
+        flags: &["hb"],
+    },
+    Spec {
+        name: "mc",
+        opts: &["model", "procs", "budget", "max-states"],
+        flags: &[],
+    },
+    Spec {
+        name: "serve",
+        opts: &["locks"],
+        flags: &[],
+    },
+    Spec {
+        name: "list",
+        opts: &[],
+        flags: &[],
+    },
+    Spec {
+        name: "help",
+        opts: &[],
+        flags: &[],
+    },
+];
+
+/// The declared surface of `sub`, if it is a known subcommand.
+pub fn spec(sub: &str) -> Option<&'static Spec> {
+    SPECS.iter().find(|s| s.name == sub)
+}
+
+/// One-line usage string for a known subcommand, derived from its
+/// [`Spec`] (so it can never drift from what `validate` accepts).
+pub fn usage(sub: &str) -> Option<String> {
+    let s = spec(sub)?;
+    let mut u = format!("usage: qplock {}", s.name);
+    for o in s.opts {
+        u.push_str(&format!(" [--{o} <v>]"));
+    }
+    for f in s.flags {
+        u.push_str(&format!(" [--{f}]"));
+    }
+    Some(u)
+}
+
+/// A rejected command line, with enough context to say why humanely.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    UnknownSubcommand(String),
+    /// `--key` (with or without a value) that the subcommand does not
+    /// declare.
+    UnknownOption { subcommand: String, option: String },
+    /// A declared `--key value` option with no value token after it.
+    MissingValue { subcommand: String, option: String },
+    /// A declared boolean `--flag` that was handed a value.
+    FlagWithValue {
+        subcommand: String,
+        flag: String,
+        value: String,
+    },
+    /// A positional token after the subcommand.
+    ExtraPositional { subcommand: String, token: String },
+    /// An option value that failed to parse as the expected number.
+    BadNumber {
+        option: String,
+        value: String,
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownSubcommand(s) => write!(f, "unknown subcommand '{s}'"),
+            CliError::UnknownOption { subcommand, option } => {
+                write!(f, "'{subcommand}' does not take --{option}")
+            }
+            CliError::MissingValue { subcommand, option } => {
+                write!(f, "'{subcommand}': --{option} requires a value")
+            }
+            CliError::FlagWithValue {
+                subcommand,
+                flag,
+                value,
+            } => write!(
+                f,
+                "'{subcommand}': --{flag} is a flag and takes no value (got '{value}')"
+            ),
+            CliError::ExtraPositional { subcommand, token } => {
+                write!(f, "'{subcommand}': unexpected positional argument '{token}'")
+            }
+            CliError::BadNumber {
+                option,
+                value,
+                reason,
+            } => write!(f, "invalid value '{value}' for --{option}: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of argument strings (excluding argv[0]).
     /// Tokens starting with `--` take the following token as a value
-    /// unless it also starts with `--` or is absent (then it is a flag).
+    /// unless it also starts with `--` or is absent (then it is a
+    /// flag). Lenient by construction — [`Args::validate`] applies the
+    /// per-subcommand [`SPECS`] strictness.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
         let mut it = argv.into_iter().peekable();
         let mut subcommand = None;
         let mut opts = HashMap::new();
         let mut flags = vec![];
+        let mut extra = vec![];
         while let Some(tok) = it.next() {
             if let Some(key) = tok.strip_prefix("--") {
                 match it.peek() {
@@ -32,20 +253,72 @@ impl Args {
             } else if subcommand.is_none() {
                 subcommand = Some(tok);
             } else {
-                // Extra positional: treat as error-worthy garbage; keep
-                // it visible for the caller.
-                flags.push(format!("__extra_positional={tok}"));
+                extra.push(tok);
             }
         }
         Args {
             subcommand,
             opts,
             flags,
+            extra,
         }
     }
 
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
+    }
+
+    /// Check the parsed line against its subcommand's declared surface
+    /// ([`SPECS`]): unknown subcommand, unknown `--option`, a declared
+    /// option left without a value (the bare-flag demotion that used
+    /// to make `get_num` silently return its default), a boolean flag
+    /// handed a value, and extra positional tokens are all errors. A
+    /// bare `qplock` (no subcommand) is valid — it prints help.
+    pub fn validate(&self) -> Result<(), CliError> {
+        let Some(sub) = self.subcommand.as_deref() else {
+            return Ok(());
+        };
+        let Some(spec) = spec(sub) else {
+            return Err(CliError::UnknownSubcommand(sub.to_string()));
+        };
+        for (key, value) in &self.opts {
+            if spec.opts.iter().any(|o| o == key) {
+                continue;
+            }
+            if spec.flags.iter().any(|f| f == key) {
+                return Err(CliError::FlagWithValue {
+                    subcommand: sub.to_string(),
+                    flag: key.clone(),
+                    value: value.clone(),
+                });
+            }
+            return Err(CliError::UnknownOption {
+                subcommand: sub.to_string(),
+                option: key.clone(),
+            });
+        }
+        for key in &self.flags {
+            if spec.flags.iter().any(|f| f == key) {
+                continue;
+            }
+            if spec.opts.iter().any(|o| o == key) {
+                return Err(CliError::MissingValue {
+                    subcommand: sub.to_string(),
+                    option: key.clone(),
+                });
+            }
+            return Err(CliError::UnknownOption {
+                subcommand: sub.to_string(),
+                option: key.clone(),
+            });
+        }
+        if let Some(tok) = self.extra.first() {
+            return Err(CliError::ExtraPositional {
+                subcommand: sub.to_string(),
+                token: tok.clone(),
+            });
+        }
+        Ok(())
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -60,18 +333,34 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// Parse an option as `T`, with a default. Panics with a clear
-    /// message on malformed input (CLI surface, not library).
-    pub fn get_num<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    /// Parse an option as `T`, with a default when absent. Malformed
+    /// input is a [`CliError::BadNumber`] carrying the option name,
+    /// the offending token, and the parser's own reason.
+    pub fn try_num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
     where
-        T::Err: std::fmt::Debug,
+        T::Err: std::fmt::Display,
     {
         match self.get(name) {
-            None => default,
-            Some(s) => s
-                .parse()
-                .unwrap_or_else(|e| panic!("--{name} {s}: {e:?}")),
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| CliError::BadNumber {
+                option: name.to_string(),
+                value: s.to_string(),
+                reason: format!("{e}"),
+            }),
         }
+    }
+
+    /// [`Args::try_num`] for the CLI surface: on malformed input,
+    /// print the humane error and exit non-zero (no panic, no
+    /// backtrace — this is user input, not a program bug).
+    pub fn get_num<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.try_num(name, default).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        })
     }
 }
 
@@ -99,6 +388,12 @@ SUBCOMMANDS:
           NIC congestion x lock count) plus a pass/fail headline — a
           signalled remote handoff must ring fewer doorbells batched
           than unbatched (exit non-zero otherwise)
+            --full             full scale (default quick)
+  rw      shared/exclusive smoke: the E14 read-ratio sweep (reader
+          crowds vs a draining writer) plus a pass/fail headline —
+          shared mode must scale read throughput without starving
+          writers, with zero per-mode ME violations (exit non-zero
+          otherwise)
             --full             full scale (default quick)
   multi-lock
           closed-loop sweep over a sharded multi-lock table: each
@@ -182,6 +477,9 @@ SUBCOMMANDS:
             --manual-arm       wakeup arming as its own scheduled step
             --executor-steps   schedule the executor-shaped steps too
                                (steal, migrate, waker-drop, spurious)
+            --shared           grow the step alphabet with shared-mode
+                               (reader) submissions; the ME oracle
+                               checks per-mode overlap rules
             --race-detect      vector-clock race detector: fail any
                                cross-actor conflict no declared
                                OrderEdge orders (also QPLOCK_RACE_DETECT=1)
@@ -206,6 +504,7 @@ SUBCOMMANDS:
             --model <name>     qplock|peterson|naive|spin (default qplock)
             --procs <n>        processes (default 3)
             --budget <n>       InitialBudget (default 1)
+            --max-states <n>   state-space cap (default 2^23)
   serve   demo the named-lock service router
             --locks <n>        number of named locks (default 4)
   list    list lock algorithms and experiments
@@ -227,6 +526,7 @@ mod tests {
         assert_eq!(a.get("exp"), Some("e3"));
         assert!(a.flag("full"));
         assert!(!a.flag("csv"));
+        assert_eq!(a.validate(), Ok(()));
     }
 
     #[test]
@@ -237,10 +537,16 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn malformed_number_panics() {
+    fn malformed_number_is_a_humane_error() {
+        // Regression: `get_num` used to panic with the raw `Debug`
+        // rendering of the parse error. The error now names the
+        // option, quotes the token, and carries the parser's reason.
         let a = args("run --procs twelve");
-        let _ = a.get_num("procs", 8u32);
+        let e = a.try_num::<u32>("procs", 8).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("--procs"), "names the option: {msg}");
+        assert!(msg.contains("'twelve'"), "quotes the token: {msg}");
+        assert!(!msg.contains("ParseIntError"), "no Debug guts: {msg}");
     }
 
     #[test]
@@ -248,5 +554,113 @@ mod tests {
         let a = args("run --counted --full");
         assert!(a.flag("counted"));
         assert!(a.flag("full"));
+    }
+
+    #[test]
+    fn unknown_option_is_rejected() {
+        // Regression: `--procss 64` (typo) used to run at defaults.
+        let a = args("run --procss 64");
+        assert_eq!(
+            a.validate(),
+            Err(CliError::UnknownOption {
+                subcommand: "run".into(),
+                option: "procss".into(),
+            })
+        );
+        // Same for a typo'd bare flag.
+        let a = args("bench --ful");
+        assert_eq!(
+            a.validate(),
+            Err(CliError::UnknownOption {
+                subcommand: "bench".into(),
+                option: "ful".into(),
+            })
+        );
+    }
+
+    #[test]
+    fn trailing_option_without_value_is_rejected() {
+        // Regression: a trailing `--procs` was demoted to a bare flag,
+        // so `get_num("procs", …)` silently returned the default.
+        let a = args("run --procs");
+        assert_eq!(
+            a.validate(),
+            Err(CliError::MissingValue {
+                subcommand: "run".into(),
+                option: "procs".into(),
+            })
+        );
+        // An option directly followed by another `--token` is the
+        // same demotion mid-line.
+        let a = args("run --procs --counted");
+        assert_eq!(
+            a.validate(),
+            Err(CliError::MissingValue {
+                subcommand: "run".into(),
+                option: "procs".into(),
+            })
+        );
+    }
+
+    #[test]
+    fn flag_handed_a_value_is_rejected() {
+        let a = args("run --counted 5");
+        assert_eq!(
+            a.validate(),
+            Err(CliError::FlagWithValue {
+                subcommand: "run".into(),
+                flag: "counted".into(),
+                value: "5".into(),
+            })
+        );
+    }
+
+    #[test]
+    fn extra_positional_is_rejected() {
+        // Regression: extra positionals were parked as
+        // `__extra_positional=…` pseudo-flags that nothing checked.
+        let a = args("run qplock");
+        assert_eq!(
+            a.validate(),
+            Err(CliError::ExtraPositional {
+                subcommand: "run".into(),
+                token: "qplock".into(),
+            })
+        );
+        assert!(!a.flag("__extra_positional=qplock"));
+    }
+
+    #[test]
+    fn unknown_subcommand_is_rejected() {
+        let a = args("frobnicate --fast");
+        assert_eq!(
+            a.validate(),
+            Err(CliError::UnknownSubcommand("frobnicate".into()))
+        );
+        // No subcommand at all is fine: it prints help.
+        assert_eq!(args("").validate(), Ok(()));
+    }
+
+    #[test]
+    fn every_spec_accepts_its_own_full_surface() {
+        // The table is self-consistent: a line exercising every
+        // declared option and flag of each subcommand validates.
+        for s in SPECS {
+            let mut line = s.name.to_string();
+            for o in s.opts {
+                line.push_str(&format!(" --{o} 1"));
+            }
+            for f in s.flags {
+                line.push_str(&format!(" --{f}"));
+            }
+            assert_eq!(args(&line).validate(), Ok(()), "spec '{}'", s.name);
+        }
+    }
+
+    #[test]
+    fn usage_lines_derive_from_the_spec() {
+        let u = usage("lint").unwrap();
+        assert_eq!(u, "usage: qplock lint [--root <v>] [--hb]");
+        assert!(usage("frobnicate").is_none());
     }
 }

@@ -142,11 +142,20 @@ struct Shared {
     /// Sleep coordination for out-of-work workers.
     sleep: Mutex<()>,
     cv: Condvar,
+    /// Per-worker kill switches (the E13 worker-thread crash mode):
+    /// a flagged worker exits its loop at the next task boundary,
+    /// leaving whatever sits on its run queue for the survivors to
+    /// steal. Cooperative by design — a `Task` is never abandoned
+    /// mid-poll, so the crash surface is exactly "a thread stops
+    /// taking work", which is what an OS thread death looks like to
+    /// the rest of the pool.
+    killed: Vec<AtomicBool>,
     // -- counters for ExecStats --
     steals: AtomicU64,
     wakes: AtomicU64,
     idle_parks: AtomicU64,
     board_drains: AtomicU64,
+    kills: AtomicU64,
 }
 
 impl Shared {
@@ -194,6 +203,8 @@ pub struct ExecStats {
     pub idle_parks: u64,
     /// Board drains that woke at least one parked task.
     pub board_drains: u64,
+    /// Workers killed mid-run via [`ExecHandle::kill_worker`].
+    pub worker_kills: u64,
 }
 
 /// Cloneable capability handed to tasks: park on the executor's idle
@@ -213,6 +224,31 @@ impl ExecHandle {
             shared: Arc::clone(&self.shared),
             parked: false,
         }
+    }
+
+    /// Kill worker `i` (the E13 worker-thread crash mode): the worker
+    /// exits at its next task boundary and never takes work again.
+    /// Tasks left on its run queue stay stealable — the pool's normal
+    /// steal scan covers dead workers' queues, so the fleet completes
+    /// on the survivors. Returns `false` if `i` is out of range or the
+    /// worker was already killed (the kill is counted once).
+    ///
+    /// Killing *every* worker strands any remaining tasks — callers
+    /// injecting crashes must leave at least one survivor, exactly as
+    /// the process-crash harness leaves surviving processes to repair
+    /// around the dead.
+    pub fn kill_worker(&self, i: usize) -> bool {
+        let Some(flag) = self.shared.killed.get(i) else {
+            return false;
+        };
+        if flag.swap(true, SeqCst) {
+            return false;
+        }
+        self.shared.kills.fetch_add(1, SeqCst);
+        // Wake sleepers so a dozing victim observes its flag promptly
+        // (the 1ms wait timeout bounds it regardless).
+        self.shared.cv.notify_all();
+        true
     }
 }
 
@@ -258,10 +294,12 @@ impl Executor {
                 live: AtomicUsize::new(0),
                 sleep: Mutex::new(()),
                 cv: Condvar::new(),
+                killed: (0..threads).map(|_| AtomicBool::new(false)).collect(),
                 steals: AtomicU64::new(0),
                 wakes: AtomicU64::new(0),
                 idle_parks: AtomicU64::new(0),
                 board_drains: AtomicU64::new(0),
+                kills: AtomicU64::new(0),
             }),
             threads,
         }
@@ -307,6 +345,7 @@ impl Executor {
             wakes: self.shared.wakes.load(SeqCst),
             idle_parks: self.shared.idle_parks.load(SeqCst),
             board_drains: self.shared.board_drains.load(SeqCst),
+            worker_kills: self.shared.kills.load(SeqCst),
         }
     }
 }
@@ -336,6 +375,13 @@ fn next_task(shared: &Shared, i: usize) -> Option<Arc<Task>> {
 fn worker_loop(shared: Arc<Shared>, i: usize) {
     WORKER.with(|w| w.set(Some(i)));
     loop {
+        if shared.killed[i].load(SeqCst) {
+            // Crash-mode exit: stop taking work between tasks. Our
+            // queue's leftovers are the survivors' to steal; wake them
+            // so nothing waits on a thread that no longer exists.
+            shared.cv.notify_all();
+            return;
+        }
         if let Some(task) = next_task(&shared, i) {
             // Clear the dedup flag *before* polling: a wake landing
             // mid-poll must re-queue the task, not be swallowed.
@@ -582,6 +628,168 @@ pub fn exec_probe(cfg: ExecProbeConfig) -> ExecProbeStats {
     }
 }
 
+// --------------------------------------------------- worker-kill probe
+
+/// Configuration of [`exec_crash_probe`] — the E12b fleet shape folded
+/// into the E13 crash harness, with the crash aimed at the *scheduling
+/// layer* instead of a simulated process: a worker thread dies mid-run
+/// and the surviving workers must steal its sessions and finish every
+/// cycle with zero lost locks.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecCrashConfig {
+    /// Session tasks on the pool, contending over the shared lock set.
+    pub sessions: u32,
+    /// Named locks every session cycles over (small, so sessions
+    /// genuinely contend and readers meet writers).
+    pub locks: u32,
+    /// Acquire→release cycles per session.
+    pub cycles: u32,
+    /// Workers; must be ≥ 2 (the probe kills worker 0 and the fleet
+    /// completes on the survivors).
+    pub threads: usize,
+    /// Every k-th session submits in shared (reader) mode; 0 disables
+    /// readers. With readers present the kill lands on a fleet that is
+    /// mid reader-generation: queued readers, batch closes, and
+    /// writers parked in `WaitDrain` all migrate to surviving workers.
+    pub reader_every: u32,
+}
+
+/// Outcome of one [`exec_crash_probe`] run.
+#[derive(Clone, Debug)]
+pub struct ExecCrashStats {
+    /// Cycles completed fleet-wide (must equal `sessions × cycles`).
+    pub completed: u64,
+    /// Completed cycles by reader sessions.
+    pub reader_cycles: u64,
+    /// Completed cycles by writer sessions.
+    pub writer_cycles: u64,
+    /// Fleet-wide completed count at the moment the worker was killed
+    /// (the kill lands mid-run: `0 < kill_at < completed`).
+    pub kill_at: u64,
+    /// Locks not free at teardown — the zero-lost-locks headline.
+    /// Every acquisition either completed and released on a surviving
+    /// worker or never committed; a nonzero count means a session
+    /// stranded a hold when its worker died.
+    pub lost_locks: u64,
+    pub exec: ExecStats,
+}
+
+/// Run `sessions` session tasks — readers and writers mixed per
+/// `reader_every` — through `cycles` acquire/release cycles over a
+/// shared lock table, kill worker 0 once a quarter of the fleet's
+/// cycles have completed, and account for every lock afterwards.
+///
+/// The crash model deliberately differs from [`run_crash_workload`]'s:
+/// there a *process* dies holding protocol state and the sweeper
+/// fences and repairs around its corpse; here the dying thing is a
+/// **scheduler worker**, the sessions it was driving are healthy, and
+/// the work-stealing pool itself is the recovery mechanism — queued
+/// tasks are stolen from the dead worker's queue, parked tasks are
+/// re-woken by survivors' board drains, and no lease machinery is
+/// involved. Zero lost locks is therefore asserted structurally (every
+/// lock free at teardown) rather than via fences.
+pub fn exec_crash_probe(cfg: ExecCrashConfig) -> ExecCrashStats {
+    assert!(cfg.sessions >= 2 && cfg.locks >= 1 && cfg.cycles >= 1);
+    assert!(cfg.threads >= 2, "the probe kills a worker; one must survive");
+    let cluster = Cluster::new(2, 1 << 18, DomainConfig::counted());
+    let svc = Arc::new(
+        LockService::new(&cluster.domain, "qplock", 8).with_default_max_procs(cfg.sessions + 1),
+    );
+    for i in 0..cfg.locks {
+        svc.create_lock(&lock_name(i), "qplock", 0, cfg.sessions + 1, 8)
+            .expect("fresh table");
+    }
+
+    let total = cfg.sessions as u64 * cfg.cycles as u64;
+    let completed = Arc::new(AtomicU64::new(0));
+    let reader_cycles = Arc::new(AtomicU64::new(0));
+    let exec = Executor::new(cfg.threads);
+    let h = exec.handle();
+
+    for s in 0..cfg.sessions {
+        let svc = Arc::clone(&svc);
+        let h = h.clone();
+        let completed = Arc::clone(&completed);
+        let reader_cycles = Arc::clone(&reader_cycles);
+        let reader = cfg.reader_every > 0 && s % cfg.reader_every == 0;
+        let (locks, cycles) = (cfg.locks, cfg.cycles);
+        exec.spawn(async move {
+            let mut session = svc.session((s % 2) as u16);
+            session.enable_ready_wakeups(4);
+            for c in 0..cycles {
+                let name = lock_name((s + c) % locks);
+                let first = if reader {
+                    session.submit_shared(&name)
+                } else {
+                    session.submit(&name)
+                }
+                .expect("capacity");
+                if first != LockPoll::Held {
+                    // Queued (reader or writer) or draining readers
+                    // (writer in WaitDrain): armed waiters complete on
+                    // their ring token, unarmable ones ride the scan
+                    // set — both re-polled on each board-drain wake.
+                    'wait: loop {
+                        for got in session.poll_ready() {
+                            assert_eq!(got, name, "single pending name");
+                            break 'wait;
+                        }
+                        h.idle().await;
+                    }
+                }
+                session.release(&name).expect("lease-less");
+                completed.fetch_add(1, SeqCst);
+                if reader {
+                    reader_cycles.fetch_add(1, SeqCst);
+                }
+            }
+        });
+    }
+
+    // The killer task: once a quarter of the fleet's cycles are done,
+    // worker 0 dies. Everything it was running or queueing must be
+    // finished by the survivors.
+    let kill_at = Arc::new(AtomicU64::new(0));
+    {
+        let h = h.clone();
+        let completed = Arc::clone(&completed);
+        let kill_at = Arc::clone(&kill_at);
+        let threshold = (total / 4).max(1);
+        exec.spawn(async move {
+            while completed.load(SeqCst) < threshold {
+                h.idle().await;
+            }
+            kill_at.store(completed.load(SeqCst), SeqCst);
+            assert!(h.kill_worker(0), "first kill of worker 0 must land");
+        });
+    }
+
+    let exec_stats = exec.run();
+
+    // Zero-lost-locks accounting: every lock must be immediately
+    // acquirable (and releasable) by a fresh uncontended session.
+    let mut check = svc.session(0);
+    let mut lost = 0u64;
+    for i in 0..cfg.locks {
+        let name = lock_name(i);
+        match check.submit(&name).expect("capacity") {
+            LockPoll::Held => check.release(&name).expect("lease-less"),
+            _ => lost += 1,
+        }
+    }
+
+    let done = completed.load(SeqCst);
+    let readers = reader_cycles.load(SeqCst);
+    ExecCrashStats {
+        completed: done,
+        reader_cycles: readers,
+        writer_cycles: done - readers,
+        kill_at: kill_at.load(SeqCst),
+        lost_locks: lost,
+        exec: exec_stats,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -683,6 +891,69 @@ mod tests {
         exec.run();
         assert_eq!(checker.violations(), 0);
         assert_eq!(checker.entries(), 8 * 50);
+    }
+
+    #[test]
+    fn killed_workers_leftovers_are_stolen_and_finish() {
+        // Worker-thread crash at the executor layer: kill worker 0
+        // while 64 parking tasks are in flight; every task still
+        // completes (stolen or board-drained by the survivors) and the
+        // kill is counted exactly once.
+        let exec = Executor::new(4);
+        let h = exec.handle();
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let h = h.clone();
+            let count = Arc::clone(&count);
+            exec.spawn(async move {
+                for _ in 0..4 {
+                    h.idle().await;
+                }
+                count.fetch_add(1, SeqCst);
+            });
+        }
+        {
+            let h = h.clone();
+            exec.spawn(async move {
+                h.idle().await; // let the fleet start
+                assert!(h.kill_worker(0), "fresh kill must land");
+                assert!(!h.kill_worker(0), "double kill is counted once");
+                assert!(!h.kill_worker(99), "out-of-range kill is refused");
+            });
+        }
+        let stats = exec.run();
+        assert_eq!(count.load(SeqCst), 64, "tasks lost with the dead worker");
+        assert_eq!(stats.tasks, 65);
+        assert_eq!(stats.worker_kills, 1);
+    }
+
+    #[test]
+    fn worker_kill_crash_probe_loses_no_locks_readers_included() {
+        // The ISSUE 10 satellite: E12b's fleet shape under E13's crash
+        // discipline, aimed at the scheduler. A worker dies mid-run
+        // over a contended reader/writer lock table; the surviving
+        // workers steal its sessions and every cycle completes with
+        // zero lost locks.
+        let stats = exec_crash_probe(ExecCrashConfig {
+            sessions: 12,
+            locks: 6,
+            cycles: 8,
+            threads: 4,
+            reader_every: 3,
+        });
+        assert_eq!(stats.completed, 96, "cycles lost with the dead worker");
+        assert_eq!(stats.lost_locks, 0, "a session stranded a hold");
+        assert_eq!(stats.exec.worker_kills, 1);
+        assert!(
+            stats.kill_at >= 24 && stats.kill_at < stats.completed,
+            "kill must land mid-run: at {} of {}",
+            stats.kill_at,
+            stats.completed
+        );
+        // Both populations crossed the kill: readers (shared holds,
+        // generation drains) and writers.
+        assert_eq!(stats.reader_cycles, 32);
+        assert_eq!(stats.writer_cycles, 64);
     }
 
     #[test]

@@ -21,7 +21,10 @@ use std::sync::Arc;
 
 use crate::rdma::{DomainConfig, RdmaDomain};
 
-pub use executor::{exec_probe, ExecHandle, ExecProbeConfig, ExecProbeStats, ExecStats, Executor};
+pub use executor::{
+    exec_crash_probe, exec_probe, ExecCrashConfig, ExecCrashStats, ExecHandle, ExecProbeConfig,
+    ExecProbeStats, ExecStats, Executor,
+};
 pub use runner::{
     lock_name, ready_list_probe, run_crash_workload, run_multi_lock_workload,
     run_multiplexed_workload, run_multiplexed_workload_mode, run_workload, CrashPlan, CrashPoint,

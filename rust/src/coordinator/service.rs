@@ -28,8 +28,8 @@ use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::locks::{
-    make_lock, ArmOutcome, AsyncLockHandle, LeaseError, LockHandle, LockPoll, SharedLock,
-    SweepStats, WakeupReg,
+    make_lock, ArmOutcome, AsyncLockHandle, LeaseError, LockHandle, LockMode, LockPoll,
+    SharedLock, SweepStats, WakeupReg,
 };
 use crate::rdma::{
     DoorbellBatch, Endpoint, NodeId, ProcMetrics, ProcMetricsSnapshot, RdmaDomain, WakeupRing,
@@ -218,7 +218,19 @@ pub struct LockService {
     /// lease word reaped, or inert) and returns the finished ones to
     /// their locks' [`PidPool`]s. Without this, crashed-session churn
     /// permanently wedged a long-lived service on `CapacityExhausted`.
+    /// Only *observable* handles are parked here — every entry has a
+    /// poll machine and a lease the sweeper will eventually reap, so
+    /// the count drains to 0.
     orphans: Mutex<Vec<SlotHandle>>,
+    /// Crashed handles whose liveness can never be observed: no poll
+    /// machine, or leases off (no sweeper will ever reap the slot, so
+    /// [`AsyncLockHandle::slot_quiescent`] can stay false forever).
+    /// Parked permanently — never re-probed by sweeps — and counted
+    /// separately ([`LockService::leaked_slots`]); the pid slot stays
+    /// claimed for the owning lock's lifetime, but the handle (and its
+    /// registry entry's refcount) is released with the service instead
+    /// of `mem::forget`-leaked for the life of the process.
+    leaked: Mutex<Vec<SlotHandle>>,
 }
 
 impl LockService {
@@ -254,6 +266,7 @@ impl LockService {
             },
             sweep_serial: Mutex::new(()),
             orphans: Mutex::new(Vec::new()),
+            leaked: Mutex::new(Vec::new()),
         }
     }
 
@@ -352,39 +365,66 @@ impl LockService {
     fn reclaim_orphans(&self) -> u64 {
         let mut orphans = self.orphans.lock().unwrap();
         let before = orphans.len();
-        // A crashed handle without a poll machine can never be probed;
-        // keep it parked (pre-reclamation behavior: leaked by design).
-        orphans.retain_mut(|sh| match sh.inner.as_async() {
-            Some(a) => !a.slot_quiescent(),
-            None => true,
+        // Classification at orphan time ([`LockService::orphan_slot`])
+        // guarantees every parked handle is observable: it has a poll
+        // machine and a lease the sweeper will eventually reap, so
+        // the probe terminates. Unobservable handles went to `leaked`
+        // and are never re-probed (the old single-list design walked
+        // them under this mutex on every sweep, forever).
+        orphans.retain_mut(|sh| {
+            let Some(a) = sh.inner.as_async() else {
+                debug_assert!(false, "unobservable handle in the orphan probe list");
+                return true;
+            };
+            !a.slot_quiescent()
         });
         (before - orphans.len()) as u64
     }
 
     /// Park a crashed session's handle until its slot can be reclaimed
     /// — or release its pid on the spot when the slot is already inert
-    /// (an idle handle abandons nothing in the fabric).
+    /// (an idle handle abandons nothing in the fabric). A handle whose
+    /// liveness can never be observed — no poll machine, or a
+    /// lease-less lock (the sweeper never reaps what it cannot fence)
+    /// — is parked in the permanent `leaked` list instead: its pid
+    /// must stay claimed (the algorithm may still reference the slot's
+    /// state), but it is counted as leaked, never re-probed, and its
+    /// storage is released when the owning lock's service drops rather
+    /// than `mem::forget`-leaked for the life of the process.
     fn orphan_slot(&self, mut sh: SlotHandle) {
         sh.orphaned = true;
         // Probe liveness first (the borrow must end before the handle
-        // can be moved). No poll machine means liveness is forever
-        // unobservable: leak the slot in place, exactly as `crash`
-        // always did.
+        // can be moved).
         let Some(quiescent) = sh.inner.as_async().map(|a| a.slot_quiescent()) else {
-            std::mem::forget(sh);
+            self.leaked.lock().unwrap().push(sh);
             return;
         };
         if quiescent {
             drop(sh); // idle: the pid returns to its pool on the spot
-        } else {
+        } else if self.lease_ticks > 0 {
             self.orphans.lock().unwrap().push(sh);
+        } else {
+            // Mid-flight with leases off: no sweeper will ever repair
+            // (or reap) this slot, so quiescence can never arrive.
+            self.leaked.lock().unwrap().push(sh);
         }
     }
 
-    /// Orphaned pid slots still awaiting their descriptor's repair
-    /// (diagnostic; drains toward 0 as sweeps reap crashed slots).
+    /// Orphaned pid slots still awaiting their descriptor's repair.
+    /// Every entry is reclaimable: the count drains toward 0 as sweeps
+    /// reap crashed slots (permanently lost slots are counted by
+    /// [`LockService::leaked_slots`] instead).
     pub fn orphaned_slots(&self) -> usize {
         self.orphans.lock().unwrap().len()
+    }
+
+    /// Pid slots permanently lost to crashes the protocol cannot
+    /// observe (handles without a poll machine, or crashed mid-flight
+    /// on a lease-less service). Never drains; a rising count under
+    /// leases-off crash churn is the capacity-exhaustion early warning
+    /// the old conflated diagnostic hid.
+    pub fn leaked_slots(&self) -> usize {
+        self.leaked.lock().unwrap().len()
     }
 
     /// Per-node verb counters of the sweeper agents — the sweep's verb
@@ -766,6 +806,29 @@ impl HandleCache {
     /// be a lie, and the paired double-release would corrupt the
     /// queue).
     pub fn submit(&mut self, name: &str) -> Result<LockPoll, LockServiceError> {
+        self.submit_with_mode(name, LockMode::Exclusive)
+    }
+
+    /// [`HandleCache::submit`] in shared (reader) mode: the acquisition
+    /// joins `name`'s current reader generation — concurrent with other
+    /// shared holders, excluded by writers (see `locks/qplock.rs`
+    /// §Shared mode). Same pending/poll bookkeeping as `submit`; the
+    /// mode is a property of the acquisition, set on the idle handle
+    /// before its first poll.
+    pub fn submit_shared(&mut self, name: &str) -> Result<LockPoll, LockServiceError> {
+        self.submit_with_mode(name, LockMode::Shared)
+    }
+
+    /// The full submit surface: start a poll-based acquisition of
+    /// `name` in `mode`. Panics if the algorithm refuses the mode
+    /// (only qplock implements `Shared`; every algorithm accepts
+    /// `Exclusive`) — a silent fallback to exclusive would invert the
+    /// caller's concurrency expectations.
+    pub fn submit_with_mode(
+        &mut self,
+        name: &str,
+        mode: LockMode,
+    ) -> Result<LockPoll, LockServiceError> {
         if self.pending.contains(name) {
             match self.poll_one(name) {
                 LockPoll::Cancelled | LockPoll::Expired => {
@@ -804,6 +867,13 @@ impl HandleCache {
         assert!(
             !a.is_held(),
             "submit('{name}'): the session already holds this lock"
+        );
+        // Mode is per-acquisition state: stamp it while the machine is
+        // idle (the short-circuit covers a drain-resolved resubmit that
+        // already carries the right mode).
+        assert!(
+            a.lock_mode() == mode || a.set_lock_mode(mode),
+            "submit('{name}'): algorithm '{algo}' refused lock mode {mode:?}"
         );
         self.handle_polls += 1;
         match a.poll_lock() {
@@ -2112,5 +2182,111 @@ mod tests {
         assert_eq!(s.home_of("nonexistent"), None);
         assert!(s.get_lock("pinned").is_some());
         assert!(s.get_lock("nonexistent").is_none());
+    }
+
+    // ---- shared mode (PR 10) ----
+
+    #[test]
+    fn shared_submits_hold_concurrently_and_writers_drain_them() {
+        let s = service_arc();
+        let mut r1 = s.session(0);
+        let mut r2 = s.session(1);
+        let mut w = s.session(1);
+        assert_eq!(r1.submit_shared("rw").unwrap(), LockPoll::Held);
+        assert_eq!(r2.submit_shared("rw").unwrap(), LockPoll::Held, "readers overlap");
+        assert_eq!(w.submit("rw").unwrap(), LockPoll::Pending);
+        assert!(w.poll_all().is_empty(), "two readers still live");
+        r1.release("rw").unwrap();
+        assert!(w.poll_all().is_empty(), "one reader still live");
+        r2.release("rw").unwrap();
+        let mut rounds = 0;
+        while w.poll_all().is_empty() {
+            rounds += 1;
+            assert!(rounds < 10_000, "drained writer never completed");
+        }
+        // While the writer holds, a reader's fast path is closed.
+        assert_eq!(r1.submit_shared("rw").unwrap(), LockPoll::Pending);
+        w.release("rw").unwrap();
+        let mut rounds = 0;
+        while r1.poll_all().is_empty() {
+            rounds += 1;
+            assert!(rounds < 10_000, "queued reader never admitted");
+        }
+        r1.release("rw").unwrap();
+    }
+
+    // ---- orphan accounting (PR 10 satellite) ----
+
+    #[test]
+    fn leaseless_crashed_holder_is_counted_leaked_not_orphaned() {
+        // Leases off: a handle crashed mid-hold can never be observed
+        // quiescent (no sweeper will ever reap its slot). The old
+        // accounting parked it in the probe list forever — counted as
+        // "draining" while every sweep re-probed it under the mutex.
+        let d = RdmaDomain::new(2, 1 << 16, DomainConfig::counted());
+        let s = Arc::new(LockService::new(&d, "qplock", 8));
+        let mut c = s.session(0);
+        c.handle("lk").unwrap().lock();
+        c.crash();
+        assert_eq!(s.orphaned_slots(), 0, "unobservable: not in the probe list");
+        assert_eq!(s.leaked_slots(), 1, "permanently lost, counted as such");
+        let stats = s.sweep_leases(d.lease_now());
+        assert_eq!(stats.pid_reclaimed, 0);
+        assert_eq!(s.orphaned_slots(), 0);
+        assert_eq!(s.leaked_slots(), 1, "sweeps do not re-probe leaked slots");
+    }
+
+    #[test]
+    fn idle_crashed_handles_reclaim_on_the_spot_either_way() {
+        let d = RdmaDomain::new(2, 1 << 16, DomainConfig::counted());
+        let s = Arc::new(LockService::new(&d, "qplock", 8));
+        let mut c = s.session(0);
+        c.with_lock("lk", || {}).unwrap(); // minted, then idle
+        c.crash();
+        assert_eq!(s.orphaned_slots(), 0);
+        assert_eq!(s.leaked_slots(), 0, "an idle slot abandons nothing");
+    }
+
+    #[test]
+    fn leased_crashed_holder_drains_from_orphaned_to_reclaimed() {
+        // The observable side of the split: with leases on, a crashed
+        // holder parks in the probe list, the sweep fences + reaps its
+        // slot, and the same pass returns the pid — orphaned drains to
+        // 0 and nothing is counted leaked.
+        let d = RdmaDomain::new(2, 1 << 16, DomainConfig::counted());
+        let s = Arc::new(LockService::new(&d, "qplock", 8).with_lease_ticks(10));
+        let mut c = s.session(0);
+        c.handle("lk").unwrap().lock();
+        c.crash();
+        assert_eq!(s.orphaned_slots(), 1, "observable: parked for the sweeper");
+        assert_eq!(s.leaked_slots(), 0);
+        let now = d.advance_lease_clock(100);
+        let stats = s.sweep_leases(now);
+        assert_eq!(stats.fenced, 1);
+        assert_eq!(stats.pid_reclaimed, 1, "reaped slot returned its pid");
+        assert_eq!(s.orphaned_slots(), 0, "the probe list drains");
+        assert_eq!(s.leaked_slots(), 0);
+    }
+
+    #[test]
+    fn crashed_shared_holder_drains_like_any_other() {
+        // Reader sessions ride the same orphan pipeline: the sweeper's
+        // shared-mode repair (count decrement by proxy) reaps the slot
+        // and the pid comes back.
+        let d = RdmaDomain::new(2, 1 << 16, DomainConfig::counted());
+        let s = Arc::new(LockService::new(&d, "qplock", 8).with_lease_ticks(10));
+        let mut c = s.session(0);
+        assert_eq!(c.submit_shared("lk").unwrap(), LockPoll::Held);
+        c.crash();
+        assert_eq!(s.orphaned_slots(), 1);
+        let now = d.advance_lease_clock(100);
+        let stats = s.sweep_leases(now);
+        assert_eq!(stats.fenced, 1);
+        assert_eq!(stats.pid_reclaimed, 1);
+        assert_eq!(s.orphaned_slots(), 0);
+        // The generation drained: a writer acquires immediately.
+        let mut w = s.session(1);
+        assert_eq!(w.submit("lk").unwrap(), LockPoll::Held);
+        w.release("lk").unwrap();
     }
 }

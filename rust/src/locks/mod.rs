@@ -146,6 +146,21 @@ pub mod test_knobs {
     }
 }
 
+/// Requested ownership mode for the next acquisition (PR 10). Shared
+/// holders may overlap each other; an exclusive holder overlaps
+/// nobody. Algorithms that do not implement a shared mode treat every
+/// acquisition as [`LockMode::Exclusive`] — see
+/// [`AsyncLockHandle::set_lock_mode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LockMode {
+    /// Reader: may hold concurrently with other shared holders of the
+    /// same generation.
+    Shared,
+    /// Writer: classic mutual exclusion (the default everywhere).
+    #[default]
+    Exclusive,
+}
+
 /// Outcome of one [`AsyncLockHandle::poll_lock`] step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LockPoll {
@@ -311,6 +326,23 @@ pub trait AsyncLockHandle: LockHandle {
     /// off this; the default is [`AcqPhase::Opaque`].
     fn phase(&self) -> AcqPhase {
         AcqPhase::Opaque
+    }
+
+    /// Select the ownership mode of the *next* acquisition. Only
+    /// meaningful while the handle is idle (no acquisition in flight,
+    /// nothing held); the mode is sticky until changed. Returns `true`
+    /// iff the algorithm honours the requested mode — the default
+    /// implementation supports only [`LockMode::Exclusive`], so
+    /// callers can feature-detect shared support without downcasting.
+    fn set_lock_mode(&mut self, mode: LockMode) -> bool {
+        mode == LockMode::Exclusive
+    }
+
+    /// The mode the next acquisition will use (and, while holding, the
+    /// mode of the current hold). Exclusive unless the algorithm
+    /// accepted a [`LockMode::Shared`] request.
+    fn lock_mode(&self) -> LockMode {
+        LockMode::Exclusive
     }
 
     /// True iff this handle's shared slot is inert: no acquisition in

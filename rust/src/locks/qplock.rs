@@ -31,6 +31,7 @@
 //! ```text
 //! home node:   victim | tail[LOCAL] | tail[REMOTE]          (1 word each)
 //!              waker[LOCAL] | waker[REMOTE]     (waker-ring + waker-token)
+//!              reader-gen | batch-close | rcount[LOCAL] | rcount[REMOTE]
 //! each proc:   desc = [ budget | next | wake-ring | wake-token | lease ]
 //!                                                       (on its own node)
 //! ```
@@ -57,6 +58,10 @@
 //! ring-cpu-slot   : ring-publish
 //! ring-nic-slot   : ring-publish
 //! lease-slot-table: lease-arbitration
+//! reader-gen      : generation-close
+//! batch-close     : reader-admit-window, generation-close
+//! rcount[LOCAL]   : reader-admit-window, generation-close
+//! rcount[REMOTE]  : reader-admit-window, generation-close
 //! ```
 //!
 //! `budget = u64::MAX` encodes the paper's −1 ("enqueued, not passed").
@@ -97,6 +102,48 @@
 //! Because the remote path waits by local spinning only, every poll of
 //! a parked waiter is a read of the process's own node — which is what
 //! lets one OS thread multiplex thousands of in-flight acquisitions.
+//!
+//! # Shared mode: reader generations over the same queue (PR 10)
+//!
+//! [`super::LockMode::Shared`] layers a reader–writer discipline over
+//! the unchanged exclusive protocol, reusing the budget machinery's
+//! arbitration style for *modes* the way it already arbitrates
+//! *classes*. Four home-node words carry it: a per-class **reader
+//! count** pair (`rcount[LOCAL]`/`rcount[REMOTE]`, each FAA-owned by
+//! its class's lane exactly like the cohort tails), a **batch-close
+//! flag**, and a diagnostic **reader generation** counter.
+//!
+//! * **Reader fast path** — while no writer has closed the batch, a
+//!   shared submit is `FAA(rcount[class], +1)` then a read of
+//!   `batch-close`: the count FAA *is* the membership publication and
+//!   the flag read is its Dekker re-check (edge
+//!   `reader-admit-window`). Flag clear → admitted, zero queue
+//!   traffic. Flag set → withdraw (`FAA −1`) and take the normal
+//!   queue path as a shared-mode waiter.
+//! * **Writers close the batch** — an exclusive enqueue writes
+//!   `batch-close = 1`, so late readers queue behind it (no writer
+//!   starvation); on reaching the queue head the writer *re-asserts*
+//!   the flag (the previous writer's release reopened it), then parks
+//!   in `WaitDrain` until both counts read zero. Its release clears
+//!   the flag — which is what admits the next reader batch: between
+//!   two writers, one bounded crowd of readers.
+//! * **Queued readers** — a shared waiter that reaches the queue head
+//!   was admitted by FIFO: it bumps the generation word if it is the
+//!   one reopening a closed batch, FAAs itself into its class's
+//!   count, and immediately relays the queue token (`q_unlock`), so
+//!   shared holders never pin the queue (edge `generation-close`).
+//! * **Crashed readers** — a shared hold renews its lease under the
+//!   `SHARED` phase tag; the sweeper's repair for a fenced shared
+//!   member is the member's single decrement, issued by proxy through
+//!   the count word's owning lane, then the reap. A dead reader can
+//!   therefore never wedge a writer's drain. A writer that dies
+//!   before clearing `batch-close` degrades readers to the queue path
+//!   (safe; the next live writer's release heals the flag).
+//!
+//! The whole extension sits behind a sticky per-lock `rw` gate flipped
+//! by the first [`super::AsyncLockHandle::set_lock_mode`] request for
+//! shared mode: locks never asked for it execute bit-identical verb
+//! sequences to the exclusive-only protocol.
 //!
 //! # Failure model: leases, fencing, and queue repair
 //!
@@ -142,8 +189,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqC
 use std::sync::{Arc, Mutex};
 
 use super::{
-    AcqPhase, ArmOutcome, AsyncLockHandle, Class, LeaseError, LockHandle, LockPoll, SharedLock,
-    SweepStats, WakeupReg,
+    AcqPhase, ArmOutcome, AsyncLockHandle, Class, LeaseError, LockHandle, LockMode, LockPoll,
+    SharedLock, SweepStats, WakeupReg,
 };
 use crate::rdma::contract::{self, Role, Via, Word};
 use crate::rdma::{Addr, DoorbellBatch, Endpoint, NodeId, RdmaDomain};
@@ -172,12 +219,23 @@ fn tail_word(cls: Class) -> Word {
     }
 }
 
+/// The reader-count register owned by a class — same Table-1 lane
+/// discipline as the tails: `rcount[LOCAL]` is only ever CPU-FAA'd,
+/// `rcount[REMOTE]` only rFAA'd.
+#[inline]
+fn rcount_word(cls: Class) -> Word {
+    match cls {
+        Class::Local => Word::ReaderCountLocal,
+        Class::Remote => Word::ReaderCountRemote,
+    }
+}
+
 /// Lease-word encoding. One 8-byte register per descriptor carries the
 /// whole per-acquisition failure-detection state:
 ///
 /// ```text
 /// bits 63..48  epoch     (per-handle acquisition counter mod 2^16, ≥ 1)
-/// bits 47..45  phase     (ENQ | WAIT | ENGAGE | HELD)
+/// bits 47..45  phase     (ENQ | WAIT | ENGAGE | HELD | SHARED)
 /// bit  44      FENCED    (sweeper revoked this epoch)
 /// bit  43      REAPED    (repair finished; slot reusable)
 /// bits 42..0   deadline  (domain lease-clock ticks)
@@ -206,6 +264,9 @@ pub(crate) mod lease {
     pub const PHASE_WAIT: u64 = 2;
     pub const PHASE_ENGAGE: u64 = 3;
     pub const PHASE_HELD: u64 = 4;
+    /// Shared-mode member of a reader generation (PR 10): the slot's
+    /// repair is its single `rcount` decrement, not a queue relay.
+    pub const PHASE_SHARED: u64 = 5;
 
     const EPOCH_SHIFT: u32 = 48;
     const PHASE_SHIFT: u32 = 45;
@@ -283,6 +344,20 @@ pub struct QpInner {
     /// *other*-class actor performs the tail reset or victim write
     /// that resolves the leader's Peterson wait.
     wakers: [Addr; 2],
+    /// Shared-mode generation counter (home-node resident, like the
+    /// victim): bumped by the queue-head reader that reopens a closed
+    /// batch. Plain read+write — the queue token serializes writers.
+    reader_gen: Addr,
+    /// Shared-mode batch-close flag: nonzero while a writer has closed
+    /// reader admission. Written by writers (enqueue close, head
+    /// re-assert, release reopen); fast-path readers read it after
+    /// their count FAA (the `reader-admit-window` Dekker pair).
+    batch_close: Addr,
+    /// Per-class live-reader counts, lane-owned like the tails:
+    /// `rcount[LOCAL]` CPU-FAA only, `rcount[REMOTE]` rFAA only. A
+    /// draining writer reads both; the sweeper decrements a crashed
+    /// member's count by proxy through the owning lane.
+    rcount: [Addr; 2],
     home: NodeId,
     init_budget: u64,
     /// Host-side accounting (not an RDMA register): acquisitions that
@@ -308,6 +383,12 @@ pub struct QpInner {
     /// existing paths keep bit-identical verb counts. Same SC pairing
     /// argument as `wakeups`.
     peterson_wakeups: AtomicBool,
+    /// Sticky gate for the shared (reader–writer) mode, mirroring the
+    /// wakeup gates: set the first time any handle requests
+    /// [`super::LockMode::Shared`], so exclusive-only locks pay no
+    /// batch-close write on any path — the paper-path verb counts
+    /// stay bit-identical. Same SC pairing argument as `wakeups`.
+    rw: AtomicBool,
     /// Lease term in domain lease-clock ticks; 0 = leases disabled
     /// (the paper's failure-free protocol, bit-for-bit: no lease word
     /// is ever written and no extra ops run on any path).
@@ -344,18 +425,26 @@ impl QpLock {
             mem.alloc(contract::WAKER_WORDS),
             mem.alloc(contract::WAKER_WORDS),
         ];
+        let reader_gen = mem.alloc(1);
+        let batch_close = mem.alloc(1);
+        let rcount = [mem.alloc(1), mem.alloc(1)];
         contract::register_lock_words(domain, victim, tail[0], tail[1], wakers[0], wakers[1]);
+        contract::register_rw_words(domain, reader_gen, batch_close, rcount[0], rcount[1]);
         Arc::new(QpLock {
             inner: Arc::new(QpInner {
                 victim,
                 tail,
                 wakers,
+                reader_gen,
+                batch_close,
+                rcount,
                 home,
                 init_budget,
                 contended: AtomicU64::new(0),
                 handles_minted: AtomicU64::new(0),
                 wakeups: AtomicBool::new(false),
                 peterson_wakeups: AtomicBool::new(false),
+                rw: AtomicBool::new(false),
                 lease_ticks: AtomicU64::new(0),
                 slots: Mutex::new(Vec::new()),
             }),
@@ -406,6 +495,9 @@ impl QpInner {
             class,
             desc,
             state: AcqState::Idle,
+            mode: LockMode::Exclusive,
+            shared_hold: false,
+            drain_closed: false,
             abandoning: false,
             waker_registered: false,
             epoch: 0,
@@ -558,6 +650,28 @@ impl QpInner {
                 let b = contract::desc_read_sc(ep, Role::Sweeper, desc, Word::DescBudget);
                 debug_assert!(b >= 1 && b != WAITING, "held implies a live budget");
                 self.relay(ep, desc, w, b - 1, now, stats);
+            }
+            lease::PHASE_SHARED => {
+                // A dead shared member holds no queue state — its
+                // queue token (if it ever had one) was relayed in the
+                // admission poll. The repair is the member's single
+                // decrement, issued by proxy through the count word's
+                // owning lane (CPU FAA for a local member, rFAA from
+                // the member's node for a remote one), so a crashed
+                // reader can
+                // never wedge a writer's drain. The decrement is ours
+                // exclusively: the fence CAS beat the member's release
+                // claim, and a fenced member's release is a no-op.
+                let cls = self.class_of_desc(desc);
+                contract::rmw_faa(
+                    ep,
+                    Role::RepairProxy,
+                    rcount_word(cls),
+                    self.rcount[cls.idx()],
+                    u64::MAX, // wrapping −1
+                );
+                stats.released += 1;
+                self.reap(ep, desc, w, now, stats);
             }
             _ => debug_assert!(false, "corrupt lease word {w:#x}"),
         }
@@ -762,6 +876,10 @@ enum AcqState {
     /// Cohort leader: victim is written, waiting for the other cohort
     /// to unlock or yield (Algorithm 1).
     EngagePeterson,
+    /// Shared-mode writer past its ownership commit (HELD lease), at
+    /// the queue head with the batch re-closed, waiting for the
+    /// admitted reader generation's counts to drain to zero.
+    WaitDrain,
     /// The lock is owned; `unlock()` releases it.
     Held,
 }
@@ -775,6 +893,17 @@ pub struct QpHandle {
     class: Class,
     desc: Addr,
     state: AcqState,
+    /// Ownership mode of the next acquisition (sticky; settable only
+    /// while idle). [`super::LockMode::Shared`] flips the lock's `rw`
+    /// gate the first time it is requested.
+    mode: LockMode,
+    /// The current `Held` state is a shared (reader) hold: release is
+    /// the count decrement, not a queue handoff.
+    shared_hold: bool,
+    /// `WaitDrain` has re-asserted the batch-close flag (the one write
+    /// that must precede the count reads; once is enough — nothing
+    /// clears the flag while this writer owns the queue head).
+    drain_closed: bool,
     /// Cancellation requested after the handle became queue-visible:
     /// on reaching `Held` the handle releases immediately instead of
     /// reporting ownership (the drain keeps the handoff chain intact).
@@ -868,6 +997,8 @@ impl QpHandle {
     fn lease_expired(&mut self) -> LockPoll {
         self.abandoning = false;
         self.lease_active = false;
+        // A fenced shared member's decrement belongs to the sweeper.
+        self.shared_hold = false;
         // Only the flag, not the block entry: the sweeper owns the
         // slot now, and the class's next engaged leader overwrites the
         // block. Writing 0 here could clobber that successor's live
@@ -895,7 +1026,8 @@ impl QpHandle {
         // the instant the tail CAS lands. The wakeup registration is
         // per-acquisition state: clear any stale one from a previous
         // parked wait before a predecessor can observe it.
-        if self.shared.lease_ticks.load(SeqCst) > 0 {
+        let lease_ticks = self.shared.lease_ticks.load(SeqCst);
+        if lease_ticks > 0 {
             let cur = contract::desc_read_sc(&self.ep, Role::Waiter, self.desc, Word::DescLease);
             if lease::fenced(cur) && !lease::reaped(cur) {
                 // The previous acquisition was revoked and its repair
@@ -905,9 +1037,34 @@ impl QpHandle {
                 // the relay — park until the sweeper reaps the slot.
                 return LockPoll::Pending;
             }
+        }
+        // Shared-mode fast path: while no writer has the batch closed,
+        // a reader's whole acquisition is one count FAA plus one flag
+        // read — no queue traffic at all. A closed batch falls through
+        // to the ordinary queue path (FIFO behind the closing writer).
+        if self.mode == LockMode::Shared && self.admit_shared() {
+            if lease_ticks > 0 {
+                self.epoch = (self.epoch.wrapping_add(1) & lease::EPOCH_MASK).max(1);
+                self.lease_active = true;
+                let deadline = self.ep.domain().lease_now() + lease_ticks;
+                contract::desc_write_sc(
+                    &self.ep,
+                    Role::Waiter,
+                    self.desc,
+                    Word::DescLease,
+                    lease::pack(self.epoch, lease::PHASE_SHARED, deadline),
+                );
+            } else {
+                self.lease_active = false;
+            }
+            self.shared_hold = true;
+            self.state = AcqState::Held;
+            return LockPoll::Held;
+        }
+        if lease_ticks > 0 {
             self.epoch = (self.epoch.wrapping_add(1) & lease::EPOCH_MASK).max(1);
             self.lease_active = true;
-            let deadline = self.ep.domain().lease_now() + self.shared.lease_ticks.load(SeqCst);
+            let deadline = self.ep.domain().lease_now() + lease_ticks;
             contract::desc_write_sc(
                 &self.ep,
                 Role::Waiter,
@@ -958,6 +1115,14 @@ impl QpHandle {
         if seen != curr {
             self.state = AcqState::Enqueue { curr: seen };
             return LockPoll::Pending;
+        }
+        // A writer's enqueue closes the reader batch: fast-path
+        // readers arriving after this write queue behind it, which is
+        // what bounds the crowd a draining writer waits out (no writer
+        // starvation under read-heavy load). Gated so exclusive-only
+        // locks keep the paper's exact verb counts.
+        if self.mode == LockMode::Exclusive && self.rw_active() {
+            self.close_batch(Role::Waiter);
         }
         if curr == 0 {
             // Queue was empty: we are the leader; set budget = kInit and
@@ -1084,8 +1249,19 @@ impl QpHandle {
     /// this acquisition, so we back off without entering — exactly one
     /// side ever grants, the no-double-grant half of the fence.
     fn finish_acquisition(&mut self) -> LockPoll {
+        if self.mode == LockMode::Shared {
+            return self.finish_shared();
+        }
         if self.lease_update(Role::Waiter, lease::PHASE_HELD).is_err() {
             return self.lease_expired();
+        }
+        if self.rw_active() {
+            // Shared mode is live on this lock: before entering the
+            // critical section the writer must wait out the reader
+            // generation admitted ahead of it.
+            self.state = AcqState::WaitDrain;
+            self.drain_closed = false;
+            return self.step_wait_drain();
         }
         self.state = AcqState::Held;
         if self.abandoning {
@@ -1098,6 +1274,198 @@ impl QpHandle {
             return LockPoll::Cancelled;
         }
         LockPoll::Held
+    }
+
+    /// A shared-mode waiter reached the queue head: FIFO admitted it.
+    /// Commit under the `SHARED` lease phase (the sweeper's repair for
+    /// this slot is the count decrement, not a queue relay), join the
+    /// generation, and relay the queue token immediately — shared
+    /// holders never pin the queue, so a reader crowd behind a writer
+    /// admits itself one queue pass at a time.
+    fn finish_shared(&mut self) -> LockPoll {
+        if self.lease_update(Role::Waiter, lease::PHASE_SHARED).is_err() {
+            return self.lease_expired();
+        }
+        if self.abandoning {
+            self.abandoning = false;
+            self.state = AcqState::Idle;
+            if self.lease_release_claim(Role::Holder).is_err() {
+                return LockPoll::Expired;
+            }
+            self.q_unlock();
+            return LockPoll::Cancelled;
+        }
+        self.open_generation();
+        self.shared_hold = true;
+        self.state = AcqState::Held;
+        self.q_unlock();
+        LockPoll::Held
+    }
+
+    /// One drain probe of a writer at the queue head: re-assert the
+    /// batch-close flag (once — the previous writer's release reopened
+    /// it; the store must precede the count reads, the writer's half
+    /// of the `reader-admit-window` Dekker pair), then read both
+    /// class's live-reader counts. Zero on both means the generation
+    /// drained and the critical section is ours.
+    fn step_wait_drain(&mut self) -> LockPoll {
+        if self.lease_update(Role::Holder, lease::PHASE_HELD).is_err() {
+            return self.lease_expired();
+        }
+        if !self.drain_closed {
+            self.close_batch(Role::Holder);
+            self.drain_closed = true;
+        }
+        let local = contract::read_via(
+            &self.ep,
+            Role::Holder,
+            Word::ReaderCountLocal,
+            self.shared.rcount[Class::Local.idx()],
+            self.via(),
+        );
+        let remote = contract::read_via(
+            &self.ep,
+            Role::Holder,
+            Word::ReaderCountRemote,
+            self.shared.rcount[Class::Remote.idx()],
+            self.via(),
+        );
+        if local != 0 || remote != 0 {
+            return LockPoll::Pending;
+        }
+        self.state = AcqState::Held;
+        if self.abandoning {
+            self.abandoning = false;
+            self.state = AcqState::Idle;
+            if self.lease_release_claim(Role::Holder).is_err() {
+                return LockPoll::Expired;
+            }
+            self.release_exclusive();
+            return LockPoll::Cancelled;
+        }
+        LockPoll::Held
+    }
+
+    /// Reader fast-path admission: publish membership with the count
+    /// FAA, then re-read the batch-close flag. Flag clear → admitted.
+    /// Flag set → a writer closed the batch; withdraw the count and
+    /// have the caller take the queue path. FAA-then-read order is the
+    /// reader's half of the `reader-admit-window` Dekker pair: either
+    /// the draining writer sees our count or we see its flag.
+    fn admit_shared(&mut self) -> bool {
+        contract::rmw_faa(
+            &self.ep,
+            Role::Waiter,
+            rcount_word(self.class),
+            self.shared.rcount[self.class.idx()],
+            1,
+        );
+        if contract::read_via(
+            &self.ep,
+            Role::Waiter,
+            Word::BatchClose,
+            self.shared.batch_close,
+            self.via(),
+        ) == 0
+        {
+            return true;
+        }
+        contract::rmw_faa(
+            &self.ep,
+            Role::Waiter,
+            rcount_word(self.class),
+            self.shared.rcount[self.class.idx()],
+            u64::MAX, // wrapping −1: withdraw the optimistic admit
+        );
+        false
+    }
+
+    /// Queue-head reader admission: bump the generation word if this
+    /// admission reopens a closed batch (the queue token serializes
+    /// every writer of the word), then join via the count FAA.
+    fn open_generation(&mut self) {
+        if contract::read_via(
+            &self.ep,
+            Role::Waiter,
+            Word::BatchClose,
+            self.shared.batch_close,
+            self.via(),
+        ) == 0
+        {
+            let g = contract::read_via(
+                &self.ep,
+                Role::Waiter,
+                Word::ReaderGen,
+                self.shared.reader_gen,
+                self.via(),
+            );
+            contract::write_via(
+                &self.ep,
+                Role::Waiter,
+                Word::ReaderGen,
+                self.shared.reader_gen,
+                g.wrapping_add(1),
+                self.via(),
+            );
+        }
+        contract::rmw_faa(
+            &self.ep,
+            Role::Waiter,
+            rcount_word(self.class),
+            self.shared.rcount[self.class.idx()],
+            1,
+        );
+    }
+
+    /// A shared holder's release: the single count decrement. Ours
+    /// exclusively — the release claim won the lease word, so the
+    /// sweeper can never also decrement for this epoch.
+    fn release_shared(&mut self) {
+        contract::rmw_faa(
+            &self.ep,
+            Role::Holder,
+            rcount_word(self.class),
+            self.shared.rcount[self.class.idx()],
+            u64::MAX, // wrapping −1
+        );
+    }
+
+    /// An exclusive holder's release: reopen the reader fast path
+    /// (ending the closed batch — this is what admits the next reader
+    /// crowd), then the ordinary queue handoff. With the `rw` gate off
+    /// this is exactly `q_unlock`.
+    fn release_exclusive(&mut self) {
+        if self.rw_active() {
+            contract::write_via(
+                &self.ep,
+                Role::Holder,
+                Word::BatchClose,
+                self.shared.batch_close,
+                0,
+                self.via(),
+            );
+        }
+        self.q_unlock();
+    }
+
+    /// Write the batch-close flag (idempotent). `role` distinguishes
+    /// the enqueue-time close (waiter) from the queue-head re-assert
+    /// (holder).
+    fn close_batch(&mut self, role: Role) {
+        contract::write_via(
+            &self.ep,
+            role,
+            Word::BatchClose,
+            self.shared.batch_close,
+            1,
+            self.via(),
+        );
+    }
+
+    /// The lock's sticky shared-mode gate (see [`QpInner::rw`]).
+    #[inline]
+    fn rw_active(&self) -> bool {
+        self.shared.rw.load(SeqCst)
     }
 
     /// `qUnlock()`: release the cohort lock — either reset the tail (also
@@ -1348,10 +1716,18 @@ impl LockHandle for QpHandle {
     fn try_unlock(&mut self) -> Result<(), LeaseError> {
         debug_assert_eq!(self.state, AcqState::Held, "unlock() without holding");
         self.state = AcqState::Idle;
+        if self.shared_hold {
+            self.shared_hold = false;
+            if self.lease_release_claim(Role::Holder).is_err() {
+                return Err(LeaseError::Expired);
+            }
+            self.release_shared();
+            return Ok(());
+        }
         if self.lease_release_claim(Role::Holder).is_err() {
             return Err(LeaseError::Expired);
         }
-        self.q_unlock();
+        self.release_exclusive();
         Ok(())
     }
 
@@ -1371,11 +1747,19 @@ impl AsyncLockHandle for QpHandle {
             AcqState::Enqueue { .. } => self.step_enqueue(),
             AcqState::WaitBudget => self.step_wait_budget(),
             AcqState::Reacquire | AcqState::EngagePeterson => self.step_peterson(),
+            AcqState::WaitDrain => self.step_wait_drain(),
             AcqState::Held => {
                 // Polling a held lock renews its lease (a holder that
                 // keeps polling never spuriously expires); a fence
-                // here means the sweeper revoked us mid-hold.
-                if self.lease_update(Role::Holder, lease::PHASE_HELD).is_err() {
+                // here means the sweeper revoked us mid-hold. A shared
+                // hold renews under its own phase tag so the sweeper
+                // repairs it as a generation member.
+                let phase = if self.shared_hold {
+                    lease::PHASE_SHARED
+                } else {
+                    lease::PHASE_HELD
+                };
+                if self.lease_update(Role::Holder, phase).is_err() {
                     return self.lease_expired();
                 }
                 LockPoll::Held
@@ -1401,9 +1785,13 @@ impl AsyncLockHandle for QpHandle {
                 let _ = self.lease_release_claim(Role::Waiter);
                 true
             }
-            // Enqueued (or owed the Peterson lock): drain via poll until
-            // `Cancelled` — the handoff is accepted and relayed.
-            AcqState::WaitBudget | AcqState::Reacquire | AcqState::EngagePeterson => {
+            // Enqueued (or owed the Peterson lock, or committed and
+            // draining readers): drain via poll until `Cancelled` —
+            // the handoff is accepted and relayed.
+            AcqState::WaitBudget
+            | AcqState::Reacquire
+            | AcqState::EngagePeterson
+            | AcqState::WaitDrain => {
                 self.abandoning = true;
                 false
             }
@@ -1411,8 +1799,13 @@ impl AsyncLockHandle for QpHandle {
             // epoch's release is the sweeper's — skip it either way).
             AcqState::Held => {
                 self.state = AcqState::Idle;
-                if self.lease_release_claim(Role::Holder).is_ok() {
-                    self.q_unlock();
+                if self.shared_hold {
+                    self.shared_hold = false;
+                    if self.lease_release_claim(Role::Holder).is_ok() {
+                        self.release_shared();
+                    }
+                } else if self.lease_release_claim(Role::Holder).is_ok() {
+                    self.release_exclusive();
                 }
                 true
             }
@@ -1509,6 +1902,8 @@ impl AsyncLockHandle for QpHandle {
             AcqState::Enqueue { .. } => lease::PHASE_ENQ,
             AcqState::WaitBudget => lease::PHASE_WAIT,
             AcqState::Reacquire | AcqState::EngagePeterson => lease::PHASE_ENGAGE,
+            AcqState::WaitDrain => lease::PHASE_HELD,
+            AcqState::Held if self.shared_hold => lease::PHASE_SHARED,
             AcqState::Held => lease::PHASE_HELD,
         };
         match self.lease_update(Role::Session, phase) {
@@ -1530,9 +1925,30 @@ impl AsyncLockHandle for QpHandle {
             AcqState::Idle => AcqPhase::Idle,
             AcqState::Enqueue { .. } => AcqPhase::Enqueue,
             AcqState::WaitBudget => AcqPhase::WaitBudget,
-            AcqState::Reacquire | AcqState::EngagePeterson => AcqPhase::Engage,
+            // The drain is a post-commit wait with no armable resolver
+            // word — the explorer treats it like the Peterson engage
+            // (keep polling; crash-inject as an engaged owner).
+            AcqState::Reacquire | AcqState::EngagePeterson | AcqState::WaitDrain => AcqPhase::Engage,
             AcqState::Held => AcqPhase::Held,
         }
+    }
+
+    fn set_lock_mode(&mut self, mode: LockMode) -> bool {
+        if self.state != AcqState::Idle {
+            return false;
+        }
+        if mode == LockMode::Shared {
+            // Sticky RW gate: from here on, writers of this lock pay
+            // the batch-close writes. Exclusive-only locks never flip
+            // it, so the paper-path verb counts stay bit-identical.
+            self.shared.rw.store(true, SeqCst);
+        }
+        self.mode = mode;
+        true
+    }
+
+    fn lock_mode(&self) -> LockMode {
+        self.mode
     }
 
     fn slot_quiescent(&self) -> bool {
@@ -2251,6 +2667,123 @@ mod tests {
         a.unlock();
         t.join().unwrap();
         assert_eq!(l.contended_acquisitions(), 1);
+    }
+
+    // ---- shared mode (PR 10) ----
+
+    #[test]
+    fn readers_share_and_writer_drains_the_generation() {
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut r1 = l.qp_handle(d.endpoint(0));
+        let mut r2 = l.qp_handle(d.endpoint(0));
+        let mut r3 = l.qp_handle(d.endpoint(1));
+        for r in [&mut r1, &mut r2, &mut r3] {
+            assert!(r.set_lock_mode(LockMode::Shared));
+            assert_eq!(r.poll_lock(), LockPoll::Held, "fast-path admission");
+        }
+        // A writer must wait out the whole admitted generation...
+        let mut w = l.qp_handle(d.endpoint(1));
+        assert_eq!(w.poll_lock(), LockPoll::Pending);
+        assert!(!w.is_held());
+        // ...and its enqueue closed the batch: a late reader queues.
+        let mut r4 = l.qp_handle(d.endpoint(0));
+        assert!(r4.set_lock_mode(LockMode::Shared));
+        assert_eq!(r4.poll_lock(), LockPoll::Pending, "batch closed: queue path");
+        r1.unlock();
+        r2.unlock();
+        assert_eq!(w.poll_lock(), LockPoll::Pending, "one reader still live");
+        r3.unlock();
+        assert_eq!(w.poll_lock(), LockPoll::Held);
+        // While the writer holds, the queued reader stays parked.
+        assert_eq!(r4.poll_lock(), LockPoll::Pending);
+        w.unlock();
+        // The release reopened the batch and relayed the queue token.
+        assert_eq!(r4.poll_lock(), LockPoll::Held);
+        assert_eq!(
+            d.peek(l.inner.reader_gen),
+            1,
+            "queue-head admission reopens a generation"
+        );
+        r4.unlock();
+        // Counts drained: a fresh writer acquires in one poll.
+        let mut w2 = l.qp_handle(d.endpoint(0));
+        assert_eq!(w2.poll_lock(), LockPoll::Held);
+        w2.unlock();
+        assert_eq!(d.peek(l.inner.batch_close), 0, "release reopens the fast path");
+    }
+
+    #[test]
+    fn reader_fast_path_verbs_two_remote_zero_local() {
+        let d = RdmaDomain::new(2, 1024, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut rl = l.qp_handle(d.endpoint(0));
+        let mut rr = l.qp_handle(d.endpoint(1));
+        assert!(rl.set_lock_mode(LockMode::Shared));
+        assert!(rr.set_lock_mode(LockMode::Shared));
+        assert_eq!(rl.poll_lock(), LockPoll::Held);
+        let before = rr.ep.metrics.snapshot();
+        assert_eq!(rr.poll_lock(), LockPoll::Held);
+        let acq = rr.ep.metrics.snapshot() - before;
+        assert_eq!(acq.remote_faa, 1, "admission is one rFAA");
+        assert_eq!(acq.remote_read, 1, "plus the batch-close re-check");
+        assert_eq!(acq.remote_cas + acq.remote_write, 0, "no queue traffic");
+        let before = rr.ep.metrics.snapshot();
+        rr.unlock();
+        let rel = rr.ep.metrics.snapshot() - before;
+        assert_eq!(rel.remote_faa, 1, "release is the count decrement");
+        assert_eq!(rel.remote_cas + rel.remote_write + rel.remote_read, 0);
+        rl.unlock();
+        let s = rl.ep.metrics.snapshot();
+        assert_eq!(s.remote_total(), 0, "local readers never touch the NIC");
+    }
+
+    #[test]
+    fn crashed_reader_is_decremented_by_proxy() {
+        let d = RdmaDomain::new(2, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        l.enable_leases(8);
+        let mut r = l.qp_handle(d.endpoint(1));
+        assert!(r.set_lock_mode(LockMode::Shared));
+        assert_eq!(r.poll_lock(), LockPoll::Held);
+        // A writer parks on the live member's generation.
+        let mut w = l.qp_handle(d.endpoint(0));
+        assert_eq!(w.poll_lock(), LockPoll::Pending);
+        assert!(!w.is_held());
+        // The reader crashes (stops renewing): expire and sweep its
+        // node. The repair is the member's decrement by proxy.
+        d.advance_lease_clock(64);
+        let mut st = SweepStats::default();
+        l.sweep_leases(&d.endpoint(1), d.lease_now(), &mut st);
+        assert_eq!(st.fenced, 1);
+        assert_eq!(st.released, 1);
+        assert_eq!(st.reaped, 1);
+        assert_eq!(d.peek(l.inner.rcount[Class::Remote.idx()]), 0);
+        // The dead reader no longer wedges the drain.
+        assert_eq!(w.poll_lock(), LockPoll::Held);
+        // The zombie's release is a provably-fenced no-op.
+        assert_eq!(r.try_unlock(), Err(LeaseError::Expired));
+        assert_eq!(d.peek(l.inner.rcount[Class::Remote.idx()]), 0, "no double decrement");
+        w.unlock();
+    }
+
+    #[test]
+    fn mode_changes_only_while_idle() {
+        let d = RdmaDomain::new(1, 4096, DomainConfig::counted());
+        let l = QpLock::create(&d, 0, 8);
+        let mut a = l.qp_handle(d.endpoint(0));
+        let mut b = l.qp_handle(d.endpoint(0));
+        assert_eq!(a.poll_lock(), LockPoll::Held);
+        assert_eq!(b.poll_lock(), LockPoll::Pending);
+        assert!(!a.set_lock_mode(LockMode::Shared), "held: not idle");
+        assert!(!b.set_lock_mode(LockMode::Shared), "enqueued: not idle");
+        a.unlock();
+        while !b.poll_lock().is_held() {}
+        b.unlock();
+        assert!(a.set_lock_mode(LockMode::Shared));
+        assert_eq!(a.lock_mode(), LockMode::Shared);
+        assert_eq!(a.poll_lock(), LockPoll::Held);
+        a.unlock();
     }
 
     /// S2 drift guard, doc half: the module-doc layout sketch above

@@ -5,7 +5,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use qplock::bench::{run_experiment, Scale, EXPERIMENTS};
-use qplock::cli::{Args, HELP};
+use qplock::cli::{self, Args, HELP};
 use qplock::coordinator::{
     exec_probe, lock_name, ready_list_probe, run_crash_workload, run_multi_lock_workload,
     run_multiplexed_workload_mode, run_workload, Cluster, CrashPlan, CrashPoint, CsWork,
@@ -18,10 +18,23 @@ use qplock::sim;
 
 fn main() {
     let args = Args::from_env();
+    // Strict surface check first: unknown options, options missing
+    // their value, flags handed values, and extra positionals are
+    // rejected with the subcommand's usage line instead of silently
+    // running at defaults.
+    if let Err(e) = args.validate() {
+        eprintln!("error: {e}");
+        if let Some(u) = args.subcommand.as_deref().and_then(cli::usage) {
+            eprintln!("{u}");
+        }
+        eprintln!("see 'qplock help' for the full surface");
+        std::process::exit(2);
+    }
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("bench") => cmd_bench(&args),
         Some("batch") => cmd_batch(&args),
+        Some("rw") => cmd_rw(&args),
         Some("multi-lock") => cmd_multi_lock(&args),
         Some("async") => cmd_async(&args),
         Some("ready") => cmd_ready(&args),
@@ -34,6 +47,7 @@ fn main() {
         Some("list") => cmd_list(),
         Some("help") | None => print!("{HELP}"),
         Some(other) => {
+            // Unreachable behind validate(), kept as a safety net.
             eprintln!("unknown subcommand '{other}'\n");
             print!("{HELP}");
             std::process::exit(2);
@@ -496,6 +510,7 @@ fn cmd_sim(args: &Args) {
         executor_steps: args.flag("executor-steps"),
         race_detect: args.flag("race-detect")
             || std::env::var_os("QPLOCK_RACE_DETECT").is_some_and(|v| v != "0"),
+        shared: args.flag("shared"),
         mode,
     };
     let schedules: u32 = args.get_num("schedules", 200);
@@ -592,6 +607,63 @@ fn cmd_batch(args: &Args) {
         std::process::exit(1);
     }
     println!("PASS: release+signal chains behind one doorbell");
+}
+
+fn cmd_rw(args: &Args) {
+    let scale = if args.flag("full") {
+        Scale::Full
+    } else {
+        Scale::Quick
+    };
+    let out = run_experiment("e14", scale);
+    println!("{out}");
+    // Pass/fail headline: every sweep cell's per-mode overlap oracle
+    // held (also asserted inside e14), and on the highest-read combo
+    // the shared run beat the identical exclusive-only draw stream.
+    let ht = &out.tables[0];
+    let hd = &out.tables[1];
+    let mut failed = false;
+    if ht.cell(0, 0) != ht.cell(0, 1) {
+        eprintln!(
+            "FAIL: only {} of {} headline readers held concurrently",
+            ht.cell(0, 1),
+            ht.cell(0, 0)
+        );
+        failed = true;
+    }
+    let mut writes = 0u64;
+    for r in 0..hd.rows() {
+        writes += hd.cell(r, 5).parse::<u64>().unwrap_or(0);
+        if hd.cell(r, 13) != "0" {
+            eprintln!(
+                "FAIL: overlap oracle violated in row {} ({})",
+                r,
+                hd.cell(r, 0)
+            );
+            failed = true;
+        }
+    }
+    if writes == 0 {
+        eprintln!("FAIL: no writer ever completed — starvation or a degenerate sweep");
+        failed = true;
+    }
+    // The last combo is the highest read ratio; its rows are
+    // (qplock rw, qplock excl, rpc excl).
+    let sh: u64 = hd.cell(hd.rows() - 3, 6).parse().expect("rounds");
+    let ex: u64 = hd.cell(hd.rows() - 2, 6).parse().expect("rounds");
+    println!(
+        "headline: {} readers share one generation; highest-read combo completes \
+         in {sh} rounds shared vs {ex} exclusive-only",
+        ht.cell(0, 1)
+    );
+    if sh >= ex {
+        eprintln!("FAIL: shared admission did not shorten the read-heavy run");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("PASS: readers scale, writers drain, the oracle never fired");
 }
 
 fn cmd_lint(args: &Args) {

@@ -136,6 +136,24 @@ pub enum Word {
     /// Host-side per-session lease slot table (not an RDMA register;
     /// registered for drift/documentation only).
     LeaseSlotTable,
+    /// Reader-generation epoch word (home-node resident, like the
+    /// victim): counts reader generations. Written only by the
+    /// queue-token holder reopening a closed generation — token
+    /// ownership serializes the plain read+write, exactly as it
+    /// serializes victim writes.
+    ReaderGen,
+    /// Batch-close flag (home-node resident): nonzero while a writer
+    /// has closed the current reader generation. Set by an exclusive
+    /// waiter at enqueue (and re-asserted at the head), cleared by the
+    /// writer's release; fast-path readers read it after their count
+    /// FAA — the Dekker store→load pair of the shared mode.
+    BatchClose,
+    /// Reader count of the local class (CPU-FAA only, like
+    /// `tail[LOCAL]`): live shared holders admitted from the home node.
+    ReaderCountLocal,
+    /// Reader count of the remote class (rFAA only, like
+    /// `tail[REMOTE]`): live shared holders admitted from other nodes.
+    ReaderCountRemote,
 }
 
 impl Word {
@@ -429,6 +447,61 @@ pub const REGISTRY: &[WordContract] = &[
         writes: &[Session],
         rmws: &[],
     },
+    WordContract {
+        word: Word::ReaderGen,
+        name: "reader-gen",
+        const_name: None,
+        offset: None,
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: true,
+        reads: &[Waiter, Holder, RepairProxy],
+        writes: &[Waiter, RepairProxy],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::BatchClose,
+        name: "batch-close",
+        const_name: None,
+        offset: None,
+        lane: NoRmw,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: true,
+        reads: &[Waiter, Holder, RepairProxy],
+        writes: &[Waiter, Holder, RepairProxy],
+        rmws: &[],
+    },
+    WordContract {
+        word: Word::ReaderCountLocal,
+        name: "rcount[LOCAL]",
+        const_name: None,
+        offset: None,
+        lane: Cpu,
+        split_unit: None,
+        remote_reachable: true,
+        local_silent: true,
+        reads: &[Waiter, Holder, Sweeper, RepairProxy],
+        writes: &[],
+        rmws: &[Waiter, Holder, RepairProxy],
+    },
+    WordContract {
+        word: Word::ReaderCountRemote,
+        name: "rcount[REMOTE]",
+        const_name: None,
+        offset: None,
+        lane: Nic,
+        split_unit: None,
+        remote_reachable: true,
+        // Lenient like `tail[REMOTE]`: the home sweeper's repair proxy
+        // issues the crashed remote reader's decrement as a loopback
+        // rFAA.
+        local_silent: false,
+        reads: &[Waiter, Holder, Sweeper, RepairProxy],
+        writes: &[],
+        rmws: &[Waiter, Holder, RepairProxy],
+    },
 ];
 
 // ---- registry exports for the lint and the drift tests ----------------------
@@ -538,6 +611,16 @@ pub enum Edge {
     /// Wakeup-ring publication: slot ownership is FAA-arbitrated on
     /// the per-lane cursor before the slot write lands.
     RingPublish,
+    /// PR 10 reader-admit window: a fast-path reader publishes its
+    /// membership with a count FAA, then must re-read the batch-close
+    /// flag; a closing writer stores the flag before reading the
+    /// counts it drains on — the shared-mode Dekker store→load pair.
+    ReaderAdmit,
+    /// PR 10 generation close: the releasing writer's flag clear (and
+    /// the head reader's generation reopen) publish the new reader
+    /// generation; late readers observe it through the count word the
+    /// sweeper repairs on a crashed member's behalf.
+    GenerationClose,
 }
 
 /// The ordering mechanism an edge's two sides rely on.
@@ -837,6 +920,77 @@ pub const EDGES: &[OrderEdge] = &[
             seq: &["RING_CPU_CURSOR", "RING_NIC_CURSOR"],
             recheck_from: 2,
         }],
+    },
+    OrderEdge {
+        edge: Edge::ReaderAdmit,
+        name: "reader-admit-window",
+        publisher: (Word::ReaderCountLocal, AccessKind::Rmw),
+        observer: (Word::BatchClose, AccessKind::Read),
+        fence: FenceClass::SeqCst,
+        gate: None,
+        recheck: &[],
+        gate_writers: &[],
+        host_flag: None,
+        words: &[
+            Word::ReaderCountLocal,
+            Word::ReaderCountRemote,
+            Word::BatchClose,
+        ],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "admit_shared",
+                seq: &["rmw_faa", "Word :: BatchClose"],
+                recheck_from: 2,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "step_wait_drain",
+                seq: &[
+                    "close_batch",
+                    "Word :: ReaderCountLocal",
+                    "Word :: ReaderCountRemote",
+                ],
+                recheck_from: 3,
+            },
+        ],
+    },
+    OrderEdge {
+        edge: Edge::GenerationClose,
+        name: "generation-close",
+        publisher: (Word::BatchClose, AccessKind::Write),
+        observer: (Word::ReaderCountLocal, AccessKind::Read),
+        fence: FenceClass::ReleaseAcquire,
+        gate: None,
+        recheck: &[],
+        gate_writers: &[],
+        host_flag: None,
+        words: &[
+            Word::BatchClose,
+            Word::ReaderGen,
+            Word::ReaderCountLocal,
+            Word::ReaderCountRemote,
+        ],
+        anchors: &[
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "open_generation",
+                seq: &["Word :: BatchClose", "Word :: ReaderGen", "rmw_faa"],
+                recheck_from: 3,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "release_shared",
+                seq: &["rmw_faa"],
+                recheck_from: 1,
+            },
+            EdgeAnchor {
+                file: "locks/qplock.rs",
+                func: "repair",
+                seq: &["PHASE_SHARED", "rmw_faa"],
+                recheck_from: 2,
+            },
+        ],
     },
 ];
 
@@ -1670,6 +1824,26 @@ pub fn register_lock_words(
     }
 }
 
+/// Register a lock's shared-mode (reader–writer) words. All four live
+/// on the home node like the victim. The generation, close flag, and
+/// `rcount[LOCAL]` are NIC-silent for the local class;
+/// `rcount[REMOTE]` legitimately sees loopback rFAA (the home
+/// sweeper's repair proxy decrementing for a crashed remote reader),
+/// so it is registered lenient like `tail[REMOTE]`.
+pub fn register_rw_words(
+    domain: &RdmaDomain,
+    reader_gen: Addr,
+    batch_close: Addr,
+    rcount_local: Addr,
+    rcount_remote: Addr,
+) {
+    let m = domain.contract_monitor();
+    m.register(reader_gen, Word::ReaderGen, true);
+    m.register(batch_close, Word::BatchClose, true);
+    m.register(rcount_local, Word::ReaderCountLocal, true);
+    m.register(rcount_remote, Word::ReaderCountRemote, false);
+}
+
 /// Register one descriptor's five words. `local_class` descriptors are
 /// NIC-silent: every access to them must be a local op.
 pub fn register_desc(domain: &RdmaDomain, desc: Addr, local_class: bool) {
@@ -1721,7 +1895,7 @@ mod tests {
                 c.word
             );
         }
-        assert_eq!(Word::LeaseSlotTable as usize + 1, REGISTRY.len());
+        assert_eq!(Word::ReaderCountRemote as usize + 1, REGISTRY.len());
     }
 
     /// S2 drift test: the registry's offsets and the canonical offset

@@ -22,7 +22,7 @@
 //! `(x * bound) >> 64` is exact integer math in both languages.
 
 use crate::locks::{
-    make_lock, AcqPhase, ArmOutcome, AsyncLockHandle, LockHandle, LockPoll, WakeupReg,
+    make_lock, AcqPhase, ArmOutcome, AsyncLockHandle, LockHandle, LockMode, LockPoll, WakeupReg,
 };
 use crate::rdma::{DomainConfig, Endpoint, RdmaDomain, WakeupRing};
 use crate::util::prng::Prng;
@@ -52,6 +52,10 @@ pub fn differential_trace_with_batching(seed: u64, steps: u32, batching: bool) -
     let lease_ticks = 8 + rng.below(16);
     let n = (2 + rng.below(4)) as usize;
     let places: Vec<u16> = (0..n).map(|_| rng.below(nodes as u64) as u16).collect();
+    // Per-handle lock mode for the whole run: 1 = shared (a reader),
+    // 0 = exclusive (a writer). Drawn between `places` and
+    // `max_crashes` — the Python oracle draws in the identical order.
+    let modes: Vec<u64> = (0..n).map(|_| rng.below(2)).collect();
     let max_crashes = rng.below(3) as u32;
 
     let domain = RdmaDomain::new(nodes, 1 << 14, DomainConfig::counted().with_batching(batching));
@@ -61,6 +65,14 @@ pub fn differential_trace_with_batching(seed: u64, steps: u32, batching: bool) -
     let mut handles: Vec<Box<dyn LockHandle>> = (0..n)
         .map(|i| lock.handle(domain.endpoint(places[i]), i as u32))
         .collect();
+    for (i, h) in handles.iter_mut().enumerate() {
+        if modes[i] == 1 {
+            assert!(
+                h.as_async().expect("qplock").set_lock_mode(LockMode::Shared),
+                "mode set on a fresh (idle) handle"
+            );
+        }
+    }
     let mut rings: Vec<WakeupRing> = (0..n)
         .map(|i| WakeupRing::new(domain.endpoint(places[i]), RING_CAPACITY))
         .collect();
@@ -76,11 +88,13 @@ pub fn differential_trace_with_batching(seed: u64, steps: u32, batching: bool) -
 
     let mut out = Vec::with_capacity(steps as usize + 2);
     let places_s: Vec<String> = places.iter().map(|p| p.to_string()).collect();
+    let modes_s: Vec<String> = modes.iter().map(|m| m.to_string()).collect();
     out.push(format!(
         "{{\"v\":1,\"kind\":\"qplock-sim-trace\",\"alphabet\":\"handle\",\"seed\":{seed},\
          \"nodes\":{nodes},\"home\":{home},\"budget\":{budget},\"lease\":{lease_ticks},\
-         \"handles\":{n},\"places\":[{}],\"crashes\":{max_crashes}}}",
-        places_s.join(",")
+         \"handles\":{n},\"places\":[{}],\"modes\":[{}],\"crashes\":{max_crashes}}}",
+        places_s.join(","),
+        modes_s.join(",")
     ));
 
     for i in 0..steps {

@@ -162,6 +162,11 @@ impl Scheduler {
         if !free.is_empty() {
             let l = free[rng.below(free.len() as u64) as usize];
             menu.push((Step::Submit { a, l }, 4));
+            if cfg.shared {
+                // Same drawn lock, reader mode: no extra RNG draw, so
+                // shared-off worlds keep their exact schedules.
+                menu.push((Step::SubmitShared { a, l }, 4));
+            }
         }
         if !pending.is_empty() {
             // Direct polls and arms target unarmed names only: armed
@@ -242,6 +247,10 @@ impl Scheduler {
         if !free.is_empty() {
             let l = free[rng.below(free.len() as u64) as usize];
             menu.push((Step::Submit { a, l }, 6));
+            if cfg.shared {
+                // Reader crowds are what churns the batch-close window.
+                menu.push((Step::SubmitShared { a, l }, 6));
+            }
         }
         // No Ready rounds in the random phase: token consumption is
         // deferred to the drain, so ring cursors run ahead.

@@ -44,7 +44,7 @@ impl TraceFile {
              \"seed\":{},\"violation\":\"{}\",\"config\":{{\"procs\":{},\"locks\":{},\
              \"nodes\":{},\"budget\":{},\"lease\":{},\"ring\":{},\"max_steps\":{},\
              \"drain_rounds\":{},\"crash_prob\":{},\"zombie_prob\":{},\"max_crashes\":{},\
-             \"manual_arm\":{},\"exec_steps\":{},\"race\":{},\"mode\":\"{}\",\"pct_depth\":{}}}}}\n",
+             \"manual_arm\":{},\"exec_steps\":{},\"race\":{},\"shared\":{},\"mode\":\"{}\",\"pct_depth\":{}}}}}\n",
             self.seed,
             self.violation.as_deref().unwrap_or("none"),
             c.procs,
@@ -61,6 +61,7 @@ impl TraceFile {
             c.manual_arm,
             c.executor_steps,
             c.race_detect,
+            c.shared,
             mode,
             depth,
         );
@@ -105,6 +106,8 @@ impl TraceFile {
             // Absent in pre-Layer-5 artifacts: they replay without the
             // detector, exactly as they always did.
             race_detect: header.contains("\"race\":true"),
+            // Absent in pre-shared artifacts: exclusive-only oracle.
+            shared: header.contains("\"shared\":true"),
             mode,
         };
         let violation = field_str(header, "violation").filter(|v| v.as_str() != "none");
@@ -125,6 +128,9 @@ impl TraceFile {
 fn encode_step(i: usize, s: &Step) -> String {
     match *s {
         Step::Submit { a, l } => format!("{{\"i\":{i},\"op\":\"submit\",\"a\":{a},\"l\":{l}}}"),
+        Step::SubmitShared { a, l } => {
+            format!("{{\"i\":{i},\"op\":\"submit_shared\",\"a\":{a},\"l\":{l}}}")
+        }
         Step::Poll { a, l } => format!("{{\"i\":{i},\"op\":\"poll\",\"a\":{a},\"l\":{l}}}"),
         Step::Arm { a, l } => format!("{{\"i\":{i},\"op\":\"arm\",\"a\":{a},\"l\":{l}}}"),
         Step::Ready { a } => format!("{{\"i\":{i},\"op\":\"ready\",\"a\":{a}}}"),
@@ -155,6 +161,7 @@ fn decode_step(line: &str) -> Result<Step, String> {
     let l = || need(line, "l").map(|v| v as u32);
     Ok(match op.as_str() {
         "submit" => Step::Submit { a: a()?, l: l()? },
+        "submit_shared" => Step::SubmitShared { a: a()?, l: l()? },
         "poll" => Step::Poll { a: a()?, l: l()? },
         "arm" => Step::Arm { a: a()?, l: l()? },
         "ready" => Step::Ready { a: a()? },
@@ -227,6 +234,7 @@ mod tests {
             manual_arm: true,
             executor_steps: true,
             race_detect: true,
+            shared: true,
             mode: SchedMode::Pct { depth: 3 },
             ..SimConfig::default()
         };
@@ -236,6 +244,7 @@ mod tests {
             violation: Some("wedged".into()),
             steps: vec![
                 Step::Submit { a: 1, l: 0 },
+                Step::SubmitShared { a: 2, l: 0 },
                 Step::Tick { d: 2 },
                 Step::Sweep,
                 Step::Arm { a: 1, l: 0 },
@@ -258,6 +267,7 @@ mod tests {
         assert!(back.config.manual_arm);
         assert!(back.config.executor_steps);
         assert!(back.config.race_detect);
+        assert!(back.config.shared);
         assert_eq!(back.config.mode, SchedMode::Pct { depth: 3 });
         assert!((back.config.crash_prob - 0.25).abs() < 1e-12);
     }
@@ -272,6 +282,7 @@ mod tests {
         };
         let back = TraceFile::decode(&tf.encode()).unwrap();
         assert_eq!(back.violation, None);
+        assert!(!back.config.shared);
         assert!(!back.config.manual_arm);
         assert!(!back.config.executor_steps);
         assert!(!back.config.race_detect);

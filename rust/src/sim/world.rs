@@ -73,6 +73,11 @@ pub struct SimConfig {
     /// nothing); also switched on by `QPLOCK_RACE_DETECT=1` via the
     /// CLI.
     pub race_detect: bool,
+    /// Grow the step alphabet with [`Step::SubmitShared`] and switch
+    /// the mutual-exclusion oracle to the per-mode variant: readers may
+    /// overlap readers, never a writer; writers overlap nothing. Off by
+    /// default so pre-existing seeds replay their exact schedules.
+    pub shared: bool,
     /// Scheduler flavor (recorded for reproducibility; replay ignores
     /// it — the steps are already chosen).
     pub mode: super::SchedMode,
@@ -95,6 +100,7 @@ impl Default for SimConfig {
             manual_arm: false,
             executor_steps: false,
             race_detect: false,
+            shared: false,
             mode: super::SchedMode::Uniform,
         }
     }
@@ -114,6 +120,10 @@ impl SimConfig {
 pub enum Step {
     /// Start a poll-based acquisition of lock `l` by actor `a`.
     Submit { a: u32, l: u32 },
+    /// Start a *shared-mode* (reader) acquisition of lock `l` by actor
+    /// `a`. Only proposed when [`SimConfig::shared`] is on; replay
+    /// applies it regardless.
+    SubmitShared { a: u32, l: u32 },
     /// Advance actor `a`'s in-flight acquisition of `l` by one poll.
     Poll { a: u32, l: u32 },
     /// Arm an event-driven wakeup for actor `a`'s parked wait on `l`.
@@ -244,6 +254,10 @@ struct Actor {
     pending: BTreeSet<u32>,
     /// Most recently armed lock (the churn scheduler's bias target).
     last_armed: Option<u32>,
+    /// Locks whose *current* acquisition (pending or held) is
+    /// shared-mode; everything else is exclusive. Drives which side of
+    /// the per-mode oracle an admission lands on.
+    shared_ops: BTreeSet<u32>,
 }
 
 /// The explorer's world. See the module docs.
@@ -253,6 +267,11 @@ pub struct World {
     svc: Arc<LockService>,
     names: Vec<String>,
     checkers: Vec<CsChecker>,
+    /// Per-lock reader-side view of the per-mode oracle: how many
+    /// shared holders are inside, and whether a writer is. Exclusive
+    /// holders additionally go through `checkers` (writer-vs-writer).
+    rw_readers: Vec<u32>,
+    rw_writer: Vec<bool>,
     actors: Vec<Actor>,
     sweep: SweepStats,
     crashes: u32,
@@ -296,15 +315,19 @@ impl World {
                     held: BTreeSet::new(),
                     pending: BTreeSet::new(),
                     last_armed: None,
+                    shared_ops: BTreeSet::new(),
                 }
             })
             .collect();
+        let locks = cfg.locks as usize;
         World {
             cfg,
             domain,
             svc,
             names,
             checkers,
+            rw_readers: vec![0; locks],
+            rw_writer: vec![false; locks],
             actors,
             sweep: SweepStats::default(),
             crashes: 0,
@@ -407,6 +430,7 @@ impl World {
     fn step_actor(cfg: &SimConfig, step: &Step) -> Option<u32> {
         match *step {
             Step::Submit { a, .. }
+            | Step::SubmitShared { a, .. }
             | Step::Poll { a, .. }
             | Step::Arm { a, .. }
             | Step::Ready { a }
@@ -428,6 +452,7 @@ impl World {
     fn apply_inner(&mut self, step: &Step) -> bool {
         match *step {
             Step::Submit { a, l } => self.do_submit(a, l),
+            Step::SubmitShared { a, l } => self.do_submit_shared(a, l),
             Step::Poll { a, l } => self.do_poll(a, l),
             Step::Arm { a, l } => self.do_arm(a, l),
             Step::Ready { a } => self.do_ready(a),
@@ -448,15 +473,51 @@ impl World {
         }
     }
 
-    /// Oracle entry: actor `a` enters lock `l`'s critical section.
+    /// Oracle entry: actor `a` enters lock `l`'s critical section. The
+    /// per-mode rules: a reader (shared acquisition) may overlap other
+    /// readers but never a writer; a writer overlaps nothing. Exclusive
+    /// entries additionally flow through the [`CsChecker`] so the
+    /// writer-vs-writer oracle is byte-identical to the exclusive-only
+    /// worlds.
     fn enter(&mut self, a: u32, l: u32) {
-        self.checkers[l as usize].enter(a + 1);
+        let li = l as usize;
+        if self.actors[a as usize].shared_ops.contains(&l) {
+            if self.rw_writer[li] {
+                self.violation = Some(Violation::MutualExclusion {
+                    lock: l,
+                    step: self.applied,
+                });
+            }
+            self.rw_readers[li] += 1;
+        } else {
+            if self.rw_readers[li] > 0 {
+                self.violation = Some(Violation::MutualExclusion {
+                    lock: l,
+                    step: self.applied,
+                });
+            }
+            self.rw_writer[li] = true;
+            self.checkers[li].enter(a + 1);
+            if self.checkers[li].violations() > 0 {
+                self.violation = Some(Violation::MutualExclusion {
+                    lock: l,
+                    step: self.applied,
+                });
+            }
+        }
         self.actors[a as usize].held.insert(l);
-        if self.checkers[l as usize].violations() > 0 {
-            self.violation = Some(Violation::MutualExclusion {
-                lock: l,
-                step: self.applied,
-            });
+    }
+
+    /// Oracle exit for a hold that [`World::enter`] opened. Reads the
+    /// acquisition's mode, so callers must not clear `shared_ops[l]`
+    /// until after this returns.
+    fn exit_oracle(&mut self, a: u32, l: u32) {
+        let li = l as usize;
+        if self.actors[a as usize].shared_ops.contains(&l) {
+            self.rw_readers[li] -= 1;
+        } else {
+            self.rw_writer[li] = false;
+            self.checkers[li].exit(a + 1);
         }
     }
 
@@ -464,21 +525,28 @@ impl World {
     /// session observed (closing the oracle for revoked holds) and
     /// resync the world's pending view from the session's truth.
     fn reconcile(&mut self, a: u32) {
-        let names = &self.names;
-        let actor = &mut self.actors[a as usize];
-        let Some(sess) = actor.session.as_mut() else {
-            return;
+        let expired = match self.actors[a as usize].session.as_mut() {
+            Some(sess) => sess.take_expired(),
+            None => return,
         };
-        for name in sess.take_expired() {
-            let l = names.iter().position(|n| *n == name).expect("known name") as u32;
-            if actor.held.remove(&l) {
-                self.checkers[l as usize].exit(a + 1);
+        for name in expired {
+            let l = self.names.iter().position(|n| *n == name).expect("known name") as u32;
+            if self.actors[a as usize].held.remove(&l) {
+                self.exit_oracle(a, l);
             }
+            self.actors[a as usize].shared_ops.remove(&l);
             self.expired += 1;
         }
+        let names = &self.names;
+        let actor = &mut self.actors[a as usize];
+        let sess = actor.session.as_mut().expect("checked above");
         actor.pending = (0..self.cfg.locks)
             .filter(|&l| sess.is_pending(&names[l as usize]))
             .collect();
+        // A shared submit that is no longer pending or held (cancelled
+        // and drained, say) is over: forget its mode.
+        let live: BTreeSet<u32> = actor.pending.union(&actor.held).copied().collect();
+        actor.shared_ops.retain(|l| live.contains(l));
     }
 
     fn do_submit(&mut self, a: u32, l: u32) -> bool {
@@ -491,6 +559,31 @@ impl World {
             return false;
         }
         let r = sess.submit(&name).expect("capacity sized to the cohort");
+        if r == LockPoll::Held {
+            self.enter(a, l);
+        }
+        self.reconcile(a);
+        true
+    }
+
+    fn do_submit_shared(&mut self, a: u32, l: u32) -> bool {
+        if !self.is_alive(a) || self.actors[a as usize].held.contains(&l) {
+            return false;
+        }
+        let name = self.names[l as usize].clone();
+        if self.actors[a as usize]
+            .session
+            .as_ref()
+            .expect("alive")
+            .is_pending(&name)
+        {
+            return false;
+        }
+        // The mode is recorded before the submit so a fast-path
+        // admission lands on the reader side of the oracle.
+        self.actors[a as usize].shared_ops.insert(l);
+        let sess = self.actors[a as usize].session.as_mut().expect("alive");
+        let r = sess.submit_shared(&name).expect("capacity sized to the cohort");
         if r == LockPoll::Held {
             self.enter(a, l);
         }
@@ -552,8 +645,9 @@ impl World {
         // Close the oracle entry first, exactly like the runners: the
         // release claim below is the shared-state commit, and a fenced
         // claim means the CS was already over when the sweeper revoked.
-        self.checkers[l as usize].exit(a + 1);
+        self.exit_oracle(a, l);
         self.actors[a as usize].held.remove(&l);
+        self.actors[a as usize].shared_ops.remove(&l);
         let name = self.names[l as usize].clone();
         let sess = self.actors[a as usize].session.as_mut().expect("alive");
         match sess.release(&name) {
@@ -620,11 +714,12 @@ impl World {
             return false;
         }
         for l in self.actors[a as usize].held.clone() {
-            self.checkers[l as usize].exit(a + 1);
+            self.exit_oracle(a, l);
         }
         let actor = &mut self.actors[a as usize];
         actor.held.clear();
         actor.pending.clear();
+        actor.shared_ops.clear();
         actor.state = ActorState::Dead;
         actor.session.take().expect("alive").crash();
         self.crashes += 1;
@@ -638,7 +733,7 @@ impl World {
         // The stalled CS is abandoned (its side effects stay, per the
         // failure model); the zombie's own late ops are fenced checks.
         for l in self.actors[a as usize].held.clone() {
-            self.checkers[l as usize].exit(a + 1);
+            self.exit_oracle(a, l);
         }
         self.actors[a as usize].state = ActorState::Stalled {
             wake_at: self.now() + 4 * self.cfg.lease_ticks,
@@ -657,6 +752,7 @@ impl World {
         // the release claim won the lease word, still single-grant.)
         for l in self.actors[a as usize].held.clone() {
             self.actors[a as usize].held.remove(&l);
+            self.actors[a as usize].shared_ops.remove(&l);
             let name = self.names[l as usize].clone();
             let sess = self.actors[a as usize].session.as_mut().expect("alive");
             match sess.release(&name) {

@@ -55,6 +55,7 @@ fn prop_local_class_schedules_issue_zero_remote_verbs() {
         manual_arm: false,
         executor_steps: false,
         race_detect: false,
+        shared: false,
         mode: SchedMode::Uniform,
     };
     for seed in seeds() {
@@ -90,6 +91,7 @@ fn prop_mixed_class_schedules_stay_exclusive() {
             manual_arm: false,
             executor_steps: false,
             race_detect: false,
+            shared: false,
             mode: if seed % 2 == 0 {
                 SchedMode::Uniform
             } else {

@@ -66,16 +66,43 @@ fn rust_and_python_traces_match_on_shared_seeds() {
     }
 }
 
+/// Pull the `"modes":[...]` array out of a trace header line.
+fn header_modes(header: &str) -> Vec<u32> {
+    let start = header.find("\"modes\":[").expect("header carries modes") + "\"modes\":[".len();
+    let end = start + header[start..].find(']').expect("modes array closes");
+    header[start..end]
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().expect("mode digit"))
+        .collect()
+}
+
+/// Pull an integer field (`"key":N`) out of a trace line.
+fn field_u32(line: &str, key: &str) -> Option<u32> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let digits: String = line[start..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
 #[test]
 fn differential_schedule_reaches_the_protocol_depths() {
     // The lockstep alphabet must not silently degenerate: across the
     // shared seeds it has to produce held cycles, armed registrations
-    // with published tokens, fences with repairs, and fenced late
-    // writes ("expired" unlock outcomes) — otherwise a trace match
-    // proves nothing.
+    // with published tokens, fences with repairs, fenced late writes
+    // ("expired" unlock outcomes), and — since ISSUE 10 widened the
+    // alphabet with reader handles — shared holds, exclusive holds, and
+    // genuinely overlapping readers. Otherwise a trace match proves
+    // nothing.
     let mut outcomes = std::collections::HashSet::new();
     for seed in 0..24u64 {
-        for line in differential_trace(seed, 400) {
+        let trace = differential_trace(seed, 400);
+        let modes = header_modes(&trace[0]);
+        if modes.contains(&1) {
+            outcomes.insert("reader-drawn");
+        }
+        let mut held = vec![false; modes.len()];
+        for line in &trace {
             for key in [
                 "\"out\":\"held\"",
                 "\"out\":\"armed\"",
@@ -96,6 +123,22 @@ fn differential_schedule_reaches_the_protocol_depths() {
             if line.contains("\"op\":\"sweep\"") && !line.contains("\"fenced\":0") {
                 outcomes.insert("fence");
             }
+            // Per-mode hold coverage, reconstructed from the trace the
+            // way the oracle diff sees it (crash/lease races can leave
+            // this approximate; it only feeds coverage, not an ME
+            // check — the ME oracle lives in the sim explorer).
+            if line.contains("\"op\":\"poll\"") && line.contains("\"out\":\"held\"") {
+                let h = field_u32(line, "h").expect("poll carries h") as usize;
+                held[h] = true;
+                outcomes.insert(if modes[h] == 1 { "reader-held" } else { "writer-held" });
+                if (0..modes.len()).filter(|&j| held[j] && modes[j] == 1).count() >= 2 {
+                    outcomes.insert("reader-overlap");
+                }
+            }
+            if line.contains("\"op\":\"unlock\"") && !line.contains("\"out\":\"noop\"") {
+                let h = field_u32(line, "h").expect("unlock carries h") as usize;
+                held[h] = false;
+            }
         }
     }
     for key in [
@@ -107,6 +150,10 @@ fn differential_schedule_reaches_the_protocol_depths() {
         "token-consumed",
         "relay",
         "fence",
+        "reader-drawn",
+        "reader-held",
+        "writer-held",
+        "reader-overlap",
     ] {
         assert!(outcomes.contains(key), "never observed {key}");
     }

@@ -114,6 +114,7 @@ fn skip_arm_recheck_loses_a_wakeup_and_is_rediscovered() {
         manual_arm: true,
         executor_steps: false,
         race_detect: false,
+        shared: false,
         mode: SchedMode::Uniform,
     };
     assert_tooth(
@@ -154,6 +155,7 @@ fn skip_waker_recheck_loses_an_engaged_wakeup_and_is_rediscovered() {
         manual_arm: true,
         executor_steps: false,
         race_detect: false,
+        shared: false,
         mode: SchedMode::Uniform,
     };
     assert_tooth(
@@ -190,6 +192,7 @@ fn race_detector_names_the_arm_budget_edge_for_skip_arm_recheck() {
         manual_arm: true,
         executor_steps: false,
         race_detect: true,
+        shared: false,
         mode: SchedMode::Uniform,
     };
     let report = assert_tooth(
@@ -230,6 +233,7 @@ fn race_detector_names_the_peterson_edge_for_skip_waker_recheck() {
         manual_arm: true,
         executor_steps: false,
         race_detect: true,
+        shared: false,
         mode: SchedMode::Uniform,
     };
     let report = assert_tooth(
@@ -274,6 +278,7 @@ fn ignore_dirty_tokens_overwrites_a_live_token_and_is_rediscovered() {
         manual_arm: true,
         executor_steps: false,
         race_detect: false,
+        shared: false,
         mode: SchedMode::Churn,
     };
     assert_tooth(
@@ -310,6 +315,7 @@ fn skip_cs_renew_starves_a_live_holder_and_is_rediscovered() {
         manual_arm: false,
         executor_steps: false,
         race_detect: false,
+        shared: false,
         mode: SchedMode::Pct { depth: 3 },
     };
     assert_tooth(

@@ -265,6 +265,7 @@ fn prop_explored_schedules_complete_on_wakeups_alone() {
             manual_arm: seed % 2 == 1,
             executor_steps: false,
             race_detect: false,
+            shared: false,
             mode: SchedMode::Uniform,
         };
         let out = run_one(&cfg, seed);
